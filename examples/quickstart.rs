@@ -1,0 +1,52 @@
+//! Quickstart: fit a lasso path with the paper's headline rule (SSR-BEDPP)
+//! on synthetic data and inspect what screening did.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use hssr::prelude::*;
+
+fn main() -> Result<(), HssrError> {
+    // 1. A synthetic workload: n = 1000, p = 5000, 20 true features
+    //    (the Figure-2 generating model).
+    let ds = DataSpec::synthetic(1000, 5000, 20).generate(42);
+    println!("dataset: {} ({} × {})", ds.name, ds.n(), ds.p());
+
+    // 2. Fit the full 100-point λ path with hybrid safe-strong screening.
+    let cfg = PathConfig { rule: RuleKind::SsrBedpp, ..PathConfig::default() };
+    let fit = fit_lasso_path(&ds, &cfg)?;
+    println!(
+        "fitted {} λ values in {:.3}s — {} columns scanned, {} KKT checks, {} violations",
+        fit.lambdas.len(),
+        fit.seconds,
+        fit.total_cols_scanned(),
+        fit.total_kkt_checks(),
+        fit.total_violations(),
+    );
+
+    // 3. How much did each screening layer discard mid-path?
+    let k = fit.lambdas.len() / 2;
+    let m = &fit.metrics[k];
+    println!(
+        "at λ/λmax = {:.2}: safe set {} of {} features, strong set {}, {} nonzero",
+        m.lambda / fit.lambda_max,
+        m.safe_size,
+        ds.p(),
+        m.strong_size,
+        m.nonzero
+    );
+
+    // 4. Support recovery at the end of the path.
+    let truth = ds.truth.clone().unwrap_or_default();
+    let last = fit.betas.last().unwrap();
+    let selected: Vec<usize> = last.iter().map(|&(j, _)| j).collect();
+    let hits = truth.iter().filter(|j| selected.contains(j)).count();
+    println!(
+        "at λmin: selected {} features, recovering {}/{} true features",
+        selected.len(),
+        hits,
+        truth.len()
+    );
+    Ok(())
+}

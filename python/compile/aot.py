@@ -1,0 +1,81 @@
+"""AOT lowering: JAX/Pallas graphs → HLO **text** artifacts for the Rust
+runtime.
+
+Interchange format is HLO text, not a serialized ``HloModuleProto``: jax
+≥ 0.5 emits protos with 64-bit instruction ids which the published ``xla``
+crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md and the smoke-verified ``load_hlo`` reference).
+
+Artifacts written (all f64; the Rust side scans f64 matrices):
+
+* ``xtr_pallas_n{N}_p{P}.hlo.txt`` — L2 graph calling the L1 Pallas kernel
+  (the paper stack; preferred by the Rust engine).
+* ``xtr_n{N}_p{P}.hlo.txt``        — plain-jnp variant (engine ablation).
+* ``bedpp_stats_n{N}_p{P}.hlo.txt``— BEDPP precompute graph.
+
+Usage: ``python -m compile.aot --out-dir ../artifacts [--n 512] [--p 2048]``
+"""
+
+import argparse
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+
+
+def to_hlo_text(fn, *args):
+    """Lower a jitted function to HLO text via StableHLO → XlaComputation."""
+    lowered = jax.jit(fn).lower(*args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def write(path, text):
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"wrote {len(text):>9} chars  {path}")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--n", type=int, default=512, help="row-tile size")
+    ap.add_argument("--p", type=int, default=2048, help="column-tile size")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    n, p = args.n, args.p
+
+    x_spec = jax.ShapeDtypeStruct((n, p), jnp.float64)
+    v_spec = jax.ShapeDtypeStruct((n,), jnp.float64)
+
+    write(
+        os.path.join(args.out_dir, f"xtr_pallas_n{n}_p{p}.hlo.txt"),
+        to_hlo_text(model.screen_scan, x_spec, v_spec),
+    )
+    xt_spec = jax.ShapeDtypeStruct((p, n), jnp.float64)
+    write(
+        os.path.join(args.out_dir, f"xtrt_pallas_n{n}_p{p}.hlo.txt"),
+        to_hlo_text(model.screen_scan_t, xt_spec, v_spec),
+    )
+    write(
+        os.path.join(args.out_dir, f"xtr_n{n}_p{p}.hlo.txt"),
+        to_hlo_text(model.screen_scan_jnp, x_spec, v_spec),
+    )
+    write(
+        os.path.join(args.out_dir, f"bedpp_stats_n{n}_p{p}.hlo.txt"),
+        to_hlo_text(model.bedpp_stats, x_spec, v_spec),
+    )
+
+
+if __name__ == "__main__":
+    main()

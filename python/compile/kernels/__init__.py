@@ -1,0 +1,1 @@
+"""Pallas kernels (L1) and their pure-jnp oracles."""

@@ -1,0 +1,35 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness references: every Pallas kernel in this package
+must match its oracle to float tolerance across the hypothesis shape/dtype
+sweep in ``python/tests/test_kernel.py``.
+"""
+
+import jax.numpy as jnp
+
+
+def xtr_ref(x, v):
+    """Screening-scan oracle: column-wise dot products ``Xᵀ·v``.
+
+    Args:
+      x: ``(n, p)`` design tile.
+      v: ``(n,)`` residual tile.
+
+    Returns:
+      ``(p,)`` vector of un-normalized correlations (the 1/n scaling is
+      applied by the Rust caller, which knows the true — unpadded — n).
+    """
+    return jnp.dot(x.T, v, precision="highest")
+
+
+def bedpp_stats_ref(x, y):
+    """Oracle for the BEDPP precompute graph.
+
+    Returns ``(xty, xtx_star, y_sq)`` where ``star = argmax_j |x_jᵀy|`` —
+    exactly the quantities ``SafeContext::build`` holds on the Rust side.
+    """
+    xty = jnp.dot(x.T, y, precision="highest")
+    star = jnp.argmax(jnp.abs(xty))
+    xtx_star = jnp.dot(x.T, x[:, star], precision="highest")
+    y_sq = jnp.dot(y, y, precision="highest")
+    return xty, xtx_star, y_sq

@@ -1,0 +1,125 @@
+"""L1 — the Pallas screening-scan kernel.
+
+The compute hot-spot of every screening rule is the scan ``z = Xᵀr`` over a
+tile of features. On TPU this is a reduction over the n axis feeding the
+MXU; the canonical Pallas shape is a 2-D grid over ``(p_tiles, n_tiles)``
+with the output block revisited along the n axis (accumulate-in-VMEM
+pattern):
+
+* ``x`` block: ``(N_BLK, P_BLK)`` in VMEM — with the default
+  ``N_BLK=256, P_BLK=512`` and f32 that is 512 KiB, comfortably inside a
+  TPU core's ~16 MiB VMEM with double-buffering headroom;
+* ``v`` block: ``(N_BLK,)`` — re-fetched per p tile (tiny);
+* ``o`` block: ``(P_BLK,)`` accumulator — lives across the n-axis grid
+  steps of the same p tile (grid iteration order makes the n axis minor).
+
+The block matvec ``x.Tᵀ·v`` lowers to a ``dot_general`` contraction the
+Mosaic compiler maps onto the MXU. See DESIGN.md §Hardware-Adaptation for
+the CPU/GPU→TPU mapping rationale.
+
+NOTE: kernels are lowered with ``interpret=True`` throughout — the CPU PJRT
+plugin cannot execute Mosaic custom-calls (see /opt/xla-example/README.md);
+real-TPU performance is *estimated* from the VMEM/MXU structure above and
+recorded in EXPERIMENTS.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile shape (see module docs). Overridable for block-shape sweeps
+# (the §Perf pass tunes the interpret-mode grid-step count; real-TPU VMEM
+# budgeting is checked by test_vmem_budget).
+import os
+
+# §Perf: one grid step per (512, 2048) AOT tile — the interpret-mode grid
+# loop dominated CPU execution (24.4 → 7.1 ms/scan on the probe when the
+# block covers the tile). On real TPU this block is 4 MiB of VMEM in f32
+# (8.4 MiB double-buffered) — inside the ~16 MiB budget; smaller MXU-shaped
+# blocks remain available through the explicit n_blk/p_blk arguments.
+N_BLK = int(os.environ.get("HSSR_N_BLK", 512))
+P_BLK = int(os.environ.get("HSSR_P_BLK", 2048))
+
+
+def _xtr_kernel(x_ref, v_ref, o_ref):
+    """One grid step: accumulate the partial products of an (n, p) block."""
+    # Zero the accumulator on the first visit along the n axis.
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]
+    v = v_ref[...]
+    # (N_BLK, P_BLK)ᵀ · (N_BLK,) — a dot_general contraction (MXU-shaped).
+    o_ref[...] += jnp.dot(x.T, v, precision="highest")
+
+
+@functools.partial(jax.jit, static_argnames=("n_blk", "p_blk"))
+def xtr(x, v, *, n_blk=N_BLK, p_blk=P_BLK):
+    """Tiled Pallas evaluation of ``Xᵀ·v`` (un-normalized).
+
+    Shapes must be multiples of the block shape; the AOT path always
+    compiles for exact tile multiples and Rust pads the edges with zeros
+    (which contribute nothing to the dot products).
+    """
+    n, p = x.shape
+    if n % n_blk or p % p_blk:
+        raise ValueError(f"shape {(n, p)} not a multiple of block {(n_blk, p_blk)}")
+    grid = (p // p_blk, n // n_blk)
+    return pl.pallas_call(
+        _xtr_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n_blk, p_blk), lambda i, j: (j, i)),
+            pl.BlockSpec((n_blk,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((p_blk,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((p,), x.dtype),
+        interpret=True,
+    )(x, v)
+
+
+def _xtrt_kernel(xt_ref, v_ref, o_ref):
+    """Transposed-layout grid step: xt block is (P_BLK, N_BLK)."""
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(xt_ref[...], v_ref[...], precision="highest")
+
+
+@functools.partial(jax.jit, static_argnames=("n_blk", "p_blk"))
+def xtr_t(xt, v, *, n_blk=N_BLK, p_blk=P_BLK):
+    """Tiled Pallas evaluation of ``Xᵀ·v`` from a pre-transposed tile.
+
+    ``xt`` has shape ``(p, n)`` — feature-major. The Rust engine prefers
+    this layout because filling the tile from its column-major matrix is a
+    contiguous ``memcpy`` per feature instead of a strided scatter (§Perf:
+    the fill dominated the row-major path's runtime).
+    """
+    p, n = xt.shape
+    if n % n_blk or p % p_blk:
+        raise ValueError(f"shape {(p, n)} not a multiple of block {(p_blk, n_blk)}")
+    grid = (p // p_blk, n // n_blk)
+    return pl.pallas_call(
+        _xtrt_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((p_blk, n_blk), lambda i, j: (i, j)),
+            pl.BlockSpec((n_blk,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((p_blk,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((p,), xt.dtype),
+        interpret=True,
+    )(xt, v)
+
+
+def vmem_bytes(n_blk=N_BLK, p_blk=P_BLK, dtype_bytes=4):
+    """Estimated VMEM footprint of one grid step (x block + v + o + double
+    buffering of the x stream). Used by the DESIGN.md roofline estimate."""
+    x_block = n_blk * p_blk * dtype_bytes
+    v_block = n_blk * dtype_bytes
+    o_block = p_blk * dtype_bytes
+    return 2 * x_block + v_block + o_block  # 2x for double buffering

@@ -1,0 +1,54 @@
+"""L2 — the JAX compute graphs behind the Rust coordinator's hot path.
+
+Two exported computations (see ``aot.py`` for the AOT lowering):
+
+* ``screen_scan``        — ``z = Xᵀv`` over a tile, via the L1 Pallas
+                           kernel (``kernels.xtr``). This is the per-λ hot
+                           spot of SSR/SEDPP screening and KKT checking.
+* ``screen_scan_jnp``    — the same graph with a plain ``dot_general``
+                           instead of the Pallas kernel (ablation baseline).
+* ``bedpp_stats``        — the one-time BEDPP precompute: ``Xᵀy``, the
+                           argmax column's correlations ``Xᵀx*``, and
+                           ``‖y‖²`` (Theorem 2.1's constants), fused into a
+                           single graph so XLA shares the ``Xᵀy`` product.
+
+All graphs are pure functions of their tile inputs: no Python state, no
+host callbacks — a requirement for the AOT path (Python never runs at
+request time).
+"""
+
+import jax.numpy as jnp
+
+from .kernels import ref, xtr
+
+
+def screen_scan(x, v):
+    """``Xᵀ·v`` via the Pallas kernel.
+
+    Block sizes adapt to the tile: the default MXU-shaped blocks when the
+    input is a multiple of them, else one block per axis (small tiles only
+    occur in tests; AOT always compiles full-size tiles).
+    """
+    n, p = x.shape
+    n_blk = xtr.N_BLK if n % xtr.N_BLK == 0 else n
+    p_blk = xtr.P_BLK if p % xtr.P_BLK == 0 else p
+    return (xtr.xtr(x, v, n_blk=n_blk, p_blk=p_blk),)
+
+
+def screen_scan_jnp(x, v):
+    """``Xᵀ·v`` via plain jnp (XLA fuses this into one dot_general)."""
+    return (ref.xtr_ref(x, v),)
+
+
+def screen_scan_t(xt, v):
+    """``Xᵀ·v`` from a feature-major tile (see ``kernels.xtr.xtr_t``)."""
+    p, n = xt.shape
+    n_blk = xtr.N_BLK if n % xtr.N_BLK == 0 else n
+    p_blk = xtr.P_BLK if p % xtr.P_BLK == 0 else p
+    return (xtr.xtr_t(xt, v, n_blk=n_blk, p_blk=p_blk),)
+
+
+def bedpp_stats(x, y):
+    """BEDPP precompute graph — Theorem 2.1's per-fit constants."""
+    xty, xtx_star, y_sq = ref.bedpp_stats_ref(x, y)
+    return xty, xtx_star, jnp.reshape(y_sq, (1,))

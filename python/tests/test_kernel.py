@@ -1,0 +1,89 @@
+"""L1 correctness: the Pallas screening-scan kernel vs the pure-jnp oracle,
+swept over shapes and dtypes with hypothesis."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, xtr
+
+# Block-shape divisors we exercise (kernel requires tile multiples).
+BLOCKS = [(8, 16), (16, 32), (32, 64)]
+
+
+def _tolerance(dtype):
+    return 1e-4 if dtype == np.float32 else 1e-10
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n_tiles=st.integers(1, 4),
+    p_tiles=st.integers(1, 4),
+    block=st.sampled_from(BLOCKS),
+    dtype=st.sampled_from([np.float32, np.float64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_xtr_matches_ref_across_shapes(n_tiles, p_tiles, block, dtype, seed):
+    n_blk, p_blk = block
+    n, p = n_tiles * n_blk, p_tiles * p_blk
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(n, p)).astype(dtype))
+    v = jnp.asarray(rng.normal(size=(n,)).astype(dtype))
+    got = xtr.xtr(x, v, n_blk=n_blk, p_blk=p_blk)
+    want = ref.xtr_ref(x, v)
+    assert got.dtype == want.dtype
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), atol=_tolerance(dtype) * max(1.0, n**0.5)
+    )
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_xtr_zero_vector_gives_zero(seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(32, 64)))
+    z = xtr.xtr(x, jnp.zeros(32), n_blk=16, p_blk=32)
+    np.testing.assert_allclose(np.asarray(z), 0.0)
+
+
+def test_xtr_default_blocks():
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.normal(size=(xtr.N_BLK * 2, xtr.P_BLK)))
+    v = jnp.asarray(rng.normal(size=(xtr.N_BLK * 2,)))
+    np.testing.assert_allclose(
+        np.asarray(xtr.xtr(x, v)), np.asarray(ref.xtr_ref(x, v)), atol=1e-9
+    )
+
+
+def test_xtr_rejects_non_multiple_shapes():
+    x = jnp.zeros((100, 100))
+    with pytest.raises(ValueError, match="not a multiple"):
+        xtr.xtr(x, jnp.zeros(100))
+
+
+def test_padding_is_exact():
+    """Zero-padding rows/cols must not change the unpadded results — this is
+    the invariant the Rust tiler relies on."""
+    rng = np.random.default_rng(11)
+    n, p = 40, 48
+    x = rng.normal(size=(n, p))
+    v = rng.normal(size=(n,))
+    xp = np.zeros((64, 64))
+    xp[:n, :p] = x
+    vp = np.zeros(64)
+    vp[:n] = v
+    got = np.asarray(xtr.xtr(jnp.asarray(xp), jnp.asarray(vp), n_blk=32, p_blk=32))
+    want = np.asarray(ref.xtr_ref(jnp.asarray(x), jnp.asarray(v)))
+    np.testing.assert_allclose(got[:p], want, atol=1e-10)
+    np.testing.assert_allclose(got[p:], 0.0)
+
+
+def test_vmem_budget():
+    """Structural perf check: the default tile must fit a TPU core's VMEM
+    (DESIGN.md §Hardware-Adaptation; f32 on real TPU)."""
+    assert xtr.vmem_bytes() < 12 * 2**20  # < 12 MiB of ~16 MiB

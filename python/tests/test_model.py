@@ -1,0 +1,45 @@
+"""L2 correctness: the exported compute graphs vs numpy."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_screen_scan_variants_agree(seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(64, 128)))
+    v = jnp.asarray(rng.normal(size=(64,)))
+    (pallas_out,) = model.screen_scan(x, v)
+    (jnp_out,) = model.screen_scan_jnp(x, v)
+    np.testing.assert_allclose(np.asarray(pallas_out), np.asarray(jnp_out), atol=1e-10)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_bedpp_stats_vs_numpy(seed):
+    rng = np.random.default_rng(seed)
+    x_np = rng.normal(size=(50, 30))
+    y_np = rng.normal(size=(50,))
+    xty, xtx_star, y_sq = model.bedpp_stats(jnp.asarray(x_np), jnp.asarray(y_np))
+    xty_np = x_np.T @ y_np
+    star = int(np.argmax(np.abs(xty_np)))
+    np.testing.assert_allclose(np.asarray(xty), xty_np, atol=1e-10)
+    np.testing.assert_allclose(np.asarray(xtx_star), x_np.T @ x_np[:, star], atol=1e-10)
+    np.testing.assert_allclose(float(y_sq[0]), y_np @ y_np, atol=1e-10)
+
+
+def test_graphs_are_pure_and_jittable():
+    """AOT prerequisite: lowering must succeed with abstract inputs only."""
+    x = jax.ShapeDtypeStruct((64, 128), jnp.float64)
+    v = jax.ShapeDtypeStruct((64,), jnp.float64)
+    for fn in (model.screen_scan, model.screen_scan_jnp, model.bedpp_stats):
+        lowered = jax.jit(fn).lower(x, v)
+        assert "stablehlo" in str(lowered.compiler_ir("stablehlo"))

@@ -1,0 +1,60 @@
+//! **Ablation abl3** — scan-engine comparison: the native blocked Rust
+//! kernels vs the AOT JAX/Pallas artifact through PJRT, on (a) raw scan
+//! throughput and (b) an end-to-end path fit.
+//!
+//! The PJRT path exists to prove the three-layer composition; on CPU the
+//! per-call overhead (tile fill + literal creation + dispatch) dominates,
+//! which this bench quantifies. Requires `make artifacts` for the PJRT
+//! rows; prints native-only otherwise.
+
+use std::time::Instant;
+
+use hssr::coordinator::report::Table;
+use hssr::data::DataSpec;
+use hssr::runtime::{make_engine, native::NativeEngine, EngineKind, ScanEngine};
+use hssr::screening::RuleKind;
+use hssr::solver::path::{fit_lasso_path_with_engine, PathConfig};
+
+fn scan_throughput(engine: &dyn ScanEngine, ds: &hssr::data::Dataset, iters: usize) -> f64 {
+    let mut out = vec![0.0; ds.p()];
+    let t = Instant::now();
+    for _ in 0..iters {
+        engine.scan_all(&ds.x, &ds.y, &mut out).expect("scan");
+    }
+    let secs = t.elapsed().as_secs_f64();
+    // effective GB/s of matrix traffic
+    (iters * ds.n() * ds.p() * 8) as f64 / secs / 1e9
+}
+
+fn main() {
+    let ds = DataSpec::synthetic(1024, 4096, 20).generate(4);
+    println!("ablation_engine: scans on {}", ds.name);
+    let native = NativeEngine::new();
+    let mut table = Table::new(
+        "engine ablation — native vs PJRT (AOT Pallas)",
+        &["engine", "scan GB/s", "path fit (s, SSR-BEDPP, 30λ)"],
+    );
+
+    let cfg = PathConfig { rule: RuleKind::SsrBedpp, n_lambda: 30, ..PathConfig::default() };
+    let gbps = scan_throughput(&native, &ds, 20);
+    let fit = fit_lasso_path_with_engine(&ds, &cfg, &native).expect("fit");
+    table.push_row(vec![
+        "native".into(),
+        format!("{gbps:.2}"),
+        format!("{:.3}", fit.seconds),
+    ]);
+
+    match make_engine(EngineKind::Pjrt, "artifacts") {
+        Ok(engine) => {
+            let gbps = scan_throughput(engine.as_ref(), &ds, 2);
+            let fit = fit_lasso_path_with_engine(&ds, &cfg, engine.as_ref()).expect("fit");
+            table.push_row(vec![
+                engine.name().into(),
+                format!("{gbps:.2}"),
+                format!("{:.3}", fit.seconds),
+            ]);
+        }
+        Err(e) => println!("pjrt unavailable: {e}"),
+    }
+    table.emit("ablation_engine").expect("emit");
+}

@@ -1,0 +1,45 @@
+//! **Ablation abl4** — λ-grid density: the paper (and Tibshirani et al.
+//! 2012) note that SSR violations "are quite rare" on a standard 100-point
+//! grid. This ablation measures how violation counts, re-solve rounds, and
+//! total time react as the grid coarsens — the regime where the strong-rule
+//! bound `|z| < 2λ_{k+1} − λ_k` becomes aggressive — and how the safe half
+//! of SSR-BEDPP shields against it.
+
+use hssr::coordinator::report::Table;
+use hssr::data::DataSpec;
+use hssr::screening::RuleKind;
+use hssr::solver::path::{fit_lasso_path, PathConfig};
+
+fn main() {
+    let ds = DataSpec::mnist_like(400, 3_000).generate(13);
+    println!("ablation_grid: violations vs grid density on {}", ds.name);
+    let mut table = Table::new(
+        "λ-grid density ablation",
+        &["K", "method", "time (s)", "violations", "KKT checks", "max |H| growth"],
+    );
+    for k in [100usize, 50, 25, 10, 5] {
+        for rule in [RuleKind::Ssr, RuleKind::SsrBedpp] {
+            let cfg = PathConfig { rule, n_lambda: k, ..PathConfig::default() };
+            let fit = fit_lasso_path(&ds, &cfg).expect("fit");
+            let max_growth = fit
+                .metrics
+                .iter()
+                .map(|m| m.violations)
+                .max()
+                .unwrap_or(0);
+            table.push_row(vec![
+                k.to_string(),
+                rule.label().to_string(),
+                format!("{:.3}", fit.seconds),
+                fit.total_violations().to_string(),
+                fit.total_kkt_checks().to_string(),
+                max_growth.to_string(),
+            ]);
+        }
+    }
+    table.emit("ablation_grid").expect("emit");
+    println!(
+        "paper context (§2.1): violations are rare on the standard K=100 grid;\n\
+         coarse grids stress the unit-slope assumption (5)."
+    );
+}

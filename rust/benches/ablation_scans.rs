@@ -1,0 +1,59 @@
+//! **Ablation abl1** — measured validation of Table 1's complexity column
+//! and the §3.2.3 memory-efficiency claim: count the columns each method
+//! actually reads over the path (screening + KKT traffic; CD coordinate
+//! updates reported separately).
+//!
+//! Expected: SSR and AC scan Θ(pK) columns; HSSR scans `Σ_k |S_k|` ≪ pK;
+//! SEDPP's scans happen inside the rule (full pK — reported via its
+//! analytic count); Basic PCD scans nothing but pays Θ(pK) CD updates.
+
+use hssr::coordinator::report::Table;
+use hssr::data::DataSpec;
+use hssr::screening::RuleKind;
+use hssr::solver::path::{fit_lasso_path, PathConfig};
+
+fn main() {
+    let ds = DataSpec::gene_like(536, 6_000).generate(3);
+    let k = 100usize;
+    println!("ablation_scans: {} over {k} λ values", ds.name);
+    let pk = (ds.p() * k) as u64;
+
+    let mut table = Table::new(
+        "Table 1 (measured) — column-scan and update counts over the path",
+        &["Method", "screen+KKT cols", "analytic", "CD coord updates", "cols / pK"],
+    );
+    for rule in [
+        RuleKind::BasicPcd,
+        RuleKind::ActiveCycling,
+        RuleKind::Ssr,
+        RuleKind::Sedpp,
+        RuleKind::SsrDome,
+        RuleKind::SsrBedpp,
+        RuleKind::SsrBedppSedpp,
+    ] {
+        let cfg = PathConfig { rule, n_lambda: k, ..PathConfig::default() };
+        let fit = fit_lasso_path(&ds, &cfg).expect("fit");
+        // SEDPP hides its full scan inside the rule: account analytically.
+        let analytic = match rule {
+            RuleKind::Sedpp => pk,
+            RuleKind::SsrBedppSedpp => {
+                // one full scan at freeze time + per-λ safe-set scans
+                fit.total_cols_scanned() + ds.p() as u64
+            }
+            _ => fit.total_cols_scanned(),
+        };
+        let updates: u64 = fit.metrics.iter().map(|m| m.coord_updates).sum();
+        table.push_row(vec![
+            rule.label().to_string(),
+            fit.total_cols_scanned().to_string(),
+            analytic.to_string(),
+            updates.to_string(),
+            format!("{:.2}", analytic as f64 / pk as f64),
+        ]);
+    }
+    table.emit("ablation_scans").expect("emit");
+    println!(
+        "paper claim §3.2.3: HSSR column traffic = Σ|S_k| ≪ pK; \
+         SSR/SEDPP = pK (the 1.00 rows above)."
+    );
+}

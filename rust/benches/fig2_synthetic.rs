@@ -1,0 +1,78 @@
+//! **Figure 2** — average computing time for the lasso path on synthetic
+//! data, (left) as a function of p with n = 1,000 and (right) as a function
+//! of n with p fixed.
+//!
+//! Paper shape to reproduce: SSR-BEDPP uniformly fastest (≈5× over Basic
+//! PCD, ≈2× over SSR/SEDPP); SSR and SEDPP indistinguishable; SSR-Dome
+//! between; AC slightly behind SSR.
+//!
+//! Defaults are scaled for wall-clock sanity; `HSSR_BENCH_FULL=1` restores
+//! the paper's sweep (p → 10,000, n → 10,000, 20 replications).
+
+use hssr::bench_harness::{default_reps, full_scale};
+use hssr::coordinator::{report::Table, run_method_sweep};
+use hssr::data::DataSpec;
+use hssr::screening::RuleKind;
+use hssr::solver::path::PathConfig;
+
+fn sweep(title: &str, stem: &str, specs: &[DataSpec], size_label: fn(&DataSpec) -> String) {
+    let methods = RuleKind::paper_lasso_methods();
+    let reps = default_reps();
+    let cfg = PathConfig::default();
+    let cells = run_method_sweep(specs, &methods, reps, &cfg, 11).expect("sweep");
+    let mut headers = vec!["size".to_string()];
+    headers.extend(methods.iter().map(|m| m.label().to_string()));
+    let mut table = Table { title: title.to_string(), headers, rows: Vec::new() };
+    for spec in specs {
+        let name = spec.name();
+        let mut row = vec![size_label(spec)];
+        for m in methods {
+            let cell = cells
+                .iter()
+                .find(|c| c.rule == m && c.dataset == name)
+                .map(|c| format!("{:.3}", c.timing.mean))
+                .unwrap_or_default();
+            row.push(cell);
+        }
+        table.rows.push(row);
+    }
+    table.emit(stem).expect("emit");
+}
+
+fn main() {
+    let full = full_scale();
+    println!(
+        "fig2: synthetic sweeps ({} mode, {} reps)",
+        if full { "paper-scale" } else { "scaled" },
+        default_reps()
+    );
+
+    // Case 1: varying p, n = 1,000 (paper: p ∈ 1,000…10,000).
+    let ps: &[usize] = if full { &[1000, 2500, 5000, 7500, 10_000] } else { &[1000, 2500, 5000] };
+    let specs_p: Vec<DataSpec> =
+        ps.iter().map(|&p| DataSpec::synthetic(1000, p, 20)).collect();
+    sweep(
+        "Figure 2 (left) — time vs p (n = 1000), seconds",
+        "fig2_vs_p",
+        &specs_p,
+        |s| match s {
+            DataSpec::Synthetic { p, .. } => format!("p={p}"),
+            _ => unreachable!(),
+        },
+    );
+
+    // Case 2: varying n, p fixed (paper: p = 10,000, n ∈ 200…10,000).
+    let p_fixed = if full { 10_000 } else { 5_000 };
+    let ns: &[usize] = if full { &[200, 1000, 2500, 5000, 10_000] } else { &[200, 500, 1000] };
+    let specs_n: Vec<DataSpec> =
+        ns.iter().map(|&n| DataSpec::synthetic(n, p_fixed, 20)).collect();
+    sweep(
+        "Figure 2 (right) — time vs n, seconds",
+        "fig2_vs_n",
+        &specs_n,
+        |s| match s {
+            DataSpec::Synthetic { n, .. } => format!("n={n}"),
+            _ => unreachable!(),
+        },
+    );
+}

@@ -1,0 +1,68 @@
+//! **Figure 4** — group lasso path time as a function of the number of
+//! groups (n = 1,000, W_g = 10, 10 true groups).
+//!
+//! Paper shape to reproduce: SSR-BEDPP > 7× over Basic GD and ≈ 2× over
+//! SSR/SEDPP; SSR ≈ SEDPP; AC slightly behind.
+//!
+//! Defaults scaled; `HSSR_BENCH_FULL=1` → G up to 10,000.
+
+use hssr::bench_harness::{default_reps, full_scale, measure, Timing};
+use hssr::coordinator::report::Table;
+use hssr::data::synth::generate_grouped;
+use hssr::screening::RuleKind;
+use hssr::solver::group_path::{fit_group_path, GroupPathConfig};
+
+const METHODS: [RuleKind; 5] = [
+    RuleKind::BasicPcd,
+    RuleKind::ActiveCycling,
+    RuleKind::Ssr,
+    RuleKind::Sedpp,
+    RuleKind::SsrBedpp,
+];
+
+fn label(rule: RuleKind) -> &'static str {
+    if rule == RuleKind::BasicPcd {
+        "Basic GD"
+    } else {
+        rule.label()
+    }
+}
+
+fn main() {
+    let full = full_scale();
+    let n = if full { 1000 } else { 500 };
+    let gs: &[usize] = if full { &[100, 500, 1000, 5000, 10_000] } else { &[100, 250, 500] };
+    let w = 10;
+    let reps = default_reps();
+    println!(
+        "fig4: group lasso vs G ({} mode, {reps} reps, n={n}, W={w})",
+        if full { "paper-scale" } else { "scaled" }
+    );
+
+    let mut headers = vec!["G".to_string()];
+    headers.extend(METHODS.iter().map(|&m| label(m).to_string()));
+    let mut table = Table {
+        title: "Figure 4 — group lasso seconds vs number of groups".into(),
+        headers,
+        rows: Vec::new(),
+    };
+    for &g in gs {
+        // Pre-generate replication datasets (untimed).
+        let datasets: Vec<_> = (0..reps)
+            .map(|rep| generate_grouped(n, g, w, 10, 100 + rep as u64))
+            .collect();
+        let mut row = vec![g.to_string()];
+        for &rule in &METHODS {
+            let cfg = GroupPathConfig { rule, ..GroupPathConfig::default() };
+            let t: Timing = measure(
+                reps,
+                |rep| &datasets[rep],
+                |ds| fit_group_path(ds, &cfg).expect("fit"),
+            );
+            row.push(format!("{:.3}", t.mean));
+        }
+        println!("G={g}: {row:?}");
+        table.rows.push(row);
+    }
+    table.emit("fig4_group_synth").expect("emit");
+}

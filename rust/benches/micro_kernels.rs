@@ -1,0 +1,86 @@
+//! Micro-benchmarks of the L3 hot-path kernels (dot, axpy, blocked scan,
+//! CD cycle) — the profiling substrate for the §Perf optimization pass.
+
+use std::time::Instant;
+
+use hssr::coordinator::report::Table;
+use hssr::data::DataSpec;
+use hssr::linalg::{blocked, ops};
+use hssr::solver::{cd, Penalty};
+
+fn time_it<F: FnMut()>(iters: usize, mut f: F) -> f64 {
+    let t = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    t.elapsed().as_secs_f64() / iters as f64
+}
+
+fn main() {
+    let ds = DataSpec::synthetic(1024, 4096, 20).generate(5);
+    let n = ds.n();
+    let p = ds.p();
+    let v = ds.y.clone();
+    let mut out = vec![0.0; p];
+    let mut table = Table::new("micro kernels", &["kernel", "time", "throughput"]);
+
+    // dot
+    let a = ds.x.col(0);
+    let b = ds.x.col(1);
+    let t = time_it(200_000, || {
+        std::hint::black_box(ops::dot(std::hint::black_box(a), std::hint::black_box(b)));
+    });
+    table.push_row(vec![
+        format!("dot n={n}"),
+        format!("{:.1} ns", t * 1e9),
+        format!("{:.2} GF/s", 2.0 * n as f64 / t / 1e9),
+    ]);
+
+    // axpy
+    let mut y = vec![0.0; n];
+    let t = time_it(200_000, || {
+        ops::axpy(std::hint::black_box(0.5), std::hint::black_box(a), &mut y);
+    });
+    table.push_row(vec![
+        format!("axpy n={n}"),
+        format!("{:.1} ns", t * 1e9),
+        format!("{:.2} GF/s", 2.0 * n as f64 / t / 1e9),
+    ]);
+
+    // full scan
+    let t = time_it(30, || {
+        blocked::scan_all(&ds.x, std::hint::black_box(&v), &mut out);
+    });
+    table.push_row(vec![
+        format!("scan_all {n}×{p}"),
+        format!("{:.2} ms", t * 1e3),
+        format!("{:.2} GB/s", (n * p * 8) as f64 / t / 1e9),
+    ]);
+
+    // subset scan (10% of columns)
+    let idx: Vec<usize> = (0..p).step_by(10).collect();
+    let mut sub = vec![0.0; idx.len()];
+    let t = time_it(200, || {
+        blocked::scan_subset(&ds.x, std::hint::black_box(&v), &idx, &mut sub);
+    });
+    table.push_row(vec![
+        format!("scan_subset 10% of {p}"),
+        format!("{:.2} ms", t * 1e3),
+        format!("{:.2} GB/s", (n * idx.len() * 8) as f64 / t / 1e9),
+    ]);
+
+    // one CD cycle over 200 active features
+    let active: Vec<usize> = (0..200).collect();
+    let mut beta = vec![0.0; p];
+    let mut r = ds.y.clone();
+    let t = time_it(500, || {
+        std::hint::black_box(cd::cd_cycle(&ds.x, Penalty::Lasso, 0.05, &active, &mut beta, &mut r));
+    });
+    table.push_row(vec![
+        "cd_cycle |H|=200".into(),
+        format!("{:.2} µs", t * 1e6),
+        format!("{:.2} GB/s", (n * active.len() * 8 * 2) as f64 / t / 1e9),
+    ]);
+
+    table.emit("micro_kernels").expect("emit");
+}

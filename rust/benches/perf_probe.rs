@@ -1,0 +1,36 @@
+//! §Perf probe (not a paper artifact): decompose PJRT scan cost by layer.
+use std::time::Instant;
+use hssr::data::DataSpec;
+use hssr::runtime::{pjrt::PjrtEngine, ScanEngine};
+
+fn main() {
+    let ds = DataSpec::synthetic(1024, 4096, 20).generate(4);
+    let mut out = vec![0.0; ds.p()];
+    let mut dirs: Vec<String> =
+        std::env::args().skip(1).filter(|a| !a.starts_with("--")).collect();
+    if dirs.is_empty() {
+        dirs.push("artifacts".to_string());
+    }
+    for dir in dirs {
+        match PjrtEngine::load(&dir) {
+            Ok(e) => {
+                // warmup
+                e.scan_all(&ds.x, &ds.y, &mut out).unwrap();
+                let t = Instant::now();
+                let iters = 5;
+                for _ in 0..iters {
+                    e.scan_all(&ds.x, &ds.y, &mut out).unwrap();
+                }
+                let s = t.elapsed().as_secs_f64() / iters as f64;
+                println!(
+                    "{dir}: engine {} tile {:?} — {:.1} ms/scan, {:.2} GB/s",
+                    e.name(),
+                    e.tile_shape(),
+                    s * 1e3,
+                    (ds.n() * ds.p() * 8) as f64 / s / 1e9
+                );
+            }
+            Err(e) => println!("{dir}: {e}"),
+        }
+    }
+}

@@ -1,0 +1,55 @@
+//! **Table 2 + Figure 3** — lasso path timings on the four real-data-like
+//! workloads (GENE, MNIST, GWAS, NYT regimes; see DESIGN.md §2 for the
+//! substitutions), all six methods, mean (SE) over replications, plus the
+//! speedup-vs-Basic-PCD panel of Figure 3.
+//!
+//! Paper shape to reproduce: SSR-BEDPP fastest everywhere (13.8×–52.7× vs
+//! Basic PCD), SSR-Dome second, SSR ≈ SEDPP, AC behind both, and the
+//! MNIST-like regime showing the largest hybrid gains.
+//!
+//! Defaults are scaled ×3–10 down; `HSSR_BENCH_FULL=1` restores paper dims
+//! (GWAS stays ×1 in n but scaled ×10 in p even in full mode — 660k × 313
+//! f64 is 1.6 GB; set HSSR_GWAS_P to override).
+
+use hssr::bench_harness::{default_reps, full_scale};
+use hssr::coordinator::{run_method_sweep, speedup_table, timing_table};
+use hssr::data::DataSpec;
+use hssr::screening::RuleKind;
+use hssr::solver::path::PathConfig;
+
+fn main() {
+    let full = full_scale();
+    let gwas_p: usize = std::env::var("HSSR_GWAS_P")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(66_050);
+    let specs = if full {
+        vec![
+            DataSpec::gene_like(536, 17_322),
+            DataSpec::mnist_like(784, 60_000),
+            DataSpec::gwas_like(313, gwas_p),
+            DataSpec::nyt_like(5_000, 55_000),
+        ]
+    } else {
+        vec![
+            DataSpec::gene_like(536, 4_000),
+            DataSpec::mnist_like(400, 3_000),
+            DataSpec::gwas_like(313, 16_000),
+            DataSpec::nyt_like(800, 5_000),
+        ]
+    };
+    let reps = default_reps();
+    println!(
+        "table2: real-data-like lasso ({} mode, {reps} reps)",
+        if full { "paper-scale" } else { "scaled" }
+    );
+    let methods = RuleKind::paper_lasso_methods();
+    let cells =
+        run_method_sweep(&specs, &methods, reps, &PathConfig::default(), 31).expect("sweep");
+    timing_table("Table 2 — average seconds (SE) for the lasso path", &cells)
+        .emit("table2_lasso_real")
+        .expect("emit");
+    speedup_table("Figure 3 — speedup relative to Basic PCD", &cells, RuleKind::BasicPcd)
+        .emit("fig3_speedup")
+        .expect("emit");
+}

@@ -1,0 +1,89 @@
+//! **Table 3** — group lasso timings on the two real-data-like workloads:
+//! GRVS (rare-variant genes) and GENE-SPLINE (B-spline expansion of the
+//! expression panel). Five methods; time + speedup vs Basic GD.
+//!
+//! Paper shape to reproduce: SSR-BEDPP fastest (6.3× / 33.4× vs Basic GD,
+//! ≈1.4× vs SSR/SEDPP); SSR ≈ SEDPP; AC behind.
+//!
+//! Defaults scaled; `HSSR_BENCH_FULL=1` → GRVS 697×(G=3,205), GENE-SPLINE
+//! 536×86,610 (G=17,322).
+
+use hssr::bench_harness::{default_reps, full_scale, measure, Timing};
+use hssr::coordinator::report::Table;
+use hssr::data::{bspline, realistic, DataSpec, GroupedDataset};
+use hssr::screening::RuleKind;
+use hssr::solver::group_path::{fit_group_path, GroupPathConfig};
+
+const METHODS: [RuleKind; 5] = [
+    RuleKind::BasicPcd,
+    RuleKind::ActiveCycling,
+    RuleKind::Ssr,
+    RuleKind::Sedpp,
+    RuleKind::SsrBedpp,
+];
+
+fn label(rule: RuleKind) -> &'static str {
+    if rule == RuleKind::BasicPcd {
+        "Basic GD"
+    } else {
+        rule.label()
+    }
+}
+
+fn bench_dataset(name: &str, datasets: &[GroupedDataset], reps: usize) -> Vec<(String, Timing)> {
+    let mut out = Vec::new();
+    for &rule in &METHODS {
+        let cfg = GroupPathConfig { rule, ..GroupPathConfig::default() };
+        let t = measure(
+            reps,
+            |rep| &datasets[rep],
+            |ds| fit_group_path(ds, &cfg).expect("fit"),
+        );
+        println!("{name} / {}: {}", label(rule), t.paper_format());
+        out.push((label(rule).to_string(), t));
+    }
+    out
+}
+
+fn main() {
+    let full = full_scale();
+    let reps = default_reps();
+    println!(
+        "table3: group lasso real-like ({} mode, {reps} reps)",
+        if full { "paper-scale" } else { "scaled" }
+    );
+
+    // GRVS-like.
+    let (n_grvs, g_grvs) = if full { (697, 3_205) } else { (400, 800) };
+    let grvs: Vec<GroupedDataset> = (0..reps)
+        .map(|rep| realistic::grvs_like(n_grvs, g_grvs, if full { 30 } else { 12 }, 10, 7 + rep as u64))
+        .collect();
+    let grvs_rows = bench_dataset("GRVS-like", &grvs, reps);
+
+    // GENE-SPLINE-like.
+    let (n_gs, p_gs) = if full { (536, 17_322) } else { (300, 1_500) };
+    let spline: Vec<GroupedDataset> = (0..reps)
+        .map(|rep| {
+            let base = DataSpec::gene_like(n_gs, p_gs).generate(900 + rep as u64);
+            bspline::expand_dataset(&base, 5)
+        })
+        .collect();
+    let spline_rows = bench_dataset("GENE-SPLINE-like", &spline, reps);
+
+    let mut table = Table::new(
+        "Table 3 — group lasso: time (SE) and speedup vs Basic GD",
+        &["Method", "GRVS time", "GRVS speedup", "SPLINE time", "SPLINE speedup"],
+    );
+    let base_grvs = grvs_rows[0].1;
+    let base_spline = spline_rows[0].1;
+    for i in 0..METHODS.len() {
+        table.push_row(vec![
+            grvs_rows[i].0.clone(),
+            grvs_rows[i].1.paper_format(),
+            format!("{:.1}", grvs_rows[i].1.speedup_vs(&base_grvs)),
+            spline_rows[i].1.paper_format(),
+            format!("{:.1}", spline_rows[i].1.speedup_vs(&base_spline)),
+        ]);
+    }
+    table.emit("table3_group_real").expect("emit");
+}

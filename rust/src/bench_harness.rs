@@ -1,0 +1,136 @@
+//! Benchmark harness — replicates the paper's measurement protocol
+//! ("average computing time (standard error) over 20 replications") without
+//! `criterion`, which is unavailable in the offline registry.
+//!
+//! Each measurement runs a setup closure (excluded from timing — dataset
+//! generation) and a timed body, repeating over `reps` replications with
+//! distinct seeds, and reports mean and standard error of the mean.
+
+use std::time::Instant;
+
+/// A mean ± SE measurement over replications.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Timing {
+    /// Mean seconds per replication.
+    pub mean: f64,
+    /// Standard error of the mean.
+    pub se: f64,
+    /// Number of replications.
+    pub reps: usize,
+}
+
+impl Timing {
+    /// Summarize raw per-replication seconds.
+    pub fn from_samples(samples: &[f64]) -> Timing {
+        let n = samples.len();
+        if n == 0 {
+            return Timing::default();
+        }
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = if n > 1 {
+            samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / (n - 1) as f64
+        } else {
+            0.0
+        };
+        Timing { mean, se: (var / n as f64).sqrt(), reps: n }
+    }
+
+    /// Format as the paper's tables do: `12.84 (0.06)`.
+    pub fn paper_format(&self) -> String {
+        format!("{:.2} ({:.2})", self.mean, self.se)
+    }
+
+    /// Speedup of `baseline` relative to `self` (e.g. Basic PCD / method).
+    pub fn speedup_vs(&self, baseline: &Timing) -> f64 {
+        if self.mean > 0.0 {
+            baseline.mean / self.mean
+        } else {
+            f64::INFINITY
+        }
+    }
+}
+
+/// Run `reps` replications. `setup(rep)` produces the input (untimed);
+/// `body(input)` is timed. The replication index doubles as the data seed
+/// offset, matching the paper's fresh-data-per-replication protocol.
+pub fn measure<I, S, B, O>(reps: usize, mut setup: S, mut body: B) -> Timing
+where
+    S: FnMut(usize) -> I,
+    B: FnMut(I) -> O,
+{
+    let mut samples = Vec::with_capacity(reps);
+    for rep in 0..reps {
+        let input = setup(rep);
+        let t = Instant::now();
+        let out = body(input);
+        samples.push(t.elapsed().as_secs_f64());
+        std::hint::black_box(out);
+    }
+    Timing::from_samples(&samples)
+}
+
+/// Number of replications: the paper uses 20; the default here is reduced
+/// for quick runs and restored by `HSSR_BENCH_FULL=1`.
+pub fn default_reps() -> usize {
+    if full_scale() {
+        20
+    } else {
+        std::env::var("HSSR_BENCH_REPS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(3)
+    }
+}
+
+/// Whether paper-scale dimensions were requested.
+pub fn full_scale() -> bool {
+    std::env::var("HSSR_BENCH_FULL").map(|v| v == "1").unwrap_or(false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_stats() {
+        let t = Timing::from_samples(&[1.0, 2.0, 3.0]);
+        assert!((t.mean - 2.0).abs() < 1e-12);
+        assert!((t.se - (1.0f64 / 3.0).sqrt()).abs() < 1e-12);
+        assert_eq!(t.reps, 3);
+    }
+
+    #[test]
+    fn paper_formatting() {
+        let t = Timing { mean: 12.836, se: 0.0612, reps: 20 };
+        assert_eq!(t.paper_format(), "12.84 (0.06)");
+    }
+
+    #[test]
+    fn speedup_ratio() {
+        let base = Timing { mean: 10.0, se: 0.0, reps: 1 };
+        let fast = Timing { mean: 2.0, se: 0.0, reps: 1 };
+        assert!((fast.speedup_vs(&base) - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn measure_runs_setup_per_rep() {
+        let mut seeds = Vec::new();
+        let t = measure(
+            4,
+            |rep| {
+                seeds.push(rep);
+                rep
+            },
+            |x| x * 2,
+        );
+        assert_eq!(t.reps, 4);
+        assert_eq!(seeds, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn empty_samples() {
+        let t = Timing::from_samples(&[]);
+        assert_eq!(t.reps, 0);
+        assert_eq!(t.mean, 0.0);
+    }
+}

@@ -1,0 +1,165 @@
+//! Configuration: a dependency-free `key = value` config format plus a CLI
+//! argument parser (the offline registry has neither `serde` nor `clap`).
+//!
+//! Config files are line-oriented: `key = value`, `#` comments, blank lines
+//! ignored. CLI flags `--key value` (or `--key=value`) override file values.
+
+use std::collections::BTreeMap;
+
+use crate::error::{HssrError, Result};
+
+/// A flat string→string configuration with typed getters.
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    values: BTreeMap<String, String>,
+    /// Positional (non-flag) arguments, in order.
+    pub positional: Vec<String>,
+}
+
+impl Config {
+    /// Parse a config file body.
+    pub fn from_str_body(body: &str) -> Result<Config> {
+        let mut cfg = Config::default();
+        for (lineno, raw) in body.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let Some((k, v)) = line.split_once('=') else {
+                return Err(HssrError::Config(format!(
+                    "line {}: expected `key = value`, got '{raw}'",
+                    lineno + 1
+                )));
+            };
+            cfg.values.insert(k.trim().to_string(), v.trim().to_string());
+        }
+        Ok(cfg)
+    }
+
+    /// Load from a file path.
+    pub fn from_file(path: &str) -> Result<Config> {
+        Config::from_str_body(&std::fs::read_to_string(path)?)
+    }
+
+    /// Parse CLI args (`--key value`, `--key=value`, `--flag`, positionals),
+    /// overriding any values already present.
+    pub fn apply_args<I: IntoIterator<Item = String>>(&mut self, args: I) -> Result<()> {
+        let mut it = args.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(stripped) = arg.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    self.values.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    self.values.insert(stripped.to_string(), v);
+                } else {
+                    self.values.insert(stripped.to_string(), "true".to_string());
+                }
+            } else {
+                self.positional.push(arg);
+            }
+        }
+        Ok(())
+    }
+
+    /// Set a value programmatically.
+    pub fn set(&mut self, key: &str, value: &str) {
+        self.values.insert(key.to_string(), value.to_string());
+    }
+
+    /// Raw string getter.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    /// String with default.
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    /// Typed getter with default; errors on malformed values.
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                HssrError::Config(format!("bad value for '{key}': '{v}'"))
+            }),
+        }
+    }
+
+    /// Boolean getter (`true/1/yes` are truthy).
+    pub fn get_bool(&self, key: &str, default: bool) -> bool {
+        match self.get(key) {
+            None => default,
+            Some(v) => matches!(v.to_ascii_lowercase().as_str(), "true" | "1" | "yes"),
+        }
+    }
+
+    /// All keys (for diagnostics).
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(|s| s.as_str())
+    }
+}
+
+/// Parse a method name as used in the paper's tables and our CLI.
+pub fn parse_rule(s: &str) -> Option<crate::screening::RuleKind> {
+    use crate::screening::RuleKind::*;
+    match s.to_ascii_lowercase().replace('_', "-").as_str() {
+        "basic" | "basic-pcd" | "basic-gd" | "none" => Some(BasicPcd),
+        "ac" | "active" | "active-cycling" => Some(ActiveCycling),
+        "ssr" | "strong" => Some(Ssr),
+        "sedpp" => Some(Sedpp),
+        "ssr-bedpp" | "hssr" | "hybrid" => Some(SsrBedpp),
+        "ssr-dome" => Some(SsrDome),
+        "ssr-bedpp-sedpp" | "rehybrid" => Some(SsrBedppSedpp),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::screening::RuleKind;
+
+    #[test]
+    fn parses_file_body() {
+        let cfg = Config::from_str_body("n = 100\np=200 # inline comment\n\n# c\nrule = ssr\n")
+            .unwrap();
+        assert_eq!(cfg.get_parse("n", 0usize).unwrap(), 100);
+        assert_eq!(cfg.get_parse("p", 0usize).unwrap(), 200);
+        assert_eq!(cfg.get_str("rule", ""), "ssr");
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(Config::from_str_body("oops").is_err());
+    }
+
+    #[test]
+    fn args_override_and_positional() {
+        let mut cfg = Config::from_str_body("n = 1").unwrap();
+        cfg.apply_args(
+            ["fit", "--n", "5", "--flag", "--k=7", "data.csv"].map(String::from),
+        )
+        .unwrap();
+        assert_eq!(cfg.get_parse("n", 0usize).unwrap(), 5);
+        assert!(cfg.get_bool("flag", false));
+        assert_eq!(cfg.get_parse("k", 0usize).unwrap(), 7);
+        assert_eq!(cfg.positional, vec!["fit", "data.csv"]);
+    }
+
+    #[test]
+    fn bad_typed_value_is_config_error() {
+        let cfg = Config::from_str_body("n = banana").unwrap();
+        assert!(cfg.get_parse("n", 0usize).is_err());
+    }
+
+    #[test]
+    fn rule_parsing_aliases() {
+        assert_eq!(parse_rule("SSR-BEDPP"), Some(RuleKind::SsrBedpp));
+        assert_eq!(parse_rule("hssr"), Some(RuleKind::SsrBedpp));
+        assert_eq!(parse_rule("basic_pcd"), Some(RuleKind::BasicPcd));
+        assert_eq!(parse_rule("rehybrid"), Some(RuleKind::SsrBedppSedpp));
+        assert_eq!(parse_rule("nope"), None);
+    }
+}

@@ -1,0 +1,193 @@
+//! K-fold cross-validation for λ selection — the standard downstream
+//! workflow around a path solver (cv.biglasso / cv.glmnet).
+//!
+//! Folds are deterministic given the seed; fold fits run across worker
+//! threads via [`super::jobs::parallel_map`]; the λ grid is fixed globally
+//! (computed on the full data) so fold errors are comparable per λ.
+
+use crate::data::Dataset;
+use crate::error::{HssrError, Result};
+use crate::linalg::DenseMatrix;
+use crate::solver::path::{fit_lasso_path, PathConfig};
+
+/// Cross-validation result.
+#[derive(Clone, Debug)]
+pub struct CvResult {
+    /// The common λ grid.
+    pub lambdas: Vec<f64>,
+    /// Mean held-out MSE per λ.
+    pub cv_mean: Vec<f64>,
+    /// Standard error of the fold means per λ.
+    pub cv_se: Vec<f64>,
+    /// Index of the λ minimizing CV error.
+    pub idx_min: usize,
+    /// Largest λ within one SE of the minimum (the "1-SE rule").
+    pub idx_1se: usize,
+    /// Number of folds.
+    pub folds: usize,
+}
+
+impl CvResult {
+    /// λ at the CV minimum.
+    pub fn lambda_min(&self) -> f64 {
+        self.lambdas[self.idx_min]
+    }
+
+    /// λ under the 1-SE rule.
+    pub fn lambda_1se(&self) -> f64 {
+        self.lambdas[self.idx_1se]
+    }
+}
+
+/// Deterministic fold assignment: a seeded permutation cut into `k` blocks.
+pub fn fold_assignment(n: usize, k: usize, seed: u64) -> Vec<usize> {
+    let mut rng = crate::rng::Pcg64::new(seed);
+    let mut order: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut order);
+    let mut fold = vec![0usize; n];
+    for (pos, &i) in order.iter().enumerate() {
+        fold[i] = pos % k;
+    }
+    fold
+}
+
+/// Run k-fold CV of the lasso/enet path on a standardized dataset.
+///
+/// Each training fold is restandardized (centering/scaling is part of the
+/// estimator), the model fitted over the *global* λ grid, and held-out MSE
+/// computed on the raw held-out rows of the standardized full design.
+pub fn cv_lasso(ds: &Dataset, cfg: &PathConfig, k: usize, seed: u64) -> Result<CvResult> {
+    if k < 2 || k > ds.n() / 2 {
+        return Err(HssrError::Config(format!("cv folds must be in [2, n/2], got {k}")));
+    }
+    // Global grid from the full data.
+    let full_ctx = crate::screening::SafeContext::build(&ds.x, &ds.y, cfg.penalty, false);
+    let lambdas = crate::solver::lambda::grid(
+        full_ctx.lambda_max,
+        cfg.lambda_min_ratio,
+        cfg.n_lambda,
+        cfg.grid,
+    );
+    let fold_of = fold_assignment(ds.n(), k, seed);
+
+    let fold_mse: Vec<Vec<f64>> =
+        super::jobs::parallel_map(k, super::jobs::default_threads(), |f| {
+            // --- split ---
+            let train_rows: Vec<usize> =
+                (0..ds.n()).filter(|&i| fold_of[i] != f).collect();
+            let test_rows: Vec<usize> = (0..ds.n()).filter(|&i| fold_of[i] == f).collect();
+            // training design (rows of the standardized full design are
+            // re-centered/scaled to keep condition (2) on the subsample)
+            let mut xtr = DenseMatrix::zeros(train_rows.len(), ds.p());
+            for j in 0..ds.p() {
+                let col = ds.x.col(j);
+                let dst = xtr.col_mut(j);
+                for (a, &i) in train_rows.iter().enumerate() {
+                    dst[a] = col[i];
+                }
+            }
+            let mut ytr: Vec<f64> = train_rows.iter().map(|&i| ds.y[i]).collect();
+            let (centers, scales) =
+                crate::data::standardize::standardize_in_place(&mut xtr, &mut ytr);
+            let y_mean_shift: f64 = {
+                // standardize_in_place centered ytr; recover the shift
+                let orig_mean: f64 = train_rows.iter().map(|&i| ds.y[i]).sum::<f64>()
+                    / train_rows.len() as f64;
+                orig_mean
+            };
+            let sub = Dataset {
+                x: xtr,
+                y: ytr,
+                centers: centers.clone(),
+                scales: scales.clone(),
+                name: format!("{}-fold{f}", ds.name),
+                truth: None,
+            };
+            let mut fold_cfg = cfg.clone();
+            fold_cfg.lambdas = Some(lambdas.clone());
+            let fit = fit_lasso_path(&sub, &fold_cfg).expect("fold fit");
+            // --- evaluate on held-out rows ---
+            lambdas
+                .iter()
+                .enumerate()
+                .map(|(li, _)| {
+                    let beta = fit.beta_dense(li);
+                    let mut mse = 0.0;
+                    for &i in &test_rows {
+                        let mut eta = y_mean_shift;
+                        for (j, &b) in beta.iter().enumerate() {
+                            if b != 0.0 && scales[j] > 0.0 {
+                                eta += b * (ds.x.get(i, j) - centers[j]) / scales[j];
+                            }
+                        }
+                        let e = ds.y[i] - eta;
+                        mse += e * e;
+                    }
+                    mse / test_rows.len() as f64
+                })
+                .collect()
+        });
+
+    let kl = lambdas.len();
+    let mut cv_mean = vec![0.0; kl];
+    let mut cv_se = vec![0.0; kl];
+    for li in 0..kl {
+        let vals: Vec<f64> = fold_mse.iter().map(|fm| fm[li]).collect();
+        let mean = vals.iter().sum::<f64>() / k as f64;
+        let var = vals.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>()
+            / (k as f64 - 1.0);
+        cv_mean[li] = mean;
+        cv_se[li] = (var / k as f64).sqrt();
+    }
+    let idx_min = cv_mean
+        .iter()
+        .enumerate()
+        .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0);
+    let threshold = cv_mean[idx_min] + cv_se[idx_min];
+    let idx_1se = (0..=idx_min).find(|&i| cv_mean[i] <= threshold).unwrap_or(idx_min);
+    Ok(CvResult { lambdas, cv_mean, cv_se, idx_min, idx_1se, folds: k })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DataSpec;
+    use crate::screening::RuleKind;
+
+    #[test]
+    fn folds_partition_evenly() {
+        let f = fold_assignment(103, 5, 1);
+        assert_eq!(f.len(), 103);
+        let mut counts = [0usize; 5];
+        for &fi in &f {
+            counts[fi] += 1;
+        }
+        assert!(counts.iter().all(|&c| (20..=21).contains(&c)), "{counts:?}");
+        // deterministic
+        assert_eq!(f, fold_assignment(103, 5, 1));
+        assert_ne!(f, fold_assignment(103, 5, 2));
+    }
+
+    #[test]
+    fn cv_selects_reasonable_lambda() {
+        let ds = DataSpec::synthetic(150, 60, 5).generate(3);
+        let cfg = PathConfig { rule: RuleKind::SsrBedpp, n_lambda: 30, ..PathConfig::default() };
+        let cv = cv_lasso(&ds, &cfg, 5, 7).unwrap();
+        assert_eq!(cv.cv_mean.len(), 30);
+        assert!(cv.cv_mean.iter().all(|m| m.is_finite() && *m >= 0.0));
+        // λmin improves on the null model (index 0 ≈ λmax)
+        assert!(cv.cv_mean[cv.idx_min] < cv.cv_mean[0]);
+        // 1-SE rule picks a λ at least as large as λmin
+        assert!(cv.lambda_1se() >= cv.lambda_min());
+    }
+
+    #[test]
+    fn bad_fold_count_rejected() {
+        let ds = DataSpec::synthetic(30, 10, 2).generate(4);
+        let cfg = PathConfig::default();
+        assert!(cv_lasso(&ds, &cfg, 1, 1).is_err());
+        assert!(cv_lasso(&ds, &cfg, 20, 1).is_err());
+    }
+}

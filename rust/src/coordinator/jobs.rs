@@ -1,0 +1,71 @@
+//! Replication job runner: fans independent jobs (dataset generation,
+//! non-timed fits, sweep cells) across worker threads with
+//! `std::thread::scope`. Timed benchmark bodies run sequentially to avoid
+//! interference; this runner covers the *untimed* bulk work around them.
+
+/// Run `f(i)` for `i in 0..jobs` across up to `threads` workers, returning
+/// results in index order.
+pub fn parallel_map<T, F>(jobs: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let threads = threads.max(1).min(jobs.max(1));
+    if threads == 1 || jobs <= 1 {
+        return (0..jobs).map(f).collect();
+    }
+    let mut results: Vec<Option<T>> = (0..jobs).map(|_| None).collect();
+    // Work-stealing queue of (index, &mut slot): each slot is popped (and
+    // hence written) by exactly one worker — no unsafe needed.
+    let work = std::sync::Mutex::new(results.iter_mut().enumerate().collect::<Vec<_>>());
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let item = work.lock().unwrap().pop();
+                let Some((i, slot)) = item else { break };
+                *slot = Some(f(i));
+            });
+        }
+    });
+    results.into_iter().map(|r| r.expect("job completed")).collect()
+}
+
+/// Default worker-thread count for untimed work.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(8)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_in_order() {
+        let out = parallel_map(20, 4, |i| i * i);
+        assert_eq!(out, (0..20).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_thread_path() {
+        let out = parallel_map(5, 1, |i| i + 1);
+        assert_eq!(out, vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn zero_jobs() {
+        let out: Vec<usize> = parallel_map(0, 4, |i| i);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn heavy_closure_runs_all() {
+        let out = parallel_map(64, 8, |i| {
+            let mut acc = 0u64;
+            for k in 0..1000 {
+                acc = acc.wrapping_add((i as u64).wrapping_mul(k));
+            }
+            acc
+        });
+        assert_eq!(out.len(), 64);
+    }
+}

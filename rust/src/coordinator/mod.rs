@@ -1,0 +1,160 @@
+//! The fitting coordinator: configuration, replication job running,
+//! rule-level analyses, and report generation.
+//!
+//! This is the framework layer a downstream user scripts against: declare
+//! datasets ([`crate::data::DataSpec`]), pick methods
+//! ([`crate::screening::RuleKind`]), and run timed method×dataset sweeps
+//! with the paper's measurement protocol.
+
+pub mod config;
+pub mod cv;
+pub mod jobs;
+pub mod metrics;
+pub mod report;
+
+use crate::bench_harness::{measure, Timing};
+use crate::data::DataSpec;
+use crate::error::Result;
+use crate::screening::RuleKind;
+use crate::solver::path::{fit_lasso_path, PathConfig};
+
+/// Timed result of one method×dataset cell.
+#[derive(Clone, Debug)]
+pub struct CellResult {
+    /// Method.
+    pub rule: RuleKind,
+    /// Dataset name.
+    pub dataset: String,
+    /// Mean(SE) seconds over replications.
+    pub timing: Timing,
+}
+
+/// Run a timed method×dataset sweep: for every dataset spec and method,
+/// fit the full path over `reps` replications (fresh data each rep, as the
+/// paper does) and record mean(SE) wall-clock seconds.
+///
+/// Dataset generation is excluded from the timings (it happens in the
+/// harness's untimed setup phase).
+pub fn run_method_sweep(
+    specs: &[DataSpec],
+    methods: &[RuleKind],
+    reps: usize,
+    base_cfg: &PathConfig,
+    seed0: u64,
+) -> Result<Vec<CellResult>> {
+    let mut out = Vec::new();
+    for spec in specs {
+        // Pre-generate datasets in parallel (untimed).
+        let datasets = jobs::parallel_map(reps, jobs::default_threads(), |rep| {
+            spec.generate(seed0 + rep as u64)
+        });
+        for &rule in methods {
+            let mut cfg = base_cfg.clone();
+            cfg.rule = rule;
+            let timing = measure(
+                reps,
+                |rep| &datasets[rep],
+                |ds| fit_lasso_path(ds, &cfg).expect("fit failed"),
+            );
+            out.push(CellResult { rule, dataset: spec.name(), timing });
+        }
+    }
+    Ok(out)
+}
+
+/// Build the paper-style timing table (rows = methods, columns = datasets)
+/// from sweep cells.
+pub fn timing_table(title: &str, cells: &[CellResult]) -> report::Table {
+    let mut datasets: Vec<String> = Vec::new();
+    let mut methods: Vec<RuleKind> = Vec::new();
+    for c in cells {
+        if !datasets.contains(&c.dataset) {
+            datasets.push(c.dataset.clone());
+        }
+        if !methods.contains(&c.rule) {
+            methods.push(c.rule);
+        }
+    }
+    let mut headers = vec!["Method".to_string()];
+    headers.extend(datasets.iter().cloned());
+    let mut table = report::Table {
+        title: title.to_string(),
+        headers,
+        rows: Vec::new(),
+    };
+    for &m in &methods {
+        let mut row = vec![m.label().to_string()];
+        for d in &datasets {
+            let cell = cells
+                .iter()
+                .find(|c| c.rule == m && &c.dataset == d)
+                .map(|c| c.timing.paper_format())
+                .unwrap_or_else(|| "—".to_string());
+            row.push(cell);
+        }
+        table.rows.push(row);
+    }
+    table
+}
+
+/// Derive the Figure-3-style speedup table (vs `baseline`, normally
+/// Basic PCD / Basic GD).
+pub fn speedup_table(title: &str, cells: &[CellResult], baseline: RuleKind) -> report::Table {
+    let mut datasets: Vec<String> = Vec::new();
+    let mut methods: Vec<RuleKind> = Vec::new();
+    for c in cells {
+        if !datasets.contains(&c.dataset) {
+            datasets.push(c.dataset.clone());
+        }
+        if !methods.contains(&c.rule) {
+            methods.push(c.rule);
+        }
+    }
+    let mut headers = vec!["Method".to_string()];
+    headers.extend(datasets.iter().cloned());
+    let mut table = report::Table { title: title.to_string(), headers, rows: Vec::new() };
+    for &m in &methods {
+        let mut row = vec![m.label().to_string()];
+        for d in &datasets {
+            let base = cells.iter().find(|c| c.rule == baseline && &c.dataset == d);
+            let cell = cells.iter().find(|c| c.rule == m && &c.dataset == d);
+            let s = match (base, cell) {
+                (Some(b), Some(c)) => format!("{:.1}x", c.timing.speedup_vs(&b.timing)),
+                _ => "—".to_string(),
+            };
+            row.push(s);
+        }
+        table.rows.push(row);
+    }
+    table
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::lambda::GridKind;
+    use crate::solver::Penalty;
+
+    #[test]
+    fn sweep_and_tables() {
+        let specs = [DataSpec::synthetic(40, 30, 3)];
+        let methods = [RuleKind::BasicPcd, RuleKind::SsrBedpp];
+        let cfg = PathConfig {
+            rule: RuleKind::SsrBedpp,
+            penalty: Penalty::Lasso,
+            n_lambda: 10,
+            lambda_min_ratio: 0.1,
+            grid: GridKind::Linear,
+            tol: 1e-7,
+            max_iter: 100_000,
+            lambdas: None,
+        };
+        let cells = run_method_sweep(&specs, &methods, 2, &cfg, 5).unwrap();
+        assert_eq!(cells.len(), 2);
+        let t = timing_table("t", &cells);
+        assert_eq!(t.rows.len(), 2);
+        assert_eq!(t.headers.len(), 2);
+        let s = speedup_table("s", &cells, RuleKind::BasicPcd);
+        assert!(s.rows[0][1].ends_with('x'));
+    }
+}

@@ -1,0 +1,129 @@
+//! Cubic B-spline basis expansion — the GENE-SPLINE workload (paper §5.2.2b)
+//! applies a 5-term basis expansion to each raw feature and treats the five
+//! expansions as a group.
+
+use super::standardize::{orthonormalize_groups, standardize_in_place};
+use super::{Dataset, GroupLayout, GroupedDataset};
+use crate::linalg::DenseMatrix;
+
+/// Evaluate the Cox–de Boor recursion for B-spline basis `i` of degree `k`
+/// over knot vector `t` at point `x`.
+fn bspline_basis(i: usize, k: usize, t: &[f64], x: f64) -> f64 {
+    if k == 0 {
+        // half-open intervals, closed at the right end of the last interval
+        let last = i + 1 == t.len() - 1 || t[i + 1] >= t[t.len() - 1];
+        if (t[i] <= x && x < t[i + 1]) || (last && (x - t[i + 1]).abs() < 1e-12) {
+            1.0
+        } else {
+            0.0
+        }
+    } else {
+        let mut v = 0.0;
+        let d1 = t[i + k] - t[i];
+        if d1 > 1e-12 {
+            v += (x - t[i]) / d1 * bspline_basis(i, k - 1, t, x);
+        }
+        let d2 = t[i + k + 1] - t[i + 1];
+        if d2 > 1e-12 {
+            v += (t[i + k + 1] - x) / d2 * bspline_basis(i + 1, k - 1, t, x);
+        }
+        v
+    }
+}
+
+/// Expand one column into `n_basis` cubic B-spline bases with knots at the
+/// empirical quantiles (boundary knots at min/max), as `splines::bs` does.
+pub fn expand_column(col: &[f64], n_basis: usize) -> Vec<Vec<f64>> {
+    assert!(n_basis >= 4, "cubic B-splines need >= 4 basis functions");
+    let degree = 3usize;
+    let n_inner = n_basis - degree; // interior-knot count + 1 spans
+    let mut sorted = col.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let lo = sorted[0];
+    let hi = sorted[sorted.len() - 1];
+    // knot vector: degree+1 copies of lo, interior quantile knots, degree+1 of hi
+    let mut knots = vec![lo; degree + 1];
+    for q in 1..n_inner {
+        let frac = q as f64 / n_inner as f64;
+        let idx = ((sorted.len() - 1) as f64 * frac).round() as usize;
+        knots.push(sorted[idx]);
+    }
+    knots.extend(std::iter::repeat(hi).take(degree + 1));
+    (0..n_basis)
+        .map(|b| col.iter().map(|&x| bspline_basis(b, degree, &knots, x)).collect())
+        .collect()
+}
+
+/// Build the GENE-SPLINE grouped dataset: a `n_basis`-term B-spline
+/// expansion of every column of `base`, one group per raw feature, then
+/// standardization (2) + group orthonormalization (19).
+pub fn expand_dataset(base: &Dataset, n_basis: usize) -> GroupedDataset {
+    let p_raw = base.p();
+    let mut cols: Vec<Vec<f64>> = Vec::with_capacity(p_raw * n_basis);
+    for j in 0..p_raw {
+        cols.extend(expand_column(base.x.col(j), n_basis));
+    }
+    let mut x = DenseMatrix::from_columns(&cols).expect("expand_dataset: build");
+    let mut y = base.y.clone();
+    let (_, _) = standardize_in_place(&mut x, &mut y);
+    let layout = GroupLayout::from_sizes(vec![n_basis; p_raw]);
+    let og = orthonormalize_groups(&x, &layout.starts, &layout.sizes);
+    let new_layout = GroupLayout::from_sizes(og.sizes.clone());
+    GroupedDataset {
+        x: og.x,
+        y,
+        layout: new_layout,
+        back_transforms: og.back_transforms,
+        raw_sizes: vec![n_basis; p_raw],
+        name: format!("{}-spline{}", base.name, n_basis),
+        truth: base.truth.clone(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DataSpec;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn partition_of_unity() {
+        let mut rng = Pcg64::new(1);
+        let col: Vec<f64> = (0..100).map(|_| rng.normal()).collect();
+        let bases = expand_column(&col, 5);
+        assert_eq!(bases.len(), 5);
+        for i in 0..100 {
+            let s: f64 = bases.iter().map(|b| b[i]).sum();
+            assert!((s - 1.0).abs() < 1e-9, "sum of bases at i={i} is {s}");
+        }
+    }
+
+    #[test]
+    fn bases_nonnegative_and_local() {
+        let mut rng = Pcg64::new(2);
+        let col: Vec<f64> = (0..80).map(|_| rng.uniform_in(-2.0, 2.0)).collect();
+        let bases = expand_column(&col, 6);
+        for b in &bases {
+            assert!(b.iter().all(|&v| v >= -1e-12 && v <= 1.0 + 1e-12));
+        }
+    }
+
+    #[test]
+    fn expanded_dataset_shape_and_ortho() {
+        let base = DataSpec::gene_like(120, 8).generate(3);
+        let g = expand_dataset(&base, 5);
+        assert_eq!(g.num_groups(), 8);
+        assert!(g.p() <= 40);
+        let n = g.n() as f64;
+        for grp in 0..g.num_groups() {
+            let r = g.layout.range(grp);
+            for a in r.clone() {
+                for b in r.clone() {
+                    let d = crate::linalg::ops::dot(g.x.col(a), g.x.col(b)) / n;
+                    let want = if a == b { 1.0 } else { 0.0 };
+                    assert!((d - want).abs() < 1e-7);
+                }
+            }
+        }
+    }
+}

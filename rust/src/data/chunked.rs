@@ -1,0 +1,139 @@
+//! Out-of-core column store with scan accounting.
+//!
+//! §3.2.3 of the paper argues HSSR's *memory* advantage: SSR and SEDPP must
+//! fully scan the feature matrix at every λ, while HSSR scans only the safe
+//! set — decisive when the matrix lives on disk (biglasso's memory-mapped
+//! big.matrix). This module models that substrate: a [`ChunkedMatrix`]
+//! stores columns in fixed-size chunks and *counts every column fetched*,
+//! so benches can report bytes-scanned per rule (ablation `abl1`).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::linalg::{ops, DenseMatrix};
+
+/// A column-chunked matrix that counts column accesses.
+pub struct ChunkedMatrix {
+    n: usize,
+    p: usize,
+    chunk_cols: usize,
+    chunks: Vec<Vec<f64>>,
+    cols_fetched: AtomicU64,
+    chunk_faults: AtomicU64,
+}
+
+impl ChunkedMatrix {
+    /// Split a dense matrix into chunks of `chunk_cols` columns.
+    pub fn from_dense(x: &DenseMatrix, chunk_cols: usize) -> Self {
+        let n = x.nrows();
+        let p = x.ncols();
+        let cc = chunk_cols.max(1);
+        let mut chunks = Vec::with_capacity(p.div_ceil(cc));
+        let mut j = 0;
+        while j < p {
+            let w = cc.min(p - j);
+            chunks.push(x.col_block(j, w).to_vec());
+            j += w;
+        }
+        ChunkedMatrix {
+            n,
+            p,
+            chunk_cols: cc,
+            chunks,
+            cols_fetched: AtomicU64::new(0),
+            chunk_faults: AtomicU64::new(0),
+        }
+    }
+
+    /// Rows.
+    pub fn nrows(&self) -> usize {
+        self.n
+    }
+
+    /// Columns.
+    pub fn ncols(&self) -> usize {
+        self.p
+    }
+
+    /// Column view with access accounting.
+    pub fn col(&self, j: usize) -> &[f64] {
+        debug_assert!(j < self.p);
+        self.cols_fetched.fetch_add(1, Ordering::Relaxed);
+        let c = j / self.chunk_cols;
+        let off = (j - c * self.chunk_cols) * self.n;
+        if off == 0 {
+            self.chunk_faults.fetch_add(1, Ordering::Relaxed);
+        }
+        &self.chunks[c][off..off + self.n]
+    }
+
+    /// Scan `out[k] = x_{idx[k]}ᵀ v / n` with accounting (the out-of-core
+    /// analogue of [`crate::linalg::blocked::scan_subset`]).
+    pub fn scan_subset(&self, v: &[f64], idx: &[usize], out: &mut [f64]) {
+        assert_eq!(out.len(), idx.len());
+        let inv_n = 1.0 / self.n as f64;
+        for (k, &j) in idx.iter().enumerate() {
+            out[k] = ops::dot(self.col(j), v) * inv_n;
+        }
+    }
+
+    /// Total columns fetched since construction (or last reset).
+    pub fn cols_fetched(&self) -> u64 {
+        self.cols_fetched.load(Ordering::Relaxed)
+    }
+
+    /// Bytes fetched, assuming each column fetch reads its f64 data.
+    pub fn bytes_fetched(&self) -> u64 {
+        self.cols_fetched() * (self.n as u64) * 8
+    }
+
+    /// Reset the access counters.
+    pub fn reset_counters(&self) {
+        self.cols_fetched.store(0, Ordering::Relaxed);
+        self.chunk_faults.store(0, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn values_match_dense() {
+        let mut rng = Pcg64::new(1);
+        let x = DenseMatrix::from_fn(13, 9, |_, _| rng.normal());
+        let c = ChunkedMatrix::from_dense(&x, 4);
+        for j in 0..9 {
+            assert_eq!(c.col(j), x.col(j));
+        }
+    }
+
+    #[test]
+    fn counters_track_accesses() {
+        let x = DenseMatrix::zeros(5, 10);
+        let c = ChunkedMatrix::from_dense(&x, 3);
+        assert_eq!(c.cols_fetched(), 0);
+        let _ = c.col(0);
+        let _ = c.col(7);
+        assert_eq!(c.cols_fetched(), 2);
+        assert_eq!(c.bytes_fetched(), 2 * 5 * 8);
+        c.reset_counters();
+        assert_eq!(c.cols_fetched(), 0);
+    }
+
+    #[test]
+    fn scan_subset_matches_blocked() {
+        let mut rng = Pcg64::new(2);
+        let x = DenseMatrix::from_fn(20, 15, |_, _| rng.normal());
+        let v = rng.normal_vec(20);
+        let c = ChunkedMatrix::from_dense(&x, 4);
+        let idx = vec![1usize, 3, 14];
+        let mut got = vec![0.0; 3];
+        c.scan_subset(&v, &idx, &mut got);
+        let full = crate::linalg::blocked::scan_all_vec(&x, &v);
+        for (k, &j) in idx.iter().enumerate() {
+            assert!((got[k] - full[j]).abs() < 1e-12);
+        }
+        assert_eq!(c.cols_fetched(), 3);
+    }
+}

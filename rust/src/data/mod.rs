@@ -1,0 +1,238 @@
+//! Dataset substrate: standardized design matrices, synthetic generators,
+//! and real-data-like workload simulators.
+//!
+//! The paper evaluates on four real lasso data sets (GENE, MNIST, GWAS, NYT)
+//! and two group-lasso data sets (GRVS, GENE-SPLINE) that are not shipped
+//! with this repository; [`DataSpec`] provides generators that reproduce the
+//! statistical regime of each (dimensions, correlation structure, signal
+//! sparsity, marginal distributions). See DESIGN.md §2 for the substitution
+//! rationale.
+//!
+//! All generators are deterministic given a `u64` seed.
+
+pub mod bspline;
+pub mod chunked;
+pub mod io;
+pub mod realistic;
+pub mod standardize;
+pub mod synth;
+
+use crate::linalg::DenseMatrix;
+
+/// A standardized regression dataset: `y` centered, columns of `x` centered
+/// and scaled to unit variance (paper condition (2)).
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    /// Standardized `n × p` design matrix.
+    pub x: DenseMatrix,
+    /// Centered response, length `n`.
+    pub y: Vec<f64>,
+    /// Column means of the raw design (for back-transforming intercepts).
+    pub centers: Vec<f64>,
+    /// Column scales (`sqrt(Σ(x−x̄)²/n)`) of the raw design; 0 marks a
+    /// constant column that was zeroed out.
+    pub scales: Vec<f64>,
+    /// Human-readable workload name (used in bench reports).
+    pub name: String,
+    /// Indices of the true (generating) features, when known.
+    pub truth: Option<Vec<usize>>,
+}
+
+impl Dataset {
+    /// Number of observations.
+    pub fn n(&self) -> usize {
+        self.x.nrows()
+    }
+
+    /// Number of features.
+    pub fn p(&self) -> usize {
+        self.x.ncols()
+    }
+}
+
+/// Contiguous feature-group layout for the group lasso.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct GroupLayout {
+    /// Start column of each group.
+    pub starts: Vec<usize>,
+    /// Number of columns in each group (`W_g`).
+    pub sizes: Vec<usize>,
+}
+
+impl GroupLayout {
+    /// Build a layout from group sizes.
+    pub fn from_sizes(sizes: Vec<usize>) -> Self {
+        let mut starts = Vec::with_capacity(sizes.len());
+        let mut acc = 0;
+        for &s in &sizes {
+            starts.push(acc);
+            acc += s;
+        }
+        GroupLayout { starts, sizes }
+    }
+
+    /// Number of groups `G`.
+    pub fn num_groups(&self) -> usize {
+        self.sizes.len()
+    }
+
+    /// Total number of columns.
+    pub fn total_cols(&self) -> usize {
+        self.starts.last().map(|s| s + self.sizes[self.sizes.len() - 1]).unwrap_or(0)
+    }
+
+    /// Column range of group `g`.
+    pub fn range(&self, g: usize) -> std::ops::Range<usize> {
+        self.starts[g]..self.starts[g] + self.sizes[g]
+    }
+}
+
+/// A group-lasso dataset with the additional group-level orthonormalization
+/// of paper condition (19): `X_gᵀ X_g / n = I` for every group.
+#[derive(Clone, Debug)]
+pub struct GroupedDataset {
+    /// Orthonormalized `n × p` design.
+    pub x: DenseMatrix,
+    /// Centered response.
+    pub y: Vec<f64>,
+    /// Group layout over the columns of `x` (post-orthonormalization; rank
+    /// deficient groups shrink).
+    pub layout: GroupLayout,
+    /// Per-group back-transform `T_g` such that `β_raw = T_g · β_ortho`
+    /// (stored column-major, `raw_size × ortho_size`).
+    pub back_transforms: Vec<Vec<f64>>,
+    /// Raw (pre-orthonormalization) group sizes.
+    pub raw_sizes: Vec<usize>,
+    /// Workload name.
+    pub name: String,
+    /// Indices of true nonzero groups, when known.
+    pub truth: Option<Vec<usize>>,
+}
+
+impl GroupedDataset {
+    /// Number of observations.
+    pub fn n(&self) -> usize {
+        self.x.nrows()
+    }
+
+    /// Number of (post-orthonormalization) columns.
+    pub fn p(&self) -> usize {
+        self.x.ncols()
+    }
+
+    /// Number of groups.
+    pub fn num_groups(&self) -> usize {
+        self.layout.num_groups()
+    }
+}
+
+/// Declarative description of a workload; `generate(seed)` realizes it.
+///
+/// Dimensions follow the paper's defaults; every field can be overridden to
+/// scale workloads down for quick benchmarks.
+#[derive(Clone, Debug, PartialEq)]
+pub enum DataSpec {
+    /// Wang-et-al synthetic model: i.i.d. N(0,1) design, `s` true features
+    /// with Unif[−1,1] coefficients, `y = Xβ + 0.1ε`.
+    Synthetic { n: usize, p: usize, s: usize },
+    /// Gene-expression-like: block-AR(1) correlated Gaussian columns.
+    GeneLike { n: usize, p: usize, block: usize, rho: f64, s: usize },
+    /// MNIST-like: spatially smoothed, globally correlated "image" columns;
+    /// the response is a held-out column.
+    MnistLike { n: usize, p: usize, window: usize, global_mix: f64 },
+    /// GWAS-like: {0,1,2} allele dosages with LD windows.
+    GwasLike { n: usize, p: usize, ld_window: usize, s: usize },
+    /// Bag-of-words-like: log1p of Zipf-Poisson counts; response is a
+    /// held-out word column.
+    NytLike { n: usize, p: usize, zipf_s: f64 },
+}
+
+impl DataSpec {
+    /// The standard synthetic model used by Figure 2.
+    pub fn synthetic(n: usize, p: usize, s: usize) -> Self {
+        DataSpec::Synthetic { n, p, s }
+    }
+
+    /// GENE-like defaults (paper: n=536, p=17,322).
+    pub fn gene_like(n: usize, p: usize) -> Self {
+        DataSpec::GeneLike { n, p, block: 100, rho: 0.8, s: 20 }
+    }
+
+    /// MNIST-like defaults (paper: n=784, p=60,000).
+    pub fn mnist_like(n: usize, p: usize) -> Self {
+        DataSpec::MnistLike { n, p, window: 8, global_mix: 0.35 }
+    }
+
+    /// GWAS-like defaults (paper: n=313, p=660,496; default scaled ×10 down).
+    pub fn gwas_like(n: usize, p: usize) -> Self {
+        DataSpec::GwasLike { n, p, ld_window: 20, s: 20 }
+    }
+
+    /// NYT-like defaults (paper: n=5,000, p=55,000).
+    pub fn nyt_like(n: usize, p: usize) -> Self {
+        DataSpec::NytLike { n, p, zipf_s: 1.3 }
+    }
+
+    /// Workload name used in reports.
+    pub fn name(&self) -> String {
+        match self {
+            DataSpec::Synthetic { n, p, s } => format!("synth(n={n},p={p},s={s})"),
+            DataSpec::GeneLike { n, p, .. } => format!("gene-like(n={n},p={p})"),
+            DataSpec::MnistLike { n, p, .. } => format!("mnist-like(n={n},p={p})"),
+            DataSpec::GwasLike { n, p, .. } => format!("gwas-like(n={n},p={p})"),
+            DataSpec::NytLike { n, p, .. } => format!("nyt-like(n={n},p={p})"),
+        }
+    }
+
+    /// Realize the workload deterministically from `seed`.
+    pub fn generate(&self, seed: u64) -> Dataset {
+        match *self {
+            DataSpec::Synthetic { n, p, s } => synth::generate(n, p, s, seed),
+            DataSpec::GeneLike { n, p, block, rho, s } => {
+                realistic::gene_like(n, p, block, rho, s, seed)
+            }
+            DataSpec::MnistLike { n, p, window, global_mix } => {
+                realistic::mnist_like(n, p, window, global_mix, seed)
+            }
+            DataSpec::GwasLike { n, p, ld_window, s } => {
+                realistic::gwas_like(n, p, ld_window, s, seed)
+            }
+            DataSpec::NytLike { n, p, zipf_s } => realistic::nyt_like(n, p, zipf_s, seed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layout_from_sizes() {
+        let l = GroupLayout::from_sizes(vec![3, 2, 4]);
+        assert_eq!(l.starts, vec![0, 3, 5]);
+        assert_eq!(l.total_cols(), 9);
+        assert_eq!(l.range(1), 3..5);
+        assert_eq!(l.num_groups(), 3);
+    }
+
+    #[test]
+    fn empty_layout() {
+        let l = GroupLayout::from_sizes(vec![]);
+        assert_eq!(l.total_cols(), 0);
+    }
+
+    #[test]
+    fn spec_names() {
+        assert!(DataSpec::synthetic(10, 20, 3).name().contains("synth"));
+        assert!(DataSpec::gene_like(5, 6).name().contains("gene"));
+    }
+
+    #[test]
+    fn generate_is_deterministic() {
+        let spec = DataSpec::synthetic(30, 40, 5);
+        let a = spec.generate(99);
+        let b = spec.generate(99);
+        assert_eq!(a.x.as_slice(), b.x.as_slice());
+        assert_eq!(a.y, b.y);
+    }
+}

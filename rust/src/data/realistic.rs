@@ -1,0 +1,375 @@
+//! Real-data-like workload simulators.
+//!
+//! The paper benchmarks on GENE / MNIST / GWAS / NYT (lasso) and GRVS /
+//! GENE-SPLINE (group lasso). Those data sets are not redistributable here;
+//! each generator below reproduces the *statistical regime* that drives
+//! screening-rule behaviour: dimensions, inter-column correlation,
+//! marginal distributions, and signal sparsity. DESIGN.md §2 documents each
+//! substitution.
+
+use super::standardize::standardize_in_place;
+use super::{Dataset, GroupLayout, GroupedDataset};
+use crate::linalg::DenseMatrix;
+use crate::rng::Pcg64;
+
+/// GENE-like: gene-expression panel with co-expression blocks.
+///
+/// Columns follow a block-AR(1) process: within blocks of `block` features,
+/// `x_j = ρ·x_{j−1} + √(1−ρ²)·ε_j`. The response is generated from `s`
+/// random true features (Unif[−1,1] effects) plus noise at SNR ≈ 10, then
+/// everything is standardized.
+pub fn gene_like(n: usize, p: usize, block: usize, rho: f64, s: usize, seed: u64) -> Dataset {
+    let mut rng = Pcg64::new(seed);
+    let mut x = DenseMatrix::zeros(n, p);
+    let carry = (1.0 - rho * rho).sqrt();
+    let mut prev = vec![0.0; n];
+    for j in 0..p {
+        let fresh = j % block.max(1) == 0;
+        let col = x.col_mut(j);
+        if fresh {
+            for (i, v) in col.iter_mut().enumerate() {
+                *v = rng.normal();
+                prev[i] = *v;
+            }
+        } else {
+            for (i, v) in col.iter_mut().enumerate() {
+                *v = rho * prev[i] + carry * rng.normal();
+                prev[i] = *v;
+            }
+        }
+    }
+    let truth = {
+        let mut t = rng.sample_indices(p, s.min(p));
+        t.sort_unstable();
+        t
+    };
+    let mut beta = vec![0.0; p];
+    for &j in &truth {
+        beta[j] = rng.uniform_in(-1.0, 1.0);
+    }
+    let mut y = x.matvec(&beta);
+    let signal_sd = (crate::linalg::ops::nrm2_sq(&y) / n as f64).sqrt().max(1e-8);
+    for yi in y.iter_mut() {
+        *yi += 0.3 * signal_sd * rng.normal();
+    }
+    let (centers, scales) = standardize_in_place(&mut x, &mut y);
+    Dataset { x, y, centers, scales, name: format!("gene-like(n={n},p={p})"), truth: Some(truth) }
+}
+
+/// MNIST-like: "image" columns with strong mutual correlation.
+///
+/// Each column is `global_mix·g + (1−global_mix)·smooth(ε_j)` where `g` is a
+/// shared length-`n` component (global illumination) and `smooth` is a
+/// circular moving average of width `window` (spatial smoothness of pixel
+/// rows). The response is an extra held-out column of the same process —
+/// mirroring the paper's protocol of regressing a test image on training
+/// images.
+pub fn mnist_like(n: usize, p: usize, window: usize, global_mix: f64, seed: u64) -> Dataset {
+    let mut rng = Pcg64::new(seed);
+    let g = rng.normal_vec(n);
+    let make_col = |rng: &mut Pcg64| -> Vec<f64> {
+        let raw = rng.normal_vec(n);
+        let mut sm = vec![0.0; n];
+        let w = window.max(1);
+        let inv = 1.0 / w as f64;
+        // circular moving average
+        let mut acc: f64 = (0..w).map(|k| raw[k % n]).sum();
+        for i in 0..n {
+            sm[i] = acc * inv;
+            acc += raw[(i + w) % n] - raw[i % n];
+        }
+        sm.iter().zip(&g).map(|(s, gi)| global_mix * gi + (1.0 - global_mix) * s).collect()
+    };
+    let cols: Vec<Vec<f64>> = (0..p).map(|_| make_col(&mut rng)).collect();
+    let mut x = DenseMatrix::from_columns(&cols).expect("mnist_like: build");
+    let mut y = make_col(&mut rng);
+    let (centers, scales) = standardize_in_place(&mut x, &mut y);
+    Dataset { x, y, centers, scales, name: format!("mnist-like(n={n},p={p})"), truth: None }
+}
+
+/// Inverse standard normal CDF (Acklam's rational approximation, |ε|<1.15e-9).
+pub fn inv_norm_cdf(p: f64) -> f64 {
+    debug_assert!(p > 0.0 && p < 1.0);
+    const A: [f64; 6] = [
+        -3.969683028665376e+01,
+        2.209460984245205e+02,
+        -2.759285104469687e+02,
+        1.383577518672690e+02,
+        -3.066479806614716e+01,
+        2.506628277459239e+00,
+    ];
+    const B: [f64; 5] = [
+        -5.447609879822406e+01,
+        1.615858368580409e+02,
+        -1.556989798598866e+02,
+        6.680131188771972e+01,
+        -1.328068155288572e+01,
+    ];
+    const C: [f64; 6] = [
+        -7.784894002430293e-03,
+        -3.223964580411365e-01,
+        -2.400758277161838e+00,
+        -2.549732539343734e+00,
+        4.374664141464968e+00,
+        2.938163982698783e+00,
+    ];
+    const D: [f64; 4] = [
+        7.784695709041462e-03,
+        3.224671290700398e-01,
+        2.445134137142996e+00,
+        3.754408661907416e+00,
+    ];
+    let plow = 0.02425;
+    if p < plow {
+        let q = (-2.0 * p.ln()).sqrt();
+        (((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    } else if p <= 1.0 - plow {
+        let q = p - 0.5;
+        let r = q * q;
+        (((((A[0] * r + A[1]) * r + A[2]) * r + A[3]) * r + A[4]) * r + A[5]) * q
+            / (((((B[0] * r + B[1]) * r + B[2]) * r + B[3]) * r + B[4]) * r + 1.0)
+    } else {
+        -inv_norm_cdf(1.0 - p)
+    }
+}
+
+/// GWAS-like: SNP dosage matrix {0,1,2} with linkage-disequilibrium windows.
+///
+/// Two latent AR(1) haplotype chains per individual run across SNPs; allele
+/// `a = 1` iff the latent Gaussian falls below the MAF quantile (Gaussian
+/// copula), giving dosages with realistic LD decay inside windows of
+/// `ld_window` SNPs. MAFs are Unif[0.05, 0.5]. `s` causal SNPs at SNR ≈ 4.
+pub fn gwas_like(n: usize, p: usize, ld_window: usize, s: usize, seed: u64) -> Dataset {
+    let mut rng = Pcg64::new(seed);
+    let rho: f64 = 0.9;
+    let carry = (1.0 - rho * rho).sqrt();
+    let mut x = DenseMatrix::zeros(n, p);
+    let mut h1 = vec![0.0; n];
+    let mut h2 = vec![0.0; n];
+    for j in 0..p {
+        let fresh = j % ld_window.max(1) == 0;
+        let maf = rng.uniform_in(0.05, 0.5);
+        let thresh = inv_norm_cdf(maf);
+        let col = x.col_mut(j);
+        for i in 0..n {
+            if fresh {
+                h1[i] = rng.normal();
+                h2[i] = rng.normal();
+            } else {
+                h1[i] = rho * h1[i] + carry * rng.normal();
+                h2[i] = rho * h2[i] + carry * rng.normal();
+            }
+            let d = (h1[i] < thresh) as u8 + (h2[i] < thresh) as u8;
+            col[i] = d as f64;
+        }
+    }
+    let truth = {
+        let mut t = rng.sample_indices(p, s.min(p));
+        t.sort_unstable();
+        t
+    };
+    let mut beta = vec![0.0; p];
+    for &j in &truth {
+        beta[j] = rng.uniform_in(-0.5, 0.5);
+    }
+    let mut y = x.matvec(&beta);
+    let signal_sd = (crate::linalg::ops::nrm2_sq(&y) / n as f64).sqrt().max(1e-8);
+    for yi in y.iter_mut() {
+        *yi += 0.5 * signal_sd * rng.normal();
+    }
+    let (centers, scales) = standardize_in_place(&mut x, &mut y);
+    Dataset { x, y, centers, scales, name: format!("gwas-like(n={n},p={p})"), truth: Some(truth) }
+}
+
+/// NYT-like: log1p of Zipf-Poisson word counts; response is a held-out word.
+///
+/// Document lengths are log-normal; word `j` has base rate `f_j ∝ r_j^{−s}`
+/// for a random Zipf rank `r_j`; a low-rank topic structure (8 topics)
+/// correlates words that co-occur. Counts are Poisson, features are
+/// `log(1+count)` — the paper's preprocessing of the UCI bag-of-words set.
+pub fn nyt_like(n: usize, p: usize, zipf_s: f64, seed: u64) -> Dataset {
+    let mut rng = Pcg64::new(seed);
+    let n_topics = 8;
+    // Document topic weights (softmax-ish positive mixture).
+    let doc_topics: Vec<Vec<f64>> = (0..n)
+        .map(|_| {
+            let mut w: Vec<f64> = (0..n_topics).map(|_| rng.uniform().powi(2)).collect();
+            let s: f64 = w.iter().sum::<f64>().max(1e-9);
+            w.iter_mut().for_each(|v| *v /= s);
+            w
+        })
+        .collect();
+    let doc_len: Vec<f64> =
+        (0..n).map(|_| (rng.normal_ms(4.0, 0.6)).exp()).collect();
+    let make_word = |rng: &mut Pcg64| -> Vec<f64> {
+        let rank = rng.zipf(p.max(2) as u64, zipf_s) as f64;
+        let base = rank.powf(-zipf_s) * 40.0;
+        let topic_aff: Vec<f64> = (0..n_topics).map(|_| rng.uniform().powi(3)).collect();
+        let aff_sum: f64 = topic_aff.iter().sum::<f64>().max(1e-9);
+        (0..n)
+            .map(|i| {
+                let mix: f64 = doc_topics[i]
+                    .iter()
+                    .zip(&topic_aff)
+                    .map(|(dw, ta)| dw * ta / aff_sum)
+                    .sum();
+                let lam = base * doc_len[i] * (0.2 + 2.0 * mix);
+                (rng.poisson(lam) as f64).ln_1p()
+            })
+            .collect()
+    };
+    let cols: Vec<Vec<f64>> = (0..p).map(|_| make_word(&mut rng)).collect();
+    let mut x = DenseMatrix::from_columns(&cols).expect("nyt_like: build");
+    let mut y = make_word(&mut rng);
+    let (centers, scales) = standardize_in_place(&mut x, &mut y);
+    Dataset { x, y, centers, scales, name: format!("nyt-like(n={n},p={p})"), truth: None }
+}
+
+/// GRVS-like: rare-variant groups for the group lasso (paper §5.2.2a).
+///
+/// Variants are {0,1,2} dosages with rare MAFs (Unif[0.001, 0.02]); genes
+/// are contiguous groups of 1–`max_gene` variants; the phenotype follows a
+/// burden model over `g_true` causal genes. Groups are orthonormalized to
+/// condition (19); monomorphic variants are dropped inside the
+/// orthonormalization (rank reduction).
+pub fn grvs_like(
+    n: usize,
+    g_total: usize,
+    max_gene: usize,
+    g_true: usize,
+    seed: u64,
+) -> GroupedDataset {
+    let mut rng = Pcg64::new(seed);
+    let sizes: Vec<usize> =
+        (0..g_total).map(|_| 1 + rng.below(max_gene as u64) as usize).collect();
+    let layout = GroupLayout::from_sizes(sizes.clone());
+    let p = layout.total_cols();
+    let mut x = DenseMatrix::zeros(n, p);
+    for j in 0..p {
+        let maf = rng.uniform_in(0.001, 0.02);
+        let col = x.col_mut(j);
+        for v in col.iter_mut() {
+            *v = rng.binomial(2, maf) as f64;
+        }
+    }
+    let truth = {
+        let mut t = rng.sample_indices(g_total, g_true.min(g_total));
+        t.sort_unstable();
+        t
+    };
+    // Burden model: y = Σ_causal effect_g · (Σ_j∈g x_ij) + ε
+    let mut y = vec![0.0; n];
+    for &g in &truth {
+        let eff = rng.uniform_in(0.5, 1.5) * if rng.bernoulli(0.5) { 1.0 } else { -1.0 };
+        for j in layout.range(g) {
+            crate::linalg::ops::axpy(eff, x.col(j), &mut y);
+        }
+    }
+    let signal_sd = (crate::linalg::ops::nrm2_sq(&y) / n as f64).sqrt().max(0.3);
+    for yi in y.iter_mut() {
+        *yi += 0.7 * signal_sd * rng.normal();
+    }
+    let (_, scales) = standardize_in_place(&mut x, &mut y);
+    // Drop monomorphic (zero-variance) columns before orthonormalization by
+    // keeping them: they are all-zero post-standardization, so the group
+    // Gram is singular there and rank reduction removes them.
+    let _ = scales;
+    let og = super::standardize::orthonormalize_groups(&x, &layout.starts, &layout.sizes);
+    let new_layout = GroupLayout::from_sizes(og.sizes.clone());
+    GroupedDataset {
+        x: og.x,
+        y,
+        layout: new_layout,
+        back_transforms: og.back_transforms,
+        raw_sizes: sizes,
+        name: format!("grvs-like(n={n},G={g_total})"),
+        truth: Some(truth),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::ops;
+
+    #[test]
+    fn gene_like_block_correlation() {
+        let ds = gene_like(300, 60, 20, 0.8, 5, 1);
+        // Adjacent columns in a block are strongly correlated (post-
+        // standardization, correlation = dot/n).
+        let c01 = ops::dot(ds.x.col(1), ds.x.col(2)) / 300.0;
+        assert!(c01 > 0.5, "within-block corr = {c01}");
+        // Columns across the block boundary (19,20) are near-independent.
+        let c_cross = ops::dot(ds.x.col(19), ds.x.col(20)) / 300.0;
+        assert!(c_cross.abs() < 0.35, "cross-block corr = {c_cross}");
+    }
+
+    #[test]
+    fn mnist_like_is_globally_correlated() {
+        let ds = mnist_like(200, 30, 8, 0.35, 2);
+        let mut acc = 0.0;
+        let mut cnt = 0;
+        for a in 0..10 {
+            for b in (a + 1)..10 {
+                acc += ops::dot(ds.x.col(a), ds.x.col(b)) / 200.0;
+                cnt += 1;
+            }
+        }
+        let mean_corr = acc / cnt as f64;
+        assert!(mean_corr > 0.15, "mean inter-column corr = {mean_corr}");
+    }
+
+    #[test]
+    fn inv_norm_cdf_sane() {
+        assert!(inv_norm_cdf(0.5).abs() < 1e-8);
+        assert!((inv_norm_cdf(0.975) - 1.959964).abs() < 1e-4);
+        assert!((inv_norm_cdf(0.025) + 1.959964).abs() < 1e-4);
+        assert!((inv_norm_cdf(1e-6) + 4.753424).abs() < 1e-3);
+    }
+
+    #[test]
+    fn gwas_like_dosages_and_ld() {
+        let n = 400;
+        let raw_check = {
+            // regenerate raw dosage behaviour via a fresh call and check the
+            // standardized structure instead: adjacent SNPs correlated.
+            gwas_like(n, 40, 20, 5, 3)
+        };
+        let c = ops::dot(raw_check.x.col(1), raw_check.x.col(2)) / n as f64;
+        assert!(c > 0.25, "LD corr = {c}");
+        let c_cross = ops::dot(raw_check.x.col(19), raw_check.x.col(20)) / n as f64;
+        assert!(c_cross.abs() < 0.4, "cross-window corr = {c_cross}");
+    }
+
+    #[test]
+    fn nyt_like_is_sparse_and_skewed() {
+        let ds = nyt_like(150, 40, 1.3, 4);
+        assert_eq!(ds.n(), 150);
+        assert_eq!(ds.p(), 40);
+        // Standardized columns remain unit-variance by construction.
+        for j in 0..ds.p() {
+            let v = ops::nrm2_sq(ds.x.col(j)) / 150.0;
+            assert!(v < 1.0 + 1e-6, "col {j} variance {v}");
+        }
+    }
+
+    #[test]
+    fn grvs_like_group_structure() {
+        let ds = grvs_like(250, 30, 8, 5, 5);
+        assert_eq!(ds.raw_sizes.len(), 30);
+        assert!(ds.num_groups() == 30);
+        // condition (19) on a few groups
+        let n = ds.n() as f64;
+        for g in [0usize, 7, 29] {
+            let r = ds.layout.range(g);
+            for a in r.clone() {
+                for b in r.clone() {
+                    let d = ops::dot(ds.x.col(a), ds.x.col(b)) / n;
+                    let want = if a == b { 1.0 } else { 0.0 };
+                    assert!((d - want).abs() < 1e-6, "g={g} gram({a},{b})={d}");
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,316 @@
+//! Standardization to paper conditions (2) and (19).
+//!
+//! * [`standardize_in_place`] centers `y`, and centers + scales every column
+//!   of `X` so that `Σᵢ xᵢⱼ = 0` and `Σᵢ xᵢⱼ²/n = 1` — condition (2). All
+//!   screening-rule formulas in [`crate::screening`] assume this.
+//! * [`orthonormalize_groups`] additionally enforces `X_gᵀX_g/n = I` per
+//!   group — condition (19) — via an eigendecomposition of the small group
+//!   Gram matrix (the approach used by `grpreg`). Rank-deficient groups are
+//!   reduced to their numerical rank; the back-transform to raw coefficients
+//!   is returned.
+
+use crate::linalg::{ops, DenseMatrix};
+
+/// Center a vector in place; returns the subtracted mean.
+pub fn center(v: &mut [f64]) -> f64 {
+    let m = ops::mean(v);
+    for x in v.iter_mut() {
+        *x -= m;
+    }
+    m
+}
+
+/// Center and scale every column of `x` to condition (2), and center `y`.
+///
+/// Returns `(centers, scales)`. Columns with zero variance are zeroed out
+/// and get `scale = 0` (they can never enter the model, matching how
+/// `biglasso` drops constant columns).
+pub fn standardize_in_place(x: &mut DenseMatrix, y: &mut [f64]) -> (Vec<f64>, Vec<f64>) {
+    let n = x.nrows();
+    let p = x.ncols();
+    assert_eq!(y.len(), n);
+    center(y);
+    let mut centers = vec![0.0; p];
+    let mut scales = vec![0.0; p];
+    for j in 0..p {
+        let col = x.col_mut(j);
+        let m = ops::mean(col);
+        for v in col.iter_mut() {
+            *v -= m;
+        }
+        let ss = ops::nrm2_sq(col) / n as f64;
+        let sd = ss.sqrt();
+        centers[j] = m;
+        if sd > 1e-12 {
+            let inv = 1.0 / sd;
+            for v in col.iter_mut() {
+                *v *= inv;
+            }
+            scales[j] = sd;
+        } else {
+            for v in col.iter_mut() {
+                *v = 0.0;
+            }
+            scales[j] = 0.0;
+        }
+    }
+    (centers, scales)
+}
+
+/// Jacobi eigendecomposition of a symmetric `w × w` matrix stored
+/// column-major. Returns `(eigenvalues, eigenvectors)` with eigenvectors in
+/// the columns of the returned matrix, `A = V diag(d) Vᵀ`.
+///
+/// Groups in the paper's workloads have `W_g ≤ 30`, so the classic cyclic
+/// Jacobi method is both simple and plenty fast.
+pub fn jacobi_eigen(a: &[f64], w: usize) -> (Vec<f64>, Vec<f64>) {
+    assert_eq!(a.len(), w * w);
+    let mut m = a.to_vec();
+    let mut v = vec![0.0; w * w];
+    for i in 0..w {
+        v[i * w + i] = 1.0;
+    }
+    let idx = |r: usize, c: usize| c * w + r;
+    for _sweep in 0..100 {
+        // Off-diagonal magnitude.
+        let mut off = 0.0;
+        for c in 0..w {
+            for r in 0..c {
+                off += m[idx(r, c)] * m[idx(r, c)];
+            }
+        }
+        if off < 1e-24 {
+            break;
+        }
+        for q in 0..w {
+            for p_ in 0..q {
+                let apq = m[idx(p_, q)];
+                if apq.abs() < 1e-18 {
+                    continue;
+                }
+                let app = m[idx(p_, p_)];
+                let aqq = m[idx(q, q)];
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = if theta >= 0.0 {
+                    1.0 / (theta + (1.0 + theta * theta).sqrt())
+                } else {
+                    -1.0 / (-theta + (1.0 + theta * theta).sqrt())
+                };
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = t * c;
+                // Apply rotation G(p,q,θ) on both sides: M ← GᵀMG, V ← VG.
+                for k in 0..w {
+                    let mkp = m[idx(k, p_)];
+                    let mkq = m[idx(k, q)];
+                    m[idx(k, p_)] = c * mkp - s * mkq;
+                    m[idx(k, q)] = s * mkp + c * mkq;
+                }
+                for k in 0..w {
+                    let mpk = m[idx(p_, k)];
+                    let mqk = m[idx(q, k)];
+                    m[idx(p_, k)] = c * mpk - s * mqk;
+                    m[idx(q, k)] = s * mpk + c * mqk;
+                }
+                for k in 0..w {
+                    let vkp = v[idx(k, p_)];
+                    let vkq = v[idx(k, q)];
+                    v[idx(k, p_)] = c * vkp - s * vkq;
+                    v[idx(k, q)] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+    let d: Vec<f64> = (0..w).map(|i| m[idx(i, i)]).collect();
+    (d, v)
+}
+
+/// Result of group orthonormalization.
+pub struct OrthoGroups {
+    /// New design with `X_gᵀX_g/n = I` per (possibly shrunk) group.
+    pub x: DenseMatrix,
+    /// New group sizes (ranks).
+    pub sizes: Vec<usize>,
+    /// Back-transforms `T_g` (`raw_size × new_size`, column-major):
+    /// `β_raw = T_g β_new`.
+    pub back_transforms: Vec<Vec<f64>>,
+}
+
+/// Orthonormalize each contiguous group of columns to condition (19).
+///
+/// `X_g → X_g · V_g · diag(1/√d_g)` where `X_gᵀX_g/n = V diag(d) Vᵀ`.
+/// Eigenvalues below `1e-10 · max(d)` are dropped (numerical rank).
+pub fn orthonormalize_groups(
+    x: &DenseMatrix,
+    starts: &[usize],
+    sizes: &[usize],
+) -> OrthoGroups {
+    let n = x.nrows();
+    let mut new_cols: Vec<Vec<f64>> = Vec::new();
+    let mut new_sizes = Vec::with_capacity(sizes.len());
+    let mut backs = Vec::with_capacity(sizes.len());
+    for (g, (&j0, &w)) in starts.iter().zip(sizes).enumerate() {
+        let _ = g;
+        // Gram matrix G = X_gᵀ X_g / n (w × w, column-major).
+        let mut gram = vec![0.0; w * w];
+        for a in 0..w {
+            for b in a..w {
+                let d = ops::dot(x.col(j0 + a), x.col(j0 + b)) / n as f64;
+                gram[b * w + a] = d;
+                gram[a * w + b] = d;
+            }
+        }
+        let (d, v) = jacobi_eigen(&gram, w);
+        let dmax = d.iter().cloned().fold(0.0f64, f64::max);
+        let keep: Vec<usize> =
+            (0..w).filter(|&k| d[k] > 1e-10 * dmax.max(1e-300)).collect();
+        let rank = keep.len();
+        // New columns: X_g · v_k / sqrt(d_k), and back-transform
+        // T[:, k] = v_k / sqrt(d_k).
+        let mut back = vec![0.0; w * rank];
+        for (kk, &k) in keep.iter().enumerate() {
+            let inv_sd = 1.0 / d[k].sqrt();
+            let mut col = vec![0.0; n];
+            for a in 0..w {
+                let coef = v[k * w + a] * inv_sd;
+                back[kk * w + a] = coef;
+                if coef != 0.0 {
+                    ops::axpy(coef, x.col(j0 + a), &mut col);
+                }
+            }
+            new_cols.push(col);
+        }
+        new_sizes.push(rank);
+        backs.push(back);
+    }
+    let x_new = DenseMatrix::from_columns(&new_cols).expect("ortho: column build");
+    OrthoGroups { x: x_new, sizes: new_sizes, back_transforms: backs }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn standardize_satisfies_condition_2() {
+        let mut rng = Pcg64::new(1);
+        let n = 50;
+        let mut x = DenseMatrix::from_fn(n, 7, |_, j| rng.normal() * (j + 1) as f64 + 3.0);
+        let mut y: Vec<f64> = (0..n).map(|_| rng.normal() + 5.0).collect();
+        standardize_in_place(&mut x, &mut y);
+        assert!(ops::sum(&y).abs() < 1e-9);
+        for j in 0..7 {
+            assert!(ops::sum(x.col(j)).abs() < 1e-9, "col {j} not centered");
+            assert!((ops::nrm2_sq(x.col(j)) / n as f64 - 1.0).abs() < 1e-9, "col {j} not unit");
+        }
+    }
+
+    #[test]
+    fn constant_column_zeroed() {
+        let mut x = DenseMatrix::from_fn(10, 2, |i, j| if j == 0 { 7.0 } else { i as f64 });
+        let mut y = vec![1.0; 10];
+        let (_, scales) = standardize_in_place(&mut x, &mut y);
+        assert_eq!(scales[0], 0.0);
+        assert!(x.col(0).iter().all(|&v| v == 0.0));
+        assert!(scales[1] > 0.0);
+    }
+
+    #[test]
+    fn jacobi_recovers_diagonal() {
+        let a = vec![3.0, 0.0, 0.0, 5.0]; // diag(3,5)
+        let (mut d, _) = jacobi_eigen(&a, 2);
+        d.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        assert!((d[0] - 3.0).abs() < 1e-12 && (d[1] - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn jacobi_reconstructs_matrix() {
+        let mut rng = Pcg64::new(2);
+        let w = 6;
+        // random symmetric PSD: A = BᵀB
+        let b: Vec<f64> = (0..w * w).map(|_| rng.normal()).collect();
+        let mut a = vec![0.0; w * w];
+        for i in 0..w {
+            for j in 0..w {
+                let mut s = 0.0;
+                for k in 0..w {
+                    s += b[i * w + k] * b[j * w + k];
+                }
+                a[j * w + i] = s;
+            }
+        }
+        let (d, v) = jacobi_eigen(&a, w);
+        // Check A·v_k = d_k·v_k for each k.
+        for k in 0..w {
+            for i in 0..w {
+                let mut av = 0.0;
+                for j in 0..w {
+                    av += a[j * w + i] * v[k * w + j];
+                }
+                assert!((av - d[k] * v[k * w + i]).abs() < 1e-8, "eigenpair {k} broken");
+            }
+        }
+    }
+
+    #[test]
+    fn groups_become_orthonormal() {
+        let mut rng = Pcg64::new(3);
+        let n = 60;
+        let mut x = DenseMatrix::from_fn(n, 9, |_, _| rng.normal());
+        let mut y = rng.normal_vec(n);
+        standardize_in_place(&mut x, &mut y);
+        let starts = vec![0, 4, 7];
+        let sizes = vec![4, 3, 2];
+        let og = orthonormalize_groups(&x, &starts, &sizes);
+        assert_eq!(og.sizes, sizes); // full rank here
+        let mut j0 = 0;
+        for &w in &og.sizes {
+            for a in 0..w {
+                for b in 0..w {
+                    let d = ops::dot(og.x.col(j0 + a), og.x.col(j0 + b)) / n as f64;
+                    let want = if a == b { 1.0 } else { 0.0 };
+                    assert!((d - want).abs() < 1e-8, "gram({a},{b}) = {d}");
+                }
+            }
+            j0 += w;
+        }
+    }
+
+    #[test]
+    fn rank_deficient_group_shrinks() {
+        let mut rng = Pcg64::new(4);
+        let n = 40;
+        let base = rng.normal_vec(n);
+        // group of 3 where col2 = col0 + col1 (rank 2)
+        let c0 = base.clone();
+        let c1 = rng.normal_vec(n);
+        let c2: Vec<f64> = c0.iter().zip(&c1).map(|(a, b)| a + b).collect();
+        let x = DenseMatrix::from_columns(&[c0, c1, c2]).unwrap();
+        let og = orthonormalize_groups(&x, &[0], &[3]);
+        assert_eq!(og.sizes, vec![2]);
+        assert_eq!(og.back_transforms[0].len(), 3 * 2);
+    }
+
+    #[test]
+    fn back_transform_reproduces_fitted_values() {
+        // X_new β_new must equal X_raw (T β_new).
+        let mut rng = Pcg64::new(5);
+        let n = 30;
+        let x = DenseMatrix::from_fn(n, 5, |_, _| rng.normal());
+        let og = orthonormalize_groups(&x, &[0], &[5]);
+        let beta_new: Vec<f64> = (0..og.sizes[0]).map(|_| rng.normal()).collect();
+        let fit_new = og.x.matvec(&beta_new);
+        // β_raw = T β_new
+        let t = &og.back_transforms[0];
+        let mut beta_raw = vec![0.0; 5];
+        for k in 0..og.sizes[0] {
+            for a in 0..5 {
+                beta_raw[a] += t[k * 5 + a] * beta_new[k];
+            }
+        }
+        let fit_raw = x.matvec(&beta_raw);
+        for i in 0..n {
+            assert!((fit_new[i] - fit_raw[i]).abs() < 1e-8);
+        }
+    }
+}

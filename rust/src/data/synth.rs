@@ -1,0 +1,134 @@
+//! The synthetic model of Wang et al. (2015) used by the paper's Figure 2
+//! and Figure 4: `y = Xβ + 0.1ε` with i.i.d. N(0,1) design and noise.
+
+use super::standardize::standardize_in_place;
+use super::{Dataset, GroupLayout, GroupedDataset};
+use crate::linalg::DenseMatrix;
+use crate::rng::Pcg64;
+
+/// Generate the standard lasso synthetic workload: `s` randomly placed true
+/// features with Unif[−1,1] coefficients (paper §5.1.1).
+pub fn generate(n: usize, p: usize, s: usize, seed: u64) -> Dataset {
+    let mut rng = Pcg64::new(seed);
+    let mut x = DenseMatrix::from_fn(n, p, |_, _| rng.normal());
+    let truth = rng.sample_indices(p, s.min(p));
+    let mut beta = vec![0.0; p];
+    for &j in &truth {
+        beta[j] = rng.uniform_in(-1.0, 1.0);
+    }
+    let mut y = x.matvec(&beta);
+    for yi in y.iter_mut() {
+        *yi += 0.1 * rng.normal();
+    }
+    let (centers, scales) = standardize_in_place(&mut x, &mut y);
+    let mut truth_sorted = truth;
+    truth_sorted.sort_unstable();
+    Dataset {
+        x,
+        y,
+        centers,
+        scales,
+        name: format!("synth(n={n},p={p},s={s})"),
+        truth: Some(truth_sorted),
+    }
+}
+
+/// Generate the group-lasso synthetic workload of paper §5.2.1: `g_total`
+/// groups of `w` features each, `g_true` nonzero groups, coefficients
+/// Unif[−1,1], `y = Xβ + 0.1ε`. Groups are orthonormalized to condition (19).
+pub fn generate_grouped(
+    n: usize,
+    g_total: usize,
+    w: usize,
+    g_true: usize,
+    seed: u64,
+) -> GroupedDataset {
+    let mut rng = Pcg64::new(seed);
+    let p = g_total * w;
+    let mut x = DenseMatrix::from_fn(n, p, |_, _| rng.normal());
+    let true_groups = {
+        let mut t = rng.sample_indices(g_total, g_true.min(g_total));
+        t.sort_unstable();
+        t
+    };
+    let mut beta = vec![0.0; p];
+    for &g in &true_groups {
+        for j in g * w..(g + 1) * w {
+            beta[j] = rng.uniform_in(-1.0, 1.0);
+        }
+    }
+    let mut y = x.matvec(&beta);
+    for yi in y.iter_mut() {
+        *yi += 0.1 * rng.normal();
+    }
+    let (_, _) = standardize_in_place(&mut x, &mut y);
+    let layout = GroupLayout::from_sizes(vec![w; g_total]);
+    let og = super::standardize::orthonormalize_groups(&x, &layout.starts, &layout.sizes);
+    let new_layout = GroupLayout::from_sizes(og.sizes.clone());
+    GroupedDataset {
+        x: og.x,
+        y,
+        layout: new_layout,
+        back_transforms: og.back_transforms,
+        raw_sizes: vec![w; g_total],
+        name: format!("group-synth(n={n},G={g_total},W={w})"),
+        truth: Some(true_groups),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::ops;
+
+    #[test]
+    fn dimensions_and_standardization() {
+        let ds = generate(80, 40, 5, 7);
+        assert_eq!(ds.n(), 80);
+        assert_eq!(ds.p(), 40);
+        assert!(ops::sum(&ds.y).abs() < 1e-8);
+        for j in 0..ds.p() {
+            assert!((ops::nrm2_sq(ds.x.col(j)) / 80.0 - 1.0).abs() < 1e-8);
+        }
+        assert_eq!(ds.truth.as_ref().unwrap().len(), 5);
+    }
+
+    #[test]
+    fn truth_features_carry_signal() {
+        let ds = generate(200, 50, 5, 11);
+        // The largest |x_jᵀy| features should be enriched in the truth set.
+        let mut cors: Vec<(usize, f64)> = (0..ds.p())
+            .map(|j| (j, ops::dot(ds.x.col(j), &ds.y).abs()))
+            .collect();
+        cors.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        let top5: Vec<usize> = cors[..5].iter().map(|c| c.0).collect();
+        let truth = ds.truth.unwrap();
+        let overlap = top5.iter().filter(|j| truth.contains(j)).count();
+        assert!(overlap >= 2, "top correlations {top5:?} vs truth {truth:?}");
+    }
+
+    #[test]
+    fn grouped_satisfies_condition_19() {
+        let ds = generate_grouped(60, 6, 4, 2, 13);
+        assert_eq!(ds.num_groups(), 6);
+        let n = ds.n() as f64;
+        for g in 0..ds.num_groups() {
+            let r = ds.layout.range(g);
+            for a in r.clone() {
+                for b in r.clone() {
+                    let d = ops::dot(ds.x.col(a), ds.x.col(b)) / n;
+                    let want = if a == b { 1.0 } else { 0.0 };
+                    assert!((d - want).abs() < 1e-8);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn grouped_deterministic() {
+        let a = generate_grouped(30, 4, 3, 1, 5);
+        let b = generate_grouped(30, 4, 3, 1, 5);
+        assert_eq!(a.x.as_slice(), b.x.as_slice());
+        assert_eq!(a.truth, b.truth);
+    }
+}

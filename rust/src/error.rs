@@ -1,0 +1,47 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Errors produced by the `hssr` library.
+#[derive(Debug, Error)]
+pub enum HssrError {
+    /// Input dimensions are inconsistent (e.g. `X` rows vs `y` length).
+    #[error("dimension mismatch: {0}")]
+    Dimension(String),
+
+    /// An invalid configuration value was supplied.
+    #[error("invalid config: {0}")]
+    Config(String),
+
+    /// The inner optimizer failed to converge within `max_iter` iterations.
+    #[error("solver did not converge at lambda index {lambda_index} (max_iter={max_iter}, last delta={last_delta:.3e})")]
+    NoConvergence {
+        /// Index into the λ grid where convergence failed.
+        lambda_index: usize,
+        /// The iteration cap that was exhausted.
+        max_iter: usize,
+        /// Magnitude of the last coefficient update.
+        last_delta: f64,
+    },
+
+    /// An AOT artifact was missing or malformed.
+    #[error("runtime artifact error: {0}")]
+    Artifact(String),
+
+    /// Error surfaced from the PJRT/XLA runtime.
+    #[error("xla runtime error: {0}")]
+    Xla(String),
+
+    /// I/O error (dataset cache, artifact files, report output).
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl From<xla::Error> for HssrError {
+    fn from(e: xla::Error) -> Self {
+        HssrError::Xla(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, HssrError>;

@@ -1,0 +1,67 @@
+//! # hssr — Hybrid Safe-Strong Rules for lasso-type problems
+//!
+//! A Rust + JAX + Pallas reproduction of Zeng, Yang & Breheny (2017),
+//! *"Efficient Feature Screening for Lasso-Type Problems via Hybrid
+//! Safe-Strong Rules"*.
+//!
+//! The library solves the lasso, elastic net, and group lasso over a grid of
+//! decreasing regularization parameters with pathwise coordinate descent
+//! (Algorithm 1 of the paper), accelerated by pluggable *feature screening
+//! rules*:
+//!
+//! * [`screening::ssr`] — sequential strong rule (Tibshirani et al. 2012),
+//! * [`screening::bedpp`] — basic EDPP safe rule (Wang et al. 2015, Thm 2.1),
+//! * [`screening::sedpp`] — sequential EDPP safe rule (Thm 2.2),
+//! * [`screening::dome`] — the Dome safe test (Xiang & Ramadge 2012),
+//! * [`screening::hybrid`] — the paper's contribution: hybrid safe-strong
+//!   rules **SSR-BEDPP** and **SSR-Dome** (Definition 3.1),
+//! * [`screening::rehybrid`] — the §6 future-work extension that re-hybridizes
+//!   with a frozen SEDPP rule once BEDPP goes dead.
+//!
+//! ## Architecture (three layers)
+//!
+//! * **L3 (this crate)** owns the path orchestration, screening state, KKT
+//!   checking, warm starts, datasets, metrics, and the CLI.
+//! * **L2/L1 (build-time Python)** author the screening-scan compute graph
+//!   (`z = Xᵀr/n`) in JAX with a Pallas kernel hot-spot; `make artifacts`
+//!   AOT-lowers them to HLO text under `artifacts/`.
+//! * **[`runtime`]** loads those artifacts through the PJRT C API (`xla`
+//!   crate) so the Rust hot path can execute the AOT-compiled scans; a
+//!   native Rust engine with identical semantics is the default.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use hssr::prelude::*;
+//!
+//! let ds = DataSpec::synthetic(1_000, 5_000, 20).generate(42);
+//! let cfg = PathConfig { rule: RuleKind::SsrBedpp, ..PathConfig::default() };
+//! let fit = fit_lasso_path(&ds, &cfg).unwrap();
+//! println!("selected {} features at λ_min", fit.nonzero_at(fit.lambdas.len() - 1));
+//! ```
+
+pub mod bench_harness;
+pub mod coordinator;
+pub mod data;
+pub mod error;
+pub mod linalg;
+pub mod prop;
+pub mod rng;
+pub mod runtime;
+pub mod screening;
+pub mod solver;
+
+#[cfg(test)]
+pub(crate) mod testutil;
+
+pub use error::HssrError;
+
+/// Convenience re-exports covering the common fitting workflow.
+pub mod prelude {
+    pub use crate::data::{DataSpec, Dataset, GroupedDataset};
+    pub use crate::error::HssrError;
+    pub use crate::screening::RuleKind;
+    pub use crate::solver::path::{fit_lasso_path, PathConfig, PathFit};
+    pub use crate::solver::group_path::{fit_group_path, GroupPathConfig, GroupPathFit};
+    pub use crate::solver::Penalty;
+}

@@ -1,0 +1,211 @@
+//! Dense linear-algebra substrate.
+//!
+//! The lasso solvers work column-wise (coordinate descent touches one
+//! feature column at a time; the screening scan is a column-parallel
+//! reduction), so the canonical layout is **column-major**: column `j` of a
+//! [`DenseMatrix`] is the contiguous slice `data[j*n .. (j+1)*n]`.
+
+pub mod blocked;
+pub mod ops;
+
+use crate::error::{HssrError, Result};
+
+/// A dense, column-major `n × p` matrix of `f64`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DenseMatrix {
+    n: usize,
+    p: usize,
+    data: Vec<f64>,
+}
+
+impl DenseMatrix {
+    /// Allocate an `n × p` matrix of zeros.
+    pub fn zeros(n: usize, p: usize) -> Self {
+        DenseMatrix { n, p, data: vec![0.0; n * p] }
+    }
+
+    /// Build from column-major data (length must be `n*p`).
+    pub fn from_col_major(n: usize, p: usize, data: Vec<f64>) -> Result<Self> {
+        if data.len() != n * p {
+            return Err(HssrError::Dimension(format!(
+                "from_col_major: data len {} != n*p = {}",
+                data.len(),
+                n * p
+            )));
+        }
+        Ok(DenseMatrix { n, p, data })
+    }
+
+    /// Build by evaluating `f(i, j)` at every entry.
+    pub fn from_fn(n: usize, p: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut m = DenseMatrix::zeros(n, p);
+        for j in 0..p {
+            let col = m.col_mut(j);
+            for (i, v) in col.iter_mut().enumerate() {
+                *v = f(i, j);
+            }
+        }
+        m
+    }
+
+    /// Identity-scaled matrix is not needed; this builds a matrix whose
+    /// columns are the given vectors.
+    pub fn from_columns(cols: &[Vec<f64>]) -> Result<Self> {
+        let p = cols.len();
+        if p == 0 {
+            return Err(HssrError::Dimension("from_columns: empty".into()));
+        }
+        let n = cols[0].len();
+        let mut data = Vec::with_capacity(n * p);
+        for c in cols {
+            if c.len() != n {
+                return Err(HssrError::Dimension("from_columns: ragged columns".into()));
+            }
+            data.extend_from_slice(c);
+        }
+        Ok(DenseMatrix { n, p, data })
+    }
+
+    /// Number of rows (observations).
+    #[inline]
+    pub fn nrows(&self) -> usize {
+        self.n
+    }
+
+    /// Number of columns (features).
+    #[inline]
+    pub fn ncols(&self) -> usize {
+        self.p
+    }
+
+    /// Immutable view of column `j`.
+    #[inline]
+    pub fn col(&self, j: usize) -> &[f64] {
+        debug_assert!(j < self.p);
+        &self.data[j * self.n..(j + 1) * self.n]
+    }
+
+    /// Mutable view of column `j`.
+    #[inline]
+    pub fn col_mut(&mut self, j: usize) -> &mut [f64] {
+        debug_assert!(j < self.p);
+        &mut self.data[j * self.n..(j + 1) * self.n]
+    }
+
+    /// Entry accessor (row `i`, column `j`).
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        self.data[j * self.n + i]
+    }
+
+    /// Entry setter.
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        self.data[j * self.n + i] = v;
+    }
+
+    /// The backing column-major slice.
+    #[inline]
+    pub fn as_slice(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// Consume into the backing column-major vector.
+    pub fn into_vec(self) -> Vec<f64> {
+        self.data
+    }
+
+    /// A contiguous block of `w` columns starting at `j0`, as a slice.
+    #[inline]
+    pub fn col_block(&self, j0: usize, w: usize) -> &[f64] {
+        debug_assert!(j0 + w <= self.p);
+        &self.data[j0 * self.n..(j0 + w) * self.n]
+    }
+
+    /// Copy the submatrix of the given columns (used for group sub-blocks
+    /// and for restricting the design to a screened feature set).
+    pub fn select_columns(&self, idx: &[usize]) -> DenseMatrix {
+        let mut out = DenseMatrix::zeros(self.n, idx.len());
+        for (k, &j) in idx.iter().enumerate() {
+            out.col_mut(k).copy_from_slice(self.col(j));
+        }
+        out
+    }
+
+    /// `X · v` (length-`p` input, length-`n` output).
+    pub fn matvec(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(v.len(), self.p, "matvec: len(v) != p");
+        let mut out = vec![0.0; self.n];
+        for j in 0..self.p {
+            let vj = v[j];
+            if vj != 0.0 {
+                ops::axpy(vj, self.col(j), &mut out);
+            }
+        }
+        out
+    }
+
+    /// `Xᵀ · v` (length-`n` input, length-`p` output). The screening scan.
+    pub fn matvec_t(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(v.len(), self.n, "matvec_t: len(v) != n");
+        (0..self.p).map(|j| ops::dot(self.col(j), v)).collect()
+    }
+
+    /// Frobenius-squared norm.
+    pub fn frob_sq(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> DenseMatrix {
+        // [[1, 4], [2, 5], [3, 6]]  (3×2)
+        DenseMatrix::from_col_major(3, 2, vec![1., 2., 3., 4., 5., 6.]).unwrap()
+    }
+
+    #[test]
+    fn layout_and_accessors() {
+        let m = small();
+        assert_eq!(m.nrows(), 3);
+        assert_eq!(m.ncols(), 2);
+        assert_eq!(m.col(0), &[1., 2., 3.]);
+        assert_eq!(m.col(1), &[4., 5., 6.]);
+        assert_eq!(m.get(1, 1), 5.0);
+    }
+
+    #[test]
+    fn from_fn_matches_manual() {
+        let m = DenseMatrix::from_fn(3, 2, |i, j| (i + 10 * j) as f64);
+        assert_eq!(m.col(1), &[10., 11., 12.]);
+    }
+
+    #[test]
+    fn matvec_and_transpose() {
+        let m = small();
+        assert_eq!(m.matvec(&[1.0, 2.0]), vec![9., 12., 15.]);
+        assert_eq!(m.matvec_t(&[1.0, 1.0, 1.0]), vec![6., 15.]);
+    }
+
+    #[test]
+    fn select_columns_copies() {
+        let m = small();
+        let s = m.select_columns(&[1]);
+        assert_eq!(s.ncols(), 1);
+        assert_eq!(s.col(0), &[4., 5., 6.]);
+    }
+
+    #[test]
+    fn bad_dims_rejected() {
+        assert!(DenseMatrix::from_col_major(2, 2, vec![0.0; 3]).is_err());
+    }
+
+    #[test]
+    fn from_columns_roundtrip() {
+        let m = DenseMatrix::from_columns(&[vec![1., 2.], vec![3., 4.]]).unwrap();
+        assert_eq!(m.get(0, 1), 3.0);
+        assert!(DenseMatrix::from_columns(&[vec![1.], vec![1., 2.]]).is_err());
+    }
+}

@@ -1,0 +1,311 @@
+//! `hssr` — CLI for the hybrid safe-strong rule lasso solver.
+//!
+//! ```text
+//! hssr fit   [--data synth|gene|mnist|gwas|nyt] [--n N] [--p P] [--rule METHOD]
+//!            [--alpha A] [--nlambda K] [--lmin-ratio R] [--seed S] [--engine native|pjrt]
+//! hssr group [--data synth|grvs|spline] [--groups G] [--gsize W] [--rule METHOD]
+//! hssr power [--data gene] [--n N] [--p P]          # Figure-1 style curves
+//! hssr cv    [--folds K] [--data ...]                # k-fold CV for λ
+//! hssr logistic [--n N] [--p P] [--rule basic|ac|ssr] # sparse logistic path (§6)
+//! hssr info                                          # build/runtime info
+//! ```
+//!
+//! `--data csv --path file.csv` loads external data (response in column 1).
+
+use hssr::coordinator::config::{parse_rule, Config};
+use hssr::coordinator::metrics::screening_power;
+use hssr::coordinator::report::Table;
+use hssr::data::{bspline, realistic, synth, DataSpec, Dataset, GroupedDataset};
+use hssr::error::{HssrError, Result};
+use hssr::runtime::{make_engine, EngineKind};
+use hssr::screening::RuleKind;
+use hssr::solver::group_path::{fit_group_path, GroupPathConfig};
+use hssr::solver::path::{fit_lasso_path_with_engine, PathConfig};
+use hssr::solver::Penalty;
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: hssr <fit|group|power|info> [--key value ...]\n\
+         see README.md for the full flag reference"
+    );
+    std::process::exit(2);
+}
+
+fn dataset_from_cfg(cfg: &Config) -> Result<Dataset> {
+    let seed = cfg.get_parse("seed", 42u64)?;
+    let kind = cfg.get_str("data", "synth");
+    let spec = match kind.as_str() {
+        "synth" => DataSpec::synthetic(
+            cfg.get_parse("n", 1000usize)?,
+            cfg.get_parse("p", 5000usize)?,
+            cfg.get_parse("s", 20usize)?,
+        ),
+        "gene" => DataSpec::gene_like(
+            cfg.get_parse("n", 536usize)?,
+            cfg.get_parse("p", 17_322usize)?,
+        ),
+        "mnist" => DataSpec::mnist_like(
+            cfg.get_parse("n", 784usize)?,
+            cfg.get_parse("p", 60_000usize)?,
+        ),
+        "gwas" => DataSpec::gwas_like(
+            cfg.get_parse("n", 313usize)?,
+            cfg.get_parse("p", 66_050usize)?,
+        ),
+        "nyt" => DataSpec::nyt_like(
+            cfg.get_parse("n", 5_000usize)?,
+            cfg.get_parse("p", 55_000usize)?,
+        ),
+        "csv" => {
+            let path = cfg
+                .get("path")
+                .ok_or_else(|| HssrError::Config("--data csv requires --path".into()))?;
+            eprintln!("loading {path}…");
+            return hssr::data::io::load_csv(std::path::Path::new(path));
+        }
+        other => {
+            return Err(HssrError::Config(format!("unknown --data '{other}'")));
+        }
+    };
+    eprintln!("generating {} (seed {seed})…", spec.name());
+    Ok(spec.generate(seed))
+}
+
+fn path_config_from(cfg: &Config) -> Result<PathConfig> {
+    let rule_s = cfg.get_str("rule", "ssr-bedpp");
+    let rule = parse_rule(&rule_s)
+        .ok_or_else(|| HssrError::Config(format!("unknown --rule '{rule_s}'")))?;
+    let alpha: f64 = cfg.get_parse("alpha", 1.0)?;
+    let penalty =
+        if alpha >= 1.0 { Penalty::Lasso } else { Penalty::ElasticNet { alpha } };
+    Ok(PathConfig {
+        rule,
+        penalty,
+        n_lambda: cfg.get_parse("nlambda", 100usize)?,
+        lambda_min_ratio: cfg.get_parse("lmin-ratio", 0.1)?,
+        tol: cfg.get_parse("tol", 1e-7)?,
+        ..PathConfig::default()
+    })
+}
+
+fn cmd_fit(cfg: &Config) -> Result<()> {
+    let ds = dataset_from_cfg(cfg)?;
+    let pcfg = path_config_from(cfg)?;
+    let engine_kind = EngineKind::parse(&cfg.get_str("engine", "native"))
+        .ok_or_else(|| HssrError::Config("engine must be native|pjrt".into()))?;
+    let engine = make_engine(engine_kind, &cfg.get_str("artifacts", "artifacts"))?;
+    let fit = fit_lasso_path_with_engine(&ds, &pcfg, engine.as_ref())?;
+    println!(
+        "fitted {} over {} λ values in {:.3}s  (rule {}, engine {})",
+        ds.name,
+        fit.lambdas.len(),
+        fit.seconds,
+        fit.rule.label(),
+        engine.name(),
+    );
+    let mut t = Table::new(
+        "path summary (every 10th λ)",
+        &["k", "λ/λmax", "|S|", "|H|", "kkt", "viol", "nnz", "objective"],
+    );
+    for (k, m) in fit.metrics.iter().enumerate() {
+        if k % 10 == 0 || k + 1 == fit.metrics.len() {
+            t.push_row(vec![
+                k.to_string(),
+                format!("{:.3}", m.lambda / fit.lambda_max),
+                m.safe_size.to_string(),
+                m.strong_size.to_string(),
+                m.kkt_checked.to_string(),
+                m.violations.to_string(),
+                m.nonzero.to_string(),
+                format!("{:.5}", m.objective),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+    println!(
+        "totals: {} columns scanned, {} KKT checks, {} violations",
+        fit.total_cols_scanned(),
+        fit.total_kkt_checks(),
+        fit.total_violations()
+    );
+    Ok(())
+}
+
+fn grouped_from_cfg(cfg: &Config) -> Result<GroupedDataset> {
+    let seed = cfg.get_parse("seed", 42u64)?;
+    let kind = cfg.get_str("data", "synth");
+    Ok(match kind.as_str() {
+        "synth" => synth::generate_grouped(
+            cfg.get_parse("n", 1000usize)?,
+            cfg.get_parse("groups", 1000usize)?,
+            cfg.get_parse("gsize", 10usize)?,
+            cfg.get_parse("strue", 10usize)?,
+            seed,
+        ),
+        "grvs" => realistic::grvs_like(
+            cfg.get_parse("n", 697usize)?,
+            cfg.get_parse("groups", 3205usize)?,
+            cfg.get_parse("maxgene", 30usize)?,
+            cfg.get_parse("strue", 10usize)?,
+            seed,
+        ),
+        "spline" => {
+            let base = DataSpec::gene_like(
+                cfg.get_parse("n", 536usize)?,
+                cfg.get_parse("p", 17_322usize)?,
+            )
+            .generate(seed);
+            bspline::expand_dataset(&base, cfg.get_parse("basis", 5usize)?)
+        }
+        other => {
+            return Err(HssrError::Config(format!("unknown group --data '{other}'")));
+        }
+    })
+}
+
+fn cmd_group(cfg: &Config) -> Result<()> {
+    let ds = grouped_from_cfg(cfg)?;
+    let rule_s = cfg.get_str("rule", "ssr-bedpp");
+    let rule = parse_rule(&rule_s)
+        .ok_or_else(|| HssrError::Config(format!("unknown --rule '{rule_s}'")))?;
+    let gcfg = GroupPathConfig {
+        rule,
+        n_lambda: cfg.get_parse("nlambda", 100usize)?,
+        lambda_min_ratio: cfg.get_parse("lmin-ratio", 0.1)?,
+        tol: cfg.get_parse("tol", 1e-7)?,
+        ..GroupPathConfig::default()
+    };
+    let fit = fit_group_path(&ds, &gcfg)?;
+    println!(
+        "fitted {} ({} groups) over {} λ values in {:.3}s (rule {})",
+        ds.name,
+        ds.num_groups(),
+        fit.lambdas.len(),
+        fit.seconds,
+        fit.rule.label()
+    );
+    let last = fit.metrics.last().unwrap();
+    println!(
+        "at λmin: |S|={} groups, |H|={} groups, {} nonzero coefficients",
+        last.safe_size, last.strong_size, last.nonzero
+    );
+    Ok(())
+}
+
+fn cmd_power(cfg: &Config) -> Result<()> {
+    let ds = dataset_from_cfg(cfg)?;
+    let pcfg = PathConfig {
+        n_lambda: cfg.get_parse("nlambda", 100usize)?,
+        ..PathConfig::default()
+    };
+    let curves = screening_power(&ds, &pcfg)?;
+    let mut t = Table::new(
+        &format!("Figure 1 — % features discarded ({})", ds.name),
+        &["λ/λmax", "Dome", "BEDPP", "SEDPP", "SSR", "SSR-BEDPP"],
+    );
+    let k = curves[0].lambda_frac.len();
+    for i in (0..k).step_by((k / 20).max(1)) {
+        let mut row = vec![format!("{:.2}", curves[0].lambda_frac[i])];
+        for c in &curves {
+            row.push(format!("{:.1}%", 100.0 * c.discarded_frac[i]));
+        }
+        t.push_row(row);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_cv(cfg: &Config) -> Result<()> {
+    let ds = dataset_from_cfg(cfg)?;
+    let pcfg = path_config_from(cfg)?;
+    let folds = cfg.get_parse("folds", 5usize)?;
+    let cv = hssr::coordinator::cv::cv_lasso(&ds, &pcfg, folds, cfg.get_parse("seed", 42u64)?)?;
+    let mut t = Table::new(
+        &format!("{}-fold CV on {}", folds, ds.name),
+        &["λ/λmax", "cv mse", "se"],
+    );
+    let lmax = cv.lambdas[0];
+    for i in (0..cv.lambdas.len()).step_by((cv.lambdas.len() / 20).max(1)) {
+        t.push_row(vec![
+            format!("{:.3}", cv.lambdas[i] / lmax),
+            format!("{:.5}", cv.cv_mean[i]),
+            format!("{:.5}", cv.cv_se[i]),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "λ_min = {:.5} (index {}), λ_1se = {:.5} (index {})",
+        cv.lambda_min(),
+        cv.idx_min,
+        cv.lambda_1se(),
+        cv.idx_1se
+    );
+    Ok(())
+}
+
+fn cmd_logistic(cfg: &Config) -> Result<()> {
+    use hssr::solver::logistic::{fit_logistic_path, synthetic_logistic, LogisticPathConfig};
+    let n = cfg.get_parse("n", 500usize)?;
+    let p = cfg.get_parse("p", 2000usize)?;
+    let s = cfg.get_parse("s", 10usize)?;
+    let seed = cfg.get_parse("seed", 42u64)?;
+    let rule_s = cfg.get_str("rule", "ssr");
+    let rule = parse_rule(&rule_s)
+        .ok_or_else(|| HssrError::Config(format!("unknown --rule '{rule_s}'")))?;
+    let (x, y, truth) = synthetic_logistic(n, p, s, seed);
+    let lcfg = LogisticPathConfig {
+        rule,
+        n_lambda: cfg.get_parse("nlambda", 100usize)?,
+        ..Default::default()
+    };
+    let fit = fit_logistic_path(&x, &y, &lcfg)?;
+    println!(
+        "logistic path (n={n}, p={p}) fitted in {:.3}s (rule {})",
+        fit.seconds,
+        fit.rule.label()
+    );
+    let sel: Vec<usize> = fit.betas.last().unwrap().iter().map(|&(j, _)| j).collect();
+    let hits = truth.iter().filter(|j| sel.contains(j)).count();
+    println!("selected {} features at λmin, recovering {hits}/{} true", sel.len(), truth.len());
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    println!(
+        "hssr {} — hybrid safe-strong rules for lasso-type problems",
+        env!("CARGO_PKG_VERSION")
+    );
+    println!("methods: {:?}", RuleKind::paper_lasso_methods().map(|r| r.label()));
+    match make_engine(EngineKind::Pjrt, "artifacts") {
+        Ok(e) => println!("pjrt engine: available ({})", e.name()),
+        Err(e) => println!("pjrt engine: unavailable — {e}"),
+    }
+    println!(
+        "threads: {}",
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    );
+    Ok(())
+}
+
+fn main() {
+    let mut args = std::env::args().skip(1);
+    let Some(cmd) = args.next() else { usage() };
+    let mut cfg = Config::default();
+    if let Err(e) = cfg.apply_args(args) {
+        eprintln!("argument error: {e}");
+        std::process::exit(2);
+    }
+    let result = match cmd.as_str() {
+        "fit" => cmd_fit(&cfg),
+        "group" => cmd_group(&cfg),
+        "power" => cmd_power(&cfg),
+        "cv" => cmd_cv(&cfg),
+        "logistic" => cmd_logistic(&cfg),
+        "info" => cmd_info(),
+        _ => usage(),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

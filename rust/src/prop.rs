@@ -1,0 +1,89 @@
+//! A minimal property-testing harness (the offline registry has no
+//! `proptest`, so we provide the 10% of it these tests need).
+//!
+//! [`check`] runs a property over `cases` seeded-random inputs produced by a
+//! generator closure; on failure it retries the failing seed with a
+//! "shrunken" scale factor sequence (generators receive a `scale ∈ (0, 1]`
+//! they should use to reduce structure size), then panics with the smallest
+//! reproducing seed + scale so the case can be replayed deterministically.
+
+use crate::rng::Pcg64;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct PropConfig {
+    /// Number of random cases.
+    pub cases: usize,
+    /// Base seed (every case derives `seed + case_index`).
+    pub seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        PropConfig { cases: 32, seed: 0x5EED }
+    }
+}
+
+/// Outcome of a single property evaluation.
+pub type PropResult = Result<(), String>;
+
+/// Run `property(rng, scale)` over random cases. `scale` is 1.0 for the
+/// main pass; when a case fails, the same seed is retried at scales
+/// 0.5, 0.25, 0.125 to report the smallest still-failing configuration.
+pub fn check<F>(cfg: PropConfig, mut property: F)
+where
+    F: FnMut(&mut Pcg64, f64) -> PropResult,
+{
+    for case in 0..cfg.cases {
+        let seed = cfg.seed.wrapping_add(case as u64);
+        let mut rng = Pcg64::new(seed);
+        if let Err(msg) = property(&mut rng, 1.0) {
+            // shrink-lite: retry at smaller scales with the same seed
+            let mut smallest = (1.0f64, msg.clone());
+            for &scale in &[0.5, 0.25, 0.125] {
+                let mut rng2 = Pcg64::new(seed);
+                if let Err(m2) = property(&mut rng2, scale) {
+                    smallest = (scale, m2);
+                }
+            }
+            panic!(
+                "property failed (seed={seed}, scale={}): {}\nreplay: Pcg64::new({seed})",
+                smallest.0, smallest.1
+            );
+        }
+    }
+}
+
+/// Assert-style helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(PropConfig { cases: 8, seed: 1 }, |rng, _scale| {
+            let x = rng.uniform();
+            prop_assert!((0.0..1.0).contains(&x), "uniform out of range: {x}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        check(PropConfig { cases: 4, seed: 2 }, |rng, _| {
+            let x = rng.uniform();
+            prop_assert!(x < 0.0, "always fails: {x}");
+            Ok(())
+        });
+    }
+}

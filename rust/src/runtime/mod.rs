@@ -1,0 +1,88 @@
+//! Execution engines for the screening scan `z = Xᵀr/n` — the hot compute
+//! of every rule and of KKT checking.
+//!
+//! Two interchangeable engines implement [`ScanEngine`]:
+//!
+//! * [`native::NativeEngine`] — blocked, multi-threaded pure-Rust kernels
+//!   (the default; fastest on CPU-sized problems).
+//! * [`pjrt::PjrtEngine`] — loads the AOT artifacts produced by
+//!   `make artifacts` (JAX/Pallas → HLO text) and executes them through the
+//!   PJRT C API via the `xla` crate. This is the L1/L2/L3 composition path:
+//!   the same kernel validated against the pure-jnp oracle in
+//!   `python/tests` runs inside the Rust coordinator with *no Python at
+//!   runtime*.
+//!
+//! The PJRT engine is tile-based: artifacts are compiled for a fixed
+//! `(N_TILE × P_TILE)` block (AOT requires static shapes); arbitrary
+//! matrices are covered by padding the edge tiles. See
+//! `python/compile/aot.py` for the tile shapes emitted.
+
+pub mod native;
+pub mod pjrt;
+
+use crate::error::Result;
+use crate::linalg::DenseMatrix;
+
+/// A provider of the screening scan.
+///
+/// Not `Send`/`Sync`: the PJRT client wraps raw C-API handles without
+/// thread-safety markers. Multi-threaded callers (the job runner) create
+/// one engine per worker thread.
+pub trait ScanEngine {
+    /// Engine name for reports.
+    fn name(&self) -> &'static str;
+
+    /// `out[k] = x_{idx[k]}ᵀ v / n` over a subset of columns.
+    fn scan_subset(
+        &self,
+        x: &DenseMatrix,
+        v: &[f64],
+        idx: &[usize],
+        out: &mut [f64],
+    ) -> Result<()>;
+
+    /// `out[j] = x_jᵀ v / n` over all columns.
+    fn scan_all(&self, x: &DenseMatrix, v: &[f64], out: &mut [f64]) -> Result<()>;
+}
+
+/// Engine selector used by configs and the CLI.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineKind {
+    /// Pure-Rust blocked kernels.
+    Native,
+    /// AOT JAX/Pallas artifacts through PJRT.
+    Pjrt,
+}
+
+impl EngineKind {
+    /// Parse from a CLI/config string.
+    pub fn parse(s: &str) -> Option<EngineKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "native" => Some(EngineKind::Native),
+            "pjrt" | "xla" => Some(EngineKind::Pjrt),
+            _ => None,
+        }
+    }
+}
+
+/// Build an engine. For [`EngineKind::Pjrt`], `artifact_dir` must contain
+/// the HLO artifacts (default `artifacts/`).
+pub fn make_engine(kind: EngineKind, artifact_dir: &str) -> Result<Box<dyn ScanEngine>> {
+    match kind {
+        EngineKind::Native => Ok(Box::new(native::NativeEngine::new())),
+        EngineKind::Pjrt => Ok(Box::new(pjrt::PjrtEngine::load(artifact_dir)?)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn engine_kind_parsing() {
+        assert_eq!(EngineKind::parse("native"), Some(EngineKind::Native));
+        assert_eq!(EngineKind::parse("PJRT"), Some(EngineKind::Pjrt));
+        assert_eq!(EngineKind::parse("xla"), Some(EngineKind::Pjrt));
+        assert_eq!(EngineKind::parse("gpu"), None);
+    }
+}

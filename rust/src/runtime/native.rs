@@ -1,0 +1,59 @@
+//! The default pure-Rust scan engine.
+
+use super::ScanEngine;
+use crate::error::Result;
+use crate::linalg::{blocked, DenseMatrix};
+
+/// Blocked, multi-threaded Rust kernels (see [`crate::linalg::blocked`]).
+#[derive(Debug, Default)]
+pub struct NativeEngine;
+
+impl NativeEngine {
+    /// Create the engine (stateless).
+    pub fn new() -> Self {
+        NativeEngine
+    }
+}
+
+impl ScanEngine for NativeEngine {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn scan_subset(
+        &self,
+        x: &DenseMatrix,
+        v: &[f64],
+        idx: &[usize],
+        out: &mut [f64],
+    ) -> Result<()> {
+        blocked::scan_subset(x, v, idx, out);
+        Ok(())
+    }
+
+    fn scan_all(&self, x: &DenseMatrix, v: &[f64], out: &mut [f64]) -> Result<()> {
+        blocked::scan_all(x, v, out);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn matches_blocked_kernels() {
+        let mut rng = Pcg64::new(1);
+        let x = DenseMatrix::from_fn(30, 12, |_, _| rng.normal());
+        let v = rng.normal_vec(30);
+        let e = NativeEngine::new();
+        let mut a = vec![0.0; 12];
+        e.scan_all(&x, &v, &mut a).unwrap();
+        assert_eq!(a, blocked::scan_all_vec(&x, &v));
+        let idx = vec![2usize, 9];
+        let mut b = vec![0.0; 2];
+        e.scan_subset(&x, &v, &idx, &mut b).unwrap();
+        assert_eq!(b, vec![a[2], a[9]]);
+    }
+}

@@ -1,0 +1,284 @@
+//! PJRT-backed scan engine: executes the AOT-compiled JAX/Pallas screening
+//! kernel from `artifacts/*.hlo.txt`.
+//!
+//! `make artifacts` lowers the L2 JAX graph (which calls the L1 Pallas
+//! kernel under `interpret=True`) to **HLO text** — the interchange format
+//! that round-trips through xla_extension 0.5.1 (serialized protos from
+//! jax ≥ 0.5 carry 64-bit instruction ids it rejects; the text parser
+//! reassigns ids). This engine discovers artifacts named
+//!
+//! ```text
+//! xtrt_pallas_n{N}_p{P}.hlo.txt  (feature-major Pallas kernel — preferred)
+//! xtr_pallas_n{N}_p{P}.hlo.txt   (row-major Pallas kernel)
+//! xtr_n{N}_p{P}.hlo.txt          (plain-jnp fallback)
+//! ```
+//!
+//! compiles the best one once on the PJRT CPU client, and serves arbitrary
+//! `(n, p)` scans by tiling: each call computes the partial sums
+//! `Xᵀ_tile · v_tile` for a zero-padded tile; Rust accumulates across row
+//! tiles and applies the `1/n` normalization. Padding is exact (zero
+//! rows/columns contribute nothing to the dot products).
+//!
+//! ### §Perf note
+//!
+//! The original engine used the row-major `(N × P)` tile: filling it from
+//! the column-major `DenseMatrix` was a strided scatter (one f64 every
+//! `P·8` bytes) that dominated the profile. The **transposed** artifact
+//! (`xtrt_*`, feature-major `(P × N)`) turns the fill into one contiguous
+//! `copy_from_slice` per feature, and the engine only zeroes the padding
+//! tails instead of the whole 8 MiB buffer. See EXPERIMENTS.md §Perf for
+//! the before/after.
+
+use std::cell::{Cell, RefCell};
+use std::path::Path;
+
+use super::ScanEngine;
+use crate::error::{HssrError, Result};
+use crate::linalg::DenseMatrix;
+
+/// One compiled tile executable.
+struct TileExe {
+    n_tile: usize,
+    p_tile: usize,
+    exe: xla::PjRtLoadedExecutable,
+    /// Whether this artifact embeds the Pallas kernel lowering.
+    pallas: bool,
+    /// Whether the artifact expects the feature-major `(P × N)` layout.
+    transposed: bool,
+}
+
+/// PJRT scan engine (see module docs).
+pub struct PjrtEngine {
+    client: xla::PjRtClient,
+    tile: TileExe,
+    /// Reusable tile buffer (row-major `(n_tile, p_tile)` or feature-major
+    /// `(p_tile, n_tile)` depending on the artifact).
+    scratch: RefCell<Vec<f64>>,
+    /// High-water mark of columns written in `scratch` (stale-data guard).
+    dirty_cols: Cell<usize>,
+}
+
+/// Parse `xtr[t][_pallas]_n{N}_p{P}.hlo.txt` → `(transposed, pallas, n, p)`.
+fn parse_artifact_name(name: &str) -> Option<(bool, bool, usize, usize)> {
+    let stem = name.strip_suffix(".hlo.txt")?;
+    let (transposed, pallas, rest) = if let Some(r) = stem.strip_prefix("xtrt_pallas_") {
+        (true, true, r)
+    } else if let Some(r) = stem.strip_prefix("xtr_pallas_") {
+        (false, true, r)
+    } else if let Some(r) = stem.strip_prefix("xtrt_") {
+        (true, false, r)
+    } else if let Some(r) = stem.strip_prefix("xtr_") {
+        (false, false, r)
+    } else {
+        return None;
+    };
+    let mut it = rest.split('_');
+    let n = it.next()?.strip_prefix('n')?.parse().ok()?;
+    let p = it.next()?.strip_prefix('p')?.parse().ok()?;
+    Some((transposed, pallas, n, p))
+}
+
+impl PjrtEngine {
+    /// Discover and compile artifacts from `dir`. Preference order:
+    /// transposed-Pallas, row-major Pallas, plain jnp; larger tiles win ties.
+    pub fn load(dir: &str) -> Result<PjrtEngine> {
+        let client = xla::PjRtClient::cpu()?;
+        let mut best: Option<(bool, bool, usize, usize, std::path::PathBuf)> = None;
+        let dir_path = Path::new(dir);
+        if !dir_path.is_dir() {
+            return Err(HssrError::Artifact(format!(
+                "artifact directory '{dir}' not found — run `make artifacts` first"
+            )));
+        }
+        for entry in std::fs::read_dir(dir_path)? {
+            let entry = entry?;
+            let fname = entry.file_name();
+            let Some(name) = fname.to_str() else { continue };
+            if let Some((t, pl, n, p)) = parse_artifact_name(name) {
+                let better = match &best {
+                    None => true,
+                    Some((bt, bp, bn, bpp, _)) => (t, pl, n * p) > (*bt, *bp, bn * bpp),
+                };
+                if better {
+                    best = Some((t, pl, n, p, entry.path()));
+                }
+            }
+        }
+        let Some((transposed, pallas, n_tile, p_tile, path)) = best else {
+            return Err(HssrError::Artifact(format!(
+                "no xtr artifacts in '{dir}' — run `make artifacts`"
+            )));
+        };
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| HssrError::Artifact("non-utf8 path".into()))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp)?;
+        Ok(PjrtEngine {
+            client,
+            tile: TileExe { n_tile, p_tile, exe, pallas, transposed },
+            scratch: RefCell::new(vec![0.0; n_tile * p_tile]),
+            dirty_cols: Cell::new(0),
+        })
+    }
+
+    /// Tile dimensions `(n_tile, p_tile)` of the compiled artifact.
+    pub fn tile_shape(&self) -> (usize, usize) {
+        (self.tile.n_tile, self.tile.p_tile)
+    }
+
+    /// Whether the loaded artifact embeds the Pallas kernel.
+    pub fn is_pallas(&self) -> bool {
+        self.tile.pallas
+    }
+
+    /// Whether the loaded artifact uses the optimized feature-major layout.
+    pub fn is_transposed(&self) -> bool {
+        self.tile.transposed
+    }
+
+    /// Fill the scratch tile with columns `idx` over rows `[i0, i0+rows)`,
+    /// zeroing exactly the possibly-stale padding.
+    fn fill_tile(&self, x: &DenseMatrix, idx: &[usize], i0: usize, rows: usize) {
+        let (nt, pt) = (self.tile.n_tile, self.tile.p_tile);
+        let mut buf = self.scratch.borrow_mut();
+        if self.tile.transposed {
+            // feature-major (P × N): contiguous memcpy per feature.
+            for (k, &j) in idx.iter().enumerate() {
+                let dst = &mut buf[k * nt..(k + 1) * nt];
+                dst[..rows].copy_from_slice(&x.col(j)[i0..i0 + rows]);
+                dst[rows..].iter_mut().for_each(|v| *v = 0.0);
+            }
+            // clear columns written by a previous, wider call
+            for k in idx.len()..self.dirty_cols.get() {
+                buf[k * nt..(k + 1) * nt].iter_mut().for_each(|v| *v = 0.0);
+            }
+        } else {
+            // row-major (N × P): strided scatter (legacy layout).
+            let stale = self.dirty_cols.get().max(idx.len());
+            for row in buf.chunks_exact_mut(pt).take(rows) {
+                row[..stale].iter_mut().for_each(|v| *v = 0.0);
+            }
+            for row in buf.chunks_exact_mut(pt).skip(rows) {
+                row[..stale].iter_mut().for_each(|v| *v = 0.0);
+            }
+            for (k, &j) in idx.iter().enumerate() {
+                let col = &x.col(j)[i0..i0 + rows];
+                for (di, &val) in col.iter().enumerate() {
+                    buf[di * pt + k] = val;
+                }
+            }
+        }
+        self.dirty_cols.set(idx.len());
+    }
+
+    /// Execute one padded tile against a padded `v` device buffer; returns
+    /// the `p_tile` partial sums for rows `[i0, i0+rows)`.
+    ///
+    /// §Perf: inputs go through `buffer_from_host_buffer` + `execute_b`
+    /// rather than `Literal` + `execute` — one host copy instead of three
+    /// (Literal::vec1, reshape, and the implicit transfer inside execute).
+    fn run_tile(
+        &self,
+        x: &DenseMatrix,
+        v_buf: &xla::PjRtBuffer,
+        idx: &[usize],
+        i0: usize,
+        rows: usize,
+    ) -> Result<Vec<f64>> {
+        let (nt, pt) = (self.tile.n_tile, self.tile.p_tile);
+        debug_assert!(rows <= nt && idx.len() <= pt);
+        self.fill_tile(x, idx, i0, rows);
+        let buf = self.scratch.borrow();
+        let dims: [usize; 2] =
+            if self.tile.transposed { [pt, nt] } else { [nt, pt] };
+        let x_buf = self.client.buffer_from_host_buffer::<f64>(&buf, &dims, None)?;
+        drop(buf);
+        let result = self.tile.exe.execute_b(&[&x_buf, v_buf])?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f64>()?)
+    }
+}
+
+impl ScanEngine for PjrtEngine {
+    fn name(&self) -> &'static str {
+        match (self.tile.pallas, self.tile.transposed) {
+            (true, true) => "pjrt-pallas-t",
+            (true, false) => "pjrt-pallas",
+            (false, true) => "pjrt-t",
+            (false, false) => "pjrt",
+        }
+    }
+
+    fn scan_subset(
+        &self,
+        x: &DenseMatrix,
+        v: &[f64],
+        idx: &[usize],
+        out: &mut [f64],
+    ) -> Result<()> {
+        assert_eq!(idx.len(), out.len());
+        let n = x.nrows();
+        let inv_n = 1.0 / n as f64;
+        let (nt, pt) = (self.tile.n_tile, self.tile.p_tile);
+        out.iter_mut().for_each(|o| *o = 0.0);
+        let mut i0 = 0;
+        while i0 < n {
+            let rows = nt.min(n - i0);
+            let mut vbuf = vec![0.0f64; nt];
+            vbuf[..rows].copy_from_slice(&v[i0..i0 + rows]);
+            let v_buf = self.client.buffer_from_host_buffer::<f64>(&vbuf, &[nt], None)?;
+            for (chunk_idx, chunk_out) in idx.chunks(pt).zip(out.chunks_mut(pt)) {
+                let partial = self.run_tile(x, &v_buf, chunk_idx, i0, rows)?;
+                for (o, pv) in chunk_out.iter_mut().zip(&partial) {
+                    *o += pv;
+                }
+            }
+            i0 += rows;
+        }
+        for o in out.iter_mut() {
+            *o *= inv_n;
+        }
+        Ok(())
+    }
+
+    fn scan_all(&self, x: &DenseMatrix, v: &[f64], out: &mut [f64]) -> Result<()> {
+        let idx: Vec<usize> = (0..x.ncols()).collect();
+        self.scan_subset(x, v, &idx, out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifact_name_parsing() {
+        assert_eq!(
+            parse_artifact_name("xtr_n512_p2048.hlo.txt"),
+            Some((false, false, 512, 2048))
+        );
+        assert_eq!(
+            parse_artifact_name("xtr_pallas_n256_p1024.hlo.txt"),
+            Some((false, true, 256, 1024))
+        );
+        assert_eq!(
+            parse_artifact_name("xtrt_pallas_n512_p2048.hlo.txt"),
+            Some((true, true, 512, 2048))
+        );
+        assert_eq!(parse_artifact_name("model.hlo.txt"), None);
+        assert_eq!(parse_artifact_name("xtr_n512_p2048.bin"), None);
+    }
+
+    #[test]
+    fn missing_dir_is_artifact_error() {
+        match PjrtEngine::load("/nonexistent-artifacts") {
+            Err(HssrError::Artifact(_)) => {}
+            Err(other) => panic!("wrong error kind: {other}"),
+            Ok(_) => panic!("load should fail on a missing directory"),
+        }
+    }
+
+    // End-to-end numeric agreement with the native engine is covered by
+    // rust/tests/pjrt_engine.rs (requires `make artifacts`).
+}

@@ -1,0 +1,217 @@
+//! Basic EDPP (BEDPP) safe rule — Theorem 2.1 (lasso) and Theorem 4.1
+//! (elastic net) of the paper, simplified under standardization (2).
+//!
+//! BEDPP is *non-sequential*: screening at any λ needs only the one-time
+//! `O(np)` precompute (`Xᵀy`, `Xᵀx_*`, `‖y‖²`) held in
+//! [`super::SafeContext`], then `O(p)` per λ — hence `O(np)` for the whole
+//! path (Table 1). Its power decays as λ decreases and the right-hand side
+//! of rule (9) eventually goes non-positive; [`Bedpp::dead`] reports this so
+//! Algorithm 1 can stop invoking it (the `Flag` shutoff).
+
+use super::{PrevSolution, SafeContext, SafeRule};
+use crate::linalg::DenseMatrix;
+use crate::solver::Penalty;
+
+/// The BEDPP rule (lasso Thm 2.1; elastic net Thm 4.1).
+#[derive(Debug, Default)]
+pub struct Bedpp {
+    dead: bool,
+}
+
+impl Bedpp {
+    /// Create a fresh rule.
+    pub fn new() -> Self {
+        Bedpp { dead: false }
+    }
+
+    /// Evaluate the rule at `lam`, clearing `survive[j]` for discarded
+    /// features. Standalone entry point (also used by the hybrid rules and
+    /// the Figure-1 power measurement).
+    pub fn screen_at(ctx: &SafeContext, lam: f64, survive: &mut [bool]) -> usize {
+        assert_eq!(survive.len(), ctx.p);
+        assert!(
+            !ctx.xtx_star.is_empty(),
+            "BEDPP requires SafeContext built with need_star = true"
+        );
+        let n = ctx.n as f64;
+        let lm = ctx.lambda_max;
+        let s = ctx.sign_star;
+        let (lhs_a, lhs_b, rhs) = match ctx.penalty {
+            Penalty::Lasso => {
+                // |(λm+λ)·xty_j − (λm−λ)·s·λm·xtx*_j| < 2nλλm − (λm−λ)√(n‖y‖²−n²λm²)
+                let root = (n * ctx.y_sq - n * n * lm * lm).max(0.0).sqrt();
+                ((lm + lam), (lm - lam) * s * lm, 2.0 * n * lam * lm - (lm - lam) * root)
+            }
+            Penalty::ElasticNet { alpha } => {
+                // Thm 4.1: the x* coefficient picks up α/(1+λ(1−α)); the RHS
+                // root picks up the augmented-row norm (see Appendix C).
+                let aug = 1.0 + lam * (1.0 - alpha);
+                let root = (n * ctx.y_sq * aug - n * n * alpha * alpha * lm * lm)
+                    .max(0.0)
+                    .sqrt();
+                (
+                    (lm + lam),
+                    (lm - lam) * s * alpha * lm / aug,
+                    2.0 * n * alpha * lam * lm - (lm - lam) * root,
+                )
+            }
+        };
+        if rhs <= 0.0 {
+            return 0; // rule is powerless at this λ
+        }
+        let mut discarded = 0;
+        for j in 0..ctx.p {
+            if !survive[j] || j == ctx.star {
+                continue; // x* is never rejected (Thm 4.1 remark)
+            }
+            let lhs = (lhs_a * ctx.xty[j] - lhs_b * ctx.xtx_star[j]).abs();
+            if lhs < rhs {
+                survive[j] = false;
+                discarded += 1;
+            }
+        }
+        discarded
+    }
+
+    /// The λ below which the lasso rule's RHS is non-positive (the rule is
+    /// provably powerless). Useful for tests and for the Figure-1 analysis.
+    pub fn shutoff_lambda(ctx: &SafeContext) -> f64 {
+        let n = ctx.n as f64;
+        let lm = ctx.lambda_max;
+        let root = (n * ctx.y_sq - n * n * lm * lm).max(0.0).sqrt();
+        // 2nλλm = (λm−λ)·root  ⟺  λ(2nλm + root) = λm·root
+        lm * root / (2.0 * n * lm + root)
+    }
+}
+
+impl SafeRule for Bedpp {
+    fn name(&self) -> &'static str {
+        "BEDPP"
+    }
+
+    fn screen(
+        &mut self,
+        _x: &DenseMatrix,
+        ctx: &SafeContext,
+        _prev: &PrevSolution<'_>,
+        lam_next: f64,
+        survive: &mut [bool],
+    ) -> usize {
+        let d = Bedpp::screen_at(ctx, lam_next, survive);
+        if d == 0 {
+            // RHS is monotone decreasing in λ for the lasso; once powerless,
+            // always powerless. (For enet we use the same empirical shutoff,
+            // mirroring Algorithm 1's |S| = p test.)
+            self.dead = true;
+        }
+        d
+    }
+
+    fn dead(&self) -> bool {
+        self.dead
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DataSpec;
+    use crate::linalg::ops;
+
+    fn ctx_for(seed: u64, penalty: Penalty) -> (crate::data::Dataset, SafeContext) {
+        let ds = DataSpec::synthetic(60, 40, 4).generate(seed);
+        let ctx = SafeContext::build(&ds.x, &ds.y, penalty, true);
+        (ds, ctx)
+    }
+
+    #[test]
+    fn discards_at_high_lambda_not_at_low() {
+        let (_, ctx) = ctx_for(1, Penalty::Lasso);
+        let mut hi = vec![true; ctx.p];
+        let d_hi = Bedpp::screen_at(&ctx, 0.95 * ctx.lambda_max, &mut hi);
+        assert!(d_hi > 0, "BEDPP should discard near λmax");
+        let mut lo = vec![true; ctx.p];
+        let d_lo = Bedpp::screen_at(&ctx, 0.05 * ctx.lambda_max, &mut lo);
+        assert_eq!(d_lo, 0, "BEDPP must be powerless at tiny λ");
+    }
+
+    #[test]
+    fn shutoff_lambda_brackets_power() {
+        let (_, ctx) = ctx_for(2, Penalty::Lasso);
+        let cut = Bedpp::shutoff_lambda(&ctx);
+        assert!(cut > 0.0 && cut < ctx.lambda_max);
+        let mut below = vec![true; ctx.p];
+        assert_eq!(Bedpp::screen_at(&ctx, cut * 0.999, &mut below), 0);
+    }
+
+    #[test]
+    fn star_feature_never_rejected() {
+        let (_, ctx) = ctx_for(3, Penalty::Lasso);
+        let mut survive = vec![true; ctx.p];
+        Bedpp::screen_at(&ctx, 0.99 * ctx.lambda_max, &mut survive);
+        assert!(survive[ctx.star]);
+    }
+
+    /// Safety: BEDPP must keep every feature with |x_jᵀ θ̂(λ)| = λ active
+    /// potential — verified against the *exact* dual test on a problem small
+    /// enough to solve by brute coordinate descent elsewhere; here we check
+    /// the weaker (but exact) implication with the known dual at λmax:
+    /// screening at λ = λmax must keep x*.
+    #[test]
+    fn at_lambda_max_keeps_argmax() {
+        let (_, ctx) = ctx_for(4, Penalty::Lasso);
+        let mut survive = vec![true; ctx.p];
+        Bedpp::screen_at(&ctx, ctx.lambda_max, &mut survive);
+        assert!(survive[ctx.star]);
+    }
+
+    #[test]
+    fn enet_rule_runs_and_keeps_star() {
+        let (_, ctx) = ctx_for(5, Penalty::ElasticNet { alpha: 0.5 });
+        let mut survive = vec![true; ctx.p];
+        let d = Bedpp::screen_at(&ctx, 0.9 * ctx.lambda_max, &mut survive);
+        assert!(d > 0);
+        assert!(survive[ctx.star]);
+    }
+
+    #[test]
+    fn dead_flag_sets_once_powerless() {
+        let (ds, ctx) = ctx_for(6, Penalty::Lasso);
+        let mut rule = Bedpp::new();
+        let r = ds.y.clone();
+        let prev = PrevSolution { lambda: ctx.lambda_max, r: &r };
+        let mut survive = vec![true; ctx.p];
+        rule.screen(&ds.x, &ctx, &prev, 0.01 * ctx.lambda_max, &mut survive);
+        assert!(rule.dead());
+    }
+
+    /// Directly verify rule (9) against its geometric origin: discarded j
+    /// must satisfy sup over the EDPP ball of |x_jᵀθ| < 1, using
+    /// θ ∈ B(y/(nλm) + v⊥/2, ‖v⊥‖/2) — recomputed from first principles.
+    #[test]
+    fn rule_matches_first_principles_ball() {
+        let (ds, ctx) = ctx_for(7, Penalty::Lasso);
+        let n = ctx.n as f64;
+        let lam = 0.8 * ctx.lambda_max;
+        let lm = ctx.lambda_max;
+        // v2⊥ = (1/(nλ) − 1/(nλm)) (y − s·λm·x*)
+        let coef = 1.0 / (n * lam) - 1.0 / (n * lm);
+        let xstar = ds.x.col(ctx.star);
+        let v2p: Vec<f64> = ds
+            .y
+            .iter()
+            .zip(xstar)
+            .map(|(yi, xs)| coef * (yi - ctx.sign_star * lm * xs))
+            .collect();
+        let v2p_norm = ops::nrm2(&v2p);
+        let mut survive = vec![true; ctx.p];
+        Bedpp::screen_at(&ctx, lam, &mut survive);
+        for j in 0..ctx.p {
+            let center_dot = ctx.xty[j] / (n * lm) + 0.5 * ops::dot(ds.x.col(j), &v2p);
+            let sup = center_dot.abs() + 0.5 * v2p_norm * (n).sqrt();
+            if !survive[j] {
+                assert!(sup < 1.0 + 1e-9, "feature {j} discarded but sup = {sup}");
+            }
+        }
+    }
+}

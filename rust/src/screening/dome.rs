@@ -1,0 +1,211 @@
+//! The Dome safe test (Xiang & Ramadge 2012; Xiang et al. 2016).
+//!
+//! The paper defers the simplified Dome derivation to its supplement; we
+//! reconstruct it here in the paper's scaling. The dual optimum `θ̂(λ)` is
+//! the projection of `y/(nλ)` onto the dual-feasible polytope, so it lies in
+//! the **dome**
+//!
+//! ```text
+//! D(λ) = B(c, R) ∩ { θ : s·x*ᵀθ ≤ 1 },     c = y/(nλ),
+//!        R = ‖y‖(1/(nλ) − 1/(nλm)),        s = sign(x*ᵀy),
+//! ```
+//!
+//! because (i) any feasible point is at least as far from `y/(nλ)` as the
+//! projection, and `y/(nλm)` is feasible — giving the ball — and (ii) the
+//! feasibility half-space through `x*`. Feature `j` is discarded when
+//! `sup_{θ∈D} |x_jᵀθ| < 1` (the KKT certificate of §1).
+//!
+//! The sup of a linear functional `gᵀθ` over a ball-cap has the standard
+//! closed form: with unit normal `n_h = s·x*/√n`, offset `ψ = 1/√n`, and
+//! `t = (ψ − n_hᵀc)/R`, either the unconstrained ball maximizer already
+//! satisfies the half-space (`gᵀn_h ≤ t‖g‖`), giving `gᵀc + R‖g‖`, or the
+//! maximum sits on the cap rim:
+//! `gᵀc + R(t·gᵀn_h + √(1−t²)·√(‖g‖² − (gᵀn_h)²))`.
+//!
+//! Under standardization (2), `t = −√n·λm/‖y‖` — independent of λ (a small
+//! bonus of this scaling; Cauchy–Schwarz gives `|t| ≤ 1`).
+//!
+//! Like BEDPP, the Dome test needs only `Xᵀy` and `Xᵀx*` — `O(np)` once,
+//! `O(p)` per λ — but it is strictly weaker in practice (Figure 1), dying
+//! near `λ/λmax ≈ 0.6` where BEDPP lasts to ≈ 0.45.
+
+use super::{PrevSolution, SafeContext, SafeRule};
+use crate::linalg::DenseMatrix;
+
+/// The Dome safe test.
+#[derive(Debug, Default)]
+pub struct DomeTest {
+    dead: bool,
+}
+
+/// Sup of `gᵀθ` over the dome, parameterized by scalars (see module docs):
+/// `gc = gᵀc`, `gn = gᵀn_h`, `gnorm = ‖g‖`, ball radius `r`, cap offset `t`.
+#[inline]
+fn dome_sup(gc: f64, gn: f64, gnorm: f64, r: f64, t: f64) -> f64 {
+    if r <= 0.0 {
+        return gc; // degenerate ball: the single point c
+    }
+    if gn <= t * gnorm {
+        gc + r * gnorm
+    } else {
+        let cross = (gnorm * gnorm - gn * gn).max(0.0).sqrt();
+        gc + r * (t * gn + (1.0 - t * t).max(0.0).sqrt() * cross)
+    }
+}
+
+impl DomeTest {
+    /// Create a fresh rule.
+    pub fn new() -> Self {
+        DomeTest { dead: false }
+    }
+
+    /// Evaluate the test at `lam`, clearing `survive[j]` for discarded
+    /// features; standalone entry point for the hybrid rule and Figure 1.
+    ///
+    /// For the elastic net the test runs in the Theorem-4.1 augmented design
+    /// `x̃_j = (x_j, √(nλ(1−α))·e_j)`: the augmented column norm becomes
+    /// `√(n·aug)` with `aug = 1 + λ(1−α)`, the dual scaling picks up α, and
+    /// cross products `x̃_jᵀx̃_* = x_jᵀx_*` / `x̃_jᵀỹ = x_jᵀy` are unchanged
+    /// (the augmented rows hit zeros). Everything else is the same dome.
+    pub fn screen_at(ctx: &SafeContext, lam: f64, survive: &mut [bool]) -> usize {
+        assert_eq!(survive.len(), ctx.p);
+        assert!(
+            !ctx.xtx_star.is_empty(),
+            "Dome requires SafeContext built with need_star = true"
+        );
+        let n = ctx.n as f64;
+        let alpha = ctx.penalty.alpha();
+        let aug = 1.0 + lam * (1.0 - alpha); // = 1 for the lasso
+        let gnorm = (n * aug).sqrt();
+        let lm = ctx.lambda_max;
+        let y_norm = ctx.y_sq.sqrt();
+        // ball: center ỹ/(nαλ), radius ‖y‖(λm−λ)/(nαλλm)
+        let r = y_norm * (lm - lam) / (n * alpha * lam * lm);
+        // cap offset t = −√n·αλm/(√aug·‖y‖)  (λ-independent for the lasso)
+        let t = (-(n.sqrt()) * alpha * lm / (aug.sqrt() * y_norm)).max(-1.0);
+        let s = ctx.sign_star;
+        let mut discarded = 0;
+        for j in 0..ctx.p {
+            if !survive[j] || j == ctx.star {
+                continue;
+            }
+            let gc = ctx.xty[j] / (n * alpha * lam);
+            let gn = s * ctx.xtx_star[j] / gnorm;
+            let sup_pos = dome_sup(gc, gn, gnorm, r, t);
+            let sup_neg = dome_sup(-gc, -gn, gnorm, r, t);
+            if sup_pos < 1.0 && sup_neg < 1.0 {
+                survive[j] = false;
+                discarded += 1;
+            }
+        }
+        discarded
+    }
+}
+
+impl SafeRule for DomeTest {
+    fn name(&self) -> &'static str {
+        "Dome"
+    }
+
+    fn screen(
+        &mut self,
+        _x: &DenseMatrix,
+        ctx: &SafeContext,
+        _prev: &PrevSolution<'_>,
+        lam_next: f64,
+        survive: &mut [bool],
+    ) -> usize {
+        let d = DomeTest::screen_at(ctx, lam_next, survive);
+        if d == 0 {
+            self.dead = true;
+        }
+        d
+    }
+
+    fn dead(&self) -> bool {
+        self.dead
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DataSpec;
+    use crate::screening::bedpp::Bedpp;
+    use crate::solver::Penalty;
+
+    fn setup(seed: u64) -> SafeContext {
+        let ds = DataSpec::synthetic(60, 40, 4).generate(seed);
+        SafeContext::build(&ds.x, &ds.y, Penalty::Lasso, true)
+    }
+
+    #[test]
+    fn sup_formula_ball_interior_case() {
+        // g aligned away from the cap normal: unconstrained max.
+        let sup = dome_sup(0.5, -10.0, 10.0, 1.0, -0.1);
+        assert!((sup - 10.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sup_formula_rim_case_bounded_by_ball() {
+        // Rim maximum is always ≤ unconstrained ball maximum.
+        let rim = dome_sup(0.5, 9.0, 10.0, 1.0, -0.1);
+        assert!(rim <= 0.5 + 10.0 + 1e-12);
+        assert!(rim < 10.5); // strictly cut
+    }
+
+    #[test]
+    fn discards_at_high_lambda_then_dies() {
+        let ctx = setup(1);
+        let mut hi = vec![true; ctx.p];
+        assert!(DomeTest::screen_at(&ctx, 0.95 * ctx.lambda_max, &mut hi) > 0);
+        let mut lo = vec![true; ctx.p];
+        assert_eq!(DomeTest::screen_at(&ctx, 0.05 * ctx.lambda_max, &mut lo), 0);
+    }
+
+    /// The dome is a subset of the BEDPP analysis only in spirit; what must
+    /// hold *exactly* is safety: every feature that the exact dual solution
+    /// would keep is kept. Proxy check (exact at λmax): x* survives, and at
+    /// λ = λmax nothing with |x_jᵀy|/n = λm is discarded.
+    #[test]
+    fn star_always_survives() {
+        let ctx = setup(2);
+        for f in [1.0, 0.9, 0.7, 0.5] {
+            let mut survive = vec![true; ctx.p];
+            DomeTest::screen_at(&ctx, f * ctx.lambda_max, &mut survive);
+            assert!(survive[ctx.star], "star discarded at {f}λmax");
+        }
+    }
+
+    /// Figure 1's qualitative ordering: Dome discards fewer features than
+    /// BEDPP at moderate λ, and shuts off earlier.
+    #[test]
+    fn weaker_than_bedpp() {
+        let ctx = setup(3);
+        let mut total_dome = 0usize;
+        let mut total_bedpp = 0usize;
+        for i in 1..=20 {
+            let lam = ctx.lambda_max * (1.0 - 0.045 * i as f64);
+            let mut sd = vec![true; ctx.p];
+            total_dome += DomeTest::screen_at(&ctx, lam, &mut sd);
+            let mut sb = vec![true; ctx.p];
+            total_bedpp += Bedpp::screen_at(&ctx, lam, &mut sb);
+        }
+        assert!(
+            total_dome <= total_bedpp,
+            "dome={total_dome} bedpp={total_bedpp}"
+        );
+    }
+
+    #[test]
+    fn degenerate_ball_at_lambda_max() {
+        let ctx = setup(4);
+        let mut survive = vec![true; ctx.p];
+        // At λ = λmax the ball radius is 0; the test reduces to
+        // |x_jᵀy|/(nλm) < 1, which discards every non-argmax feature with
+        // strictly smaller correlation — all safe since β̂(λmax) = 0.
+        let d = DomeTest::screen_at(&ctx, ctx.lambda_max, &mut survive);
+        assert!(d > 0);
+        assert!(survive[ctx.star]);
+    }
+}

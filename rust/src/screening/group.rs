@@ -1,0 +1,383 @@
+//! Group-lasso screening rules — §4.2 of the paper.
+//!
+//! Under the two-level standardization ((2) + group orthonormalization
+//! (19), `X_gᵀX_g/n = I`), the paper derives:
+//!
+//! * group SSR (rule (20)) — see [`super::ssr::group_strong_set`];
+//! * group BEDPP (Theorem 4.2, rule (22)) — [`GroupBedpp`];
+//! * and the group-lasso analogue of the sequential EDPP rule (Wang et al.
+//!   2015, Thm 20/Cor 21 applied to the group dual) — [`GroupSedpp`].
+//!
+//! Note on Thm 4.2: the paper's appendix asserts `‖X_g‖ = n` "implied by
+//! (19)"; condition (19) makes every singular value of `X_g` equal `√n`, so
+//! the operator norm is `√n`. Using `√n` reproduces the stated rule (22)
+//! exactly, confirming `n` is a typo (see DESIGN.md §5).
+
+use super::PrevSolution;
+use crate::data::GroupLayout;
+use crate::linalg::{blocked, ops, DenseMatrix};
+
+/// Quantities shared by the group safe rules, computed once per fit
+/// (`O(np)`).
+#[derive(Clone, Debug)]
+pub struct GroupSafeContext {
+    /// Observations.
+    pub n: usize,
+    /// Total columns.
+    pub p: usize,
+    /// Group layout.
+    pub layout: GroupLayout,
+    /// Centered response.
+    pub y: Vec<f64>,
+    /// `x_jᵀy` per column.
+    pub xty: Vec<f64>,
+    /// `‖X_gᵀy‖²` per group.
+    pub group_xty_sq: Vec<f64>,
+    /// `yᵀX_gX_gᵀv̄ = (X_gᵀy)·(X_gᵀv̄)` per group, with `v̄ = X_*X_*ᵀy`.
+    pub yt_xg_xgt_vbar: Vec<f64>,
+    /// `‖X_gᵀv̄‖²` per group.
+    pub xgt_vbar_sq: Vec<f64>,
+    /// `‖y‖²`.
+    pub y_sq: f64,
+    /// `λ_max = max_g ‖X_gᵀy‖/(n√W_g)`.
+    pub lambda_max: f64,
+    /// Index of the maximizing group `*`.
+    pub star: usize,
+    /// `W_*` (size of the maximizing group).
+    pub w_star: usize,
+}
+
+impl GroupSafeContext {
+    /// Build the context (two `O(np)` scans: `Xᵀy` and `Xᵀv̄`).
+    pub fn build(x: &DenseMatrix, y: &[f64], layout: &GroupLayout) -> GroupSafeContext {
+        let n = x.nrows();
+        let p = x.ncols();
+        let g_count = layout.num_groups();
+        let mut xty = vec![0.0; p];
+        blocked::scan_all(x, y, &mut xty);
+        for v in xty.iter_mut() {
+            *v *= n as f64;
+        }
+        let mut group_xty_sq = vec![0.0; g_count];
+        let mut lambda_max = 0.0;
+        let mut star = 0;
+        for g in 0..g_count {
+            let ss: f64 = layout.range(g).map(|j| xty[j] * xty[j]).sum();
+            group_xty_sq[g] = ss;
+            let crit = ss.sqrt() / (n as f64 * (layout.sizes[g] as f64).sqrt());
+            if crit > lambda_max {
+                lambda_max = crit;
+                star = g;
+            }
+        }
+        // v̄ = X_* X_*ᵀ y  (n-vector), then Xᵀv̄ scan.
+        let mut vbar = vec![0.0; n];
+        for j in layout.range(star) {
+            ops::axpy(xty[j], x.col(j), &mut vbar);
+        }
+        let mut xtv = vec![0.0; p];
+        blocked::scan_all(x, &vbar, &mut xtv);
+        for v in xtv.iter_mut() {
+            *v *= n as f64;
+        }
+        let mut yt_xg_xgt_vbar = vec![0.0; g_count];
+        let mut xgt_vbar_sq = vec![0.0; g_count];
+        for g in 0..g_count {
+            let mut dotv = 0.0;
+            let mut ssv = 0.0;
+            for j in layout.range(g) {
+                dotv += xty[j] * xtv[j];
+                ssv += xtv[j] * xtv[j];
+            }
+            yt_xg_xgt_vbar[g] = dotv;
+            xgt_vbar_sq[g] = ssv;
+        }
+        GroupSafeContext {
+            n,
+            p,
+            layout: layout.clone(),
+            y: y.to_vec(),
+            xty,
+            group_xty_sq,
+            yt_xg_xgt_vbar,
+            xgt_vbar_sq,
+            y_sq: ops::nrm2_sq(y),
+            lambda_max,
+            star,
+            w_star: layout.sizes[star],
+        }
+    }
+}
+
+/// A group-level safe rule; `survive` has one entry per *group*.
+pub trait GroupSafeRule: Send {
+    /// Rule name for reports.
+    fn name(&self) -> &'static str;
+    /// Screen groups at `lam_next`; returns groups discarded by this call.
+    fn screen(
+        &mut self,
+        x: &DenseMatrix,
+        ctx: &GroupSafeContext,
+        prev: &PrevSolution<'_>,
+        lam_next: f64,
+        survive: &mut [bool],
+    ) -> usize;
+    /// Shutoff flag (Algorithm 1 `Flag`).
+    fn dead(&self) -> bool;
+}
+
+/// Group BEDPP — Theorem 4.2, rule (22). Non-sequential, `O(1)` per group
+/// per λ after the context precompute.
+#[derive(Debug, Default)]
+pub struct GroupBedpp {
+    dead: bool,
+}
+
+impl GroupBedpp {
+    /// Create a fresh rule.
+    pub fn new() -> Self {
+        GroupBedpp { dead: false }
+    }
+
+    /// Standalone evaluation at `lam` (used by Figure-1-style analyses).
+    pub fn screen_at(ctx: &GroupSafeContext, lam: f64, survive: &mut [bool]) -> usize {
+        assert_eq!(survive.len(), ctx.layout.num_groups());
+        let n = ctx.n as f64;
+        let lm = ctx.lambda_max;
+        let root = (n * ctx.y_sq - n * n * lm * lm * ctx.w_star as f64).max(0.0).sqrt();
+        let mut discarded = 0;
+        for g in 0..survive.len() {
+            if !survive[g] || g == ctx.star {
+                continue;
+            }
+            let wg = ctx.layout.sizes[g] as f64;
+            let rhs = 2.0 * n * lam * lm * wg.sqrt() - (lm - lam) * root;
+            if rhs <= 0.0 {
+                continue;
+            }
+            let lhs_sq = (lam + lm) * (lam + lm) * ctx.group_xty_sq[g]
+                - 2.0 * (lm * lm - lam * lam) * ctx.yt_xg_xgt_vbar[g] / n
+                + (lm - lam) * (lm - lam) * ctx.xgt_vbar_sq[g] / (n * n);
+            if lhs_sq.max(0.0).sqrt() < rhs {
+                survive[g] = false;
+                discarded += 1;
+            }
+        }
+        discarded
+    }
+}
+
+impl GroupSafeRule for GroupBedpp {
+    fn name(&self) -> &'static str {
+        "gBEDPP"
+    }
+
+    fn screen(
+        &mut self,
+        _x: &DenseMatrix,
+        ctx: &GroupSafeContext,
+        _prev: &PrevSolution<'_>,
+        lam_next: f64,
+        survive: &mut [bool],
+    ) -> usize {
+        let d = GroupBedpp::screen_at(ctx, lam_next, survive);
+        if d == 0 {
+            self.dead = true;
+        }
+        d
+    }
+
+    fn dead(&self) -> bool {
+        self.dead
+    }
+}
+
+/// Group SEDPP — the sequential EDPP rule on the group dual. Needs a full
+/// `O(np)` scan per λ, like its lasso counterpart.
+#[derive(Debug, Default)]
+pub struct GroupSedpp {
+    scratch: Vec<f64>,
+    dead: bool,
+}
+
+impl GroupSedpp {
+    /// Create a fresh rule.
+    pub fn new() -> Self {
+        GroupSedpp { scratch: Vec::new(), dead: false }
+    }
+
+    /// Evaluate at `lam_next` given the previous residual; public for the
+    /// power analyses.
+    pub fn screen_with(
+        &mut self,
+        x: &DenseMatrix,
+        ctx: &GroupSafeContext,
+        prev: &PrevSolution<'_>,
+        lam_next: f64,
+        survive: &mut [bool],
+    ) -> usize {
+        let n = ctx.n as f64;
+        let mut xb_sq = 0.0;
+        let mut a = 0.0;
+        for (yi, ri) in ctx.y.iter().zip(prev.r) {
+            let f = yi - ri;
+            xb_sq += f * f;
+            a += yi * f;
+        }
+        if xb_sq < 1e-12 {
+            return GroupBedpp::screen_at(ctx, lam_next, survive);
+        }
+        let lam_k = prev.lambda;
+        let c = (lam_k - lam_next) / (lam_k * lam_next);
+        let v2p_norm = (c / n) * (ctx.y_sq - a * a / xb_sq).max(0.0).sqrt();
+        // z_j = x_jᵀr/n for all columns — the O(np) scan.
+        self.scratch.resize(ctx.p, 0.0);
+        blocked::scan_all(x, prev.r, &mut self.scratch);
+        let mut discarded = 0;
+        for g in 0..survive.len() {
+            if !survive[g] {
+                continue;
+            }
+            let wg = ctx.layout.sizes[g] as f64;
+            let rhs = wg.sqrt() - 0.5 * v2p_norm * n.sqrt();
+            if rhs <= 0.0 {
+                continue;
+            }
+            // q_j = x_jᵀθ_k + ½ x_jᵀv2⊥
+            //     = z_j/λ_k + (c/2n)(xty_j − a(xty_j − n·z_j)/‖Xβ̂‖²)
+            let mut lhs_sq = 0.0;
+            for j in ctx.layout.range(g) {
+                let xjr = n * self.scratch[j];
+                let xjxb = ctx.xty[j] - xjr;
+                let q = self.scratch[j] / lam_k
+                    + 0.5 * c / n * (ctx.xty[j] - a * xjxb / xb_sq);
+                lhs_sq += q * q;
+            }
+            if lhs_sq.sqrt() < rhs {
+                survive[g] = false;
+                discarded += 1;
+            }
+        }
+        discarded
+    }
+}
+
+impl GroupSafeRule for GroupSedpp {
+    fn name(&self) -> &'static str {
+        "gSEDPP"
+    }
+
+    fn screen(
+        &mut self,
+        x: &DenseMatrix,
+        ctx: &GroupSafeContext,
+        prev: &PrevSolution<'_>,
+        lam_next: f64,
+        survive: &mut [bool],
+    ) -> usize {
+        let d = self.screen_with(x, ctx, prev, lam_next, survive);
+        self.dead = d == 0;
+        d
+    }
+
+    fn dead(&self) -> bool {
+        self.dead
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::generate_grouped;
+
+    fn setup(seed: u64) -> (crate::data::GroupedDataset, GroupSafeContext) {
+        let ds = generate_grouped(80, 12, 4, 3, seed);
+        let ctx = GroupSafeContext::build(&ds.x, &ds.y, &ds.layout);
+        (ds, ctx)
+    }
+
+    #[test]
+    fn lambda_max_matches_naive() {
+        let (ds, ctx) = setup(1);
+        let n = ds.n() as f64;
+        let mut lm = 0.0f64;
+        for g in 0..ds.num_groups() {
+            let mut ss = 0.0;
+            for j in ds.layout.range(g) {
+                let d = ops::dot(ds.x.col(j), &ds.y);
+                ss += d * d;
+            }
+            lm = lm.max(ss.sqrt() / (n * (ds.layout.sizes[g] as f64).sqrt()));
+        }
+        assert!((ctx.lambda_max - lm).abs() < 1e-10);
+    }
+
+    #[test]
+    fn bedpp_discards_high_lambda_not_low() {
+        let (_, ctx) = setup(2);
+        let mut hi = vec![true; ctx.layout.num_groups()];
+        assert!(GroupBedpp::screen_at(&ctx, 0.95 * ctx.lambda_max, &mut hi) > 0);
+        let mut lo = vec![true; ctx.layout.num_groups()];
+        assert_eq!(GroupBedpp::screen_at(&ctx, 0.02 * ctx.lambda_max, &mut lo), 0);
+    }
+
+    #[test]
+    fn star_group_never_discarded() {
+        let (_, ctx) = setup(3);
+        for f in [0.99, 0.9, 0.7] {
+            let mut s = vec![true; ctx.layout.num_groups()];
+            GroupBedpp::screen_at(&ctx, f * ctx.lambda_max, &mut s);
+            assert!(s[ctx.star]);
+        }
+    }
+
+    #[test]
+    fn sedpp_reduces_to_bedpp_at_k0() {
+        let (ds, ctx) = setup(4);
+        let prev = PrevSolution { lambda: ctx.lambda_max, r: &ds.y };
+        let lam = 0.9 * ctx.lambda_max;
+        let g = ctx.layout.num_groups();
+        let mut s1 = vec![true; g];
+        GroupSedpp::new().screen_with(&ds.x, &ctx, &prev, lam, &mut s1);
+        let mut s2 = vec![true; g];
+        GroupBedpp::screen_at(&ctx, lam, &mut s2);
+        assert_eq!(s1, s2);
+    }
+
+    /// Rule (22) must agree with a direct evaluation of the dome-free ball
+    /// form (24): ‖X_gᵀ(θ* + v̄2⊥/2)‖ < √Wg − ½‖v̄2⊥‖·√n.
+    #[test]
+    fn rule22_matches_first_principles() {
+        let (ds, ctx) = setup(5);
+        let n = ctx.n as f64;
+        let lam = 0.8 * ctx.lambda_max;
+        let lm = ctx.lambda_max;
+        // v̄2⊥ = (1/n)(1/λ − 1/λm)(I − X*X*ᵀ/n) y
+        let mut vbar = vec![0.0; ds.n()];
+        for j in ctx.layout.range(ctx.star) {
+            ops::axpy(ctx.xty[j], ds.x.col(j), &mut vbar);
+        }
+        let coef = (1.0 / lam - 1.0 / lm) / n;
+        let v2p: Vec<f64> =
+            ds.y.iter().zip(&vbar).map(|(y, v)| coef * (y - v / n)).collect();
+        let v2p_norm = ops::nrm2(&v2p);
+        let mut survive = vec![true; ctx.layout.num_groups()];
+        GroupBedpp::screen_at(&ctx, lam, &mut survive);
+        for g in 0..ctx.layout.num_groups() {
+            let mut lhs_sq = 0.0;
+            for j in ctx.layout.range(g) {
+                let d = ctx.xty[j] / (n * lm) + 0.5 * ops::dot(ds.x.col(j), &v2p);
+                lhs_sq += d * d;
+            }
+            let wg = ctx.layout.sizes[g] as f64;
+            let rhs = wg.sqrt() - 0.5 * v2p_norm * n.sqrt();
+            let should_discard = g != ctx.star && lhs_sq.sqrt() < rhs;
+            assert_eq!(
+                !survive[g],
+                should_discard,
+                "group {g}: lhs={} rhs={rhs}",
+                lhs_sq.sqrt()
+            );
+        }
+    }
+}

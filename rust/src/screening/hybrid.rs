@@ -1,0 +1,114 @@
+//! Hybrid safe-strong rules (HSSR) — Definition 3.1 of the paper.
+//!
+//! An HSSR composes a safe rule with SSR: at `λ_{k+1}`, feature `j` is
+//! discarded iff
+//!
+//! ```text
+//! j ∈ S⁠ᶜ_{k+1}  ∪  { j ∈ S_{k+1} : |x_jᵀ r(λ_k)|/n < 2λ_{k+1} − λ_k }   (11)
+//! ```
+//!
+//! where `S_{k+1}` is the safe set. Features in `Sᶜ` are discarded *safely*
+//! (no KKT checking ever needed for them); features discarded by the SSR
+//! half must still be KKT-verified after convergence — but only the set
+//! `S \ H` is checked, which is the source of the paper's speedup.
+//!
+//! The composition is *executed* inside Algorithm 1
+//! ([`crate::solver::path`]); this module exposes the set-level combinator
+//! for rule-level analysis (Figure 1) and unit testing, plus the named
+//! instances SSR-BEDPP and SSR-Dome via [`super::make_safe_rule`].
+
+use crate::solver::Penalty;
+
+/// Outcome of applying formula (11) at one λ step.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HssrSets {
+    /// Safe set `S` (indices surviving the safe rule).
+    pub safe: Vec<usize>,
+    /// Strong set `H ⊆ S` (survivors of SSR within the safe set) — the
+    /// features handed to the optimizer.
+    pub strong: Vec<usize>,
+    /// `S \ H` — the only features that need post-convergence KKT checking.
+    pub kkt_check: Vec<usize>,
+}
+
+/// Apply Definition 3.1 at one step: given the safe-survival mask and the
+/// correlations `z_j = x_jᵀ r(λ_k)/n`, partition features into the sets of
+/// interest.
+pub fn hssr_discard_set(
+    penalty: Penalty,
+    lam_next: f64,
+    lam_prev: f64,
+    z: &[f64],
+    safe_mask: &[bool],
+) -> HssrSets {
+    assert_eq!(z.len(), safe_mask.len());
+    let t = super::ssr::threshold(penalty, lam_next, lam_prev);
+    let mut safe = Vec::new();
+    let mut strong = Vec::new();
+    let mut kkt_check = Vec::new();
+    for (j, &in_safe) in safe_mask.iter().enumerate() {
+        if !in_safe {
+            continue;
+        }
+        safe.push(j);
+        if z[j].abs() >= t {
+            strong.push(j);
+        } else {
+            kkt_check.push(j);
+        }
+    }
+    HssrSets { safe, strong, kkt_check }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partition_is_consistent() {
+        let z = vec![0.9, 0.1, 0.5, 0.0, 0.31];
+        let safe = vec![true, true, false, true, true];
+        // λ_prev=0.5, λ_next=0.4 → t=0.3
+        let sets = hssr_discard_set(Penalty::Lasso, 0.4, 0.5, &z, &safe);
+        assert_eq!(sets.safe, vec![0, 1, 3, 4]);
+        assert_eq!(sets.strong, vec![0, 4]);
+        assert_eq!(sets.kkt_check, vec![1, 3]);
+        // strong ∪ kkt_check = safe, disjoint
+        let mut u = sets.strong.clone();
+        u.extend(&sets.kkt_check);
+        u.sort_unstable();
+        assert_eq!(u, sets.safe);
+    }
+
+    /// HSSR discards at least as much as SSR alone (paper §3.2.1): every
+    /// feature SSR would discard is either outside the safe set (discarded)
+    /// or fails the SSR threshold inside it (discarded).
+    #[test]
+    fn discards_superset_of_ssr() {
+        let z = vec![0.05, 0.4, 0.2, 0.6];
+        let all_safe = vec![true; 4];
+        let trimmed_safe = vec![false, true, false, true];
+        let ssr_only = hssr_discard_set(Penalty::Lasso, 0.4, 0.5, &z, &all_safe);
+        let hybrid = hssr_discard_set(Penalty::Lasso, 0.4, 0.5, &z, &trimmed_safe);
+        // optimizer set (strong) of hybrid ⊆ of ssr-only
+        for j in &hybrid.strong {
+            assert!(ssr_only.strong.contains(j));
+        }
+        // and KKT work strictly shrinks
+        assert!(hybrid.kkt_check.len() <= ssr_only.kkt_check.len());
+    }
+
+    #[test]
+    fn enet_threshold_used() {
+        let z = vec![0.2];
+        let sets = hssr_discard_set(
+            Penalty::ElasticNet { alpha: 0.5 },
+            0.4,
+            0.5,
+            &z,
+            &[true],
+        );
+        // t = 0.5·(0.3) = 0.15 < 0.2 → strong
+        assert_eq!(sets.strong, vec![0]);
+    }
+}

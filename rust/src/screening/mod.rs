@@ -1,0 +1,239 @@
+//! Feature screening rules for lasso-type problems.
+//!
+//! Two families:
+//!
+//! * **Safe rules** ([`SafeRule`]) are guaranteed never to discard an active
+//!   feature. Implemented: [`bedpp::Bedpp`] (Thm 2.1 / Thm 4.1),
+//!   [`sedpp::Sedpp`] (Thm 2.2), [`dome::DomeTest`] (Xiang & Ramadge 2012),
+//!   and [`rehybrid::BedppThenFrozenSedpp`] (the §6 future-work rule).
+//! * **The sequential strong rule** ([`ssr`]) is a heuristic that requires
+//!   post-convergence KKT checking.
+//!
+//! A *hybrid safe-strong rule* (Definition 3.1) composes one of each; the
+//! composition itself ([`hybrid::hssr_discard_set`]) is exercised by
+//! Algorithm 1 in [`crate::solver::path`].
+
+pub mod bedpp;
+pub mod dome;
+pub mod group;
+pub mod hybrid;
+pub mod rehybrid;
+pub mod sedpp;
+pub mod ssr;
+
+use crate::linalg::{blocked, ops, DenseMatrix};
+use crate::solver::Penalty;
+
+/// Solver strategy — the "Method" column of the paper's tables.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum RuleKind {
+    /// Basic pathwise coordinate descent, no screening ("Basic PCD").
+    BasicPcd,
+    /// Active-set cycling (Lee et al. 2007) — "AC".
+    ActiveCycling,
+    /// Sequential strong rule alone — "SSR".
+    Ssr,
+    /// Sequential EDPP safe rule alone — "SEDPP".
+    Sedpp,
+    /// Hybrid SSR + basic EDPP — "SSR-BEDPP" (the paper's headline rule).
+    SsrBedpp,
+    /// Hybrid SSR + Dome test — "SSR-Dome".
+    SsrDome,
+    /// §6 extension: SSR + BEDPP re-hybridized with a frozen SEDPP once
+    /// BEDPP goes dead — "SSR-BEDPP-SEDPP".
+    SsrBedppSedpp,
+}
+
+impl RuleKind {
+    /// Paper-style display name.
+    pub fn label(&self) -> &'static str {
+        match self {
+            RuleKind::BasicPcd => "Basic PCD",
+            RuleKind::ActiveCycling => "AC",
+            RuleKind::Ssr => "SSR",
+            RuleKind::Sedpp => "SEDPP",
+            RuleKind::SsrBedpp => "SSR-BEDPP",
+            RuleKind::SsrDome => "SSR-Dome",
+            RuleKind::SsrBedppSedpp => "SSR-BEDPP-SEDPP",
+        }
+    }
+
+    /// All methods compared in the paper's lasso experiments (Tables 2).
+    pub fn paper_lasso_methods() -> [RuleKind; 6] {
+        [
+            RuleKind::BasicPcd,
+            RuleKind::ActiveCycling,
+            RuleKind::Ssr,
+            RuleKind::Sedpp,
+            RuleKind::SsrDome,
+            RuleKind::SsrBedpp,
+        ]
+    }
+
+    /// Whether this strategy uses a safe rule that needs `Xᵀx*` precompute.
+    /// (SEDPP needs it too: its k = 0 case reduces to BEDPP.)
+    pub fn needs_star(&self) -> bool {
+        matches!(
+            self,
+            RuleKind::Sedpp | RuleKind::SsrBedpp | RuleKind::SsrDome | RuleKind::SsrBedppSedpp
+        )
+    }
+
+    /// Whether this strategy uses SSR (and hence KKT checking).
+    pub fn uses_ssr(&self) -> bool {
+        matches!(
+            self,
+            RuleKind::Ssr | RuleKind::SsrBedpp | RuleKind::SsrDome | RuleKind::SsrBedppSedpp
+        )
+    }
+}
+
+/// Quantities shared by every safe rule, computed once per fit (`O(np)`).
+#[derive(Clone, Debug)]
+pub struct SafeContext {
+    /// Observations.
+    pub n: usize,
+    /// Features.
+    pub p: usize,
+    /// Centered response.
+    pub y: Vec<f64>,
+    /// `x_jᵀ y` for every feature (un-normalized).
+    pub xty: Vec<f64>,
+    /// `x_jᵀ x_*` for every feature; empty if not requested.
+    pub xtx_star: Vec<f64>,
+    /// `‖y‖²`.
+    pub y_sq: f64,
+    /// `λ_max = max_j |x_jᵀy|/(αn)`.
+    pub lambda_max: f64,
+    /// Index of `x_* = argmax_j |x_jᵀy|`.
+    pub star: usize,
+    /// `sign(x_*ᵀ y)`.
+    pub sign_star: f64,
+    /// Penalty (affects the elastic-net variants of every rule).
+    pub penalty: Penalty,
+}
+
+impl SafeContext {
+    /// Build the context. `need_star` controls whether the extra `O(np)`
+    /// scan for `Xᵀx_*` is performed (only BEDPP/Dome need it).
+    pub fn build(x: &DenseMatrix, y: &[f64], penalty: Penalty, need_star: bool) -> SafeContext {
+        let n = x.nrows();
+        let p = x.ncols();
+        let mut xty = vec![0.0; p];
+        // xty = n * scan(x, y) since scan divides by n.
+        blocked::scan_all(x, y, &mut xty);
+        for v in xty.iter_mut() {
+            *v *= n as f64;
+        }
+        let (star, max_abs) = ops::abs_argmax(&xty);
+        let alpha = penalty.alpha();
+        let lambda_max = max_abs / (alpha * n as f64);
+        let sign_star = if xty[star] >= 0.0 { 1.0 } else { -1.0 };
+        let xtx_star = if need_star {
+            let mut v = vec![0.0; p];
+            blocked::scan_all(x, x.col(star), &mut v);
+            for w in v.iter_mut() {
+                *w *= n as f64;
+            }
+            v
+        } else {
+            Vec::new()
+        };
+        SafeContext {
+            n,
+            p,
+            y: y.to_vec(),
+            xty,
+            xtx_star,
+            y_sq: ops::nrm2_sq(y),
+            lambda_max,
+            star,
+            sign_star,
+            penalty,
+        }
+    }
+}
+
+/// Information about the previously solved λ point, consumed by sequential
+/// safe rules.
+pub struct PrevSolution<'a> {
+    /// λ of the previous solution (`λ_k`); equals `λ_max` before any solve.
+    pub lambda: f64,
+    /// Residual `r(λ_k) = y − Xβ̂(λ_k)`.
+    pub r: &'a [f64],
+}
+
+/// A safe screening rule: guaranteed never to discard an active feature.
+pub trait SafeRule: Send {
+    /// Rule name for reports.
+    fn name(&self) -> &'static str;
+
+    /// Screen at `lam_next`, writing `survive[j] = false` for features that
+    /// are *safely* discarded. Entries are only ever cleared (callers reset
+    /// the mask). Returns the number of features discarded by this call.
+    fn screen(
+        &mut self,
+        x: &DenseMatrix,
+        ctx: &SafeContext,
+        prev: &PrevSolution<'_>,
+        lam_next: f64,
+        survive: &mut [bool],
+    ) -> usize;
+
+    /// True once the rule can no longer discard anything at smaller λ
+    /// (drives the `Flag` shutoff in Algorithm 1).
+    fn dead(&self) -> bool;
+}
+
+/// Construct the safe rule (if any) used by a [`RuleKind`] strategy.
+pub fn make_safe_rule(kind: RuleKind) -> Option<Box<dyn SafeRule>> {
+    match kind {
+        RuleKind::SsrBedpp => Some(Box::new(bedpp::Bedpp::new())),
+        RuleKind::SsrDome => Some(Box::new(dome::DomeTest::new())),
+        RuleKind::Sedpp => Some(Box::new(sedpp::Sedpp::new())),
+        RuleKind::SsrBedppSedpp => Some(Box::new(rehybrid::BedppThenFrozenSedpp::new())),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DataSpec;
+
+    #[test]
+    fn context_matches_naive() {
+        let ds = DataSpec::synthetic(50, 20, 4).generate(1);
+        let ctx = SafeContext::build(&ds.x, &ds.y, Penalty::Lasso, true);
+        // λmax = max |x_jᵀ y| / n
+        let mut lam = 0.0f64;
+        for j in 0..20 {
+            lam = lam.max(ops::dot(ds.x.col(j), &ds.y).abs() / 50.0);
+        }
+        assert!((ctx.lambda_max - lam).abs() < 1e-12);
+        assert_eq!(ctx.xtx_star.len(), 20);
+        // x_*ᵀ x_* = n under standardization
+        assert!((ctx.xtx_star[ctx.star] - 50.0).abs() < 1e-8);
+        // sign consistency
+        assert_eq!(ctx.sign_star, ctx.xty[ctx.star].signum());
+    }
+
+    #[test]
+    fn enet_lambda_max_scales_with_alpha() {
+        let ds = DataSpec::synthetic(40, 10, 2).generate(2);
+        let c1 = SafeContext::build(&ds.x, &ds.y, Penalty::Lasso, false);
+        let c2 = SafeContext::build(&ds.x, &ds.y, Penalty::ElasticNet { alpha: 0.5 }, false);
+        assert!((c2.lambda_max - 2.0 * c1.lambda_max).abs() < 1e-12);
+        assert!(c2.xtx_star.is_empty());
+    }
+
+    #[test]
+    fn labels_and_method_list() {
+        assert_eq!(RuleKind::SsrBedpp.label(), "SSR-BEDPP");
+        assert_eq!(RuleKind::paper_lasso_methods().len(), 6);
+        assert!(RuleKind::SsrBedpp.needs_star());
+        assert!(!RuleKind::Ssr.needs_star());
+        assert!(RuleKind::Ssr.uses_ssr());
+        assert!(!RuleKind::Sedpp.uses_ssr());
+    }
+}

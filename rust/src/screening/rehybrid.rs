@@ -1,0 +1,217 @@
+//! Re-hybridization — the paper's §6 "future work" rule, implemented.
+//!
+//! SSR-BEDPP loses its safe half once BEDPP's RHS goes non-positive
+//! (≈ 0.45·λmax on GENE-like data). The paper sketches the fix: at that
+//! point, *freeze* an SEDPP rule at the current solution `β̂(λ_ref)`. Rule
+//! (10) with `λ_k = λ_ref` fixed needs `O(np)` once — the scan
+//! `u_j = x_jᵀr(λ_ref)` and the projection weights — and then only `O(p)`
+//! per subsequent λ, because only the scalar `c = (λ_ref−λ)/(λ_ref·λ)`
+//! varies. The result is a safe rule that stays powerful deep into the path
+//! at BEDPP's asymptotic cost.
+
+use super::bedpp::Bedpp;
+use super::{PrevSolution, SafeContext, SafeRule};
+use crate::linalg::{blocked, DenseMatrix};
+
+/// Per-feature constants of the frozen rule.
+struct Frozen {
+    /// λ_ref the rule was frozen at.
+    lam_ref: f64,
+    /// `u_j = x_jᵀ r(λ_ref) / λ_ref`.
+    u: Vec<f64>,
+    /// `w_j = x_jᵀy − a·x_jᵀXβ̂/‖Xβ̂‖²`.
+    w: Vec<f64>,
+    /// `√(n‖y‖² − n·a²/‖Xβ̂‖²)`.
+    rhs_root: f64,
+}
+
+impl Frozen {
+    /// Freeze rule (10) at the previous solution. `O(np)` (one scan).
+    fn build(x: &DenseMatrix, ctx: &SafeContext, prev: &PrevSolution<'_>) -> Option<Frozen> {
+        let n = ctx.n as f64;
+        let mut xb_sq = 0.0;
+        let mut a = 0.0;
+        for (yi, ri) in ctx.y.iter().zip(prev.r) {
+            let f = yi - ri;
+            xb_sq += f * f;
+            a += yi * f;
+        }
+        if xb_sq < 1e-12 {
+            return None; // no solution mass yet; cannot freeze
+        }
+        let mut z = vec![0.0; ctx.p];
+        blocked::scan_all(x, prev.r, &mut z);
+        let mut u = Vec::with_capacity(ctx.p);
+        let mut w = Vec::with_capacity(ctx.p);
+        for j in 0..ctx.p {
+            let xjr = n * z[j];
+            let xjxb = ctx.xty[j] - xjr;
+            u.push(xjr / prev.lambda);
+            w.push(ctx.xty[j] - a * xjxb / xb_sq);
+        }
+        let rhs_root = (n * ctx.y_sq - n * a * a / xb_sq).max(0.0).sqrt();
+        Some(Frozen { lam_ref: prev.lambda, u, w, rhs_root })
+    }
+
+    /// `O(p)` evaluation at `lam < lam_ref`.
+    fn screen_at(&self, ctx: &SafeContext, lam: f64, survive: &mut [bool]) -> usize {
+        let n = ctx.n as f64;
+        let c = (self.lam_ref - lam) / (self.lam_ref * lam);
+        let rhs = n - 0.5 * c * self.rhs_root;
+        if rhs <= 0.0 {
+            return 0;
+        }
+        let mut discarded = 0;
+        for j in 0..ctx.p {
+            if survive[j] && (self.u[j] + 0.5 * c * self.w[j]).abs() < rhs {
+                survive[j] = false;
+                discarded += 1;
+            }
+        }
+        discarded
+    }
+}
+
+/// BEDPP until it dies, then a frozen SEDPP ("SSR-BEDPP-SEDPP" when hybridized
+/// with SSR by Algorithm 1).
+#[derive(Default)]
+pub struct BedppThenFrozenSedpp {
+    bedpp_alive: bool,
+    frozen: Option<Frozen>,
+    dead: bool,
+}
+
+impl BedppThenFrozenSedpp {
+    /// Create a fresh rule.
+    pub fn new() -> Self {
+        BedppThenFrozenSedpp { bedpp_alive: true, frozen: None, dead: false }
+    }
+
+    /// Whether the rule has entered its frozen-SEDPP phase.
+    pub fn is_frozen(&self) -> bool {
+        self.frozen.is_some()
+    }
+}
+
+impl SafeRule for BedppThenFrozenSedpp {
+    fn name(&self) -> &'static str {
+        "BEDPP→SEDPP"
+    }
+
+    fn screen(
+        &mut self,
+        x: &DenseMatrix,
+        ctx: &SafeContext,
+        prev: &PrevSolution<'_>,
+        lam_next: f64,
+        survive: &mut [bool],
+    ) -> usize {
+        if self.dead {
+            return 0;
+        }
+        if self.bedpp_alive {
+            let d = Bedpp::screen_at(ctx, lam_next, survive);
+            if d > 0 {
+                return d;
+            }
+            // BEDPP just died — re-hybridize by freezing SEDPP here. The
+            // frozen rule is rule (10), which is derived for the lasso
+            // only (the enet's augmented design varies with λ), so under
+            // an elastic-net penalty we simply shut off like plain BEDPPP.
+            self.bedpp_alive = false;
+            self.frozen = if matches!(ctx.penalty, crate::solver::Penalty::Lasso) {
+                Frozen::build(x, ctx, prev)
+            } else {
+                None
+            };
+            if self.frozen.is_none() {
+                self.dead = true;
+                return 0;
+            }
+        }
+        let frozen = self.frozen.as_ref().expect("frozen phase");
+        let d = frozen.screen_at(ctx, lam_next, survive);
+        if d == 0 {
+            // The frozen rule's power decays too; once it discards nothing
+            // it never will again at smaller λ-to-λ_ref gaps that only grow,
+            // so shut off (Algorithm 1 Flag semantics).
+            self.dead = true;
+        }
+        d
+    }
+
+    fn dead(&self) -> bool {
+        self.dead
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DataSpec;
+    use crate::screening::sedpp::Sedpp;
+    use crate::solver::Penalty;
+
+    fn setup(seed: u64) -> (crate::data::Dataset, SafeContext) {
+        let ds = DataSpec::synthetic(60, 40, 4).generate(seed);
+        let ctx = SafeContext::build(&ds.x, &ds.y, Penalty::Lasso, true);
+        (ds, ctx)
+    }
+
+    /// The frozen rule at its freeze point must agree exactly with a live
+    /// SEDPP screen from the same previous solution.
+    #[test]
+    fn frozen_matches_live_sedpp() {
+        let (ds, ctx) = setup(1);
+        let mut beta = vec![0.0; ctx.p];
+        beta[2] = 0.15;
+        beta[7] = -0.1;
+        let xb = ds.x.matvec(&beta);
+        let r: Vec<f64> = ds.y.iter().zip(&xb).map(|(y, f)| y - f).collect();
+        let lam_ref = 0.5 * ctx.lambda_max;
+        let prev = PrevSolution { lambda: lam_ref, r: &r };
+        let frozen = Frozen::build(&ds.x, &ctx, &prev).unwrap();
+        for frac in [0.45, 0.4, 0.3] {
+            let lam = frac * ctx.lambda_max;
+            let mut s_frozen = vec![true; ctx.p];
+            frozen.screen_at(&ctx, lam, &mut s_frozen);
+            let mut s_live = vec![true; ctx.p];
+            let mut live = Sedpp::new();
+            live.screen_with(&ds.x, &ctx, &prev, lam, &mut s_live);
+            assert_eq!(s_frozen, s_live, "mismatch at λ = {frac}·λmax");
+        }
+    }
+
+    #[test]
+    fn phase_transition_happens() {
+        let (ds, ctx) = setup(2);
+        let mut rule = BedppThenFrozenSedpp::new();
+        // Simulate a previous solution mid-path.
+        let mut beta = vec![0.0; ctx.p];
+        beta[1] = 0.2;
+        let xb = ds.x.matvec(&beta);
+        let r: Vec<f64> = ds.y.iter().zip(&xb).map(|(y, f)| y - f).collect();
+        // High λ: BEDPP phase.
+        let prev_hi = PrevSolution { lambda: 0.95 * ctx.lambda_max, r: &ds.y };
+        let mut s = vec![true; ctx.p];
+        rule.screen(&ds.x, &ctx, &prev_hi, 0.9 * ctx.lambda_max, &mut s);
+        assert!(!rule.is_frozen());
+        // Low λ: BEDPP dies, freeze kicks in.
+        let prev_lo = PrevSolution { lambda: 0.2 * ctx.lambda_max, r: &r };
+        let mut s2 = vec![true; ctx.p];
+        rule.screen(&ds.x, &ctx, &prev_lo, 0.18 * ctx.lambda_max, &mut s2);
+        assert!(rule.is_frozen() || rule.dead());
+    }
+
+    #[test]
+    fn cannot_freeze_without_solution_mass() {
+        let (ds, ctx) = setup(3);
+        let mut rule = BedppThenFrozenSedpp::new();
+        // Residual = y (β̂ = 0) at tiny λ: BEDPP dead, freeze impossible.
+        let prev = PrevSolution { lambda: 0.05 * ctx.lambda_max, r: &ds.y };
+        let mut s = vec![true; ctx.p];
+        let d = rule.screen(&ds.x, &ctx, &prev, 0.04 * ctx.lambda_max, &mut s);
+        assert_eq!(d, 0);
+        assert!(rule.dead());
+    }
+}

@@ -1,0 +1,226 @@
+//! Sequential EDPP (SEDPP) safe rule — Theorem 2.2 of the paper.
+//!
+//! SEDPP screens at `λ_{k+1}` using the solution at `λ_k`: it needs
+//! `x_jᵀr(λ_k)` and `x_jᵀXβ̂(λ_k)` for *every* feature, i.e. a full `O(np)`
+//! scan per λ — total `O(npK)` (Table 1). The scan products are shared:
+//! `x_jᵀXβ̂ = x_jᵀy − x_jᵀr`, so one scan of `Xᵀr` suffices.
+//!
+//! At `k = 0` (previous point is `λ_max`, where `β̂ = 0`) the rule reduces
+//! to BEDPP (Theorem 2.2, case 2).
+
+use super::{bedpp::Bedpp, PrevSolution, SafeContext, SafeRule};
+use crate::linalg::{blocked, DenseMatrix};
+
+/// The SEDPP rule. Holds a scratch buffer for the per-λ scan.
+#[derive(Debug, Default)]
+pub struct Sedpp {
+    scratch: Vec<f64>,
+    dead: bool,
+}
+
+impl Sedpp {
+    /// Create a fresh rule.
+    pub fn new() -> Self {
+        Sedpp { scratch: Vec::new(), dead: false }
+    }
+
+    /// Evaluate rule (10) given the previous residual. Public for reuse by
+    /// the Figure-1 power measurement.
+    ///
+    /// Returns the number of features discarded.
+    pub fn screen_with(
+        &mut self,
+        x: &DenseMatrix,
+        ctx: &SafeContext,
+        prev: &PrevSolution<'_>,
+        lam_next: f64,
+        survive: &mut [bool],
+    ) -> usize {
+        // Rule (10) is derived for the lasso. For the elastic net the
+        // augmented design X̃ depends on λ itself, so the sequential form
+        // does not carry over (the paper, like Wang et al., derives only
+        // the *basic* EDPP rule for the enet — Thm 4.1); fall back to it.
+        if !matches!(ctx.penalty, crate::solver::Penalty::Lasso) {
+            return Bedpp::screen_at(ctx, lam_next, survive);
+        }
+        let n = ctx.n as f64;
+        // Xβ̂ = y − r, ‖Xβ̂‖², a = yᵀXβ̂ — all O(n).
+        let mut xb_sq = 0.0;
+        let mut a = 0.0;
+        for (yi, ri) in ctx.y.iter().zip(prev.r) {
+            let f = yi - ri;
+            xb_sq += f * f;
+            a += yi * f;
+        }
+        if xb_sq < 1e-12 {
+            // β̂(λ_k) = 0 ⇒ k = 0 case: BEDPP at lam_next.
+            return Bedpp::screen_at(ctx, lam_next, survive);
+        }
+        let lam_k = prev.lambda;
+        let c = (lam_k - lam_next) / (lam_k * lam_next);
+        let rhs = n - 0.5 * c * (n * ctx.y_sq - n * a * a / xb_sq).max(0.0).sqrt();
+        if rhs <= 0.0 {
+            return 0;
+        }
+        // z_j = x_jᵀ r / n for all features: the O(np) scan.
+        self.scratch.resize(ctx.p, 0.0);
+        blocked::scan_all(x, prev.r, &mut self.scratch);
+        let mut discarded = 0;
+        for j in 0..ctx.p {
+            if !survive[j] {
+                continue;
+            }
+            let xjr = n * self.scratch[j];
+            let xjxb = ctx.xty[j] - xjr;
+            let lhs = (xjr / lam_k + 0.5 * c * (ctx.xty[j] - a * xjxb / xb_sq)).abs();
+            if lhs < rhs {
+                survive[j] = false;
+                discarded += 1;
+            }
+        }
+        discarded
+    }
+}
+
+impl SafeRule for Sedpp {
+    fn name(&self) -> &'static str {
+        "SEDPP"
+    }
+
+    fn screen(
+        &mut self,
+        x: &DenseMatrix,
+        ctx: &SafeContext,
+        prev: &PrevSolution<'_>,
+        lam_next: f64,
+        survive: &mut [bool],
+    ) -> usize {
+        let d = self.screen_with(x, ctx, prev, lam_next, survive);
+        // SEDPP stays powerful along the whole path (Figure 1); only flag
+        // dead if it truly discarded nothing, mirroring Algorithm 1's
+        // |S| = p test.
+        self.dead = d == 0;
+        d
+    }
+
+    fn dead(&self) -> bool {
+        self.dead
+    }
+}
+
+/// First-principles helper shared with tests: the EDPP dual ball at
+/// `lam_next` given the previous dual point. Returns `(center_dot_j, radius)`
+/// evaluated lazily per feature via a closure over `v2⊥`.
+#[cfg(test)]
+pub(crate) fn reference_ball(
+    x: &DenseMatrix,
+    ctx: &SafeContext,
+    prev: &PrevSolution<'_>,
+    lam_next: f64,
+) -> (Vec<f64>, f64) {
+    use crate::linalg::ops;
+    let n = ctx.n as f64;
+    let xb: Vec<f64> = ctx.y.iter().zip(prev.r).map(|(y, r)| y - r).collect();
+    let xb_sq = ops::nrm2_sq(&xb);
+    let a = ops::dot(&ctx.y, &xb);
+    let lam_k = prev.lambda;
+    let c = (lam_k - lam_next) / (lam_k * lam_next);
+    // v2⊥ = (c/n)(y − a·Xβ̂/‖Xβ̂‖²)
+    let v2p: Vec<f64> =
+        ctx.y.iter().zip(&xb).map(|(y, f)| (c / n) * (y - a * f / xb_sq)).collect();
+    let radius = 0.5 * ops::nrm2(&v2p);
+    // center θ_c = r/(nλ_k) + v2⊥/2; sup |x_jᵀθ| = |x_jᵀθ_c| + ‖x_j‖·radius
+    let center: Vec<f64> = (0..ctx.p)
+        .map(|j| {
+            let col = x.col(j);
+            let mut d = 0.0;
+            for i in 0..ctx.n {
+                d += col[i] * (prev.r[i] / (n * lam_k) + 0.5 * v2p[i]);
+            }
+            d
+        })
+        .collect();
+    (center, radius)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DataSpec;
+    use crate::solver::Penalty;
+
+    fn setup(seed: u64) -> (crate::data::Dataset, SafeContext) {
+        let ds = DataSpec::synthetic(60, 40, 4).generate(seed);
+        let ctx = SafeContext::build(&ds.x, &ds.y, Penalty::Lasso, true);
+        (ds, ctx)
+    }
+
+    #[test]
+    fn reduces_to_bedpp_at_k0() {
+        let (ds, ctx) = setup(1);
+        let mut rule = Sedpp::new();
+        let prev = PrevSolution { lambda: ctx.lambda_max, r: &ds.y };
+        let lam = 0.9 * ctx.lambda_max;
+        let mut s_sedpp = vec![true; ctx.p];
+        rule.screen_with(&ds.x, &ctx, &prev, lam, &mut s_sedpp);
+        let mut s_bedpp = vec![true; ctx.p];
+        Bedpp::screen_at(&ctx, lam, &mut s_bedpp);
+        assert_eq!(s_sedpp, s_bedpp);
+    }
+
+    /// With a genuine previous solution, the discard decisions must agree
+    /// with the first-principles dual ball: |x_jᵀθc| + √n·R < 1.
+    #[test]
+    fn matches_reference_ball() {
+        let (ds, ctx) = setup(2);
+        // Fake a plausible "previous solution" residual: project y onto the
+        // span of 3 columns (a valid β̂ surrogate for geometry checking —
+        // the rule only requires r = y − Xβ for the β we hand it... we use
+        // exact optimization in integration tests; here geometry only).
+        let mut beta = vec![0.0; ctx.p];
+        beta[0] = 0.1;
+        beta[3] = -0.2;
+        let xb = ds.x.matvec(&beta);
+        let r: Vec<f64> = ds.y.iter().zip(&xb).map(|(y, f)| y - f).collect();
+        let lam_k = 0.7 * ctx.lambda_max;
+        let lam_next = 0.6 * ctx.lambda_max;
+        let prev = PrevSolution { lambda: lam_k, r: &r };
+        let mut survive = vec![true; ctx.p];
+        let mut rule = Sedpp::new();
+        rule.screen_with(&ds.x, &ctx, &prev, lam_next, &mut survive);
+        let (center, radius) = reference_ball(&ds.x, &ctx, &prev, lam_next);
+        let n = ctx.n as f64;
+        for j in 0..ctx.p {
+            let sup = center[j].abs() + n.sqrt() * radius;
+            let should_discard = sup < 1.0 - 1e-10;
+            assert_eq!(
+                !survive[j],
+                should_discard,
+                "feature {j}: sup={sup}, survive={}",
+                survive[j]
+            );
+        }
+    }
+
+    #[test]
+    fn discards_more_than_bedpp_deep_in_path() {
+        let (ds, ctx) = setup(3);
+        // Deep in the path BEDPP is dead but SEDPP still works, given a
+        // previous solution with small residual. Build r by soft projection.
+        let mut beta = vec![0.0; ctx.p];
+        for (k, j) in ds.truth.clone().unwrap().into_iter().enumerate() {
+            beta[j] = 0.05 * (k as f64 + 1.0);
+        }
+        let xb = ds.x.matvec(&beta);
+        let r: Vec<f64> = ds.y.iter().zip(&xb).map(|(y, f)| y - f).collect();
+        let lam_k = 0.3 * ctx.lambda_max;
+        let lam_next = 0.29 * ctx.lambda_max;
+        let mut s_bedpp = vec![true; ctx.p];
+        let b = Bedpp::screen_at(&ctx, lam_next, &mut s_bedpp);
+        let mut s_sedpp = vec![true; ctx.p];
+        let mut rule = Sedpp::new();
+        let prev = PrevSolution { lambda: lam_k, r: &r };
+        let s = rule.screen_with(&ds.x, &ctx, &prev, lam_next, &mut s_sedpp);
+        assert!(s >= b, "SEDPP ({s}) should not trail BEDPP ({b}) here");
+    }
+}

@@ -1,0 +1,101 @@
+//! The sequential strong rule (SSR) of Tibshirani et al. (2012).
+//!
+//! Given the solution at `λ_k` and its correlations `z_j = x_jᵀr(λ_k)/n`,
+//! SSR discards feature `j` at `λ_{k+1}` if `|z_j| < 2λ_{k+1} − λ_k`
+//! (rule (3)); the elastic-net form scales the threshold by α (rule (14)).
+//!
+//! SSR is *not* safe — it assumes the unit-slope bound (5) — so solutions
+//! screened by SSR must be validated by post-convergence KKT checking
+//! ([`crate::solver::kkt`]).
+
+use crate::solver::Penalty;
+
+/// The SSR threshold at `λ_next` given the previous grid point `λ_prev`.
+///
+/// Lasso: `2λ_{k+1} − λ_k`; elastic net: `α(2λ_{k+1} − λ_k)`.
+#[inline]
+pub fn threshold(penalty: Penalty, lam_next: f64, lam_prev: f64) -> f64 {
+    penalty.alpha() * (2.0 * lam_next - lam_prev)
+}
+
+/// Apply SSR over the features flagged in `candidates`: returns the strong
+/// set (features *kept* for optimization). `z[j]` must hold
+/// `x_jᵀ r(λ_prev)/n` for every candidate `j`.
+pub fn strong_set(
+    penalty: Penalty,
+    lam_next: f64,
+    lam_prev: f64,
+    z: &[f64],
+    candidates: &[bool],
+) -> Vec<usize> {
+    let t = threshold(penalty, lam_next, lam_prev);
+    candidates
+        .iter()
+        .enumerate()
+        .filter(|&(j, &c)| c && z[j].abs() >= t)
+        .map(|(j, _)| j)
+        .collect()
+}
+
+/// Group-lasso SSR (rule (20)): keep group `g` iff
+/// `‖X_gᵀr/n‖ ≥ √W_g (2λ_{k+1} − λ_k)`. `znorm[g]` must hold `‖X_gᵀr/n‖`.
+pub fn group_strong_set(
+    lam_next: f64,
+    lam_prev: f64,
+    znorm: &[f64],
+    sizes: &[usize],
+    candidates: &[bool],
+) -> Vec<usize> {
+    let t = 2.0 * lam_next - lam_prev;
+    candidates
+        .iter()
+        .enumerate()
+        .filter(|&(g, &c)| c && znorm[g] >= (sizes[g] as f64).sqrt() * t)
+        .map(|(g, _)| g)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn threshold_forms() {
+        assert!((threshold(Penalty::Lasso, 0.4, 0.5) - 0.3).abs() < 1e-15);
+        let en = Penalty::ElasticNet { alpha: 0.5 };
+        assert!((threshold(en, 0.4, 0.5) - 0.15).abs() < 1e-15);
+    }
+
+    #[test]
+    fn strong_set_filters_small_correlations() {
+        let z = vec![0.50, 0.10, -0.45, 0.29, -0.31];
+        let cand = vec![true; 5];
+        // λ_prev = 0.5, λ_next = 0.4 → t = 0.3
+        let h = strong_set(Penalty::Lasso, 0.4, 0.5, &z, &cand);
+        assert_eq!(h, vec![0, 2, 4]);
+    }
+
+    #[test]
+    fn strong_set_respects_candidates() {
+        let z = vec![1.0, 1.0, 1.0];
+        let cand = vec![true, false, true];
+        let h = strong_set(Penalty::Lasso, 0.4, 0.5, &z, &cand);
+        assert_eq!(h, vec![0, 2]);
+    }
+
+    #[test]
+    fn strong_set_empty_threshold_negative() {
+        // When 2λ_next − λ_prev < 0 every candidate survives.
+        let z = vec![0.0, 0.001];
+        let h = strong_set(Penalty::Lasso, 0.1, 0.5, &z, &[true, true]);
+        assert_eq!(h.len(), 2);
+    }
+
+    #[test]
+    fn group_strong_set_scales_by_sqrt_w() {
+        let znorm = vec![0.5, 0.5];
+        let sizes = vec![1, 4]; // thresholds 0.3·1, 0.3·2
+        let h = group_strong_set(0.4, 0.5, &znorm, &sizes, &[true, true]);
+        assert_eq!(h, vec![0]);
+    }
+}

@@ -1,0 +1,203 @@
+//! Coordinate-descent inner loop for the lasso and elastic net.
+//!
+//! With standardized columns (`x_jᵀx_j/n = 1`) the update is closed form:
+//!
+//! ```text
+//! z_j    = x_jᵀr/n + β_j
+//! β_j⁺   = S(z_j, αλ) / (1 + (1−α)λ)          (lasso: α = 1)
+//! r     −= (β_j⁺ − β_j)·x_j
+//! ```
+//!
+//! The residual is maintained exactly, so `x_jᵀr/n` quantities seen by the
+//! screening rules and the KKT checker always refer to the current iterate.
+
+use crate::error::{HssrError, Result};
+use crate::linalg::{ops, DenseMatrix};
+use crate::solver::Penalty;
+
+/// Statistics from one inner-solver invocation.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CdStats {
+    /// Full cycles over the active list.
+    pub cycles: usize,
+    /// Individual coordinate updates (= cycles × |active| here).
+    pub coord_updates: u64,
+}
+
+/// One full coordinate cycle over `active`. Returns the largest |Δβ_j|.
+pub fn cd_cycle(
+    x: &DenseMatrix,
+    penalty: Penalty,
+    lam: f64,
+    active: &[usize],
+    beta: &mut [f64],
+    r: &mut [f64],
+) -> f64 {
+    let n_inv = 1.0 / x.nrows() as f64;
+    let alpha = penalty.alpha();
+    let thresh = alpha * lam;
+    let denom = 1.0 + penalty.l2_weight() * lam;
+    let mut max_delta = 0.0f64;
+    for &j in active {
+        let col = x.col(j);
+        let z = ops::dot(col, r) * n_inv + beta[j];
+        let b_new = ops::soft_threshold(z, thresh) / denom;
+        let delta = b_new - beta[j];
+        if delta != 0.0 {
+            ops::axpy(-delta, col, r);
+            beta[j] = b_new;
+            max_delta = max_delta.max(delta.abs());
+        }
+    }
+    max_delta
+}
+
+/// Iterate [`cd_cycle`] until the largest coefficient change falls below
+/// `tol` (or error after `max_iter` cycles).
+pub fn cd_solve(
+    x: &DenseMatrix,
+    penalty: Penalty,
+    lam: f64,
+    active: &[usize],
+    beta: &mut [f64],
+    r: &mut [f64],
+    tol: f64,
+    max_iter: usize,
+    lambda_index: usize,
+) -> Result<CdStats> {
+    let mut stats = CdStats::default();
+    if active.is_empty() {
+        return Ok(stats);
+    }
+    let mut last_delta = f64::INFINITY;
+    for _ in 0..max_iter {
+        last_delta = cd_cycle(x, penalty, lam, active, beta, r);
+        stats.cycles += 1;
+        stats.coord_updates += active.len() as u64;
+        if last_delta < tol {
+            return Ok(stats);
+        }
+    }
+    Err(HssrError::NoConvergence { lambda_index, max_iter, last_delta })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DataSpec;
+    use crate::linalg::blocked;
+
+    /// On an orthonormal design (XᵀX/n = I), the lasso solution is the
+    /// soft-thresholded OLS: β_j = S(x_jᵀy/n, λ). CD must find it in one
+    /// pass (to numerical tolerance).
+    #[test]
+    fn orthonormal_design_closed_form() {
+        // Build an exactly orthonormal design via group orthonormalization.
+        let ds = DataSpec::synthetic(50, 8, 3).generate(1);
+        let og = crate::data::standardize::orthonormalize_groups(&ds.x, &[0], &[8]);
+        let x = og.x;
+        let y = ds.y.clone();
+        let lam = 0.3;
+        let active: Vec<usize> = (0..8).collect();
+        let mut beta = vec![0.0; 8];
+        let mut r = y.clone();
+        cd_solve(&x, Penalty::Lasso, lam, &active, &mut beta, &mut r, 1e-12, 100, 0).unwrap();
+        let z = blocked::scan_all_vec(&x, &y);
+        for j in 0..8 {
+            let expect = ops::soft_threshold(z[j], lam);
+            assert!((beta[j] - expect).abs() < 1e-9, "β[{j}]={} want {expect}", beta[j]);
+        }
+    }
+
+    /// KKT conditions hold at the CD solution on a correlated design.
+    #[test]
+    fn kkt_satisfied_at_solution() {
+        let ds = DataSpec::gene_like(60, 30).generate(2);
+        let lam = {
+            let z = blocked::scan_all_vec(&ds.x, &ds.y);
+            0.5 * ops::inf_norm(&z)
+        };
+        let active: Vec<usize> = (0..30).collect();
+        let mut beta = vec![0.0; 30];
+        let mut r = ds.y.clone();
+        cd_solve(&ds.x, Penalty::Lasso, lam, &active, &mut beta, &mut r, 1e-10, 10_000, 0)
+            .unwrap();
+        let z = blocked::scan_all_vec(&ds.x, &r);
+        for j in 0..30 {
+            if beta[j] != 0.0 {
+                assert!(
+                    (z[j] - lam * beta[j].signum()).abs() < 1e-6,
+                    "active KKT at {j}: z={}, λ·sign={}",
+                    z[j],
+                    lam * beta[j].signum()
+                );
+            } else {
+                assert!(z[j].abs() <= lam + 1e-6, "inactive KKT at {j}: |z|={}", z[j].abs());
+            }
+        }
+    }
+
+    /// Elastic-net KKT: for active j, x_jᵀr/n = αλ·sign(β_j) + (1−α)λ·β_j.
+    #[test]
+    fn enet_kkt_satisfied() {
+        let ds = DataSpec::synthetic(60, 25, 5).generate(3);
+        let pen = Penalty::ElasticNet { alpha: 0.6 };
+        let z0 = blocked::scan_all_vec(&ds.x, &ds.y);
+        let lam = 0.4 * ops::inf_norm(&z0) / 0.6;
+        let active: Vec<usize> = (0..25).collect();
+        let mut beta = vec![0.0; 25];
+        let mut r = ds.y.clone();
+        cd_solve(&ds.x, pen, lam, &active, &mut beta, &mut r, 1e-10, 10_000, 0).unwrap();
+        let z = blocked::scan_all_vec(&ds.x, &r);
+        for j in 0..25 {
+            if beta[j] != 0.0 {
+                let want = 0.6 * lam * beta[j].signum() + 0.4 * lam * beta[j];
+                assert!((z[j] - want).abs() < 1e-6, "enet KKT at {j}");
+            } else {
+                assert!(z[j].abs() <= 0.6 * lam + 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn residual_maintained_exactly() {
+        let ds = DataSpec::synthetic(40, 15, 4).generate(4);
+        let active: Vec<usize> = (0..15).collect();
+        let mut beta = vec![0.0; 15];
+        let mut r = ds.y.clone();
+        cd_solve(&ds.x, Penalty::Lasso, 0.1, &active, &mut beta, &mut r, 1e-9, 10_000, 0)
+            .unwrap();
+        let fit = ds.x.matvec(&beta);
+        for i in 0..40 {
+            assert!((r[i] - (ds.y[i] - fit[i])).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn nonconvergence_is_reported() {
+        let ds = DataSpec::synthetic(30, 10, 3).generate(5);
+        let active: Vec<usize> = (0..10).collect();
+        let mut beta = vec![0.0; 10];
+        let mut r = ds.y.clone();
+        let err = cd_solve(&ds.x, Penalty::Lasso, 1e-4, &active, &mut beta, &mut r, 0.0, 3, 7)
+            .unwrap_err();
+        match err {
+            HssrError::NoConvergence { lambda_index, max_iter, .. } => {
+                assert_eq!(lambda_index, 7);
+                assert_eq!(max_iter, 3);
+            }
+            other => panic!("wrong error {other}"),
+        }
+    }
+
+    #[test]
+    fn empty_active_set_is_noop() {
+        let ds = DataSpec::synthetic(20, 5, 2).generate(6);
+        let mut beta = vec![0.0; 5];
+        let mut r = ds.y.clone();
+        let st =
+            cd_solve(&ds.x, Penalty::Lasso, 0.5, &[], &mut beta, &mut r, 1e-9, 10, 0).unwrap();
+        assert_eq!(st.cycles, 0);
+        assert_eq!(r, ds.y);
+    }
+}

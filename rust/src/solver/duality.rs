@@ -1,0 +1,135 @@
+//! Duality-gap certification for lasso solutions.
+//!
+//! The dual of problem (1) (paper eq. (6)–(7)) is
+//!
+//! ```text
+//! max_θ  ‖y‖²/(2n) − nλ²/2 · ‖θ − y/(nλ)‖²   s.t. |x_jᵀθ| ≤ 1 ∀j.
+//! ```
+//!
+//! Given any primal iterate `β` with residual `r = y − Xβ`, the scaled
+//! residual `θ = r/(nλ) / max(1, ‖Xᵀr‖∞/(nλ))` is dual-feasible, so
+//! `gap(β) = P(β) − D(θ) ≥ 0` with equality iff `β` is optimal. The gap is
+//! the rigorous optimality certificate behind every safe rule (it bounds
+//! `‖θ̂ − θ‖`), and a useful end-user diagnostic for convergence
+//! tolerances.
+
+use crate::linalg::{blocked, ops, DenseMatrix};
+
+/// Primal objective, dual objective, and gap at a primal point.
+#[derive(Clone, Copy, Debug)]
+pub struct GapReport {
+    /// Primal objective `‖r‖²/2n + λα‖β‖₁ + λ(1−α)/2‖β‖²`.
+    pub primal: f64,
+    /// Dual objective at the scaled-residual feasible point.
+    pub dual: f64,
+    /// `primal − dual ≥ 0` (up to float noise).
+    pub gap: f64,
+    /// The feasibility scaling applied (1 when `r/(nλ)` already feasible).
+    pub scaling: f64,
+}
+
+/// Compute the duality gap of `(β, r)` at `lam` for the **lasso**
+/// (`Penalty::Lasso`; the elastic net has an analogous augmented-design gap
+/// obtained by calling this with the augmented problem).
+pub fn lasso_gap(
+    x: &DenseMatrix,
+    y: &[f64],
+    beta: &[f64],
+    r: &[f64],
+    lam: f64,
+) -> GapReport {
+    let n = x.nrows() as f64;
+    let z = blocked::scan_all_vec(x, r); // Xᵀr/n
+    let infeas = ops::inf_norm(&z) / lam;
+    let scaling = infeas.max(1.0);
+    // θ = r/(nλ·scaling);  D(θ) = ‖y‖²/2n − nλ²/2·‖θ − y/(nλ)‖²
+    let mut dist_sq = 0.0;
+    for i in 0..y.len() {
+        let theta = r[i] / (n * lam * scaling);
+        let d = theta - y[i] / (n * lam);
+        dist_sq += d * d;
+    }
+    let dual = ops::nrm2_sq(y) / (2.0 * n) - n * lam * lam / 2.0 * dist_sq;
+    let primal = ops::nrm2_sq(r) / (2.0 * n)
+        + lam * beta.iter().map(|b| b.abs()).sum::<f64>();
+    GapReport { primal, dual, gap: primal - dual, scaling }
+}
+
+/// Convenience: gap at a fitted path point.
+pub fn gap_at(
+    x: &DenseMatrix,
+    y: &[f64],
+    fit: &crate::solver::path::PathFit,
+    k: usize,
+) -> GapReport {
+    let beta = fit.beta_dense(k);
+    let xb = x.matvec(&beta);
+    let r: Vec<f64> = y.iter().zip(&xb).map(|(yi, f)| yi - f).collect();
+    lasso_gap(x, y, &beta, &r, fit.lambdas[k])
+}
+
+/// A β is `eps`-certified if its gap is below `eps · max(1, |primal|)`.
+pub fn certified(report: &GapReport, eps: f64) -> bool {
+    report.gap <= eps * report.primal.abs().max(1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DataSpec;
+    use crate::screening::RuleKind;
+    use crate::solver::path::{fit_lasso_path, PathConfig};
+
+    #[test]
+    fn gap_small_at_solutions_along_path() {
+        let ds = DataSpec::gene_like(80, 150).generate(1);
+        let fit = fit_lasso_path(
+            &ds,
+            &PathConfig {
+                rule: RuleKind::SsrBedpp,
+                n_lambda: 20,
+                tol: 1e-10,
+                ..PathConfig::default()
+            },
+        )
+        .unwrap();
+        for k in 0..fit.lambdas.len() {
+            let rep = gap_at(&ds.x, &ds.y, &fit, k);
+            assert!(rep.gap >= -1e-9, "negative gap at λ#{k}: {}", rep.gap);
+            assert!(certified(&rep, 1e-6), "λ#{k}: gap {} primal {}", rep.gap, rep.primal);
+        }
+    }
+
+    #[test]
+    fn gap_positive_for_suboptimal_point() {
+        let ds = DataSpec::synthetic(60, 40, 4).generate(2);
+        let lam = 0.3;
+        let beta = vec![0.0; 40]; // β = 0 is not optimal at small λ
+        let r = ds.y.clone();
+        let rep = lasso_gap(&ds.x, &ds.y, &beta, &r, lam);
+        // unless λ ≥ λmax, zero is suboptimal → positive gap
+        assert!(rep.gap > 1e-4, "gap {}", rep.gap);
+        assert!(rep.scaling > 1.0);
+    }
+
+    #[test]
+    fn weak_duality_holds_everywhere() {
+        use crate::prop::{check, PropConfig};
+        check(PropConfig { cases: 16, seed: 9 }, |rng, _| {
+            let ds = DataSpec::synthetic(40, 30, 3).generate(rng.next_u64());
+            // arbitrary (not optimal) primal point
+            let mut beta = vec![0.0; 30];
+            for _ in 0..5 {
+                beta[rng.below(30) as usize] = rng.normal() * 0.2;
+            }
+            let xb = ds.x.matvec(&beta);
+            let r: Vec<f64> = ds.y.iter().zip(&xb).map(|(y, f)| y - f).collect();
+            let lam = 0.05 + rng.uniform() * 0.5;
+            let rep = lasso_gap(&ds.x, &ds.y, &beta, &r, lam);
+            if rep.gap < -1e-9 {
+                return Err(format!("weak duality violated: gap = {}", rep.gap));
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,381 @@
+//! Pathwise group descent with screening — Algorithm 1 adapted to the group
+//! lasso (paper §4.2 and §5.2). Methods: Basic GD, AC, SSR, SEDPP, and
+//! SSR-BEDPP (Table 3).
+
+use std::time::Instant;
+
+use crate::data::GroupedDataset;
+use crate::error::{HssrError, Result};
+use crate::linalg::ops;
+use crate::runtime::{native::NativeEngine, ScanEngine};
+use crate::screening::group::{GroupBedpp, GroupSafeContext, GroupSafeRule, GroupSedpp};
+use crate::screening::{PrevSolution, RuleKind};
+use crate::solver::lambda::GridKind;
+use crate::solver::{gd, kkt};
+use crate::solver::path::LambdaMetrics;
+
+/// Configuration for a group-lasso path fit.
+#[derive(Clone, Debug)]
+pub struct GroupPathConfig {
+    /// Strategy — one of `BasicPcd` (reported as "Basic GD"), `ActiveCycling`,
+    /// `Ssr`, `Sedpp`, `SsrBedpp`.
+    pub rule: RuleKind,
+    /// Number of λ grid points.
+    pub n_lambda: usize,
+    /// Smallest λ as a fraction of λmax.
+    pub lambda_min_ratio: f64,
+    /// Grid spacing.
+    pub grid: GridKind,
+    /// Convergence tolerance.
+    pub tol: f64,
+    /// Max group-descent cycles per λ per round.
+    pub max_iter: usize,
+    /// Explicit grid override.
+    pub lambdas: Option<Vec<f64>>,
+}
+
+impl Default for GroupPathConfig {
+    fn default() -> Self {
+        GroupPathConfig {
+            rule: RuleKind::SsrBedpp,
+            n_lambda: 100,
+            lambda_min_ratio: 0.1,
+            grid: GridKind::Linear,
+            tol: 1e-7,
+            max_iter: 100_000,
+            lambdas: None,
+        }
+    }
+}
+
+/// Result of a group-lasso path fit. Metrics reuse [`LambdaMetrics`] with
+/// group counts in the set-size fields.
+#[derive(Clone, Debug)]
+pub struct GroupPathFit {
+    /// λ grid.
+    pub lambdas: Vec<f64>,
+    /// Sparse coefficients per λ (column index, value) — columns of the
+    /// *orthonormalized* design.
+    pub betas: Vec<Vec<(usize, f64)>>,
+    /// Per-λ instrumentation (group-level sizes).
+    pub metrics: Vec<LambdaMetrics>,
+    /// Total columns.
+    pub p: usize,
+    /// Number of groups.
+    pub num_groups: usize,
+    /// λmax.
+    pub lambda_max: f64,
+    /// Wall-clock seconds.
+    pub seconds: f64,
+    /// Strategy used.
+    pub rule: RuleKind,
+}
+
+impl GroupPathFit {
+    /// Dense coefficients at grid index `k`.
+    pub fn beta_dense(&self, k: usize) -> Vec<f64> {
+        let mut b = vec![0.0; self.p];
+        for &(j, v) in &self.betas[k] {
+            b[j] = v;
+        }
+        b
+    }
+
+    /// Number of active *groups* at grid index `k`.
+    pub fn active_groups_at(&self, k: usize, ds: &GroupedDataset) -> usize {
+        let b = self.beta_dense(k);
+        (0..ds.num_groups())
+            .filter(|&g| ds.layout.range(g).any(|j| b[j] != 0.0))
+            .count()
+    }
+
+    /// Total columns scanned over the path (screening + KKT).
+    pub fn total_cols_scanned(&self) -> u64 {
+        self.metrics.iter().map(|m| m.cols_scanned).sum()
+    }
+
+    /// Total group KKT checks over the path.
+    pub fn total_kkt_checks(&self) -> u64 {
+        self.metrics.iter().map(|m| m.kkt_checked as u64).sum()
+    }
+}
+
+/// Fit with the default native engine.
+pub fn fit_group_path(ds: &GroupedDataset, cfg: &GroupPathConfig) -> Result<GroupPathFit> {
+    fit_group_path_with_engine(ds, cfg, &NativeEngine::new())
+}
+
+/// Fit with an explicit scan engine.
+pub fn fit_group_path_with_engine(
+    ds: &GroupedDataset,
+    cfg: &GroupPathConfig,
+    engine: &dyn ScanEngine,
+) -> Result<GroupPathFit> {
+    let start = Instant::now();
+    let x = &ds.x;
+    let n = ds.n();
+    let p = ds.p();
+    let g_count = ds.num_groups();
+    let layout = &ds.layout;
+    let ctx = GroupSafeContext::build(x, &ds.y, layout);
+    let lambdas = match &cfg.lambdas {
+        Some(ls) => ls.clone(),
+        None => crate::solver::lambda::grid(
+            ctx.lambda_max,
+            cfg.lambda_min_ratio,
+            cfg.n_lambda,
+            cfg.grid,
+        ),
+    };
+    let mut safe_rule: Option<Box<dyn GroupSafeRule>> = match cfg.rule {
+        RuleKind::SsrBedpp => Some(Box::new(GroupBedpp::new())),
+        RuleKind::Sedpp => Some(Box::new(GroupSedpp::new())),
+        RuleKind::BasicPcd | RuleKind::ActiveCycling | RuleKind::Ssr => None,
+        other => {
+            return Err(HssrError::Config(format!(
+                "group lasso supports Basic GD/AC/SSR/SEDPP/SSR-BEDPP, not {other:?}"
+            )))
+        }
+    };
+    let uses_ssr = cfg.rule.uses_ssr();
+    // ---- path state ----
+    let mut beta = vec![0.0f64; p];
+    let mut r = ds.y.clone();
+    // znorm_g = ‖X_gᵀr/n‖ at the most recent residual it was computed at.
+    let mut znorm = vec![0.0f64; g_count];
+    let mut znorm_valid = vec![false; g_count];
+    // initial residual = y: znorm from ctx.group_xty_sq
+    for g in 0..g_count {
+        znorm[g] = ctx.group_xty_sq[g].sqrt() / n as f64;
+        znorm_valid[g] = true;
+    }
+    let mut flag_off = safe_rule.is_none();
+    let mut betas = Vec::with_capacity(lambdas.len());
+    let mut metrics = Vec::with_capacity(lambdas.len());
+
+    // Group-subset znorm refresh helper (counts column reads).
+    let refresh = |groups: &[usize],
+                   r: &[f64],
+                   znorm: &mut [f64],
+                   znorm_valid: &mut [bool],
+                   cols: &mut u64,
+                   engine: &dyn ScanEngine|
+     -> Result<()> {
+        for &g in groups {
+            let range = layout.range(g);
+            let idx: Vec<usize> = range.collect();
+            let mut out = vec![0.0; idx.len()];
+            engine.scan_subset(x, r, &idx, &mut out)?;
+            znorm[g] = ops::nrm2(&out);
+            znorm_valid[g] = true;
+            *cols += idx.len() as u64;
+        }
+        Ok(())
+    };
+
+    let mut lam_prev = ctx.lambda_max;
+    for (k, &lam) in lambdas.iter().enumerate() {
+        let mut m = LambdaMetrics { lambda: lam, ..Default::default() };
+        // ---- safe screening (group level) ----
+        let mut survive = vec![true; g_count];
+        if !flag_off {
+            if let Some(rule) = safe_rule.as_mut() {
+                let prev = PrevSolution { lambda: lam_prev, r: &r };
+                let discarded = rule.screen(x, &ctx, &prev, lam, &mut survive);
+                if discarded == 0 || rule.dead() {
+                    flag_off = true;
+                    survive.iter_mut().for_each(|s| *s = true);
+                }
+            }
+        }
+        m.safe_size = survive.iter().filter(|&&s| s).count();
+
+        // refresh znorm over newly-entered safe groups
+        if uses_ssr {
+            let stale: Vec<usize> =
+                (0..g_count).filter(|&g| survive[g] && !znorm_valid[g]).collect();
+            refresh(&stale, &r, &mut znorm, &mut znorm_valid, &mut m.cols_scanned, engine)?;
+        }
+
+        // ---- strong set (groups) ----
+        let mut strong: Vec<usize> = match cfg.rule {
+            RuleKind::BasicPcd => (0..g_count).collect(),
+            RuleKind::ActiveCycling => (0..g_count)
+                .filter(|&g| layout.range(g).any(|j| beta[j] != 0.0))
+                .collect(),
+            RuleKind::Sedpp => (0..g_count).filter(|&g| survive[g]).collect(),
+            _ => crate::screening::ssr::group_strong_set(
+                lam,
+                lam_prev,
+                &znorm,
+                &layout.sizes,
+                &survive,
+            ),
+        };
+        let mut in_strong = vec![false; g_count];
+        for &g in &strong {
+            in_strong[g] = true;
+        }
+
+        // ---- solve + KKT loop ----
+        loop {
+            let stats = gd::gd_solve(
+                x,
+                lam,
+                &strong,
+                &layout.starts,
+                &layout.sizes,
+                &mut beta,
+                &mut r,
+                cfg.tol,
+                cfg.max_iter,
+                k,
+            )?;
+            m.cd_cycles += stats.cycles;
+            m.coord_updates += stats.coord_updates;
+            if stats.cycles > 0 {
+                znorm_valid.iter_mut().for_each(|v| *v = false);
+            }
+            let check: Vec<usize> = match cfg.rule {
+                RuleKind::BasicPcd | RuleKind::Sedpp => Vec::new(),
+                RuleKind::ActiveCycling | RuleKind::Ssr => {
+                    (0..g_count).filter(|&g| !in_strong[g]).collect()
+                }
+                _ => (0..g_count).filter(|&g| survive[g] && !in_strong[g]).collect(),
+            };
+            if check.is_empty() {
+                break;
+            }
+            refresh(&check, &r, &mut znorm, &mut znorm_valid, &mut m.cols_scanned, engine)?;
+            m.kkt_checked += check.len();
+            let zsub: Vec<f64> = check.iter().map(|&g| znorm[g]).collect();
+            let viols = kkt::group_violations(lam, &check, &zsub, &layout.sizes);
+            if viols.is_empty() {
+                break;
+            }
+            m.violations += viols.len();
+            for &g in &viols {
+                in_strong[g] = true;
+            }
+            strong.extend(viols);
+        }
+
+        if uses_ssr && !strong.is_empty() {
+            refresh(&strong, &r, &mut znorm, &mut znorm_valid, &mut m.cols_scanned, engine)?;
+        }
+
+        m.strong_size = strong.len();
+        let sparse: Vec<(usize, f64)> =
+            (0..p).filter(|&j| beta[j] != 0.0).map(|j| (j, beta[j])).collect();
+        m.nonzero = sparse.len();
+        // group-lasso objective
+        let mut pen = 0.0;
+        for g in 0..g_count {
+            let ss: f64 = layout.range(g).map(|j| beta[j] * beta[j]).sum();
+            pen += (layout.sizes[g] as f64).sqrt() * ss.sqrt();
+        }
+        m.objective = ops::nrm2_sq(&r) / (2.0 * n as f64) + lam * pen;
+        betas.push(sparse);
+        metrics.push(m);
+        lam_prev = lam;
+    }
+    Ok(GroupPathFit {
+        lambdas,
+        betas,
+        metrics,
+        p,
+        num_groups: g_count,
+        lambda_max: ctx.lambda_max,
+        seconds: start.elapsed().as_secs_f64(),
+        rule: cfg.rule,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::generate_grouped;
+
+    fn small_cfg(rule: RuleKind) -> GroupPathConfig {
+        GroupPathConfig { rule, n_lambda: 25, tol: 1e-9, ..GroupPathConfig::default() }
+    }
+
+    fn max_beta_diff(a: &GroupPathFit, b: &GroupPathFit) -> f64 {
+        let mut worst = 0.0f64;
+        for k in 0..a.lambdas.len() {
+            let da = a.beta_dense(k);
+            let db = b.beta_dense(k);
+            for j in 0..da.len() {
+                worst = worst.max((da[j] - db[j]).abs());
+            }
+        }
+        worst
+    }
+
+    /// Theorem 3.1 for the group lasso: all strategies agree.
+    #[test]
+    fn all_rules_agree() {
+        let ds = generate_grouped(90, 15, 4, 4, 11);
+        let base = fit_group_path(&ds, &small_cfg(RuleKind::BasicPcd)).unwrap();
+        for rule in [
+            RuleKind::ActiveCycling,
+            RuleKind::Ssr,
+            RuleKind::Sedpp,
+            RuleKind::SsrBedpp,
+        ] {
+            let fit = fit_group_path(&ds, &small_cfg(rule)).unwrap();
+            let d = max_beta_diff(&base, &fit);
+            assert!(d < 1e-5, "{rule:?} deviates by {d}");
+        }
+    }
+
+    #[test]
+    fn unsupported_rules_rejected() {
+        let ds = generate_grouped(30, 4, 3, 1, 1);
+        let err = fit_group_path(&ds, &small_cfg(RuleKind::SsrDome)).unwrap_err();
+        assert!(matches!(err, HssrError::Config(_)));
+    }
+
+    #[test]
+    fn zero_solution_at_lambda_max() {
+        let ds = generate_grouped(60, 8, 3, 2, 12);
+        let fit = fit_group_path(&ds, &small_cfg(RuleKind::SsrBedpp)).unwrap();
+        assert_eq!(fit.betas[0].len(), 0);
+        assert!(fit.betas.last().unwrap().len() > 0);
+    }
+
+    #[test]
+    fn group_kkt_holds_along_path() {
+        let ds = generate_grouped(80, 10, 3, 3, 13);
+        let fit = fit_group_path(&ds, &small_cfg(RuleKind::SsrBedpp)).unwrap();
+        let n = ds.n() as f64;
+        for (k, &lam) in fit.lambdas.iter().enumerate().step_by(6) {
+            let b = fit.beta_dense(k);
+            let f = ds.x.matvec(&b);
+            let r: Vec<f64> = ds.y.iter().zip(&f).map(|(y, v)| y - v).collect();
+            for g in 0..ds.num_groups() {
+                let zn = {
+                    let mut ss = 0.0;
+                    for j in ds.layout.range(g) {
+                        let d = ops::dot(ds.x.col(j), &r) / n;
+                        ss += d * d;
+                    }
+                    ss.sqrt()
+                };
+                let active = ds.layout.range(g).any(|j| b[j] != 0.0);
+                let w_sqrt = (ds.layout.sizes[g] as f64).sqrt();
+                if !active {
+                    assert!(zn <= lam * w_sqrt * (1.0 + 1e-3) + 1e-8, "λ#{k} group {g}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn hssr_scans_fewer_group_columns_than_ssr() {
+        let ds = generate_grouped(80, 60, 5, 5, 14);
+        let ssr = fit_group_path(&ds, &small_cfg(RuleKind::Ssr)).unwrap();
+        let hssr = fit_group_path(&ds, &small_cfg(RuleKind::SsrBedpp)).unwrap();
+        assert!(hssr.total_cols_scanned() <= ssr.total_cols_scanned());
+    }
+}

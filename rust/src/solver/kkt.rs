@@ -1,0 +1,88 @@
+//! Post-convergence KKT checking — the step that makes strong-rule
+//! screening exact (paper §2.1 and Algorithm 1 line 15).
+//!
+//! After the inner solver converges over the strong set `H`, every feature
+//! in `S \ H` must be verified against the stationarity conditions (4)
+//! (lasso), their elastic-net analogue, or (21) (group lasso). Violators
+//! are added to `H` and the problem is re-solved.
+
+use crate::solver::Penalty;
+
+/// Relative slack applied to the KKT threshold to absorb the inner solver's
+/// convergence tolerance (biglasso behaves identically).
+pub const KKT_SLACK: f64 = 1e-7;
+
+/// Scalar KKT test for an *inactive* feature: violation iff
+/// `|z_j| > αλ(1 + slack)` where `z_j = x_jᵀr/n`.
+#[inline]
+pub fn violates(penalty: Penalty, lam: f64, z_j: f64) -> bool {
+    z_j.abs() > penalty.alpha() * lam * (1.0 + KKT_SLACK)
+}
+
+/// Collect violating feature indices among `checked` (parallel slices of
+/// indices and their freshly computed `z` values).
+pub fn violations(penalty: Penalty, lam: f64, checked: &[usize], z: &[f64]) -> Vec<usize> {
+    debug_assert_eq!(checked.len(), z.len());
+    checked
+        .iter()
+        .zip(z)
+        .filter(|&(_, &zj)| violates(penalty, lam, zj))
+        .map(|(&j, _)| j)
+        .collect()
+}
+
+/// Group KKT test for an inactive group: violation iff
+/// `‖X_gᵀr/n‖ > λ√W_g(1 + slack)`.
+#[inline]
+pub fn group_violates(lam: f64, w_g: usize, znorm_g: f64) -> bool {
+    znorm_g > lam * (w_g as f64).sqrt() * (1.0 + KKT_SLACK)
+}
+
+/// Collect violating group indices.
+pub fn group_violations(
+    lam: f64,
+    checked: &[usize],
+    znorm: &[f64],
+    sizes: &[usize],
+) -> Vec<usize> {
+    debug_assert_eq!(checked.len(), znorm.len());
+    checked
+        .iter()
+        .zip(znorm)
+        .filter(|&(&g, &zn)| group_violates(lam, sizes[g], zn))
+        .map(|(&g, _)| g)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_violation_boundary() {
+        assert!(!violates(Penalty::Lasso, 0.5, 0.5));
+        assert!(violates(Penalty::Lasso, 0.5, 0.5001));
+        assert!(violates(Penalty::Lasso, 0.5, -0.6));
+        // elastic net scales threshold by α
+        let en = Penalty::ElasticNet { alpha: 0.5 };
+        assert!(violates(en, 0.5, 0.3));
+        assert!(!violates(en, 0.5, 0.2));
+    }
+
+    #[test]
+    fn violation_collection() {
+        let checked = vec![3usize, 9, 12];
+        let z = vec![0.1, 0.9, -0.8];
+        let v = violations(Penalty::Lasso, 0.5, &checked, &z);
+        assert_eq!(v, vec![9, 12]);
+    }
+
+    #[test]
+    fn group_violation_scaling() {
+        // W=4 → threshold 2λ
+        assert!(!group_violates(0.3, 4, 0.6));
+        assert!(group_violates(0.3, 4, 0.61));
+        let v = group_violations(0.3, &[0, 1], &[0.61, 0.1], &[4, 4]);
+        assert_eq!(v, vec![0]);
+    }
+}

@@ -1,0 +1,67 @@
+//! λ-grid construction.
+//!
+//! The paper's experiments use **100 values equally spaced on the λ/λmax
+//! scale from 0.1 to 1** (§5); glmnet-style log-spaced grids are also
+//! provided for users.
+
+/// Grid spacing.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GridKind {
+    /// Equally spaced on λ/λmax (the paper's protocol).
+    Linear,
+    /// Equally spaced on log λ (glmnet default).
+    Log,
+}
+
+/// Build a decreasing grid of `k` values from `lambda_max` down to
+/// `ratio_min · lambda_max` (inclusive at both ends).
+pub fn grid(lambda_max: f64, ratio_min: f64, k: usize, kind: GridKind) -> Vec<f64> {
+    assert!(k >= 2, "grid needs at least 2 points");
+    assert!(lambda_max > 0.0 && ratio_min > 0.0 && ratio_min < 1.0);
+    match kind {
+        GridKind::Linear => (0..k)
+            .map(|i| {
+                let f = 1.0 - (1.0 - ratio_min) * i as f64 / (k - 1) as f64;
+                lambda_max * f
+            })
+            .collect(),
+        GridKind::Log => {
+            let lmin = (ratio_min * lambda_max).ln();
+            let lmax = lambda_max.ln();
+            (0..k)
+                .map(|i| (lmax + (lmin - lmax) * i as f64 / (k - 1) as f64).exp())
+                .collect()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linear_grid_endpoints_and_monotone() {
+        let g = grid(2.0, 0.1, 100, GridKind::Linear);
+        assert_eq!(g.len(), 100);
+        assert!((g[0] - 2.0).abs() < 1e-12);
+        assert!((g[99] - 0.2).abs() < 1e-12);
+        for w in g.windows(2) {
+            assert!(w[0] > w[1]);
+        }
+        // equal spacing
+        let d0 = g[0] - g[1];
+        let d50 = g[50] - g[51];
+        assert!((d0 - d50).abs() < 1e-12);
+    }
+
+    #[test]
+    fn log_grid_endpoints_and_ratio() {
+        let g = grid(1.0, 0.01, 5, GridKind::Log);
+        assert!((g[0] - 1.0).abs() < 1e-12);
+        assert!((g[4] - 0.01).abs() < 1e-12);
+        // constant ratio
+        let r0 = g[1] / g[0];
+        let r3 = g[4] / g[3];
+        assert!((r0 - r3).abs() < 1e-12);
+    }
+}

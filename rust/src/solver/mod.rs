@@ -1,0 +1,74 @@
+//! Lasso-type solvers: coordinate descent inner loops, blockwise group
+//! descent, and the pathwise orchestration of Algorithm 1.
+
+pub mod cd;
+pub mod duality;
+pub mod gd;
+pub mod group_path;
+pub mod kkt;
+pub mod lambda;
+pub mod logistic;
+pub mod path;
+
+/// The penalty family. `Lasso` is `ElasticNet { alpha: 1.0 }` but kept as a
+/// distinct variant so the common case avoids the enet bookkeeping.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Penalty {
+    /// `λ‖β‖₁` (problem (1) of the paper).
+    Lasso,
+    /// `αλ‖β‖₁ + (1−α)λ/2·‖β‖²` (problem (13)); `0 < alpha <= 1`.
+    ElasticNet {
+        /// ℓ1 mixing weight α.
+        alpha: f64,
+    },
+}
+
+impl Penalty {
+    /// The ℓ1 mixing weight α (1 for the lasso).
+    #[inline]
+    pub fn alpha(&self) -> f64 {
+        match *self {
+            Penalty::Lasso => 1.0,
+            Penalty::ElasticNet { alpha } => alpha,
+        }
+    }
+
+    /// ℓ2 weight `(1 − α)` (0 for the lasso).
+    #[inline]
+    pub fn l2_weight(&self) -> f64 {
+        1.0 - self.alpha()
+    }
+
+    /// Validate α ∈ (0, 1].
+    pub fn validate(&self) -> crate::error::Result<()> {
+        let a = self.alpha();
+        if a <= 0.0 || a > 1.0 || !a.is_finite() {
+            return Err(crate::error::HssrError::Config(format!(
+                "elastic net alpha must be in (0, 1], got {a}"
+            )));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn penalty_weights() {
+        assert_eq!(Penalty::Lasso.alpha(), 1.0);
+        assert_eq!(Penalty::Lasso.l2_weight(), 0.0);
+        let en = Penalty::ElasticNet { alpha: 0.75 };
+        assert_eq!(en.alpha(), 0.75);
+        assert!((en.l2_weight() - 0.25).abs() < 1e-15);
+    }
+
+    #[test]
+    fn penalty_validation() {
+        assert!(Penalty::Lasso.validate().is_ok());
+        assert!(Penalty::ElasticNet { alpha: 0.5 }.validate().is_ok());
+        assert!(Penalty::ElasticNet { alpha: 0.0 }.validate().is_err());
+        assert!(Penalty::ElasticNet { alpha: 1.5 }.validate().is_err());
+    }
+}

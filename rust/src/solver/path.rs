@@ -1,0 +1,449 @@
+//! Pathwise coordinate descent with hybrid safe-strong screening —
+//! **Algorithm 1** of the paper, generalized over all the "Method" rows of
+//! its tables:
+//!
+//! | [`RuleKind`]        | safe set `S`         | optimizer set `H`       | KKT check over |
+//! |---------------------|----------------------|-------------------------|----------------|
+//! | `BasicPcd`          | all                  | all                     | — (exact)      |
+//! | `ActiveCycling`     | all                  | ever-active set         | all \ H        |
+//! | `Ssr`               | all                  | SSR strong set          | all \ H        |
+//! | `Sedpp`             | SEDPP set            | `S` (safe ⇒ no check)   | —              |
+//! | `SsrBedpp`          | BEDPP set            | SSR ∩ S                 | `S \ H`        |
+//! | `SsrDome`           | Dome set             | SSR ∩ S                 | `S \ H`        |
+//! | `SsrBedppSedpp`     | BEDPP→frozen-SEDPP   | SSR ∩ S                 | `S \ H`        |
+//!
+//! The `z_j = x_jᵀr/n` values are maintained lazily exactly as Algorithm 1
+//! prescribes: screening at `λ_k` reuses the values computed during KKT
+//! checking at `λ_{k−1}`; only features newly entering the safe set are
+//! refreshed (line 4). The safe rule is switched off permanently once it
+//! stops discarding (`Flag`, lines 6–8).
+
+use std::time::Instant;
+
+use crate::data::Dataset;
+use crate::error::Result;
+use crate::linalg::ops;
+use crate::runtime::{native::NativeEngine, ScanEngine};
+use crate::screening::{make_safe_rule, ssr, PrevSolution, RuleKind, SafeContext};
+use crate::solver::{cd, kkt, lambda::GridKind, Penalty};
+
+/// Configuration for a pathwise fit.
+#[derive(Clone, Debug)]
+pub struct PathConfig {
+    /// Screening strategy (paper "Method").
+    pub rule: RuleKind,
+    /// Penalty family.
+    pub penalty: Penalty,
+    /// Number of λ grid points (paper: 100).
+    pub n_lambda: usize,
+    /// Smallest λ as a fraction of λmax (paper: 0.1).
+    pub lambda_min_ratio: f64,
+    /// Grid spacing (paper: linear on λ/λmax).
+    pub grid: GridKind,
+    /// Convergence tolerance on max |Δβ| per cycle.
+    pub tol: f64,
+    /// Maximum CD cycles per λ (per violation round).
+    pub max_iter: usize,
+    /// Explicit λ grid (overrides `n_lambda`/`lambda_min_ratio`).
+    pub lambdas: Option<Vec<f64>>,
+}
+
+impl Default for PathConfig {
+    fn default() -> Self {
+        PathConfig {
+            rule: RuleKind::SsrBedpp,
+            penalty: Penalty::Lasso,
+            n_lambda: 100,
+            lambda_min_ratio: 0.1,
+            grid: GridKind::Linear,
+            tol: 1e-7,
+            max_iter: 100_000,
+            lambdas: None,
+        }
+    }
+}
+
+/// Per-λ instrumentation (feeds Figures 1/3 and the ablation benches).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LambdaMetrics {
+    /// λ value.
+    pub lambda: f64,
+    /// |S| — features surviving safe screening (= p when no safe rule).
+    pub safe_size: usize,
+    /// |H| — features handed to the optimizer (after violation rounds).
+    pub strong_size: usize,
+    /// Features KKT-checked after convergence.
+    pub kkt_checked: usize,
+    /// KKT violations detected (features re-added).
+    pub violations: usize,
+    /// CD cycles spent.
+    pub cd_cycles: usize,
+    /// Individual coordinate updates.
+    pub coord_updates: u64,
+    /// Columns read by screening/KKT scans at this λ.
+    pub cols_scanned: u64,
+    /// Nonzero coefficients at the solution.
+    pub nonzero: usize,
+    /// Objective value at the solution.
+    pub objective: f64,
+}
+
+/// Result of a pathwise fit.
+#[derive(Clone, Debug)]
+pub struct PathFit {
+    /// The λ grid actually used (decreasing).
+    pub lambdas: Vec<f64>,
+    /// Sparse coefficient vectors, one per λ: `(feature, value)` pairs.
+    pub betas: Vec<Vec<(usize, f64)>>,
+    /// Per-λ instrumentation.
+    pub metrics: Vec<LambdaMetrics>,
+    /// Number of features.
+    pub p: usize,
+    /// λmax computed from the data.
+    pub lambda_max: f64,
+    /// Wall-clock seconds for the whole path.
+    pub seconds: f64,
+    /// Strategy used.
+    pub rule: RuleKind,
+}
+
+impl PathFit {
+    /// Number of nonzero coefficients at grid index `k`.
+    pub fn nonzero_at(&self, k: usize) -> usize {
+        self.betas[k].len()
+    }
+
+    /// Densify the coefficient vector at grid index `k`.
+    pub fn beta_dense(&self, k: usize) -> Vec<f64> {
+        let mut b = vec![0.0; self.p];
+        for &(j, v) in &self.betas[k] {
+            b[j] = v;
+        }
+        b
+    }
+
+    /// Total columns scanned over the whole path (memory-traffic proxy,
+    /// §3.2.3).
+    pub fn total_cols_scanned(&self) -> u64 {
+        self.metrics.iter().map(|m| m.cols_scanned).sum()
+    }
+
+    /// Total KKT checks performed over the path.
+    pub fn total_kkt_checks(&self) -> u64 {
+        self.metrics.iter().map(|m| m.kkt_checked as u64).sum()
+    }
+
+    /// Total violations over the path.
+    pub fn total_violations(&self) -> u64 {
+        self.metrics.iter().map(|m| m.violations as u64).sum()
+    }
+}
+
+/// Fit the full path with the default (native) scan engine.
+pub fn fit_lasso_path(ds: &Dataset, cfg: &PathConfig) -> Result<PathFit> {
+    fit_lasso_path_with_engine(ds, cfg, &NativeEngine::new())
+}
+
+/// Fit the full path with an explicit scan engine (native or PJRT).
+pub fn fit_lasso_path_with_engine(
+    ds: &Dataset,
+    cfg: &PathConfig,
+    engine: &dyn ScanEngine,
+) -> Result<PathFit> {
+    cfg.penalty.validate()?;
+    let start = Instant::now();
+    let x = &ds.x;
+    let n = ds.n();
+    let p = ds.p();
+    let penalty = cfg.penalty;
+    let ctx = SafeContext::build(x, &ds.y, penalty, cfg.rule.needs_star());
+    let lambdas = match &cfg.lambdas {
+        Some(ls) => ls.clone(),
+        None => crate::solver::lambda::grid(
+            ctx.lambda_max,
+            cfg.lambda_min_ratio,
+            cfg.n_lambda,
+            cfg.grid,
+        ),
+    };
+    // --- mutable path state ---
+    let mut beta = vec![0.0f64; p];
+    let mut r = ds.y.clone();
+    // z_j = x_jᵀr/n at the most recent residual where it was computed.
+    let mut z: Vec<f64> = ctx.xty.iter().map(|v| v / n as f64).collect();
+    let mut z_valid = vec![true; p];
+    let mut safe_rule = make_safe_rule(cfg.rule);
+    let mut flag_off = safe_rule.is_none(); // Algorithm 1 `Flag`
+    let uses_ssr = cfg.rule.uses_ssr();
+    let mut betas = Vec::with_capacity(lambdas.len());
+    let mut metrics = Vec::with_capacity(lambdas.len());
+    let mut scratch = vec![0.0f64; p];
+
+    let mut lam_prev = ctx.lambda_max;
+    for (k, &lam) in lambdas.iter().enumerate() {
+        let mut m = LambdaMetrics { lambda: lam, ..Default::default() };
+        // ---- safe screening (Algorithm 1 lines 2–9) ----
+        let mut survive = vec![true; p];
+        if !flag_off {
+            if let Some(rule) = safe_rule.as_mut() {
+                let prev = PrevSolution { lambda: lam_prev, r: &r };
+                let discarded = rule.screen(x, &ctx, &prev, lam, &mut survive);
+                if discarded == 0 || rule.dead() {
+                    flag_off = true; // |S| = p ⇒ Flag ← TRUE
+                    survive.iter_mut().for_each(|s| *s = true);
+                }
+            }
+        }
+        m.safe_size = survive.iter().filter(|&&s| s).count();
+
+        // ---- line 4: refresh z over newly-entered safe features ----
+        if uses_ssr {
+            let stale: Vec<usize> =
+                (0..p).filter(|&j| survive[j] && !z_valid[j]).collect();
+            if !stale.is_empty() {
+                engine.scan_subset(x, &r, &stale, &mut scratch[..stale.len()])?;
+                for (s, &j) in stale.iter().enumerate() {
+                    z[j] = scratch[s];
+                    z_valid[j] = true;
+                }
+                m.cols_scanned += stale.len() as u64;
+            }
+        }
+
+        // ---- strong / optimizer set (line 10) ----
+        let mut strong: Vec<usize> = match cfg.rule {
+            RuleKind::BasicPcd => (0..p).collect(),
+            RuleKind::ActiveCycling => {
+                (0..p).filter(|&j| beta[j] != 0.0).collect()
+            }
+            RuleKind::Sedpp => (0..p).filter(|&j| survive[j]).collect(),
+            _ => ssr::strong_set(penalty, lam, lam_prev, &z, &survive),
+        };
+        let mut in_strong = vec![false; p];
+        for &j in &strong {
+            in_strong[j] = true;
+        }
+
+        // ---- solve + KKT loop (lines 11–18) ----
+        loop {
+            let stats =
+                cd::cd_solve(x, penalty, lam, &strong, &mut beta, &mut r, cfg.tol, cfg.max_iter, k)?;
+            m.cd_cycles += stats.cycles;
+            m.coord_updates += stats.coord_updates;
+            if stats.cycles > 0 {
+                z_valid.iter_mut().for_each(|v| *v = false);
+            }
+            // KKT check set (line 14–15).
+            let check: Vec<usize> = match cfg.rule {
+                RuleKind::BasicPcd | RuleKind::Sedpp => Vec::new(),
+                RuleKind::ActiveCycling | RuleKind::Ssr => {
+                    (0..p).filter(|&j| !in_strong[j]).collect()
+                }
+                _ => (0..p).filter(|&j| survive[j] && !in_strong[j]).collect(),
+            };
+            if check.is_empty() {
+                break;
+            }
+            engine.scan_subset(x, &r, &check, &mut scratch[..check.len()])?;
+            for (s, &j) in check.iter().enumerate() {
+                z[j] = scratch[s];
+                z_valid[j] = true;
+            }
+            m.cols_scanned += check.len() as u64;
+            m.kkt_checked += check.len();
+            let viols = kkt::violations(penalty, lam, &check, &scratch[..check.len()]);
+            if viols.is_empty() {
+                break;
+            }
+            m.violations += viols.len();
+            for &j in &viols {
+                in_strong[j] = true;
+            }
+            strong.extend(viols);
+        }
+
+        // Refresh z over the strong set so the next SSR screening sees
+        // correlations at the final residual.
+        if uses_ssr && !strong.is_empty() {
+            engine.scan_subset(x, &r, &strong, &mut scratch[..strong.len()])?;
+            for (s, &j) in strong.iter().enumerate() {
+                z[j] = scratch[s];
+                z_valid[j] = true;
+            }
+            m.cols_scanned += strong.len() as u64;
+        }
+
+        m.strong_size = strong.len();
+        let sparse: Vec<(usize, f64)> =
+            (0..p).filter(|&j| beta[j] != 0.0).map(|j| (j, beta[j])).collect();
+        m.nonzero = sparse.len();
+        m.objective = objective(&r, &beta, penalty, lam, n);
+        betas.push(sparse);
+        metrics.push(m);
+        lam_prev = lam;
+    }
+    Ok(PathFit {
+        lambdas,
+        betas,
+        metrics,
+        p,
+        lambda_max: ctx.lambda_max,
+        seconds: start.elapsed().as_secs_f64(),
+        rule: cfg.rule,
+    })
+}
+
+/// Elastic-net objective `‖r‖²/(2n) + αλ‖β‖₁ + (1−α)λ/2·‖β‖²`.
+pub fn objective(r: &[f64], beta: &[f64], penalty: Penalty, lam: f64, n: usize) -> f64 {
+    let l1: f64 = beta.iter().map(|b| b.abs()).sum();
+    let l2: f64 = beta.iter().map(|b| b * b).sum();
+    ops::nrm2_sq(r) / (2.0 * n as f64)
+        + penalty.alpha() * lam * l1
+        + penalty.l2_weight() * lam * 0.5 * l2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DataSpec;
+
+    fn small_cfg(rule: RuleKind) -> PathConfig {
+        PathConfig { rule, n_lambda: 30, tol: 1e-9, ..PathConfig::default() }
+    }
+
+    fn max_beta_diff(a: &PathFit, b: &PathFit) -> f64 {
+        let mut worst = 0.0f64;
+        for k in 0..a.lambdas.len() {
+            let da = a.beta_dense(k);
+            let db = b.beta_dense(k);
+            for j in 0..da.len() {
+                worst = worst.max((da[j] - db[j]).abs());
+            }
+        }
+        worst
+    }
+
+    /// Theorem 3.1: every strategy converges to the same solution path.
+    #[test]
+    fn all_rules_agree_on_solution() {
+        let ds = DataSpec::synthetic(100, 60, 8).generate(42);
+        let baseline = fit_lasso_path(&ds, &small_cfg(RuleKind::BasicPcd)).unwrap();
+        for rule in [
+            RuleKind::ActiveCycling,
+            RuleKind::Ssr,
+            RuleKind::Sedpp,
+            RuleKind::SsrBedpp,
+            RuleKind::SsrDome,
+            RuleKind::SsrBedppSedpp,
+        ] {
+            let fit = fit_lasso_path(&ds, &small_cfg(rule)).unwrap();
+            let d = max_beta_diff(&baseline, &fit);
+            assert!(d < 1e-5, "{:?} deviates from Basic PCD by {d}", rule);
+        }
+    }
+
+    #[test]
+    fn first_lambda_gives_zero_solution() {
+        let ds = DataSpec::synthetic(50, 30, 4).generate(1);
+        let fit = fit_lasso_path(&ds, &small_cfg(RuleKind::SsrBedpp)).unwrap();
+        assert_eq!(fit.nonzero_at(0), 0, "β(λmax) must be 0");
+        assert!(fit.nonzero_at(fit.lambdas.len() - 1) > 0);
+    }
+
+    #[test]
+    fn solution_satisfies_kkt_at_every_lambda() {
+        let ds = DataSpec::gene_like(80, 50).generate(2);
+        let fit = fit_lasso_path(&ds, &small_cfg(RuleKind::SsrBedpp)).unwrap();
+        for (k, &lam) in fit.lambdas.iter().enumerate() {
+            let b = fit.beta_dense(k);
+            let r: Vec<f64> = {
+                let f = ds.x.matvec(&b);
+                ds.y.iter().zip(&f).map(|(y, v)| y - v).collect()
+            };
+            let z = crate::linalg::blocked::scan_all_vec(&ds.x, &r);
+            for j in 0..ds.p() {
+                if b[j] != 0.0 {
+                    assert!(
+                        (z[j] - lam * b[j].signum()).abs() < 1e-4,
+                        "λ#{k} active {j}"
+                    );
+                } else {
+                    assert!(z[j].abs() <= lam * (1.0 + 1e-3) + 1e-6, "λ#{k} inactive {j}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn monotone_nonzero_growth_roughly() {
+        let ds = DataSpec::synthetic(80, 40, 6).generate(3);
+        let fit = fit_lasso_path(&ds, &small_cfg(RuleKind::Ssr)).unwrap();
+        // support size at λmin must exceed support at λmax-side
+        assert!(fit.nonzero_at(fit.lambdas.len() - 1) >= fit.nonzero_at(1));
+    }
+
+    #[test]
+    fn hssr_scans_fewer_columns_than_ssr() {
+        let ds = DataSpec::gene_like(100, 300).generate(4);
+        let ssr = fit_lasso_path(&ds, &small_cfg(RuleKind::Ssr)).unwrap();
+        let hssr = fit_lasso_path(&ds, &small_cfg(RuleKind::SsrBedpp)).unwrap();
+        assert!(
+            hssr.total_cols_scanned() < ssr.total_cols_scanned(),
+            "hssr {} vs ssr {}",
+            hssr.total_cols_scanned(),
+            ssr.total_cols_scanned()
+        );
+        // and KKT work shrinks (the paper's central claim)
+        assert!(hssr.total_kkt_checks() < ssr.total_kkt_checks());
+    }
+
+    #[test]
+    fn safe_sizes_shrink_with_bedpp() {
+        let ds = DataSpec::synthetic(80, 100, 5).generate(5);
+        let fit = fit_lasso_path(&ds, &small_cfg(RuleKind::SsrBedpp)).unwrap();
+        // near λmax the safe set must be well below p
+        assert!(fit.metrics[1].safe_size < ds.p());
+        // once the flag fires, safe_size = p
+        let last = fit.metrics.last().unwrap();
+        assert!(last.safe_size <= ds.p());
+    }
+
+    #[test]
+    fn elastic_net_path_consistent_across_rules() {
+        let ds = DataSpec::synthetic(70, 50, 6).generate(6);
+        let mk = |rule| PathConfig {
+            rule,
+            penalty: Penalty::ElasticNet { alpha: 0.7 },
+            n_lambda: 25,
+            tol: 1e-9,
+            ..PathConfig::default()
+        };
+        let base = fit_lasso_path(&ds, &mk(RuleKind::BasicPcd)).unwrap();
+        for rule in [RuleKind::Ssr, RuleKind::SsrBedpp, RuleKind::Sedpp] {
+            let fit = fit_lasso_path(&ds, &mk(rule)).unwrap();
+            assert!(max_beta_diff(&base, &fit) < 1e-5, "{rule:?} enet mismatch");
+        }
+    }
+
+    #[test]
+    fn explicit_lambda_grid_respected() {
+        let ds = DataSpec::synthetic(40, 20, 3).generate(7);
+        let cfg = PathConfig {
+            lambdas: Some(vec![0.5, 0.3, 0.1]),
+            ..small_cfg(RuleKind::Ssr)
+        };
+        let fit = fit_lasso_path(&ds, &cfg).unwrap();
+        assert_eq!(fit.lambdas, vec![0.5, 0.3, 0.1]);
+        assert_eq!(fit.betas.len(), 3);
+    }
+
+    #[test]
+    fn objective_decreases_along_path_fit() {
+        let ds = DataSpec::synthetic(60, 30, 4).generate(8);
+        let fit = fit_lasso_path(&ds, &small_cfg(RuleKind::SsrBedpp)).unwrap();
+        // residual-only part of the loss shrinks as λ decreases
+        let first = fit.metrics[1].objective;
+        let last = fit.metrics.last().unwrap().objective;
+        assert!(last < first);
+    }
+}

@@ -1,0 +1,25 @@
+//! Shared fixtures for in-crate unit tests.
+
+use crate::data::{DataSpec, Dataset};
+
+/// A small, well-conditioned lasso problem.
+pub fn small_lasso(seed: u64) -> Dataset {
+    DataSpec::synthetic(60, 40, 5).generate(seed)
+}
+
+/// Max coefficient deviation between two dense vectors.
+pub fn max_abs_diff(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).fold(0.0f64, |m, (x, y)| m.max((x - y).abs()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixtures_work() {
+        let ds = small_lasso(1);
+        assert_eq!(ds.n(), 60);
+        assert_eq!(max_abs_diff(&[1.0, 2.0], &[1.5, 1.0]), 1.0);
+    }
+}

@@ -1,0 +1,123 @@
+//! End-to-end behavioural tests: CLI-level config plumbing, the coordinator
+//! sweep machinery, failure injection, and cross-layer consistency checks
+//! that the benches rely on.
+
+use hssr::coordinator::config::{parse_rule, Config};
+use hssr::coordinator::metrics::screening_power;
+use hssr::coordinator::{run_method_sweep, speedup_table, timing_table};
+use hssr::data::DataSpec;
+use hssr::error::HssrError;
+use hssr::screening::RuleKind;
+use hssr::solver::path::{fit_lasso_path, PathConfig};
+
+#[test]
+fn coordinator_sweep_produces_full_grid() {
+    let specs = [DataSpec::synthetic(50, 60, 4), DataSpec::gene_like(50, 60)];
+    let methods = [RuleKind::BasicPcd, RuleKind::Ssr, RuleKind::SsrBedpp];
+    let cfg = PathConfig { n_lambda: 12, ..PathConfig::default() };
+    let cells = run_method_sweep(&specs, &methods, 2, &cfg, 1).unwrap();
+    assert_eq!(cells.len(), 6);
+    let t = timing_table("x", &cells);
+    assert_eq!(t.rows.len(), 3);
+    assert_eq!(t.headers.len(), 3);
+    let s = speedup_table("y", &cells, RuleKind::BasicPcd);
+    // Basic PCD speedup vs itself is 1.0x
+    assert_eq!(s.rows[0][1], "1.0x");
+}
+
+#[test]
+fn screening_power_curves_complete() {
+    let ds = DataSpec::gene_like(60, 120).generate(2);
+    let curves =
+        screening_power(&ds, &PathConfig { n_lambda: 15, ..PathConfig::default() }).unwrap();
+    assert_eq!(curves.len(), 5);
+    for c in &curves {
+        assert_eq!(c.lambda_frac.len(), 15);
+        assert!(c.discarded_frac.iter().all(|&d| (0.0..=1.0).contains(&d)), "{}", c.rule);
+    }
+}
+
+#[test]
+fn nonconvergence_error_propagates() {
+    let ds = DataSpec::synthetic(40, 30, 3).generate(3);
+    let cfg = PathConfig {
+        rule: RuleKind::BasicPcd,
+        max_iter: 1,
+        tol: 0.0,
+        n_lambda: 5,
+        ..PathConfig::default()
+    };
+    match fit_lasso_path(&ds, &cfg) {
+        Err(HssrError::NoConvergence { max_iter: 1, .. }) => {}
+        other => panic!("expected NoConvergence, got {other:?}"),
+    }
+}
+
+#[test]
+fn invalid_penalty_rejected() {
+    let ds = DataSpec::synthetic(30, 20, 2).generate(4);
+    let cfg = PathConfig {
+        penalty: hssr::solver::Penalty::ElasticNet { alpha: -0.5 },
+        ..PathConfig::default()
+    };
+    assert!(matches!(fit_lasso_path(&ds, &cfg), Err(HssrError::Config(_))));
+}
+
+#[test]
+fn config_cli_round_trip() {
+    let mut cfg = Config::from_str_body("rule = ssr\nn = 100").unwrap();
+    cfg.apply_args(["--rule", "ssr-bedpp", "--nlambda=50"].map(String::from)).unwrap();
+    assert_eq!(parse_rule(&cfg.get_str("rule", "")), Some(RuleKind::SsrBedpp));
+    assert_eq!(cfg.get_parse("nlambda", 0usize).unwrap(), 50);
+    assert_eq!(cfg.get_parse("n", 0usize).unwrap(), 100);
+}
+
+/// The metrics that benches aggregate must be internally consistent.
+#[test]
+fn metrics_invariants_hold() {
+    let ds = DataSpec::gene_like(100, 300).generate(5);
+    for rule in [RuleKind::Ssr, RuleKind::SsrBedpp, RuleKind::Sedpp, RuleKind::SsrBedppSedpp] {
+        let fit = fit_lasso_path(
+            &ds,
+            &PathConfig { rule, n_lambda: 25, ..PathConfig::default() },
+        )
+        .unwrap();
+        for (k, m) in fit.metrics.iter().enumerate() {
+            assert!(m.safe_size <= ds.p(), "{rule:?} λ#{k}");
+            assert!(m.strong_size <= m.safe_size, "{rule:?} λ#{k}: |H| > |S|");
+            assert!(m.nonzero <= m.strong_size, "{rule:?} λ#{k}: nnz > |H|");
+            assert!(m.kkt_checked <= ds.p(), "{rule:?} λ#{k}");
+            assert_eq!(m.nonzero, fit.betas[k].len());
+        }
+        // λ grid is strictly decreasing and spans the configured range
+        for w in fit.lambdas.windows(2) {
+            assert!(w[0] > w[1]);
+        }
+    }
+}
+
+/// Support sizes must agree across rules λ-by-λ (stronger than coefficient
+/// agreement tolerance: the *sets* match).
+#[test]
+fn support_sets_identical_across_rules() {
+    let ds = DataSpec::synthetic(80, 120, 6).generate(6);
+    let cfg = PathConfig { n_lambda: 20, tol: 1e-10, ..PathConfig::default() };
+    let base = fit_lasso_path(&ds, &PathConfig { rule: RuleKind::BasicPcd, ..cfg.clone() })
+        .unwrap();
+    for rule in [RuleKind::SsrBedpp, RuleKind::Sedpp] {
+        let fit = fit_lasso_path(&ds, &PathConfig { rule, ..cfg.clone() }).unwrap();
+        for k in 0..base.lambdas.len() {
+            let sa: Vec<usize> = base.betas[k]
+                .iter()
+                .filter(|&&(_, v)| v.abs() > 1e-8)
+                .map(|&(j, _)| j)
+                .collect();
+            let sb: Vec<usize> = fit.betas[k]
+                .iter()
+                .filter(|&&(_, v)| v.abs() > 1e-8)
+                .map(|&(j, _)| j)
+                .collect();
+            assert_eq!(sa, sb, "{rule:?} support differs at λ#{k}");
+        }
+    }
+}

@@ -1,0 +1,42 @@
+//! Integration: the PJRT engine (AOT JAX/Pallas artifacts) must agree with
+//! the native engine to float tolerance. Requires `make artifacts`.
+
+use hssr::data::DataSpec;
+use hssr::linalg::blocked;
+use hssr::runtime::{pjrt::PjrtEngine, ScanEngine};
+
+fn artifacts_available() -> bool {
+    std::path::Path::new("artifacts").is_dir()
+        && std::fs::read_dir("artifacts").map(|d| d.count() > 0).unwrap_or(false)
+}
+
+#[test]
+fn pjrt_scan_matches_native() {
+    if !artifacts_available() {
+        eprintln!("skipping: no artifacts/ (run `make artifacts`)");
+        return;
+    }
+    let engine = PjrtEngine::load("artifacts").expect("load artifacts");
+    assert!(engine.is_pallas(), "pallas artifact should be preferred");
+    // Odd, non-tile-multiple shape to exercise the padding path.
+    let ds = DataSpec::synthetic(173, 517, 10).generate(3);
+    let v = ds.y.clone();
+    let mut got = vec![0.0; ds.p()];
+    engine.scan_all(&ds.x, &v, &mut got).unwrap();
+    let want = blocked::scan_all_vec(&ds.x, &v);
+    for j in 0..ds.p() {
+        assert!(
+            (got[j] - want[j]).abs() < 1e-9,
+            "col {j}: pjrt {} vs native {}",
+            got[j],
+            want[j]
+        );
+    }
+    // subset path
+    let idx = vec![0usize, 5, 99, 516];
+    let mut sub = vec![0.0; idx.len()];
+    engine.scan_subset(&ds.x, &v, &idx, &mut sub).unwrap();
+    for (k, &j) in idx.iter().enumerate() {
+        assert!((sub[k] - want[j]).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,170 @@
+//! Safety invariants: a *safe* rule must never discard a feature that is
+//! active in the exact solution — the defining property the paper's hybrid
+//! construction rests on. Verified against fully converged solutions over
+//! randomized problems (the in-crate property harness), for BEDPP, Dome,
+//! SEDPP, the frozen-SEDPP rehybrid, and the group-lasso rules.
+
+use hssr::data::synth::generate_grouped;
+use hssr::data::DataSpec;
+use hssr::prop::{check, PropConfig};
+use hssr::prop_assert;
+use hssr::screening::bedpp::Bedpp;
+use hssr::screening::dome::DomeTest;
+use hssr::screening::group::{GroupBedpp, GroupSafeContext, GroupSedpp};
+use hssr::screening::sedpp::Sedpp;
+use hssr::screening::{PrevSolution, RuleKind, SafeContext};
+use hssr::solver::path::{fit_lasso_path, PathConfig};
+use hssr::solver::Penalty;
+
+/// Exact-solution support at every λ of a dense grid, via Basic PCD.
+fn exact_path(ds: &hssr::data::Dataset, k: usize) -> hssr::solver::path::PathFit {
+    fit_lasso_path(
+        ds,
+        &PathConfig { rule: RuleKind::BasicPcd, n_lambda: k, tol: 1e-10, ..PathConfig::default() },
+    )
+    .expect("exact fit")
+}
+
+#[test]
+fn bedpp_and_dome_never_discard_active_features() {
+    check(PropConfig { cases: 10, seed: 101 }, |rng, _| {
+        let ds = DataSpec::synthetic(60 + rng.below(60) as usize, 80 + rng.below(120) as usize, 5)
+            .generate(rng.next_u64());
+        let ctx = SafeContext::build(&ds.x, &ds.y, Penalty::Lasso, true);
+        let fit = exact_path(&ds, 25);
+        for (k, &lam) in fit.lambdas.iter().enumerate() {
+            let active: Vec<usize> = fit.betas[k].iter().map(|&(j, _)| j).collect();
+            let mut survive_b = vec![true; ds.p()];
+            Bedpp::screen_at(&ctx, lam, &mut survive_b);
+            let mut survive_d = vec![true; ds.p()];
+            DomeTest::screen_at(&ctx, lam, &mut survive_d);
+            for &j in &active {
+                prop_assert!(survive_b[j], "BEDPP discarded active {j} at λ#{k}");
+                prop_assert!(survive_d[j], "Dome discarded active {j} at λ#{k}");
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn sedpp_never_discards_active_features() {
+    check(PropConfig { cases: 8, seed: 202 }, |rng, _| {
+        let ds = DataSpec::gene_like(80, 150 + rng.below(150) as usize).generate(rng.next_u64());
+        let ctx = SafeContext::build(&ds.x, &ds.y, Penalty::Lasso, true);
+        let fit = exact_path(&ds, 20);
+        // Sequential screening: use the exact solution at λ_k to screen λ_{k+1}.
+        for k in 0..fit.lambdas.len() - 1 {
+            let beta = fit.beta_dense(k);
+            let xb = ds.x.matvec(&beta);
+            let r: Vec<f64> = ds.y.iter().zip(&xb).map(|(y, f)| y - f).collect();
+            let prev = PrevSolution { lambda: fit.lambdas[k], r: &r };
+            let mut survive = vec![true; ds.p()];
+            let mut rule = Sedpp::new();
+            rule.screen_with(&ds.x, &ctx, &prev, fit.lambdas[k + 1], &mut survive);
+            for &(j, _) in &fit.betas[k + 1] {
+                prop_assert!(survive[j], "SEDPP discarded active {j} at λ#{}", k + 1);
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn enet_bedpp_never_discards_active_features() {
+    check(PropConfig { cases: 8, seed: 303 }, |rng, _| {
+        let alpha = 0.3 + 0.7 * rng.uniform();
+        let ds = DataSpec::synthetic(70, 140, 6).generate(rng.next_u64());
+        let pen = Penalty::ElasticNet { alpha };
+        let ctx = SafeContext::build(&ds.x, &ds.y, pen, true);
+        let fit = fit_lasso_path(
+            &ds,
+            &PathConfig {
+                rule: RuleKind::BasicPcd,
+                penalty: pen,
+                n_lambda: 20,
+                tol: 1e-10,
+                ..PathConfig::default()
+            },
+        )
+        .map_err(|e| e.to_string())?;
+        for (k, &lam) in fit.lambdas.iter().enumerate() {
+            let mut survive = vec![true; ds.p()];
+            Bedpp::screen_at(&ctx, lam, &mut survive);
+            for &(j, _) in &fit.betas[k] {
+                prop_assert!(survive[j], "enet BEDPP (α={alpha:.2}) discarded active {j} at λ#{k}");
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn group_rules_never_discard_active_groups() {
+    check(PropConfig { cases: 6, seed: 404 }, |rng, _| {
+        let g_total = 10 + rng.below(15) as usize;
+        let ds = generate_grouped(80, g_total, 4, 3, rng.next_u64());
+        let ctx = GroupSafeContext::build(&ds.x, &ds.y, &ds.layout);
+        let fit = hssr::solver::group_path::fit_group_path(
+            &ds,
+            &hssr::solver::group_path::GroupPathConfig {
+                rule: RuleKind::BasicPcd,
+                n_lambda: 20,
+                tol: 1e-10,
+                ..Default::default()
+            },
+        )
+        .map_err(|e| e.to_string())?;
+        for k in 0..fit.lambdas.len() {
+            let beta = fit.beta_dense(k);
+            let active: Vec<usize> = (0..ds.num_groups())
+                .filter(|&g| ds.layout.range(g).any(|j| beta[j] != 0.0))
+                .collect();
+            // group BEDPP (non-sequential)
+            let mut survive = vec![true; ds.num_groups()];
+            GroupBedpp::screen_at(&ctx, fit.lambdas[k], &mut survive);
+            for &g in &active {
+                prop_assert!(survive[g], "gBEDPP discarded active group {g} at λ#{k}");
+            }
+            // group SEDPP (sequential, from previous exact solution)
+            if k > 0 {
+                let bprev = fit.beta_dense(k - 1);
+                let xb = ds.x.matvec(&bprev);
+                let r: Vec<f64> = ds.y.iter().zip(&xb).map(|(y, f)| y - f).collect();
+                let prev = PrevSolution { lambda: fit.lambdas[k - 1], r: &r };
+                let mut survive = vec![true; ds.num_groups()];
+                GroupSedpp::new().screen_with(&ds.x, &ctx, &prev, fit.lambdas[k], &mut survive);
+                for &g in &active {
+                    prop_assert!(survive[g], "gSEDPP discarded active group {g} at λ#{k}");
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// SSR *can* err (it is heuristic); what must hold is that the KKT loop
+/// catches every violation — i.e. the final solution satisfies KKT even
+/// when violations occurred. Force violations with a coarse grid.
+#[test]
+fn ssr_violations_are_caught_by_kkt_loop() {
+    let ds = DataSpec::mnist_like(80, 300).generate(11);
+    // A very coarse grid makes 2λ_{k+1} − λ_k aggressive → violations.
+    let fit = fit_lasso_path(
+        &ds,
+        &PathConfig { rule: RuleKind::Ssr, n_lambda: 5, tol: 1e-10, ..PathConfig::default() },
+    )
+    .unwrap();
+    for (k, &lam) in fit.lambdas.iter().enumerate() {
+        let b = fit.beta_dense(k);
+        let xb = ds.x.matvec(&b);
+        let r: Vec<f64> = ds.y.iter().zip(&xb).map(|(y, f)| y - f).collect();
+        let z = hssr::linalg::blocked::scan_all_vec(&ds.x, &r);
+        for j in 0..ds.p() {
+            assert!(
+                z[j].abs() <= lam * (1.0 + 1e-3) + 1e-8,
+                "KKT violated at λ#{k}, feature {j}"
+            );
+        }
+    }
+}

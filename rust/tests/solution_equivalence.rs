@@ -1,0 +1,153 @@
+//! Theorem 3.1 at integration scale: every screening strategy must produce
+//! the same solution path as unscreened pathwise coordinate descent, across
+//! penalties, workload families, and λ grids — plus randomized property
+//! sweeps via the in-crate prop harness.
+
+use hssr::data::DataSpec;
+use hssr::prop::{check, PropConfig};
+use hssr::prop_assert;
+use hssr::screening::RuleKind;
+use hssr::solver::lambda::GridKind;
+use hssr::solver::path::{fit_lasso_path, PathConfig, PathFit};
+use hssr::solver::Penalty;
+
+const ALL_RULES: [RuleKind; 6] = [
+    RuleKind::ActiveCycling,
+    RuleKind::Ssr,
+    RuleKind::Sedpp,
+    RuleKind::SsrBedpp,
+    RuleKind::SsrDome,
+    RuleKind::SsrBedppSedpp,
+];
+
+fn max_beta_diff(a: &PathFit, b: &PathFit) -> f64 {
+    let mut worst = 0.0f64;
+    for k in 0..a.lambdas.len() {
+        let da = a.beta_dense(k);
+        let db = b.beta_dense(k);
+        for j in 0..da.len() {
+            worst = worst.max((da[j] - db[j]).abs());
+        }
+    }
+    worst
+}
+
+fn assert_all_agree(ds: &hssr::data::Dataset, base_cfg: PathConfig, tol: f64) {
+    let baseline = fit_lasso_path(
+        ds,
+        &PathConfig { rule: RuleKind::BasicPcd, ..base_cfg.clone() },
+    )
+    .expect("baseline fit");
+    for rule in ALL_RULES {
+        let fit =
+            fit_lasso_path(ds, &PathConfig { rule, ..base_cfg.clone() }).expect("fit");
+        let d = max_beta_diff(&baseline, &fit);
+        assert!(d < tol, "{rule:?} deviates by {d} on {}", ds.name);
+    }
+}
+
+#[test]
+fn gene_like_workload() {
+    let ds = DataSpec::gene_like(150, 400).generate(1);
+    assert_all_agree(&ds, PathConfig { n_lambda: 50, tol: 1e-9, ..PathConfig::default() }, 1e-5);
+}
+
+#[test]
+fn mnist_like_workload() {
+    let ds = DataSpec::mnist_like(120, 300).generate(2);
+    assert_all_agree(&ds, PathConfig { n_lambda: 40, tol: 1e-9, ..PathConfig::default() }, 1e-5);
+}
+
+#[test]
+fn gwas_like_workload() {
+    let ds = DataSpec::gwas_like(150, 500).generate(3);
+    assert_all_agree(&ds, PathConfig { n_lambda: 40, tol: 1e-9, ..PathConfig::default() }, 1e-5);
+}
+
+#[test]
+fn nyt_like_workload() {
+    let ds = DataSpec::nyt_like(150, 300).generate(4);
+    assert_all_agree(&ds, PathConfig { n_lambda: 40, tol: 1e-9, ..PathConfig::default() }, 1e-5);
+}
+
+#[test]
+fn log_grid_also_agrees() {
+    let ds = DataSpec::synthetic(100, 200, 8).generate(5);
+    assert_all_agree(
+        &ds,
+        PathConfig {
+            n_lambda: 40,
+            grid: GridKind::Log,
+            lambda_min_ratio: 0.05,
+            tol: 1e-9,
+            ..PathConfig::default()
+        },
+        1e-5,
+    );
+}
+
+#[test]
+fn elastic_net_alphas_agree() {
+    let ds = DataSpec::synthetic(90, 180, 8).generate(6);
+    for alpha in [0.9, 0.5, 0.25] {
+        assert_all_agree(
+            &ds,
+            PathConfig {
+                penalty: Penalty::ElasticNet { alpha },
+                n_lambda: 30,
+                tol: 1e-9,
+                ..PathConfig::default()
+            },
+            1e-5,
+        );
+    }
+}
+
+/// Randomized sweep: random shapes, sparsity, and seeds.
+#[test]
+fn property_random_problems_agree() {
+    check(PropConfig { cases: 12, seed: 77 }, |rng, scale| {
+        let n = 40 + (rng.below(80) as f64 * scale) as usize;
+        let p = 50 + (rng.below(200) as f64 * scale) as usize;
+        let s = 1 + rng.below(10) as usize;
+        let ds = DataSpec::synthetic(n, p, s).generate(rng.next_u64());
+        let cfg = PathConfig { n_lambda: 20, tol: 1e-9, ..PathConfig::default() };
+        let base = fit_lasso_path(
+            &ds,
+            &PathConfig { rule: RuleKind::BasicPcd, ..cfg.clone() },
+        )
+        .map_err(|e| e.to_string())?;
+        for rule in [RuleKind::SsrBedpp, RuleKind::SsrDome, RuleKind::Sedpp] {
+            let fit = fit_lasso_path(&ds, &PathConfig { rule, ..cfg.clone() })
+                .map_err(|e| e.to_string())?;
+            let d = max_beta_diff(&base, &fit);
+            prop_assert!(d < 1e-5, "{rule:?} deviates by {d} (n={n}, p={p}, s={s})");
+        }
+        Ok(())
+    });
+}
+
+/// Warm starts + screening must not leak state across λ: refitting with a
+/// truncated grid reproduces the prefix of the full-path solution.
+#[test]
+fn grid_prefix_consistency() {
+    let ds = DataSpec::synthetic(80, 150, 6).generate(8);
+    let full = fit_lasso_path(
+        &ds,
+        &PathConfig { n_lambda: 30, tol: 1e-10, ..PathConfig::default() },
+    )
+    .unwrap();
+    let prefix_lams: Vec<f64> = full.lambdas[..10].to_vec();
+    let prefix = fit_lasso_path(
+        &ds,
+        &PathConfig { lambdas: Some(prefix_lams), tol: 1e-10, ..PathConfig::default() },
+    )
+    .unwrap();
+    for k in 0..10 {
+        let a = full.beta_dense(k);
+        let b = prefix.beta_dense(k);
+        for j in 0..a.len() {
+            assert!((a[j] - b[j]).abs() < 1e-6, "prefix mismatch at λ#{k}");
+        }
+    }
+}
