@@ -1,11 +1,14 @@
 //! Micro-benchmarks of the L3 hot-path kernels (dot, axpy, blocked scan,
 //! CD cycle) — the profiling substrate for the §Perf optimization pass.
+//! Includes the pooled-vs-scoped scan comparison (persistent worker pool
+//! against the old spawn-per-scan `thread::scope` kernels) and the fused
+//! single-pass KKT kernel against its three-pass baseline.
 
 use std::time::Instant;
 
 use hssr::coordinator::report::Table;
 use hssr::data::DataSpec;
-use hssr::linalg::{blocked, ops};
+use hssr::linalg::{blocked, ops, pool};
 use hssr::solver::{cd, Penalty};
 
 fn time_it<F: FnMut()>(iters: usize, mut f: F) -> f64 {
@@ -23,6 +26,7 @@ fn main() {
     let v = ds.y.clone();
     let mut out = vec![0.0; p];
     let mut table = Table::new("micro kernels", &["kernel", "time", "throughput"]);
+    println!("pool: {} threads", pool::global().threads());
 
     // dot
     let a = ds.x.col(0);
@@ -47,26 +51,85 @@ fn main() {
         format!("{:.2} GF/s", 2.0 * n as f64 / t / 1e9),
     ]);
 
-    // full scan
-    let t = time_it(30, || {
+    // full scan — persistent pool vs spawn-per-scan baseline
+    let t_pool = time_it(30, || {
         blocked::scan_all(&ds.x, std::hint::black_box(&v), &mut out);
     });
     table.push_row(vec![
-        format!("scan_all {n}×{p}"),
-        format!("{:.2} ms", t * 1e3),
-        format!("{:.2} GB/s", (n * p * 8) as f64 / t / 1e9),
+        format!("scan_all pooled {n}×{p}"),
+        format!("{:.2} ms", t_pool * 1e3),
+        format!("{:.2} GB/s", (n * p * 8) as f64 / t_pool / 1e9),
     ]);
+    let t_scoped = time_it(30, || {
+        blocked::scan_all_scoped(&ds.x, std::hint::black_box(&v), &mut out);
+    });
+    table.push_row(vec![
+        format!("scan_all scoped {n}×{p}"),
+        format!("{:.2} ms", t_scoped * 1e3),
+        format!("{:.2} GB/s", (n * p * 8) as f64 / t_scoped / 1e9),
+    ]);
+    println!(
+        "pooled scan is {:.2}× the scoped (spawn-per-scan) baseline",
+        t_scoped / t_pool
+    );
 
-    // subset scan (10% of columns)
+    // subset scan (10% of columns), pooled vs scoped
     let idx: Vec<usize> = (0..p).step_by(10).collect();
     let mut sub = vec![0.0; idx.len()];
     let t = time_it(200, || {
         blocked::scan_subset(&ds.x, std::hint::black_box(&v), &idx, &mut sub);
     });
     table.push_row(vec![
-        format!("scan_subset 10% of {p}"),
+        format!("scan_subset pooled 10% of {p}"),
         format!("{:.2} ms", t * 1e3),
         format!("{:.2} GB/s", (n * idx.len() * 8) as f64 / t / 1e9),
+    ]);
+    let t = time_it(200, || {
+        blocked::scan_subset_scoped(&ds.x, std::hint::black_box(&v), &idx, &mut sub);
+    });
+    table.push_row(vec![
+        format!("scan_subset scoped 10% of {p}"),
+        format!("{:.2} ms", t * 1e3),
+        format!("{:.2} GB/s", (n * idx.len() * 8) as f64 / t / 1e9),
+    ]);
+
+    // fused KKT pass vs its three-pass baseline (candidate scan + filter +
+    // strong refresh), at a representative mid-path state.
+    let survive: Vec<bool> = (0..p).map(|j| j % 3 != 1).collect();
+    let in_strong: Vec<bool> = (0..p).map(|j| j % 20 == 0).collect();
+    let viol = |zj: f64| zj.abs() > 0.02;
+    let mut z = vec![0.0; p];
+    let mut z_valid = vec![false; p];
+    let t_fused = time_it(30, || {
+        z_valid.iter_mut().for_each(|b| *b = false);
+        std::hint::black_box(blocked::fused_kkt(
+            &ds.x, &v, &survive, &in_strong, &viol, true, &mut z, &mut z_valid,
+        ));
+    });
+    let check: Vec<usize> = (0..p).filter(|&j| survive[j] && !in_strong[j]).collect();
+    let strong: Vec<usize> = (0..p).filter(|&j| survive[j] && in_strong[j]).collect();
+    let mut cbuf = vec![0.0; check.len()];
+    let mut sbuf = vec![0.0; strong.len()];
+    let t_3pass = time_it(30, || {
+        blocked::scan_subset(&ds.x, &v, &check, &mut cbuf);
+        let viols: Vec<usize> = check
+            .iter()
+            .zip(&cbuf)
+            .filter(|&(_, &zj)| viol(zj))
+            .map(|(&j, _)| j)
+            .collect();
+        std::hint::black_box(viols);
+        blocked::scan_subset(&ds.x, &v, &strong, &mut sbuf);
+    });
+    table.push_row(vec![
+        format!("fused_kkt {n}×{p}"),
+        format!("{:.2} ms", t_fused * 1e3),
+        format!("{:.2} GB/s", (n * (check.len() + strong.len()) * 8) as f64 / t_fused / 1e9),
+    ]);
+    table.push_row(vec![
+        format!("3-pass kkt {n}×{p}"),
+        format!("{:.2} ms", t_3pass * 1e3),
+        format!("{:.2} GB/s", (n * (check.len() + strong.len()) * 8) as f64 / t_3pass / 1e9),
     ]);
 
     // one CD cycle over 200 active features

@@ -1,36 +1,152 @@
-//! §Perf probe (not a paper artifact): decompose PJRT scan cost by layer.
+//! §Perf probe (not a paper artifact): quantify the persistent-pool and
+//! fused-pass wins on a p ≫ n synthetic problem, and emit the results as
+//! machine-readable `BENCH_perf.json` at the repository root so the perf
+//! trajectory is tracked across PRs.
+//!
+//! Measured ops:
+//!
+//! * `scan_all_pooled` / `scan_all_scoped` — the persistent worker pool
+//!   against the old spawn-per-scan `thread::scope` kernel;
+//! * `fused_kkt` / `kkt_three_pass` — the single-traversal KKT kernel
+//!   against its scan → filter → strong-refresh baseline;
+//! * `path_fused` / `path_three_pass` — the whole SSR-BEDPP path with the
+//!   fused driver vs the unfused scan-then-filter driver (ns per λ step).
+
 use std::time::Instant;
+
 use hssr::data::DataSpec;
-use hssr::runtime::{pjrt::PjrtEngine, ScanEngine};
+use hssr::linalg::{blocked, pool};
+use hssr::screening::RuleKind;
+use hssr::solver::path::{fit_lasso_path, PathConfig};
+
+struct Entry {
+    op: &'static str,
+    n: usize,
+    p: usize,
+    ns_iter: f64,
+}
+
+fn time_it<F: FnMut()>(iters: usize, mut f: F) -> f64 {
+    let t = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    t.elapsed().as_secs_f64() / iters as f64
+}
 
 fn main() {
-    let ds = DataSpec::synthetic(1024, 4096, 20).generate(4);
-    let mut out = vec![0.0; ds.p()];
-    let mut dirs: Vec<String> =
-        std::env::args().skip(1).filter(|a| !a.starts_with("--")).collect();
-    if dirs.is_empty() {
-        dirs.push("artifacts".to_string());
+    let threads = pool::global().threads();
+    // p ≫ n: the regime the paper (and the screening scans) target.
+    let n = 256;
+    let p = 24_000;
+    let ds = DataSpec::synthetic(n, p, 20).generate(4);
+    let v = ds.y.clone();
+    let mut entries: Vec<Entry> = Vec::new();
+    println!("perf_probe: n={n}, p={p}, pool threads={threads}");
+
+    // -- pooled vs scoped full scan --
+    let mut out = vec![0.0; p];
+    blocked::scan_all(&ds.x, &v, &mut out); // warm the pool
+    let t_pool = time_it(20, || blocked::scan_all(&ds.x, &v, &mut out));
+    let t_scoped = time_it(20, || blocked::scan_all_scoped(&ds.x, &v, &mut out));
+    println!(
+        "scan_all: pooled {:.3} ms vs scoped {:.3} ms ({:.2}×)",
+        t_pool * 1e3,
+        t_scoped * 1e3,
+        t_scoped / t_pool
+    );
+    entries.push(Entry { op: "scan_all_pooled", n, p, ns_iter: t_pool * 1e9 });
+    entries.push(Entry { op: "scan_all_scoped", n, p, ns_iter: t_scoped * 1e9 });
+
+    // -- fused KKT kernel vs three-pass baseline --
+    let survive: Vec<bool> = (0..p).map(|j| j % 3 != 1).collect();
+    let in_strong: Vec<bool> = (0..p).map(|j| j % 25 == 0).collect();
+    let viol = |zj: f64| zj.abs() > 0.02;
+    let mut z = vec![0.0; p];
+    let mut z_valid = vec![false; p];
+    let t_fused = time_it(20, || {
+        z_valid.iter_mut().for_each(|b| *b = false);
+        std::hint::black_box(blocked::fused_kkt(
+            &ds.x, &v, &survive, &in_strong, &viol, true, &mut z, &mut z_valid,
+        ));
+    });
+    let check: Vec<usize> = (0..p).filter(|&j| survive[j] && !in_strong[j]).collect();
+    let strong: Vec<usize> = (0..p).filter(|&j| survive[j] && in_strong[j]).collect();
+    let mut cbuf = vec![0.0; check.len()];
+    let mut sbuf = vec![0.0; strong.len()];
+    let t_3pass = time_it(20, || {
+        blocked::scan_subset(&ds.x, &v, &check, &mut cbuf);
+        let viols: Vec<usize> = check
+            .iter()
+            .zip(&cbuf)
+            .filter(|&(_, &zj)| viol(zj))
+            .map(|(&j, _)| j)
+            .collect();
+        std::hint::black_box(viols);
+        blocked::scan_subset(&ds.x, &v, &strong, &mut sbuf);
+    });
+    println!(
+        "kkt pass: fused {:.3} ms vs three-pass {:.3} ms ({:.2}×)",
+        t_fused * 1e3,
+        t_3pass * 1e3,
+        t_3pass / t_fused
+    );
+    entries.push(Entry { op: "fused_kkt", n, p, ns_iter: t_fused * 1e9 });
+    entries.push(Entry { op: "kkt_three_pass", n, p, ns_iter: t_3pass * 1e9 });
+
+    // -- whole path: fused driver vs unfused scan-then-filter driver --
+    let n_lambda = 50;
+    let mk = |fused: bool| PathConfig {
+        rule: RuleKind::SsrBedpp,
+        n_lambda,
+        fused,
+        ..PathConfig::default()
+    };
+    let fit = fit_lasso_path(&ds, &mk(true)).expect("warmup fit");
+    std::hint::black_box(fit.total_cols_scanned());
+    let t_path_fused = time_it(3, || {
+        std::hint::black_box(fit_lasso_path(&ds, &mk(true)).unwrap().seconds);
+    });
+    let t_path_3pass = time_it(3, || {
+        std::hint::black_box(fit_lasso_path(&ds, &mk(false)).unwrap().seconds);
+    });
+    println!(
+        "SSR-BEDPP path ({n_lambda} λ): fused {:.3} s vs three-pass {:.3} s ({:.2}×)",
+        t_path_fused,
+        t_path_3pass,
+        t_path_3pass / t_path_fused
+    );
+    entries.push(Entry {
+        op: "path_fused",
+        n,
+        p,
+        ns_iter: t_path_fused * 1e9 / n_lambda as f64,
+    });
+    entries.push(Entry {
+        op: "path_three_pass",
+        n,
+        p,
+        ns_iter: t_path_3pass * 1e9 / n_lambda as f64,
+    });
+
+    // -- emit BENCH_perf.json at the repo root --
+    let mut json = String::from("[\n");
+    for (i, e) in entries.iter().enumerate() {
+        json.push_str(&format!(
+            "  {{\"op\": \"{}\", \"n\": {}, \"p\": {}, \"ns_iter\": {:.1}, \"threads\": {}}}{}\n",
+            e.op,
+            e.n,
+            e.p,
+            e.ns_iter,
+            threads,
+            if i + 1 < entries.len() { "," } else { "" }
+        ));
     }
-    for dir in dirs {
-        match PjrtEngine::load(&dir) {
-            Ok(e) => {
-                // warmup
-                e.scan_all(&ds.x, &ds.y, &mut out).unwrap();
-                let t = Instant::now();
-                let iters = 5;
-                for _ in 0..iters {
-                    e.scan_all(&ds.x, &ds.y, &mut out).unwrap();
-                }
-                let s = t.elapsed().as_secs_f64() / iters as f64;
-                println!(
-                    "{dir}: engine {} tile {:?} — {:.1} ms/scan, {:.2} GB/s",
-                    e.name(),
-                    e.tile_shape(),
-                    s * 1e3,
-                    (ds.n() * ds.p() * 8) as f64 / s / 1e9
-                );
-            }
-            Err(e) => println!("{dir}: {e}"),
-        }
-    }
+    json.push_str("]\n");
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|root| root.join("BENCH_perf.json"))
+        .unwrap_or_else(|| std::path::PathBuf::from("BENCH_perf.json"));
+    std::fs::write(&path, json).expect("write BENCH_perf.json");
+    println!("wrote {}", path.display());
 }

@@ -1,10 +1,21 @@
 //! Replication job runner: fans independent jobs (dataset generation,
-//! non-timed fits, sweep cells) across worker threads with
-//! `std::thread::scope`. Timed benchmark bodies run sequentially to avoid
-//! interference; this runner covers the *untimed* bulk work around them.
+//! non-timed fits, sweep cells) across the **persistent scan-worker pool**
+//! ([`crate::linalg::pool`]) instead of spawning ad-hoc
+//! `std::thread::scope` workers per call. Timed benchmark bodies run
+//! sequentially to avoid interference; this runner covers the *untimed*
+//! bulk work around them.
+//!
+//! Jobs that themselves issue screening scans are safe: a scan submitted
+//! from inside a pool worker runs inline on that worker (the pool's
+//! reentrancy guard), so the machine is never oversubscribed the way
+//! nested `thread::scope` fan-outs were.
 
-/// Run `f(i)` for `i in 0..jobs` across up to `threads` workers, returning
-/// results in index order.
+use crate::linalg::pool;
+
+/// Run `f(i)` for `i in 0..jobs` across the shared worker pool, returning
+/// results in index order. `threads <= 1` forces the serial path; larger
+/// values defer to the pool's size (`available_parallelism()` or
+/// `HSSR_THREADS`), claiming jobs by work stealing.
 pub fn parallel_map<T, F>(jobs: usize, threads: usize, f: F) -> Vec<T>
 where
     T: Send,
@@ -14,25 +25,13 @@ where
     if threads == 1 || jobs <= 1 {
         return (0..jobs).map(f).collect();
     }
-    let mut results: Vec<Option<T>> = (0..jobs).map(|_| None).collect();
-    // Work-stealing queue of (index, &mut slot): each slot is popped (and
-    // hence written) by exactly one worker — no unsafe needed.
-    let work = std::sync::Mutex::new(results.iter_mut().enumerate().collect::<Vec<_>>());
-    std::thread::scope(|s| {
-        for _ in 0..threads {
-            s.spawn(|| loop {
-                let item = work.lock().unwrap().pop();
-                let Some((i, slot)) = item else { break };
-                *slot = Some(f(i));
-            });
-        }
-    });
-    results.into_iter().map(|r| r.expect("job completed")).collect()
+    pool::global().map(jobs, f)
 }
 
-/// Default worker-thread count for untimed work.
+/// Default worker-thread count for untimed work: the shared pool's size
+/// (no more 8-thread cap; `HSSR_THREADS` overrides).
 pub fn default_threads() -> usize {
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(8)
+    pool::global().threads()
 }
 
 #[cfg(test)]
@@ -67,5 +66,32 @@ mod tests {
             acc
         });
         assert_eq!(out.len(), 64);
+    }
+
+    /// Jobs that scan through the pool must not deadlock (reentrancy): the
+    /// scan must be large enough (n·p ≥ PAR_THRESHOLD) that
+    /// `blocked::scan_all_vec` really submits to the pool from inside a
+    /// pool worker, exercising the inline fallback.
+    #[test]
+    fn jobs_with_nested_scans_complete() {
+        use crate::data::DataSpec;
+        use crate::linalg::blocked;
+        use crate::linalg::blocked::PAR_THRESHOLD;
+        let n = 600;
+        let p = PAR_THRESHOLD / n + 50;
+        let ds = DataSpec::synthetic(n, p, 4).generate(9);
+        let reference = blocked::scan_all_vec(&ds.x, &ds.y);
+        let out = parallel_map(6, 4, |i| {
+            let z = blocked::scan_all_vec(&ds.x, &ds.y);
+            z[i * 7 % z.len()]
+        });
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, reference[i * 7 % reference.len()]);
+        }
+    }
+
+    #[test]
+    fn default_threads_positive() {
+        assert!(default_threads() >= 1);
     }
 }

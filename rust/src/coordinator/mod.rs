@@ -148,6 +148,7 @@ mod tests {
             tol: 1e-7,
             max_iter: 100_000,
             lambdas: None,
+            fused: true,
         };
         let cells = run_method_sweep(&specs, &methods, 2, &cfg, 5).unwrap();
         assert_eq!(cells.len(), 2);

@@ -1,20 +1,20 @@
 //! Crate-wide error type.
+//!
+//! Hand-written `Display`/`Error` impls (the offline registry has no
+//! `thiserror`; this is the 10 lines of it we need).
 
-use thiserror::Error;
+use std::fmt;
 
 /// Errors produced by the `hssr` library.
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum HssrError {
     /// Input dimensions are inconsistent (e.g. `X` rows vs `y` length).
-    #[error("dimension mismatch: {0}")]
     Dimension(String),
 
     /// An invalid configuration value was supplied.
-    #[error("invalid config: {0}")]
     Config(String),
 
     /// The inner optimizer failed to converge within `max_iter` iterations.
-    #[error("solver did not converge at lambda index {lambda_index} (max_iter={max_iter}, last delta={last_delta:.3e})")]
     NoConvergence {
         /// Index into the λ grid where convergence failed.
         lambda_index: usize,
@@ -25,18 +25,48 @@ pub enum HssrError {
     },
 
     /// An AOT artifact was missing or malformed.
-    #[error("runtime artifact error: {0}")]
     Artifact(String),
 
     /// Error surfaced from the PJRT/XLA runtime.
-    #[error("xla runtime error: {0}")]
     Xla(String),
 
     /// I/O error (dataset cache, artifact files, report output).
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 }
 
+impl fmt::Display for HssrError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            HssrError::Dimension(s) => write!(f, "dimension mismatch: {s}"),
+            HssrError::Config(s) => write!(f, "invalid config: {s}"),
+            HssrError::NoConvergence { lambda_index, max_iter, last_delta } => write!(
+                f,
+                "solver did not converge at lambda index {lambda_index} \
+                 (max_iter={max_iter}, last delta={last_delta:.3e})"
+            ),
+            HssrError::Artifact(s) => write!(f, "runtime artifact error: {s}"),
+            HssrError::Xla(s) => write!(f, "xla runtime error: {s}"),
+            HssrError::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for HssrError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            HssrError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for HssrError {
+    fn from(e: std::io::Error) -> Self {
+        HssrError::Io(e)
+    }
+}
+
+#[cfg(feature = "pjrt")]
 impl From<xla::Error> for HssrError {
     fn from(e: xla::Error) -> Self {
         HssrError::Xla(e.to_string())
@@ -45,3 +75,18 @@ impl From<xla::Error> for HssrError {
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, HssrError>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_formats() {
+        let e = HssrError::Dimension("x vs y".into());
+        assert_eq!(e.to_string(), "dimension mismatch: x vs y");
+        let e = HssrError::NoConvergence { lambda_index: 3, max_iter: 10, last_delta: 0.5 };
+        assert!(e.to_string().contains("lambda index 3"));
+        let e = HssrError::Io(std::io::Error::new(std::io::ErrorKind::Other, "boom"));
+        assert!(e.to_string().contains("boom"));
+    }
+}

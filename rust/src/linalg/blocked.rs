@@ -1,19 +1,113 @@
-//! Cache-blocked, multi-threaded screening scans.
+//! Cache-blocked, pool-parallel screening scans and fused screening/KKT
+//! kernels.
 //!
 //! The dominant operation in every screening rule and KKT check is the scan
 //! `z_j = x_jᵀ r / n` over a *set* of columns. For large `p` this is memory
-//! bound; we block over columns and fan out across `std::thread::scope`
-//! workers. Threading kicks in only above [`PAR_THRESHOLD`] scanned entries
-//! so small problems never pay spawn overhead.
+//! bound; we block over columns and fan the blocks out across the
+//! persistent [`super::pool`] workers (work-stealing chunk claim, no
+//! per-scan thread spawns). Threading kicks in only above
+//! [`PAR_THRESHOLD`] scanned entries so small problems never pay dispatch
+//! overhead.
+//!
+//! Beyond the plain scans, this module provides the **fused passes** that
+//! Algorithm 1 runs once per λ step:
+//!
+//! * [`fused_screen`] — a single traversal that, per column, applies the
+//!   safe-rule predicate, lazily refreshes `z_j` (only when stale — the
+//!   paper's line-4 semantics), and applies the SSR threshold, instead of
+//!   three separate loops (safe screen → stale subset scan → strong-set
+//!   filter) with intermediate index vectors.
+//! * [`fused_kkt`] — a single post-convergence traversal that recomputes
+//!   `z_j` at the final residual and tests the KKT condition for
+//!   non-strong survivors, subsuming the separate KKT subset scan and the
+//!   end-of-step strong-set refresh.
+//! * [`group_norms`] / [`fused_group_kkt`] — the group-lasso analogues at
+//!   group granularity.
+//!
+//! The `*_scoped` variants keep the original spawn-per-scan
+//! `std::thread::scope` implementation for benchmarking the pool win
+//! (`benches/micro_kernels.rs`, `benches/perf_probe.rs`).
 
 use super::ops;
+use super::pool;
+use super::pool::RacyPtr;
 use super::DenseMatrix;
 
-/// Minimum number of matrix entries scanned before threads are used.
+/// Minimum number of matrix entries scanned before the pool is used.
 pub const PAR_THRESHOLD: usize = 1 << 20;
 
-/// Number of worker threads to use for a scan of `work` entries.
-fn n_workers(work: usize) -> usize {
+/// Columns per work-stealing chunk for `total` columns on `threads`
+/// threads: ~8 chunks per thread for balance, at least 4 columns per chunk
+/// to amortize the claim.
+fn cols_per_chunk(total: usize, threads: usize) -> usize {
+    total.div_ceil(threads.max(1) * 8).max(4)
+}
+
+/// Dense scan: `out[j] = x_jᵀ v / n` for every column `j`, pool-parallel.
+pub fn scan_all(x: &DenseMatrix, v: &[f64], out: &mut [f64]) {
+    assert_eq!(v.len(), x.nrows());
+    assert_eq!(out.len(), x.ncols());
+    let n = x.nrows();
+    let p = x.ncols();
+    let inv_n = 1.0 / n as f64;
+    if n * p < PAR_THRESHOLD {
+        for (j, o) in out.iter_mut().enumerate() {
+            *o = ops::dot(x.col(j), v) * inv_n;
+        }
+        return;
+    }
+    let pool = pool::global();
+    let per = cols_per_chunk(p, pool.threads());
+    let outp = RacyPtr(out.as_mut_ptr());
+    pool.run(p.div_ceil(per), &|c| {
+        let j0 = c * per;
+        let j1 = (j0 + per).min(p);
+        for j in j0..j1 {
+            // SAFETY: chunk c owns out[j0..j1] exclusively.
+            unsafe { *outp.0.add(j) = ops::dot(x.col(j), v) * inv_n };
+        }
+    });
+}
+
+/// Subset scan: `out[k] = x_{idx[k]}ᵀ v / n`, pool-parallel over `idx`.
+pub fn scan_subset(x: &DenseMatrix, v: &[f64], idx: &[usize], out: &mut [f64]) {
+    assert_eq!(v.len(), x.nrows());
+    assert_eq!(out.len(), idx.len());
+    let n = x.nrows();
+    let inv_n = 1.0 / n as f64;
+    if n * idx.len() < PAR_THRESHOLD {
+        for (k, &j) in idx.iter().enumerate() {
+            out[k] = ops::dot(x.col(j), v) * inv_n;
+        }
+        return;
+    }
+    let pool = pool::global();
+    let per = cols_per_chunk(idx.len(), pool.threads());
+    let outp = RacyPtr(out.as_mut_ptr());
+    pool.run(idx.len().div_ceil(per), &|c| {
+        let k0 = c * per;
+        let k1 = (k0 + per).min(idx.len());
+        for k in k0..k1 {
+            // SAFETY: chunk c owns out[k0..k1] exclusively.
+            unsafe { *outp.0.add(k) = ops::dot(x.col(idx[k]), v) * inv_n };
+        }
+    });
+}
+
+/// Scan returning a freshly allocated vector (convenience wrapper).
+pub fn scan_all_vec(x: &DenseMatrix, v: &[f64]) -> Vec<f64> {
+    let mut out = vec![0.0; x.ncols()];
+    scan_all(x, v, &mut out);
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Legacy spawn-per-scan kernels, kept for pooled-vs-scoped benchmarking.
+// ---------------------------------------------------------------------------
+
+/// Worker count for the scoped (spawn-per-scan) kernels — the original
+/// policy, including its 8-thread cap.
+fn scoped_workers(work: usize) -> usize {
     if work < PAR_THRESHOLD {
         return 1;
     }
@@ -21,14 +115,15 @@ fn n_workers(work: usize) -> usize {
     hw.min(8).max(1)
 }
 
-/// Dense scan: `out[j] = x_jᵀ v / n` for every column `j`, multi-threaded.
-pub fn scan_all(x: &DenseMatrix, v: &[f64], out: &mut [f64]) {
+/// [`scan_all`] with the original `std::thread::scope` spawn-per-scan
+/// strategy (benchmark baseline; numerically identical).
+pub fn scan_all_scoped(x: &DenseMatrix, v: &[f64], out: &mut [f64]) {
     assert_eq!(v.len(), x.nrows());
     assert_eq!(out.len(), x.ncols());
     let n = x.nrows();
     let p = x.ncols();
     let inv_n = 1.0 / n as f64;
-    let workers = n_workers(n * p);
+    let workers = scoped_workers(n * p);
     if workers == 1 {
         for (j, o) in out.iter_mut().enumerate() {
             *o = ops::dot(x.col(j), v) * inv_n;
@@ -48,13 +143,14 @@ pub fn scan_all(x: &DenseMatrix, v: &[f64], out: &mut [f64]) {
     });
 }
 
-/// Subset scan: `out[k] = x_{idx[k]}ᵀ v / n`, multi-threaded over `idx`.
-pub fn scan_subset(x: &DenseMatrix, v: &[f64], idx: &[usize], out: &mut [f64]) {
+/// [`scan_subset`] with the original spawn-per-scan strategy (benchmark
+/// baseline; numerically identical).
+pub fn scan_subset_scoped(x: &DenseMatrix, v: &[f64], idx: &[usize], out: &mut [f64]) {
     assert_eq!(v.len(), x.nrows());
     assert_eq!(out.len(), idx.len());
     let n = x.nrows();
     let inv_n = 1.0 / n as f64;
-    let workers = n_workers(n * idx.len());
+    let workers = scoped_workers(n * idx.len());
     if workers == 1 {
         for (k, &j) in idx.iter().enumerate() {
             out[k] = ops::dot(x.col(j), v) * inv_n;
@@ -73,50 +169,418 @@ pub fn scan_subset(x: &DenseMatrix, v: &[f64], idx: &[usize], out: &mut [f64]) {
     });
 }
 
-/// Scan returning a freshly allocated vector (convenience wrapper).
-pub fn scan_all_vec(x: &DenseMatrix, v: &[f64]) -> Vec<f64> {
-    let mut out = vec![0.0; x.ncols()];
-    scan_all(x, v, &mut out);
+// ---------------------------------------------------------------------------
+// Fused passes.
+// ---------------------------------------------------------------------------
+
+/// Outcome of one [`fused_screen`] pass.
+#[derive(Clone, Debug, Default)]
+pub struct FusedScreenOut {
+    /// Survivors of the safe rule (|S|).
+    pub safe_size: usize,
+    /// Features discarded by the point-wise predicate in this pass.
+    pub discarded: usize,
+    /// The strong set `H` (ascending; survivors passing the SSR threshold).
+    pub strong: Vec<usize>,
+    /// Columns whose `z_j` was (re)computed.
+    pub cols_scanned: u64,
+}
+
+/// Outcome of one [`fused_kkt`] / [`fused_group_kkt`] pass.
+#[derive(Clone, Debug, Default)]
+pub struct FusedKktOut {
+    /// KKT violators (ascending).
+    pub violations: Vec<usize>,
+    /// Candidates tested (survivors outside the strong set).
+    pub checked: usize,
+    /// Columns scanned (candidates + refreshed strong columns).
+    pub cols_scanned: u64,
+}
+
+/// Per-chunk accumulator for the fused passes (merged in chunk order so
+/// index lists come out ascending and deterministic).
+#[derive(Default)]
+struct ChunkAcc {
+    safe: usize,
+    discarded: usize,
+    checked: usize,
+    scanned: u64,
+    picked: Vec<usize>,
+}
+
+/// Fused screening pass (safe predicate + lazy-`z` refresh + SSR filter)
+/// in one column traversal. For each `j` with `survive[j]`:
+///
+/// 1. if `keep` is given and `keep(j)` is false, clear `survive[j]` (safe
+///    discard) and skip the column — its `z_j` is never computed;
+/// 2. else, if `z_valid[j]` is false, compute `z[j] = x_jᵀ r / n` (lazy-z);
+/// 3. classify into the strong set iff `|z_j| ≥ ssr_threshold`.
+///
+/// Selection is bit-identical to the unfused screen → subset-scan → filter
+/// sequence: the same `ops::dot` kernel computes each `z_j`, and the same
+/// comparisons run in the same per-column order.
+pub fn fused_screen(
+    x: &DenseMatrix,
+    r: &[f64],
+    keep: Option<&(dyn Fn(usize) -> bool + Sync)>,
+    ssr_threshold: f64,
+    survive: &mut [bool],
+    z: &mut [f64],
+    z_valid: &mut [bool],
+) -> FusedScreenOut {
+    let n = x.nrows();
+    let p = x.ncols();
+    assert_eq!(survive.len(), p);
+    assert_eq!(z.len(), p);
+    assert_eq!(z_valid.len(), p);
+    assert_eq!(r.len(), n);
+    let inv_n = 1.0 / n as f64;
+    // Upper bound on scan work: stale survivors (the predicate only shrinks
+    // this) × n.
+    let stale = survive.iter().zip(z_valid.iter()).filter(|&(&s, &v)| s && !v).count();
+    let mut out = FusedScreenOut::default();
+    if stale * n < PAR_THRESHOLD {
+        for j in 0..p {
+            if !survive[j] {
+                continue;
+            }
+            if let Some(pred) = keep {
+                if !pred(j) {
+                    survive[j] = false;
+                    out.discarded += 1;
+                    continue;
+                }
+            }
+            out.safe_size += 1;
+            if !z_valid[j] {
+                z[j] = ops::dot(x.col(j), r) * inv_n;
+                z_valid[j] = true;
+                out.cols_scanned += 1;
+            }
+            if z[j].abs() >= ssr_threshold {
+                out.strong.push(j);
+            }
+        }
+        return out;
+    }
+    let pool = pool::global();
+    let per = cols_per_chunk(p, pool.threads());
+    let chunks = p.div_ceil(per);
+    let mut accs: Vec<ChunkAcc> = (0..chunks).map(|_| ChunkAcc::default()).collect();
+    {
+        let sp = RacyPtr(survive.as_mut_ptr());
+        let zp = RacyPtr(z.as_mut_ptr());
+        let vp = RacyPtr(z_valid.as_mut_ptr());
+        let ap = RacyPtr(accs.as_mut_ptr());
+        pool.run(chunks, &|c| {
+            let j0 = c * per;
+            let j1 = (j0 + per).min(p);
+            // SAFETY: chunk c owns accs[c] and columns [j0, j1) of the
+            // survive/z/z_valid slices exclusively.
+            let acc = unsafe { &mut *ap.0.add(c) };
+            for j in j0..j1 {
+                let sj = unsafe { &mut *sp.0.add(j) };
+                if !*sj {
+                    continue;
+                }
+                if let Some(pred) = keep {
+                    if !pred(j) {
+                        *sj = false;
+                        acc.discarded += 1;
+                        continue;
+                    }
+                }
+                acc.safe += 1;
+                let vj = unsafe { &mut *vp.0.add(j) };
+                let zj = unsafe { &mut *zp.0.add(j) };
+                if !*vj {
+                    *zj = ops::dot(x.col(j), r) * inv_n;
+                    *vj = true;
+                    acc.scanned += 1;
+                }
+                if zj.abs() >= ssr_threshold {
+                    acc.picked.push(j);
+                }
+            }
+        });
+    }
+    for mut acc in accs {
+        out.safe_size += acc.safe;
+        out.discarded += acc.discarded;
+        out.cols_scanned += acc.scanned;
+        out.strong.append(&mut acc.picked);
+    }
     out
 }
 
-/// Per-group scan for the group lasso: `out[g] = ‖X_gᵀ r‖ / n` where group
-/// `g` spans columns `[starts[g], starts[g] + sizes[g])`.
-pub fn group_scan_norms(
+/// Fused post-convergence KKT pass in one column traversal. For each `j`
+/// with `survive[j]`:
+///
+/// * strong columns (`in_strong[j]`) are rescanned iff `refresh_strong`
+///   (so the next λ's SSR screening sees correlations at the final
+///   residual — subsuming the unfused end-of-step strong refresh);
+/// * non-strong survivors get `z_j` recomputed and `violates(z_j)` applied.
+///
+/// Violators come back ascending, matching the unfused
+/// scan-subset-then-filter order exactly.
+#[allow(clippy::too_many_arguments)]
+pub fn fused_kkt(
     x: &DenseMatrix,
-    v: &[f64],
+    r: &[f64],
+    survive: &[bool],
+    in_strong: &[bool],
+    violates: &(dyn Fn(f64) -> bool + Sync),
+    refresh_strong: bool,
+    z: &mut [f64],
+    z_valid: &mut [bool],
+) -> FusedKktOut {
+    let n = x.nrows();
+    let p = x.ncols();
+    assert_eq!(survive.len(), p);
+    assert_eq!(in_strong.len(), p);
+    assert_eq!(z.len(), p);
+    assert_eq!(z_valid.len(), p);
+    assert_eq!(r.len(), n);
+    let inv_n = 1.0 / n as f64;
+    let work = survive
+        .iter()
+        .zip(in_strong.iter())
+        .filter(|&(&s, &h)| s && (!h || refresh_strong))
+        .count();
+    let mut out = FusedKktOut::default();
+    if work * n < PAR_THRESHOLD {
+        for j in 0..p {
+            if !survive[j] {
+                continue;
+            }
+            if in_strong[j] {
+                if refresh_strong {
+                    z[j] = ops::dot(x.col(j), r) * inv_n;
+                    z_valid[j] = true;
+                    out.cols_scanned += 1;
+                }
+                continue;
+            }
+            z[j] = ops::dot(x.col(j), r) * inv_n;
+            z_valid[j] = true;
+            out.cols_scanned += 1;
+            out.checked += 1;
+            if violates(z[j]) {
+                out.violations.push(j);
+            }
+        }
+        return out;
+    }
+    let pool = pool::global();
+    let per = cols_per_chunk(p, pool.threads());
+    let chunks = p.div_ceil(per);
+    let mut accs: Vec<ChunkAcc> = (0..chunks).map(|_| ChunkAcc::default()).collect();
+    {
+        let zp = RacyPtr(z.as_mut_ptr());
+        let vp = RacyPtr(z_valid.as_mut_ptr());
+        let ap = RacyPtr(accs.as_mut_ptr());
+        pool.run(chunks, &|c| {
+            let j0 = c * per;
+            let j1 = (j0 + per).min(p);
+            // SAFETY: chunk c owns accs[c] and columns [j0, j1) of z and
+            // z_valid exclusively; survive/in_strong are read-only.
+            let acc = unsafe { &mut *ap.0.add(c) };
+            for j in j0..j1 {
+                if !survive[j] {
+                    continue;
+                }
+                if in_strong[j] {
+                    if refresh_strong {
+                        unsafe {
+                            *zp.0.add(j) = ops::dot(x.col(j), r) * inv_n;
+                            *vp.0.add(j) = true;
+                        }
+                        acc.scanned += 1;
+                    }
+                    continue;
+                }
+                let zj = ops::dot(x.col(j), r) * inv_n;
+                unsafe {
+                    *zp.0.add(j) = zj;
+                    *vp.0.add(j) = true;
+                }
+                acc.scanned += 1;
+                acc.checked += 1;
+                if violates(zj) {
+                    acc.picked.push(j);
+                }
+            }
+        });
+    }
+    for mut acc in accs {
+        out.checked += acc.checked;
+        out.cols_scanned += acc.scanned;
+        out.violations.append(&mut acc.picked);
+    }
+    out
+}
+
+/// Pool-parallel group-norm refresh: for each `g` in `groups`, recompute
+/// `znorm[g] = ‖X_gᵀ r‖ / n` and mark it valid. Returns columns scanned.
+///
+/// The per-group norm is computed exactly as the unfused path did (column
+/// dots collected into a buffer, then [`ops::nrm2`]) so results are
+/// bit-identical.
+pub fn group_norms(
+    x: &DenseMatrix,
+    r: &[f64],
     starts: &[usize],
     sizes: &[usize],
-    out: &mut [f64],
-) {
-    assert_eq!(starts.len(), sizes.len());
-    assert_eq!(out.len(), starts.len());
+    groups: &[usize],
+    znorm: &mut [f64],
+    znorm_valid: &mut [bool],
+) -> u64 {
     let n = x.nrows();
     let inv_n = 1.0 / n as f64;
-    let total: usize = sizes.iter().sum::<usize>() * n;
-    let workers = n_workers(total);
-    let body = |g0: usize, chunk: &mut [f64]| {
-        for (dg, o) in chunk.iter_mut().enumerate() {
-            let g = g0 + dg;
-            let mut ss = 0.0;
-            for j in starts[g]..starts[g] + sizes[g] {
-                let d = ops::dot(x.col(j), v) * inv_n;
-                ss += d * d;
-            }
-            *o = ss.sqrt();
+    let norm_of = |g: usize, buf: &mut Vec<f64>| -> f64 {
+        buf.clear();
+        for j in starts[g]..starts[g] + sizes[g] {
+            buf.push(ops::dot(x.col(j), r) * inv_n);
         }
+        ops::nrm2(buf)
     };
-    if workers == 1 {
-        body(0, out);
-        return;
+    let total_cols: usize = groups.iter().map(|&g| sizes[g]).sum();
+    if total_cols * n < PAR_THRESHOLD {
+        let mut buf = Vec::new();
+        for &g in groups {
+            znorm[g] = norm_of(g, &mut buf);
+            znorm_valid[g] = true;
+        }
+        return total_cols as u64;
     }
-    let per = out.len().div_ceil(workers);
-    std::thread::scope(|s| {
-        for (w, chunk) in out.chunks_mut(per).enumerate() {
-            let g0 = w * per;
-            s.spawn(move || body(g0, chunk));
+    let pool = pool::global();
+    let per = groups.len().div_ceil(pool.threads() * 8).max(1);
+    let zp = RacyPtr(znorm.as_mut_ptr());
+    let vp = RacyPtr(znorm_valid.as_mut_ptr());
+    pool.run(groups.len().div_ceil(per), &|c| {
+        let k0 = c * per;
+        let k1 = (k0 + per).min(groups.len());
+        let mut buf = Vec::new();
+        for &g in &groups[k0..k1] {
+            // SAFETY: `groups` holds distinct indices and chunk c owns
+            // positions [k0, k1) exclusively.
+            unsafe {
+                *zp.0.add(g) = norm_of(g, &mut buf);
+                *vp.0.add(g) = true;
+            }
         }
     });
+    total_cols as u64
+}
+
+/// Fused group KKT pass — [`fused_kkt`] at group granularity. Surviving
+/// groups get their norm recomputed (strong groups only when
+/// `refresh_strong`); non-strong survivors are tested with
+/// `violates(g, znorm_g)`.
+#[allow(clippy::too_many_arguments)]
+pub fn fused_group_kkt(
+    x: &DenseMatrix,
+    r: &[f64],
+    starts: &[usize],
+    sizes: &[usize],
+    survive: &[bool],
+    in_strong: &[bool],
+    violates: &(dyn Fn(usize, f64) -> bool + Sync),
+    refresh_strong: bool,
+    znorm: &mut [f64],
+    znorm_valid: &mut [bool],
+) -> FusedKktOut {
+    let n = x.nrows();
+    let g_count = starts.len();
+    assert_eq!(sizes.len(), g_count);
+    assert_eq!(survive.len(), g_count);
+    assert_eq!(in_strong.len(), g_count);
+    assert_eq!(znorm.len(), g_count);
+    assert_eq!(znorm_valid.len(), g_count);
+    let inv_n = 1.0 / n as f64;
+    let norm_of = |g: usize, buf: &mut Vec<f64>| -> f64 {
+        buf.clear();
+        for j in starts[g]..starts[g] + sizes[g] {
+            buf.push(ops::dot(x.col(j), r) * inv_n);
+        }
+        ops::nrm2(buf)
+    };
+    let work: usize = (0..g_count)
+        .filter(|&g| survive[g] && (!in_strong[g] || refresh_strong))
+        .map(|g| sizes[g])
+        .sum();
+    let mut out = FusedKktOut::default();
+    if work * n < PAR_THRESHOLD {
+        let mut buf = Vec::new();
+        for g in 0..g_count {
+            if !survive[g] {
+                continue;
+            }
+            if in_strong[g] {
+                if refresh_strong {
+                    znorm[g] = norm_of(g, &mut buf);
+                    znorm_valid[g] = true;
+                    out.cols_scanned += sizes[g] as u64;
+                }
+                continue;
+            }
+            znorm[g] = norm_of(g, &mut buf);
+            znorm_valid[g] = true;
+            out.cols_scanned += sizes[g] as u64;
+            out.checked += 1;
+            if violates(g, znorm[g]) {
+                out.violations.push(g);
+            }
+        }
+        return out;
+    }
+    let pool = pool::global();
+    let per = g_count.div_ceil(pool.threads() * 8).max(1);
+    let chunks = g_count.div_ceil(per);
+    let mut accs: Vec<ChunkAcc> = (0..chunks).map(|_| ChunkAcc::default()).collect();
+    {
+        let zp = RacyPtr(znorm.as_mut_ptr());
+        let vp = RacyPtr(znorm_valid.as_mut_ptr());
+        let ap = RacyPtr(accs.as_mut_ptr());
+        pool.run(chunks, &|c| {
+            let g0 = c * per;
+            let g1 = (g0 + per).min(g_count);
+            // SAFETY: chunk c owns accs[c] and groups [g0, g1) exclusively.
+            let acc = unsafe { &mut *ap.0.add(c) };
+            let mut buf = Vec::new();
+            for g in g0..g1 {
+                if !survive[g] {
+                    continue;
+                }
+                if in_strong[g] {
+                    if refresh_strong {
+                        unsafe {
+                            *zp.0.add(g) = norm_of(g, &mut buf);
+                            *vp.0.add(g) = true;
+                        }
+                        acc.scanned += sizes[g] as u64;
+                    }
+                    continue;
+                }
+                let zn = norm_of(g, &mut buf);
+                unsafe {
+                    *zp.0.add(g) = zn;
+                    *vp.0.add(g) = true;
+                }
+                acc.scanned += sizes[g] as u64;
+                acc.checked += 1;
+                if violates(g, zn) {
+                    acc.picked.push(g);
+                }
+            }
+        });
+    }
+    for mut acc in accs {
+        out.checked += acc.checked;
+        out.cols_scanned += acc.scanned;
+        out.violations.append(&mut acc.picked);
+    }
+    out
 }
 
 #[cfg(test)]
@@ -154,34 +618,248 @@ mod tests {
         }
     }
 
+    /// Pooled-vs-serial equivalence, dense: force the pooled path by
+    /// exceeding PAR_THRESHOLD and compare against per-column dots.
     #[test]
-    fn threaded_path_consistent_with_serial() {
-        // Force the threaded path by exceeding PAR_THRESHOLD.
+    fn pooled_scan_all_matches_serial() {
         let n = 600;
         let p = (PAR_THRESHOLD / n) + 50;
         let (x, v) = random_matrix(n, p, 3);
         let mut par = vec![0.0; p];
         scan_all(&x, &v, &mut par);
+        let inv_n = 1.0 / n as f64;
         for j in (0..p).step_by(499) {
-            let serial = crate::linalg::ops::dot(x.col(j), &v) / n as f64;
-            assert!((par[j] - serial).abs() < 1e-12);
+            let serial = ops::dot(x.col(j), &v) * inv_n;
+            assert_eq!(par[j], serial, "column {j}");
+        }
+        // and bit-identical to the scoped legacy kernel
+        let mut scoped = vec![0.0; p];
+        scan_all_scoped(&x, &v, &mut scoped);
+        assert_eq!(par, scoped);
+    }
+
+    /// Pooled-vs-serial equivalence, subset.
+    #[test]
+    fn pooled_scan_subset_matches_serial() {
+        let n = 512;
+        let count = (PAR_THRESHOLD / n) + 37;
+        let (x, v) = random_matrix(n, count + 10, 4);
+        let idx: Vec<usize> = (0..count).collect();
+        let mut par = vec![0.0; count];
+        scan_subset(&x, &v, &idx, &mut par);
+        let mut scoped = vec![0.0; count];
+        scan_subset_scoped(&x, &v, &idx, &mut scoped);
+        assert_eq!(par, scoped);
+        let inv_n = 1.0 / n as f64;
+        for k in (0..count).step_by(401) {
+            assert_eq!(par[k], ops::dot(x.col(idx[k]), &v) * inv_n);
         }
     }
 
+    /// Small-case group norms against a naive reference.
     #[test]
-    fn group_scan_matches_naive() {
+    fn group_norms_match_naive() {
         let (x, v) = random_matrix(25, 12, 4);
         let starts = vec![0usize, 4, 9];
         let sizes = vec![4usize, 5, 3];
+        let groups = vec![0usize, 1, 2];
         let mut out = vec![0.0; 3];
-        group_scan_norms(&x, &v, &starts, &sizes, &mut out);
+        let mut valid = vec![false; 3];
+        group_norms(&x, &v, &starts, &sizes, &groups, &mut out, &mut valid);
         for g in 0..3 {
             let mut ss = 0.0;
             for j in starts[g]..starts[g] + sizes[g] {
-                let d = crate::linalg::ops::dot(x.col(j), &v) / 25.0;
+                let d = ops::dot(x.col(j), &v) / 25.0;
                 ss += d * d;
             }
             assert!((out[g] - ss.sqrt()).abs() < 1e-12);
         }
+    }
+
+    /// Pooled-vs-serial equivalence, group norms: force the pooled path and
+    /// compare against the serial buffer+nrm2 reference.
+    #[test]
+    fn pooled_group_norms_match_serial() {
+        let n = 400;
+        let g_count = (PAR_THRESHOLD / (n * 4)) + 9;
+        let sizes: Vec<usize> = (0..g_count).map(|g| 3 + g % 3).collect();
+        let starts: Vec<usize> = sizes
+            .iter()
+            .scan(0usize, |acc, &s| {
+                let st = *acc;
+                *acc += s;
+                Some(st)
+            })
+            .collect();
+        let p: usize = sizes.iter().sum();
+        let (x, v) = random_matrix(n, p, 5);
+        let groups: Vec<usize> = (0..g_count).collect();
+        let mut znorm = vec![0.0; g_count];
+        let mut valid = vec![false; g_count];
+        let cols = group_norms(&x, &v, &starts, &sizes, &groups, &mut znorm, &mut valid);
+        assert_eq!(cols, p as u64);
+        assert!(valid.iter().all(|&b| b));
+        let inv_n = 1.0 / n as f64;
+        for g in (0..g_count).step_by(97) {
+            let buf: Vec<f64> = (starts[g]..starts[g] + sizes[g])
+                .map(|j| ops::dot(x.col(j), &v) * inv_n)
+                .collect();
+            assert_eq!(znorm[g], ops::nrm2(&buf), "group {g}");
+        }
+    }
+
+    /// The fused screen must agree exactly with the unfused
+    /// screen → subset-scan → filter sequence, serial and pooled.
+    #[test]
+    fn fused_screen_matches_scan_then_filter() {
+        // Second case is big enough (stale survivors × n > PAR_THRESHOLD)
+        // to exercise the pooled kernel.
+        for (n, p, seed) in [(50, 120, 7u64), (600, 2 * (PAR_THRESHOLD / 600) + 40, 8u64)] {
+            let (x, r) = random_matrix(n, p, seed);
+            let pred = |j: usize| j % 7 != 0; // arbitrary safe predicate
+            let keep: &(dyn Fn(usize) -> bool + Sync) = &pred;
+            let t = 0.02;
+            // unfused reference
+            let mut survive_ref = vec![true; p];
+            let mut z_ref = vec![0.0; p];
+            let mut valid_ref: Vec<bool> = (0..p).map(|j| j % 10 == 0).collect();
+            let mut rng = Pcg64::new(seed + 1);
+            for j in 0..p {
+                if valid_ref[j] {
+                    z_ref[j] = rng.normal() * 0.01;
+                }
+            }
+            let mut z_fused = z_ref.clone();
+            let mut valid_fused = valid_ref.clone();
+            let mut survive_fused = vec![true; p];
+            // reference: three passes
+            let mut discarded_ref = 0;
+            for j in 0..p {
+                if !pred(j) {
+                    survive_ref[j] = false;
+                    discarded_ref += 1;
+                }
+            }
+            let stale: Vec<usize> =
+                (0..p).filter(|&j| survive_ref[j] && !valid_ref[j]).collect();
+            let mut buf = vec![0.0; stale.len()];
+            scan_subset(&x, &r, &stale, &mut buf);
+            for (s, &j) in stale.iter().enumerate() {
+                z_ref[j] = buf[s];
+                valid_ref[j] = true;
+            }
+            let strong_ref: Vec<usize> =
+                (0..p).filter(|&j| survive_ref[j] && z_ref[j].abs() >= t).collect();
+            // fused: one pass
+            let out = fused_screen(
+                &x,
+                &r,
+                Some(keep),
+                t,
+                &mut survive_fused,
+                &mut z_fused,
+                &mut valid_fused,
+            );
+            assert_eq!(out.strong, strong_ref);
+            assert_eq!(out.discarded, discarded_ref);
+            assert_eq!(out.safe_size, p - discarded_ref);
+            assert_eq!(out.cols_scanned, stale.len() as u64);
+            assert_eq!(survive_fused, survive_ref);
+            assert_eq!(z_fused, z_ref);
+            assert_eq!(valid_fused, valid_ref);
+        }
+    }
+
+    /// The fused KKT pass must agree exactly with the unfused subset scan +
+    /// violation filter + strong refresh, serial and pooled.
+    #[test]
+    fn fused_kkt_matches_scan_then_filter() {
+        for (n, p, seed) in [(40, 90, 11u64), (600, 2 * (PAR_THRESHOLD / 600) + 30, 12u64)] {
+            let (x, r) = random_matrix(n, p, seed);
+            let survive: Vec<bool> = (0..p).map(|j| j % 5 != 1).collect();
+            let in_strong: Vec<bool> = (0..p).map(|j| j % 4 == 0).collect();
+            let thresh = 0.05;
+            let viol = |zj: f64| zj.abs() > thresh;
+            let mut z_ref = vec![0.0; p];
+            let mut valid_ref = vec![false; p];
+            let mut z_fused = vec![0.0; p];
+            let mut valid_fused = vec![false; p];
+            // reference: candidate scan + filter, then strong refresh
+            let check: Vec<usize> =
+                (0..p).filter(|&j| survive[j] && !in_strong[j]).collect();
+            let mut buf = vec![0.0; check.len()];
+            scan_subset(&x, &r, &check, &mut buf);
+            let mut viol_ref = Vec::new();
+            for (s, &j) in check.iter().enumerate() {
+                z_ref[j] = buf[s];
+                valid_ref[j] = true;
+                if viol(buf[s]) {
+                    viol_ref.push(j);
+                }
+            }
+            let strong_cols: Vec<usize> =
+                (0..p).filter(|&j| survive[j] && in_strong[j]).collect();
+            let mut sbuf = vec![0.0; strong_cols.len()];
+            scan_subset(&x, &r, &strong_cols, &mut sbuf);
+            for (s, &j) in strong_cols.iter().enumerate() {
+                z_ref[j] = sbuf[s];
+                valid_ref[j] = true;
+            }
+            // fused: one pass
+            let out = fused_kkt(
+                &x,
+                &r,
+                &survive,
+                &in_strong,
+                &viol,
+                true,
+                &mut z_fused,
+                &mut valid_fused,
+            );
+            assert_eq!(out.violations, viol_ref);
+            assert_eq!(out.checked, check.len());
+            assert_eq!(out.cols_scanned, (check.len() + strong_cols.len()) as u64);
+            assert_eq!(z_fused, z_ref);
+            assert_eq!(valid_fused, valid_ref);
+        }
+    }
+
+    /// Fused group KKT agrees with per-group scan + filter.
+    #[test]
+    fn fused_group_kkt_matches_reference() {
+        let n = 30;
+        let sizes = vec![3usize, 4, 2, 5, 3];
+        let starts = vec![0usize, 3, 7, 9, 14];
+        let p: usize = sizes.iter().sum();
+        let (x, r) = random_matrix(n, p, 13);
+        let survive = vec![true, true, false, true, true];
+        let in_strong = vec![true, false, false, false, true];
+        let thresh = 0.08;
+        let viol = |_g: usize, zn: f64| zn > thresh;
+        let mut znorm = vec![0.0; 5];
+        let mut valid = vec![false; 5];
+        let out = fused_group_kkt(
+            &x, &r, &starts, &sizes, &survive, &in_strong, &viol, true, &mut znorm,
+            &mut valid,
+        );
+        let inv_n = 1.0 / n as f64;
+        let mut viol_ref = Vec::new();
+        for g in 0..5 {
+            if !survive[g] {
+                assert!(!valid[g]);
+                continue;
+            }
+            let buf: Vec<f64> = (starts[g]..starts[g] + sizes[g])
+                .map(|j| ops::dot(x.col(j), &r) * inv_n)
+                .collect();
+            let zn = ops::nrm2(&buf);
+            assert_eq!(znorm[g], zn, "group {g}");
+            assert!(valid[g]);
+            if !in_strong[g] && viol(g, zn) {
+                viol_ref.push(g);
+            }
+        }
+        assert_eq!(out.violations, viol_ref);
+        assert_eq!(out.checked, 2);
     }
 }

@@ -7,6 +7,7 @@
 
 pub mod blocked;
 pub mod ops;
+pub mod pool;
 
 use crate::error::{HssrError, Result};
 

@@ -3,7 +3,7 @@
 //! These are written to auto-vectorize: fixed-width unrolled accumulators,
 //! no bounds checks in the hot loops (slices pre-split into chunks).
 
-/// Dot product with 4-way unrolled accumulators (auto-vectorizes to AVX).
+/// Dot product with 8-way unrolled accumulators (auto-vectorizes to AVX).
 #[inline]
 pub fn dot(a: &[f64], b: &[f64]) -> f64 {
     debug_assert_eq!(a.len(), b.len());

@@ -1,0 +1,343 @@
+//! Persistent scan-worker pool.
+//!
+//! The screening scan `z = Xᵀr/n` is executed hundreds of times per path
+//! fit (screening, SSR refresh, KKT checking at every λ). The original
+//! kernels spawned fresh OS threads via `std::thread::scope` on *every*
+//! scan and hard-capped workers at 8; at path granularity the spawn/join
+//! overhead rivaled the scan itself. This module replaces that with a
+//! process-wide pool of long-lived workers:
+//!
+//! * **Dispatch** is a generation-stamped job slot guarded by a
+//!   `Mutex`/`Condvar` pair: publishing a job bumps the generation and
+//!   wakes every worker; workers park on the condvar between jobs (no
+//!   spinning, no per-job allocation beyond one `AtomicUsize`).
+//! * **Work stealing**: a job is a count of *chunks* (column ranges).
+//!   Workers — including the submitting thread — claim chunks from a
+//!   shared atomic counter until the range is exhausted, so an uneven
+//!   column mix (hot caches, NUMA, frequency scaling) self-balances.
+//! * **Sizing**: `std::thread::available_parallelism()` workers by
+//!   default — the old 8-thread cap is gone — overridable with the
+//!   `HSSR_THREADS` environment variable (read once, at pool creation).
+//! * **Reentrancy**: a job submitted from inside a pool worker (e.g. a
+//!   [`crate::coordinator::jobs::parallel_map`] job whose fit body scans)
+//!   runs inline on the calling thread instead of deadlocking on its own
+//!   pool.
+//!
+//! The pool is created once per process ([`global`]) and reused across
+//! every fit; `WorkerPool::with_threads` exists for tests and benchmarks
+//! that need a differently-sized instance.
+
+use std::cell::Cell;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+
+thread_local! {
+    /// True on threads owned by a [`WorkerPool`] (reentrancy guard).
+    static IN_POOL_WORKER: Cell<bool> = Cell::new(false);
+}
+
+/// Shared-mutable raw pointer for disjoint per-chunk writes from pool
+/// workers. Callers must guarantee no two chunks touch the same index.
+pub(crate) struct RacyPtr<T>(pub *mut T);
+unsafe impl<T> Send for RacyPtr<T> {}
+unsafe impl<T> Sync for RacyPtr<T> {}
+
+/// One published job: a lifetime-erased task plus its chunk counter. The
+/// pointers are only dereferenced while [`WorkerPool::run`] — whose stack
+/// owns both referents — is blocked waiting for the job to finish.
+#[derive(Clone, Copy)]
+struct Job {
+    task: *const (dyn Fn(usize) + Sync),
+    next: *const AtomicUsize,
+    chunks: usize,
+}
+unsafe impl Send for Job {}
+
+struct State {
+    /// Bumped once per published job; workers run when it advances.
+    generation: u64,
+    job: Option<Job>,
+    /// Workers still executing the current generation.
+    running: usize,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    work_ready: Condvar,
+    work_done: Condvar,
+    /// First panic payload from a chunk (contained so the worker survives;
+    /// the submitter re-raises it with the original message).
+    panic_payload: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+}
+
+/// Claim chunks from the job's counter until exhausted.
+fn run_job(job: Job, shared: &Shared) {
+    // SAFETY: see `Job` — the submitter keeps both referents alive until
+    // every worker has finished this generation.
+    let task = unsafe { &*job.task };
+    let next = unsafe { &*job.next };
+    loop {
+        let c = next.fetch_add(1, Ordering::Relaxed);
+        if c >= job.chunks {
+            break;
+        }
+        if let Err(payload) = catch_unwind(AssertUnwindSafe(|| task(c))) {
+            let mut slot = shared.panic_payload.lock().unwrap();
+            slot.get_or_insert(payload);
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    IN_POOL_WORKER.with(|f| f.set(true));
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            while !st.shutdown && st.generation == seen {
+                st = shared.work_ready.wait(st).unwrap();
+            }
+            if st.shutdown {
+                return;
+            }
+            seen = st.generation;
+            st.job.expect("job present when generation advances")
+        };
+        run_job(job, &shared);
+        let mut st = shared.state.lock().unwrap();
+        st.running -= 1;
+        if st.running == 0 {
+            shared.work_done.notify_one();
+        }
+    }
+}
+
+/// A persistent pool of scan workers (see module docs).
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+    /// Serializes job submission across external threads.
+    submit: Mutex<()>,
+}
+
+impl WorkerPool {
+    /// Create a pool that executes jobs on `threads` threads total
+    /// (`threads − 1` parked workers; the submitting thread is the last).
+    pub fn with_threads(threads: usize) -> WorkerPool {
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State {
+                generation: 0,
+                job: None,
+                running: 0,
+                shutdown: false,
+            }),
+            work_ready: Condvar::new(),
+            work_done: Condvar::new(),
+            panic_payload: Mutex::new(None),
+        });
+        let workers = threads.max(1) - 1;
+        let mut handles = Vec::with_capacity(workers);
+        for i in 0..workers {
+            let sh = Arc::clone(&shared);
+            let h = std::thread::Builder::new()
+                .name(format!("hssr-scan-{i}"))
+                .spawn(move || worker_loop(sh))
+                .expect("spawn scan worker");
+            handles.push(h);
+        }
+        WorkerPool { shared, handles, submit: Mutex::new(()) }
+    }
+
+    /// Total threads that execute a job (workers + the submitter).
+    pub fn threads(&self) -> usize {
+        self.handles.len() + 1
+    }
+
+    /// Execute `task(c)` for every chunk `c in 0..chunks` across the pool,
+    /// blocking until all chunks complete. Chunks are claimed dynamically
+    /// (work stealing); the calling thread participates. Calls from inside
+    /// a pool worker run inline (serial) — see module docs.
+    pub fn run(&self, chunks: usize, task: &(dyn Fn(usize) + Sync)) {
+        if chunks == 0 {
+            return;
+        }
+        let inline =
+            self.handles.is_empty() || chunks == 1 || IN_POOL_WORKER.with(|f| f.get());
+        if inline {
+            for c in 0..chunks {
+                task(c);
+            }
+            return;
+        }
+        let _guard = self.submit.lock().unwrap();
+        let next = AtomicUsize::new(0);
+        let job = Job { task: task as *const _, next: &next as *const _, chunks };
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.job = Some(job);
+            st.generation = st.generation.wrapping_add(1);
+            st.running = self.handles.len();
+        }
+        self.shared.work_ready.notify_all();
+        // The submitter participates in stealing; flag it as in-pool so a
+        // nested submission from one of its own chunks runs inline instead
+        // of re-locking `submit`.
+        let was_in_pool = IN_POOL_WORKER.with(|f| f.replace(true));
+        run_job(job, &self.shared);
+        IN_POOL_WORKER.with(|f| f.set(was_in_pool));
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            while st.running != 0 {
+                st = self.shared.work_done.wait(st).unwrap();
+            }
+            st.job = None;
+        }
+        let payload = self.shared.panic_payload.lock().unwrap().take();
+        if let Some(payload) = payload {
+            resume_unwind(payload);
+        }
+    }
+
+    /// Run `f(i)` for `i in 0..items` across the pool, returning results in
+    /// index order (one chunk per item; work-stealing balances skew).
+    pub fn map<T, F>(&self, items: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        let mut out: Vec<Option<T>> = (0..items).map(|_| None).collect();
+        let slots = RacyPtr(out.as_mut_ptr());
+        self.run(items, &|i| {
+            // SAFETY: chunk i is claimed by exactly one thread, so slot i
+            // has exactly one writer; `run` blocks until all writes land.
+            unsafe { *slots.0.add(i) = Some(f(i)) };
+        });
+        out.into_iter().map(|v| v.expect("pool job completed")).collect()
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.work_ready.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Parse a thread-count override string (the `HSSR_THREADS` format):
+/// a positive integer; anything else falls back to the hardware count.
+pub fn parse_thread_override(value: Option<&str>, hardware: usize) -> usize {
+    match value.map(|s| s.trim().parse::<usize>()) {
+        Some(Ok(t)) if t > 0 => t,
+        _ => hardware.max(1),
+    }
+}
+
+/// Thread count the global pool is built with: `HSSR_THREADS` if set to a
+/// positive integer, else `available_parallelism()`.
+pub fn configured_threads() -> usize {
+    let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let var = std::env::var("HSSR_THREADS").ok();
+    parse_thread_override(var.as_deref(), hw)
+}
+
+/// The process-wide scan pool, created on first use and reused by every
+/// fit, bench, and the coordinator job runner.
+pub fn global() -> &'static WorkerPool {
+    static POOL: OnceLock<WorkerPool> = OnceLock::new();
+    POOL.get_or_init(|| WorkerPool::with_threads(configured_threads()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn runs_every_chunk_exactly_once() {
+        let pool = WorkerPool::with_threads(4);
+        let hits: Vec<AtomicU64> = (0..257).map(|_| AtomicU64::new(0)).collect();
+        pool.run(hits.len(), &|c| {
+            hits[c].fetch_add(1, Ordering::Relaxed);
+        });
+        for (c, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 1, "chunk {c}");
+        }
+    }
+
+    #[test]
+    fn pool_is_reusable_across_jobs() {
+        let pool = WorkerPool::with_threads(3);
+        let total = AtomicUsize::new(0);
+        for _ in 0..50 {
+            pool.run(16, &|_| {
+                total.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(total.load(Ordering::Relaxed), 50 * 16);
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let pool = WorkerPool::with_threads(4);
+        let out = pool.map(100, |i| i * i);
+        assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_thread_pool_runs_inline() {
+        let pool = WorkerPool::with_threads(1);
+        assert_eq!(pool.threads(), 1);
+        let out = pool.map(5, |i| i + 1);
+        assert_eq!(out, vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn nested_submission_runs_inline_without_deadlock() {
+        let pool = Arc::new(WorkerPool::with_threads(4));
+        let p2 = Arc::clone(&pool);
+        let total = AtomicUsize::new(0);
+        pool.run(8, &|_| {
+            // Re-entrant submission from a worker must not deadlock.
+            p2.run(4, &|_| {
+                total.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 32);
+    }
+
+    #[test]
+    fn zero_chunks_is_a_noop() {
+        let pool = WorkerPool::with_threads(2);
+        pool.run(0, &|_| panic!("must not run"));
+    }
+
+    #[test]
+    fn thread_override_parsing() {
+        assert_eq!(parse_thread_override(Some("6"), 8), 6);
+        assert_eq!(parse_thread_override(Some(" 12 "), 8), 12);
+        assert_eq!(parse_thread_override(Some("0"), 8), 8);
+        assert_eq!(parse_thread_override(Some("lots"), 8), 8);
+        assert_eq!(parse_thread_override(None, 8), 8);
+        assert_eq!(parse_thread_override(None, 0), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "boom")]
+    fn task_panic_propagates_to_submitter() {
+        let pool = WorkerPool::with_threads(2);
+        pool.run(8, &|c| {
+            if c == 3 {
+                panic!("boom");
+            }
+        });
+    }
+}

@@ -86,4 +86,58 @@ mod tests {
             Ok(())
         });
     }
+
+    /// The fused single-pass screening/KKT driver must select **exactly**
+    /// the same features as the unfused scan-then-filter driver — same
+    /// sparse solutions, same safe/strong set sizes at every λ — for every
+    /// [`RuleKind`], over randomized problem shapes.
+    #[test]
+    fn fused_pass_selects_same_features_as_unfused() {
+        use crate::data::DataSpec;
+        use crate::screening::RuleKind;
+        use crate::solver::path::{fit_lasso_path, PathConfig};
+        check(PropConfig { cases: 6, seed: 0xF05E }, |rng, scale| {
+            let n = 40 + (rng.below(60) as f64 * scale) as usize;
+            let p = 60 + (rng.below(160) as f64 * scale) as usize;
+            let s = 1 + rng.below(8) as usize;
+            let ds = DataSpec::synthetic(n, p, s).generate(rng.next_u64());
+            for rule in [
+                RuleKind::BasicPcd,
+                RuleKind::ActiveCycling,
+                RuleKind::Ssr,
+                RuleKind::Sedpp,
+                RuleKind::SsrBedpp,
+                RuleKind::SsrDome,
+                RuleKind::SsrBedppSedpp,
+            ] {
+                let cfg =
+                    PathConfig { rule, n_lambda: 15, tol: 1e-8, ..PathConfig::default() };
+                let fused = fit_lasso_path(&ds, &cfg).map_err(|e| e.to_string())?;
+                let unfused =
+                    fit_lasso_path(&ds, &PathConfig { fused: false, ..cfg })
+                        .map_err(|e| e.to_string())?;
+                prop_assert!(
+                    fused.betas == unfused.betas,
+                    "{rule:?}: solutions differ (n={n}, p={p}, s={s})"
+                );
+                for (k, (a, b)) in
+                    fused.metrics.iter().zip(&unfused.metrics).enumerate()
+                {
+                    prop_assert!(
+                        a.safe_size == b.safe_size,
+                        "{rule:?}: |S| differs at λ#{k} ({} vs {})",
+                        a.safe_size,
+                        b.safe_size
+                    );
+                    prop_assert!(
+                        a.strong_size == b.strong_size,
+                        "{rule:?}: |H| differs at λ#{k} ({} vs {})",
+                        a.strong_size,
+                        b.strong_size
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
 }

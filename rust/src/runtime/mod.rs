@@ -3,14 +3,30 @@
 //!
 //! Two interchangeable engines implement [`ScanEngine`]:
 //!
-//! * [`native::NativeEngine`] — blocked, multi-threaded pure-Rust kernels
-//!   (the default; fastest on CPU-sized problems).
+//! * [`native::NativeEngine`] — blocked pure-Rust kernels dispatched on the
+//!   persistent [`crate::linalg::pool`] worker pool (the default; fastest
+//!   on CPU-sized problems). It overrides the **fused** entry points with
+//!   true single-pass kernels.
 //! * [`pjrt::PjrtEngine`] — loads the AOT artifacts produced by
 //!   `make artifacts` (JAX/Pallas → HLO text) and executes them through the
-//!   PJRT C API via the `xla` crate. This is the L1/L2/L3 composition path:
-//!   the same kernel validated against the pure-jnp oracle in
-//!   `python/tests` runs inside the Rust coordinator with *no Python at
-//!   runtime*.
+//!   PJRT C API via the `xla` crate (behind the `pjrt` cargo feature; a
+//!   stub that reports itself unavailable is compiled otherwise). This is
+//!   the L1/L2/L3 composition path: the same kernel validated against the
+//!   pure-jnp oracle in `python/tests` runs inside the Rust coordinator
+//!   with *no Python at runtime*.
+//!
+//! ## Fused entry points
+//!
+//! Algorithm 1 touches the same column set up to three times per λ step:
+//! safe-rule screen, SSR filter, and post-convergence KKT check. The trait
+//! therefore exposes *fused* passes — [`ScanEngine::fused_screen`],
+//! [`ScanEngine::fused_kkt`], and their group-lasso analogues — that
+//! compute each `z_j` once and immediately apply every predicate. The
+//! trait provides **scan-then-filter default implementations** built on
+//! [`ScanEngine::scan_subset`], so engines that can only execute plain
+//! scans (the tile-based PJRT engine) fall back transparently;
+//! `NativeEngine` overrides them with the one-traversal kernels in
+//! [`crate::linalg::blocked`].
 //!
 //! The PJRT engine is tile-based: artifacts are compiled for a fixed
 //! `(N_TILE × P_TILE)` block (AOT requires static shapes); arbitrary
@@ -21,6 +37,7 @@ pub mod native;
 pub mod pjrt;
 
 use crate::error::Result;
+use crate::linalg::blocked::{FusedKktOut, FusedScreenOut};
 use crate::linalg::DenseMatrix;
 
 /// A provider of the screening scan.
@@ -43,12 +60,178 @@ pub trait ScanEngine {
 
     /// `out[j] = x_jᵀ v / n` over all columns.
     fn scan_all(&self, x: &DenseMatrix, v: &[f64], out: &mut [f64]) -> Result<()>;
+
+    /// Fused screening pass at one λ step: apply the point-wise safe
+    /// predicate `keep` (when given), lazily refresh stale `z_j`, and
+    /// classify survivors against the SSR threshold — see
+    /// [`crate::linalg::blocked::fused_screen`] for the exact semantics.
+    ///
+    /// Default: scan-then-filter over [`ScanEngine::scan_subset`] (three
+    /// separate passes, same selection — the PJRT fallback).
+    #[allow(clippy::too_many_arguments)]
+    fn fused_screen(
+        &self,
+        x: &DenseMatrix,
+        r: &[f64],
+        keep: Option<&(dyn Fn(usize) -> bool + Sync)>,
+        ssr_threshold: f64,
+        survive: &mut [bool],
+        z: &mut [f64],
+        z_valid: &mut [bool],
+    ) -> Result<FusedScreenOut> {
+        let p = x.ncols();
+        let mut out = FusedScreenOut::default();
+        if let Some(pred) = keep {
+            for j in 0..p {
+                if survive[j] && !pred(j) {
+                    survive[j] = false;
+                    out.discarded += 1;
+                }
+            }
+        }
+        let stale: Vec<usize> = (0..p).filter(|&j| survive[j] && !z_valid[j]).collect();
+        if !stale.is_empty() {
+            let mut buf = vec![0.0; stale.len()];
+            self.scan_subset(x, r, &stale, &mut buf)?;
+            for (s, &j) in stale.iter().enumerate() {
+                z[j] = buf[s];
+                z_valid[j] = true;
+            }
+            out.cols_scanned = stale.len() as u64;
+        }
+        for j in 0..p {
+            if survive[j] {
+                out.safe_size += 1;
+                if z[j].abs() >= ssr_threshold {
+                    out.strong.push(j);
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Fused post-convergence KKT pass: recompute `z_j` for surviving
+    /// candidates (and, when `refresh_strong`, for strong columns too) and
+    /// collect violators — see [`crate::linalg::blocked::fused_kkt`].
+    ///
+    /// Default: scan-then-filter over [`ScanEngine::scan_subset`].
+    #[allow(clippy::too_many_arguments)]
+    fn fused_kkt(
+        &self,
+        x: &DenseMatrix,
+        r: &[f64],
+        survive: &[bool],
+        in_strong: &[bool],
+        violates: &(dyn Fn(f64) -> bool + Sync),
+        refresh_strong: bool,
+        z: &mut [f64],
+        z_valid: &mut [bool],
+    ) -> Result<FusedKktOut> {
+        let p = x.ncols();
+        let mut out = FusedKktOut::default();
+        let check: Vec<usize> = (0..p).filter(|&j| survive[j] && !in_strong[j]).collect();
+        if !check.is_empty() {
+            let mut buf = vec![0.0; check.len()];
+            self.scan_subset(x, r, &check, &mut buf)?;
+            for (s, &j) in check.iter().enumerate() {
+                z[j] = buf[s];
+                z_valid[j] = true;
+                if violates(buf[s]) {
+                    out.violations.push(j);
+                }
+            }
+            out.checked = check.len();
+            out.cols_scanned += check.len() as u64;
+        }
+        if refresh_strong {
+            let strong: Vec<usize> =
+                (0..p).filter(|&j| survive[j] && in_strong[j]).collect();
+            if !strong.is_empty() {
+                let mut buf = vec![0.0; strong.len()];
+                self.scan_subset(x, r, &strong, &mut buf)?;
+                for (s, &j) in strong.iter().enumerate() {
+                    z[j] = buf[s];
+                    z_valid[j] = true;
+                }
+                out.cols_scanned += strong.len() as u64;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Refresh `znorm[g] = ‖X_gᵀ r‖ / n` for each `g` in `groups`, marking
+    /// them valid. Returns columns scanned.
+    ///
+    /// Default: one [`ScanEngine::scan_subset`] per group (the PJRT
+    /// fallback, and exactly the unfused group path's access pattern).
+    #[allow(clippy::too_many_arguments)]
+    fn group_norms(
+        &self,
+        x: &DenseMatrix,
+        r: &[f64],
+        starts: &[usize],
+        sizes: &[usize],
+        groups: &[usize],
+        znorm: &mut [f64],
+        znorm_valid: &mut [bool],
+    ) -> Result<u64> {
+        let mut cols = 0u64;
+        for &g in groups {
+            let idx: Vec<usize> = (starts[g]..starts[g] + sizes[g]).collect();
+            let mut buf = vec![0.0; idx.len()];
+            self.scan_subset(x, r, &idx, &mut buf)?;
+            znorm[g] = crate::linalg::ops::nrm2(&buf);
+            znorm_valid[g] = true;
+            cols += idx.len() as u64;
+        }
+        Ok(cols)
+    }
+
+    /// Fused group-level KKT pass — see
+    /// [`crate::linalg::blocked::fused_group_kkt`].
+    ///
+    /// Default: per-group scan-then-filter over
+    /// [`ScanEngine::group_norms`].
+    #[allow(clippy::too_many_arguments)]
+    fn fused_group_kkt(
+        &self,
+        x: &DenseMatrix,
+        r: &[f64],
+        starts: &[usize],
+        sizes: &[usize],
+        survive: &[bool],
+        in_strong: &[bool],
+        violates: &(dyn Fn(usize, f64) -> bool + Sync),
+        refresh_strong: bool,
+        znorm: &mut [f64],
+        znorm_valid: &mut [bool],
+    ) -> Result<FusedKktOut> {
+        let g_count = starts.len();
+        let mut out = FusedKktOut::default();
+        let check: Vec<usize> =
+            (0..g_count).filter(|&g| survive[g] && !in_strong[g]).collect();
+        out.cols_scanned +=
+            self.group_norms(x, r, starts, sizes, &check, znorm, znorm_valid)?;
+        for &g in &check {
+            out.checked += 1;
+            if violates(g, znorm[g]) {
+                out.violations.push(g);
+            }
+        }
+        if refresh_strong {
+            let strong: Vec<usize> =
+                (0..g_count).filter(|&g| survive[g] && in_strong[g]).collect();
+            out.cols_scanned +=
+                self.group_norms(x, r, starts, sizes, &strong, znorm, znorm_valid)?;
+        }
+        Ok(out)
+    }
 }
 
 /// Engine selector used by configs and the CLI.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum EngineKind {
-    /// Pure-Rust blocked kernels.
+    /// Pure-Rust blocked kernels on the persistent worker pool.
     Native,
     /// AOT JAX/Pallas artifacts through PJRT.
     Pjrt,
@@ -66,7 +249,8 @@ impl EngineKind {
 }
 
 /// Build an engine. For [`EngineKind::Pjrt`], `artifact_dir` must contain
-/// the HLO artifacts (default `artifacts/`).
+/// the HLO artifacts (default `artifacts/`) and the crate must be built
+/// with the `pjrt` feature.
 pub fn make_engine(kind: EngineKind, artifact_dir: &str) -> Result<Box<dyn ScanEngine>> {
     match kind {
         EngineKind::Native => Ok(Box::new(native::NativeEngine::new())),
@@ -84,5 +268,75 @@ mod tests {
         assert_eq!(EngineKind::parse("PJRT"), Some(EngineKind::Pjrt));
         assert_eq!(EngineKind::parse("xla"), Some(EngineKind::Pjrt));
         assert_eq!(EngineKind::parse("gpu"), None);
+    }
+
+    /// The default (scan-then-filter) fused implementations must select
+    /// exactly what the native one-pass kernels select.
+    #[test]
+    fn default_fused_impls_match_native_overrides() {
+        use crate::rng::Pcg64;
+
+        /// Wrapper that deliberately keeps the trait's default fused
+        /// implementations (the PJRT fallback path).
+        struct ScanOnly(native::NativeEngine);
+        impl ScanEngine for ScanOnly {
+            fn name(&self) -> &'static str {
+                "scan-only"
+            }
+            fn scan_subset(
+                &self,
+                x: &DenseMatrix,
+                v: &[f64],
+                idx: &[usize],
+                out: &mut [f64],
+            ) -> Result<()> {
+                self.0.scan_subset(x, v, idx, out)
+            }
+            fn scan_all(&self, x: &DenseMatrix, v: &[f64], out: &mut [f64]) -> Result<()> {
+                self.0.scan_all(x, v, out)
+            }
+        }
+
+        let mut rng = Pcg64::new(9);
+        let x = DenseMatrix::from_fn(40, 90, |_, _| rng.normal());
+        let r = rng.normal_vec(40);
+        let fallback = ScanOnly(native::NativeEngine::new());
+        let nat = native::NativeEngine::new();
+        let pred = |j: usize| j % 6 != 2;
+        let keep: &(dyn Fn(usize) -> bool + Sync) = &pred;
+
+        let mut s1 = vec![true; 90];
+        let mut z1 = vec![0.0; 90];
+        let mut v1 = vec![false; 90];
+        let a = fallback
+            .fused_screen(&x, &r, Some(keep), 0.02, &mut s1, &mut z1, &mut v1)
+            .unwrap();
+        let mut s2 = vec![true; 90];
+        let mut z2 = vec![0.0; 90];
+        let mut v2 = vec![false; 90];
+        let b = nat
+            .fused_screen(&x, &r, Some(keep), 0.02, &mut s2, &mut z2, &mut v2)
+            .unwrap();
+        assert_eq!(a.strong, b.strong);
+        assert_eq!(a.safe_size, b.safe_size);
+        assert_eq!(a.discarded, b.discarded);
+        assert_eq!(s1, s2);
+        assert_eq!(z1, z2);
+
+        let in_strong: Vec<bool> = (0..90).map(|j| j % 4 == 0).collect();
+        let viol = |zj: f64| zj.abs() > 0.04;
+        let mut za = z1.clone();
+        let mut va = vec![false; 90];
+        let ka = fallback
+            .fused_kkt(&x, &r, &s1, &in_strong, &viol, true, &mut za, &mut va)
+            .unwrap();
+        let mut zb = z2.clone();
+        let mut vb = vec![false; 90];
+        let kb = nat
+            .fused_kkt(&x, &r, &s2, &in_strong, &viol, true, &mut zb, &mut vb)
+            .unwrap();
+        assert_eq!(ka.violations, kb.violations);
+        assert_eq!(ka.checked, kb.checked);
+        assert_eq!(za, zb);
     }
 }

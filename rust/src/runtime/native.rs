@@ -1,20 +1,27 @@
-//! The default pure-Rust scan engine.
+//! The default pure-Rust scan engine, backed by the persistent worker pool.
 
 use super::ScanEngine;
 use crate::error::Result;
-use crate::linalg::{blocked, DenseMatrix};
+use crate::linalg::blocked::{self, FusedKktOut, FusedScreenOut};
+use crate::linalg::DenseMatrix;
 
-/// Blocked, multi-threaded Rust kernels (see [`crate::linalg::blocked`]).
+/// Blocked Rust kernels dispatched on [`crate::linalg::pool`] (see
+/// [`crate::linalg::blocked`]). One process-wide pool is created lazily and
+/// shared by every engine instance, so a fit never spawns per-scan threads.
+/// Overrides every fused [`ScanEngine`] entry point with the true
+/// single-traversal kernels.
 #[derive(Debug, Default)]
 pub struct NativeEngine;
 
 impl NativeEngine {
-    /// Create the engine (stateless).
+    /// Create the engine (stateless; the pool is process-global).
     pub fn new() -> Self {
         NativeEngine
     }
 }
 
+// The fused entry points mirror the trait's (wide) signatures.
+#[allow(clippy::too_many_arguments)]
 impl ScanEngine for NativeEngine {
     fn name(&self) -> &'static str {
         "native"
@@ -34,6 +41,82 @@ impl ScanEngine for NativeEngine {
     fn scan_all(&self, x: &DenseMatrix, v: &[f64], out: &mut [f64]) -> Result<()> {
         blocked::scan_all(x, v, out);
         Ok(())
+    }
+
+    fn fused_screen(
+        &self,
+        x: &DenseMatrix,
+        r: &[f64],
+        keep: Option<&(dyn Fn(usize) -> bool + Sync)>,
+        ssr_threshold: f64,
+        survive: &mut [bool],
+        z: &mut [f64],
+        z_valid: &mut [bool],
+    ) -> Result<FusedScreenOut> {
+        Ok(blocked::fused_screen(x, r, keep, ssr_threshold, survive, z, z_valid))
+    }
+
+    fn fused_kkt(
+        &self,
+        x: &DenseMatrix,
+        r: &[f64],
+        survive: &[bool],
+        in_strong: &[bool],
+        violates: &(dyn Fn(f64) -> bool + Sync),
+        refresh_strong: bool,
+        z: &mut [f64],
+        z_valid: &mut [bool],
+    ) -> Result<FusedKktOut> {
+        Ok(blocked::fused_kkt(
+            x,
+            r,
+            survive,
+            in_strong,
+            violates,
+            refresh_strong,
+            z,
+            z_valid,
+        ))
+    }
+
+    fn group_norms(
+        &self,
+        x: &DenseMatrix,
+        r: &[f64],
+        starts: &[usize],
+        sizes: &[usize],
+        groups: &[usize],
+        znorm: &mut [f64],
+        znorm_valid: &mut [bool],
+    ) -> Result<u64> {
+        Ok(blocked::group_norms(x, r, starts, sizes, groups, znorm, znorm_valid))
+    }
+
+    fn fused_group_kkt(
+        &self,
+        x: &DenseMatrix,
+        r: &[f64],
+        starts: &[usize],
+        sizes: &[usize],
+        survive: &[bool],
+        in_strong: &[bool],
+        violates: &(dyn Fn(usize, f64) -> bool + Sync),
+        refresh_strong: bool,
+        znorm: &mut [f64],
+        znorm_valid: &mut [bool],
+    ) -> Result<FusedKktOut> {
+        Ok(blocked::fused_group_kkt(
+            x,
+            r,
+            starts,
+            sizes,
+            survive,
+            in_strong,
+            violates,
+            refresh_strong,
+            znorm,
+            znorm_valid,
+        ))
     }
 }
 

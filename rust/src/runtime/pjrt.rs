@@ -19,6 +19,17 @@
 //! tiles and applies the `1/n` normalization. Padding is exact (zero
 //! rows/columns contribute nothing to the dot products).
 //!
+//! ### Feature gating
+//!
+//! The real engine needs the `xla` crate, which the offline registry
+//! cannot vendor; it compiles only under the **`pjrt` cargo feature** (see
+//! `Cargo.toml` for how to point it at a local checkout). Without the
+//! feature this module provides a stub whose `load` always returns an
+//! [`HssrError::Artifact`], so every call site (CLI `--engine pjrt`,
+//! benches, `make_engine`) degrades gracefully to the native pool engine.
+//! The fused `ScanEngine` entry points are *not* overridden by either
+//! variant: the PJRT engine uses the trait's scan-then-filter defaults.
+//!
 //! ### §Perf note
 //!
 //! The original engine used the row-major `(N × P)` tile: filling it from
@@ -29,36 +40,17 @@
 //! tails instead of the whole 8 MiB buffer. See EXPERIMENTS.md §Perf for
 //! the before/after.
 
+#[cfg(feature = "pjrt")]
 use std::cell::{Cell, RefCell};
+#[cfg(feature = "pjrt")]
 use std::path::Path;
 
 use super::ScanEngine;
 use crate::error::{HssrError, Result};
 use crate::linalg::DenseMatrix;
 
-/// One compiled tile executable.
-struct TileExe {
-    n_tile: usize,
-    p_tile: usize,
-    exe: xla::PjRtLoadedExecutable,
-    /// Whether this artifact embeds the Pallas kernel lowering.
-    pallas: bool,
-    /// Whether the artifact expects the feature-major `(P × N)` layout.
-    transposed: bool,
-}
-
-/// PJRT scan engine (see module docs).
-pub struct PjrtEngine {
-    client: xla::PjRtClient,
-    tile: TileExe,
-    /// Reusable tile buffer (row-major `(n_tile, p_tile)` or feature-major
-    /// `(p_tile, n_tile)` depending on the artifact).
-    scratch: RefCell<Vec<f64>>,
-    /// High-water mark of columns written in `scratch` (stale-data guard).
-    dirty_cols: Cell<usize>,
-}
-
 /// Parse `xtr[t][_pallas]_n{N}_p{P}.hlo.txt` → `(transposed, pallas, n, p)`.
+#[cfg_attr(not(feature = "pjrt"), allow(dead_code))]
 fn parse_artifact_name(name: &str) -> Option<(bool, bool, usize, usize)> {
     let stem = name.strip_suffix(".hlo.txt")?;
     let (transposed, pallas, rest) = if let Some(r) = stem.strip_prefix("xtrt_pallas_") {
@@ -78,6 +70,31 @@ fn parse_artifact_name(name: &str) -> Option<(bool, bool, usize, usize)> {
     Some((transposed, pallas, n, p))
 }
 
+/// One compiled tile executable.
+#[cfg(feature = "pjrt")]
+struct TileExe {
+    n_tile: usize,
+    p_tile: usize,
+    exe: xla::PjRtLoadedExecutable,
+    /// Whether this artifact embeds the Pallas kernel lowering.
+    pallas: bool,
+    /// Whether the artifact expects the feature-major `(P × N)` layout.
+    transposed: bool,
+}
+
+/// PJRT scan engine (see module docs).
+#[cfg(feature = "pjrt")]
+pub struct PjrtEngine {
+    client: xla::PjRtClient,
+    tile: TileExe,
+    /// Reusable tile buffer (row-major `(n_tile, p_tile)` or feature-major
+    /// `(p_tile, n_tile)` depending on the artifact).
+    scratch: RefCell<Vec<f64>>,
+    /// High-water mark of columns written in `scratch` (stale-data guard).
+    dirty_cols: Cell<usize>,
+}
+
+#[cfg(feature = "pjrt")]
 impl PjrtEngine {
     /// Discover and compile artifacts from `dir`. Preference order:
     /// transposed-Pallas, row-major Pallas, plain jnp; larger tiles win ties.
@@ -200,6 +217,7 @@ impl PjrtEngine {
     }
 }
 
+#[cfg(feature = "pjrt")]
 impl ScanEngine for PjrtEngine {
     fn name(&self) -> &'static str {
         match (self.tile.pallas, self.tile.transposed) {
@@ -248,6 +266,63 @@ impl ScanEngine for PjrtEngine {
     }
 }
 
+/// Stub compiled without the `pjrt` feature: [`PjrtEngine::load`] always
+/// fails with an [`HssrError::Artifact`] explaining how to enable the real
+/// engine, so callers fall back to [`super::native::NativeEngine`].
+#[cfg(not(feature = "pjrt"))]
+pub struct PjrtEngine {
+    _private: (),
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl PjrtEngine {
+    /// Always fails: the crate was built without the `pjrt` feature.
+    pub fn load(dir: &str) -> Result<PjrtEngine> {
+        Err(HssrError::Artifact(format!(
+            "PJRT engine unavailable: built without the `pjrt` cargo feature \
+             (artifact dir '{dir}' ignored); rebuild with --features pjrt and \
+             a local `xla` crate checkout"
+        )))
+    }
+
+    /// Tile dimensions of the compiled artifact (stub: unreachable — `load`
+    /// never returns an instance).
+    pub fn tile_shape(&self) -> (usize, usize) {
+        unreachable!("stub PjrtEngine cannot be constructed")
+    }
+
+    /// Whether the loaded artifact embeds the Pallas kernel (stub).
+    pub fn is_pallas(&self) -> bool {
+        unreachable!("stub PjrtEngine cannot be constructed")
+    }
+
+    /// Whether the artifact uses the feature-major layout (stub).
+    pub fn is_transposed(&self) -> bool {
+        unreachable!("stub PjrtEngine cannot be constructed")
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl ScanEngine for PjrtEngine {
+    fn name(&self) -> &'static str {
+        "pjrt-stub"
+    }
+
+    fn scan_subset(
+        &self,
+        _x: &DenseMatrix,
+        _v: &[f64],
+        _idx: &[usize],
+        _out: &mut [f64],
+    ) -> Result<()> {
+        unreachable!("stub PjrtEngine cannot be constructed")
+    }
+
+    fn scan_all(&self, _x: &DenseMatrix, _v: &[f64], _out: &mut [f64]) -> Result<()> {
+        unreachable!("stub PjrtEngine cannot be constructed")
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -272,13 +347,15 @@ mod tests {
 
     #[test]
     fn missing_dir_is_artifact_error() {
+        // Without the feature, any load is an Artifact error; with it, a
+        // missing directory is.
         match PjrtEngine::load("/nonexistent-artifacts") {
-            Err(HssrError::Artifact(_)) => {}
+            Err(crate::error::HssrError::Artifact(_)) => {}
             Err(other) => panic!("wrong error kind: {other}"),
             Ok(_) => panic!("load should fail on a missing directory"),
         }
     }
 
     // End-to-end numeric agreement with the native engine is covered by
-    // rust/tests/pjrt_engine.rs (requires `make artifacts`).
+    // rust/tests/pjrt_engine.rs (requires `make artifacts` + --features pjrt).
 }

@@ -24,11 +24,12 @@ impl Bedpp {
         Bedpp { dead: false }
     }
 
-    /// Evaluate the rule at `lam`, clearing `survive[j]` for discarded
-    /// features. Standalone entry point (also used by the hybrid rules and
-    /// the Figure-1 power measurement).
-    pub fn screen_at(ctx: &SafeContext, lam: f64, survive: &mut [bool]) -> usize {
-        assert_eq!(survive.len(), ctx.p);
+    /// The per-column linear-test scalars `(a, b, rhs)` of rule (9) /
+    /// Thm 4.1 at `lam`: feature `j ≠ *` is discarded iff
+    /// `|a·xty_j − b·xtx*_j| < rhs`. Returns `None` when the RHS is
+    /// non-positive (the rule is powerless at this λ). This is the
+    /// point-wise form the fused scan kernel dispatches on.
+    pub fn predicate_coeffs(ctx: &SafeContext, lam: f64) -> Option<(f64, f64, f64)> {
         assert!(
             !ctx.xtx_star.is_empty(),
             "BEDPP requires SafeContext built with need_star = true"
@@ -57,8 +58,20 @@ impl Bedpp {
             }
         };
         if rhs <= 0.0 {
-            return 0; // rule is powerless at this λ
+            None // rule is powerless at this λ
+        } else {
+            Some((lhs_a, lhs_b, rhs))
         }
+    }
+
+    /// Evaluate the rule at `lam`, clearing `survive[j]` for discarded
+    /// features. Standalone entry point (also used by the hybrid rules and
+    /// the Figure-1 power measurement).
+    pub fn screen_at(ctx: &SafeContext, lam: f64, survive: &mut [bool]) -> usize {
+        assert_eq!(survive.len(), ctx.p);
+        let Some((lhs_a, lhs_b, rhs)) = Bedpp::predicate_coeffs(ctx, lam) else {
+            return 0;
+        };
         let mut discarded = 0;
         for j in 0..ctx.p {
             if !survive[j] || j == ctx.star {
@@ -109,6 +122,38 @@ impl SafeRule for Bedpp {
 
     fn dead(&self) -> bool {
         self.dead
+    }
+
+    /// Point-wise plan: BEDPP's test is a scalar linear form in the per-fit
+    /// precomputes, so the fused kernel applies it per column with no mask
+    /// traversal. Keep `j` iff `j = *` or `|a·xty_j − b·xtx*_j| ≥ rhs` —
+    /// the exact complement of [`Bedpp::screen_at`]'s discard test.
+    fn plan<'s>(
+        &'s mut self,
+        _x: &DenseMatrix,
+        ctx: &'s SafeContext,
+        _prev: &PrevSolution<'_>,
+        lam_next: f64,
+        _survive: &mut [bool],
+        masked_discards: &mut usize,
+    ) -> Option<Box<dyn Fn(usize) -> bool + Sync + 's>> {
+        *masked_discards = 0;
+        match Bedpp::predicate_coeffs(ctx, lam_next) {
+            None => {
+                // Powerless at this λ ⇒ powerless at all smaller λ (the RHS
+                // is monotone); mirror `screen`'s dead flag.
+                self.dead = true;
+                None
+            }
+            Some((a, b, rhs)) => {
+                let xty = &ctx.xty;
+                let xs = &ctx.xtx_star;
+                let star = ctx.star;
+                Some(Box::new(move |j: usize| {
+                    j == star || (a * xty[j] - b * xs[j]).abs() >= rhs
+                }))
+            }
+        }
     }
 }
 
@@ -172,6 +217,35 @@ mod tests {
         let d = Bedpp::screen_at(&ctx, 0.9 * ctx.lambda_max, &mut survive);
         assert!(d > 0);
         assert!(survive[ctx.star]);
+    }
+
+    /// The fused-pass predicate must agree with `screen_at` column by
+    /// column at every λ (and be `None` exactly when the rule is
+    /// powerless).
+    #[test]
+    fn plan_predicate_matches_screen_at() {
+        use crate::screening::SafeRule;
+        let (ds, ctx) = ctx_for(8, Penalty::Lasso);
+        let r = ds.y.clone();
+        let prev = PrevSolution { lambda: ctx.lambda_max, r: &r };
+        for frac in [0.95, 0.7, 0.5, 0.05] {
+            let lam = frac * ctx.lambda_max;
+            let mut rule = Bedpp::new();
+            let mut survive = vec![true; ctx.p];
+            let mut d = 0usize;
+            let keep = rule.plan(&ds.x, &ctx, &prev, lam, &mut survive, &mut d);
+            assert_eq!(d, 0);
+            let mut mask = vec![true; ctx.p];
+            let screened = Bedpp::screen_at(&ctx, lam, &mut mask);
+            match keep {
+                Some(pred) => {
+                    for j in 0..ctx.p {
+                        assert_eq!(pred(j), mask[j], "feature {j} at {frac}·λmax");
+                    }
+                }
+                None => assert_eq!(screened, 0, "plan None but screen discards"),
+            }
+        }
     }
 
     #[test]

@@ -53,6 +53,48 @@ fn dome_sup(gc: f64, gn: f64, gnorm: f64, r: f64, t: f64) -> f64 {
     }
 }
 
+/// The λ-dependent scalars of the dome test, shared by the mask screen and
+/// the fused point-wise predicate so both evaluate bit-identically.
+#[derive(Clone, Copy)]
+struct DomeScalars {
+    n: f64,
+    alpha: f64,
+    gnorm: f64,
+    r: f64,
+    t: f64,
+    s: f64,
+}
+
+impl DomeScalars {
+    fn at(ctx: &SafeContext, lam: f64) -> DomeScalars {
+        assert!(
+            !ctx.xtx_star.is_empty(),
+            "Dome requires SafeContext built with need_star = true"
+        );
+        let n = ctx.n as f64;
+        let alpha = ctx.penalty.alpha();
+        let aug = 1.0 + lam * (1.0 - alpha); // = 1 for the lasso
+        let gnorm = (n * aug).sqrt();
+        let lm = ctx.lambda_max;
+        let y_norm = ctx.y_sq.sqrt();
+        // ball: center ỹ/(nαλ), radius ‖y‖(λm−λ)/(nαλλm)
+        let r = y_norm * (lm - lam) / (n * alpha * lam * lm);
+        // cap offset t = −√n·αλm/(√aug·‖y‖)  (λ-independent for the lasso)
+        let t = (-(n.sqrt()) * alpha * lm / (aug.sqrt() * y_norm)).max(-1.0);
+        DomeScalars { n, alpha, gnorm, r, t, s: ctx.sign_star }
+    }
+
+    /// Whether the dome discards feature `j` (callers exclude `x*`).
+    #[inline]
+    fn discards(&self, xty_j: f64, xs_j: f64, lam: f64) -> bool {
+        let gc = xty_j / (self.n * self.alpha * lam);
+        let gn = self.s * xs_j / self.gnorm;
+        let sup_pos = dome_sup(gc, gn, self.gnorm, self.r, self.t);
+        let sup_neg = dome_sup(-gc, -gn, self.gnorm, self.r, self.t);
+        sup_pos < 1.0 && sup_neg < 1.0
+    }
+}
+
 impl DomeTest {
     /// Create a fresh rule.
     pub fn new() -> Self {
@@ -69,31 +111,13 @@ impl DomeTest {
     /// (the augmented rows hit zeros). Everything else is the same dome.
     pub fn screen_at(ctx: &SafeContext, lam: f64, survive: &mut [bool]) -> usize {
         assert_eq!(survive.len(), ctx.p);
-        assert!(
-            !ctx.xtx_star.is_empty(),
-            "Dome requires SafeContext built with need_star = true"
-        );
-        let n = ctx.n as f64;
-        let alpha = ctx.penalty.alpha();
-        let aug = 1.0 + lam * (1.0 - alpha); // = 1 for the lasso
-        let gnorm = (n * aug).sqrt();
-        let lm = ctx.lambda_max;
-        let y_norm = ctx.y_sq.sqrt();
-        // ball: center ỹ/(nαλ), radius ‖y‖(λm−λ)/(nαλλm)
-        let r = y_norm * (lm - lam) / (n * alpha * lam * lm);
-        // cap offset t = −√n·αλm/(√aug·‖y‖)  (λ-independent for the lasso)
-        let t = (-(n.sqrt()) * alpha * lm / (aug.sqrt() * y_norm)).max(-1.0);
-        let s = ctx.sign_star;
+        let sc = DomeScalars::at(ctx, lam);
         let mut discarded = 0;
         for j in 0..ctx.p {
             if !survive[j] || j == ctx.star {
                 continue;
             }
-            let gc = ctx.xty[j] / (n * alpha * lam);
-            let gn = s * ctx.xtx_star[j] / gnorm;
-            let sup_pos = dome_sup(gc, gn, gnorm, r, t);
-            let sup_neg = dome_sup(-gc, -gn, gnorm, r, t);
-            if sup_pos < 1.0 && sup_neg < 1.0 {
+            if sc.discards(ctx.xty[j], ctx.xtx_star[j], lam) {
                 survive[j] = false;
                 discarded += 1;
             }
@@ -124,6 +148,28 @@ impl SafeRule for DomeTest {
 
     fn dead(&self) -> bool {
         self.dead
+    }
+
+    /// Point-wise plan: the dome test is per-column in the per-fit
+    /// precomputes, so hand the fused kernel a `keep(j)` predicate that is
+    /// the exact complement of [`DomeTest::screen_at`]'s discard test.
+    fn plan<'s>(
+        &'s mut self,
+        _x: &DenseMatrix,
+        ctx: &'s SafeContext,
+        _prev: &PrevSolution<'_>,
+        lam_next: f64,
+        _survive: &mut [bool],
+        masked_discards: &mut usize,
+    ) -> Option<Box<dyn Fn(usize) -> bool + Sync + 's>> {
+        *masked_discards = 0;
+        let sc = DomeScalars::at(ctx, lam_next);
+        let xty = &ctx.xty;
+        let xs = &ctx.xtx_star;
+        let star = ctx.star;
+        Some(Box::new(move |j: usize| {
+            j == star || !sc.discards(xty[j], xs[j], lam_next)
+        }))
     }
 }
 
@@ -195,6 +241,31 @@ mod tests {
             total_dome <= total_bedpp,
             "dome={total_dome} bedpp={total_bedpp}"
         );
+    }
+
+    /// The fused-pass predicate must agree with `screen_at` column by
+    /// column at every λ.
+    #[test]
+    fn plan_predicate_matches_screen_at() {
+        use crate::screening::SafeRule;
+        let ds = DataSpec::synthetic(60, 40, 4).generate(6);
+        let ctx = SafeContext::build(&ds.x, &ds.y, Penalty::Lasso, true);
+        let prev = PrevSolution { lambda: ctx.lambda_max, r: &ds.y };
+        for frac in [0.99, 0.8, 0.5, 0.1] {
+            let lam = frac * ctx.lambda_max;
+            let mut rule = DomeTest::new();
+            let mut survive = vec![true; ctx.p];
+            let mut d = 0usize;
+            let keep = rule
+                .plan(&ds.x, &ctx, &prev, lam, &mut survive, &mut d)
+                .expect("dome plan is always point-wise");
+            assert_eq!(d, 0);
+            let mut mask = vec![true; ctx.p];
+            DomeTest::screen_at(&ctx, lam, &mut mask);
+            for j in 0..ctx.p {
+                assert_eq!(keep(j), mask[j], "feature {j} at {frac}·λmax");
+            }
+        }
     }
 
     #[test]

@@ -183,6 +183,35 @@ pub trait SafeRule: Send {
     /// True once the rule can no longer discard anything at smaller λ
     /// (drives the `Flag` shutoff in Algorithm 1).
     fn dead(&self) -> bool;
+
+    /// Plan screening at `lam_next` for the **fused** pass (Algorithm 1
+    /// driven by `ScanEngine::fused_screen`).
+    ///
+    /// Rules whose test is point-wise in per-fit precomputes (BEDPP, Dome)
+    /// return a `keep(j)` predicate that the fused kernel evaluates per
+    /// column — no separate mask traversal, no intermediate index vectors.
+    /// Rules that need their own full scan or a per-λ state transition
+    /// (SEDPP, the re-hybridized rule) use this default: run
+    /// [`SafeRule::screen`] into the mask now (scan-then-filter), report
+    /// its discard count through `masked_discards`, and return `None`.
+    ///
+    /// Contract: when `Some(keep)` is returned the mask is untouched and
+    /// `*masked_discards` is 0; the caller treats a fused pass that
+    /// discards nothing exactly like `screen` returning 0 (the `Flag`
+    /// shutoff), so selections are identical between the fused and unfused
+    /// drivers.
+    fn plan<'s>(
+        &'s mut self,
+        x: &DenseMatrix,
+        ctx: &'s SafeContext,
+        prev: &PrevSolution<'_>,
+        lam_next: f64,
+        survive: &mut [bool],
+        masked_discards: &mut usize,
+    ) -> Option<Box<dyn Fn(usize) -> bool + Sync + 's>> {
+        *masked_discards = self.screen(x, ctx, prev, lam_next, survive);
+        None
+    }
 }
 
 /// Construct the safe rule (if any) used by a [`RuleKind`] strategy.

@@ -1,6 +1,15 @@
 //! Pathwise group descent with screening — Algorithm 1 adapted to the group
 //! lasso (paper §4.2 and §5.2). Methods: Basic GD, AC, SSR, SEDPP, and
 //! SSR-BEDPP (Table 3).
+//!
+//! Like the lasso driver, the default execution is **fused**: group-norm
+//! refreshes go through [`ScanEngine::group_norms`] (one pool-parallel
+//! kernel over the stale groups instead of a scan per group), and the
+//! post-convergence check goes through [`ScanEngine::fused_group_kkt`] —
+//! one traversal recomputing `‖X_gᵀr‖/n` per surviving group, testing KKT
+//! for non-strong groups, and doubling as the end-of-step strong refresh.
+//! `fused: false` retains the separate-traversal driver; both select
+//! identical group sets.
 
 use std::time::Instant;
 
@@ -11,8 +20,8 @@ use crate::runtime::{native::NativeEngine, ScanEngine};
 use crate::screening::group::{GroupBedpp, GroupSafeContext, GroupSafeRule, GroupSedpp};
 use crate::screening::{PrevSolution, RuleKind};
 use crate::solver::lambda::GridKind;
-use crate::solver::{gd, kkt};
 use crate::solver::path::LambdaMetrics;
+use crate::solver::{gd, kkt};
 
 /// Configuration for a group-lasso path fit.
 #[derive(Clone, Debug)]
@@ -32,6 +41,8 @@ pub struct GroupPathConfig {
     pub max_iter: usize,
     /// Explicit grid override.
     pub lambdas: Option<Vec<f64>>,
+    /// Drive the fused group-norm/KKT pipeline (default; see module docs).
+    pub fused: bool,
 }
 
 impl Default for GroupPathConfig {
@@ -44,6 +55,7 @@ impl Default for GroupPathConfig {
             tol: 1e-7,
             max_iter: 100_000,
             lambdas: None,
+            fused: true,
         }
     }
 }
@@ -100,7 +112,7 @@ impl GroupPathFit {
     }
 }
 
-/// Fit with the default native engine.
+/// Fit with the default native (pool-backed) engine.
 pub fn fit_group_path(ds: &GroupedDataset, cfg: &GroupPathConfig) -> Result<GroupPathFit> {
     fit_group_path_with_engine(ds, cfg, &NativeEngine::new())
 }
@@ -138,6 +150,8 @@ pub fn fit_group_path_with_engine(
         }
     };
     let uses_ssr = cfg.rule.uses_ssr();
+    let use_fused_kkt =
+        cfg.fused && !matches!(cfg.rule, RuleKind::BasicPcd | RuleKind::Sedpp);
     // ---- path state ----
     let mut beta = vec![0.0f64; p];
     let mut r = ds.y.clone();
@@ -152,26 +166,6 @@ pub fn fit_group_path_with_engine(
     let mut flag_off = safe_rule.is_none();
     let mut betas = Vec::with_capacity(lambdas.len());
     let mut metrics = Vec::with_capacity(lambdas.len());
-
-    // Group-subset znorm refresh helper (counts column reads).
-    let refresh = |groups: &[usize],
-                   r: &[f64],
-                   znorm: &mut [f64],
-                   znorm_valid: &mut [bool],
-                   cols: &mut u64,
-                   engine: &dyn ScanEngine|
-     -> Result<()> {
-        for &g in groups {
-            let range = layout.range(g);
-            let idx: Vec<usize> = range.collect();
-            let mut out = vec![0.0; idx.len()];
-            engine.scan_subset(x, r, &idx, &mut out)?;
-            znorm[g] = ops::nrm2(&out);
-            znorm_valid[g] = true;
-            *cols += idx.len() as u64;
-        }
-        Ok(())
-    };
 
     let mut lam_prev = ctx.lambda_max;
     for (k, &lam) in lambdas.iter().enumerate() {
@@ -190,11 +184,21 @@ pub fn fit_group_path_with_engine(
         }
         m.safe_size = survive.iter().filter(|&&s| s).count();
 
-        // refresh znorm over newly-entered safe groups
+        // refresh znorm over newly-entered safe groups (one pooled kernel)
         if uses_ssr {
             let stale: Vec<usize> =
                 (0..g_count).filter(|&g| survive[g] && !znorm_valid[g]).collect();
-            refresh(&stale, &r, &mut znorm, &mut znorm_valid, &mut m.cols_scanned, engine)?;
+            if !stale.is_empty() {
+                m.cols_scanned += engine.group_norms(
+                    x,
+                    &r,
+                    &layout.starts,
+                    &layout.sizes,
+                    &stale,
+                    &mut znorm,
+                    &mut znorm_valid,
+                )?;
+            }
         }
 
         // ---- strong set (groups) ----
@@ -236,32 +240,83 @@ pub fn fit_group_path_with_engine(
             if stats.cycles > 0 {
                 znorm_valid.iter_mut().for_each(|v| *v = false);
             }
-            let check: Vec<usize> = match cfg.rule {
-                RuleKind::BasicPcd | RuleKind::Sedpp => Vec::new(),
-                RuleKind::ActiveCycling | RuleKind::Ssr => {
-                    (0..g_count).filter(|&g| !in_strong[g]).collect()
+            if matches!(cfg.rule, RuleKind::BasicPcd | RuleKind::Sedpp) {
+                break; // exact / safe ⇒ no group KKT checking
+            }
+            if use_fused_kkt {
+                // One traversal: group norms + KKT test. Strong groups are
+                // not refreshed here — the residual is unchanged until the
+                // next λ's screening, which lazily refreshes them as stale
+                // with bit-identical norms (see the lasso driver).
+                let fout = engine.fused_group_kkt(
+                    x,
+                    &r,
+                    &layout.starts,
+                    &layout.sizes,
+                    &survive,
+                    &in_strong,
+                    &|g: usize, zn: f64| kkt::group_violates(lam, layout.sizes[g], zn),
+                    false,
+                    &mut znorm,
+                    &mut znorm_valid,
+                )?;
+                m.cols_scanned += fout.cols_scanned;
+                m.kkt_checked += fout.checked;
+                if fout.violations.is_empty() {
+                    break;
                 }
-                _ => (0..g_count).filter(|&g| survive[g] && !in_strong[g]).collect(),
-            };
-            if check.is_empty() {
-                break;
+                m.violations += fout.violations.len();
+                for &g in &fout.violations {
+                    in_strong[g] = true;
+                }
+                strong.extend(fout.violations);
+            } else {
+                let check: Vec<usize> = match cfg.rule {
+                    RuleKind::ActiveCycling | RuleKind::Ssr => {
+                        (0..g_count).filter(|&g| !in_strong[g]).collect()
+                    }
+                    _ => {
+                        (0..g_count).filter(|&g| survive[g] && !in_strong[g]).collect()
+                    }
+                };
+                if check.is_empty() {
+                    break;
+                }
+                m.cols_scanned += engine.group_norms(
+                    x,
+                    &r,
+                    &layout.starts,
+                    &layout.sizes,
+                    &check,
+                    &mut znorm,
+                    &mut znorm_valid,
+                )?;
+                m.kkt_checked += check.len();
+                let zsub: Vec<f64> = check.iter().map(|&g| znorm[g]).collect();
+                let viols = kkt::group_violations(lam, &check, &zsub, &layout.sizes);
+                if viols.is_empty() {
+                    break;
+                }
+                m.violations += viols.len();
+                for &g in &viols {
+                    in_strong[g] = true;
+                }
+                strong.extend(viols);
             }
-            refresh(&check, &r, &mut znorm, &mut znorm_valid, &mut m.cols_scanned, engine)?;
-            m.kkt_checked += check.len();
-            let zsub: Vec<f64> = check.iter().map(|&g| znorm[g]).collect();
-            let viols = kkt::group_violations(lam, &check, &zsub, &layout.sizes);
-            if viols.is_empty() {
-                break;
-            }
-            m.violations += viols.len();
-            for &g in &viols {
-                in_strong[g] = true;
-            }
-            strong.extend(viols);
         }
 
-        if uses_ssr && !strong.is_empty() {
-            refresh(&strong, &r, &mut znorm, &mut znorm_valid, &mut m.cols_scanned, engine)?;
+        // Unfused driver: refresh norms over the strong groups for the next
+        // screening (the fused pass already did in its final round).
+        if !use_fused_kkt && uses_ssr && !strong.is_empty() {
+            m.cols_scanned += engine.group_norms(
+                x,
+                &r,
+                &layout.starts,
+                &layout.sizes,
+                &strong,
+                &mut znorm,
+                &mut znorm_valid,
+            )?;
         }
 
         m.strong_size = strong.len();
@@ -326,6 +381,34 @@ mod tests {
             let fit = fit_group_path(&ds, &small_cfg(rule)).unwrap();
             let d = max_beta_diff(&base, &fit);
             assert!(d < 1e-5, "{rule:?} deviates by {d}");
+        }
+    }
+
+    /// The fused group driver must match the unfused one bit-for-bit.
+    #[test]
+    fn fused_group_driver_bit_identical_to_unfused() {
+        let ds = generate_grouped(80, 20, 4, 4, 15);
+        for rule in [
+            RuleKind::BasicPcd,
+            RuleKind::ActiveCycling,
+            RuleKind::Ssr,
+            RuleKind::Sedpp,
+            RuleKind::SsrBedpp,
+        ] {
+            let fused = fit_group_path(&ds, &small_cfg(rule)).unwrap();
+            let unfused = fit_group_path(
+                &ds,
+                &GroupPathConfig { fused: false, ..small_cfg(rule) },
+            )
+            .unwrap();
+            assert_eq!(fused.betas, unfused.betas, "{rule:?} betas differ");
+            for (k, (mf, mu)) in
+                fused.metrics.iter().zip(unfused.metrics.iter()).enumerate()
+            {
+                assert_eq!(mf.safe_size, mu.safe_size, "{rule:?} |S| at λ#{k}");
+                assert_eq!(mf.strong_size, mu.strong_size, "{rule:?} |H| at λ#{k}");
+                assert_eq!(mf.violations, mu.violations, "{rule:?} viols at λ#{k}");
+            }
         }
     }
 

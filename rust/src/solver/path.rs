@@ -17,6 +17,28 @@
 //! checking at `λ_{k−1}`; only features newly entering the safe set are
 //! refreshed (line 4). The safe rule is switched off permanently once it
 //! stops discarding (`Flag`, lines 6–8).
+//!
+//! ## Fused execution (default)
+//!
+//! With [`PathConfig::fused`] (the default), each λ step issues **one**
+//! engine pass where the unfused driver issued three traversals:
+//!
+//! * screening runs through [`ScanEngine::fused_screen`] — the safe rule
+//!   contributes a per-column predicate via
+//!   [`crate::screening::SafeRule::plan`] (BEDPP/Dome; sequential rules
+//!   screen into the mask first), and the kernel applies the predicate,
+//!   refreshes stale `z_j`, and classifies against the SSR threshold per
+//!   column;
+//! * the post-convergence check runs through [`ScanEngine::fused_kkt`] —
+//!   one traversal recomputes `z_j` over `S \ H` and tests KKT. The
+//!   unfused driver's separate end-of-step strong-set refresh disappears
+//!   entirely: the residual is unchanged until the next λ's screening, so
+//!   the fused screen lazily refreshes the strong columns there with
+//!   bit-identical values (and the final λ's refresh is never paid).
+//!
+//! Selections and solutions are bit-identical to the unfused driver
+//! (`fused: false`, kept for A/B benchmarking and the equivalence property
+//! test in [`crate::prop`]).
 
 use std::time::Instant;
 
@@ -46,6 +68,10 @@ pub struct PathConfig {
     pub max_iter: usize,
     /// Explicit λ grid (overrides `n_lambda`/`lambda_min_ratio`).
     pub lambdas: Option<Vec<f64>>,
+    /// Drive the fused single-pass screening/KKT pipeline (default). The
+    /// unfused scan-then-filter driver is retained for benchmarking and
+    /// equivalence testing; both select identical feature sets.
+    pub fused: bool,
 }
 
 impl Default for PathConfig {
@@ -59,6 +85,7 @@ impl Default for PathConfig {
             tol: 1e-7,
             max_iter: 100_000,
             lambdas: None,
+            fused: true,
         }
     }
 }
@@ -139,7 +166,7 @@ impl PathFit {
     }
 }
 
-/// Fit the full path with the default (native) scan engine.
+/// Fit the full path with the default (native, pool-backed) scan engine.
 pub fn fit_lasso_path(ds: &Dataset, cfg: &PathConfig) -> Result<PathFit> {
     fit_lasso_path_with_engine(ds, cfg, &NativeEngine::new())
 }
@@ -175,6 +202,10 @@ pub fn fit_lasso_path_with_engine(
     let mut safe_rule = make_safe_rule(cfg.rule);
     let mut flag_off = safe_rule.is_none(); // Algorithm 1 `Flag`
     let uses_ssr = cfg.rule.uses_ssr();
+    let use_fused_screen = cfg.fused && uses_ssr;
+    // BasicPcd/SEDPP never KKT-check (exact / safe ⇒ nothing to verify).
+    let use_fused_kkt =
+        cfg.fused && !matches!(cfg.rule, RuleKind::BasicPcd | RuleKind::Sedpp);
     let mut betas = Vec::with_capacity(lambdas.len());
     let mut metrics = Vec::with_capacity(lambdas.len());
     let mut scratch = vec![0.0f64; p];
@@ -182,43 +213,90 @@ pub fn fit_lasso_path_with_engine(
     let mut lam_prev = ctx.lambda_max;
     for (k, &lam) in lambdas.iter().enumerate() {
         let mut m = LambdaMetrics { lambda: lam, ..Default::default() };
-        // ---- safe screening (Algorithm 1 lines 2–9) ----
         let mut survive = vec![true; p];
-        if !flag_off {
-            if let Some(rule) = safe_rule.as_mut() {
-                let prev = PrevSolution { lambda: lam_prev, r: &r };
-                let discarded = rule.screen(x, &ctx, &prev, lam, &mut survive);
-                if discarded == 0 || rule.dead() {
+        let mut strong: Vec<usize>;
+
+        if use_fused_screen {
+            // ---- fused screening (lines 2–10 in one traversal) ----
+            let ssr_t = ssr::threshold(penalty, lam, lam_prev);
+            let mut masked_d = 0usize;
+            let mut planned = false;
+            let (fout, was_pointwise) = {
+                let keep = if flag_off {
+                    None
+                } else if let Some(rule) = safe_rule.as_mut() {
+                    planned = true;
+                    let prev = PrevSolution { lambda: lam_prev, r: &r };
+                    rule.plan(x, &ctx, &prev, lam, &mut survive, &mut masked_d)
+                } else {
+                    None
+                };
+                let wp = keep.is_some();
+                let out = engine.fused_screen(
+                    x,
+                    &r,
+                    keep.as_deref(),
+                    ssr_t,
+                    &mut survive,
+                    &mut z,
+                    &mut z_valid,
+                )?;
+                (out, wp)
+            };
+            if planned {
+                let discarded = masked_d + fout.discarded;
+                // Masked rules that discard report `dead` only alongside
+                // zero discards, so the flag condition matches the unfused
+                // driver exactly; pointwise rules flag purely on count.
+                let rule_dead = !was_pointwise
+                    && safe_rule.as_ref().map(|ru| ru.dead()).unwrap_or(false);
+                if discarded == 0 || rule_dead {
                     flag_off = true; // |S| = p ⇒ Flag ← TRUE
                     survive.iter_mut().for_each(|s| *s = true);
                 }
             }
-        }
-        m.safe_size = survive.iter().filter(|&&s| s).count();
-
-        // ---- line 4: refresh z over newly-entered safe features ----
-        if uses_ssr {
-            let stale: Vec<usize> =
-                (0..p).filter(|&j| survive[j] && !z_valid[j]).collect();
-            if !stale.is_empty() {
-                engine.scan_subset(x, &r, &stale, &mut scratch[..stale.len()])?;
-                for (s, &j) in stale.iter().enumerate() {
-                    z[j] = scratch[s];
-                    z_valid[j] = true;
+            m.safe_size = fout.safe_size;
+            m.cols_scanned += fout.cols_scanned;
+            strong = fout.strong;
+        } else {
+            // ---- unfused screening (Algorithm 1 lines 2–9) ----
+            if !flag_off {
+                if let Some(rule) = safe_rule.as_mut() {
+                    let prev = PrevSolution { lambda: lam_prev, r: &r };
+                    let discarded = rule.screen(x, &ctx, &prev, lam, &mut survive);
+                    if discarded == 0 || rule.dead() {
+                        flag_off = true; // |S| = p ⇒ Flag ← TRUE
+                        survive.iter_mut().for_each(|s| *s = true);
+                    }
                 }
-                m.cols_scanned += stale.len() as u64;
             }
+            m.safe_size = survive.iter().filter(|&&s| s).count();
+
+            // ---- line 4: refresh z over newly-entered safe features ----
+            if uses_ssr {
+                let stale: Vec<usize> =
+                    (0..p).filter(|&j| survive[j] && !z_valid[j]).collect();
+                if !stale.is_empty() {
+                    engine.scan_subset(x, &r, &stale, &mut scratch[..stale.len()])?;
+                    for (s, &j) in stale.iter().enumerate() {
+                        z[j] = scratch[s];
+                        z_valid[j] = true;
+                    }
+                    m.cols_scanned += stale.len() as u64;
+                }
+            }
+
+            // ---- strong / optimizer set (line 10) ----
+            strong = match cfg.rule {
+                RuleKind::BasicPcd => (0..p).collect(),
+                RuleKind::ActiveCycling => {
+                    (0..p).filter(|&j| beta[j] != 0.0).collect()
+                }
+                RuleKind::Sedpp => (0..p).filter(|&j| survive[j]).collect(),
+                _ => ssr::strong_set(penalty, lam, lam_prev, &z, &survive),
+            };
         }
 
-        // ---- strong / optimizer set (line 10) ----
-        let mut strong: Vec<usize> = match cfg.rule {
-            RuleKind::BasicPcd => (0..p).collect(),
-            RuleKind::ActiveCycling => {
-                (0..p).filter(|&j| beta[j] != 0.0).collect()
-            }
-            RuleKind::Sedpp => (0..p).filter(|&j| survive[j]).collect(),
-            _ => ssr::strong_set(penalty, lam, lam_prev, &z, &survive),
-        };
         let mut in_strong = vec![false; p];
         for &j in &strong {
             in_strong[j] = true;
@@ -233,38 +311,71 @@ pub fn fit_lasso_path_with_engine(
             if stats.cycles > 0 {
                 z_valid.iter_mut().for_each(|v| *v = false);
             }
-            // KKT check set (line 14–15).
-            let check: Vec<usize> = match cfg.rule {
-                RuleKind::BasicPcd | RuleKind::Sedpp => Vec::new(),
-                RuleKind::ActiveCycling | RuleKind::Ssr => {
-                    (0..p).filter(|&j| !in_strong[j]).collect()
+            if matches!(cfg.rule, RuleKind::BasicPcd | RuleKind::Sedpp) {
+                break; // exact / safe ⇒ no KKT checking
+            }
+            if use_fused_kkt {
+                // One traversal: candidate z + KKT test. The strong columns
+                // are deliberately NOT refreshed here (refresh_strong =
+                // false): the residual does not change between this final
+                // round and the next λ's screening, so the fused screen
+                // picks them up as stale there with bit-identical values —
+                // no redundant rescans on violation rounds, and the last
+                // λ's strong refresh is skipped entirely.
+                let fout = engine.fused_kkt(
+                    x,
+                    &r,
+                    &survive,
+                    &in_strong,
+                    &|zj: f64| kkt::violates(penalty, lam, zj),
+                    false,
+                    &mut z,
+                    &mut z_valid,
+                )?;
+                m.cols_scanned += fout.cols_scanned;
+                m.kkt_checked += fout.checked;
+                if fout.violations.is_empty() {
+                    break;
                 }
-                _ => (0..p).filter(|&j| survive[j] && !in_strong[j]).collect(),
-            };
-            if check.is_empty() {
-                break;
+                m.violations += fout.violations.len();
+                for &j in &fout.violations {
+                    in_strong[j] = true;
+                }
+                strong.extend(fout.violations);
+            } else {
+                // KKT check set (line 14–15), unfused.
+                let check: Vec<usize> = match cfg.rule {
+                    RuleKind::ActiveCycling | RuleKind::Ssr => {
+                        (0..p).filter(|&j| !in_strong[j]).collect()
+                    }
+                    _ => (0..p).filter(|&j| survive[j] && !in_strong[j]).collect(),
+                };
+                if check.is_empty() {
+                    break;
+                }
+                engine.scan_subset(x, &r, &check, &mut scratch[..check.len()])?;
+                for (s, &j) in check.iter().enumerate() {
+                    z[j] = scratch[s];
+                    z_valid[j] = true;
+                }
+                m.cols_scanned += check.len() as u64;
+                m.kkt_checked += check.len();
+                let viols = kkt::violations(penalty, lam, &check, &scratch[..check.len()]);
+                if viols.is_empty() {
+                    break;
+                }
+                m.violations += viols.len();
+                for &j in &viols {
+                    in_strong[j] = true;
+                }
+                strong.extend(viols);
             }
-            engine.scan_subset(x, &r, &check, &mut scratch[..check.len()])?;
-            for (s, &j) in check.iter().enumerate() {
-                z[j] = scratch[s];
-                z_valid[j] = true;
-            }
-            m.cols_scanned += check.len() as u64;
-            m.kkt_checked += check.len();
-            let viols = kkt::violations(penalty, lam, &check, &scratch[..check.len()]);
-            if viols.is_empty() {
-                break;
-            }
-            m.violations += viols.len();
-            for &j in &viols {
-                in_strong[j] = true;
-            }
-            strong.extend(viols);
         }
 
-        // Refresh z over the strong set so the next SSR screening sees
-        // correlations at the final residual.
-        if uses_ssr && !strong.is_empty() {
+        // Unfused driver: refresh z over the strong set so the next SSR
+        // screening sees correlations at the final residual. (The fused
+        // KKT pass already did this in its final round.)
+        if !use_fused_kkt && uses_ssr && !strong.is_empty() {
             engine.scan_subset(x, &r, &strong, &mut scratch[..strong.len()])?;
             for (s, &j) in strong.iter().enumerate() {
                 z[j] = scratch[s];
@@ -339,6 +450,40 @@ mod tests {
             let fit = fit_lasso_path(&ds, &small_cfg(rule)).unwrap();
             let d = max_beta_diff(&baseline, &fit);
             assert!(d < 1e-5, "{:?} deviates from Basic PCD by {d}", rule);
+        }
+    }
+
+    /// The fused single-pass driver and the unfused scan-then-filter driver
+    /// must agree **bit-for-bit** — same solutions, same safe/strong set
+    /// sizes at every λ — for every rule kind. (The randomized version of
+    /// this check lives in `crate::prop`.)
+    #[test]
+    fn fused_driver_bit_identical_to_unfused() {
+        let ds = DataSpec::gene_like(90, 250).generate(21);
+        for rule in [
+            RuleKind::BasicPcd,
+            RuleKind::ActiveCycling,
+            RuleKind::Ssr,
+            RuleKind::Sedpp,
+            RuleKind::SsrBedpp,
+            RuleKind::SsrDome,
+            RuleKind::SsrBedppSedpp,
+        ] {
+            let fused = fit_lasso_path(&ds, &small_cfg(rule)).unwrap();
+            let unfused = fit_lasso_path(
+                &ds,
+                &PathConfig { fused: false, ..small_cfg(rule) },
+            )
+            .unwrap();
+            assert_eq!(fused.betas, unfused.betas, "{rule:?} betas differ");
+            for (k, (mf, mu)) in
+                fused.metrics.iter().zip(unfused.metrics.iter()).enumerate()
+            {
+                assert_eq!(mf.safe_size, mu.safe_size, "{rule:?} |S| at λ#{k}");
+                assert_eq!(mf.strong_size, mu.strong_size, "{rule:?} |H| at λ#{k}");
+                assert_eq!(mf.violations, mu.violations, "{rule:?} viols at λ#{k}");
+                assert_eq!(mf.nonzero, mu.nonzero, "{rule:?} nnz at λ#{k}");
+            }
         }
     }
 

@@ -1,5 +1,7 @@
 //! Integration: the PJRT engine (AOT JAX/Pallas artifacts) must agree with
-//! the native engine to float tolerance. Requires `make artifacts`.
+//! the native engine to float tolerance. Requires `make artifacts` and the
+//! `pjrt` cargo feature (the default build compiles a stub engine).
+#![cfg(feature = "pjrt")]
 
 use hssr::data::DataSpec;
 use hssr::linalg::blocked;

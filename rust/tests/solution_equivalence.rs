@@ -127,6 +127,34 @@ fn property_random_problems_agree() {
     });
 }
 
+/// Regression under the pool engine: the explicit pool-backed
+/// `NativeEngine` (fused and unfused drivers) must reproduce the default
+/// path bit-for-bit — the default `fit_lasso_path` is itself pool-backed,
+/// so this pins the engine plumbing and both driver variants together.
+#[test]
+fn pool_engine_reproduces_solution_paths() {
+    use hssr::runtime::native::NativeEngine;
+    use hssr::solver::path::fit_lasso_path_with_engine;
+    let ds = DataSpec::gene_like(100, 260).generate(9);
+    let engine = NativeEngine::new();
+    for rule in ALL_RULES {
+        let cfg = PathConfig { rule, n_lambda: 25, tol: 1e-9, ..PathConfig::default() };
+        let default_fit = fit_lasso_path(&ds, &cfg).expect("default fit");
+        let pooled = fit_lasso_path_with_engine(&ds, &cfg, &engine).expect("pool fit");
+        assert_eq!(default_fit.betas, pooled.betas, "{rule:?} pool-engine mismatch");
+        let unfused = fit_lasso_path_with_engine(
+            &ds,
+            &PathConfig { fused: false, ..cfg },
+            &engine,
+        )
+        .expect("unfused pool fit");
+        assert_eq!(
+            default_fit.betas, unfused.betas,
+            "{rule:?} unfused pool-engine mismatch"
+        );
+    }
+}
+
 /// Warm starts + screening must not leak state across λ: refitting with a
 /// truncated grid reproduces the prefix of the full-path solution.
 #[test]
