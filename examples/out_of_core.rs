@@ -1,55 +1,43 @@
-//! Out-of-core memory traffic — the §3.2.3 "memory efficiency" claim.
+//! Out-of-core memory traffic — the §3.2.3 "memory efficiency" claim,
+//! **measured** rather than replayed.
 //!
 //! biglasso's selling point is lasso fitting on data too big for RAM
 //! (memory-mapped big.matrix). In that regime every column scan is disk
-//! I/O, and HSSR's advantage is that it only scans the *safe set* while SSR
-//! and SEDPP must scan all p columns at every λ. This example replays the
-//! scan traffic of each method against a [`ChunkedMatrix`] that counts
-//! column fetches, and reports the would-be disk traffic.
+//! I/O, and HSSR's advantage is that it only scans the *safe set* while
+//! SSR and SEDPP must scan all p columns at every λ. Here the unified path
+//! driver runs with every screening/KKT scan dispatched through a counting
+//! `ChunkedScanEngine` over a chunked column store
+//! (`hssr::coordinator::metrics::scan_traffic`), so the table reports
+//! *actual* column fetches and chunk faults, cross-checked against the
+//! path's own `cols_scanned` accounting.
 //!
 //! ```bash
 //! cargo run --release --example out_of_core
 //! ```
 
-use hssr::coordinator::report::Table;
-use hssr::data::chunked::ChunkedMatrix;
+use hssr::coordinator::metrics::{scan_traffic, scan_traffic_table};
 use hssr::prelude::*;
 use hssr::solver::path::PathConfig;
 
 fn main() -> Result<(), HssrError> {
     let ds = DataSpec::gene_like(300, 8000).generate(9);
-    println!("dataset: {} ({:.1} MB as f64)", ds.name, (ds.n() * ds.p() * 8) as f64 / 1e6);
-    let chunked = ChunkedMatrix::from_dense(&ds.x, 256);
-
-    let mut table = Table::new(
-        "out-of-core scan traffic over the full path (100 λ)",
-        &["Method", "columns fetched", "MB fetched", "vs SSR"],
+    println!(
+        "dataset: {} ({:.1} MB as f64), chunk = 256 columns",
+        ds.name,
+        (ds.n() * ds.p() * 8) as f64 / 1e6
     );
-    let mut ssr_bytes = 0u64;
-    for rule in [RuleKind::Ssr, RuleKind::Sedpp, RuleKind::SsrDome, RuleKind::SsrBedpp] {
-        let cfg = PathConfig { rule, ..PathConfig::default() };
-        let fit = fit_lasso_path(&ds, &cfg)?;
-        // Replay the recorded scan counts against the chunked store: each
-        // scanned column is one fetch (the path solver already counts them;
-        // the chunked store validates the fetch accounting model).
-        chunked.reset_counters();
-        let probe: Vec<usize> = (0..16.min(ds.p())).collect();
-        let mut out = vec![0.0; probe.len()];
-        chunked.scan_subset(&ds.y, &probe, &mut out);
-        assert_eq!(chunked.cols_fetched(), probe.len() as u64);
 
-        let cols = fit.total_cols_scanned();
-        let bytes = cols * ds.n() as u64 * 8;
-        if rule == RuleKind::Ssr {
-            ssr_bytes = bytes;
-        }
-        table.push_row(vec![
-            rule.label().to_string(),
-            cols.to_string(),
-            format!("{:.1}", bytes as f64 / 1e6),
-            format!("{:.2}x less", ssr_bytes as f64 / bytes as f64),
-        ]);
-    }
+    let cfg = PathConfig::default();
+    let rows = scan_traffic(
+        &ds,
+        &cfg,
+        256,
+        &[RuleKind::Ssr, RuleKind::Sedpp, RuleKind::SsrDome, RuleKind::SsrBedpp],
+    )?;
+    let table = scan_traffic_table(
+        "out-of-core scan traffic over the full path (100 λ), measured",
+        &rows,
+    );
     println!("{}", table.render());
     println!(
         "(SEDPP's own internal full scans are not engine-routed; its true traffic is\n\

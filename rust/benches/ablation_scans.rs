@@ -7,6 +7,7 @@
 //! SEDPP's scans happen inside the rule (full pK — reported via its
 //! analytic count); Basic PCD scans nothing but pays Θ(pK) CD updates.
 
+use hssr::coordinator::metrics::{scan_traffic, scan_traffic_table};
 use hssr::coordinator::report::Table;
 use hssr::data::DataSpec;
 use hssr::screening::RuleKind;
@@ -56,4 +57,19 @@ fn main() {
         "paper claim §3.2.3: HSSR column traffic = Σ|S_k| ≪ pK; \
          SSR/SEDPP = pK (the 1.00 rows above)."
     );
+
+    // Out-of-core cross-check: the same paths driven through the counting
+    // chunked-store engine, so the fetch counters (and chunk faults) are
+    // *measured* rather than derived from path metrics.
+    let cfg = PathConfig { n_lambda: k, ..PathConfig::default() };
+    let rows = scan_traffic(
+        &ds,
+        &cfg,
+        256,
+        &[RuleKind::Ssr, RuleKind::SsrDome, RuleKind::SsrBedpp],
+    )
+    .expect("traffic");
+    scan_traffic_table("measured chunked-store traffic (256-col chunks)", &rows)
+        .emit("ablation_scans_traffic")
+        .expect("emit traffic");
 }

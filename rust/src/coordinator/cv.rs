@@ -3,7 +3,10 @@
 //!
 //! Folds are deterministic given the seed; fold fits run across worker
 //! threads via [`super::jobs::parallel_map`]; the λ grid is fixed globally
-//! (computed on the full data) so fold errors are comparable per λ.
+//! (computed on the full data) so fold errors are comparable per λ. Each
+//! fold fit runs through the unified Algorithm-1 driver
+//! ([`crate::solver::driver::drive`]) via [`fit_lasso_path`], so engine
+//! and screening improvements land here automatically.
 
 use crate::data::Dataset;
 use crate::error::{HssrError, Result};

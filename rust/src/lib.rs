@@ -61,7 +61,9 @@ pub mod prelude {
     pub use crate::data::{DataSpec, Dataset, GroupedDataset};
     pub use crate::error::HssrError;
     pub use crate::screening::RuleKind;
+    pub use crate::solver::driver::{drive, DriverConfig, DriverFit, PathDriver, Problem};
     pub use crate::solver::path::{fit_lasso_path, PathConfig, PathFit};
     pub use crate::solver::group_path::{fit_group_path, GroupPathConfig, GroupPathFit};
+    pub use crate::solver::logistic::{fit_logistic_path, LogisticPathConfig, LogisticPathFit};
     pub use crate::solver::Penalty;
 }

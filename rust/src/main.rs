@@ -6,7 +6,8 @@
 //! hssr group [--data synth|grvs|spline] [--groups G] [--gsize W] [--rule METHOD]
 //! hssr power [--data gene] [--n N] [--p P]          # Figure-1 style curves
 //! hssr cv    [--folds K] [--data ...]                # k-fold CV for λ
-//! hssr logistic [--n N] [--p P] [--rule basic|ac|ssr] # sparse logistic path (§6)
+//! hssr logistic [--n N] [--p P] [--rule basic|ac|ssr] [--engine native|pjrt]
+//!                                                    # sparse logistic path (§6)
 //! hssr info                                          # build/runtime info
 //! ```
 //!
@@ -25,7 +26,7 @@ use hssr::solver::Penalty;
 
 fn usage() -> ! {
     eprintln!(
-        "usage: hssr <fit|group|power|info> [--key value ...]\n\
+        "usage: hssr <fit|group|power|cv|logistic|info> [--key value ...]\n\
          see README.md for the full flag reference"
     );
     std::process::exit(2);
@@ -244,7 +245,9 @@ fn cmd_cv(cfg: &Config) -> Result<()> {
 }
 
 fn cmd_logistic(cfg: &Config) -> Result<()> {
-    use hssr::solver::logistic::{fit_logistic_path, synthetic_logistic, LogisticPathConfig};
+    use hssr::solver::logistic::{
+        fit_logistic_path_with_engine, synthetic_logistic, LogisticPathConfig,
+    };
     let n = cfg.get_parse("n", 500usize)?;
     let p = cfg.get_parse("p", 2000usize)?;
     let s = cfg.get_parse("s", 10usize)?;
@@ -258,11 +261,15 @@ fn cmd_logistic(cfg: &Config) -> Result<()> {
         n_lambda: cfg.get_parse("nlambda", 100usize)?,
         ..Default::default()
     };
-    let fit = fit_logistic_path(&x, &y, &lcfg)?;
+    let engine_kind = EngineKind::parse(&cfg.get_str("engine", "native"))
+        .ok_or_else(|| HssrError::Config("engine must be native|pjrt".into()))?;
+    let engine = make_engine(engine_kind, &cfg.get_str("artifacts", "artifacts"))?;
+    let fit = fit_logistic_path_with_engine(&x, &y, &lcfg, engine.as_ref())?;
     println!(
-        "logistic path (n={n}, p={p}) fitted in {:.3}s (rule {})",
+        "logistic path (n={n}, p={p}) fitted in {:.3}s (rule {}, engine {})",
         fit.seconds,
-        fit.rule.label()
+        fit.rule.label(),
+        engine.name(),
     );
     let sel: Vec<usize> = fit.betas.last().unwrap().iter().map(|&(j, _)| j).collect();
     let hits = truth.iter().filter(|j| sel.contains(j)).count();

@@ -90,51 +90,178 @@ mod tests {
     /// The fused single-pass screening/KKT driver must select **exactly**
     /// the same features as the unfused scan-then-filter driver — same
     /// sparse solutions, same safe/strong set sizes at every λ — for every
-    /// [`RuleKind`], over randomized problem shapes.
+    /// [`RuleKind`] and for both penalty families (lasso and elastic net
+    /// `alpha < 1`), over randomized problem shapes.
     #[test]
     fn fused_pass_selects_same_features_as_unfused() {
         use crate::data::DataSpec;
         use crate::screening::RuleKind;
         use crate::solver::path::{fit_lasso_path, PathConfig};
+        use crate::solver::Penalty;
         check(PropConfig { cases: 6, seed: 0xF05E }, |rng, scale| {
             let n = 40 + (rng.below(60) as f64 * scale) as usize;
             let p = 60 + (rng.below(160) as f64 * scale) as usize;
             let s = 1 + rng.below(8) as usize;
             let ds = DataSpec::synthetic(n, p, s).generate(rng.next_u64());
+            // Random ℓ1 mixing weight in [0.4, 0.9] for the enet sweep.
+            let alpha = 0.4 + 0.5 * rng.uniform();
+            for penalty in [Penalty::Lasso, Penalty::ElasticNet { alpha }] {
+                for rule in [
+                    RuleKind::BasicPcd,
+                    RuleKind::ActiveCycling,
+                    RuleKind::Ssr,
+                    RuleKind::Sedpp,
+                    RuleKind::SsrBedpp,
+                    RuleKind::SsrDome,
+                    RuleKind::SsrBedppSedpp,
+                ] {
+                    let cfg = PathConfig {
+                        rule,
+                        penalty,
+                        n_lambda: 15,
+                        tol: 1e-8,
+                        ..PathConfig::default()
+                    };
+                    let fused = fit_lasso_path(&ds, &cfg).map_err(|e| e.to_string())?;
+                    let unfused =
+                        fit_lasso_path(&ds, &PathConfig { fused: false, ..cfg })
+                            .map_err(|e| e.to_string())?;
+                    prop_assert!(
+                        fused.betas == unfused.betas,
+                        "{rule:?}/{penalty:?}: solutions differ (n={n}, p={p}, s={s})"
+                    );
+                    for (k, (a, b)) in
+                        fused.metrics.iter().zip(&unfused.metrics).enumerate()
+                    {
+                        prop_assert!(
+                            a.safe_size == b.safe_size,
+                            "{rule:?}/{penalty:?}: |S| differs at λ#{k} ({} vs {})",
+                            a.safe_size,
+                            b.safe_size
+                        );
+                        prop_assert!(
+                            a.strong_size == b.strong_size,
+                            "{rule:?}/{penalty:?}: |H| differs at λ#{k} ({} vs {})",
+                            a.strong_size,
+                            b.strong_size
+                        );
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// Group-lasso family: the fused pipeline (fused group screen + fused
+    /// group KKT) must select exactly the same groups as the unfused one,
+    /// over randomized group structures.
+    #[test]
+    fn fused_group_pass_selects_same_groups_as_unfused() {
+        use crate::data::synth::generate_grouped;
+        use crate::screening::RuleKind;
+        use crate::solver::group_path::{fit_group_path, GroupPathConfig};
+        check(PropConfig { cases: 4, seed: 0x6907 }, |rng, scale| {
+            let n = 50 + (rng.below(50) as f64 * scale) as usize;
+            let groups = 8 + (rng.below(16) as f64 * scale) as usize;
+            let gsize = 2 + rng.below(4) as usize;
+            let strue = (1 + rng.below(4) as usize).min(groups);
+            let ds = generate_grouped(n, groups, gsize, strue, rng.next_u64());
             for rule in [
                 RuleKind::BasicPcd,
                 RuleKind::ActiveCycling,
                 RuleKind::Ssr,
                 RuleKind::Sedpp,
                 RuleKind::SsrBedpp,
-                RuleKind::SsrDome,
-                RuleKind::SsrBedppSedpp,
             ] {
-                let cfg =
-                    PathConfig { rule, n_lambda: 15, tol: 1e-8, ..PathConfig::default() };
-                let fused = fit_lasso_path(&ds, &cfg).map_err(|e| e.to_string())?;
+                let cfg = GroupPathConfig {
+                    rule,
+                    n_lambda: 12,
+                    tol: 1e-8,
+                    ..GroupPathConfig::default()
+                };
+                let fused = fit_group_path(&ds, &cfg).map_err(|e| e.to_string())?;
                 let unfused =
-                    fit_lasso_path(&ds, &PathConfig { fused: false, ..cfg })
+                    fit_group_path(&ds, &GroupPathConfig { fused: false, ..cfg })
                         .map_err(|e| e.to_string())?;
                 prop_assert!(
                     fused.betas == unfused.betas,
-                    "{rule:?}: solutions differ (n={n}, p={p}, s={s})"
+                    "{rule:?}: group solutions differ (n={n}, groups={groups}, gsize={gsize})"
                 );
                 for (k, (a, b)) in
                     fused.metrics.iter().zip(&unfused.metrics).enumerate()
                 {
                     prop_assert!(
                         a.safe_size == b.safe_size,
-                        "{rule:?}: |S| differs at λ#{k} ({} vs {})",
-                        a.safe_size,
-                        b.safe_size
+                        "{rule:?}: group |S| differs at λ#{k}"
                     );
                     prop_assert!(
                         a.strong_size == b.strong_size,
-                        "{rule:?}: |H| differs at λ#{k} ({} vs {})",
-                        a.strong_size,
-                        b.strong_size
+                        "{rule:?}: group |H| differs at λ#{k}"
                     );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// The unified logistic driver: the fused pipeline must select exactly
+    /// the same features as the unfused one — identical sparse paths,
+    /// intercepts, and strong-set sizes — across strategies and penalties
+    /// (including elastic net), over randomized problems.
+    #[test]
+    fn fused_logistic_selects_same_features_as_unfused() {
+        use crate::screening::RuleKind;
+        use crate::solver::logistic::{
+            fit_logistic_path, synthetic_logistic, LogisticPathConfig,
+        };
+        use crate::solver::Penalty;
+        check(PropConfig { cases: 4, seed: 0x1061 }, |rng, scale| {
+            let n = 60 + (rng.below(60) as f64 * scale) as usize;
+            let p = 30 + (rng.below(60) as f64 * scale) as usize;
+            let s = 1 + rng.below(5) as usize;
+            let (x, y, _) = synthetic_logistic(n, p, s, rng.next_u64());
+            let alpha = 0.5 + 0.4 * rng.uniform();
+            for penalty in [Penalty::Lasso, Penalty::ElasticNet { alpha }] {
+                for rule in
+                    [RuleKind::BasicPcd, RuleKind::ActiveCycling, RuleKind::Ssr]
+                {
+                    let cfg = LogisticPathConfig {
+                        rule,
+                        penalty,
+                        n_lambda: 12,
+                        tol: 1e-8,
+                        ..LogisticPathConfig::default()
+                    };
+                    let fused =
+                        fit_logistic_path(&x, &y, &cfg).map_err(|e| e.to_string())?;
+                    let unfused = fit_logistic_path(
+                        &x,
+                        &y,
+                        &LogisticPathConfig { fused: false, ..cfg },
+                    )
+                    .map_err(|e| e.to_string())?;
+                    prop_assert!(
+                        fused.betas == unfused.betas,
+                        "{rule:?}/{penalty:?}: logistic solutions differ (n={n}, p={p})"
+                    );
+                    prop_assert!(
+                        fused.intercepts == unfused.intercepts,
+                        "{rule:?}/{penalty:?}: intercepts differ"
+                    );
+                    for (k, (a, b)) in
+                        fused.metrics.iter().zip(&unfused.metrics).enumerate()
+                    {
+                        prop_assert!(
+                            a.strong_size == b.strong_size,
+                            "{rule:?}/{penalty:?}: |H| differs at λ#{k} ({} vs {})",
+                            a.strong_size,
+                            b.strong_size
+                        );
+                        prop_assert!(
+                            a.violations == b.violations,
+                            "{rule:?}/{penalty:?}: violations differ at λ#{k}"
+                        );
+                    }
                 }
             }
             Ok(())

@@ -187,6 +187,57 @@ pub trait ScanEngine {
         Ok(cols)
     }
 
+    /// Fused group-level screening pass at one λ step — the group analogue
+    /// of [`ScanEngine::fused_screen`]: apply the point-wise group safe
+    /// predicate `keep` (when given, from `SafeRule::plan`), lazily refresh
+    /// stale `znorm[g] = ‖X_gᵀr‖/n` over the survivors, and classify them
+    /// against the group-SSR threshold `√W_g · ssr_t` (rule (20)).
+    ///
+    /// Default: predicate-then-refresh-then-filter over
+    /// [`ScanEngine::group_norms`], whose native override already runs the
+    /// stale groups through one pooled kernel. Selections are bit-identical
+    /// to the unfused screen → norm-refresh → `ssr::group_strong_set`
+    /// sequence.
+    #[allow(clippy::too_many_arguments)]
+    fn fused_group_screen(
+        &self,
+        x: &DenseMatrix,
+        r: &[f64],
+        starts: &[usize],
+        sizes: &[usize],
+        keep: Option<&(dyn Fn(usize) -> bool + Sync)>,
+        ssr_t: f64,
+        survive: &mut [bool],
+        znorm: &mut [f64],
+        znorm_valid: &mut [bool],
+    ) -> Result<FusedScreenOut> {
+        let g_count = starts.len();
+        let mut out = FusedScreenOut::default();
+        if let Some(pred) = keep {
+            for g in 0..g_count {
+                if survive[g] && !pred(g) {
+                    survive[g] = false;
+                    out.discarded += 1;
+                }
+            }
+        }
+        let stale: Vec<usize> =
+            (0..g_count).filter(|&g| survive[g] && !znorm_valid[g]).collect();
+        if !stale.is_empty() {
+            out.cols_scanned =
+                self.group_norms(x, r, starts, sizes, &stale, znorm, znorm_valid)?;
+        }
+        for g in 0..g_count {
+            if survive[g] {
+                out.safe_size += 1;
+                if znorm[g] >= (sizes[g] as f64).sqrt() * ssr_t {
+                    out.strong.push(g);
+                }
+            }
+        }
+        Ok(out)
+    }
+
     /// Fused group-level KKT pass — see
     /// [`crate::linalg::blocked::fused_group_kkt`].
     ///

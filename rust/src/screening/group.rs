@@ -13,7 +13,7 @@
 //! the operator norm is `√n`. Using `√n` reproduces the stated rule (22)
 //! exactly, confirming `n` is a typo (see DESIGN.md §5).
 
-use super::PrevSolution;
+use super::{PrevSolution, RuleKind, SafeRule};
 use crate::data::GroupLayout;
 use crate::linalg::{blocked, ops, DenseMatrix};
 
@@ -109,21 +109,15 @@ impl GroupSafeContext {
     }
 }
 
-/// A group-level safe rule; `survive` has one entry per *group*.
-pub trait GroupSafeRule: Send {
-    /// Rule name for reports.
-    fn name(&self) -> &'static str;
-    /// Screen groups at `lam_next`; returns groups discarded by this call.
-    fn screen(
-        &mut self,
-        x: &DenseMatrix,
-        ctx: &GroupSafeContext,
-        prev: &PrevSolution<'_>,
-        lam_next: f64,
-        survive: &mut [bool],
-    ) -> usize;
-    /// Shutoff flag (Algorithm 1 `Flag`).
-    fn dead(&self) -> bool;
+/// Construct the group safe rule (if any) used by a [`RuleKind`] strategy.
+/// Returns `None` both for strategies with no safe rule and for strategies
+/// the group lasso does not support (callers validate the kind first).
+pub fn make_group_safe_rule(kind: RuleKind) -> Option<Box<dyn SafeRule<GroupSafeContext>>> {
+    match kind {
+        RuleKind::SsrBedpp => Some(Box::new(GroupBedpp::new())),
+        RuleKind::Sedpp => Some(Box::new(GroupSedpp::new())),
+        _ => None,
+    }
 }
 
 /// Group BEDPP — Theorem 4.2, rule (22). Non-sequential, `O(1)` per group
@@ -139,26 +133,42 @@ impl GroupBedpp {
         GroupBedpp { dead: false }
     }
 
+    /// The discard test of rule (22) for one group at `lam`, given the
+    /// shared `root` term `√(n‖y‖² − n²λm²W_*)`. Point-wise in the per-fit
+    /// precomputes — this is what the fused plan dispatches per group.
+    #[inline]
+    fn discards(ctx: &GroupSafeContext, lam: f64, root: f64, g: usize) -> bool {
+        if g == ctx.star {
+            return false;
+        }
+        let n = ctx.n as f64;
+        let lm = ctx.lambda_max;
+        let wg = ctx.layout.sizes[g] as f64;
+        let rhs = 2.0 * n * lam * lm * wg.sqrt() - (lm - lam) * root;
+        if rhs <= 0.0 {
+            return false;
+        }
+        let lhs_sq = (lam + lm) * (lam + lm) * ctx.group_xty_sq[g]
+            - 2.0 * (lm * lm - lam * lam) * ctx.yt_xg_xgt_vbar[g] / n
+            + (lm - lam) * (lm - lam) * ctx.xgt_vbar_sq[g] / (n * n);
+        lhs_sq.max(0.0).sqrt() < rhs
+    }
+
+    /// The shared RHS root term of rule (22).
+    #[inline]
+    fn root(ctx: &GroupSafeContext) -> f64 {
+        let n = ctx.n as f64;
+        let lm = ctx.lambda_max;
+        (n * ctx.y_sq - n * n * lm * lm * ctx.w_star as f64).max(0.0).sqrt()
+    }
+
     /// Standalone evaluation at `lam` (used by Figure-1-style analyses).
     pub fn screen_at(ctx: &GroupSafeContext, lam: f64, survive: &mut [bool]) -> usize {
         assert_eq!(survive.len(), ctx.layout.num_groups());
-        let n = ctx.n as f64;
-        let lm = ctx.lambda_max;
-        let root = (n * ctx.y_sq - n * n * lm * lm * ctx.w_star as f64).max(0.0).sqrt();
+        let root = GroupBedpp::root(ctx);
         let mut discarded = 0;
         for g in 0..survive.len() {
-            if !survive[g] || g == ctx.star {
-                continue;
-            }
-            let wg = ctx.layout.sizes[g] as f64;
-            let rhs = 2.0 * n * lam * lm * wg.sqrt() - (lm - lam) * root;
-            if rhs <= 0.0 {
-                continue;
-            }
-            let lhs_sq = (lam + lm) * (lam + lm) * ctx.group_xty_sq[g]
-                - 2.0 * (lm * lm - lam * lam) * ctx.yt_xg_xgt_vbar[g] / n
-                + (lm - lam) * (lm - lam) * ctx.xgt_vbar_sq[g] / (n * n);
-            if lhs_sq.max(0.0).sqrt() < rhs {
+            if survive[g] && GroupBedpp::discards(ctx, lam, root, g) {
                 survive[g] = false;
                 discarded += 1;
             }
@@ -167,7 +177,7 @@ impl GroupBedpp {
     }
 }
 
-impl GroupSafeRule for GroupBedpp {
+impl SafeRule<GroupSafeContext> for GroupBedpp {
     fn name(&self) -> &'static str {
         "gBEDPP"
     }
@@ -189,6 +199,23 @@ impl GroupSafeRule for GroupBedpp {
 
     fn dead(&self) -> bool {
         self.dead
+    }
+
+    /// Point-wise plan: rule (22) is a scalar form in the per-fit
+    /// precomputes, so the fused group screen applies it per group. Keep
+    /// `g` iff [`GroupBedpp::screen_at`] would not discard it.
+    fn plan<'s>(
+        &'s mut self,
+        _x: &DenseMatrix,
+        ctx: &'s GroupSafeContext,
+        _prev: &PrevSolution<'_>,
+        lam_next: f64,
+        _survive: &mut [bool],
+        masked_discards: &mut usize,
+    ) -> Option<Box<dyn Fn(usize) -> bool + Sync + 's>> {
+        *masked_discards = 0;
+        let root = GroupBedpp::root(ctx);
+        Some(Box::new(move |g: usize| !GroupBedpp::discards(ctx, lam_next, root, g)))
     }
 }
 
@@ -262,7 +289,7 @@ impl GroupSedpp {
     }
 }
 
-impl GroupSafeRule for GroupSedpp {
+impl SafeRule<GroupSafeContext> for GroupSedpp {
     fn name(&self) -> &'static str {
         "gSEDPP"
     }

@@ -163,18 +163,27 @@ pub struct PrevSolution<'a> {
     pub r: &'a [f64],
 }
 
-/// A safe screening rule: guaranteed never to discard an active feature.
-pub trait SafeRule: Send {
+/// A safe screening rule: guaranteed never to discard an active unit.
+///
+/// The trait is generic over its precompute context `C`, which also fixes
+/// the *unit* of screening: lasso/elastic-net rules implement
+/// `SafeRule<SafeContext>` (the default) and screen columns;
+/// group-lasso rules implement `SafeRule<`[`group::GroupSafeContext`]`>`
+/// and screen groups (one `survive` entry per group). The generic
+/// [`crate::solver::driver`] consumes either through the same interface,
+/// and [`SafeRule::plan`] predicates flow into the engines' fused screens
+/// (`fused_screen` / `fused_group_screen`) for both unit kinds.
+pub trait SafeRule<C = SafeContext>: Send {
     /// Rule name for reports.
     fn name(&self) -> &'static str;
 
-    /// Screen at `lam_next`, writing `survive[j] = false` for features that
+    /// Screen at `lam_next`, writing `survive[u] = false` for units that
     /// are *safely* discarded. Entries are only ever cleared (callers reset
-    /// the mask). Returns the number of features discarded by this call.
+    /// the mask). Returns the number of units discarded by this call.
     fn screen(
         &mut self,
         x: &DenseMatrix,
-        ctx: &SafeContext,
+        ctx: &C,
         prev: &PrevSolution<'_>,
         lam_next: f64,
         survive: &mut [bool],
@@ -185,13 +194,14 @@ pub trait SafeRule: Send {
     fn dead(&self) -> bool;
 
     /// Plan screening at `lam_next` for the **fused** pass (Algorithm 1
-    /// driven by `ScanEngine::fused_screen`).
+    /// driven by `ScanEngine::fused_screen` or
+    /// `ScanEngine::fused_group_screen`).
     ///
-    /// Rules whose test is point-wise in per-fit precomputes (BEDPP, Dome)
-    /// return a `keep(j)` predicate that the fused kernel evaluates per
-    /// column — no separate mask traversal, no intermediate index vectors.
-    /// Rules that need their own full scan or a per-λ state transition
-    /// (SEDPP, the re-hybridized rule) use this default: run
+    /// Rules whose test is point-wise in per-fit precomputes (BEDPP, Dome,
+    /// group BEDPP) return a `keep(u)` predicate that the fused kernel
+    /// evaluates per unit — no separate mask traversal, no intermediate
+    /// index vectors. Rules that need their own full scan or a per-λ state
+    /// transition (SEDPP, the re-hybridized rule) use this default: run
     /// [`SafeRule::screen`] into the mask now (scan-then-filter), report
     /// its discard count through `masked_discards`, and return `None`.
     ///
@@ -203,7 +213,7 @@ pub trait SafeRule: Send {
     fn plan<'s>(
         &'s mut self,
         x: &DenseMatrix,
-        ctx: &'s SafeContext,
+        ctx: &'s C,
         prev: &PrevSolution<'_>,
         lam_next: f64,
         survive: &mut [bool],

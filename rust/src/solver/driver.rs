@@ -1,0 +1,429 @@
+//! The generic pathwise driver — **Algorithm 1** of the paper, written
+//! once for every lasso-type problem family.
+//!
+//! The paper's central claim is that one hybrid screening skeleton
+//! generalizes across the lasso/elastic net, the group lasso, and (§6)
+//! sparse logistic regression. This module is that skeleton, factored out
+//! of the three formerly-duplicated drivers:
+//!
+//! * [`drive`] owns the λ-grid walk, warm starts, the
+//!   screen → optimize → KKT → violation-round loop, the safe-rule
+//!   switch-off flag (`Flag`, Algorithm 1 lines 6–8), per-λ
+//!   [`LambdaMetrics`], and the fused/unfused pipeline split;
+//! * the [`Problem`] trait abstracts exactly what varies between problem
+//!   families: the unit of screening (column vs. group), the inner
+//!   optimizer (coordinate descent, blockwise group descent, IRLS-wrapped
+//!   weighted CD), the residual / working-response update, and the KKT
+//!   threshold (including the elastic-net α scaling).
+//!
+//! [`crate::solver::path::GaussianLasso`] (lasso + elastic net),
+//! [`crate::solver::group_path::GroupLassoProblem`], and
+//! [`crate::solver::logistic::LogisticProblem`] are the three `Problem`
+//! instances; their `fit_*` entry points are thin shims that construct the
+//! problem and call [`drive`]. Every engine backend, sharding, or
+//! out-of-core improvement made here immediately covers all three
+//! families (biglasso's single C++ path loop, generalized).
+
+use std::time::Instant;
+
+use crate::error::Result;
+use crate::screening::RuleKind;
+use crate::solver::lambda::GridKind;
+
+/// Per-λ instrumentation (feeds Figures 1/3 and the ablation benches).
+/// Shared by every problem family; the group lasso reports *group* counts
+/// in the set-size fields.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LambdaMetrics {
+    /// λ value.
+    pub lambda: f64,
+    /// |S| — units surviving safe screening (= p when no safe rule).
+    pub safe_size: usize,
+    /// |H| — units handed to the optimizer (after violation rounds).
+    pub strong_size: usize,
+    /// Units KKT-checked after convergence.
+    pub kkt_checked: usize,
+    /// KKT violations detected (units re-added).
+    pub violations: usize,
+    /// Inner-solver cycles spent.
+    pub cd_cycles: usize,
+    /// Individual coordinate updates.
+    pub coord_updates: u64,
+    /// Columns read by screening/KKT scans at this λ.
+    pub cols_scanned: u64,
+    /// Nonzero coefficients at the solution.
+    pub nonzero: usize,
+    /// Objective value at the solution.
+    pub objective: f64,
+}
+
+/// The problem-independent slice of a path configuration: λ-grid shape and
+/// the fused/unfused pipeline switch. Family configs (`PathConfig`,
+/// `GroupPathConfig`, `LogisticPathConfig`) lower themselves to this.
+#[derive(Clone, Debug)]
+pub struct DriverConfig {
+    /// Screening strategy (paper "Method").
+    pub rule: RuleKind,
+    /// Number of λ grid points.
+    pub n_lambda: usize,
+    /// Smallest λ as a fraction of λmax.
+    pub lambda_min_ratio: f64,
+    /// Grid spacing.
+    pub grid: GridKind,
+    /// Explicit λ grid (overrides `n_lambda`/`lambda_min_ratio`).
+    pub lambdas: Option<Vec<f64>>,
+    /// Drive the fused single-pass screening/KKT pipeline; `false` keeps
+    /// the scan-then-filter driver (bit-identical selections, kept for A/B
+    /// benchmarking and the equivalence property tests).
+    pub fused: bool,
+}
+
+/// Outcome of one screening stage ([`Problem::screen`]) at one λ.
+#[derive(Clone, Debug, Default)]
+pub struct ScreenStage {
+    /// The strong / optimizer set `H` (ascending unit indices).
+    pub strong: Vec<usize>,
+    /// Units discarded by the safe rule in this stage (mask + pointwise).
+    pub discarded: usize,
+    /// Rule-reported shutoff applicable to the `Flag` logic (masked rules
+    /// only; pointwise plans flag purely on the discard count).
+    pub rule_dead: bool,
+}
+
+/// Result of a generic path fit. Family-specific wrappers (`PathFit`,
+/// `GroupPathFit`, `LogisticPathFit`) are built from this plus whatever
+/// extras the problem recorded (e.g. logistic intercepts).
+#[derive(Clone, Debug)]
+pub struct DriverFit {
+    /// The λ grid actually used (decreasing).
+    pub lambdas: Vec<f64>,
+    /// Sparse coefficient vectors, one per λ: `(coefficient, value)` pairs.
+    pub betas: Vec<Vec<(usize, f64)>>,
+    /// Per-λ instrumentation.
+    pub metrics: Vec<LambdaMetrics>,
+    /// Number of coefficients.
+    pub p: usize,
+    /// λmax computed from the data.
+    pub lambda_max: f64,
+    /// Wall-clock seconds for the whole path.
+    pub seconds: f64,
+    /// Strategy used.
+    pub rule: RuleKind,
+}
+
+/// What varies between lasso-type problem families in Algorithm 1. The
+/// driver calls these stages in a fixed order per λ; implementations own
+/// all numeric state (coefficients, residuals, lazy correlations, safe
+/// rules, engines) and must keep fused/unfused selections bit-identical.
+pub trait Problem {
+    /// Number of screening units: columns for the lasso/logistic, groups
+    /// for the group lasso.
+    fn n_units(&self) -> usize;
+
+    /// Total coefficient dimension (sparse β extraction runs over this).
+    fn n_coef(&self) -> usize;
+
+    /// λmax computed from the data (warm-start grid anchor).
+    fn lambda_max(&self) -> f64;
+
+    /// Whether a safe rule is attached. Algorithm 1's `Flag` starts TRUE
+    /// (safe screening off) when there is none.
+    fn has_safe_rule(&self) -> bool;
+
+    /// Whether post-convergence KKT validation is required. Exact
+    /// strategies (Basic) and purely-safe ones (SEDPP) skip it.
+    fn needs_kkt(&self) -> bool;
+
+    /// Screening stage at `lam` (Algorithm 1 lines 2–10): run the safe
+    /// rule when `run_safe`, lazily refresh stale correlations over the
+    /// survivors (line 4), and classify survivors into the strong set
+    /// (line 10). Must set `m.safe_size` (survivor count) and account
+    /// `m.cols_scanned`. With `fused`, the whole stage runs as one engine
+    /// traversal where the family supports it.
+    #[allow(clippy::too_many_arguments)]
+    fn screen(
+        &mut self,
+        lam: f64,
+        lam_prev: f64,
+        run_safe: bool,
+        fused: bool,
+        survive: &mut [bool],
+        m: &mut LambdaMetrics,
+    ) -> Result<ScreenStage>;
+
+    /// Inner solve over the strong units (lines 11–13), warm-started from
+    /// the current iterate. Must invalidate lazy correlations when the
+    /// iterate changed.
+    fn solve(
+        &mut self,
+        lam: f64,
+        lambda_index: usize,
+        strong: &[usize],
+        m: &mut LambdaMetrics,
+    ) -> Result<()>;
+
+    /// Post-convergence KKT pass over `survive \ strong` (lines 14–17):
+    /// recompute correlations for the check set and return the violators
+    /// (ascending). Must account `m.kkt_checked` / `m.cols_scanned`.
+    fn kkt(
+        &mut self,
+        lam: f64,
+        fused: bool,
+        survive: &[bool],
+        in_strong: &[bool],
+        m: &mut LambdaMetrics,
+    ) -> Result<Vec<usize>>;
+
+    /// End-of-λ hook (line 18): the unfused pipelines refresh correlations
+    /// over the strong set here so the next screening sees the final
+    /// residual (the fused pipelines pick them up lazily instead);
+    /// families record per-λ extras (e.g. the logistic intercept).
+    fn end_lambda(
+        &mut self,
+        lam: f64,
+        fused: bool,
+        strong: &[usize],
+        m: &mut LambdaMetrics,
+    ) -> Result<()>;
+
+    /// Sparse nonzero coefficients at the current iterate (ascending).
+    fn sparse_beta(&self) -> Vec<(usize, f64)>;
+
+    /// Objective value at the current iterate.
+    fn objective(&self, lam: f64) -> f64;
+}
+
+/// A [`Problem`] paired with its [`DriverConfig`]. The problem owns warm
+/// path state (coefficients, residuals, safe-rule shutoff), so a
+/// `PathDriver` is **single-use**: construct a fresh problem for each
+/// fit. [`drive`] is the underlying free function the `fit_*` shims call
+/// directly.
+pub struct PathDriver<P: Problem> {
+    /// The problem instance (owns all numeric state: coefficients,
+    /// residuals, lazy correlations, safe rules, engine handle).
+    pub problem: P,
+    /// The λ-grid / pipeline configuration.
+    pub config: DriverConfig,
+}
+
+impl<P: Problem> PathDriver<P> {
+    /// Pair a problem with a driver configuration.
+    pub fn new(problem: P, config: DriverConfig) -> Self {
+        PathDriver { problem, config }
+    }
+
+    /// Run Algorithm 1 over the configured λ grid.
+    pub fn fit(&mut self) -> Result<DriverFit> {
+        drive(&mut self.problem, &self.config)
+    }
+}
+
+/// Run Algorithm 1 over the λ grid: the single path loop shared by every
+/// problem family. See the module docs for the stage contract.
+pub fn drive<P: Problem>(prob: &mut P, cfg: &DriverConfig) -> Result<DriverFit> {
+    let start = Instant::now();
+    let lambda_max = prob.lambda_max();
+    let lambdas = match &cfg.lambdas {
+        Some(ls) => ls.clone(),
+        None => crate::solver::lambda::grid(
+            lambda_max,
+            cfg.lambda_min_ratio,
+            cfg.n_lambda,
+            cfg.grid,
+        ),
+    };
+    let units = prob.n_units();
+    let needs_kkt = prob.needs_kkt();
+    // Algorithm 1 `Flag`: TRUE once the safe rule stops discarding.
+    let mut flag_off = !prob.has_safe_rule();
+    let mut betas = Vec::with_capacity(lambdas.len());
+    let mut metrics = Vec::with_capacity(lambdas.len());
+
+    let mut lam_prev = lambda_max;
+    for (k, &lam) in lambdas.iter().enumerate() {
+        let mut m = LambdaMetrics { lambda: lam, ..Default::default() };
+
+        // ---- screening (lines 2–10) ----
+        let mut survive = vec![true; units];
+        let run_safe = !flag_off;
+        let stage = prob.screen(lam, lam_prev, run_safe, cfg.fused, &mut survive, &mut m)?;
+        if run_safe && prob.has_safe_rule() && (stage.discarded == 0 || stage.rule_dead) {
+            // |S| = p ⇒ Flag ← TRUE: switch the safe rule off permanently.
+            flag_off = true;
+            survive.iter_mut().for_each(|s| *s = true);
+        }
+        let mut strong = stage.strong;
+        let mut in_strong = vec![false; units];
+        for &u in &strong {
+            in_strong[u] = true;
+        }
+
+        // ---- solve + KKT loop (lines 11–18) ----
+        loop {
+            prob.solve(lam, k, &strong, &mut m)?;
+            if !needs_kkt {
+                break; // exact / safe ⇒ nothing to verify
+            }
+            let viols = prob.kkt(lam, cfg.fused, &survive, &in_strong, &mut m)?;
+            if viols.is_empty() {
+                break;
+            }
+            m.violations += viols.len();
+            for &u in &viols {
+                in_strong[u] = true;
+            }
+            strong.extend(viols);
+        }
+
+        prob.end_lambda(lam, cfg.fused, &strong, &mut m)?;
+        m.strong_size = strong.len();
+        let sparse = prob.sparse_beta();
+        m.nonzero = sparse.len();
+        m.objective = prob.objective(lam);
+        betas.push(sparse);
+        metrics.push(m);
+        lam_prev = lam;
+    }
+    Ok(DriverFit {
+        lambdas,
+        betas,
+        metrics,
+        p: prob.n_coef(),
+        lambda_max,
+        seconds: start.elapsed().as_secs_f64(),
+        rule: cfg.rule,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A degenerate problem exercising the driver's control flow: one unit,
+    /// no safe rule, a "solver" that flips a coefficient on, and a KKT pass
+    /// that reports one violation round before going quiet.
+    struct Toy {
+        beta: f64,
+        kkt_rounds: usize,
+        solves: usize,
+        end_calls: usize,
+    }
+
+    impl Problem for Toy {
+        fn n_units(&self) -> usize {
+            1
+        }
+        fn n_coef(&self) -> usize {
+            1
+        }
+        fn lambda_max(&self) -> f64 {
+            1.0
+        }
+        fn has_safe_rule(&self) -> bool {
+            false
+        }
+        fn needs_kkt(&self) -> bool {
+            true
+        }
+        fn screen(
+            &mut self,
+            _lam: f64,
+            _lam_prev: f64,
+            _run_safe: bool,
+            _fused: bool,
+            survive: &mut [bool],
+            m: &mut LambdaMetrics,
+        ) -> Result<ScreenStage> {
+            m.safe_size = survive.len();
+            Ok(ScreenStage::default())
+        }
+        fn solve(
+            &mut self,
+            _lam: f64,
+            _k: usize,
+            strong: &[usize],
+            _m: &mut LambdaMetrics,
+        ) -> Result<()> {
+            self.solves += 1;
+            if !strong.is_empty() {
+                self.beta = 0.5;
+            }
+            Ok(())
+        }
+        fn kkt(
+            &mut self,
+            _lam: f64,
+            _fused: bool,
+            _survive: &[bool],
+            in_strong: &[bool],
+            m: &mut LambdaMetrics,
+        ) -> Result<Vec<usize>> {
+            if !in_strong[0] && self.kkt_rounds == 0 {
+                self.kkt_rounds += 1;
+                m.kkt_checked += 1;
+                return Ok(vec![0]);
+            }
+            Ok(Vec::new())
+        }
+        fn end_lambda(
+            &mut self,
+            _lam: f64,
+            _fused: bool,
+            _strong: &[usize],
+            _m: &mut LambdaMetrics,
+        ) -> Result<()> {
+            self.end_calls += 1;
+            Ok(())
+        }
+        fn sparse_beta(&self) -> Vec<(usize, f64)> {
+            if self.beta != 0.0 {
+                vec![(0, self.beta)]
+            } else {
+                Vec::new()
+            }
+        }
+        fn objective(&self, _lam: f64) -> f64 {
+            0.0
+        }
+    }
+
+    #[test]
+    fn violation_rounds_readd_units_and_loop() {
+        let mut prob = Toy { beta: 0.0, kkt_rounds: 0, solves: 0, end_calls: 0 };
+        let cfg = DriverConfig {
+            rule: RuleKind::Ssr,
+            n_lambda: 2,
+            lambda_min_ratio: 0.5,
+            grid: GridKind::Linear,
+            lambdas: None,
+            fused: true,
+        };
+        let fit = drive(&mut prob, &cfg).unwrap();
+        assert_eq!(fit.lambdas.len(), 2);
+        // first λ: empty strong → KKT violation → re-solve with unit 0.
+        assert_eq!(fit.metrics[0].violations, 1);
+        assert_eq!(fit.metrics[0].strong_size, 1);
+        assert_eq!(fit.betas[0], vec![(0, 0.5)]);
+        // the driver called solve twice at λ#0 (violation round) and once
+        // more at λ#1, and end_lambda exactly once per λ.
+        assert_eq!(prob.solves, 3);
+        assert_eq!(prob.end_calls, 2);
+        assert_eq!(fit.p, 1);
+    }
+
+    #[test]
+    fn explicit_grid_respected() {
+        let mut prob = Toy { beta: 0.0, kkt_rounds: 1, solves: 0, end_calls: 0 };
+        let cfg = DriverConfig {
+            rule: RuleKind::BasicPcd,
+            n_lambda: 100,
+            lambda_min_ratio: 0.1,
+            grid: GridKind::Linear,
+            lambdas: Some(vec![0.7, 0.2]),
+            fused: false,
+        };
+        let fit = drive(&mut prob, &cfg).unwrap();
+        assert_eq!(fit.lambdas, vec![0.7, 0.2]);
+        assert_eq!(fit.rule, RuleKind::BasicPcd);
+    }
+}

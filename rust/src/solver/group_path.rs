@@ -2,23 +2,30 @@
 //! lasso (paper §4.2 and §5.2). Methods: Basic GD, AC, SSR, SEDPP, and
 //! SSR-BEDPP (Table 3).
 //!
-//! Like the lasso driver, the default execution is **fused**: group-norm
-//! refreshes go through [`ScanEngine::group_norms`] (one pool-parallel
-//! kernel over the stale groups instead of a scan per group), and the
-//! post-convergence check goes through [`ScanEngine::fused_group_kkt`] —
-//! one traversal recomputing `‖X_gᵀr‖/n` per surviving group, testing KKT
-//! for non-strong groups, and doubling as the end-of-step strong refresh.
-//! `fused: false` retains the separate-traversal driver; both select
-//! identical group sets.
+//! The λ-loop lives in the **generic driver**
+//! ([`crate::solver::driver::drive`]); this module contributes the
+//! group-unit problem [`GroupLassoProblem`] — blockwise group descent,
+//! lazy `‖X_gᵀr‖/n` norms, the group safe rules, and the `λ√W_g` KKT
+//! threshold — plus the thin [`fit_group_path`] shims.
+//!
+//! Like the lasso driver, the default execution is **fused**: screening
+//! runs through [`ScanEngine::fused_group_screen`] (the group BEDPP rule
+//! contributes a per-group predicate via `SafeRule::plan`, and one
+//! pool-parallel pass refreshes stale norms and classifies against the
+//! group-SSR threshold), and the post-convergence check runs through
+//! [`ScanEngine::fused_group_kkt`] — one traversal recomputing `‖X_gᵀr‖/n`
+//! per surviving group, testing KKT for non-strong groups, with the
+//! end-of-step strong refresh handled lazily at the next λ. `fused: false`
+//! retains the separate-traversal driver; both select identical group
+//! sets.
 
-use std::time::Instant;
-
-use crate::data::GroupedDataset;
+use crate::data::{GroupLayout, GroupedDataset};
 use crate::error::{HssrError, Result};
-use crate::linalg::ops;
+use crate::linalg::{ops, DenseMatrix};
 use crate::runtime::{native::NativeEngine, ScanEngine};
-use crate::screening::group::{GroupBedpp, GroupSafeContext, GroupSafeRule, GroupSedpp};
-use crate::screening::{PrevSolution, RuleKind};
+use crate::screening::group::{make_group_safe_rule, GroupSafeContext};
+use crate::screening::{PrevSolution, RuleKind, SafeRule};
+use crate::solver::driver::{drive, DriverConfig, Problem, ScreenStage};
 use crate::solver::lambda::GridKind;
 use crate::solver::path::LambdaMetrics;
 use crate::solver::{gd, kkt};
@@ -56,6 +63,20 @@ impl Default for GroupPathConfig {
             max_iter: 100_000,
             lambdas: None,
             fused: true,
+        }
+    }
+}
+
+impl GroupPathConfig {
+    /// Lower to the problem-independent driver configuration.
+    fn driver(&self) -> DriverConfig {
+        DriverConfig {
+            rule: self.rule,
+            n_lambda: self.n_lambda,
+            lambda_min_ratio: self.lambda_min_ratio,
+            grid: self.grid,
+            lambdas: self.lambdas.clone(),
+            fused: self.fused,
         }
     }
 }
@@ -112,6 +133,313 @@ impl GroupPathFit {
     }
 }
 
+/// The group-lasso problem as a [`Problem`] instance: the screening unit
+/// is the *group*, the inner optimizer is blockwise group descent, lazy
+/// state is `znorm_g = ‖X_gᵀr‖/n`, and the KKT threshold carries the
+/// `√W_g` group-size weight (rule (21)).
+pub struct GroupLassoProblem<'a> {
+    x: &'a DenseMatrix,
+    layout: &'a GroupLayout,
+    engine: &'a dyn ScanEngine,
+    rule: RuleKind,
+    tol: f64,
+    max_iter: usize,
+    ctx: GroupSafeContext,
+    safe_rule: Option<Box<dyn SafeRule<GroupSafeContext>>>,
+    beta: Vec<f64>,
+    r: Vec<f64>,
+    // znorm_g = ‖X_gᵀr/n‖ at the most recent residual it was computed at.
+    znorm: Vec<f64>,
+    znorm_valid: Vec<bool>,
+}
+
+impl<'a> GroupLassoProblem<'a> {
+    /// Build the problem: validate the strategy, run the `O(np)`
+    /// group-context precompute, start cold with norms seeded from the
+    /// null residual `r = y`.
+    pub fn new(
+        ds: &'a GroupedDataset,
+        cfg: &GroupPathConfig,
+        engine: &'a dyn ScanEngine,
+    ) -> Result<Self> {
+        match cfg.rule {
+            RuleKind::BasicPcd
+            | RuleKind::ActiveCycling
+            | RuleKind::Ssr
+            | RuleKind::Sedpp
+            | RuleKind::SsrBedpp => {}
+            other => {
+                return Err(HssrError::Config(format!(
+                    "group lasso supports Basic GD/AC/SSR/SEDPP/SSR-BEDPP, not {other:?}"
+                )))
+            }
+        }
+        let x = &ds.x;
+        let n = ds.n();
+        let layout = &ds.layout;
+        let g_count = layout.num_groups();
+        let ctx = GroupSafeContext::build(x, &ds.y, layout);
+        // initial residual = y: znorm from ctx.group_xty_sq
+        let mut znorm = vec![0.0f64; g_count];
+        for g in 0..g_count {
+            znorm[g] = ctx.group_xty_sq[g].sqrt() / n as f64;
+        }
+        Ok(GroupLassoProblem {
+            x,
+            layout,
+            engine,
+            rule: cfg.rule,
+            tol: cfg.tol,
+            max_iter: cfg.max_iter,
+            safe_rule: make_group_safe_rule(cfg.rule),
+            beta: vec![0.0f64; ds.p()],
+            r: ds.y.clone(),
+            znorm,
+            znorm_valid: vec![true; g_count],
+            ctx,
+        })
+    }
+}
+
+impl Problem for GroupLassoProblem<'_> {
+    fn n_units(&self) -> usize {
+        self.layout.num_groups()
+    }
+
+    fn n_coef(&self) -> usize {
+        self.beta.len()
+    }
+
+    fn lambda_max(&self) -> f64 {
+        self.ctx.lambda_max
+    }
+
+    fn has_safe_rule(&self) -> bool {
+        self.safe_rule.is_some()
+    }
+
+    fn needs_kkt(&self) -> bool {
+        !matches!(self.rule, RuleKind::BasicPcd | RuleKind::Sedpp)
+    }
+
+    fn screen(
+        &mut self,
+        lam: f64,
+        lam_prev: f64,
+        run_safe: bool,
+        fused: bool,
+        survive: &mut [bool],
+        m: &mut LambdaMetrics,
+    ) -> Result<ScreenStage> {
+        let layout = self.layout;
+        let g_count = layout.num_groups();
+        let uses_ssr = self.rule.uses_ssr();
+        let mut stage = ScreenStage::default();
+
+        if fused && uses_ssr {
+            // ---- fused group screening: one pass applies the per-group
+            // safe predicate, refreshes stale norms, and classifies ----
+            let ssr_t = 2.0 * lam - lam_prev;
+            let mut masked_d = 0usize;
+            let (fout, was_pointwise) = {
+                let keep = if !run_safe {
+                    None
+                } else if let Some(rule) = self.safe_rule.as_mut() {
+                    let prev = PrevSolution { lambda: lam_prev, r: &self.r };
+                    rule.plan(self.x, &self.ctx, &prev, lam, survive, &mut masked_d)
+                } else {
+                    None
+                };
+                let wp = keep.is_some();
+                let out = self.engine.fused_group_screen(
+                    self.x,
+                    &self.r,
+                    &layout.starts,
+                    &layout.sizes,
+                    keep.as_deref(),
+                    ssr_t,
+                    survive,
+                    &mut self.znorm,
+                    &mut self.znorm_valid,
+                )?;
+                (out, wp)
+            };
+            stage.discarded = masked_d + fout.discarded;
+            stage.rule_dead = !was_pointwise
+                && self.safe_rule.as_ref().map(|ru| ru.dead()).unwrap_or(false);
+            m.safe_size = fout.safe_size;
+            m.cols_scanned += fout.cols_scanned;
+            stage.strong = fout.strong;
+            return Ok(stage);
+        }
+
+        // ---- unfused screening (group level) ----
+        if run_safe {
+            if let Some(rule) = self.safe_rule.as_mut() {
+                let prev = PrevSolution { lambda: lam_prev, r: &self.r };
+                stage.discarded = rule.screen(self.x, &self.ctx, &prev, lam, survive);
+                stage.rule_dead = rule.dead();
+            }
+        }
+        m.safe_size = survive.iter().filter(|&&s| s).count();
+
+        // refresh znorm over newly-entered safe groups (one pooled kernel)
+        if uses_ssr {
+            let stale: Vec<usize> =
+                (0..g_count).filter(|&g| survive[g] && !self.znorm_valid[g]).collect();
+            if !stale.is_empty() {
+                m.cols_scanned += self.engine.group_norms(
+                    self.x,
+                    &self.r,
+                    &layout.starts,
+                    &layout.sizes,
+                    &stale,
+                    &mut self.znorm,
+                    &mut self.znorm_valid,
+                )?;
+            }
+        }
+
+        // ---- strong set (groups) ----
+        stage.strong = match self.rule {
+            RuleKind::BasicPcd => (0..g_count).collect(),
+            RuleKind::ActiveCycling => (0..g_count)
+                .filter(|&g| layout.range(g).any(|j| self.beta[j] != 0.0))
+                .collect(),
+            RuleKind::Sedpp => (0..g_count).filter(|&g| survive[g]).collect(),
+            _ => crate::screening::ssr::group_strong_set(
+                lam,
+                lam_prev,
+                &self.znorm,
+                &layout.sizes,
+                survive,
+            ),
+        };
+        Ok(stage)
+    }
+
+    fn solve(
+        &mut self,
+        lam: f64,
+        lambda_index: usize,
+        strong: &[usize],
+        m: &mut LambdaMetrics,
+    ) -> Result<()> {
+        let stats = gd::gd_solve(
+            self.x,
+            lam,
+            strong,
+            &self.layout.starts,
+            &self.layout.sizes,
+            &mut self.beta,
+            &mut self.r,
+            self.tol,
+            self.max_iter,
+            lambda_index,
+        )?;
+        m.cd_cycles += stats.cycles;
+        m.coord_updates += stats.coord_updates;
+        if stats.cycles > 0 {
+            self.znorm_valid.iter_mut().for_each(|v| *v = false);
+        }
+        Ok(())
+    }
+
+    fn kkt(
+        &mut self,
+        lam: f64,
+        fused: bool,
+        survive: &[bool],
+        in_strong: &[bool],
+        m: &mut LambdaMetrics,
+    ) -> Result<Vec<usize>> {
+        let layout = self.layout;
+        if fused {
+            // One traversal: group norms + KKT test. Strong groups are
+            // not refreshed here — the residual is unchanged until the
+            // next λ's screening, which lazily refreshes them as stale
+            // with bit-identical norms (see the lasso driver).
+            let violates =
+                move |g: usize, zn: f64| kkt::group_violates(lam, layout.sizes[g], zn);
+            let fout = self.engine.fused_group_kkt(
+                self.x,
+                &self.r,
+                &layout.starts,
+                &layout.sizes,
+                survive,
+                in_strong,
+                &violates,
+                false,
+                &mut self.znorm,
+                &mut self.znorm_valid,
+            )?;
+            m.cols_scanned += fout.cols_scanned;
+            m.kkt_checked += fout.checked;
+            return Ok(fout.violations);
+        }
+        let g_count = layout.num_groups();
+        let check: Vec<usize> =
+            (0..g_count).filter(|&g| survive[g] && !in_strong[g]).collect();
+        if check.is_empty() {
+            return Ok(Vec::new());
+        }
+        m.cols_scanned += self.engine.group_norms(
+            self.x,
+            &self.r,
+            &layout.starts,
+            &layout.sizes,
+            &check,
+            &mut self.znorm,
+            &mut self.znorm_valid,
+        )?;
+        m.kkt_checked += check.len();
+        let zsub: Vec<f64> = check.iter().map(|&g| self.znorm[g]).collect();
+        Ok(kkt::group_violations(lam, &check, &zsub, &layout.sizes))
+    }
+
+    fn end_lambda(
+        &mut self,
+        _lam: f64,
+        fused: bool,
+        strong: &[usize],
+        m: &mut LambdaMetrics,
+    ) -> Result<()> {
+        // Unfused driver: refresh norms over the strong groups for the next
+        // screening (the fused pass leaves them lazily refreshable).
+        let use_fused_kkt = fused && self.needs_kkt();
+        if !use_fused_kkt && self.rule.uses_ssr() && !strong.is_empty() {
+            m.cols_scanned += self.engine.group_norms(
+                self.x,
+                &self.r,
+                &self.layout.starts,
+                &self.layout.sizes,
+                strong,
+                &mut self.znorm,
+                &mut self.znorm_valid,
+            )?;
+        }
+        Ok(())
+    }
+
+    fn sparse_beta(&self) -> Vec<(usize, f64)> {
+        (0..self.beta.len())
+            .filter(|&j| self.beta[j] != 0.0)
+            .map(|j| (j, self.beta[j]))
+            .collect()
+    }
+
+    fn objective(&self, lam: f64) -> f64 {
+        // group-lasso objective
+        let layout = self.layout;
+        let mut pen = 0.0;
+        for g in 0..layout.num_groups() {
+            let ss: f64 = layout.range(g).map(|j| self.beta[j] * self.beta[j]).sum();
+            pen += (layout.sizes[g] as f64).sqrt() * ss.sqrt();
+        }
+        ops::nrm2_sq(&self.r) / (2.0 * self.ctx.n as f64) + lam * pen
+    }
+}
+
 /// Fit with the default native (pool-backed) engine.
 pub fn fit_group_path(ds: &GroupedDataset, cfg: &GroupPathConfig) -> Result<GroupPathFit> {
     fit_group_path_with_engine(ds, cfg, &NativeEngine::new())
@@ -123,226 +451,17 @@ pub fn fit_group_path_with_engine(
     cfg: &GroupPathConfig,
     engine: &dyn ScanEngine,
 ) -> Result<GroupPathFit> {
-    let start = Instant::now();
-    let x = &ds.x;
-    let n = ds.n();
-    let p = ds.p();
-    let g_count = ds.num_groups();
-    let layout = &ds.layout;
-    let ctx = GroupSafeContext::build(x, &ds.y, layout);
-    let lambdas = match &cfg.lambdas {
-        Some(ls) => ls.clone(),
-        None => crate::solver::lambda::grid(
-            ctx.lambda_max,
-            cfg.lambda_min_ratio,
-            cfg.n_lambda,
-            cfg.grid,
-        ),
-    };
-    let mut safe_rule: Option<Box<dyn GroupSafeRule>> = match cfg.rule {
-        RuleKind::SsrBedpp => Some(Box::new(GroupBedpp::new())),
-        RuleKind::Sedpp => Some(Box::new(GroupSedpp::new())),
-        RuleKind::BasicPcd | RuleKind::ActiveCycling | RuleKind::Ssr => None,
-        other => {
-            return Err(HssrError::Config(format!(
-                "group lasso supports Basic GD/AC/SSR/SEDPP/SSR-BEDPP, not {other:?}"
-            )))
-        }
-    };
-    let uses_ssr = cfg.rule.uses_ssr();
-    let use_fused_kkt =
-        cfg.fused && !matches!(cfg.rule, RuleKind::BasicPcd | RuleKind::Sedpp);
-    // ---- path state ----
-    let mut beta = vec![0.0f64; p];
-    let mut r = ds.y.clone();
-    // znorm_g = ‖X_gᵀr/n‖ at the most recent residual it was computed at.
-    let mut znorm = vec![0.0f64; g_count];
-    let mut znorm_valid = vec![false; g_count];
-    // initial residual = y: znorm from ctx.group_xty_sq
-    for g in 0..g_count {
-        znorm[g] = ctx.group_xty_sq[g].sqrt() / n as f64;
-        znorm_valid[g] = true;
-    }
-    let mut flag_off = safe_rule.is_none();
-    let mut betas = Vec::with_capacity(lambdas.len());
-    let mut metrics = Vec::with_capacity(lambdas.len());
-
-    let mut lam_prev = ctx.lambda_max;
-    for (k, &lam) in lambdas.iter().enumerate() {
-        let mut m = LambdaMetrics { lambda: lam, ..Default::default() };
-        // ---- safe screening (group level) ----
-        let mut survive = vec![true; g_count];
-        if !flag_off {
-            if let Some(rule) = safe_rule.as_mut() {
-                let prev = PrevSolution { lambda: lam_prev, r: &r };
-                let discarded = rule.screen(x, &ctx, &prev, lam, &mut survive);
-                if discarded == 0 || rule.dead() {
-                    flag_off = true;
-                    survive.iter_mut().for_each(|s| *s = true);
-                }
-            }
-        }
-        m.safe_size = survive.iter().filter(|&&s| s).count();
-
-        // refresh znorm over newly-entered safe groups (one pooled kernel)
-        if uses_ssr {
-            let stale: Vec<usize> =
-                (0..g_count).filter(|&g| survive[g] && !znorm_valid[g]).collect();
-            if !stale.is_empty() {
-                m.cols_scanned += engine.group_norms(
-                    x,
-                    &r,
-                    &layout.starts,
-                    &layout.sizes,
-                    &stale,
-                    &mut znorm,
-                    &mut znorm_valid,
-                )?;
-            }
-        }
-
-        // ---- strong set (groups) ----
-        let mut strong: Vec<usize> = match cfg.rule {
-            RuleKind::BasicPcd => (0..g_count).collect(),
-            RuleKind::ActiveCycling => (0..g_count)
-                .filter(|&g| layout.range(g).any(|j| beta[j] != 0.0))
-                .collect(),
-            RuleKind::Sedpp => (0..g_count).filter(|&g| survive[g]).collect(),
-            _ => crate::screening::ssr::group_strong_set(
-                lam,
-                lam_prev,
-                &znorm,
-                &layout.sizes,
-                &survive,
-            ),
-        };
-        let mut in_strong = vec![false; g_count];
-        for &g in &strong {
-            in_strong[g] = true;
-        }
-
-        // ---- solve + KKT loop ----
-        loop {
-            let stats = gd::gd_solve(
-                x,
-                lam,
-                &strong,
-                &layout.starts,
-                &layout.sizes,
-                &mut beta,
-                &mut r,
-                cfg.tol,
-                cfg.max_iter,
-                k,
-            )?;
-            m.cd_cycles += stats.cycles;
-            m.coord_updates += stats.coord_updates;
-            if stats.cycles > 0 {
-                znorm_valid.iter_mut().for_each(|v| *v = false);
-            }
-            if matches!(cfg.rule, RuleKind::BasicPcd | RuleKind::Sedpp) {
-                break; // exact / safe ⇒ no group KKT checking
-            }
-            if use_fused_kkt {
-                // One traversal: group norms + KKT test. Strong groups are
-                // not refreshed here — the residual is unchanged until the
-                // next λ's screening, which lazily refreshes them as stale
-                // with bit-identical norms (see the lasso driver).
-                let fout = engine.fused_group_kkt(
-                    x,
-                    &r,
-                    &layout.starts,
-                    &layout.sizes,
-                    &survive,
-                    &in_strong,
-                    &|g: usize, zn: f64| kkt::group_violates(lam, layout.sizes[g], zn),
-                    false,
-                    &mut znorm,
-                    &mut znorm_valid,
-                )?;
-                m.cols_scanned += fout.cols_scanned;
-                m.kkt_checked += fout.checked;
-                if fout.violations.is_empty() {
-                    break;
-                }
-                m.violations += fout.violations.len();
-                for &g in &fout.violations {
-                    in_strong[g] = true;
-                }
-                strong.extend(fout.violations);
-            } else {
-                let check: Vec<usize> = match cfg.rule {
-                    RuleKind::ActiveCycling | RuleKind::Ssr => {
-                        (0..g_count).filter(|&g| !in_strong[g]).collect()
-                    }
-                    _ => {
-                        (0..g_count).filter(|&g| survive[g] && !in_strong[g]).collect()
-                    }
-                };
-                if check.is_empty() {
-                    break;
-                }
-                m.cols_scanned += engine.group_norms(
-                    x,
-                    &r,
-                    &layout.starts,
-                    &layout.sizes,
-                    &check,
-                    &mut znorm,
-                    &mut znorm_valid,
-                )?;
-                m.kkt_checked += check.len();
-                let zsub: Vec<f64> = check.iter().map(|&g| znorm[g]).collect();
-                let viols = kkt::group_violations(lam, &check, &zsub, &layout.sizes);
-                if viols.is_empty() {
-                    break;
-                }
-                m.violations += viols.len();
-                for &g in &viols {
-                    in_strong[g] = true;
-                }
-                strong.extend(viols);
-            }
-        }
-
-        // Unfused driver: refresh norms over the strong groups for the next
-        // screening (the fused pass already did in its final round).
-        if !use_fused_kkt && uses_ssr && !strong.is_empty() {
-            m.cols_scanned += engine.group_norms(
-                x,
-                &r,
-                &layout.starts,
-                &layout.sizes,
-                &strong,
-                &mut znorm,
-                &mut znorm_valid,
-            )?;
-        }
-
-        m.strong_size = strong.len();
-        let sparse: Vec<(usize, f64)> =
-            (0..p).filter(|&j| beta[j] != 0.0).map(|j| (j, beta[j])).collect();
-        m.nonzero = sparse.len();
-        // group-lasso objective
-        let mut pen = 0.0;
-        for g in 0..g_count {
-            let ss: f64 = layout.range(g).map(|j| beta[j] * beta[j]).sum();
-            pen += (layout.sizes[g] as f64).sqrt() * ss.sqrt();
-        }
-        m.objective = ops::nrm2_sq(&r) / (2.0 * n as f64) + lam * pen;
-        betas.push(sparse);
-        metrics.push(m);
-        lam_prev = lam;
-    }
+    let mut prob = GroupLassoProblem::new(ds, cfg, engine)?;
+    let fit = drive(&mut prob, &cfg.driver())?;
     Ok(GroupPathFit {
-        lambdas,
-        betas,
-        metrics,
-        p,
-        num_groups: g_count,
-        lambda_max: ctx.lambda_max,
-        seconds: start.elapsed().as_secs_f64(),
-        rule: cfg.rule,
+        lambdas: fit.lambdas,
+        betas: fit.betas,
+        metrics: fit.metrics,
+        p: fit.p,
+        num_groups: ds.num_groups(),
+        lambda_max: fit.lambda_max,
+        seconds: fit.seconds,
+        rule: fit.rule,
     })
 }
 

@@ -13,6 +13,16 @@
 //! outer iteration builds the weighted least-squares surrogate at the
 //! current `(b, β)` and runs penalized weighted CD to convergence.
 //!
+//! The λ-loop lives in the **generic driver**
+//! ([`crate::solver::driver::drive`]) — the same Algorithm-1 skeleton as
+//! the Gaussian families; this module contributes [`LogisticProblem`]:
+//! the IRLS inner optimizer, the score residual `y − p̂` as the working
+//! response for screening, and lazy `score_j = x_jᵀ(y − p̂)/n`
+//! bookkeeping. All screening and KKT scans dispatch through
+//! [`ScanEngine`] on the shared persistent worker pool — fused
+//! single-traversal passes by default ([`LogisticPathConfig::fused`]),
+//! scan-then-filter otherwise, with bit-identical selections.
+//!
 //! The *sequential strong rule* carries over directly (Tibshirani et al.
 //! 2012 §7): discard `j` at `λ_{k+1}` if `|x_jᵀ(y − p̂(λ_k))/n| <
 //! α(2λ_{k+1} − λ_k)`, with post-convergence KKT checking against
@@ -21,14 +31,14 @@
 //! loss — so the supported strategies are Basic, AC, and SSR (exactly the
 //! state the paper leaves this extension in).
 
-use std::time::Instant;
-
 use crate::data::Dataset;
 use crate::error::{HssrError, Result};
-use crate::linalg::{blocked, ops, DenseMatrix};
-use crate::screening::RuleKind;
+use crate::linalg::{ops, DenseMatrix};
+use crate::runtime::{native::NativeEngine, ScanEngine};
+use crate::screening::{ssr, RuleKind};
+use crate::solver::driver::{drive, DriverConfig, Problem, ScreenStage};
 use crate::solver::lambda::GridKind;
-use crate::solver::path::LambdaMetrics;
+use crate::solver::path::{column_kkt, column_refresh, LambdaMetrics};
 use crate::solver::Penalty;
 
 /// Configuration for the logistic path.
@@ -50,6 +60,9 @@ pub struct LogisticPathConfig {
     pub max_irls: usize,
     /// Max CD cycles per IRLS step.
     pub max_iter: usize,
+    /// Drive the fused single-pass screening/KKT pipeline (default); the
+    /// unfused scan-then-filter driver selects identical feature sets.
+    pub fused: bool,
 }
 
 impl Default for LogisticPathConfig {
@@ -63,6 +76,21 @@ impl Default for LogisticPathConfig {
             tol: 1e-7,
             max_irls: 50,
             max_iter: 10_000,
+            fused: true,
+        }
+    }
+}
+
+impl LogisticPathConfig {
+    /// Lower to the problem-independent driver configuration.
+    fn driver(&self) -> DriverConfig {
+        DriverConfig {
+            rule: self.rule,
+            n_lambda: self.n_lambda,
+            lambda_min_ratio: self.lambda_min_ratio,
+            grid: self.grid,
+            lambdas: None,
+            fused: self.fused,
         }
     }
 }
@@ -171,194 +199,367 @@ fn wcd_cycle(
     max_delta
 }
 
-/// Fit the ℓ1-logistic path. `y` must be 0/1 labels (the Dataset's
-/// centered-`y` convention does not apply; pass raw labels).
+/// The ℓ1-logistic problem as a [`Problem`] instance: IRLS-wrapped
+/// weighted coordinate descent over the strong set, with the score
+/// residual `y − p̂` driving SSR screening and KKT checking through the
+/// scan engine (GLM strong rules, Tibshirani et al. 2012 §7).
+pub struct LogisticProblem<'a> {
+    x: &'a DenseMatrix,
+    y: &'a [f64],
+    engine: &'a dyn ScanEngine,
+    penalty: Penalty,
+    rule: RuleKind,
+    tol: f64,
+    max_irls: usize,
+    max_iter: usize,
+    lambda_max: f64,
+    b0: f64,
+    beta: Vec<f64>,
+    eta: Vec<f64>,
+    // score_j = x_jᵀ(y − p̂)/n at the most recent iterate it was computed
+    // at, maintained lazily like the Gaussian z.
+    z: Vec<f64>,
+    z_valid: Vec<bool>,
+    // Scan residual y − p̂ at the current iterate (refreshed post-solve).
+    resid: Vec<f64>,
+    scratch: Vec<f64>,
+    // Per-λ intercepts, collected by `end_lambda`.
+    intercepts: Vec<f64>,
+    // IRLS work buffers: weights, working residual, curvature diag.
+    w: Vec<f64>,
+    wr: Vec<f64>,
+    xwx: Vec<f64>,
+}
+
+impl<'a> LogisticProblem<'a> {
+    /// Build the problem at the null model `b = logit(ȳ)`, `β = 0`,
+    /// validating the penalty, labels, and strategy.
+    pub fn new(
+        x: &'a DenseMatrix,
+        y: &'a [f64],
+        cfg: &LogisticPathConfig,
+        engine: &'a dyn ScanEngine,
+    ) -> Result<Self> {
+        cfg.penalty.validate()?;
+        if y.iter().any(|&v| v != 0.0 && v != 1.0) {
+            return Err(HssrError::Config("logistic labels must be 0/1".into()));
+        }
+        if !matches!(
+            cfg.rule,
+            RuleKind::BasicPcd | RuleKind::ActiveCycling | RuleKind::Ssr
+        ) {
+            return Err(HssrError::Config(format!(
+                "logistic lasso supports Basic/AC/SSR (quadratic-loss safe rules do not port), not {:?}",
+                cfg.rule
+            )));
+        }
+        if y.len() != x.nrows() {
+            return Err(HssrError::Dimension("logistic: len(y) != nrows".into()));
+        }
+        let n = x.nrows();
+        let p = x.ncols();
+        let ybar = ops::mean(y);
+        if ybar <= 0.0 || ybar >= 1.0 {
+            return Err(HssrError::Config("labels are all one class".into()));
+        }
+        // Null model: b = logit(ȳ); score = Xᵀ(y − ȳ)/n gives λmax.
+        let resid0: Vec<f64> = y.iter().map(|yi| yi - ybar).collect();
+        let mut score0 = vec![0.0; p];
+        engine.scan_all(x, &resid0, &mut score0)?;
+        let lambda_max = ops::inf_norm(&score0) / cfg.penalty.alpha();
+        Ok(LogisticProblem {
+            x,
+            y,
+            engine,
+            penalty: cfg.penalty,
+            rule: cfg.rule,
+            tol: cfg.tol,
+            max_irls: cfg.max_irls,
+            max_iter: cfg.max_iter,
+            lambda_max,
+            b0: (ybar / (1.0 - ybar)).ln(),
+            beta: vec![0.0; p],
+            eta: vec![(ybar / (1.0 - ybar)).ln(); n],
+            z: score0,
+            z_valid: vec![true; p],
+            resid: resid0,
+            scratch: vec![0.0; p],
+            intercepts: Vec::new(),
+            w: vec![0.0; n],
+            wr: vec![0.0; n],
+            xwx: vec![0.0; p],
+        })
+    }
+}
+
+impl Problem for LogisticProblem<'_> {
+    fn n_units(&self) -> usize {
+        self.beta.len()
+    }
+
+    fn n_coef(&self) -> usize {
+        self.beta.len()
+    }
+
+    fn lambda_max(&self) -> f64 {
+        self.lambda_max
+    }
+
+    fn has_safe_rule(&self) -> bool {
+        false // the quadratic-loss safe rules do not port to this dual
+    }
+
+    fn needs_kkt(&self) -> bool {
+        !matches!(self.rule, RuleKind::BasicPcd)
+    }
+
+    fn screen(
+        &mut self,
+        lam: f64,
+        lam_prev: f64,
+        _run_safe: bool,
+        fused: bool,
+        survive: &mut [bool],
+        m: &mut LambdaMetrics,
+    ) -> Result<ScreenStage> {
+        let p = self.beta.len();
+        let uses_ssr = self.rule.uses_ssr();
+        let mut stage = ScreenStage::default();
+
+        if fused && uses_ssr {
+            // One traversal refreshes stale scores and classifies against
+            // the GLM strong threshold α(2λ − λ_prev).
+            let ssr_t = ssr::threshold(self.penalty, lam, lam_prev);
+            let fout = self.engine.fused_screen(
+                self.x,
+                &self.resid,
+                None,
+                ssr_t,
+                survive,
+                &mut self.z,
+                &mut self.z_valid,
+            )?;
+            m.safe_size = fout.safe_size;
+            m.cols_scanned += fout.cols_scanned;
+            // glmnet-style ever-active inclusion: active features join H
+            // even when their score dips below the strong threshold.
+            let mut keep = vec![false; p];
+            for &j in &fout.strong {
+                keep[j] = true;
+            }
+            stage.strong =
+                (0..p).filter(|&j| keep[j] || self.beta[j] != 0.0).collect();
+            return Ok(stage);
+        }
+
+        m.safe_size = p;
+        if uses_ssr {
+            let stale: Vec<usize> = (0..p).filter(|&j| !self.z_valid[j]).collect();
+            column_refresh(
+                self.engine,
+                self.x,
+                &self.resid,
+                &stale,
+                &mut self.z,
+                &mut self.z_valid,
+                &mut self.scratch,
+                m,
+            )?;
+        }
+        stage.strong = match self.rule {
+            RuleKind::BasicPcd => (0..p).collect(),
+            RuleKind::ActiveCycling => {
+                (0..p).filter(|&j| self.beta[j] != 0.0).collect()
+            }
+            _ => {
+                let t = ssr::threshold(self.penalty, lam, lam_prev);
+                (0..p)
+                    .filter(|&j| self.z[j].abs() >= t || self.beta[j] != 0.0)
+                    .collect()
+            }
+        };
+        Ok(stage)
+    }
+
+    fn solve(
+        &mut self,
+        lam: f64,
+        lambda_index: usize,
+        strong: &[usize],
+        m: &mut LambdaMetrics,
+    ) -> Result<()> {
+        let n = self.x.nrows();
+        // ---- IRLS outer loop over the strong set ----
+        for _irls in 0..self.max_irls {
+            // weights + working residual at current (b0, beta)
+            for i in 0..n {
+                let pi = sigmoid(self.eta[i]);
+                let wi = (pi * (1.0 - pi)).max(1e-5);
+                self.w[i] = wi;
+                self.wr[i] = (self.y[i] - pi) / wi;
+            }
+            for &j in strong {
+                let col = self.x.col(j);
+                let mut s = 0.0;
+                for i in 0..n {
+                    s += self.w[i] * col[i] * col[i];
+                }
+                self.xwx[j] = s / n as f64;
+            }
+            // intercept update (unpenalized)
+            let sw: f64 = ops::sum(&self.w);
+            let swr: f64 = self.w.iter().zip(&self.wr).map(|(wi, ri)| wi * ri).sum();
+            let db = swr / sw;
+            if db != 0.0 {
+                self.b0 += db;
+                for ri in self.wr.iter_mut() {
+                    *ri -= db;
+                }
+            }
+            // inner weighted CD
+            let mut inner_delta = f64::INFINITY;
+            for _ in 0..self.max_iter {
+                inner_delta = wcd_cycle(
+                    self.x,
+                    self.penalty,
+                    lam,
+                    strong,
+                    &self.w,
+                    &self.xwx,
+                    &mut self.beta,
+                    &mut self.wr,
+                );
+                m.cd_cycles += 1;
+                m.coord_updates += strong.len() as u64;
+                if inner_delta < self.tol {
+                    break;
+                }
+            }
+            if inner_delta >= self.tol {
+                return Err(HssrError::NoConvergence {
+                    lambda_index,
+                    max_iter: self.max_iter,
+                    last_delta: inner_delta,
+                });
+            }
+            // refresh η from scratch (cheap, avoids drift): η = b0 + Xβ
+            let fit = self.x.matvec(&self.beta);
+            let mut outer_delta = 0.0f64;
+            for i in 0..n {
+                let new_eta = self.b0 + fit[i];
+                outer_delta = outer_delta.max((new_eta - self.eta[i]).abs());
+                self.eta[i] = new_eta;
+            }
+            if outer_delta < 1e-8 {
+                break;
+            }
+        }
+        // Scan residual for screening/KKT: y − p̂ at the updated iterate.
+        for i in 0..n {
+            self.resid[i] = self.y[i] - sigmoid(self.eta[i]);
+        }
+        self.z_valid.iter_mut().for_each(|v| *v = false);
+        Ok(())
+    }
+
+    fn kkt(
+        &mut self,
+        lam: f64,
+        fused: bool,
+        survive: &[bool],
+        in_strong: &[bool],
+        m: &mut LambdaMetrics,
+    ) -> Result<Vec<usize>> {
+        column_kkt(
+            self.engine,
+            self.x,
+            &self.resid,
+            self.penalty,
+            lam,
+            fused,
+            survive,
+            in_strong,
+            &mut self.z,
+            &mut self.z_valid,
+            &mut self.scratch,
+            m,
+        )
+    }
+
+    fn end_lambda(
+        &mut self,
+        _lam: f64,
+        fused: bool,
+        strong: &[usize],
+        m: &mut LambdaMetrics,
+    ) -> Result<()> {
+        // Unfused driver: refresh scores over the strong set so the next
+        // SSR screening sees them at the final probabilities.
+        let use_fused_kkt = fused && self.needs_kkt();
+        if !use_fused_kkt && self.rule.uses_ssr() {
+            column_refresh(
+                self.engine,
+                self.x,
+                &self.resid,
+                strong,
+                &mut self.z,
+                &mut self.z_valid,
+                &mut self.scratch,
+                m,
+            )?;
+        }
+        self.intercepts.push(self.b0);
+        Ok(())
+    }
+
+    fn sparse_beta(&self) -> Vec<(usize, f64)> {
+        (0..self.beta.len())
+            .filter(|&j| self.beta[j] != 0.0)
+            .map(|j| (j, self.beta[j]))
+            .collect()
+    }
+
+    fn objective(&self, lam: f64) -> f64 {
+        let probs: Vec<f64> = self.eta.iter().map(|&e| sigmoid(e)).collect();
+        deviance(self.y, &probs) / 2.0
+            + self.penalty.alpha() * lam * self.beta.iter().map(|b| b.abs()).sum::<f64>()
+            + self.penalty.l2_weight()
+                * lam
+                * 0.5
+                * self.beta.iter().map(|b| b * b).sum::<f64>()
+    }
+}
+
+/// Fit the ℓ1-logistic path with the default (native, pool-backed) scan
+/// engine. `y` must be 0/1 labels (the Dataset's centered-`y` convention
+/// does not apply; pass raw labels).
 pub fn fit_logistic_path(
     x: &DenseMatrix,
     y: &[f64],
     cfg: &LogisticPathConfig,
 ) -> Result<LogisticPathFit> {
-    cfg.penalty.validate()?;
-    if y.iter().any(|&v| v != 0.0 && v != 1.0) {
-        return Err(HssrError::Config("logistic labels must be 0/1".into()));
-    }
-    if !matches!(cfg.rule, RuleKind::BasicPcd | RuleKind::ActiveCycling | RuleKind::Ssr) {
-        return Err(HssrError::Config(format!(
-            "logistic lasso supports Basic/AC/SSR (quadratic-loss safe rules do not port), not {:?}",
-            cfg.rule
-        )));
-    }
-    let start = Instant::now();
-    let n = x.nrows();
-    let p = x.ncols();
-    if y.len() != n {
-        return Err(HssrError::Dimension("logistic: len(y) != nrows".into()));
-    }
-    let ybar = ops::mean(y);
-    if ybar <= 0.0 || ybar >= 1.0 {
-        return Err(HssrError::Config("labels are all one class".into()));
-    }
-    // Null model: b = logit(ȳ); score = Xᵀ(y − ȳ)/n gives λmax.
-    let resid0: Vec<f64> = y.iter().map(|yi| yi - ybar).collect();
-    let score0 = blocked::scan_all_vec(x, &resid0);
-    let lambda_max = ops::inf_norm(&score0) / cfg.penalty.alpha();
-    let lambdas =
-        crate::solver::lambda::grid(lambda_max, cfg.lambda_min_ratio, cfg.n_lambda, cfg.grid);
+    fit_logistic_path_with_engine(x, y, cfg, &NativeEngine::new())
+}
 
-    let mut b0 = (ybar / (1.0 - ybar)).ln();
-    let mut beta = vec![0.0; p];
-    let mut eta = vec![b0; n];
-    // score_j = x_jᵀ(y − p̂)/n at the most recent solution (all valid at null).
-    let mut score = score0;
-    let mut betas = Vec::with_capacity(lambdas.len());
-    let mut intercepts = Vec::with_capacity(lambdas.len());
-    let mut metrics = Vec::with_capacity(lambdas.len());
-
-    let mut lam_prev = lambda_max;
-    for (k, &lam) in lambdas.iter().enumerate() {
-        let mut m = LambdaMetrics { lambda: lam, safe_size: p, ..Default::default() };
-        let alpha = cfg.penalty.alpha();
-        // ---- screening ----
-        let mut strong: Vec<usize> = match cfg.rule {
-            RuleKind::BasicPcd => (0..p).collect(),
-            RuleKind::ActiveCycling => (0..p).filter(|&j| beta[j] != 0.0).collect(),
-            _ => {
-                let t = alpha * (2.0 * lam - lam_prev);
-                (0..p).filter(|&j| score[j].abs() >= t || beta[j] != 0.0).collect()
-            }
-        };
-        let mut in_strong = vec![false; p];
-        for &j in &strong {
-            in_strong[j] = true;
-        }
-
-        loop {
-            // ---- IRLS outer loop over the strong set ----
-            let mut w = vec![0.0; n];
-            let mut r = vec![0.0; n];
-            let mut xwx = vec![0.0; p];
-            for _irls in 0..cfg.max_irls {
-                // weights + working residual at current (b0, beta)
-                let mut max_w: f64 = 0.0;
-                for i in 0..n {
-                    let pi = sigmoid(eta[i]);
-                    let wi = (pi * (1.0 - pi)).max(1e-5);
-                    w[i] = wi;
-                    r[i] = (y[i] - pi) / wi;
-                    max_w = max_w.max(wi);
-                }
-                for &j in &strong {
-                    let col = x.col(j);
-                    let mut s = 0.0;
-                    for i in 0..n {
-                        s += w[i] * col[i] * col[i];
-                    }
-                    xwx[j] = s / n as f64;
-                }
-                // intercept update (unpenalized)
-                let sw: f64 = ops::sum(&w);
-                let swr: f64 = w.iter().zip(&r).map(|(wi, ri)| wi * ri).sum();
-                let db = swr / sw;
-                if db != 0.0 {
-                    b0 += db;
-                    for ri in r.iter_mut() {
-                        *ri -= db;
-                    }
-                }
-                // inner weighted CD
-                let mut inner_delta = f64::INFINITY;
-                for _ in 0..cfg.max_iter {
-                    inner_delta =
-                        wcd_cycle(x, cfg.penalty, lam, &strong, &w, &xwx, &mut beta, &mut r);
-                    m.cd_cycles += 1;
-                    m.coord_updates += strong.len() as u64;
-                    if inner_delta < cfg.tol {
-                        break;
-                    }
-                }
-                if inner_delta >= cfg.tol {
-                    return Err(HssrError::NoConvergence {
-                        lambda_index: k,
-                        max_iter: cfg.max_iter,
-                        last_delta: inner_delta,
-                    });
-                }
-                // refresh η from scratch (cheap, avoids drift): η = b0 + Xβ
-                let fit = x.matvec(&beta);
-                let mut outer_delta = 0.0f64;
-                for i in 0..n {
-                    let new_eta = b0 + fit[i];
-                    outer_delta = outer_delta.max((new_eta - eta[i]).abs());
-                    eta[i] = new_eta;
-                }
-                if outer_delta < 1e-8 {
-                    break;
-                }
-            }
-            // ---- KKT check over the complement ----
-            let resid: Vec<f64> = (0..n).map(|i| y[i] - sigmoid(eta[i])).collect();
-            let check: Vec<usize> = match cfg.rule {
-                RuleKind::BasicPcd => Vec::new(),
-                _ => (0..p).filter(|&j| !in_strong[j]).collect(),
-            };
-            if check.is_empty() {
-                // refresh score over strong set for the next SSR step
-                let mut s = vec![0.0; strong.len()];
-                blocked::scan_subset(x, &resid, &strong, &mut s);
-                for (i, &j) in strong.iter().enumerate() {
-                    score[j] = s[i];
-                }
-                break;
-            }
-            let mut zc = vec![0.0; check.len()];
-            blocked::scan_subset(x, &resid, &check, &mut zc);
-            m.cols_scanned += check.len() as u64;
-            m.kkt_checked += check.len();
-            let mut viols = Vec::new();
-            for (i, &j) in check.iter().enumerate() {
-                score[j] = zc[i];
-                if zc[i].abs() > alpha * lam * (1.0 + 1e-7) {
-                    viols.push(j);
-                }
-            }
-            // refresh strong-set scores too
-            let mut s = vec![0.0; strong.len()];
-            blocked::scan_subset(x, &resid, &strong, &mut s);
-            for (i, &j) in strong.iter().enumerate() {
-                score[j] = s[i];
-            }
-            if viols.is_empty() {
-                break;
-            }
-            m.violations += viols.len();
-            for &j in &viols {
-                in_strong[j] = true;
-            }
-            strong.extend(viols);
-        }
-
-        m.strong_size = strong.len();
-        let sparse: Vec<(usize, f64)> =
-            (0..p).filter(|&j| beta[j] != 0.0).map(|j| (j, beta[j])).collect();
-        m.nonzero = sparse.len();
-        let probs: Vec<f64> = eta.iter().map(|&e| sigmoid(e)).collect();
-        m.objective = deviance(y, &probs) / 2.0
-            + cfg.penalty.alpha() * lam * beta.iter().map(|b| b.abs()).sum::<f64>()
-            + cfg.penalty.l2_weight() * lam * 0.5 * beta.iter().map(|b| b * b).sum::<f64>();
-        betas.push(sparse);
-        intercepts.push(b0);
-        metrics.push(m);
-        lam_prev = lam;
-    }
+/// Fit the ℓ1-logistic path with an explicit scan engine — every
+/// screening/KKT scan dispatches through it on the shared pool.
+pub fn fit_logistic_path_with_engine(
+    x: &DenseMatrix,
+    y: &[f64],
+    cfg: &LogisticPathConfig,
+    engine: &dyn ScanEngine,
+) -> Result<LogisticPathFit> {
+    let mut prob = LogisticProblem::new(x, y, cfg, engine)?;
+    let fit = drive(&mut prob, &cfg.driver())?;
     Ok(LogisticPathFit {
-        lambdas,
-        intercepts,
-        betas,
-        metrics,
-        p,
-        lambda_max,
-        seconds: start.elapsed().as_secs_f64(),
-        rule: cfg.rule,
+        lambdas: fit.lambdas,
+        intercepts: prob.intercepts,
+        betas: fit.betas,
+        metrics: fit.metrics,
+        p: fit.p,
+        lambda_max: fit.lambda_max,
+        seconds: fit.seconds,
+        rule: fit.rule,
     })
 }
 
@@ -402,6 +603,7 @@ pub fn fit_logistic_from_dataset(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::blocked;
 
     fn fit(n: usize, p: usize, rule: RuleKind, seed: u64) -> (DenseMatrix, Vec<f64>, LogisticPathFit) {
         let (x, y, _) = synthetic_logistic(n, p, 5, seed);
@@ -461,6 +663,32 @@ mod tests {
                     assert!((a[j] - b[j]).abs() < 1e-4, "{rule:?} λ#{k} β[{j}]");
                 }
                 assert!((basic.intercepts[k] - other.intercepts[k]).abs() < 1e-4);
+            }
+        }
+    }
+
+    /// The fused and unfused logistic pipelines must select exactly the
+    /// same features and produce identical paths (the randomized version
+    /// lives in `crate::prop`).
+    #[test]
+    fn fused_logistic_bit_identical_to_unfused() {
+        let (x, y, _) = synthetic_logistic(120, 60, 5, 9);
+        for rule in [RuleKind::BasicPcd, RuleKind::ActiveCycling, RuleKind::Ssr] {
+            let cfg = LogisticPathConfig { rule, n_lambda: 20, tol: 1e-9, ..Default::default() };
+            let fused = fit_logistic_path(&x, &y, &cfg).unwrap();
+            let unfused = fit_logistic_path(
+                &x,
+                &y,
+                &LogisticPathConfig { fused: false, ..cfg },
+            )
+            .unwrap();
+            assert_eq!(fused.betas, unfused.betas, "{rule:?} betas differ");
+            assert_eq!(fused.intercepts, unfused.intercepts, "{rule:?} intercepts");
+            for (k, (mf, mu)) in
+                fused.metrics.iter().zip(unfused.metrics.iter()).enumerate()
+            {
+                assert_eq!(mf.strong_size, mu.strong_size, "{rule:?} |H| at λ#{k}");
+                assert_eq!(mf.violations, mu.violations, "{rule:?} viols at λ#{k}");
             }
         }
     }

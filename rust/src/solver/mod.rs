@@ -1,7 +1,13 @@
 //! Lasso-type solvers: coordinate descent inner loops, blockwise group
 //! descent, and the pathwise orchestration of Algorithm 1.
+//!
+//! The Algorithm-1 λ-loop itself is written **once**, in [`driver`], as a
+//! generic `PathDriver` over the [`driver::Problem`] trait; [`path`]
+//! (lasso/elastic net), [`group_path`] (group lasso), and [`logistic`]
+//! (ℓ1-logistic, §6) are `Problem` instances plus thin config shims.
 
 pub mod cd;
+pub mod driver;
 pub mod duality;
 pub mod gd;
 pub mod group_path;

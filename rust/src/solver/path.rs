@@ -1,4 +1,4 @@
-//! Pathwise coordinate descent with hybrid safe-strong screening —
+//! Lasso / elastic-net pathwise fitting with hybrid safe-strong screening —
 //! **Algorithm 1** of the paper, generalized over all the "Method" rows of
 //! its tables:
 //!
@@ -11,6 +11,11 @@
 //! | `SsrBedpp`          | BEDPP set            | SSR ∩ S                 | `S \ H`        |
 //! | `SsrDome`           | Dome set             | SSR ∩ S                 | `S \ H`        |
 //! | `SsrBedppSedpp`     | BEDPP→frozen-SEDPP   | SSR ∩ S                 | `S \ H`        |
+//!
+//! The λ-loop itself lives in the **generic driver**
+//! ([`crate::solver::driver::drive`]); this module contributes the
+//! quadratic-loss column problem [`GaussianLasso`] (elastic net included
+//! via [`Penalty`]) and the thin [`fit_lasso_path`] shims around it.
 //!
 //! The `z_j = x_jᵀr/n` values are maintained lazily exactly as Algorithm 1
 //! prescribes: screening at `λ_k` reuses the values computed during KKT
@@ -40,14 +45,15 @@
 //! (`fused: false`, kept for A/B benchmarking and the equivalence property
 //! test in [`crate::prop`]).
 
-use std::time::Instant;
-
 use crate::data::Dataset;
 use crate::error::Result;
-use crate::linalg::ops;
+use crate::linalg::{ops, DenseMatrix};
 use crate::runtime::{native::NativeEngine, ScanEngine};
-use crate::screening::{make_safe_rule, ssr, PrevSolution, RuleKind, SafeContext};
+use crate::screening::{make_safe_rule, ssr, PrevSolution, RuleKind, SafeContext, SafeRule};
+use crate::solver::driver::{drive, DriverConfig, Problem, ScreenStage};
 use crate::solver::{cd, kkt, lambda::GridKind, Penalty};
+
+pub use crate::solver::driver::LambdaMetrics;
 
 /// Configuration for a pathwise fit.
 #[derive(Clone, Debug)]
@@ -90,29 +96,18 @@ impl Default for PathConfig {
     }
 }
 
-/// Per-λ instrumentation (feeds Figures 1/3 and the ablation benches).
-#[derive(Clone, Copy, Debug, Default)]
-pub struct LambdaMetrics {
-    /// λ value.
-    pub lambda: f64,
-    /// |S| — features surviving safe screening (= p when no safe rule).
-    pub safe_size: usize,
-    /// |H| — features handed to the optimizer (after violation rounds).
-    pub strong_size: usize,
-    /// Features KKT-checked after convergence.
-    pub kkt_checked: usize,
-    /// KKT violations detected (features re-added).
-    pub violations: usize,
-    /// CD cycles spent.
-    pub cd_cycles: usize,
-    /// Individual coordinate updates.
-    pub coord_updates: u64,
-    /// Columns read by screening/KKT scans at this λ.
-    pub cols_scanned: u64,
-    /// Nonzero coefficients at the solution.
-    pub nonzero: usize,
-    /// Objective value at the solution.
-    pub objective: f64,
+impl PathConfig {
+    /// Lower to the problem-independent driver configuration.
+    fn driver(&self) -> DriverConfig {
+        DriverConfig {
+            rule: self.rule,
+            n_lambda: self.n_lambda,
+            lambda_min_ratio: self.lambda_min_ratio,
+            grid: self.grid,
+            lambdas: self.lambdas.clone(),
+            fused: self.fused,
+        }
+    }
 }
 
 /// Result of a pathwise fit.
@@ -166,6 +161,324 @@ impl PathFit {
     }
 }
 
+/// Refresh `z[j] = x_jᵀr/n` over `cols` at the current residual, marking
+/// them valid and accounting the scans — the lazy-correlation refresh
+/// shared by the column-unit problems (Gaussian and logistic; Algorithm 1
+/// lines 4 and 18).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn column_refresh(
+    engine: &dyn ScanEngine,
+    x: &DenseMatrix,
+    r: &[f64],
+    cols: &[usize],
+    z: &mut [f64],
+    z_valid: &mut [bool],
+    scratch: &mut [f64],
+    m: &mut LambdaMetrics,
+) -> Result<()> {
+    if cols.is_empty() {
+        return Ok(());
+    }
+    engine.scan_subset(x, r, cols, &mut scratch[..cols.len()])?;
+    for (s, &j) in cols.iter().enumerate() {
+        z[j] = scratch[s];
+        z_valid[j] = true;
+    }
+    m.cols_scanned += cols.len() as u64;
+    Ok(())
+}
+
+/// One column-unit KKT pass over `survive \ in_strong` with lazy-`z`
+/// bookkeeping (Algorithm 1 lines 14–17), shared by the column-unit
+/// problems. Fused: one engine traversal recomputes candidate `z` and
+/// tests KKT, deliberately NOT refreshing strong columns (the residual is
+/// unchanged until the next λ's screening, which refreshes them lazily
+/// with bit-identical values — no redundant rescans on violation rounds,
+/// and the last λ's refresh is never paid). Unfused: scan-then-filter.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn column_kkt(
+    engine: &dyn ScanEngine,
+    x: &DenseMatrix,
+    r: &[f64],
+    penalty: Penalty,
+    lam: f64,
+    fused: bool,
+    survive: &[bool],
+    in_strong: &[bool],
+    z: &mut [f64],
+    z_valid: &mut [bool],
+    scratch: &mut [f64],
+    m: &mut LambdaMetrics,
+) -> Result<Vec<usize>> {
+    if fused {
+        let violates = move |zj: f64| kkt::violates(penalty, lam, zj);
+        let fout =
+            engine.fused_kkt(x, r, survive, in_strong, &violates, false, z, z_valid)?;
+        m.cols_scanned += fout.cols_scanned;
+        m.kkt_checked += fout.checked;
+        return Ok(fout.violations);
+    }
+    let p = x.ncols();
+    let check: Vec<usize> = (0..p).filter(|&j| survive[j] && !in_strong[j]).collect();
+    if check.is_empty() {
+        return Ok(Vec::new());
+    }
+    column_refresh(engine, x, r, &check, z, z_valid, scratch, m)?;
+    m.kkt_checked += check.len();
+    Ok(kkt::violations(penalty, lam, &check, &scratch[..check.len()]))
+}
+
+/// The quadratic-loss column problem (lasso and elastic net) as a
+/// [`Problem`] instance: coordinate-descent inner loop, lazy `z = Xᵀr/n`
+/// bookkeeping, lasso safe rules, and the scalar KKT test with the
+/// elastic-net α scaling.
+pub struct GaussianLasso<'a> {
+    x: &'a DenseMatrix,
+    engine: &'a dyn ScanEngine,
+    penalty: Penalty,
+    rule: RuleKind,
+    tol: f64,
+    max_iter: usize,
+    ctx: SafeContext,
+    safe_rule: Option<Box<dyn SafeRule>>,
+    beta: Vec<f64>,
+    r: Vec<f64>,
+    // z_j = x_jᵀr/n at the most recent residual where it was computed.
+    z: Vec<f64>,
+    z_valid: Vec<bool>,
+    scratch: Vec<f64>,
+}
+
+impl<'a> GaussianLasso<'a> {
+    /// Build the problem: validate the penalty, run the `O(np)` safe-rule
+    /// precompute, start cold at `β = 0`.
+    pub fn new(
+        ds: &'a Dataset,
+        cfg: &PathConfig,
+        engine: &'a dyn ScanEngine,
+    ) -> Result<Self> {
+        cfg.penalty.validate()?;
+        let x = &ds.x;
+        let n = ds.n();
+        let p = ds.p();
+        let ctx = SafeContext::build(x, &ds.y, cfg.penalty, cfg.rule.needs_star());
+        let z: Vec<f64> = ctx.xty.iter().map(|v| v / n as f64).collect();
+        Ok(GaussianLasso {
+            x,
+            engine,
+            penalty: cfg.penalty,
+            rule: cfg.rule,
+            tol: cfg.tol,
+            max_iter: cfg.max_iter,
+            safe_rule: make_safe_rule(cfg.rule),
+            beta: vec![0.0; p],
+            r: ds.y.clone(),
+            z,
+            z_valid: vec![true; p],
+            scratch: vec![0.0; p],
+            ctx,
+        })
+    }
+}
+
+impl Problem for GaussianLasso<'_> {
+    fn n_units(&self) -> usize {
+        self.ctx.p
+    }
+
+    fn n_coef(&self) -> usize {
+        self.ctx.p
+    }
+
+    fn lambda_max(&self) -> f64 {
+        self.ctx.lambda_max
+    }
+
+    fn has_safe_rule(&self) -> bool {
+        self.safe_rule.is_some()
+    }
+
+    fn needs_kkt(&self) -> bool {
+        // BasicPcd/SEDPP never KKT-check (exact / safe ⇒ nothing to verify).
+        !matches!(self.rule, RuleKind::BasicPcd | RuleKind::Sedpp)
+    }
+
+    fn screen(
+        &mut self,
+        lam: f64,
+        lam_prev: f64,
+        run_safe: bool,
+        fused: bool,
+        survive: &mut [bool],
+        m: &mut LambdaMetrics,
+    ) -> Result<ScreenStage> {
+        let p = self.ctx.p;
+        let uses_ssr = self.rule.uses_ssr();
+        let mut stage = ScreenStage::default();
+
+        if fused && uses_ssr {
+            // ---- fused screening (lines 2–10 in one traversal) ----
+            let ssr_t = ssr::threshold(self.penalty, lam, lam_prev);
+            let mut masked_d = 0usize;
+            let (fout, was_pointwise) = {
+                let keep = if !run_safe {
+                    None
+                } else if let Some(rule) = self.safe_rule.as_mut() {
+                    let prev = PrevSolution { lambda: lam_prev, r: &self.r };
+                    rule.plan(self.x, &self.ctx, &prev, lam, survive, &mut masked_d)
+                } else {
+                    None
+                };
+                let wp = keep.is_some();
+                let out = self.engine.fused_screen(
+                    self.x,
+                    &self.r,
+                    keep.as_deref(),
+                    ssr_t,
+                    survive,
+                    &mut self.z,
+                    &mut self.z_valid,
+                )?;
+                (out, wp)
+            };
+            stage.discarded = masked_d + fout.discarded;
+            // Masked rules that discard report `dead` only alongside zero
+            // discards, so the flag condition matches the unfused driver
+            // exactly; pointwise rules flag purely on count.
+            stage.rule_dead = !was_pointwise
+                && self.safe_rule.as_ref().map(|ru| ru.dead()).unwrap_or(false);
+            m.safe_size = fout.safe_size;
+            m.cols_scanned += fout.cols_scanned;
+            stage.strong = fout.strong;
+            return Ok(stage);
+        }
+
+        // ---- unfused screening (Algorithm 1 lines 2–9) ----
+        if run_safe {
+            if let Some(rule) = self.safe_rule.as_mut() {
+                let prev = PrevSolution { lambda: lam_prev, r: &self.r };
+                stage.discarded = rule.screen(self.x, &self.ctx, &prev, lam, survive);
+                stage.rule_dead = rule.dead();
+            }
+        }
+        m.safe_size = survive.iter().filter(|&&s| s).count();
+
+        // ---- line 4: refresh z over newly-entered safe features ----
+        if uses_ssr {
+            let stale: Vec<usize> =
+                (0..p).filter(|&j| survive[j] && !self.z_valid[j]).collect();
+            column_refresh(
+                self.engine,
+                self.x,
+                &self.r,
+                &stale,
+                &mut self.z,
+                &mut self.z_valid,
+                &mut self.scratch,
+                m,
+            )?;
+        }
+
+        // ---- strong / optimizer set (line 10) ----
+        stage.strong = match self.rule {
+            RuleKind::BasicPcd => (0..p).collect(),
+            RuleKind::ActiveCycling => {
+                (0..p).filter(|&j| self.beta[j] != 0.0).collect()
+            }
+            RuleKind::Sedpp => (0..p).filter(|&j| survive[j]).collect(),
+            _ => ssr::strong_set(self.penalty, lam, lam_prev, &self.z, survive),
+        };
+        Ok(stage)
+    }
+
+    fn solve(
+        &mut self,
+        lam: f64,
+        lambda_index: usize,
+        strong: &[usize],
+        m: &mut LambdaMetrics,
+    ) -> Result<()> {
+        let stats = cd::cd_solve(
+            self.x,
+            self.penalty,
+            lam,
+            strong,
+            &mut self.beta,
+            &mut self.r,
+            self.tol,
+            self.max_iter,
+            lambda_index,
+        )?;
+        m.cd_cycles += stats.cycles;
+        m.coord_updates += stats.coord_updates;
+        if stats.cycles > 0 {
+            self.z_valid.iter_mut().for_each(|v| *v = false);
+        }
+        Ok(())
+    }
+
+    fn kkt(
+        &mut self,
+        lam: f64,
+        fused: bool,
+        survive: &[bool],
+        in_strong: &[bool],
+        m: &mut LambdaMetrics,
+    ) -> Result<Vec<usize>> {
+        column_kkt(
+            self.engine,
+            self.x,
+            &self.r,
+            self.penalty,
+            lam,
+            fused,
+            survive,
+            in_strong,
+            &mut self.z,
+            &mut self.z_valid,
+            &mut self.scratch,
+            m,
+        )
+    }
+
+    fn end_lambda(
+        &mut self,
+        _lam: f64,
+        fused: bool,
+        strong: &[usize],
+        m: &mut LambdaMetrics,
+    ) -> Result<()> {
+        // Unfused driver: refresh z over the strong set so the next SSR
+        // screening sees correlations at the final residual. (The fused
+        // KKT pass already left them lazily refreshable instead.)
+        let use_fused_kkt = fused && self.needs_kkt();
+        if !use_fused_kkt && self.rule.uses_ssr() {
+            column_refresh(
+                self.engine,
+                self.x,
+                &self.r,
+                strong,
+                &mut self.z,
+                &mut self.z_valid,
+                &mut self.scratch,
+                m,
+            )?;
+        }
+        Ok(())
+    }
+
+    fn sparse_beta(&self) -> Vec<(usize, f64)> {
+        (0..self.beta.len())
+            .filter(|&j| self.beta[j] != 0.0)
+            .map(|j| (j, self.beta[j]))
+            .collect()
+    }
+
+    fn objective(&self, lam: f64) -> f64 {
+        objective(&self.r, &self.beta, self.penalty, lam, self.ctx.n)
+    }
+}
+
 /// Fit the full path with the default (native, pool-backed) scan engine.
 pub fn fit_lasso_path(ds: &Dataset, cfg: &PathConfig) -> Result<PathFit> {
     fit_lasso_path_with_engine(ds, cfg, &NativeEngine::new())
@@ -177,230 +490,16 @@ pub fn fit_lasso_path_with_engine(
     cfg: &PathConfig,
     engine: &dyn ScanEngine,
 ) -> Result<PathFit> {
-    cfg.penalty.validate()?;
-    let start = Instant::now();
-    let x = &ds.x;
-    let n = ds.n();
-    let p = ds.p();
-    let penalty = cfg.penalty;
-    let ctx = SafeContext::build(x, &ds.y, penalty, cfg.rule.needs_star());
-    let lambdas = match &cfg.lambdas {
-        Some(ls) => ls.clone(),
-        None => crate::solver::lambda::grid(
-            ctx.lambda_max,
-            cfg.lambda_min_ratio,
-            cfg.n_lambda,
-            cfg.grid,
-        ),
-    };
-    // --- mutable path state ---
-    let mut beta = vec![0.0f64; p];
-    let mut r = ds.y.clone();
-    // z_j = x_jᵀr/n at the most recent residual where it was computed.
-    let mut z: Vec<f64> = ctx.xty.iter().map(|v| v / n as f64).collect();
-    let mut z_valid = vec![true; p];
-    let mut safe_rule = make_safe_rule(cfg.rule);
-    let mut flag_off = safe_rule.is_none(); // Algorithm 1 `Flag`
-    let uses_ssr = cfg.rule.uses_ssr();
-    let use_fused_screen = cfg.fused && uses_ssr;
-    // BasicPcd/SEDPP never KKT-check (exact / safe ⇒ nothing to verify).
-    let use_fused_kkt =
-        cfg.fused && !matches!(cfg.rule, RuleKind::BasicPcd | RuleKind::Sedpp);
-    let mut betas = Vec::with_capacity(lambdas.len());
-    let mut metrics = Vec::with_capacity(lambdas.len());
-    let mut scratch = vec![0.0f64; p];
-
-    let mut lam_prev = ctx.lambda_max;
-    for (k, &lam) in lambdas.iter().enumerate() {
-        let mut m = LambdaMetrics { lambda: lam, ..Default::default() };
-        let mut survive = vec![true; p];
-        let mut strong: Vec<usize>;
-
-        if use_fused_screen {
-            // ---- fused screening (lines 2–10 in one traversal) ----
-            let ssr_t = ssr::threshold(penalty, lam, lam_prev);
-            let mut masked_d = 0usize;
-            let mut planned = false;
-            let (fout, was_pointwise) = {
-                let keep = if flag_off {
-                    None
-                } else if let Some(rule) = safe_rule.as_mut() {
-                    planned = true;
-                    let prev = PrevSolution { lambda: lam_prev, r: &r };
-                    rule.plan(x, &ctx, &prev, lam, &mut survive, &mut masked_d)
-                } else {
-                    None
-                };
-                let wp = keep.is_some();
-                let out = engine.fused_screen(
-                    x,
-                    &r,
-                    keep.as_deref(),
-                    ssr_t,
-                    &mut survive,
-                    &mut z,
-                    &mut z_valid,
-                )?;
-                (out, wp)
-            };
-            if planned {
-                let discarded = masked_d + fout.discarded;
-                // Masked rules that discard report `dead` only alongside
-                // zero discards, so the flag condition matches the unfused
-                // driver exactly; pointwise rules flag purely on count.
-                let rule_dead = !was_pointwise
-                    && safe_rule.as_ref().map(|ru| ru.dead()).unwrap_or(false);
-                if discarded == 0 || rule_dead {
-                    flag_off = true; // |S| = p ⇒ Flag ← TRUE
-                    survive.iter_mut().for_each(|s| *s = true);
-                }
-            }
-            m.safe_size = fout.safe_size;
-            m.cols_scanned += fout.cols_scanned;
-            strong = fout.strong;
-        } else {
-            // ---- unfused screening (Algorithm 1 lines 2–9) ----
-            if !flag_off {
-                if let Some(rule) = safe_rule.as_mut() {
-                    let prev = PrevSolution { lambda: lam_prev, r: &r };
-                    let discarded = rule.screen(x, &ctx, &prev, lam, &mut survive);
-                    if discarded == 0 || rule.dead() {
-                        flag_off = true; // |S| = p ⇒ Flag ← TRUE
-                        survive.iter_mut().for_each(|s| *s = true);
-                    }
-                }
-            }
-            m.safe_size = survive.iter().filter(|&&s| s).count();
-
-            // ---- line 4: refresh z over newly-entered safe features ----
-            if uses_ssr {
-                let stale: Vec<usize> =
-                    (0..p).filter(|&j| survive[j] && !z_valid[j]).collect();
-                if !stale.is_empty() {
-                    engine.scan_subset(x, &r, &stale, &mut scratch[..stale.len()])?;
-                    for (s, &j) in stale.iter().enumerate() {
-                        z[j] = scratch[s];
-                        z_valid[j] = true;
-                    }
-                    m.cols_scanned += stale.len() as u64;
-                }
-            }
-
-            // ---- strong / optimizer set (line 10) ----
-            strong = match cfg.rule {
-                RuleKind::BasicPcd => (0..p).collect(),
-                RuleKind::ActiveCycling => {
-                    (0..p).filter(|&j| beta[j] != 0.0).collect()
-                }
-                RuleKind::Sedpp => (0..p).filter(|&j| survive[j]).collect(),
-                _ => ssr::strong_set(penalty, lam, lam_prev, &z, &survive),
-            };
-        }
-
-        let mut in_strong = vec![false; p];
-        for &j in &strong {
-            in_strong[j] = true;
-        }
-
-        // ---- solve + KKT loop (lines 11–18) ----
-        loop {
-            let stats =
-                cd::cd_solve(x, penalty, lam, &strong, &mut beta, &mut r, cfg.tol, cfg.max_iter, k)?;
-            m.cd_cycles += stats.cycles;
-            m.coord_updates += stats.coord_updates;
-            if stats.cycles > 0 {
-                z_valid.iter_mut().for_each(|v| *v = false);
-            }
-            if matches!(cfg.rule, RuleKind::BasicPcd | RuleKind::Sedpp) {
-                break; // exact / safe ⇒ no KKT checking
-            }
-            if use_fused_kkt {
-                // One traversal: candidate z + KKT test. The strong columns
-                // are deliberately NOT refreshed here (refresh_strong =
-                // false): the residual does not change between this final
-                // round and the next λ's screening, so the fused screen
-                // picks them up as stale there with bit-identical values —
-                // no redundant rescans on violation rounds, and the last
-                // λ's strong refresh is skipped entirely.
-                let fout = engine.fused_kkt(
-                    x,
-                    &r,
-                    &survive,
-                    &in_strong,
-                    &|zj: f64| kkt::violates(penalty, lam, zj),
-                    false,
-                    &mut z,
-                    &mut z_valid,
-                )?;
-                m.cols_scanned += fout.cols_scanned;
-                m.kkt_checked += fout.checked;
-                if fout.violations.is_empty() {
-                    break;
-                }
-                m.violations += fout.violations.len();
-                for &j in &fout.violations {
-                    in_strong[j] = true;
-                }
-                strong.extend(fout.violations);
-            } else {
-                // KKT check set (line 14–15), unfused.
-                let check: Vec<usize> = match cfg.rule {
-                    RuleKind::ActiveCycling | RuleKind::Ssr => {
-                        (0..p).filter(|&j| !in_strong[j]).collect()
-                    }
-                    _ => (0..p).filter(|&j| survive[j] && !in_strong[j]).collect(),
-                };
-                if check.is_empty() {
-                    break;
-                }
-                engine.scan_subset(x, &r, &check, &mut scratch[..check.len()])?;
-                for (s, &j) in check.iter().enumerate() {
-                    z[j] = scratch[s];
-                    z_valid[j] = true;
-                }
-                m.cols_scanned += check.len() as u64;
-                m.kkt_checked += check.len();
-                let viols = kkt::violations(penalty, lam, &check, &scratch[..check.len()]);
-                if viols.is_empty() {
-                    break;
-                }
-                m.violations += viols.len();
-                for &j in &viols {
-                    in_strong[j] = true;
-                }
-                strong.extend(viols);
-            }
-        }
-
-        // Unfused driver: refresh z over the strong set so the next SSR
-        // screening sees correlations at the final residual. (The fused
-        // KKT pass already did this in its final round.)
-        if !use_fused_kkt && uses_ssr && !strong.is_empty() {
-            engine.scan_subset(x, &r, &strong, &mut scratch[..strong.len()])?;
-            for (s, &j) in strong.iter().enumerate() {
-                z[j] = scratch[s];
-                z_valid[j] = true;
-            }
-            m.cols_scanned += strong.len() as u64;
-        }
-
-        m.strong_size = strong.len();
-        let sparse: Vec<(usize, f64)> =
-            (0..p).filter(|&j| beta[j] != 0.0).map(|j| (j, beta[j])).collect();
-        m.nonzero = sparse.len();
-        m.objective = objective(&r, &beta, penalty, lam, n);
-        betas.push(sparse);
-        metrics.push(m);
-        lam_prev = lam;
-    }
+    let mut prob = GaussianLasso::new(ds, cfg, engine)?;
+    let fit = drive(&mut prob, &cfg.driver())?;
     Ok(PathFit {
-        lambdas,
-        betas,
-        metrics,
-        p,
-        lambda_max: ctx.lambda_max,
-        seconds: start.elapsed().as_secs_f64(),
-        rule: cfg.rule,
+        lambdas: fit.lambdas,
+        betas: fit.betas,
+        metrics: fit.metrics,
+        p: fit.p,
+        lambda_max: fit.lambda_max,
+        seconds: fit.seconds,
+        rule: fit.rule,
     })
 }
 
