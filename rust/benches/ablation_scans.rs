@@ -7,10 +7,12 @@
 //! SEDPP's scans happen inside the rule (full pK — reported via its
 //! analytic count); Basic PCD scans nothing but pays Θ(pK) CD updates.
 
-use hssr::coordinator::metrics::{scan_traffic, scan_traffic_table};
+use hssr::coordinator::metrics::{group_scan_traffic, scan_traffic, scan_traffic_table};
 use hssr::coordinator::report::Table;
+use hssr::data::synth::generate_grouped;
 use hssr::data::DataSpec;
 use hssr::screening::RuleKind;
+use hssr::solver::group_path::{fit_group_path, GroupPathConfig};
 use hssr::solver::path::{fit_lasso_path, PathConfig};
 
 fn main() {
@@ -72,4 +74,44 @@ fn main() {
     scan_traffic_table("measured chunked-store traffic (256-col chunks)", &rows)
         .emit("ablation_scans_traffic")
         .expect("emit traffic");
+
+    // ---- group screen: single-traversal bytes per rule ----
+    // The fused pipeline's `fused_group_screen` + `fused_group_kkt` read
+    // each needed column exactly once per λ; the unfused driver's separate
+    // screen / refresh / KKT / end-of-step passes read strictly more. The
+    // table reports both (native engine metrics), and the chunked-store
+    // columns cross-check that the fused counts equal measured fetches.
+    let gds = generate_grouped(400, 800, 5, 10, 9);
+    let gk = 100usize;
+    let gpk = (gds.p() * gk) as u64;
+    let mut gtable = Table::new(
+        "group screen traffic — fused single traversal vs unfused (bytes per rule)",
+        &["Method", "fused cols", "fused MB", "unfused cols", "unfused MB", "fused cols / pK"],
+    );
+    let rules = [RuleKind::Ssr, RuleKind::Sedpp, RuleKind::SsrBedpp];
+    for rule in rules {
+        let fused_cfg =
+            GroupPathConfig { rule, n_lambda: gk, fused: true, ..GroupPathConfig::default() };
+        let unfused_cfg = GroupPathConfig { fused: false, ..fused_cfg.clone() };
+        let f = fit_group_path(&gds, &fused_cfg).expect("fused group fit");
+        let u = fit_group_path(&gds, &unfused_cfg).expect("unfused group fit");
+        let mb = |cols: u64| cols as f64 * gds.n() as f64 * 8.0 / 1e6;
+        gtable.push_row(vec![
+            rule.label().to_string(),
+            f.total_cols_scanned().to_string(),
+            format!("{:.1}", mb(f.total_cols_scanned())),
+            u.total_cols_scanned().to_string(),
+            format!("{:.1}", mb(u.total_cols_scanned())),
+            format!("{:.2}", f.total_cols_scanned() as f64 / gpk as f64),
+        ]);
+    }
+    gtable.emit("ablation_scans_group").expect("emit group");
+
+    // Measured out-of-core cross-check for the group path (scan-then-filter
+    // engine → every read is a counted fetch; selections identical).
+    let gcfg = GroupPathConfig { n_lambda: gk, ..GroupPathConfig::default() };
+    let grows = group_scan_traffic(&gds, &gcfg, 64, &rules).expect("group traffic");
+    scan_traffic_table("measured chunked-store group traffic (64-col chunks)", &grows)
+        .emit("ablation_scans_group_traffic")
+        .expect("emit group traffic");
 }

@@ -1,8 +1,10 @@
 //! **Figure 4** — group lasso path time as a function of the number of
-//! groups (n = 1,000, W_g = 10, 10 true groups).
+//! groups (n = 1,000, W_g = 10, 10 true groups), plus the same sweep for
+//! the group elastic net (α = 0.8) now that the unified driver supports it.
 //!
 //! Paper shape to reproduce: SSR-BEDPP > 7× over Basic GD and ≈ 2× over
-//! SSR/SEDPP; SSR ≈ SEDPP; AC slightly behind.
+//! SSR/SEDPP; SSR ≈ SEDPP; AC slightly behind. The enet rows should track
+//! the lasso rows closely (the α scaling changes bounds, not complexity).
 //!
 //! Defaults scaled; `HSSR_BENCH_FULL=1` → G up to 10,000.
 
@@ -11,6 +13,7 @@ use hssr::coordinator::report::Table;
 use hssr::data::synth::generate_grouped;
 use hssr::screening::RuleKind;
 use hssr::solver::group_path::{fit_group_path, GroupPathConfig};
+use hssr::solver::Penalty;
 
 const METHODS: [RuleKind; 5] = [
     RuleKind::BasicPcd,
@@ -39,10 +42,10 @@ fn main() {
         if full { "paper-scale" } else { "scaled" }
     );
 
-    let mut headers = vec!["G".to_string()];
+    let mut headers = vec!["G".to_string(), "α".to_string()];
     headers.extend(METHODS.iter().map(|&m| label(m).to_string()));
     let mut table = Table {
-        title: "Figure 4 — group lasso seconds vs number of groups".into(),
+        title: "Figure 4 — group lasso / elastic-net seconds vs number of groups".into(),
         headers,
         rows: Vec::new(),
     };
@@ -51,18 +54,23 @@ fn main() {
         let datasets: Vec<_> = (0..reps)
             .map(|rep| generate_grouped(n, g, w, 10, 100 + rep as u64))
             .collect();
-        let mut row = vec![g.to_string()];
-        for &rule in &METHODS {
-            let cfg = GroupPathConfig { rule, ..GroupPathConfig::default() };
-            let t: Timing = measure(
-                reps,
-                |rep| &datasets[rep],
-                |ds| fit_group_path(ds, &cfg).expect("fit"),
-            );
-            row.push(format!("{:.3}", t.mean));
+        for (alpha_label, penalty) in
+            [("1.0", Penalty::Lasso), ("0.8", Penalty::ElasticNet { alpha: 0.8 })]
+        {
+            let mut row = vec![g.to_string(), alpha_label.to_string()];
+            for &rule in &METHODS {
+                let cfg =
+                    GroupPathConfig { rule, penalty, ..GroupPathConfig::default() };
+                let t: Timing = measure(
+                    reps,
+                    |rep| &datasets[rep],
+                    |ds| fit_group_path(ds, &cfg).expect("fit"),
+                );
+                row.push(format!("{:.3}", t.mean));
+            }
+            println!("G={g} α={alpha_label}: {row:?}");
+            table.rows.push(row);
         }
-        println!("G={g}: {row:?}");
-        table.rows.push(row);
     }
     table.emit("fig4_group_synth").expect("emit");
 }

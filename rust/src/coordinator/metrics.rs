@@ -4,11 +4,12 @@
 
 use super::report::Table;
 use crate::data::chunked::{ChunkedMatrix, ChunkedScanEngine};
-use crate::data::Dataset;
+use crate::data::{Dataset, GroupedDataset};
 use crate::error::Result;
 use crate::screening::bedpp::Bedpp;
 use crate::screening::dome::DomeTest;
 use crate::screening::{RuleKind, SafeContext};
+use crate::solver::group_path::{fit_group_path_with_engine, GroupPathConfig};
 use crate::solver::path::{fit_lasso_path, fit_lasso_path_with_engine, PathConfig};
 use crate::solver::Penalty;
 
@@ -127,6 +128,38 @@ pub fn scan_traffic(
     Ok(rows)
 }
 
+/// Group-path analogue of [`scan_traffic`]: run each strategy's *group*
+/// path (group lasso, or group elastic net via `cfg.penalty`) through the
+/// counting chunked-store engine and report measured fetch traffic. The
+/// chunked engine uses the trait's scan-then-filter fused defaults, so
+/// every group-norm read decomposes into counted column fetches — the
+/// cross-check that the native one-traversal `fused_group_screen` kernel
+/// accounts exactly the bytes a real out-of-core store would move.
+pub fn group_scan_traffic(
+    ds: &GroupedDataset,
+    cfg: &GroupPathConfig,
+    chunk_cols: usize,
+    rules: &[RuleKind],
+) -> Result<Vec<ScanTraffic>> {
+    let store = ChunkedMatrix::from_dense(&ds.x, chunk_cols);
+    let mut rows = Vec::with_capacity(rules.len());
+    for &rule in rules {
+        store.reset_counters();
+        let engine = ChunkedScanEngine::new(&store);
+        let mut c = cfg.clone();
+        c.rule = rule;
+        let fit = fit_group_path_with_engine(ds, &c, &engine)?;
+        rows.push(ScanTraffic {
+            rule,
+            cols_fetched: store.cols_fetched(),
+            chunk_faults: store.chunk_faults(),
+            bytes_fetched: store.bytes_fetched(),
+            metric_cols: fit.total_cols_scanned(),
+        });
+    }
+    Ok(rows)
+}
+
 /// Render [`scan_traffic`] rows as a coordinator report table (relative
 /// traffic is against the first row, conventionally SSR).
 pub fn scan_traffic_table(title: &str, rows: &[ScanTraffic]) -> Table {
@@ -175,6 +208,41 @@ mod tests {
         );
         let t = scan_traffic_table("traffic", &rows);
         assert_eq!(t.rows.len(), 2);
+    }
+
+    /// Group-path §3.2.3 analogue: HSSR fetches no more group columns than
+    /// SSR, the accounting cross-checks, and the elastic-net path routes
+    /// through the same counted engine.
+    #[test]
+    fn group_scan_traffic_accounts_and_orders() {
+        use crate::data::synth::generate_grouped;
+        let ds = generate_grouped(80, 40, 4, 4, 6);
+        for penalty in [Penalty::Lasso, Penalty::ElasticNet { alpha: 0.7 }] {
+            let cfg = GroupPathConfig {
+                penalty,
+                n_lambda: 25,
+                tol: 1e-9,
+                ..GroupPathConfig::default()
+            };
+            let rows =
+                group_scan_traffic(&ds, &cfg, 16, &[RuleKind::Ssr, RuleKind::SsrBedpp])
+                    .unwrap();
+            assert_eq!(rows.len(), 2);
+            for r in &rows {
+                assert_eq!(
+                    r.cols_fetched, r.metric_cols,
+                    "{:?}/{penalty:?} group accounting drift",
+                    r.rule
+                );
+                assert!(r.chunk_faults > 0 && r.chunk_faults <= r.cols_fetched);
+            }
+            assert!(
+                rows[1].cols_fetched <= rows[0].cols_fetched,
+                "{penalty:?}: group HSSR fetched {} vs SSR {}",
+                rows[1].cols_fetched,
+                rows[0].cols_fetched
+            );
+        }
     }
 
     #[test]

@@ -21,8 +21,10 @@
 //!   `z_j` at the final residual and tests the KKT condition for
 //!   non-strong survivors, subsuming the separate KKT subset scan and the
 //!   end-of-step strong-set refresh.
-//! * [`group_norms`] / [`fused_group_kkt`] — the group-lasso analogues at
-//!   group granularity.
+//! * [`group_norms`] / [`fused_group_screen`] / [`fused_group_kkt`] — the
+//!   group-lasso analogues at group granularity; `fused_group_screen` is
+//!   the single traversal that applies the per-group safe predicate,
+//!   refreshes stale pooled norms, and applies the group-SSR filter.
 //!
 //! The `*_scoped` variants keep the original spawn-per-scan
 //! `std::thread::scope` implementation for benchmarking the pool win
@@ -473,6 +475,131 @@ pub fn group_norms(
     total_cols as u64
 }
 
+/// Fused group-level screening pass — [`fused_screen`] at group
+/// granularity, in one traversal over the groups. For each `g` with
+/// `survive[g]`:
+///
+/// 1. if `keep` is given and `keep(g)` is false, clear `survive[g]` (safe
+///    discard) and skip the group — its columns are never touched;
+/// 2. else, if `znorm_valid[g]` is false, recompute
+///    `znorm[g] = ‖X_gᵀr‖/n` (lazy norms, `W_g` column scans);
+/// 3. classify into the strong set iff `znorm[g] ≥ √W_g · ssr_t`
+///    (group SSR, rule (20); `ssr_t` already carries the elastic-net α).
+///
+/// Selection is bit-identical to the scan-then-filter default (predicate
+/// sweep → [`group_norms`] over the stale survivors → strong filter): the
+/// per-group norm is computed by the same buffer+`nrm2` kernel, and the
+/// same comparisons run in the same per-group order.
+#[allow(clippy::too_many_arguments)]
+pub fn fused_group_screen(
+    x: &DenseMatrix,
+    r: &[f64],
+    starts: &[usize],
+    sizes: &[usize],
+    keep: Option<&(dyn Fn(usize) -> bool + Sync)>,
+    ssr_t: f64,
+    survive: &mut [bool],
+    znorm: &mut [f64],
+    znorm_valid: &mut [bool],
+) -> FusedScreenOut {
+    let n = x.nrows();
+    let g_count = starts.len();
+    assert_eq!(sizes.len(), g_count);
+    assert_eq!(survive.len(), g_count);
+    assert_eq!(znorm.len(), g_count);
+    assert_eq!(znorm_valid.len(), g_count);
+    assert_eq!(r.len(), n);
+    let inv_n = 1.0 / n as f64;
+    let norm_of = |g: usize, buf: &mut Vec<f64>| -> f64 {
+        buf.clear();
+        for j in starts[g]..starts[g] + sizes[g] {
+            buf.push(ops::dot(x.col(j), r) * inv_n);
+        }
+        ops::nrm2(buf)
+    };
+    // Upper bound on scan work: stale surviving groups (the predicate only
+    // shrinks this) × n.
+    let stale_cols: usize = (0..g_count)
+        .filter(|&g| survive[g] && !znorm_valid[g])
+        .map(|g| sizes[g])
+        .sum();
+    let mut out = FusedScreenOut::default();
+    if stale_cols * n < PAR_THRESHOLD {
+        let mut buf = Vec::new();
+        for g in 0..g_count {
+            if !survive[g] {
+                continue;
+            }
+            if let Some(pred) = keep {
+                if !pred(g) {
+                    survive[g] = false;
+                    out.discarded += 1;
+                    continue;
+                }
+            }
+            out.safe_size += 1;
+            if !znorm_valid[g] {
+                znorm[g] = norm_of(g, &mut buf);
+                znorm_valid[g] = true;
+                out.cols_scanned += sizes[g] as u64;
+            }
+            if znorm[g] >= (sizes[g] as f64).sqrt() * ssr_t {
+                out.strong.push(g);
+            }
+        }
+        return out;
+    }
+    let pool = pool::global();
+    let per = g_count.div_ceil(pool.threads() * 8).max(1);
+    let chunks = g_count.div_ceil(per);
+    let mut accs: Vec<ChunkAcc> = (0..chunks).map(|_| ChunkAcc::default()).collect();
+    {
+        let sp = RacyPtr(survive.as_mut_ptr());
+        let zp = RacyPtr(znorm.as_mut_ptr());
+        let vp = RacyPtr(znorm_valid.as_mut_ptr());
+        let ap = RacyPtr(accs.as_mut_ptr());
+        pool.run(chunks, &|c| {
+            let g0 = c * per;
+            let g1 = (g0 + per).min(g_count);
+            // SAFETY: chunk c owns accs[c] and groups [g0, g1) of the
+            // survive/znorm/znorm_valid slices exclusively.
+            let acc = unsafe { &mut *ap.0.add(c) };
+            let mut buf = Vec::new();
+            for g in g0..g1 {
+                let sg = unsafe { &mut *sp.0.add(g) };
+                if !*sg {
+                    continue;
+                }
+                if let Some(pred) = keep {
+                    if !pred(g) {
+                        *sg = false;
+                        acc.discarded += 1;
+                        continue;
+                    }
+                }
+                acc.safe += 1;
+                let vg = unsafe { &mut *vp.0.add(g) };
+                let zg = unsafe { &mut *zp.0.add(g) };
+                if !*vg {
+                    *zg = norm_of(g, &mut buf);
+                    *vg = true;
+                    acc.scanned += sizes[g] as u64;
+                }
+                if *zg >= (sizes[g] as f64).sqrt() * ssr_t {
+                    acc.picked.push(g);
+                }
+            }
+        });
+    }
+    for mut acc in accs {
+        out.safe_size += acc.safe;
+        out.discarded += acc.discarded;
+        out.cols_scanned += acc.scanned;
+        out.strong.append(&mut acc.picked);
+    }
+    out
+}
+
 /// Fused group KKT pass — [`fused_kkt`] at group granularity. Surviving
 /// groups get their norm recomputed (strong groups only when
 /// `refresh_strong`); non-strong survivors are tested with
@@ -820,6 +947,85 @@ mod tests {
             assert_eq!(out.checked, check.len());
             assert_eq!(out.cols_scanned, (check.len() + strong_cols.len()) as u64);
             assert_eq!(z_fused, z_ref);
+            assert_eq!(valid_fused, valid_ref);
+        }
+    }
+
+    /// The fused group screen must agree exactly with the unfused
+    /// predicate → group-norm-refresh → strong-filter sequence, serial and
+    /// pooled.
+    #[test]
+    fn fused_group_screen_matches_scan_then_filter() {
+        // Second case forces the pooled kernel: stale-group columns × n
+        // exceeds PAR_THRESHOLD (~2/3 of groups stale, mean width 3.5).
+        for (n, g_count, seed) in
+            [(30usize, 12usize, 17u64), (500, PAR_THRESHOLD / (500 * 2) + 59, 18u64)]
+        {
+            let sizes: Vec<usize> = (0..g_count).map(|g| 2 + g % 4).collect();
+            let starts: Vec<usize> = sizes
+                .iter()
+                .scan(0usize, |acc, &s| {
+                    let st = *acc;
+                    *acc += s;
+                    Some(st)
+                })
+                .collect();
+            let p: usize = sizes.iter().sum();
+            let (x, r) = random_matrix(n, p, seed);
+            let pred = |g: usize| g % 5 != 1; // arbitrary safe predicate
+            let keep: &(dyn Fn(usize) -> bool + Sync) = &pred;
+            let t = 0.01;
+            // shared stale/valid pattern with some pre-seeded norms
+            let valid0: Vec<bool> = (0..g_count).map(|g| g % 3 == 0).collect();
+            let mut rng = Pcg64::new(seed + 1);
+            let mut znorm0 = vec![0.0; g_count];
+            for g in 0..g_count {
+                if valid0[g] {
+                    znorm0[g] = rng.uniform() * 0.02;
+                }
+            }
+            // reference: three passes
+            let mut survive_ref = vec![true; g_count];
+            let mut discarded_ref = 0;
+            for g in 0..g_count {
+                if !pred(g) {
+                    survive_ref[g] = false;
+                    discarded_ref += 1;
+                }
+            }
+            let mut znorm_ref = znorm0.clone();
+            let mut valid_ref = valid0.clone();
+            let stale: Vec<usize> = (0..g_count)
+                .filter(|&g| survive_ref[g] && !valid_ref[g])
+                .collect();
+            let stale_cols =
+                group_norms(&x, &r, &starts, &sizes, &stale, &mut znorm_ref, &mut valid_ref);
+            let strong_ref: Vec<usize> = (0..g_count)
+                .filter(|&g| {
+                    survive_ref[g] && znorm_ref[g] >= (sizes[g] as f64).sqrt() * t
+                })
+                .collect();
+            // fused: one pass
+            let mut survive_fused = vec![true; g_count];
+            let mut znorm_fused = znorm0.clone();
+            let mut valid_fused = valid0.clone();
+            let out = fused_group_screen(
+                &x,
+                &r,
+                &starts,
+                &sizes,
+                Some(keep),
+                t,
+                &mut survive_fused,
+                &mut znorm_fused,
+                &mut valid_fused,
+            );
+            assert_eq!(out.strong, strong_ref);
+            assert_eq!(out.discarded, discarded_ref);
+            assert_eq!(out.safe_size, g_count - discarded_ref);
+            assert_eq!(out.cols_scanned, stale_cols);
+            assert_eq!(survive_fused, survive_ref);
+            assert_eq!(znorm_fused, znorm_ref);
             assert_eq!(valid_fused, valid_ref);
         }
     }

@@ -4,6 +4,7 @@
 //! hssr fit   [--data synth|gene|mnist|gwas|nyt] [--n N] [--p P] [--rule METHOD]
 //!            [--alpha A] [--nlambda K] [--lmin-ratio R] [--seed S] [--engine native|pjrt]
 //! hssr group [--data synth|grvs|spline] [--groups G] [--gsize W] [--rule METHOD]
+//!            [--alpha A]                              # group elastic net when A < 1
 //! hssr power [--data gene] [--n N] [--p P]          # Figure-1 style curves
 //! hssr cv    [--folds K] [--data ...]                # k-fold CV for λ
 //! hssr logistic [--n N] [--p P] [--rule basic|ac|ssr] [--engine native|pjrt]
@@ -169,8 +170,12 @@ fn cmd_group(cfg: &Config) -> Result<()> {
     let rule_s = cfg.get_str("rule", "ssr-bedpp");
     let rule = parse_rule(&rule_s)
         .ok_or_else(|| HssrError::Config(format!("unknown --rule '{rule_s}'")))?;
+    let alpha: f64 = cfg.get_parse("alpha", 1.0)?;
+    let penalty =
+        if alpha >= 1.0 { Penalty::Lasso } else { Penalty::ElasticNet { alpha } };
     let gcfg = GroupPathConfig {
         rule,
+        penalty,
         n_lambda: cfg.get_parse("nlambda", 100usize)?,
         lambda_min_ratio: cfg.get_parse("lmin-ratio", 0.1)?,
         tol: cfg.get_parse("tol", 1e-7)?,
@@ -178,7 +183,7 @@ fn cmd_group(cfg: &Config) -> Result<()> {
     };
     let fit = fit_group_path(&ds, &gcfg)?;
     println!(
-        "fitted {} ({} groups) over {} λ values in {:.3}s (rule {})",
+        "fitted {} ({} groups) over {} λ values in {:.3}s (rule {}, α={alpha})",
         ds.name,
         ds.num_groups(),
         fit.lambdas.len(),

@@ -120,6 +120,7 @@ mod tests {
                         penalty,
                         n_lambda: 15,
                         tol: 1e-8,
+                        fused: true,
                         ..PathConfig::default()
                     };
                     let fused = fit_lasso_path(&ds, &cfg).map_err(|e| e.to_string())?;
@@ -152,53 +153,154 @@ mod tests {
         });
     }
 
-    /// Group-lasso family: the fused pipeline (fused group screen + fused
-    /// group KKT) must select exactly the same groups as the unfused one,
-    /// over randomized group structures.
+    /// Group family: the fused pipeline (fused group screen + fused group
+    /// KKT) must select exactly the same groups as the unfused one, over
+    /// randomized group structures — for the group lasso *and* the group
+    /// elastic net (`alpha < 1`).
     #[test]
     fn fused_group_pass_selects_same_groups_as_unfused() {
         use crate::data::synth::generate_grouped;
         use crate::screening::RuleKind;
         use crate::solver::group_path::{fit_group_path, GroupPathConfig};
+        use crate::solver::Penalty;
         check(PropConfig { cases: 4, seed: 0x6907 }, |rng, scale| {
             let n = 50 + (rng.below(50) as f64 * scale) as usize;
             let groups = 8 + (rng.below(16) as f64 * scale) as usize;
             let gsize = 2 + rng.below(4) as usize;
             let strue = (1 + rng.below(4) as usize).min(groups);
             let ds = generate_grouped(n, groups, gsize, strue, rng.next_u64());
-            for rule in [
-                RuleKind::BasicPcd,
-                RuleKind::ActiveCycling,
-                RuleKind::Ssr,
-                RuleKind::Sedpp,
-                RuleKind::SsrBedpp,
-            ] {
-                let cfg = GroupPathConfig {
-                    rule,
+            let alpha = 0.4 + 0.5 * rng.uniform();
+            for penalty in [Penalty::Lasso, Penalty::ElasticNet { alpha }] {
+                for rule in [
+                    RuleKind::BasicPcd,
+                    RuleKind::ActiveCycling,
+                    RuleKind::Ssr,
+                    RuleKind::Sedpp,
+                    RuleKind::SsrBedpp,
+                ] {
+                    let cfg = GroupPathConfig {
+                        rule,
+                        penalty,
+                        n_lambda: 12,
+                        tol: 1e-8,
+                        fused: true,
+                        ..GroupPathConfig::default()
+                    };
+                    let fused = fit_group_path(&ds, &cfg).map_err(|e| e.to_string())?;
+                    let unfused =
+                        fit_group_path(&ds, &GroupPathConfig { fused: false, ..cfg })
+                            .map_err(|e| e.to_string())?;
+                    prop_assert!(
+                        fused.betas == unfused.betas,
+                        "{rule:?}/{penalty:?}: group solutions differ (n={n}, groups={groups}, gsize={gsize})"
+                    );
+                    for (k, (a, b)) in
+                        fused.metrics.iter().zip(&unfused.metrics).enumerate()
+                    {
+                        prop_assert!(
+                            a.safe_size == b.safe_size,
+                            "{rule:?}/{penalty:?}: group |S| differs at λ#{k}"
+                        );
+                        prop_assert!(
+                            a.strong_size == b.strong_size,
+                            "{rule:?}/{penalty:?}: group |H| differs at λ#{k}"
+                        );
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// Engine independence: driving the fused pipeline through the
+    /// counting [`ChunkedScanEngine`] (which keeps the trait's
+    /// scan-then-filter fused defaults) must select exactly what the
+    /// native one-traversal kernels select — same sparse paths, same
+    /// safe/strong sizes — across the column and group families and both
+    /// penalties, with the engine's fetch counters matching the path's
+    /// own scan accounting.
+    #[test]
+    fn chunked_engine_selects_same_as_native_across_families() {
+        use crate::data::chunked::{ChunkedMatrix, ChunkedScanEngine};
+        use crate::data::synth::generate_grouped;
+        use crate::data::DataSpec;
+        use crate::screening::RuleKind;
+        use crate::solver::group_path::{
+            fit_group_path_with_engine, GroupPathConfig,
+        };
+        use crate::solver::path::{fit_lasso_path_with_engine, PathConfig};
+        use crate::solver::Penalty;
+        check(PropConfig { cases: 3, seed: 0xC4A2 }, |rng, scale| {
+            let alpha = 0.4 + 0.5 * rng.uniform();
+            let native = crate::runtime::native::NativeEngine::new();
+            // column family
+            let n = 40 + (rng.below(40) as f64 * scale) as usize;
+            let p = 60 + (rng.below(120) as f64 * scale) as usize;
+            let ds = DataSpec::synthetic(n, p, 5).generate(rng.next_u64());
+            let store = ChunkedMatrix::from_dense(&ds.x, 32);
+            for penalty in [Penalty::Lasso, Penalty::ElasticNet { alpha }] {
+                let cfg = PathConfig {
+                    rule: RuleKind::SsrBedpp,
+                    penalty,
                     n_lambda: 12,
                     tol: 1e-8,
+                    fused: true,
+                    ..PathConfig::default()
+                };
+                store.reset_counters();
+                let engine = ChunkedScanEngine::new(&store);
+                let chunked = fit_lasso_path_with_engine(&ds, &cfg, &engine)
+                    .map_err(|e| e.to_string())?;
+                let nat = fit_lasso_path_with_engine(&ds, &cfg, &native)
+                    .map_err(|e| e.to_string())?;
+                prop_assert!(
+                    chunked.betas == nat.betas,
+                    "{penalty:?}: chunked column path differs (n={n}, p={p})"
+                );
+                prop_assert!(
+                    store.cols_fetched() == chunked.total_cols_scanned(),
+                    "{penalty:?}: column fetch accounting drift ({} vs {})",
+                    store.cols_fetched(),
+                    chunked.total_cols_scanned()
+                );
+            }
+            // group family
+            let groups = 8 + (rng.below(12) as f64 * scale) as usize;
+            let gds = generate_grouped(n, groups, 3, 2, rng.next_u64());
+            let gstore = ChunkedMatrix::from_dense(&gds.x, 16);
+            for penalty in [Penalty::Lasso, Penalty::ElasticNet { alpha }] {
+                let cfg = GroupPathConfig {
+                    rule: RuleKind::SsrBedpp,
+                    penalty,
+                    n_lambda: 12,
+                    tol: 1e-8,
+                    fused: true,
                     ..GroupPathConfig::default()
                 };
-                let fused = fit_group_path(&ds, &cfg).map_err(|e| e.to_string())?;
-                let unfused =
-                    fit_group_path(&ds, &GroupPathConfig { fused: false, ..cfg })
-                        .map_err(|e| e.to_string())?;
+                gstore.reset_counters();
+                let engine = ChunkedScanEngine::new(&gstore);
+                let chunked = fit_group_path_with_engine(&gds, &cfg, &engine)
+                    .map_err(|e| e.to_string())?;
+                let nat = fit_group_path_with_engine(&gds, &cfg, &native)
+                    .map_err(|e| e.to_string())?;
                 prop_assert!(
-                    fused.betas == unfused.betas,
-                    "{rule:?}: group solutions differ (n={n}, groups={groups}, gsize={gsize})"
+                    chunked.betas == nat.betas,
+                    "{penalty:?}: chunked group path differs (n={n}, groups={groups})"
                 );
                 for (k, (a, b)) in
-                    fused.metrics.iter().zip(&unfused.metrics).enumerate()
+                    chunked.metrics.iter().zip(&nat.metrics).enumerate()
                 {
                     prop_assert!(
-                        a.safe_size == b.safe_size,
-                        "{rule:?}: group |S| differs at λ#{k}"
-                    );
-                    prop_assert!(
-                        a.strong_size == b.strong_size,
-                        "{rule:?}: group |H| differs at λ#{k}"
+                        a.safe_size == b.safe_size && a.strong_size == b.strong_size,
+                        "{penalty:?}: group sizes differ at λ#{k} across engines"
                     );
                 }
+                prop_assert!(
+                    gstore.cols_fetched() == chunked.total_cols_scanned(),
+                    "{penalty:?}: group fetch accounting drift ({} vs {})",
+                    gstore.cols_fetched(),
+                    chunked.total_cols_scanned()
+                );
             }
             Ok(())
         });
@@ -230,6 +332,7 @@ mod tests {
                         penalty,
                         n_lambda: 12,
                         tol: 1e-8,
+                        fused: true,
                         ..LogisticPathConfig::default()
                     };
                     let fused =

@@ -191,13 +191,18 @@ pub trait ScanEngine {
     /// of [`ScanEngine::fused_screen`]: apply the point-wise group safe
     /// predicate `keep` (when given, from `SafeRule::plan`), lazily refresh
     /// stale `znorm[g] = ‖X_gᵀr‖/n` over the survivors, and classify them
-    /// against the group-SSR threshold `√W_g · ssr_t` (rule (20)).
+    /// against the group-SSR threshold `√W_g · ssr_t` (rule (20); `ssr_t`
+    /// carries the elastic-net α).
     ///
     /// Default: predicate-then-refresh-then-filter over
-    /// [`ScanEngine::group_norms`], whose native override already runs the
-    /// stale groups through one pooled kernel. Selections are bit-identical
-    /// to the unfused screen → norm-refresh → `ssr::group_strong_set`
-    /// sequence.
+    /// [`ScanEngine::group_norms`] — three separate sweeps, used by the
+    /// scan-counting engines (PJRT, `ChunkedScanEngine`) so every column
+    /// read stays an accounted `scan_subset`. `NativeEngine` overrides this
+    /// with the true single-traversal kernel
+    /// [`crate::linalg::blocked::fused_group_screen`]. Selections are
+    /// bit-identical either way (same per-group norm kernel, same
+    /// comparisons in the same order as the unfused
+    /// screen → norm-refresh → `ssr::group_strong_set` sequence).
     #[allow(clippy::too_many_arguments)]
     fn fused_group_screen(
         &self,
@@ -389,5 +394,46 @@ mod tests {
         assert_eq!(ka.violations, kb.violations);
         assert_eq!(ka.checked, kb.checked);
         assert_eq!(za, zb);
+
+        // Group screen: the scan-then-filter default must select exactly
+        // what the native one-traversal kernel selects, with identical
+        // norms and scan accounting.
+        let sizes = vec![3usize, 4, 2, 5, 3, 4, 2, 4];
+        let starts: Vec<usize> = sizes
+            .iter()
+            .scan(0usize, |acc, &s| {
+                let st = *acc;
+                *acc += s;
+                Some(st)
+            })
+            .collect();
+        let g_count = sizes.len();
+        let gpred = |g: usize| g != 3;
+        let gkeep: &(dyn Fn(usize) -> bool + Sync) = &gpred;
+        let mut gs1 = vec![true; g_count];
+        let mut gz1 = vec![0.0; g_count];
+        let mut gv1: Vec<bool> = (0..g_count).map(|g| g % 2 == 0).collect();
+        let mut gs2 = gs1.clone();
+        let mut gz2 = gz1.clone();
+        let mut gv2 = gv1.clone();
+        let ga = fallback
+            .fused_group_screen(
+                &x, &r, &starts, &sizes, Some(gkeep), 0.015, &mut gs1, &mut gz1,
+                &mut gv1,
+            )
+            .unwrap();
+        let gb = nat
+            .fused_group_screen(
+                &x, &r, &starts, &sizes, Some(gkeep), 0.015, &mut gs2, &mut gz2,
+                &mut gv2,
+            )
+            .unwrap();
+        assert_eq!(ga.strong, gb.strong);
+        assert_eq!(ga.safe_size, gb.safe_size);
+        assert_eq!(ga.discarded, gb.discarded);
+        assert_eq!(ga.cols_scanned, gb.cols_scanned);
+        assert_eq!(gs1, gs2);
+        assert_eq!(gz1, gz2);
+        assert_eq!(gv1, gv2);
     }
 }

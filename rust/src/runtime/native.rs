@@ -92,6 +92,31 @@ impl ScanEngine for NativeEngine {
         Ok(blocked::group_norms(x, r, starts, sizes, groups, znorm, znorm_valid))
     }
 
+    fn fused_group_screen(
+        &self,
+        x: &DenseMatrix,
+        r: &[f64],
+        starts: &[usize],
+        sizes: &[usize],
+        keep: Option<&(dyn Fn(usize) -> bool + Sync)>,
+        ssr_t: f64,
+        survive: &mut [bool],
+        znorm: &mut [f64],
+        znorm_valid: &mut [bool],
+    ) -> Result<FusedScreenOut> {
+        Ok(blocked::fused_group_screen(
+            x,
+            r,
+            starts,
+            sizes,
+            keep,
+            ssr_t,
+            survive,
+            znorm,
+            znorm_valid,
+        ))
+    }
+
     fn fused_group_kkt(
         &self,
         x: &DenseMatrix,

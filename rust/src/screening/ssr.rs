@@ -38,15 +38,18 @@ pub fn strong_set(
 }
 
 /// Group-lasso SSR (rule (20)): keep group `g` iff
-/// `‖X_gᵀr/n‖ ≥ √W_g (2λ_{k+1} − λ_k)`. `znorm[g]` must hold `‖X_gᵀr/n‖`.
+/// `‖X_gᵀr/n‖ ≥ √W_g · α(2λ_{k+1} − λ_k)`. `znorm[g]` must hold
+/// `‖X_gᵀr/n‖`; the α scaling covers the group elastic net (α = 1 for the
+/// group lasso), mirroring the column rule (14).
 pub fn group_strong_set(
+    penalty: Penalty,
     lam_next: f64,
     lam_prev: f64,
     znorm: &[f64],
     sizes: &[usize],
     candidates: &[bool],
 ) -> Vec<usize> {
-    let t = 2.0 * lam_next - lam_prev;
+    let t = threshold(penalty, lam_next, lam_prev);
     candidates
         .iter()
         .enumerate()
@@ -95,7 +98,20 @@ mod tests {
     fn group_strong_set_scales_by_sqrt_w() {
         let znorm = vec![0.5, 0.5];
         let sizes = vec![1, 4]; // thresholds 0.3·1, 0.3·2
-        let h = group_strong_set(0.4, 0.5, &znorm, &sizes, &[true, true]);
+        let h = group_strong_set(Penalty::Lasso, 0.4, 0.5, &znorm, &sizes, &[true, true]);
         assert_eq!(h, vec![0]);
+    }
+
+    #[test]
+    fn group_strong_set_scales_threshold_by_alpha() {
+        let znorm = vec![0.2, 0.2];
+        let sizes = vec![1, 4]; // lasso thresholds 0.3, 0.6 — both excluded
+        let en = Penalty::ElasticNet { alpha: 0.5 };
+        // enet thresholds 0.15, 0.3 — group 0 enters
+        let h = group_strong_set(en, 0.4, 0.5, &znorm, &sizes, &[true, true]);
+        assert_eq!(h, vec![0]);
+        let h_lasso =
+            group_strong_set(Penalty::Lasso, 0.4, 0.5, &znorm, &sizes, &[true, true]);
+        assert!(h_lasso.is_empty());
     }
 }

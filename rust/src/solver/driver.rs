@@ -30,6 +30,16 @@ use crate::error::Result;
 use crate::screening::RuleKind;
 use crate::solver::lambda::GridKind;
 
+/// Default for the fused-pipeline switch of every family config
+/// (`PathConfig::fused`, `GroupPathConfig::fused`, `LogisticPathConfig::fused`):
+/// `true` unless the environment sets `HSSR_FUSED=0`. The knob exists so CI
+/// can run the whole test suite through the unfused scan-then-filter
+/// drivers as a second configuration; tests that compare the two pipelines
+/// pin `fused` explicitly and are unaffected.
+pub fn fused_default() -> bool {
+    std::env::var("HSSR_FUSED").map(|v| v != "0").unwrap_or(true)
+}
+
 /// Per-λ instrumentation (feeds Figures 1/3 and the ablation benches).
 /// Shared by every problem family; the group lasso reports *group* counts
 /// in the set-size fields.

@@ -1,23 +1,27 @@
-//! Blockwise group-descent inner loop for the group lasso (Qin et al. 2013;
-//! Breheny & Huang 2015; Meier et al. 2008).
+//! Blockwise group-descent inner loop for the group lasso and group
+//! elastic net (Qin et al. 2013; Breheny & Huang 2015; Meier et al. 2008).
 //!
 //! Under the group orthonormalization (19) each block update is closed form
-//! (the multivariate soft threshold):
+//! (the multivariate soft threshold, with the elastic-net proximal scaling
+//! exactly mirroring the column CD update):
 //!
 //! ```text
 //! z_g   = X_gᵀr/n + β_g
-//! β_g⁺  = (1 − λ√W_g / ‖z_g‖)₊ · z_g
+//! β_g⁺  = (1 − αλ√W_g / ‖z_g‖)₊ · z_g / (1 + (1−α)λ)     (lasso: α = 1)
 //! r    −= X_g (β_g⁺ − β_g)
 //! ```
 
 use crate::error::{HssrError, Result};
 use crate::linalg::{ops, DenseMatrix};
 use super::cd::CdStats;
+use super::Penalty;
 
 /// One full cycle of group updates over `active` (group indices). Returns
 /// the largest |Δβ_j| across all coordinates.
+#[allow(clippy::too_many_arguments)]
 pub fn gd_cycle(
     x: &DenseMatrix,
+    penalty: Penalty,
     lam: f64,
     active: &[usize],
     starts: &[usize],
@@ -26,6 +30,8 @@ pub fn gd_cycle(
     r: &mut [f64],
 ) -> f64 {
     let n_inv = 1.0 / x.nrows() as f64;
+    let alpha = penalty.alpha();
+    let denom = 1.0 + penalty.l2_weight() * lam;
     let mut max_delta = 0.0f64;
     let mut z = Vec::new();
     for &g in active {
@@ -39,8 +45,9 @@ pub fn gd_cycle(
             z.push(zj);
         }
         let z_norm = z_norm_sq.sqrt();
-        let thresh = lam * (w as f64).sqrt();
-        let scale = if z_norm > thresh { 1.0 - thresh / z_norm } else { 0.0 };
+        let thresh = alpha * lam * (w as f64).sqrt();
+        let scale =
+            if z_norm > thresh { (1.0 - thresh / z_norm) / denom } else { 0.0 };
         for dj in 0..w {
             let b_new = scale * z[dj];
             let delta = b_new - beta[j0 + dj];
@@ -58,6 +65,7 @@ pub fn gd_cycle(
 #[allow(clippy::too_many_arguments)]
 pub fn gd_solve(
     x: &DenseMatrix,
+    penalty: Penalty,
     lam: f64,
     active: &[usize],
     starts: &[usize],
@@ -74,7 +82,7 @@ pub fn gd_solve(
     }
     let mut last_delta = f64::INFINITY;
     for _ in 0..max_iter {
-        last_delta = gd_cycle(x, lam, active, starts, sizes, beta, r);
+        last_delta = gd_cycle(x, penalty, lam, active, starts, sizes, beta, r);
         stats.cycles += 1;
         stats.coord_updates += active.iter().map(|&g| sizes[g] as u64).sum::<u64>();
         if last_delta < tol {
@@ -101,6 +109,7 @@ mod tests {
         let mut r = ds.y.clone();
         gd_solve(
             &ds.x,
+            Penalty::Lasso,
             lam,
             &[0],
             &ds.layout.starts,
@@ -121,6 +130,43 @@ mod tests {
         }
     }
 
+    /// With orthonormal groups, the elastic-net solution for a single
+    /// active group is the multivariate soft threshold by αλ√W scaled by
+    /// 1/(1 + (1−α)λ).
+    #[test]
+    fn single_group_enet_closed_form() {
+        let ds = generate_grouped(50, 1, 4, 1, 12);
+        let w = ds.layout.sizes[0];
+        let lam = 0.2;
+        let alpha = 0.6;
+        let pen = Penalty::ElasticNet { alpha };
+        let mut beta = vec![0.0; ds.p()];
+        let mut r = ds.y.clone();
+        gd_solve(
+            &ds.x,
+            pen,
+            lam,
+            &[0],
+            &ds.layout.starts,
+            &ds.layout.sizes,
+            &mut beta,
+            &mut r,
+            1e-12,
+            200,
+            0,
+        )
+        .unwrap();
+        let z = blocked::scan_all_vec(&ds.x, &ds.y);
+        let z_norm = ops::nrm2(&z[..w]);
+        let thresh = alpha * lam * (w as f64).sqrt();
+        let denom = 1.0 + (1.0 - alpha) * lam;
+        let scale =
+            if z_norm > thresh { (1.0 - thresh / z_norm) / denom } else { 0.0 };
+        for j in 0..w {
+            assert!((beta[j] - scale * z[j]).abs() < 1e-9, "enet β[{j}]");
+        }
+    }
+
     /// Group KKT at the solution: active groups satisfy
     /// X_gᵀr/n = λ√W_g·β_g/‖β_g‖; inactive groups ‖X_gᵀr/n‖ ≤ λ√W_g.
     #[test]
@@ -132,6 +178,7 @@ mod tests {
         let mut r = ds.y.clone();
         gd_solve(
             &ds.x,
+            Penalty::Lasso,
             lam,
             &active,
             &ds.layout.starts,
@@ -171,6 +218,7 @@ mod tests {
         let mut r = ds.y.clone();
         gd_solve(
             &ds.x,
+            Penalty::Lasso,
             0.1,
             &active,
             &ds.layout.starts,
@@ -191,12 +239,18 @@ mod tests {
     #[test]
     fn zero_solution_at_lambda_max() {
         let ds = generate_grouped(60, 6, 4, 2, 4);
-        let ctx = crate::screening::group::GroupSafeContext::build(&ds.x, &ds.y, &ds.layout);
+        let ctx = crate::screening::group::GroupSafeContext::build(
+            &ds.x,
+            &ds.y,
+            &ds.layout,
+            Penalty::Lasso,
+        );
         let active: Vec<usize> = (0..6).collect();
         let mut beta = vec![0.0; ds.p()];
         let mut r = ds.y.clone();
         gd_solve(
             &ds.x,
+            Penalty::Lasso,
             ctx.lambda_max * 1.0001,
             &active,
             &ds.layout.starts,

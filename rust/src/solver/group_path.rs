@@ -1,18 +1,22 @@
 //! Pathwise group descent with screening — Algorithm 1 adapted to the group
-//! lasso (paper §4.2 and §5.2). Methods: Basic GD, AC, SSR, SEDPP, and
-//! SSR-BEDPP (Table 3).
+//! lasso (paper §4.2 and §5.2) and the group elastic net (§5 at group
+//! granularity). Methods: Basic GD, AC, SSR, SEDPP, and SSR-BEDPP
+//! (Table 3).
 //!
 //! The λ-loop lives in the **generic driver**
 //! ([`crate::solver::driver::drive`]); this module contributes the
 //! group-unit problem [`GroupLassoProblem`] — blockwise group descent,
-//! lazy `‖X_gᵀr‖/n` norms, the group safe rules, and the `λ√W_g` KKT
-//! threshold — plus the thin [`fit_group_path`] shims.
+//! lazy `‖X_gᵀr‖/n` norms, the group safe rules, and the `αλ√W_g` KKT
+//! threshold (the α scaling threads the elastic-net [`Penalty`] through
+//! every stage, exactly as [`crate::solver::path::GaussianLasso`] does for
+//! columns) — plus the thin [`fit_group_path`] shims.
 //!
 //! Like the lasso driver, the default execution is **fused**: screening
 //! runs through [`ScanEngine::fused_group_screen`] (the group BEDPP rule
 //! contributes a per-group predicate via `SafeRule::plan`, and one
 //! pool-parallel pass refreshes stale norms and classifies against the
-//! group-SSR threshold), and the post-convergence check runs through
+//! group-SSR threshold — a true single-traversal kernel on
+//! [`NativeEngine`]), and the post-convergence check runs through
 //! [`ScanEngine::fused_group_kkt`] — one traversal recomputing `‖X_gᵀr‖/n`
 //! per surviving group, testing KKT for non-strong groups, with the
 //! end-of-step strong refresh handled lazily at the next λ. `fused: false`
@@ -25,17 +29,20 @@ use crate::linalg::{ops, DenseMatrix};
 use crate::runtime::{native::NativeEngine, ScanEngine};
 use crate::screening::group::{make_group_safe_rule, GroupSafeContext};
 use crate::screening::{PrevSolution, RuleKind, SafeRule};
-use crate::solver::driver::{drive, DriverConfig, Problem, ScreenStage};
+use crate::solver::driver::{drive, fused_default, DriverConfig, Problem, ScreenStage};
 use crate::solver::lambda::GridKind;
 use crate::solver::path::LambdaMetrics;
-use crate::solver::{gd, kkt};
+use crate::solver::{gd, kkt, Penalty};
 
-/// Configuration for a group-lasso path fit.
+/// Configuration for a group-lasso / group elastic-net path fit.
 #[derive(Clone, Debug)]
 pub struct GroupPathConfig {
     /// Strategy — one of `BasicPcd` (reported as "Basic GD"), `ActiveCycling`,
     /// `Ssr`, `Sedpp`, `SsrBedpp`.
     pub rule: RuleKind,
+    /// Penalty family (`Lasso`, or `ElasticNet { alpha }` for the group
+    /// elastic net `αλΣ√W_g‖β_g‖ + (1−α)λ/2·‖β‖²`).
+    pub penalty: Penalty,
     /// Number of λ grid points.
     pub n_lambda: usize,
     /// Smallest λ as a fraction of λmax.
@@ -56,13 +63,14 @@ impl Default for GroupPathConfig {
     fn default() -> Self {
         GroupPathConfig {
             rule: RuleKind::SsrBedpp,
+            penalty: Penalty::Lasso,
             n_lambda: 100,
             lambda_min_ratio: 0.1,
             grid: GridKind::Linear,
             tol: 1e-7,
             max_iter: 100_000,
             lambdas: None,
-            fused: true,
+            fused: fused_default(),
         }
     }
 }
@@ -142,6 +150,7 @@ pub struct GroupLassoProblem<'a> {
     layout: &'a GroupLayout,
     engine: &'a dyn ScanEngine,
     rule: RuleKind,
+    penalty: Penalty,
     tol: f64,
     max_iter: usize,
     ctx: GroupSafeContext,
@@ -174,11 +183,12 @@ impl<'a> GroupLassoProblem<'a> {
                 )))
             }
         }
+        cfg.penalty.validate()?;
         let x = &ds.x;
         let n = ds.n();
         let layout = &ds.layout;
         let g_count = layout.num_groups();
-        let ctx = GroupSafeContext::build(x, &ds.y, layout);
+        let ctx = GroupSafeContext::build(x, &ds.y, layout, cfg.penalty);
         // initial residual = y: znorm from ctx.group_xty_sq
         let mut znorm = vec![0.0f64; g_count];
         for g in 0..g_count {
@@ -189,6 +199,7 @@ impl<'a> GroupLassoProblem<'a> {
             layout,
             engine,
             rule: cfg.rule,
+            penalty: cfg.penalty,
             tol: cfg.tol,
             max_iter: cfg.max_iter,
             safe_rule: make_group_safe_rule(cfg.rule),
@@ -239,7 +250,7 @@ impl Problem for GroupLassoProblem<'_> {
         if fused && uses_ssr {
             // ---- fused group screening: one pass applies the per-group
             // safe predicate, refreshes stale norms, and classifies ----
-            let ssr_t = 2.0 * lam - lam_prev;
+            let ssr_t = crate::screening::ssr::threshold(self.penalty, lam, lam_prev);
             let mut masked_d = 0usize;
             let (fout, was_pointwise) = {
                 let keep = if !run_safe {
@@ -308,6 +319,7 @@ impl Problem for GroupLassoProblem<'_> {
                 .collect(),
             RuleKind::Sedpp => (0..g_count).filter(|&g| survive[g]).collect(),
             _ => crate::screening::ssr::group_strong_set(
+                self.penalty,
                 lam,
                 lam_prev,
                 &self.znorm,
@@ -327,6 +339,7 @@ impl Problem for GroupLassoProblem<'_> {
     ) -> Result<()> {
         let stats = gd::gd_solve(
             self.x,
+            self.penalty,
             lam,
             strong,
             &self.layout.starts,
@@ -359,8 +372,9 @@ impl Problem for GroupLassoProblem<'_> {
             // not refreshed here — the residual is unchanged until the
             // next λ's screening, which lazily refreshes them as stale
             // with bit-identical norms (see the lasso driver).
+            let penalty = self.penalty;
             let violates =
-                move |g: usize, zn: f64| kkt::group_violates(lam, layout.sizes[g], zn);
+                move |g: usize, zn: f64| kkt::group_violates(penalty, lam, layout.sizes[g], zn);
             let fout = self.engine.fused_group_kkt(
                 self.x,
                 &self.r,
@@ -394,7 +408,7 @@ impl Problem for GroupLassoProblem<'_> {
         )?;
         m.kkt_checked += check.len();
         let zsub: Vec<f64> = check.iter().map(|&g| self.znorm[g]).collect();
-        Ok(kkt::group_violations(lam, &check, &zsub, &layout.sizes))
+        Ok(kkt::group_violations(self.penalty, lam, &check, &zsub, &layout.sizes))
     }
 
     fn end_lambda(
@@ -429,14 +443,18 @@ impl Problem for GroupLassoProblem<'_> {
     }
 
     fn objective(&self, lam: f64) -> f64 {
-        // group-lasso objective
+        // group elastic-net objective (lasso when α = 1)
         let layout = self.layout;
         let mut pen = 0.0;
+        let mut l2 = 0.0;
         for g in 0..layout.num_groups() {
             let ss: f64 = layout.range(g).map(|j| self.beta[j] * self.beta[j]).sum();
             pen += (layout.sizes[g] as f64).sqrt() * ss.sqrt();
+            l2 += ss;
         }
-        ops::nrm2_sq(&self.r) / (2.0 * self.ctx.n as f64) + lam * pen
+        ops::nrm2_sq(&self.r) / (2.0 * self.ctx.n as f64)
+            + self.penalty.alpha() * lam * pen
+            + self.penalty.l2_weight() * lam * 0.5 * l2
     }
 }
 
@@ -514,7 +532,11 @@ mod tests {
             RuleKind::Sedpp,
             RuleKind::SsrBedpp,
         ] {
-            let fused = fit_group_path(&ds, &small_cfg(rule)).unwrap();
+            let fused = fit_group_path(
+                &ds,
+                &GroupPathConfig { fused: true, ..small_cfg(rule) },
+            )
+            .unwrap();
             let unfused = fit_group_path(
                 &ds,
                 &GroupPathConfig { fused: false, ..small_cfg(rule) },
@@ -536,6 +558,119 @@ mod tests {
         let ds = generate_grouped(30, 4, 3, 1, 1);
         let err = fit_group_path(&ds, &small_cfg(RuleKind::SsrDome)).unwrap_err();
         assert!(matches!(err, HssrError::Config(_)));
+    }
+
+    #[test]
+    fn invalid_alpha_rejected() {
+        let ds = generate_grouped(30, 4, 3, 1, 1);
+        let cfg = GroupPathConfig {
+            penalty: Penalty::ElasticNet { alpha: 0.0 },
+            ..small_cfg(RuleKind::SsrBedpp)
+        };
+        assert!(matches!(fit_group_path(&ds, &cfg), Err(HssrError::Config(_))));
+    }
+
+    fn enet_cfg(rule: RuleKind, alpha: f64) -> GroupPathConfig {
+        GroupPathConfig {
+            penalty: Penalty::ElasticNet { alpha },
+            ..small_cfg(rule)
+        }
+    }
+
+    /// Theorem 3.1 for the group elastic net: all strategies agree.
+    #[test]
+    fn enet_all_rules_agree() {
+        let ds = generate_grouped(90, 15, 4, 4, 21);
+        let base = fit_group_path(&ds, &enet_cfg(RuleKind::BasicPcd, 0.7)).unwrap();
+        for rule in [
+            RuleKind::ActiveCycling,
+            RuleKind::Ssr,
+            RuleKind::Sedpp,
+            RuleKind::SsrBedpp,
+        ] {
+            let fit = fit_group_path(&ds, &enet_cfg(rule, 0.7)).unwrap();
+            let d = max_beta_diff(&base, &fit);
+            assert!(d < 1e-5, "enet {rule:?} deviates by {d}");
+        }
+    }
+
+    /// The fused group-enet driver must match the unfused one bit-for-bit.
+    #[test]
+    fn enet_fused_group_driver_bit_identical_to_unfused() {
+        let ds = generate_grouped(80, 20, 4, 4, 22);
+        for rule in [
+            RuleKind::BasicPcd,
+            RuleKind::ActiveCycling,
+            RuleKind::Ssr,
+            RuleKind::Sedpp,
+            RuleKind::SsrBedpp,
+        ] {
+            let cfg = GroupPathConfig { fused: true, ..enet_cfg(rule, 0.55) };
+            let fused = fit_group_path(&ds, &cfg).unwrap();
+            let unfused =
+                fit_group_path(&ds, &GroupPathConfig { fused: false, ..cfg }).unwrap();
+            assert_eq!(fused.betas, unfused.betas, "enet {rule:?} betas differ");
+            for (k, (mf, mu)) in
+                fused.metrics.iter().zip(unfused.metrics.iter()).enumerate()
+            {
+                assert_eq!(mf.safe_size, mu.safe_size, "enet {rule:?} |S| at λ#{k}");
+                assert_eq!(mf.strong_size, mu.strong_size, "enet {rule:?} |H| at λ#{k}");
+                assert_eq!(mf.violations, mu.violations, "enet {rule:?} viols at λ#{k}");
+            }
+        }
+    }
+
+    /// Group elastic-net KKT at the solution: inactive groups satisfy
+    /// ‖X_gᵀr/n‖ ≤ αλ√W_g; active groups X_gᵀr/n = αλ√W_g·β_g/‖β_g‖
+    /// + (1−α)λ·β_g.
+    #[test]
+    fn enet_group_kkt_holds_along_path() {
+        let ds = generate_grouped(80, 10, 3, 3, 23);
+        let alpha = 0.6;
+        let fit = fit_group_path(&ds, &enet_cfg(RuleKind::SsrBedpp, alpha)).unwrap();
+        let n = ds.n() as f64;
+        for (k, &lam) in fit.lambdas.iter().enumerate().step_by(6) {
+            let b = fit.beta_dense(k);
+            let f = ds.x.matvec(&b);
+            let r: Vec<f64> = ds.y.iter().zip(&f).map(|(y, v)| y - v).collect();
+            for g in 0..ds.num_groups() {
+                let zg: Vec<f64> = ds
+                    .layout
+                    .range(g)
+                    .map(|j| ops::dot(ds.x.col(j), &r) / n)
+                    .collect();
+                let bg: Vec<f64> = ds.layout.range(g).map(|j| b[j]).collect();
+                let bnorm = ops::nrm2(&bg);
+                let w_sqrt = (ds.layout.sizes[g] as f64).sqrt();
+                if bnorm == 0.0 {
+                    let zn = ops::nrm2(&zg);
+                    assert!(
+                        zn <= alpha * lam * w_sqrt * (1.0 + 1e-3) + 1e-8,
+                        "enet inactive λ#{k} group {g}: {zn}"
+                    );
+                } else {
+                    for (i, (&z, &bj)) in zg.iter().zip(&bg).enumerate() {
+                        let want =
+                            alpha * lam * w_sqrt * bj / bnorm + (1.0 - alpha) * lam * bj;
+                        assert!(
+                            (z - want).abs() < 1e-5,
+                            "enet active λ#{k} group {g} coord {i}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// λmax for the group enet scales by 1/α and β(λmax) = 0.
+    #[test]
+    fn enet_zero_solution_at_lambda_max() {
+        let ds = generate_grouped(60, 8, 3, 2, 24);
+        let lasso = fit_group_path(&ds, &small_cfg(RuleKind::SsrBedpp)).unwrap();
+        let enet = fit_group_path(&ds, &enet_cfg(RuleKind::SsrBedpp, 0.5)).unwrap();
+        assert!((enet.lambda_max - 2.0 * lasso.lambda_max).abs() < 1e-10);
+        assert_eq!(enet.betas[0].len(), 0);
+        assert!(enet.betas.last().unwrap().len() > 0);
     }
 
     #[test]

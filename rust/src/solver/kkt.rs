@@ -32,14 +32,16 @@ pub fn violations(penalty: Penalty, lam: f64, checked: &[usize], z: &[f64]) -> V
 }
 
 /// Group KKT test for an inactive group: violation iff
-/// `‖X_gᵀr/n‖ > λ√W_g(1 + slack)`.
+/// `‖X_gᵀr/n‖ > αλ√W_g(1 + slack)` — the α scaling is the group
+/// elastic-net analogue of rule (21) (α = 1 for the group lasso).
 #[inline]
-pub fn group_violates(lam: f64, w_g: usize, znorm_g: f64) -> bool {
-    znorm_g > lam * (w_g as f64).sqrt() * (1.0 + KKT_SLACK)
+pub fn group_violates(penalty: Penalty, lam: f64, w_g: usize, znorm_g: f64) -> bool {
+    znorm_g > penalty.alpha() * lam * (w_g as f64).sqrt() * (1.0 + KKT_SLACK)
 }
 
 /// Collect violating group indices.
 pub fn group_violations(
+    penalty: Penalty,
     lam: f64,
     checked: &[usize],
     znorm: &[f64],
@@ -49,7 +51,7 @@ pub fn group_violations(
     checked
         .iter()
         .zip(znorm)
-        .filter(|&(&g, &zn)| group_violates(lam, sizes[g], zn))
+        .filter(|&(&g, &zn)| group_violates(penalty, lam, sizes[g], zn))
         .map(|(&g, _)| g)
         .collect()
 }
@@ -80,9 +82,19 @@ mod tests {
     #[test]
     fn group_violation_scaling() {
         // W=4 → threshold 2λ
-        assert!(!group_violates(0.3, 4, 0.6));
-        assert!(group_violates(0.3, 4, 0.61));
-        let v = group_violations(0.3, &[0, 1], &[0.61, 0.1], &[4, 4]);
+        assert!(!group_violates(Penalty::Lasso, 0.3, 4, 0.6));
+        assert!(group_violates(Penalty::Lasso, 0.3, 4, 0.61));
+        let v = group_violations(Penalty::Lasso, 0.3, &[0, 1], &[0.61, 0.1], &[4, 4]);
+        assert_eq!(v, vec![0]);
+    }
+
+    #[test]
+    fn group_violation_enet_scales_by_alpha() {
+        // W=4, α=0.5 → threshold λ instead of 2λ
+        let en = Penalty::ElasticNet { alpha: 0.5 };
+        assert!(group_violates(en, 0.3, 4, 0.31));
+        assert!(!group_violates(en, 0.3, 4, 0.29));
+        let v = group_violations(en, 0.3, &[0, 1], &[0.31, 0.29], &[4, 4]);
         assert_eq!(v, vec![0]);
     }
 }

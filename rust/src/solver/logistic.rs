@@ -76,7 +76,7 @@ impl Default for LogisticPathConfig {
             tol: 1e-7,
             max_irls: 50,
             max_iter: 10_000,
-            fused: true,
+            fused: crate::solver::driver::fused_default(),
         }
     }
 }
@@ -674,7 +674,13 @@ mod tests {
     fn fused_logistic_bit_identical_to_unfused() {
         let (x, y, _) = synthetic_logistic(120, 60, 5, 9);
         for rule in [RuleKind::BasicPcd, RuleKind::ActiveCycling, RuleKind::Ssr] {
-            let cfg = LogisticPathConfig { rule, n_lambda: 20, tol: 1e-9, ..Default::default() };
+            let cfg = LogisticPathConfig {
+                rule,
+                n_lambda: 20,
+                tol: 1e-9,
+                fused: true,
+                ..Default::default()
+            };
             let fused = fit_logistic_path(&x, &y, &cfg).unwrap();
             let unfused = fit_logistic_path(
                 &x,

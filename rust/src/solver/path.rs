@@ -50,7 +50,7 @@ use crate::error::Result;
 use crate::linalg::{ops, DenseMatrix};
 use crate::runtime::{native::NativeEngine, ScanEngine};
 use crate::screening::{make_safe_rule, ssr, PrevSolution, RuleKind, SafeContext, SafeRule};
-use crate::solver::driver::{drive, DriverConfig, Problem, ScreenStage};
+use crate::solver::driver::{drive, fused_default, DriverConfig, Problem, ScreenStage};
 use crate::solver::{cd, kkt, lambda::GridKind, Penalty};
 
 pub use crate::solver::driver::LambdaMetrics;
@@ -91,7 +91,7 @@ impl Default for PathConfig {
             tol: 1e-7,
             max_iter: 100_000,
             lambdas: None,
-            fused: true,
+            fused: fused_default(),
         }
     }
 }
@@ -568,7 +568,11 @@ mod tests {
             RuleKind::SsrDome,
             RuleKind::SsrBedppSedpp,
         ] {
-            let fused = fit_lasso_path(&ds, &small_cfg(rule)).unwrap();
+            let fused = fit_lasso_path(
+                &ds,
+                &PathConfig { fused: true, ..small_cfg(rule) },
+            )
+            .unwrap();
             let unfused = fit_lasso_path(
                 &ds,
                 &PathConfig { fused: false, ..small_cfg(rule) },

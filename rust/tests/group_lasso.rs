@@ -23,13 +23,19 @@ fn max_beta_diff(a: &GroupPathFit, b: &GroupPathFit) -> f64 {
 }
 
 fn assert_agree(ds: &hssr::data::GroupedDataset, n_lambda: usize) {
-    let cfg = GroupPathConfig { n_lambda, tol: 1e-9, ..Default::default() };
-    let base = fit_group_path(ds, &GroupPathConfig { rule: RuleKind::BasicPcd, ..cfg.clone() })
-        .expect("baseline");
-    for rule in METHODS {
-        let fit = fit_group_path(ds, &GroupPathConfig { rule, ..cfg.clone() }).expect("fit");
-        let d = max_beta_diff(&base, &fit);
-        assert!(d < 1e-5, "{rule:?} deviates by {d} on {}", ds.name);
+    for penalty in
+        [hssr::solver::Penalty::Lasso, hssr::solver::Penalty::ElasticNet { alpha: 0.7 }]
+    {
+        let cfg = GroupPathConfig { penalty, n_lambda, tol: 1e-9, ..Default::default() };
+        let base =
+            fit_group_path(ds, &GroupPathConfig { rule: RuleKind::BasicPcd, ..cfg.clone() })
+                .expect("baseline");
+        for rule in METHODS {
+            let fit =
+                fit_group_path(ds, &GroupPathConfig { rule, ..cfg.clone() }).expect("fit");
+            let d = max_beta_diff(&base, &fit);
+            assert!(d < 1e-5, "{rule:?}/{penalty:?} deviates by {d} on {}", ds.name);
+        }
     }
 }
 
@@ -95,7 +101,12 @@ fn group_sizes_weight_the_penalty() {
     // Construct a layout with mixed widths and check entry ordering is
     // governed by ‖X_gᵀy‖/(n√W_g) — i.e. λmax is attained by the right group.
     let ds = generate_grouped(120, 12, 4, 3, 9);
-    let ctx = hssr::screening::group::GroupSafeContext::build(&ds.x, &ds.y, &ds.layout);
+    let ctx = hssr::screening::group::GroupSafeContext::build(
+        &ds.x,
+        &ds.y,
+        &ds.layout,
+        hssr::solver::Penalty::Lasso,
+    );
     let n = ds.n() as f64;
     for g in 0..ds.num_groups() {
         let crit = ctx.group_xty_sq[g].sqrt() / (n * (ds.layout.sizes[g] as f64).sqrt());

@@ -1,0 +1,382 @@
+//! Reference-oracle suite: tiny **fixed** datasets whose lasso /
+//! elastic-net / group solutions are known in closed form, asserted against
+//! every screening strategy and both scan engines (native one-pass kernels
+//! and the chunked scan-then-filter engine).
+//!
+//! The designs are built from ±1 Hadamard columns, so `XᵀX/n = I` exactly
+//! and the path solution decouples per unit:
+//!
+//! * columns: `β_j(λ) = S(z_j, αλ) / (1 + (1−α)λ)` with `z_j = x_jᵀy/n`;
+//! * groups (condition (19) holds globally):
+//!   `β_g(λ) = (1 − αλ√W_g/‖z_g‖)₊ · z_g / (1 + (1−α)λ)`.
+//!
+//! Every fitted path is compared coordinate-wise against the closed form
+//! and KKT-verified to **1e-8** — deterministic goldens pinning the whole
+//! screening stack (rules × engines × penalties) so backend work cannot
+//! silently drift. A second family of checks runs the same sweep on small
+//! *correlated* problems, where the oracle is the KKT system itself plus
+//! agreement with the exact (Basic PCD/GD) baseline.
+
+use hssr::data::chunked::{ChunkedMatrix, ChunkedScanEngine};
+use hssr::data::synth::generate_grouped;
+use hssr::data::{DataSpec, Dataset, GroupLayout, GroupedDataset};
+use hssr::linalg::{ops, DenseMatrix};
+use hssr::runtime::{native::NativeEngine, ScanEngine};
+use hssr::screening::RuleKind;
+use hssr::solver::group_path::{fit_group_path_with_engine, GroupPathConfig};
+use hssr::solver::path::{fit_lasso_path_with_engine, PathConfig};
+use hssr::solver::Penalty;
+
+const ORACLE_TOL: f64 = 1e-8;
+
+const COLUMN_RULES: [RuleKind; 7] = [
+    RuleKind::BasicPcd,
+    RuleKind::ActiveCycling,
+    RuleKind::Ssr,
+    RuleKind::Sedpp,
+    RuleKind::SsrBedpp,
+    RuleKind::SsrDome,
+    RuleKind::SsrBedppSedpp,
+];
+
+const GROUP_RULES: [RuleKind; 5] = [
+    RuleKind::BasicPcd,
+    RuleKind::ActiveCycling,
+    RuleKind::Ssr,
+    RuleKind::Sedpp,
+    RuleKind::SsrBedpp,
+];
+
+/// Entry `(i, k)` of the 8×8 Sylvester–Hadamard matrix.
+fn hadamard8(i: usize, k: usize) -> f64 {
+    if (i & k).count_ones() % 2 == 0 {
+        1.0
+    } else {
+        -1.0
+    }
+}
+
+/// Soft threshold.
+fn soft(z: f64, t: f64) -> f64 {
+    if z > t {
+        z - t
+    } else if z < -t {
+        z + t
+    } else {
+        0.0
+    }
+}
+
+/// Build the fixed column-oracle dataset: Hadamard columns 1..=4 of H8
+/// (each ⊥ 1, norm² = n = 8) and `y = Σ a_j x_j`, so `x_jᵀy/n = a_j`.
+fn hadamard_dataset(a: &[f64]) -> Dataset {
+    let n = 8;
+    let p = a.len();
+    assert!(p <= 7);
+    let x = DenseMatrix::from_fn(n, p, |i, j| hadamard8(i, j + 1));
+    let mut y = vec![0.0; n];
+    for (j, &aj) in a.iter().enumerate() {
+        for (i, yi) in y.iter_mut().enumerate() {
+            *yi += aj * hadamard8(i, j + 1);
+        }
+    }
+    Dataset {
+        x,
+        y,
+        centers: vec![0.0; p],
+        scales: vec![1.0; p],
+        name: "hadamard-oracle".into(),
+        truth: None,
+    }
+}
+
+/// The fixed group-oracle dataset: H8 columns 1..=6 in three width-2
+/// groups. Condition (19) holds exactly and groups decouple.
+fn hadamard_grouped(a: &[f64]) -> GroupedDataset {
+    assert_eq!(a.len(), 6);
+    let ds = hadamard_dataset(a);
+    GroupedDataset {
+        x: ds.x,
+        y: ds.y,
+        layout: GroupLayout::from_sizes(vec![2, 2, 2]),
+        back_transforms: vec![vec![1.0, 0.0, 0.0, 1.0]; 3],
+        raw_sizes: vec![2, 2, 2],
+        name: "hadamard-group-oracle".into(),
+        truth: None,
+    }
+}
+
+/// Column KKT residual check at `(1 + slack)`-free tolerance `tol`:
+/// inactive `|x_jᵀr/n| ≤ αλ + tol`, active
+/// `x_jᵀr/n = αλ·sign(β_j) + (1−α)λ·β_j ± tol`.
+fn assert_column_kkt(ds: &Dataset, beta: &[f64], penalty: Penalty, lam: f64, tol: f64, what: &str) {
+    let f = ds.x.matvec(beta);
+    let r: Vec<f64> = ds.y.iter().zip(&f).map(|(y, v)| y - v).collect();
+    let n = ds.n() as f64;
+    let alpha = penalty.alpha();
+    for j in 0..ds.p() {
+        let z = ops::dot(ds.x.col(j), &r) / n;
+        if beta[j] == 0.0 {
+            assert!(
+                z.abs() <= alpha * lam + tol,
+                "{what}: inactive KKT at j={j}: |z|={} > αλ={}",
+                z.abs(),
+                alpha * lam
+            );
+        } else {
+            let want = alpha * lam * beta[j].signum() + (1.0 - alpha) * lam * beta[j];
+            assert!(
+                (z - want).abs() <= tol,
+                "{what}: active KKT at j={j}: z={z} want {want}"
+            );
+        }
+    }
+}
+
+/// Group KKT residual check: inactive `‖X_gᵀr/n‖ ≤ αλ√W_g + tol`, active
+/// `X_gᵀr/n = αλ√W_g·β_g/‖β_g‖ + (1−α)λ·β_g ± tol` per coordinate.
+fn assert_group_kkt(
+    ds: &GroupedDataset,
+    beta: &[f64],
+    penalty: Penalty,
+    lam: f64,
+    tol: f64,
+    what: &str,
+) {
+    let f = ds.x.matvec(beta);
+    let r: Vec<f64> = ds.y.iter().zip(&f).map(|(y, v)| y - v).collect();
+    let n = ds.n() as f64;
+    let alpha = penalty.alpha();
+    for g in 0..ds.num_groups() {
+        let zg: Vec<f64> =
+            ds.layout.range(g).map(|j| ops::dot(ds.x.col(j), &r) / n).collect();
+        let bg: Vec<f64> = ds.layout.range(g).map(|j| beta[j]).collect();
+        let bnorm = ops::nrm2(&bg);
+        let w_sqrt = (ds.layout.sizes[g] as f64).sqrt();
+        if bnorm == 0.0 {
+            let zn = ops::nrm2(&zg);
+            assert!(
+                zn <= alpha * lam * w_sqrt + tol,
+                "{what}: inactive group KKT at g={g}: ‖z‖={zn} > αλ√W={}",
+                alpha * lam * w_sqrt
+            );
+        } else {
+            for (i, (&z, &b)) in zg.iter().zip(&bg).enumerate() {
+                let want = alpha * lam * w_sqrt * b / bnorm + (1.0 - alpha) * lam * b;
+                assert!(
+                    (z - want).abs() <= tol,
+                    "{what}: active group KKT at g={g} coord {i}: z={z} want {want}"
+                );
+            }
+        }
+    }
+}
+
+/// Run a closure against both engines (the chunked store wraps the same
+/// design so selections must match the native kernels exactly).
+fn with_both_engines(x: &DenseMatrix, mut run: impl FnMut(&dyn ScanEngine, &str)) {
+    let native = NativeEngine::new();
+    run(&native, "native");
+    let store = ChunkedMatrix::from_dense(x, 4);
+    let chunked = ChunkedScanEngine::new(&store);
+    run(&chunked, "chunked");
+}
+
+/// Hand-computed lasso / elastic-net paths on the Hadamard design: every
+/// rule and both engines must reproduce `S(a_j, αλ)/(1+(1−α)λ)` to 1e-8,
+/// KKT-verified.
+#[test]
+fn column_oracle_closed_form_all_rules_both_engines() {
+    let a = [0.9, -0.55, 0.3, 0.1];
+    let ds = hadamard_dataset(&a);
+    for penalty in [Penalty::Lasso, Penalty::ElasticNet { alpha: 0.5 }] {
+        let alpha = penalty.alpha();
+        let denom_of = |lam: f64| 1.0 + (1.0 - alpha) * lam;
+        let lam_max = a.iter().fold(0.0f64, |m, v| m.max(v.abs())) / alpha;
+        let lambdas: Vec<f64> =
+            [1.0, 0.75, 0.5, 0.3, 0.1].iter().map(|f| f * lam_max).collect();
+        for rule in COLUMN_RULES {
+            with_both_engines(&ds.x, |engine, ename| {
+                let cfg = PathConfig {
+                    rule,
+                    penalty,
+                    lambdas: Some(lambdas.clone()),
+                    tol: 1e-12,
+                    ..PathConfig::default()
+                };
+                let fit = fit_lasso_path_with_engine(&ds, &cfg, engine).unwrap();
+                assert!(
+                    (fit.lambda_max - lam_max).abs() < 1e-10,
+                    "{rule:?}/{ename}/{penalty:?}: λmax {} want {lam_max}",
+                    fit.lambda_max
+                );
+                for (k, &lam) in fit.lambdas.iter().enumerate() {
+                    let beta = fit.beta_dense(k);
+                    for (j, &aj) in a.iter().enumerate() {
+                        let want = soft(aj, alpha * lam) / denom_of(lam);
+                        assert!(
+                            (beta[j] - want).abs() <= ORACLE_TOL,
+                            "{rule:?}/{ename}/{penalty:?}: β[{j}](λ#{k})={} want {want}",
+                            beta[j]
+                        );
+                    }
+                    assert_column_kkt(
+                        &ds,
+                        &beta,
+                        penalty,
+                        lam,
+                        ORACLE_TOL,
+                        &format!("{rule:?}/{ename}/{penalty:?} λ#{k}"),
+                    );
+                }
+            });
+        }
+    }
+}
+
+/// Hand-computed group lasso / group elastic-net paths on the grouped
+/// Hadamard design: every group rule and both engines must reproduce the
+/// multivariate soft threshold to 1e-8, KKT-verified.
+#[test]
+fn group_oracle_closed_form_all_rules_both_engines() {
+    let a = [0.8, 0.6, 0.3, -0.4, 0.1, 0.05];
+    let ds = hadamard_grouped(&a);
+    let znorms: Vec<f64> = (0..3)
+        .map(|g| (a[2 * g] * a[2 * g] + a[2 * g + 1] * a[2 * g + 1]).sqrt())
+        .collect();
+    let w_sqrt = 2.0f64.sqrt();
+    for penalty in [Penalty::Lasso, Penalty::ElasticNet { alpha: 0.6 }] {
+        let alpha = penalty.alpha();
+        let lam_max = znorms.iter().fold(0.0f64, |m, &v| m.max(v)) / (alpha * w_sqrt);
+        let lambdas: Vec<f64> =
+            [1.0, 0.75, 0.5, 0.3, 0.1].iter().map(|f| f * lam_max).collect();
+        for rule in GROUP_RULES {
+            with_both_engines(&ds.x, |engine, ename| {
+                let cfg = GroupPathConfig {
+                    rule,
+                    penalty,
+                    lambdas: Some(lambdas.clone()),
+                    tol: 1e-12,
+                    ..GroupPathConfig::default()
+                };
+                let fit = fit_group_path_with_engine(&ds, &cfg, engine).unwrap();
+                assert!(
+                    (fit.lambda_max - lam_max).abs() < 1e-10,
+                    "{rule:?}/{ename}/{penalty:?}: group λmax {} want {lam_max}",
+                    fit.lambda_max
+                );
+                for (k, &lam) in fit.lambdas.iter().enumerate() {
+                    let beta = fit.beta_dense(k);
+                    for g in 0..3 {
+                        let thresh = alpha * lam * w_sqrt;
+                        let scale = if znorms[g] > thresh {
+                            (1.0 - thresh / znorms[g]) / (1.0 + (1.0 - alpha) * lam)
+                        } else {
+                            0.0
+                        };
+                        for dj in 0..2 {
+                            let want = scale * a[2 * g + dj];
+                            let got = beta[2 * g + dj];
+                            assert!(
+                                (got - want).abs() <= ORACLE_TOL,
+                                "{rule:?}/{ename}/{penalty:?}: group β[{g}.{dj}](λ#{k})={got} want {want}"
+                            );
+                        }
+                    }
+                    assert_group_kkt(
+                        &ds,
+                        &beta,
+                        penalty,
+                        lam,
+                        ORACLE_TOL,
+                        &format!("{rule:?}/{ename}/{penalty:?} λ#{k}"),
+                    );
+                }
+            });
+        }
+    }
+}
+
+/// Correlated-design oracle (columns): the KKT system is the reference.
+/// Every rule × engine × penalty must satisfy KKT and agree with the exact
+/// Basic PCD baseline.
+#[test]
+fn column_oracle_correlated_kkt_and_baseline_agreement() {
+    let ds = DataSpec::gene_like(60, 120).generate(33);
+    for penalty in [Penalty::Lasso, Penalty::ElasticNet { alpha: 0.7 }] {
+        let base_cfg = PathConfig {
+            rule: RuleKind::BasicPcd,
+            penalty,
+            n_lambda: 12,
+            tol: 1e-12,
+            ..PathConfig::default()
+        };
+        let base = fit_lasso_path_with_engine(&ds, &base_cfg, &NativeEngine::new()).unwrap();
+        for rule in COLUMN_RULES {
+            with_both_engines(&ds.x, |engine, ename| {
+                let cfg = PathConfig { rule, ..base_cfg.clone() };
+                let fit = fit_lasso_path_with_engine(&ds, &cfg, engine).unwrap();
+                for (k, &lam) in fit.lambdas.iter().enumerate() {
+                    let beta = fit.beta_dense(k);
+                    let bref = base.beta_dense(k);
+                    for j in 0..ds.p() {
+                        assert!(
+                            (beta[j] - bref[j]).abs() < 1e-7,
+                            "{rule:?}/{ename}/{penalty:?}: β[{j}](λ#{k}) deviates from exact"
+                        );
+                    }
+                    assert_column_kkt(
+                        &ds,
+                        &beta,
+                        penalty,
+                        lam,
+                        1e-6,
+                        &format!("{rule:?}/{ename}/{penalty:?} λ#{k}"),
+                    );
+                }
+            });
+        }
+    }
+}
+
+/// Correlated-design oracle (groups): KKT + agreement with exact Basic GD,
+/// for the group lasso and the group elastic net.
+#[test]
+fn group_oracle_correlated_kkt_and_baseline_agreement() {
+    let ds = generate_grouped(60, 12, 3, 3, 34);
+    for penalty in [Penalty::Lasso, Penalty::ElasticNet { alpha: 0.6 }] {
+        let base_cfg = GroupPathConfig {
+            rule: RuleKind::BasicPcd,
+            penalty,
+            n_lambda: 12,
+            tol: 1e-12,
+            ..GroupPathConfig::default()
+        };
+        let base =
+            fit_group_path_with_engine(&ds, &base_cfg, &NativeEngine::new()).unwrap();
+        for rule in GROUP_RULES {
+            with_both_engines(&ds.x, |engine, ename| {
+                let cfg = GroupPathConfig { rule, ..base_cfg.clone() };
+                let fit = fit_group_path_with_engine(&ds, &cfg, engine).unwrap();
+                for (k, &lam) in fit.lambdas.iter().enumerate() {
+                    let beta = fit.beta_dense(k);
+                    let bref = base.beta_dense(k);
+                    for j in 0..ds.p() {
+                        assert!(
+                            (beta[j] - bref[j]).abs() < 1e-7,
+                            "{rule:?}/{ename}/{penalty:?}: group β[{j}](λ#{k}) deviates"
+                        );
+                    }
+                    assert_group_kkt(
+                        &ds,
+                        &beta,
+                        penalty,
+                        lam,
+                        1e-6,
+                        &format!("{rule:?}/{ename}/{penalty:?} λ#{k}"),
+                    );
+                }
+            });
+        }
+    }
+}

@@ -1,0 +1,151 @@
+//! Screening-power regression against committed goldens (paper Fig. 1/4):
+//! on fixed seeded workloads, the per-λ BEDPP rejection counts and the
+//! path's safe/strong set sizes must match
+//! `tests/goldens/screening_power.json` **exactly**. Counts are integers
+//! produced by deterministic arithmetic, so any drift means a screening
+//! bound silently loosened (fewer rejections) or became unsafe (more).
+//!
+//! Bootstrap: if the golden file does not exist yet (fresh checkout before
+//! the first CI run commits it), the test writes it and passes; CI uploads
+//! the generated file as an artifact so it can be committed. On mismatch
+//! the freshly computed counts are written next to the golden as
+//! `screening_power.json.new` for diffing.
+
+use std::fmt::Write as _;
+use std::path::PathBuf;
+
+use hssr::data::synth::generate_grouped;
+use hssr::data::DataSpec;
+use hssr::screening::bedpp::Bedpp;
+use hssr::screening::group::{GroupBedpp, GroupSafeContext};
+use hssr::screening::{RuleKind, SafeContext};
+use hssr::solver::group_path::{fit_group_path, GroupPathConfig};
+use hssr::solver::path::{fit_lasso_path, PathConfig};
+use hssr::solver::Penalty;
+
+fn golden_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/goldens/screening_power.json")
+}
+
+fn ints(out: &mut String, key: &str, vals: &[usize]) {
+    write!(out, "    \"{key}\": [").unwrap();
+    for (i, v) in vals.iter().enumerate() {
+        if i > 0 {
+            out.push_str(", ");
+        }
+        write!(out, "{v}").unwrap();
+    }
+    out.push(']');
+}
+
+/// Compute the canonical golden document for the two fixed workloads.
+fn compute_golden() -> String {
+    // ---- lasso workload: gene-like n=80, p=200, seed 7, SSR-BEDPP ----
+    let ds = DataSpec::gene_like(80, 200).generate(7);
+    let cfg = PathConfig {
+        rule: RuleKind::SsrBedpp,
+        n_lambda: 40,
+        tol: 1e-9,
+        fused: true,
+        ..PathConfig::default()
+    };
+    let fit = fit_lasso_path(&ds, &cfg).expect("lasso fit");
+    let ctx = SafeContext::build(&ds.x, &ds.y, Penalty::Lasso, true);
+    let mut bedpp_rej = Vec::with_capacity(fit.lambdas.len());
+    for &lam in &fit.lambdas {
+        let mut survive = vec![true; ds.p()];
+        bedpp_rej.push(Bedpp::screen_at(&ctx, lam, &mut survive));
+    }
+    let safe: Vec<usize> = fit.metrics.iter().map(|m| m.safe_size).collect();
+    let strong: Vec<usize> = fit.metrics.iter().map(|m| m.strong_size).collect();
+
+    // ---- group workload: synth n=80, G=30, W=4, seed 14, SSR-BEDPP ----
+    let gds = generate_grouped(80, 30, 4, 4, 14);
+    let gcfg = GroupPathConfig {
+        rule: RuleKind::SsrBedpp,
+        n_lambda: 25,
+        tol: 1e-9,
+        fused: true,
+        ..GroupPathConfig::default()
+    };
+    let gfit = fit_group_path(&gds, &gcfg).expect("group fit");
+    let gctx = GroupSafeContext::build(&gds.x, &gds.y, &gds.layout, Penalty::Lasso);
+    let mut gbedpp_rej = Vec::with_capacity(gfit.lambdas.len());
+    for &lam in &gfit.lambdas {
+        let mut survive = vec![true; gds.num_groups()];
+        gbedpp_rej.push(GroupBedpp::screen_at(&gctx, lam, &mut survive));
+    }
+    let gsafe: Vec<usize> = gfit.metrics.iter().map(|m| m.safe_size).collect();
+    let gstrong: Vec<usize> = gfit.metrics.iter().map(|m| m.strong_size).collect();
+
+    // ---- group elastic net (α = 0.6): pins the new enet bounds ----
+    let ecfg = GroupPathConfig {
+        penalty: Penalty::ElasticNet { alpha: 0.6 },
+        ..gcfg.clone()
+    };
+    let efit = fit_group_path(&gds, &ecfg).expect("group enet fit");
+    let ectx = GroupSafeContext::build(
+        &gds.x,
+        &gds.y,
+        &gds.layout,
+        Penalty::ElasticNet { alpha: 0.6 },
+    );
+    let mut ebedpp_rej = Vec::with_capacity(efit.lambdas.len());
+    for &lam in &efit.lambdas {
+        let mut survive = vec![true; gds.num_groups()];
+        ebedpp_rej.push(GroupBedpp::screen_at(&ectx, lam, &mut survive));
+    }
+    let esafe: Vec<usize> = efit.metrics.iter().map(|m| m.safe_size).collect();
+    let estrong: Vec<usize> = efit.metrics.iter().map(|m| m.strong_size).collect();
+
+    let mut out = String::new();
+    out.push_str("{\n  \"lasso_gene_n80_p200_seed7_ssrbedpp_k40\": {\n");
+    ints(&mut out, "bedpp_rejected", &bedpp_rej);
+    out.push_str(",\n");
+    ints(&mut out, "safe_size", &safe);
+    out.push_str(",\n");
+    ints(&mut out, "strong_size", &strong);
+    out.push_str("\n  },\n  \"group_synth_n80_G30_W4_seed14_ssrbedpp_k25\": {\n");
+    ints(&mut out, "bedpp_rejected", &gbedpp_rej);
+    out.push_str(",\n");
+    ints(&mut out, "safe_size", &gsafe);
+    out.push_str(",\n");
+    ints(&mut out, "strong_size", &gstrong);
+    out.push_str("\n  },\n  \"group_enet_a0.6_n80_G30_W4_seed14_ssrbedpp_k25\": {\n");
+    ints(&mut out, "bedpp_rejected", &ebedpp_rej);
+    out.push_str(",\n");
+    ints(&mut out, "safe_size", &esafe);
+    out.push_str(",\n");
+    ints(&mut out, "strong_size", &estrong);
+    out.push_str("\n  }\n}\n");
+    out
+}
+
+#[test]
+fn screening_power_matches_golden_json() {
+    let got = compute_golden();
+    let path = golden_path();
+    match std::fs::read_to_string(&path) {
+        Ok(want) => {
+            if want != got {
+                let new_path = path.with_extension("json.new");
+                std::fs::write(&new_path, &got).expect("write .new golden");
+                panic!(
+                    "screening-power counts drifted from {} — a screening bound \
+                     changed. Fresh counts written to {}; diff them, and update \
+                     the golden only if the change is intended.",
+                    path.display(),
+                    new_path.display()
+                );
+            }
+        }
+        Err(_) => {
+            std::fs::create_dir_all(path.parent().unwrap()).expect("mkdir goldens");
+            std::fs::write(&path, &got).expect("bootstrap golden");
+            eprintln!(
+                "bootstrapped screening-power golden at {} — commit this file",
+                path.display()
+            );
+        }
+    }
+}

@@ -104,38 +104,57 @@ fn group_rules_never_discard_active_groups() {
     check(PropConfig { cases: 6, seed: 404 }, |rng, _| {
         let g_total = 10 + rng.below(15) as usize;
         let ds = generate_grouped(80, g_total, 4, 3, rng.next_u64());
-        let ctx = GroupSafeContext::build(&ds.x, &ds.y, &ds.layout);
-        let fit = hssr::solver::group_path::fit_group_path(
-            &ds,
-            &hssr::solver::group_path::GroupPathConfig {
-                rule: RuleKind::BasicPcd,
-                n_lambda: 20,
-                tol: 1e-10,
-                ..Default::default()
-            },
-        )
-        .map_err(|e| e.to_string())?;
-        for k in 0..fit.lambdas.len() {
-            let beta = fit.beta_dense(k);
-            let active: Vec<usize> = (0..ds.num_groups())
-                .filter(|&g| ds.layout.range(g).any(|j| beta[j] != 0.0))
-                .collect();
-            // group BEDPP (non-sequential)
-            let mut survive = vec![true; ds.num_groups()];
-            GroupBedpp::screen_at(&ctx, fit.lambdas[k], &mut survive);
-            for &g in &active {
-                prop_assert!(survive[g], "gBEDPP discarded active group {g} at λ#{k}");
-            }
-            // group SEDPP (sequential, from previous exact solution)
-            if k > 0 {
-                let bprev = fit.beta_dense(k - 1);
-                let xb = ds.x.matvec(&bprev);
-                let r: Vec<f64> = ds.y.iter().zip(&xb).map(|(y, f)| y - f).collect();
-                let prev = PrevSolution { lambda: fit.lambdas[k - 1], r: &r };
+        // Random ℓ1 mixing weight for the elastic-net sweep.
+        let alpha = 0.4 + 0.5 * rng.uniform();
+        for penalty in [Penalty::Lasso, Penalty::ElasticNet { alpha }] {
+            let ctx = GroupSafeContext::build(&ds.x, &ds.y, &ds.layout, penalty);
+            let fit = hssr::solver::group_path::fit_group_path(
+                &ds,
+                &hssr::solver::group_path::GroupPathConfig {
+                    rule: RuleKind::BasicPcd,
+                    penalty,
+                    n_lambda: 20,
+                    tol: 1e-10,
+                    ..Default::default()
+                },
+            )
+            .map_err(|e| e.to_string())?;
+            for k in 0..fit.lambdas.len() {
+                let beta = fit.beta_dense(k);
+                let active: Vec<usize> = (0..ds.num_groups())
+                    .filter(|&g| ds.layout.range(g).any(|j| beta[j] != 0.0))
+                    .collect();
+                // group BEDPP (non-sequential; enet form when α < 1)
                 let mut survive = vec![true; ds.num_groups()];
-                GroupSedpp::new().screen_with(&ds.x, &ctx, &prev, fit.lambdas[k], &mut survive);
+                GroupBedpp::screen_at(&ctx, fit.lambdas[k], &mut survive);
                 for &g in &active {
-                    prop_assert!(survive[g], "gSEDPP discarded active group {g} at λ#{k}");
+                    prop_assert!(
+                        survive[g],
+                        "gBEDPP/{penalty:?} discarded active group {g} at λ#{k}"
+                    );
+                }
+                // group SEDPP (sequential, from previous exact solution;
+                // falls back to the basic rule under the elastic net)
+                if k > 0 {
+                    let bprev = fit.beta_dense(k - 1);
+                    let xb = ds.x.matvec(&bprev);
+                    let r: Vec<f64> =
+                        ds.y.iter().zip(&xb).map(|(y, f)| y - f).collect();
+                    let prev = PrevSolution { lambda: fit.lambdas[k - 1], r: &r };
+                    let mut survive = vec![true; ds.num_groups()];
+                    GroupSedpp::new().screen_with(
+                        &ds.x,
+                        &ctx,
+                        &prev,
+                        fit.lambdas[k],
+                        &mut survive,
+                    );
+                    for &g in &active {
+                        prop_assert!(
+                            survive[g],
+                            "gSEDPP/{penalty:?} discarded active group {g} at λ#{k}"
+                        );
+                    }
                 }
             }
         }
