@@ -1,14 +1,15 @@
 # hssr — build/verify entry points.
 #
-#   make verify     tier-1 gate (build + tests) plus fmt/clippy lint
+#   make verify     tier-1 gate (build + tests) plus fmt/clippy lint + docs
 #   make tier1      exactly the tier-1 command the CI driver runs
+#   make doc        rustdoc with warnings denied (the CI doc job)
 #   make bench      perf probe (emits BENCH_perf.json at the repo root)
 #   make artifacts  AOT-lower the JAX/Pallas scan kernels to HLO text
 #                   (needs the python toolchain; not required for tier-1)
 
 CARGO_DIR := rust
 
-.PHONY: verify tier1 lint bench artifacts
+.PHONY: verify tier1 lint doc bench artifacts
 
 tier1:
 	cd $(CARGO_DIR) && cargo build --release && cargo test -q
@@ -17,7 +18,10 @@ lint:
 	cd $(CARGO_DIR) && cargo fmt --check
 	cd $(CARGO_DIR) && cargo clippy --all-targets -- -D warnings
 
-verify: tier1 lint
+doc:
+	cd $(CARGO_DIR) && RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
+
+verify: tier1 lint doc
 
 bench:
 	cd $(CARGO_DIR) && cargo bench --bench perf_probe

@@ -21,7 +21,12 @@ fn main() -> Result<(), HssrError> {
         y.iter().sum::<f64>() / y.len() as f64
     );
     let mut basic_time = 0.0;
-    for rule in [RuleKind::BasicPcd, RuleKind::ActiveCycling, RuleKind::Ssr] {
+    for rule in [
+        RuleKind::BasicPcd,
+        RuleKind::ActiveCycling,
+        RuleKind::Ssr,
+        RuleKind::SsrGapSafe,
+    ] {
         let cfg = LogisticPathConfig { rule, n_lambda: 50, ..Default::default() };
         let fit = fit_logistic_path(&x, &y, &cfg)?;
         if rule == RuleKind::BasicPcd {

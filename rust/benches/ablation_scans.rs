@@ -33,15 +33,25 @@ fn main() {
         RuleKind::SsrDome,
         RuleKind::SsrBedpp,
         RuleKind::SsrBedppSedpp,
+        RuleKind::SsrGapSafe,
     ] {
         let cfg = PathConfig { rule, n_lambda: k, ..PathConfig::default() };
         let fit = fit_lasso_path(&ds, &cfg).expect("fit");
-        // SEDPP hides its full scan inside the rule: account analytically.
+        // SEDPP and gap-safe hide full scans inside the rule: account
+        // analytically. Gap-safe pays one full scan per screen (pk), at
+        // least one pre-KKT re-fire per λ (another ~pk), and one prune
+        // scan per `rescreen_every` CD epochs.
         let analytic = match rule {
             RuleKind::Sedpp => pk,
             RuleKind::SsrBedppSedpp => {
                 // one full scan at freeze time + per-λ safe-set scans
                 fit.total_cols_scanned() + ds.p() as u64
+            }
+            RuleKind::SsrGapSafe => {
+                let cycles: u64 = fit.metrics.iter().map(|m| m.cd_cycles as u64).sum();
+                fit.total_cols_scanned()
+                    + 2 * pk
+                    + (cycles / cfg.rescreen_every.max(1) as u64) * ds.p() as u64
             }
             _ => fit.total_cols_scanned(),
         };
@@ -59,6 +69,38 @@ fn main() {
         "paper claim §3.2.3: HSSR column traffic = Σ|S_k| ≪ pK; \
          SSR/SEDPP = pK (the 1.00 rows above)."
     );
+
+    // ---- per-λ safe-set rejections: static BEDPP/SEDPP vs dynamic
+    // gap-safe (screen-time |S| plus its mid-λ re-fires) ----
+    let rej_rules = [RuleKind::SsrBedpp, RuleKind::Sedpp, RuleKind::SsrGapSafe];
+    let rej_fits: Vec<_> = rej_rules
+        .iter()
+        .map(|&rule| {
+            let cfg = PathConfig { rule, n_lambda: k, ..PathConfig::default() };
+            fit_lasso_path(&ds, &cfg).expect("rejection fit")
+        })
+        .collect();
+    let mut rtable = Table::new(
+        "per-λ safe-set rejections (p − |S|; gap-safe adds dynamic re-fires)",
+        &[
+            "λ/λmax",
+            "BEDPP rejected",
+            "SEDPP rejected",
+            "GapSafe rejected",
+            "GapSafe re-fired",
+        ],
+    );
+    let lmax = rej_fits[0].lambda_max;
+    for i in (0..k).step_by((k / 20).max(1)) {
+        rtable.push_row(vec![
+            format!("{:.2}", rej_fits[0].metrics[i].lambda / lmax),
+            (ds.p() - rej_fits[0].metrics[i].safe_size).to_string(),
+            (ds.p() - rej_fits[1].metrics[i].safe_size).to_string(),
+            (ds.p() - rej_fits[2].metrics[i].safe_size).to_string(),
+            rej_fits[2].metrics[i].rescreen_discards.to_string(),
+        ]);
+    }
+    rtable.emit("ablation_scans_rejections").expect("emit rejections");
 
     // Out-of-core cross-check: the same paths driven through the counting
     // chunked-store engine, so the fetch counters (and chunk faults) are
@@ -88,7 +130,7 @@ fn main() {
         "group screen traffic — fused single traversal vs unfused (bytes per rule)",
         &["Method", "fused cols", "fused MB", "unfused cols", "unfused MB", "fused cols / pK"],
     );
-    let rules = [RuleKind::Ssr, RuleKind::Sedpp, RuleKind::SsrBedpp];
+    let rules = [RuleKind::Ssr, RuleKind::Sedpp, RuleKind::SsrBedpp, RuleKind::SsrGapSafe];
     for rule in rules {
         let fused_cfg =
             GroupPathConfig { rule, n_lambda: gk, fused: true, ..GroupPathConfig::default() };

@@ -23,7 +23,7 @@ fn main() {
 
     let mut table = Table::new(
         "Figure 1 — % of features discarded",
-        &["λ/λmax", "Dome", "BEDPP", "SEDPP", "SSR", "SSR-BEDPP"],
+        &["λ/λmax", "Dome", "BEDPP", "SEDPP", "SSR", "SSR-BEDPP", "SSR-GapSafe"],
     );
     let k = curves[0].lambda_frac.len();
     for i in (0..k).step_by(5) {

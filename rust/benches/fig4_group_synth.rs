@@ -15,12 +15,13 @@ use hssr::screening::RuleKind;
 use hssr::solver::group_path::{fit_group_path, GroupPathConfig};
 use hssr::solver::Penalty;
 
-const METHODS: [RuleKind; 5] = [
+const METHODS: [RuleKind; 6] = [
     RuleKind::BasicPcd,
     RuleKind::ActiveCycling,
     RuleKind::Ssr,
     RuleKind::Sedpp,
     RuleKind::SsrBedpp,
+    RuleKind::SsrGapSafe,
 ];
 
 fn label(rule: RuleKind) -> &'static str {

@@ -112,6 +112,7 @@ pub fn parse_rule(s: &str) -> Option<crate::screening::RuleKind> {
         "ssr-bedpp" | "hssr" | "hybrid" => Some(SsrBedpp),
         "ssr-dome" => Some(SsrDome),
         "ssr-bedpp-sedpp" | "rehybrid" => Some(SsrBedppSedpp),
+        "ssr-gapsafe" | "gapsafe" | "gap-safe" => Some(SsrGapSafe),
         _ => None,
     }
 }
@@ -160,6 +161,8 @@ mod tests {
         assert_eq!(parse_rule("hssr"), Some(RuleKind::SsrBedpp));
         assert_eq!(parse_rule("basic_pcd"), Some(RuleKind::BasicPcd));
         assert_eq!(parse_rule("rehybrid"), Some(RuleKind::SsrBedppSedpp));
+        assert_eq!(parse_rule("ssr-gapsafe"), Some(RuleKind::SsrGapSafe));
+        assert_eq!(parse_rule("GapSafe"), Some(RuleKind::SsrGapSafe));
         assert_eq!(parse_rule("nope"), None);
     }
 }

@@ -61,7 +61,9 @@ pub fn screening_power(ds: &Dataset, cfg: &PathConfig) -> Result<Vec<PowerCurve>
     }
 
     // Sequential strategies: fraction excluded from the optimizer set.
-    for rule in [RuleKind::Sedpp, RuleKind::Ssr, RuleKind::SsrBedpp] {
+    for rule in
+        [RuleKind::Sedpp, RuleKind::Ssr, RuleKind::SsrBedpp, RuleKind::SsrGapSafe]
+    {
         let mut c = cfg.clone();
         c.rule = rule;
         c.lambdas = Some(lambdas.clone());
@@ -270,6 +272,16 @@ mod tests {
                 "HSSR below SSR at k={k}"
             );
         }
+        // The dynamic gap-safe hybrid is also an HSSR: ≥ SSR everywhere,
+        // and still discarding at λmin (it is never flag-shut).
+        let gap = by_name("SSR-GapSafe");
+        for k in 0..=last {
+            assert!(
+                gap.discarded_frac[k] >= ssr.discarded_frac[k] - 1e-12,
+                "SSR-GapSafe below SSR at k={k}"
+            );
+        }
+        assert!(gap.discarded_frac[last] > 0.5);
         // Dome is weaker than BEDPP in aggregate.
         let sum = |c: &PowerCurve| c.discarded_frac.iter().sum::<f64>();
         assert!(sum(dome) <= sum(bedpp) + 1e-9);

@@ -16,7 +16,19 @@
 //! * [`screening::hybrid`] — the paper's contribution: hybrid safe-strong
 //!   rules **SSR-BEDPP** and **SSR-Dome** (Definition 3.1),
 //! * [`screening::rehybrid`] — the §6 future-work extension that re-hybridizes
-//!   with a frozen SEDPP rule once BEDPP goes dead.
+//!   with a frozen SEDPP rule once BEDPP goes dead,
+//! * [`screening::gapsafe`] — **dynamic gap-safe sphere rules** (Fercoq,
+//!   Gramfort & Salmon 2015) built on the duality machinery of
+//!   [`solver::duality`]: they tighten as the solver converges, re-fire
+//!   mid-optimization, and extend safe screening to every family —
+//!   including the ℓ1-logistic path (**SSR-GapSafe**), which the static
+//!   quadratic-loss rules cannot reach.
+//!
+//! The λ walk itself — the paper's Algorithm 1 — is written once in
+//! [`solver::driver`] as a generic `Problem`/`PathDriver` core; the lasso,
+//! group-lasso, and logistic families are `Problem` instances. See
+//! `docs/ARCHITECTURE.md` for the complete code ↔ paper map (every
+//! screening module, its equation/theorem, and a rule decision table).
 //!
 //! ## Architecture (three layers)
 //!
@@ -28,6 +40,13 @@
 //! * **[`runtime`]** loads those artifacts through the PJRT C API (`xla`
 //!   crate) so the Rust hot path can execute the AOT-compiled scans; a
 //!   native Rust engine with identical semantics is the default.
+//!
+//! ## Environment knobs
+//!
+//! * `HSSR_THREADS` — worker-pool size for the scan kernels (default:
+//!   `available_parallelism()`, read once at pool creation).
+//! * `HSSR_FUSED` — `0` flips every config's `fused` default to the
+//!   unfused scan-then-filter drivers (CI runs the suite both ways).
 //!
 //! ## Quickstart
 //!

@@ -7,8 +7,8 @@
 //!            [--alpha A]                              # group elastic net when A < 1
 //! hssr power [--data gene] [--n N] [--p P]          # Figure-1 style curves
 //! hssr cv    [--folds K] [--data ...]                # k-fold CV for λ
-//! hssr logistic [--n N] [--p P] [--rule basic|ac|ssr] [--engine native|pjrt]
-//!                                                    # sparse logistic path (§6)
+//! hssr logistic [--n N] [--p P] [--rule basic|ac|ssr|ssr-gapsafe]
+//!               [--engine native|pjrt]               # sparse logistic path (§6)
 //! hssr info                                          # build/runtime info
 //! ```
 //!
@@ -86,6 +86,7 @@ fn path_config_from(cfg: &Config) -> Result<PathConfig> {
         n_lambda: cfg.get_parse("nlambda", 100usize)?,
         lambda_min_ratio: cfg.get_parse("lmin-ratio", 0.1)?,
         tol: cfg.get_parse("tol", 1e-7)?,
+        rescreen_every: cfg.get_parse("rescreen-every", 10usize)?,
         ..PathConfig::default()
     })
 }
@@ -179,6 +180,7 @@ fn cmd_group(cfg: &Config) -> Result<()> {
         n_lambda: cfg.get_parse("nlambda", 100usize)?,
         lambda_min_ratio: cfg.get_parse("lmin-ratio", 0.1)?,
         tol: cfg.get_parse("tol", 1e-7)?,
+        rescreen_every: cfg.get_parse("rescreen-every", 10usize)?,
         ..GroupPathConfig::default()
     };
     let fit = fit_group_path(&ds, &gcfg)?;
@@ -207,7 +209,7 @@ fn cmd_power(cfg: &Config) -> Result<()> {
     let curves = screening_power(&ds, &pcfg)?;
     let mut t = Table::new(
         &format!("Figure 1 — % features discarded ({})", ds.name),
-        &["λ/λmax", "Dome", "BEDPP", "SEDPP", "SSR", "SSR-BEDPP"],
+        &["λ/λmax", "Dome", "BEDPP", "SEDPP", "SSR", "SSR-BEDPP", "SSR-GapSafe"],
     );
     let k = curves[0].lambda_frac.len();
     for i in (0..k).step_by((k / 20).max(1)) {
@@ -264,6 +266,7 @@ fn cmd_logistic(cfg: &Config) -> Result<()> {
     let lcfg = LogisticPathConfig {
         rule,
         n_lambda: cfg.get_parse("nlambda", 100usize)?,
+        rescreen_every: cfg.get_parse("rescreen-every", 1usize)?,
         ..Default::default()
     };
     let engine_kind = EngineKind::parse(&cfg.get_str("engine", "native"))

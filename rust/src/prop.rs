@@ -114,6 +114,7 @@ mod tests {
                     RuleKind::SsrBedpp,
                     RuleKind::SsrDome,
                     RuleKind::SsrBedppSedpp,
+                    RuleKind::SsrGapSafe,
                 ] {
                     let cfg = PathConfig {
                         rule,
@@ -177,6 +178,7 @@ mod tests {
                     RuleKind::Ssr,
                     RuleKind::Sedpp,
                     RuleKind::SsrBedpp,
+                    RuleKind::SsrGapSafe,
                 ] {
                     let cfg = GroupPathConfig {
                         rule,
@@ -324,9 +326,12 @@ mod tests {
             let (x, y, _) = synthetic_logistic(n, p, s, rng.next_u64());
             let alpha = 0.5 + 0.4 * rng.uniform();
             for penalty in [Penalty::Lasso, Penalty::ElasticNet { alpha }] {
-                for rule in
-                    [RuleKind::BasicPcd, RuleKind::ActiveCycling, RuleKind::Ssr]
-                {
+                for rule in [
+                    RuleKind::BasicPcd,
+                    RuleKind::ActiveCycling,
+                    RuleKind::Ssr,
+                    RuleKind::SsrGapSafe,
+                ] {
                     let cfg = LogisticPathConfig {
                         rule,
                         penalty,

@@ -227,7 +227,7 @@ mod tests {
         use crate::screening::SafeRule;
         let (ds, ctx) = ctx_for(8, Penalty::Lasso);
         let r = ds.y.clone();
-        let prev = PrevSolution { lambda: ctx.lambda_max, r: &r };
+        let prev = PrevSolution { lambda: ctx.lambda_max, r: &r, beta: None };
         for frac in [0.95, 0.7, 0.5, 0.05] {
             let lam = frac * ctx.lambda_max;
             let mut rule = Bedpp::new();
@@ -253,7 +253,7 @@ mod tests {
         let (ds, ctx) = ctx_for(6, Penalty::Lasso);
         let mut rule = Bedpp::new();
         let r = ds.y.clone();
-        let prev = PrevSolution { lambda: ctx.lambda_max, r: &r };
+        let prev = PrevSolution { lambda: ctx.lambda_max, r: &r, beta: None };
         let mut survive = vec![true; ctx.p];
         rule.screen(&ds.x, &ctx, &prev, 0.01 * ctx.lambda_max, &mut survive);
         assert!(rule.dead());

@@ -250,7 +250,7 @@ mod tests {
         use crate::screening::SafeRule;
         let ds = DataSpec::synthetic(60, 40, 4).generate(6);
         let ctx = SafeContext::build(&ds.x, &ds.y, Penalty::Lasso, true);
-        let prev = PrevSolution { lambda: ctx.lambda_max, r: &ds.y };
+        let prev = PrevSolution { lambda: ctx.lambda_max, r: &ds.y, beta: None };
         for frac in [0.99, 0.8, 0.5, 0.1] {
             let lam = frac * ctx.lambda_max;
             let mut rule = DomeTest::new();

@@ -1,0 +1,477 @@
+//! **Dynamic gap-safe sphere screening** — Fercoq, Gramfort & Salmon
+//! (2015), "Mind the duality gap", instantiated as the safe half of a
+//! hybrid safe-strong rule (Definition 3.1) for all three problem
+//! families.
+//!
+//! Where the static rules (BEDPP, Dome, SEDPP) bound the dual optimum from
+//! per-fit precomputes — and die as λ shrinks — the gap-safe rule builds
+//! its ball from **any primal/dual pair**: given a point `β` with residual
+//! `r` and duality gap `G` at the λ being screened, the dual optimum lies
+//! in a ball of radius `√(2G/μ)` around the scaled residual
+//! ([`crate::solver::duality`]). The rule therefore
+//!
+//! * works at *every* λ (its power grows as the path warm start improves),
+//! * applies to any loss with a computable gap — including the logistic
+//!   family, which has **no** static safe rule, and the group elastic net,
+//!   where SEDPP falls back to the basic rule — and
+//! * is *dynamic* ([`SafeRule::dynamic`]): Algorithm 1 re-fires it
+//!   mid-optimization through
+//!   [`crate::solver::driver::Problem::rescreen`] and the families'
+//!   bounded-burst inner solves, where the shrinking gap makes it
+//!   strictly stronger than at screen time.
+//!
+//! The unit test is identical across families (see
+//! [`crate::solver::duality::DualBall`]):
+//!
+//! ```text
+//! discard u  ⇔  ‖z̃_u‖/s + ρ < αλ·w_u,      z̃_u = X_uᵀr/n − (1−α)λ·β_u,
+//! ```
+//!
+//! with `w_u = 1` for columns and `√W_g` for groups. One full `O(np)` scan
+//! per invocation (exactly SEDPP's cost class, Table 1) computes every
+//! `z̃_u` and the dual feasibility scaling `s` at once.
+
+use super::{group::GroupSafeContext, PrevSolution, SafeContext, SafeRule};
+use crate::linalg::{blocked, ops, DenseMatrix};
+use crate::solver::duality;
+use crate::solver::Penalty;
+
+/// Loss family a [`GapSafe`] ball is computed for.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GapLoss {
+    /// Quadratic loss — lasso / elastic net columns.
+    Quadratic,
+    /// Logistic loss — the ℓ1/elastic-net logistic path.
+    Logistic,
+}
+
+/// Per-invocation scalars of the pointwise gap-safe test.
+#[derive(Clone, Copy)]
+struct Scalars {
+    /// Dual feasibility scaling `s ≥ 1`.
+    s: f64,
+    /// Ball term `ρ = √(2·aug·γ·gap)`.
+    rho: f64,
+    /// Constraint level `αλ` (per-unit weight applied by the caller).
+    thresh: f64,
+}
+
+/// The column-unit gap-safe sphere rule (`SafeRule<SafeContext>`), shared
+/// by the Gaussian and logistic families via [`GapLoss`].
+///
+/// Contract: `prev.r` must be the residual of `prev.beta` (`y − Xβ` for
+/// [`GapLoss::Quadratic`], the score residual `y − p̂` for
+/// [`GapLoss::Logistic`]); `prev.beta = None` means `β = 0`. For the
+/// logistic loss, `ctx` must be built by [`logistic_context`] so `ctx.y`
+/// holds the 0/1 labels.
+#[derive(Debug)]
+pub struct GapSafe {
+    loss: GapLoss,
+    // |z̃_j| at the most recently prepared dual point.
+    zt: Vec<f64>,
+}
+
+impl GapSafe {
+    /// Gap-safe rule for the quadratic-loss column families.
+    pub fn quadratic() -> Self {
+        GapSafe { loss: GapLoss::Quadratic, zt: Vec::new() }
+    }
+
+    /// Gap-safe rule for the ℓ1/elastic-net logistic family.
+    pub fn logistic() -> Self {
+        GapSafe { loss: GapLoss::Logistic, zt: Vec::new() }
+    }
+
+    /// One full scan at `prev`'s iterate: fill `self.zt` with `|z̃_j|`,
+    /// build the dual ball, and return the test scalars. `None` ⇔ no valid
+    /// dual point exists at this iterate (the rule is powerless, never
+    /// unsafe).
+    fn prepare(
+        &mut self,
+        x: &DenseMatrix,
+        ctx: &SafeContext,
+        prev: &PrevSolution<'_>,
+        lam: f64,
+    ) -> Option<Scalars> {
+        let p = ctx.p;
+        self.zt.resize(p, 0.0);
+        blocked::scan_all(x, prev.r, &mut self.zt);
+        let ridge = ctx.penalty.l2_weight() * lam;
+        let mut pen_l1 = 0.0;
+        let mut beta_sq = 0.0;
+        if let Some(beta) = prev.beta {
+            assert_eq!(beta.len(), p, "gap-safe: beta length must equal p");
+            for (zj, &bj) in self.zt.iter_mut().zip(beta.iter()) {
+                *zj -= ridge * bj;
+                pen_l1 += bj.abs();
+                beta_sq += bj * bj;
+            }
+        }
+        let mut feas = 0.0f64;
+        for zj in self.zt.iter_mut() {
+            *zj = zj.abs();
+            feas = feas.max(*zj);
+        }
+        let ball = match self.loss {
+            GapLoss::Quadratic => duality::quadratic_ball(
+                &ctx.y, prev.r, beta_sq, pen_l1, feas, lam, ctx.penalty,
+            ),
+            GapLoss::Logistic => duality::logistic_ball(
+                &ctx.y, prev.r, beta_sq, pen_l1, feas, lam, ctx.penalty,
+            )?,
+        };
+        Some(Scalars { s: ball.scaling, rho: ball.rho, thresh: ctx.penalty.alpha() * lam })
+    }
+}
+
+impl SafeRule for GapSafe {
+    fn name(&self) -> &'static str {
+        match self.loss {
+            GapLoss::Quadratic => "GapSafe",
+            GapLoss::Logistic => "GapSafe-logistic",
+        }
+    }
+
+    fn screen(
+        &mut self,
+        x: &DenseMatrix,
+        ctx: &SafeContext,
+        prev: &PrevSolution<'_>,
+        lam_next: f64,
+        survive: &mut [bool],
+    ) -> usize {
+        let Some(sc) = self.prepare(x, ctx, prev, lam_next) else {
+            return 0;
+        };
+        let mut discarded = 0;
+        for (zj, sj) in self.zt.iter().zip(survive.iter_mut()) {
+            if *sj && zj / sc.s + sc.rho < sc.thresh {
+                *sj = false;
+                discarded += 1;
+            }
+        }
+        discarded
+    }
+
+    fn dead(&self) -> bool {
+        false // dynamic: the ball tightens again as the solver converges
+    }
+
+    fn dynamic(&self) -> bool {
+        true
+    }
+
+    /// Point-wise plan: the scan and the ball are computed here; the
+    /// returned predicate is a scalar comparison per column, evaluated by
+    /// the fused engine kernels with decisions bit-identical to
+    /// [`GapSafe::screen`].
+    fn plan<'s>(
+        &'s mut self,
+        x: &DenseMatrix,
+        ctx: &'s SafeContext,
+        prev: &PrevSolution<'_>,
+        lam_next: f64,
+        _survive: &mut [bool],
+        masked_discards: &mut usize,
+    ) -> Option<Box<dyn Fn(usize) -> bool + Sync + 's>> {
+        *masked_discards = 0;
+        match self.prepare(x, ctx, prev, lam_next) {
+            None => Some(Box::new(|_| true)), // powerless: keep everything
+            Some(sc) => {
+                let zt = &self.zt;
+                // exact complement of `screen`'s discard test
+                Some(Box::new(move |j: usize| zt[j] / sc.s + sc.rho >= sc.thresh))
+            }
+        }
+    }
+}
+
+/// The group-unit gap-safe sphere rule (`SafeRule<GroupSafeContext>`), for
+/// the group lasso and group elastic net. Same ball as [`GapSafe`], tested
+/// at group granularity: discard `g` ⇔ `‖z̃_g‖/s + ρ < αλ√W_g`.
+#[derive(Debug, Default)]
+pub struct GroupGapSafe {
+    // Column-level z̃ scratch for the O(np) scan.
+    cols: Vec<f64>,
+    // ‖z̃_g‖ per group at the most recently prepared dual point.
+    zt: Vec<f64>,
+}
+
+impl GroupGapSafe {
+    /// Create a fresh rule.
+    pub fn new() -> Self {
+        GroupGapSafe::default()
+    }
+
+    /// Group analogue of [`GapSafe::prepare`]: fill `self.zt` with
+    /// `‖z̃_g‖` and return the test scalars.
+    fn prepare(
+        &mut self,
+        x: &DenseMatrix,
+        ctx: &GroupSafeContext,
+        prev: &PrevSolution<'_>,
+        lam: f64,
+    ) -> Scalars {
+        let p = ctx.p;
+        let g_count = ctx.layout.num_groups();
+        self.cols.resize(p, 0.0);
+        blocked::scan_all(x, prev.r, &mut self.cols);
+        let ridge = ctx.penalty.l2_weight() * lam;
+        let mut pen_l1 = 0.0;
+        let mut beta_sq = 0.0;
+        if let Some(beta) = prev.beta {
+            assert_eq!(beta.len(), p, "group gap-safe: beta length must equal p");
+            for (cj, &bj) in self.cols.iter_mut().zip(beta.iter()) {
+                *cj -= ridge * bj;
+                beta_sq += bj * bj;
+            }
+            for g in 0..g_count {
+                let ss: f64 = ctx.layout.range(g).map(|j| beta[j] * beta[j]).sum();
+                pen_l1 += (ctx.layout.sizes[g] as f64).sqrt() * ss.sqrt();
+            }
+        }
+        self.zt.resize(g_count, 0.0);
+        let mut feas = 0.0f64;
+        for g in 0..g_count {
+            let ss: f64 = ctx.layout.range(g).map(|j| self.cols[j] * self.cols[j]).sum();
+            let zn = ss.sqrt();
+            self.zt[g] = zn;
+            feas = feas.max(zn / (ctx.layout.sizes[g] as f64).sqrt());
+        }
+        let ball =
+            duality::quadratic_ball(&ctx.y, prev.r, beta_sq, pen_l1, feas, lam, ctx.penalty);
+        Scalars { s: ball.scaling, rho: ball.rho, thresh: ctx.penalty.alpha() * lam }
+    }
+}
+
+impl SafeRule<GroupSafeContext> for GroupGapSafe {
+    fn name(&self) -> &'static str {
+        "gGapSafe"
+    }
+
+    fn screen(
+        &mut self,
+        x: &DenseMatrix,
+        ctx: &GroupSafeContext,
+        prev: &PrevSolution<'_>,
+        lam_next: f64,
+        survive: &mut [bool],
+    ) -> usize {
+        let sc = self.prepare(x, ctx, prev, lam_next);
+        let mut discarded = 0;
+        for (g, sg) in survive.iter_mut().enumerate() {
+            let w_sqrt = (ctx.layout.sizes[g] as f64).sqrt();
+            if *sg && self.zt[g] / sc.s + sc.rho < sc.thresh * w_sqrt {
+                *sg = false;
+                discarded += 1;
+            }
+        }
+        discarded
+    }
+
+    fn dead(&self) -> bool {
+        false
+    }
+
+    fn dynamic(&self) -> bool {
+        true
+    }
+
+    /// Point-wise plan for the fused group screen; decisions bit-identical
+    /// to [`GroupGapSafe::screen`] (same scalars, same comparison).
+    fn plan<'s>(
+        &'s mut self,
+        x: &DenseMatrix,
+        ctx: &'s GroupSafeContext,
+        prev: &PrevSolution<'_>,
+        lam_next: f64,
+        _survive: &mut [bool],
+        masked_discards: &mut usize,
+    ) -> Option<Box<dyn Fn(usize) -> bool + Sync + 's>> {
+        *masked_discards = 0;
+        let sc = self.prepare(x, ctx, prev, lam_next);
+        let zt = &self.zt;
+        let sizes = &ctx.layout.sizes;
+        // exact complement of `screen`'s discard test
+        Some(Box::new(move |g: usize| {
+            let w_sqrt = (sizes[g] as f64).sqrt();
+            zt[g] / sc.s + sc.rho >= sc.thresh * w_sqrt
+        }))
+    }
+}
+
+/// Build the minimal [`SafeContext`] the logistic gap-safe rule consumes:
+/// `y` holds the **0/1 labels** (not a centered response), and the
+/// `Xᵀy`/`Xᵀx*` precomputes of the static rules are left empty (the
+/// gap-safe rule performs its own scan). `lambda_max` is the logistic
+/// `‖Xᵀ(y − ȳ)‖∞/(nα)` computed by the caller.
+pub fn logistic_context(
+    labels: &[f64],
+    p: usize,
+    lambda_max: f64,
+    penalty: Penalty,
+) -> SafeContext {
+    SafeContext {
+        n: labels.len(),
+        p,
+        y: labels.to_vec(),
+        xty: Vec::new(),
+        xtx_star: Vec::new(),
+        y_sq: ops::nrm2_sq(labels),
+        lambda_max,
+        star: 0,
+        sign_star: 1.0,
+        penalty,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::generate_grouped;
+    use crate::data::DataSpec;
+
+    fn ctx_for(seed: u64, penalty: Penalty) -> (crate::data::Dataset, SafeContext) {
+        let ds = DataSpec::synthetic(60, 40, 4).generate(seed);
+        let ctx = SafeContext::build(&ds.x, &ds.y, penalty, false);
+        (ds, ctx)
+    }
+
+    /// At λ = λmax with β = 0 the gap is (numerically) zero, so the rule
+    /// discards essentially everything; just below λmax the ball term is
+    /// strictly positive and the argmax feature survives robustly.
+    #[test]
+    fn zero_gap_at_lambda_max_discards_all_but_argmax() {
+        let (ds, ctx) = ctx_for(1, Penalty::Lasso);
+        let prev = PrevSolution { lambda: ctx.lambda_max, r: &ds.y, beta: None };
+        let mut survive = vec![true; ctx.p];
+        let d = GapSafe::quadratic().screen(&ds.x, &ctx, &prev, ctx.lambda_max, &mut survive);
+        assert_eq!(d, ctx.p - survive.iter().filter(|&&s| s).count());
+        assert!(d >= ctx.p - 2, "near-degenerate designs aside, only the argmax stays");
+        // Just below λmax: |z*|/s equals λ exactly, so x* always survives.
+        let lam = 0.999 * ctx.lambda_max;
+        let mut s2 = vec![true; ctx.p];
+        let d2 = GapSafe::quadratic().screen(&ds.x, &ctx, &prev, lam, &mut s2);
+        assert!(s2[ctx.star], "the argmax feature must survive just below λmax");
+        assert!(d2 > 0, "gap-safe powerless just below λmax");
+    }
+
+    /// The rule keeps discarding deep in the path (where BEDPP is dead)
+    /// when given a converged previous solution.
+    #[test]
+    fn discards_deep_in_path_with_good_primal_point() {
+        use crate::screening::RuleKind;
+        use crate::solver::path::{fit_lasso_path, PathConfig};
+        let ds = DataSpec::gene_like(70, 150).generate(2);
+        let ctx = SafeContext::build(&ds.x, &ds.y, Penalty::Lasso, false);
+        let fit = fit_lasso_path(
+            &ds,
+            &PathConfig {
+                rule: RuleKind::BasicPcd,
+                n_lambda: 20,
+                tol: 1e-10,
+                ..PathConfig::default()
+            },
+        )
+        .unwrap();
+        let k = fit.lambdas.len() - 2; // deep in the path
+        let beta = fit.beta_dense(k);
+        let xb = ds.x.matvec(&beta);
+        let r: Vec<f64> = ds.y.iter().zip(&xb).map(|(y, f)| y - f).collect();
+        let prev = PrevSolution { lambda: fit.lambdas[k], r: &r, beta: Some(&beta) };
+        let mut rule = GapSafe::quadratic();
+        let mut survive = vec![true; ds.p()];
+        let d = rule.screen(&ds.x, &ctx, &prev, fit.lambdas[k + 1], &mut survive);
+        assert!(d > 0, "gap-safe should stay powerful deep in the path");
+        for &(j, _) in &fit.betas[k + 1] {
+            assert!(survive[j], "active feature {j} discarded");
+        }
+    }
+
+    /// The fused-pass predicate must agree with `screen` column by column.
+    #[test]
+    fn plan_predicate_matches_screen() {
+        let (ds, ctx) = ctx_for(3, Penalty::ElasticNet { alpha: 0.6 });
+        let mut beta = vec![0.0; ctx.p];
+        beta[1] = 0.2;
+        beta[5] = -0.1;
+        let xb = ds.x.matvec(&beta);
+        let r: Vec<f64> = ds.y.iter().zip(&xb).map(|(y, f)| y - f).collect();
+        for frac in [0.9, 0.6, 0.3, 0.1] {
+            let lam = frac * ctx.lambda_max;
+            let prev = PrevSolution { lambda: lam, r: &r, beta: Some(&beta) };
+            let mut mask = vec![true; ctx.p];
+            GapSafe::quadratic().screen(&ds.x, &ctx, &prev, lam, &mut mask);
+            let mut rule = GapSafe::quadratic();
+            let mut untouched = vec![true; ctx.p];
+            let mut d = 0usize;
+            let keep = rule
+                .plan(&ds.x, &ctx, &prev, lam, &mut untouched, &mut d)
+                .expect("gap-safe plan is always pointwise");
+            assert_eq!(d, 0);
+            assert!(untouched.iter().all(|&s| s), "plan must not touch the mask");
+            for j in 0..ctx.p {
+                assert_eq!(keep(j), mask[j], "feature {j} at {frac}·λmax");
+            }
+        }
+    }
+
+    /// Group rule: zero gap at λmax keeps only the argmax group, and the
+    /// plan predicate matches the mask screen.
+    #[test]
+    fn group_rule_lambda_max_and_plan_parity() {
+        let ds = generate_grouped(80, 12, 4, 3, 4);
+        let ctx = GroupSafeContext::build(&ds.x, &ds.y, &ds.layout, Penalty::Lasso);
+        let g = ctx.layout.num_groups();
+        let prev = PrevSolution { lambda: ctx.lambda_max, r: &ds.y, beta: None };
+        let mut survive = vec![true; g];
+        let d = GroupGapSafe::new().screen(&ds.x, &ctx, &prev, ctx.lambda_max, &mut survive);
+        assert!(d >= g - 2);
+        let mut s2 = vec![true; g];
+        GroupGapSafe::new().screen(&ds.x, &ctx, &prev, 0.999 * ctx.lambda_max, &mut s2);
+        assert!(s2[ctx.star], "the argmax group must survive just below λmax");
+        // plan parity at a lower λ with a synthetic previous solution
+        let mut beta = vec![0.0; ds.p()];
+        for j in ctx.layout.range(ctx.star) {
+            beta[j] = 0.1;
+        }
+        let xb = ds.x.matvec(&beta);
+        let r: Vec<f64> = ds.y.iter().zip(&xb).map(|(y, f)| y - f).collect();
+        let lam = 0.7 * ctx.lambda_max;
+        let prev = PrevSolution { lambda: lam, r: &r, beta: Some(&beta) };
+        let mut mask = vec![true; g];
+        GroupGapSafe::new().screen(&ds.x, &ctx, &prev, lam, &mut mask);
+        let mut rule2 = GroupGapSafe::new();
+        let mut untouched = vec![true; g];
+        let mut md = 0usize;
+        let keep = rule2.plan(&ds.x, &ctx, &prev, lam, &mut untouched, &mut md).unwrap();
+        assert_eq!(md, 0);
+        for gi in 0..g {
+            assert_eq!(keep(gi), mask[gi], "group {gi}");
+        }
+    }
+
+    /// Logistic rule at the null model: zero gap at λmax, argmax survives,
+    /// and the dynamic/dead markers are as advertised.
+    #[test]
+    fn logistic_rule_null_model() {
+        use crate::solver::logistic::synthetic_logistic;
+        let (x, y, _) = synthetic_logistic(100, 30, 4, 5);
+        let ybar = ops::mean(&y);
+        let resid: Vec<f64> = y.iter().map(|yi| yi - ybar).collect();
+        let z = blocked::scan_all_vec(&x, &resid);
+        let lam_max = ops::inf_norm(&z);
+        let ctx = logistic_context(&y, 30, lam_max, Penalty::Lasso);
+        let mut rule = GapSafe::logistic();
+        assert!(rule.dynamic());
+        assert!(!rule.dead());
+        let prev = PrevSolution { lambda: lam_max, r: &resid, beta: None };
+        let mut survive = vec![true; 30];
+        let d = rule.screen(&x, &ctx, &prev, lam_max, &mut survive);
+        assert!(d >= 28, "zero gap at λmax must discard all but the argmax set");
+        let mut s2 = vec![true; 30];
+        rule.screen(&x, &ctx, &prev, 0.999 * lam_max, &mut s2);
+        let (star, _) = ops::abs_argmax(&z);
+        assert!(s2[star], "the argmax feature must survive just below λmax");
+    }
+}

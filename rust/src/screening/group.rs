@@ -142,6 +142,7 @@ pub fn make_group_safe_rule(kind: RuleKind) -> Option<Box<dyn SafeRule<GroupSafe
     match kind {
         RuleKind::SsrBedpp => Some(Box::new(GroupBedpp::new())),
         RuleKind::Sedpp => Some(Box::new(GroupSedpp::new())),
+        RuleKind::SsrGapSafe => Some(Box::new(super::gapsafe::GroupGapSafe::new())),
         _ => None,
     }
 }
@@ -411,7 +412,7 @@ mod tests {
     #[test]
     fn sedpp_reduces_to_bedpp_at_k0() {
         let (ds, ctx) = setup(4);
-        let prev = PrevSolution { lambda: ctx.lambda_max, r: &ds.y };
+        let prev = PrevSolution { lambda: ctx.lambda_max, r: &ds.y, beta: None };
         let lam = 0.9 * ctx.lambda_max;
         let g = ctx.layout.num_groups();
         let mut s1 = vec![true; g];
@@ -559,7 +560,7 @@ mod tests {
         for v in r.iter_mut() {
             *v *= 0.9;
         }
-        let prev = PrevSolution { lambda: 0.9 * ctx.lambda_max, r: &r };
+        let prev = PrevSolution { lambda: 0.9 * ctx.lambda_max, r: &r, beta: None };
         let lam = 0.8 * ctx.lambda_max;
         let g = ctx.layout.num_groups();
         let mut s1 = vec![true; g];

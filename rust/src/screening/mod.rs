@@ -5,16 +5,25 @@
 //! * **Safe rules** ([`SafeRule`]) are guaranteed never to discard an active
 //!   feature. Implemented: [`bedpp::Bedpp`] (Thm 2.1 / Thm 4.1),
 //!   [`sedpp::Sedpp`] (Thm 2.2), [`dome::DomeTest`] (Xiang & Ramadge 2012),
-//!   and [`rehybrid::BedppThenFrozenSedpp`] (the §6 future-work rule).
+//!   [`rehybrid::BedppThenFrozenSedpp`] (the §6 future-work rule), and the
+//!   *dynamic* gap-safe sphere rules [`gapsafe::GapSafe`] /
+//!   [`gapsafe::GroupGapSafe`] (Fercoq, Gramfort & Salmon 2015), which
+//!   tighten as the solver converges and are the only safe rules available
+//!   to the logistic family.
 //! * **The sequential strong rule** ([`ssr`]) is a heuristic that requires
 //!   post-convergence KKT checking.
 //!
 //! A *hybrid safe-strong rule* (Definition 3.1) composes one of each; the
 //! composition itself ([`hybrid::hssr_discard_set`]) is exercised by
-//! Algorithm 1 in [`crate::solver::path`].
+//! Algorithm 1 in [`crate::solver::driver`]. Static rules fire once per λ
+//! and are switched off by the `Flag` shutoff; dynamic rules
+//! ([`SafeRule::dynamic`]) additionally re-fire mid-optimization through
+//! [`crate::solver::driver::Problem::rescreen`]. See
+//! `docs/ARCHITECTURE.md` for the full rule ↔ equation map.
 
 pub mod bedpp;
 pub mod dome;
+pub mod gapsafe;
 pub mod group;
 pub mod hybrid;
 pub mod rehybrid;
@@ -42,6 +51,10 @@ pub enum RuleKind {
     /// §6 extension: SSR + BEDPP re-hybridized with a frozen SEDPP once
     /// BEDPP goes dead — "SSR-BEDPP-SEDPP".
     SsrBedppSedpp,
+    /// Hybrid SSR + dynamic gap-safe sphere rule — "SSR-GapSafe". The only
+    /// HSSR instance available to every problem family (including the
+    /// logistic path, where the quadratic-loss safe rules do not apply).
+    SsrGapSafe,
 }
 
 impl RuleKind {
@@ -55,6 +68,7 @@ impl RuleKind {
             RuleKind::SsrBedpp => "SSR-BEDPP",
             RuleKind::SsrDome => "SSR-Dome",
             RuleKind::SsrBedppSedpp => "SSR-BEDPP-SEDPP",
+            RuleKind::SsrGapSafe => "SSR-GapSafe",
         }
     }
 
@@ -83,7 +97,11 @@ impl RuleKind {
     pub fn uses_ssr(&self) -> bool {
         matches!(
             self,
-            RuleKind::Ssr | RuleKind::SsrBedpp | RuleKind::SsrDome | RuleKind::SsrBedppSedpp
+            RuleKind::Ssr
+                | RuleKind::SsrBedpp
+                | RuleKind::SsrDome
+                | RuleKind::SsrBedppSedpp
+                | RuleKind::SsrGapSafe
         )
     }
 }
@@ -154,13 +172,18 @@ impl SafeContext {
     }
 }
 
-/// Information about the previously solved λ point, consumed by sequential
-/// safe rules.
+/// Information about the previously solved λ point (or, for dynamic rules,
+/// the *current iterate*), consumed by sequential and gap-safe rules.
 pub struct PrevSolution<'a> {
     /// λ of the previous solution (`λ_k`); equals `λ_max` before any solve.
     pub lambda: f64,
-    /// Residual `r(λ_k) = y − Xβ̂(λ_k)`.
+    /// Residual `r(λ_k) = y − Xβ̂(λ_k)` (for the logistic family: the score
+    /// residual `y − p̂`).
     pub r: &'a [f64],
+    /// Coefficients the residual was computed at; `None` means `β = 0`.
+    /// Sequential EDPP rules derive everything from `r`, but the gap-safe
+    /// rules need `β` itself to form the primal/dual pair.
+    pub beta: Option<&'a [f64]>,
 }
 
 /// A safe screening rule: guaranteed never to discard an active unit.
@@ -192,6 +215,16 @@ pub trait SafeRule<C = SafeContext>: Send {
     /// True once the rule can no longer discard anything at smaller λ
     /// (drives the `Flag` shutoff in Algorithm 1).
     fn dead(&self) -> bool;
+
+    /// Whether this rule is *dynamic*: its bound tightens with the current
+    /// iterate (gap-safe rules), so Algorithm 1 must not apply the `Flag`
+    /// shutoff on a zero-discard round and should re-fire the rule
+    /// mid-optimization via
+    /// [`crate::solver::driver::Problem::rescreen`]. Static rules (the
+    /// default) are one-shot per λ and shut off permanently once powerless.
+    fn dynamic(&self) -> bool {
+        false
+    }
 
     /// Plan screening at `lam_next` for the **fused** pass (Algorithm 1
     /// driven by `ScanEngine::fused_screen` or
@@ -231,6 +264,7 @@ pub fn make_safe_rule(kind: RuleKind) -> Option<Box<dyn SafeRule>> {
         RuleKind::SsrDome => Some(Box::new(dome::DomeTest::new())),
         RuleKind::Sedpp => Some(Box::new(sedpp::Sedpp::new())),
         RuleKind::SsrBedppSedpp => Some(Box::new(rehybrid::BedppThenFrozenSedpp::new())),
+        RuleKind::SsrGapSafe => Some(Box::new(gapsafe::GapSafe::quadratic())),
         _ => None,
     }
 }
@@ -274,5 +308,13 @@ mod tests {
         assert!(!RuleKind::Ssr.needs_star());
         assert!(RuleKind::Ssr.uses_ssr());
         assert!(!RuleKind::Sedpp.uses_ssr());
+        // The gap-safe hybrid needs no Xᵀx* precompute but does use SSR.
+        assert_eq!(RuleKind::SsrGapSafe.label(), "SSR-GapSafe");
+        assert!(!RuleKind::SsrGapSafe.needs_star());
+        assert!(RuleKind::SsrGapSafe.uses_ssr());
+        // Dynamic marker: gap-safe yes, the static rules no.
+        assert!(make_safe_rule(RuleKind::SsrGapSafe).unwrap().dynamic());
+        assert!(!make_safe_rule(RuleKind::SsrBedpp).unwrap().dynamic());
+        assert!(!make_safe_rule(RuleKind::Sedpp).unwrap().dynamic());
     }
 }

@@ -169,7 +169,7 @@ mod tests {
         let xb = ds.x.matvec(&beta);
         let r: Vec<f64> = ds.y.iter().zip(&xb).map(|(y, f)| y - f).collect();
         let lam_ref = 0.5 * ctx.lambda_max;
-        let prev = PrevSolution { lambda: lam_ref, r: &r };
+        let prev = PrevSolution { lambda: lam_ref, r: &r, beta: Some(&beta) };
         let frozen = Frozen::build(&ds.x, &ctx, &prev).unwrap();
         for frac in [0.45, 0.4, 0.3] {
             let lam = frac * ctx.lambda_max;
@@ -192,12 +192,12 @@ mod tests {
         let xb = ds.x.matvec(&beta);
         let r: Vec<f64> = ds.y.iter().zip(&xb).map(|(y, f)| y - f).collect();
         // High λ: BEDPP phase.
-        let prev_hi = PrevSolution { lambda: 0.95 * ctx.lambda_max, r: &ds.y };
+        let prev_hi = PrevSolution { lambda: 0.95 * ctx.lambda_max, r: &ds.y, beta: None };
         let mut s = vec![true; ctx.p];
         rule.screen(&ds.x, &ctx, &prev_hi, 0.9 * ctx.lambda_max, &mut s);
         assert!(!rule.is_frozen());
         // Low λ: BEDPP dies, freeze kicks in.
-        let prev_lo = PrevSolution { lambda: 0.2 * ctx.lambda_max, r: &r };
+        let prev_lo = PrevSolution { lambda: 0.2 * ctx.lambda_max, r: &r, beta: Some(&beta) };
         let mut s2 = vec![true; ctx.p];
         rule.screen(&ds.x, &ctx, &prev_lo, 0.18 * ctx.lambda_max, &mut s2);
         assert!(rule.is_frozen() || rule.dead());
@@ -208,7 +208,7 @@ mod tests {
         let (ds, ctx) = setup(3);
         let mut rule = BedppThenFrozenSedpp::new();
         // Residual = y (β̂ = 0) at tiny λ: BEDPP dead, freeze impossible.
-        let prev = PrevSolution { lambda: 0.05 * ctx.lambda_max, r: &ds.y };
+        let prev = PrevSolution { lambda: 0.05 * ctx.lambda_max, r: &ds.y, beta: None };
         let mut s = vec![true; ctx.p];
         let d = rule.screen(&ds.x, &ctx, &prev, 0.04 * ctx.lambda_max, &mut s);
         assert_eq!(d, 0);

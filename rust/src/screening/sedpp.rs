@@ -159,7 +159,7 @@ mod tests {
     fn reduces_to_bedpp_at_k0() {
         let (ds, ctx) = setup(1);
         let mut rule = Sedpp::new();
-        let prev = PrevSolution { lambda: ctx.lambda_max, r: &ds.y };
+        let prev = PrevSolution { lambda: ctx.lambda_max, r: &ds.y, beta: None };
         let lam = 0.9 * ctx.lambda_max;
         let mut s_sedpp = vec![true; ctx.p];
         rule.screen_with(&ds.x, &ctx, &prev, lam, &mut s_sedpp);
@@ -184,7 +184,7 @@ mod tests {
         let r: Vec<f64> = ds.y.iter().zip(&xb).map(|(y, f)| y - f).collect();
         let lam_k = 0.7 * ctx.lambda_max;
         let lam_next = 0.6 * ctx.lambda_max;
-        let prev = PrevSolution { lambda: lam_k, r: &r };
+        let prev = PrevSolution { lambda: lam_k, r: &r, beta: Some(&beta) };
         let mut survive = vec![true; ctx.p];
         let mut rule = Sedpp::new();
         rule.screen_with(&ds.x, &ctx, &prev, lam_next, &mut survive);
@@ -219,7 +219,7 @@ mod tests {
         let b = Bedpp::screen_at(&ctx, lam_next, &mut s_bedpp);
         let mut s_sedpp = vec![true; ctx.p];
         let mut rule = Sedpp::new();
-        let prev = PrevSolution { lambda: lam_k, r: &r };
+        let prev = PrevSolution { lambda: lam_k, r: &r, beta: Some(&beta) };
         let s = rule.screen_with(&ds.x, &ctx, &prev, lam_next, &mut s_sedpp);
         assert!(s >= b, "SEDPP ({s}) should not trail BEDPP ({b}) here");
     }

@@ -23,6 +23,18 @@
 //! problem and call [`drive`]. Every engine backend, sharding, or
 //! out-of-core improvement made here immediately covers all three
 //! families (biglasso's single C++ path loop, generalized).
+//!
+//! ## Dynamic (gap-safe) screening
+//!
+//! Static safe rules fire once per λ and are shut off by the `Flag` once
+//! powerless. *Dynamic* rules ([`crate::screening::gapsafe`]) tighten with
+//! the current iterate, so the driver treats them differently: the `Flag`
+//! shutoff is skipped, and after each inner solve the rule is **re-fired**
+//! at the current residual through [`Problem::rescreen`], shrinking the
+//! KKT check set. The families additionally re-fire the rule *inside*
+//! their inner solves every `rescreen_every` epochs (bounded CD/GD bursts,
+//! IRLS rounds for the logistic), pruning the working set mid-optimization
+//! — the defining usage of gap-safe sphere rules.
 
 use std::time::Instant;
 
@@ -65,6 +77,10 @@ pub struct LambdaMetrics {
     pub nonzero: usize,
     /// Objective value at the solution.
     pub objective: f64,
+    /// Units discarded by *dynamic* (gap-safe) re-screens after the per-λ
+    /// screening stage: mid-solve working-set prunes plus the pre-KKT
+    /// [`Problem::rescreen`] hook.
+    pub rescreen_discards: usize,
 }
 
 /// The problem-independent slice of a path configuration: λ-grid shape and
@@ -98,6 +114,10 @@ pub struct ScreenStage {
     /// Rule-reported shutoff applicable to the `Flag` logic (masked rules
     /// only; pointwise plans flag purely on the discard count).
     pub rule_dead: bool,
+    /// The attached safe rule is *dynamic* (gap-safe): its bound tightens
+    /// with the iterate, so the driver must not apply the `Flag` shutoff
+    /// on a zero-discard round and re-fires it via [`Problem::rescreen`].
+    pub dynamic: bool,
 }
 
 /// Result of a generic path fit. Family-specific wrappers (`PathFit`,
@@ -171,6 +191,27 @@ pub trait Problem {
         strong: &[usize],
         m: &mut LambdaMetrics,
     ) -> Result<()>;
+
+    /// Dynamic re-screen hook: re-fire a *dynamic* safe rule (gap-safe) at
+    /// the **current** residual/dual point — after [`Problem::solve`],
+    /// before each KKT pass — clearing `survive` for units that are now
+    /// certifiably inactive so the KKT pass skips them. Implementations
+    /// must not clear units in `in_strong` (their coefficients live in the
+    /// optimizer) **nor units still carrying a nonzero coefficient** (that
+    /// would orphan a stale warm-start β past the KKT backstop), and must
+    /// leave selections bit-identical between the fused and unfused
+    /// pipelines. Returns the number of units discarded.
+    ///
+    /// Default: no-op — correct for every static rule.
+    fn rescreen(
+        &mut self,
+        _lam: f64,
+        _survive: &mut [bool],
+        _in_strong: &[bool],
+        _m: &mut LambdaMetrics,
+    ) -> Result<usize> {
+        Ok(0)
+    }
 
     /// Post-convergence KKT pass over `survive \ strong` (lines 14–17):
     /// recompute correlations for the check set and return the violators
@@ -257,8 +298,15 @@ pub fn drive<P: Problem>(prob: &mut P, cfg: &DriverConfig) -> Result<DriverFit> 
         let mut survive = vec![true; units];
         let run_safe = !flag_off;
         let stage = prob.screen(lam, lam_prev, run_safe, cfg.fused, &mut survive, &mut m)?;
-        if run_safe && prob.has_safe_rule() && (stage.discarded == 0 || stage.rule_dead) {
+        let dynamic_rule = stage.dynamic;
+        if run_safe
+            && prob.has_safe_rule()
+            && !dynamic_rule
+            && (stage.discarded == 0 || stage.rule_dead)
+        {
             // |S| = p ⇒ Flag ← TRUE: switch the safe rule off permanently.
+            // Dynamic (gap-safe) rules are exempt: their power returns as
+            // the solver converges, so they are never shut off.
             flag_off = true;
             survive.iter_mut().for_each(|s| *s = true);
         }
@@ -268,11 +316,18 @@ pub fn drive<P: Problem>(prob: &mut P, cfg: &DriverConfig) -> Result<DriverFit> 
             in_strong[u] = true;
         }
 
-        // ---- solve + KKT loop (lines 11–18) ----
+        // ---- solve + dynamic re-screen + KKT loop (lines 11–18) ----
         loop {
             prob.solve(lam, k, &strong, &mut m)?;
             if !needs_kkt {
                 break; // exact / safe ⇒ nothing to verify
+            }
+            if dynamic_rule && run_safe {
+                // Re-fire the dynamic rule at the converged-on-H residual,
+                // where the gap (hence the ball) is at its tightest: units
+                // it discards now drop out of the KKT check set entirely.
+                let d = prob.rescreen(lam, &mut survive, &in_strong, &mut m)?;
+                m.rescreen_discards += d;
             }
             let viols = prob.kkt(lam, cfg.fused, &survive, &in_strong, &mut m)?;
             if viols.is_empty() {

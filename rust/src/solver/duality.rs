@@ -1,4 +1,5 @@
-//! Duality-gap certification for lasso solutions.
+//! Duality-gap certification for lasso-type solutions — and the
+//! **dual-ball construction** behind the dynamic gap-safe screening rules.
 //!
 //! The dual of problem (1) (paper eq. (6)–(7)) is
 //!
@@ -12,8 +13,23 @@
 //! the rigorous optimality certificate behind every safe rule (it bounds
 //! `‖θ̂ − θ‖`), and a useful end-user diagnostic for convergence
 //! tolerances.
+//!
+//! ## Gap-safe dual balls
+//!
+//! Because the dual objective is strongly concave, any feasible `θ` and its
+//! gap certify a **ball** containing the dual optimum:
+//! `‖θ̂ − θ‖² ≤ 2·gap/μ`, where `μ` is the dual's concavity modulus
+//! (Fercoq, Gramfort & Salmon 2015; Ndiaye et al. 2017). A unit `u` whose
+//! constraint `‖X̃_uᵀθ‖ ≤ w_u` holds strictly over the whole ball is
+//! certifiably inactive at the optimum — the screening test of
+//! [`crate::screening::gapsafe`]. [`quadratic_ball`] builds the ball for
+//! the quadratic-loss families (lasso / elastic net, columns and groups,
+//! via the augmented design `X̃ = [X; √(n(1−α)λ)·I]`), [`logistic_ball`]
+//! for the ℓ1/elastic-net logistic family (binary-entropy conjugate, with
+//! the intercept's `1ᵀθ = 0` dual constraint handled by centering).
 
 use crate::linalg::{blocked, ops, DenseMatrix};
+use crate::solver::Penalty;
 
 /// Primal objective, dual objective, and gap at a primal point.
 #[derive(Clone, Copy, Debug)]
@@ -73,6 +89,164 @@ pub fn certified(report: &GapReport, eps: f64) -> bool {
     report.gap <= eps * report.primal.abs().max(1.0)
 }
 
+// ---------------------------------------------------------------------------
+// Gap-safe dual balls (Fercoq, Gramfort & Salmon 2015; Ndiaye et al. 2017)
+// ---------------------------------------------------------------------------
+
+/// A dual-feasible point together with the certified ball that must contain
+/// the dual optimum `θ̂(λ)` — the machinery behind the dynamic gap-safe
+/// rules in [`crate::screening::gapsafe`].
+///
+/// Everything is expressed in the paper's scaling, where the dual
+/// constraint of screening unit `u` reads `‖X̃_uᵀθ‖ ≤ w_u` on the
+/// augmented design (`w_u = 1` for columns, `√W_g` for groups). The
+/// screening test induced by the ball is then *unit-free*:
+///
+/// ```text
+/// discard u  ⇔  ‖z̃_u‖ / scaling + rho < αλ·w_u,
+/// z̃_u = X_uᵀr/n − (1−α)λ·β_u.
+/// ```
+#[derive(Clone, Copy, Debug)]
+pub struct DualBall {
+    /// Primal objective at the reference point `β`.
+    pub primal: f64,
+    /// Dual objective at the scaled feasible point `θ`.
+    pub dual: f64,
+    /// `max(primal − dual, 0)` — the certified optimality gap.
+    pub gap: f64,
+    /// The feasibility scaling `s ≥ 1` applied to the raw dual candidate.
+    pub scaling: f64,
+    /// `√(2·aug·γ·(gap + slack))` — the ball term of the screening test
+    /// above, with `aug = 1 + (1−α)λ` (the augmented-column norm factor),
+    /// `γ` the loss smoothness (1 for the quadratic loss, 1/4 for the pure
+    /// ℓ1 logistic loss), and the tiny [`GAP_SLACK`] guard.
+    pub rho: f64,
+}
+
+/// Relative slack folded into [`DualBall::rho`]: the gap is a difference of
+/// two `O(‖y‖²/n)` quantities, so at a machine-precision-converged iterate
+/// the subtraction can round to (or below) zero while the true gap is
+/// positive — a zero radius could then discard an *active* boundary
+/// feature. Padding the gap by `GAP_SLACK·(1 + |primal|)` keeps the radius
+/// a guaranteed over-estimate at a completely negligible power cost
+/// (`rho ≳ 1e-6`-sized floor on `O(1)` problems).
+pub const GAP_SLACK: f64 = 1e-12;
+
+/// Build the gap-safe [`DualBall`] for the **quadratic-loss** families
+/// (lasso / elastic net, columns and groups) at `lam`, from an arbitrary
+/// primal point.
+///
+/// * `y`, `r` — response and the point's residual `r = y − Xβ`;
+/// * `beta_sq` — `‖β‖²`; `pen_l1` — the ℓ1-type penalty value (`‖β‖₁` for
+///   columns, `Σ_g √W_g·‖β_g‖` for groups);
+/// * `feas_inf` — `max_u ‖z̃_u‖ / w_u`, the dual infeasibility sup over
+///   all screening units (`z̃_u` as in [`DualBall`]).
+///
+/// The dual candidate is the scaled augmented residual `θ = r̃/(nαλ·s)`
+/// with `s = max(1, feas_inf/(αλ))`; the dual is `n(αλ)²`-strongly
+/// concave, which folds into [`DualBall::rho`].
+pub fn quadratic_ball(
+    y: &[f64],
+    r: &[f64],
+    beta_sq: f64,
+    pen_l1: f64,
+    feas_inf: f64,
+    lam: f64,
+    penalty: Penalty,
+) -> DualBall {
+    let n = y.len() as f64;
+    let lam_a = penalty.alpha() * lam;
+    let ridge = penalty.l2_weight() * lam;
+    let aug = 1.0 + ridge;
+    let s = (feas_inf / lam_a).max(1.0);
+    // D(θ) = (1/n)·Σᵢ(yᵢrᵢ/s − rᵢ²/(2s²)) − (1−α)λ‖β‖²/(2s²): the loss
+    // rows' conjugates plus the elastic-net pseudo-rows' (0 at α = 1).
+    let mut cross = 0.0;
+    for (yi, ri) in y.iter().zip(r) {
+        let (yi, ri) = (*yi, *ri);
+        cross += yi * ri / s - ri * ri / (2.0 * s * s);
+    }
+    let dual = cross / n - ridge * beta_sq / (2.0 * s * s);
+    let primal = ops::nrm2_sq(r) / (2.0 * n) + lam_a * pen_l1 + 0.5 * ridge * beta_sq;
+    let gap = (primal - dual).max(0.0);
+    let padded = gap + GAP_SLACK * (1.0 + primal.abs());
+    DualBall { primal, dual, gap, scaling: s, rho: (2.0 * aug * padded).sqrt() }
+}
+
+/// `v·ln v` with the `0·ln 0 = 0` convention (guards boundary roundoff).
+#[inline]
+fn xlogx(v: f64) -> f64 {
+    if v <= 0.0 {
+        0.0
+    } else {
+        v * v.ln()
+    }
+}
+
+/// Build the gap-safe [`DualBall`] for the ℓ1 / elastic-net **logistic**
+/// family at `lam` from an arbitrary primal point, or `None` when no valid
+/// dual point can be formed from it.
+///
+/// * `y` — 0/1 labels; `resid` — the score residual `y − p̂` at the point
+///   (columns of the design must be centered, as standardization (2)
+///   guarantees);
+/// * the remaining parameters are as in [`quadratic_ball`].
+///
+/// The unpenalized intercept adds the dual constraint `1ᵀθ = 0`, so the
+/// candidate is built from the *centered* residual `c = resid − mean`.
+/// The logistic conjugate is the binary entropy, finite only for
+/// `yᵢ − cᵢ/s ∈ [0, 1]`; when centering pushes a coordinate outside that
+/// domain (a near-perfectly-fit sample while the intercept score is not
+/// yet zero) no scaling can repair the sign, so the ball degenerates —
+/// `None`, never an unsafe bound.
+pub fn logistic_ball(
+    y: &[f64],
+    resid: &[f64],
+    beta_sq: f64,
+    pen_l1: f64,
+    feas_inf: f64,
+    lam: f64,
+    penalty: Penalty,
+) -> Option<DualBall> {
+    let n = y.len() as f64;
+    let lam_a = penalty.alpha() * lam;
+    let ridge = penalty.l2_weight() * lam;
+    let aug = 1.0 + ridge;
+    let rbar = ops::mean(resid);
+    let mut c_max = 0.0f64;
+    for (yi, ri) in y.iter().zip(resid) {
+        let c = *ri - rbar;
+        if (*yi == 1.0 && c < 0.0) || (*yi == 0.0 && c > 0.0) {
+            return None;
+        }
+        c_max = c_max.max(c.abs());
+    }
+    // s also covers the entropy domain width (|cᵢ|/s ≤ 1 coordinate-wise).
+    let s = (feas_inf / lam_a).max(1.0).max(c_max);
+    // Primal loss: cross-entropy, −ln(1 − |residᵢ|) per sample in both
+    // label branches. An exactly-saturated sample gives +∞ → rho = ∞ → no
+    // discards: the safe degenerate behavior.
+    let mut loss = 0.0;
+    for ri in resid {
+        loss -= (-ri.abs()).ln_1p();
+    }
+    let primal = loss / n + lam_a * pen_l1 + 0.5 * ridge * beta_sq;
+    // Dual: −(1/n)·Σᵢ[q·ln q + (1−q)·ln(1−q)] at q = yᵢ − cᵢ/s, minus the
+    // elastic-net pseudo-rows' quadratic conjugates.
+    let mut ent = 0.0;
+    for (yi, ri) in y.iter().zip(resid) {
+        let q = *yi - (*ri - rbar) / s;
+        ent += xlogx(q) + xlogx(1.0 - q);
+    }
+    let dual = -ent / n - ridge * beta_sq / (2.0 * s * s);
+    // Pure logistic rows are 1/4-smooth (σ′ ≤ 1/4) so the dual modulus
+    // gains a factor 4; quadratic enet pseudo-rows cap γ back at 1.
+    let gamma = if ridge == 0.0 { 0.25 } else { 1.0 };
+    let gap = (primal - dual).max(0.0);
+    let padded = gap + GAP_SLACK * (1.0 + primal.abs());
+    Some(DualBall { primal, dual, gap, scaling: s, rho: (2.0 * aug * gamma * padded).sqrt() })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -110,6 +284,82 @@ mod tests {
         // unless λ ≥ λmax, zero is suboptimal → positive gap
         assert!(rep.gap > 1e-4, "gap {}", rep.gap);
         assert!(rep.scaling > 1.0);
+    }
+
+    /// For the lasso at an arbitrary point, [`quadratic_ball`] must agree
+    /// with [`lasso_gap`] exactly (same dual point, same gap, same scaling).
+    #[test]
+    fn quadratic_ball_matches_lasso_gap() {
+        let ds = DataSpec::synthetic(50, 30, 4).generate(11);
+        let mut beta = vec![0.0; 30];
+        beta[2] = 0.4;
+        beta[9] = -0.15;
+        let xb = ds.x.matvec(&beta);
+        let r: Vec<f64> = ds.y.iter().zip(&xb).map(|(y, f)| y - f).collect();
+        let lam = 0.25;
+        let rep = lasso_gap(&ds.x, &ds.y, &beta, &r, lam);
+        let z = blocked::scan_all_vec(&ds.x, &r);
+        let feas = ops::inf_norm(&z);
+        let l1: f64 = beta.iter().map(|b| b.abs()).sum();
+        let sq: f64 = beta.iter().map(|b| b * b).sum();
+        let ball = quadratic_ball(&ds.y, &r, sq, l1, feas, lam, Penalty::Lasso);
+        assert!((ball.primal - rep.primal).abs() < 1e-12);
+        assert!((ball.dual - rep.dual).abs() < 1e-10);
+        assert!((ball.scaling - rep.scaling).abs() < 1e-12);
+        assert!((ball.rho - (2.0 * rep.gap.max(0.0)).sqrt()).abs() < 1e-10);
+    }
+
+    /// Weak duality for the elastic-net ball at random suboptimal points:
+    /// the (unclamped) primal−dual difference is never negative.
+    #[test]
+    fn enet_ball_weak_duality() {
+        use crate::prop::{check, PropConfig};
+        check(PropConfig { cases: 12, seed: 17 }, |rng, _| {
+            let ds = DataSpec::synthetic(40, 25, 3).generate(rng.next_u64());
+            let alpha = 0.4 + 0.5 * rng.uniform();
+            let pen = Penalty::ElasticNet { alpha };
+            let mut beta = vec![0.0; 25];
+            for _ in 0..4 {
+                beta[rng.below(25) as usize] = rng.normal() * 0.3;
+            }
+            let xb = ds.x.matvec(&beta);
+            let r: Vec<f64> = ds.y.iter().zip(&xb).map(|(y, f)| y - f).collect();
+            let lam = 0.05 + rng.uniform() * 0.4;
+            let ridge = pen.l2_weight() * lam;
+            let z = blocked::scan_all_vec(&ds.x, &r);
+            let feas = (0..25).fold(0.0f64, |m, j| m.max((z[j] - ridge * beta[j]).abs()));
+            let l1: f64 = beta.iter().map(|b| b.abs()).sum();
+            let sq: f64 = beta.iter().map(|b| b * b).sum();
+            let ball = quadratic_ball(&ds.y, &r, sq, l1, feas, lam, pen);
+            if ball.primal - ball.dual < -1e-9 {
+                return Err(format!("enet weak duality violated: {}", ball.primal - ball.dual));
+            }
+            Ok(())
+        });
+    }
+
+    /// The logistic ball at the null model (β = 0, b = logit(ȳ), λ = λmax)
+    /// has an exactly zero gap, and weak duality holds at perturbed points.
+    #[test]
+    fn logistic_ball_null_model_and_weak_duality() {
+        use crate::solver::logistic::synthetic_logistic;
+        let (x, y, _) = synthetic_logistic(80, 20, 3, 5);
+        let ybar = ops::mean(&y);
+        let resid: Vec<f64> = y.iter().map(|yi| yi - ybar).collect();
+        let z = blocked::scan_all_vec(&x, &resid);
+        let lam_max = ops::inf_norm(&z);
+        let ball =
+            logistic_ball(&y, &resid, 0.0, 0.0, lam_max, lam_max, Penalty::Lasso).unwrap();
+        assert!(ball.gap.abs() < 1e-10, "null-model gap {}", ball.gap);
+        assert!((ball.scaling - 1.0).abs() < 1e-12);
+        // Perturbed (suboptimal) dual points still satisfy weak duality.
+        for frac in [0.9, 0.6, 0.3] {
+            let lam = frac * lam_max;
+            let b = logistic_ball(&y, &resid, 0.0, 0.0, lam_max, lam, Penalty::Lasso)
+                .expect("null residual is always domain-feasible");
+            assert!(b.primal - b.dual > -1e-10, "λ={frac}·λmax: {}", b.primal - b.dual);
+            assert!(b.rho >= 0.0);
+        }
     }
 
     #[test]

@@ -57,6 +57,10 @@ pub struct GroupPathConfig {
     pub lambdas: Option<Vec<f64>>,
     /// Drive the fused group-norm/KKT pipeline (default; see module docs).
     pub fused: bool,
+    /// GD epochs between *dynamic* gap-safe re-fires inside the inner
+    /// solve (`--rule ssr-gapsafe`); `0` disables the mid-solve prunes.
+    /// Ignored by static rules.
+    pub rescreen_every: usize,
 }
 
 impl Default for GroupPathConfig {
@@ -71,6 +75,7 @@ impl Default for GroupPathConfig {
             max_iter: 100_000,
             lambdas: None,
             fused: fused_default(),
+            rescreen_every: 10,
         }
     }
 }
@@ -153,6 +158,7 @@ pub struct GroupLassoProblem<'a> {
     penalty: Penalty,
     tol: f64,
     max_iter: usize,
+    rescreen_every: usize,
     ctx: GroupSafeContext,
     safe_rule: Option<Box<dyn SafeRule<GroupSafeContext>>>,
     beta: Vec<f64>,
@@ -176,10 +182,12 @@ impl<'a> GroupLassoProblem<'a> {
             | RuleKind::ActiveCycling
             | RuleKind::Ssr
             | RuleKind::Sedpp
-            | RuleKind::SsrBedpp => {}
+            | RuleKind::SsrBedpp
+            | RuleKind::SsrGapSafe => {}
             other => {
                 return Err(HssrError::Config(format!(
-                    "group lasso supports Basic GD/AC/SSR/SEDPP/SSR-BEDPP, not {other:?}"
+                    "group lasso supports Basic GD/AC/SSR/SEDPP/SSR-BEDPP/SSR-GapSafe, \
+                     not {other:?}"
                 )))
             }
         }
@@ -202,6 +210,7 @@ impl<'a> GroupLassoProblem<'a> {
             penalty: cfg.penalty,
             tol: cfg.tol,
             max_iter: cfg.max_iter,
+            rescreen_every: cfg.rescreen_every,
             safe_rule: make_group_safe_rule(cfg.rule),
             beta: vec![0.0f64; ds.p()],
             r: ds.y.clone(),
@@ -209,6 +218,35 @@ impl<'a> GroupLassoProblem<'a> {
             znorm_valid: vec![true; g_count],
             ctx,
         })
+    }
+
+    /// Whether the attached safe rule is dynamic (gap-safe).
+    fn dynamic_rule(&self) -> bool {
+        self.safe_rule.as_ref().map(|r| r.dynamic()).unwrap_or(false)
+    }
+
+    /// Materialize safe discards of still-live groups (the group analogue
+    /// of `GaussianLasso::zero_discarded`): zero the block, return its
+    /// contribution to the residual, invalidate the lazy norms.
+    fn zero_discarded(&mut self, survive: &[bool]) {
+        let layout = self.layout;
+        let mut changed = false;
+        for g in 0..layout.num_groups() {
+            if survive[g] {
+                continue;
+            }
+            for j in layout.range(g) {
+                if self.beta[j] != 0.0 {
+                    let b = self.beta[j];
+                    ops::axpy(b, self.x.col(j), &mut self.r);
+                    self.beta[j] = 0.0;
+                    changed = true;
+                }
+            }
+        }
+        if changed {
+            self.znorm_valid.iter_mut().for_each(|v| *v = false);
+        }
     }
 }
 
@@ -245,7 +283,8 @@ impl Problem for GroupLassoProblem<'_> {
         let layout = self.layout;
         let g_count = layout.num_groups();
         let uses_ssr = self.rule.uses_ssr();
-        let mut stage = ScreenStage::default();
+        let mut stage =
+            ScreenStage { dynamic: self.dynamic_rule(), ..ScreenStage::default() };
 
         if fused && uses_ssr {
             // ---- fused group screening: one pass applies the per-group
@@ -256,7 +295,8 @@ impl Problem for GroupLassoProblem<'_> {
                 let keep = if !run_safe {
                     None
                 } else if let Some(rule) = self.safe_rule.as_mut() {
-                    let prev = PrevSolution { lambda: lam_prev, r: &self.r };
+                    let prev =
+                        PrevSolution { lambda: lam_prev, r: &self.r, beta: Some(&self.beta) };
                     rule.plan(self.x, &self.ctx, &prev, lam, survive, &mut masked_d)
                 } else {
                     None
@@ -281,13 +321,15 @@ impl Problem for GroupLassoProblem<'_> {
             m.safe_size = fout.safe_size;
             m.cols_scanned += fout.cols_scanned;
             stage.strong = fout.strong;
+            self.zero_discarded(survive);
             return Ok(stage);
         }
 
         // ---- unfused screening (group level) ----
         if run_safe {
             if let Some(rule) = self.safe_rule.as_mut() {
-                let prev = PrevSolution { lambda: lam_prev, r: &self.r };
+                let prev =
+                    PrevSolution { lambda: lam_prev, r: &self.r, beta: Some(&self.beta) };
                 stage.discarded = rule.screen(self.x, &self.ctx, &prev, lam, survive);
                 stage.rule_dead = rule.dead();
             }
@@ -327,6 +369,7 @@ impl Problem for GroupLassoProblem<'_> {
                 survive,
             ),
         };
+        self.zero_discarded(survive);
         Ok(stage)
     }
 
@@ -337,25 +380,128 @@ impl Problem for GroupLassoProblem<'_> {
         strong: &[usize],
         m: &mut LambdaMetrics,
     ) -> Result<()> {
-        let stats = gd::gd_solve(
-            self.x,
-            self.penalty,
-            lam,
-            strong,
-            &self.layout.starts,
-            &self.layout.sizes,
-            &mut self.beta,
-            &mut self.r,
-            self.tol,
-            self.max_iter,
-            lambda_index,
-        )?;
-        m.cd_cycles += stats.cycles;
-        m.coord_updates += stats.coord_updates;
-        if stats.cycles > 0 {
+        let dynamic = self.rescreen_every > 0 && self.dynamic_rule();
+        if !dynamic {
+            let stats = gd::gd_solve(
+                self.x,
+                self.penalty,
+                lam,
+                strong,
+                &self.layout.starts,
+                &self.layout.sizes,
+                &mut self.beta,
+                &mut self.r,
+                self.tol,
+                self.max_iter,
+                lambda_index,
+            )?;
+            m.cd_cycles += stats.cycles;
+            m.coord_updates += stats.coord_updates;
+            if stats.cycles > 0 {
+                self.znorm_valid.iter_mut().for_each(|v| *v = false);
+            }
+            return Ok(());
+        }
+        // Dynamic (gap-safe) solve: bounded GD bursts with gap-safe prunes
+        // of the working group set in between (see the lasso driver).
+        let layout = self.layout;
+        let mut work: Vec<usize> = strong.to_vec();
+        let mut cycles_used = 0usize;
+        let mut ran = false;
+        while !work.is_empty() {
+            let mut converged = false;
+            let mut last_delta = f64::INFINITY;
+            let burst = self.rescreen_every.min(self.max_iter - cycles_used);
+            for _ in 0..burst {
+                last_delta = gd::gd_cycle(
+                    self.x,
+                    self.penalty,
+                    lam,
+                    &work,
+                    &layout.starts,
+                    &layout.sizes,
+                    &mut self.beta,
+                    &mut self.r,
+                );
+                cycles_used += 1;
+                m.cd_cycles += 1;
+                m.coord_updates += work.iter().map(|&g| layout.sizes[g] as u64).sum::<u64>();
+                ran = true;
+                if last_delta < self.tol {
+                    converged = true;
+                    break;
+                }
+            }
+            if converged {
+                break;
+            }
+            if cycles_used >= self.max_iter {
+                return Err(HssrError::NoConvergence {
+                    lambda_index,
+                    max_iter: self.max_iter,
+                    last_delta,
+                });
+            }
+            let mut keep = vec![true; layout.num_groups()];
+            if let Some(rule) = self.safe_rule.as_mut() {
+                let prev = PrevSolution { lambda: lam, r: &self.r, beta: Some(&self.beta) };
+                rule.screen(self.x, &self.ctx, &prev, lam, &mut keep);
+            }
+            let before = work.len();
+            let mut kept = Vec::with_capacity(before);
+            for &g in &work {
+                if keep[g] {
+                    kept.push(g);
+                    continue;
+                }
+                for j in layout.range(g) {
+                    if self.beta[j] != 0.0 {
+                        let b = self.beta[j];
+                        ops::axpy(b, self.x.col(j), &mut self.r);
+                        self.beta[j] = 0.0;
+                    }
+                }
+            }
+            work = kept;
+            m.rescreen_discards += before - work.len();
+        }
+        if ran {
             self.znorm_valid.iter_mut().for_each(|v| *v = false);
         }
         Ok(())
+    }
+
+    fn rescreen(
+        &mut self,
+        lam: f64,
+        survive: &mut [bool],
+        in_strong: &[bool],
+        _m: &mut LambdaMetrics,
+    ) -> Result<usize> {
+        if !self.dynamic_rule() {
+            return Ok(0);
+        }
+        let mut mask = survive.to_vec();
+        if let Some(rule) = self.safe_rule.as_mut() {
+            let prev = PrevSolution { lambda: lam, r: &self.r, beta: Some(&self.beta) };
+            rule.screen(self.x, &self.ctx, &prev, lam, &mut mask);
+        }
+        let layout = self.layout;
+        let mut discarded = 0;
+        for g in 0..mask.len() {
+            // Strong groups stay; so does any group still carrying a
+            // warm-start coefficient (dropping it would orphan the stale
+            // block past the KKT backstop) — the KKT pass handles those.
+            if survive[g]
+                && !mask[g]
+                && !in_strong[g]
+                && layout.range(g).all(|j| self.beta[j] == 0.0)
+            {
+                survive[g] = false;
+                discarded += 1;
+            }
+        }
+        Ok(discarded)
     }
 
     fn kkt(
@@ -514,6 +660,7 @@ mod tests {
             RuleKind::Ssr,
             RuleKind::Sedpp,
             RuleKind::SsrBedpp,
+            RuleKind::SsrGapSafe,
         ] {
             let fit = fit_group_path(&ds, &small_cfg(rule)).unwrap();
             let d = max_beta_diff(&base, &fit);
@@ -531,6 +678,7 @@ mod tests {
             RuleKind::Ssr,
             RuleKind::Sedpp,
             RuleKind::SsrBedpp,
+            RuleKind::SsrGapSafe,
         ] {
             let fused = fit_group_path(
                 &ds,
@@ -587,6 +735,7 @@ mod tests {
             RuleKind::Ssr,
             RuleKind::Sedpp,
             RuleKind::SsrBedpp,
+            RuleKind::SsrGapSafe,
         ] {
             let fit = fit_group_path(&ds, &enet_cfg(rule, 0.7)).unwrap();
             let d = max_beta_diff(&base, &fit);
@@ -604,6 +753,7 @@ mod tests {
             RuleKind::Ssr,
             RuleKind::Sedpp,
             RuleKind::SsrBedpp,
+            RuleKind::SsrGapSafe,
         ] {
             let cfg = GroupPathConfig { fused: true, ..enet_cfg(rule, 0.55) };
             let fused = fit_group_path(&ds, &cfg).unwrap();

@@ -26,16 +26,20 @@
 //! The *sequential strong rule* carries over directly (Tibshirani et al.
 //! 2012 §7): discard `j` at `λ_{k+1}` if `|x_jᵀ(y − p̂(λ_k))/n| <
 //! α(2λ_{k+1} − λ_k)`, with post-convergence KKT checking against
-//! `|x_jᵀ(y − p̂)/n| ≤ αλ`. The quadratic-loss safe rules (BEDPP/Dome/
-//! SEDPP) do **not** port — their dual geometry is specific to the squared
-//! loss — so the supported strategies are Basic, AC, and SSR (exactly the
-//! state the paper leaves this extension in).
+//! `|x_jᵀ(y − p̂)/n| ≤ αλ`. The *static* quadratic-loss safe rules
+//! (BEDPP/Dome/SEDPP) do **not** port — their dual geometry is specific to
+//! the squared loss — but the **dynamic gap-safe sphere rule does**
+//! ([`crate::screening::gapsafe`]): the logistic dual is strongly concave,
+//! so a duality-gap ball around the scaled score residual certifies
+//! inactive features at any iterate. `RuleKind::SsrGapSafe` therefore
+//! makes this the repo's first safe-screened GLM: supported strategies are
+//! Basic, AC, SSR, and SSR-GapSafe.
 
 use crate::data::Dataset;
 use crate::error::{HssrError, Result};
 use crate::linalg::{ops, DenseMatrix};
 use crate::runtime::{native::NativeEngine, ScanEngine};
-use crate::screening::{ssr, RuleKind};
+use crate::screening::{gapsafe, ssr, PrevSolution, RuleKind, SafeContext, SafeRule};
 use crate::solver::driver::{drive, DriverConfig, Problem, ScreenStage};
 use crate::solver::lambda::GridKind;
 use crate::solver::path::{column_kkt, column_refresh, LambdaMetrics};
@@ -63,6 +67,10 @@ pub struct LogisticPathConfig {
     /// Drive the fused single-pass screening/KKT pipeline (default); the
     /// unfused scan-then-filter driver selects identical feature sets.
     pub fused: bool,
+    /// Re-fire a *dynamic* gap-safe rule between IRLS rounds (the logistic
+    /// family's inner "epochs"), pruning the working set mid-optimization;
+    /// `0` disables the mid-solve prunes. Ignored by static strategies.
+    pub rescreen_every: usize,
 }
 
 impl Default for LogisticPathConfig {
@@ -77,6 +85,7 @@ impl Default for LogisticPathConfig {
             max_irls: 50,
             max_iter: 10_000,
             fused: crate::solver::driver::fused_default(),
+            rescreen_every: 1,
         }
     }
 }
@@ -212,7 +221,11 @@ pub struct LogisticProblem<'a> {
     tol: f64,
     max_irls: usize,
     max_iter: usize,
+    rescreen_every: usize,
     lambda_max: f64,
+    // Minimal context (labels + penalty) for the logistic gap-safe rule.
+    ctx: SafeContext,
+    safe_rule: Option<Box<dyn SafeRule>>,
     b0: f64,
     beta: Vec<f64>,
     eta: Vec<f64>,
@@ -246,10 +259,14 @@ impl<'a> LogisticProblem<'a> {
         }
         if !matches!(
             cfg.rule,
-            RuleKind::BasicPcd | RuleKind::ActiveCycling | RuleKind::Ssr
+            RuleKind::BasicPcd
+                | RuleKind::ActiveCycling
+                | RuleKind::Ssr
+                | RuleKind::SsrGapSafe
         ) {
             return Err(HssrError::Config(format!(
-                "logistic lasso supports Basic/AC/SSR (quadratic-loss safe rules do not port), not {:?}",
+                "logistic lasso supports Basic/AC/SSR/SSR-GapSafe (static quadratic-loss \
+                 safe rules do not port; the dynamic gap-safe rule does), not {:?}",
                 cfg.rule
             )));
         }
@@ -267,6 +284,29 @@ impl<'a> LogisticProblem<'a> {
         let mut score0 = vec![0.0; p];
         engine.scan_all(x, &resid0, &mut score0)?;
         let lambda_max = ops::inf_norm(&score0) / cfg.penalty.alpha();
+        let safe_rule: Option<Box<dyn SafeRule>> = if cfg.rule == RuleKind::SsrGapSafe {
+            // The gap-safe ball assumes standardization (2): centered
+            // columns (the intercept's 1ᵀθ = 0 dual constraint) and
+            // ‖x_j‖² = n (the radius term). The other logistic strategies
+            // are scale-exact, so this is enforced only here — a safe rule
+            // has no KKT backstop to catch a violated precondition.
+            let ones = vec![1.0; n];
+            let mut means = vec![0.0; p];
+            engine.scan_all(x, &ones, &mut means)?; // x_jᵀ1/n
+            for (j, &mj) in means.iter().enumerate() {
+                let nrm = ops::nrm2_sq(x.col(j)) / n as f64;
+                if mj.abs() > 1e-6 || (nrm - 1.0).abs() > 1e-6 {
+                    return Err(HssrError::Config(format!(
+                        "--rule ssr-gapsafe requires a standardized design \
+                         (column {j}: mean {mj:.2e}, ‖x‖²/n = {nrm:.4}); \
+                         standardize X or use basic/ac/ssr"
+                    )));
+                }
+            }
+            Some(Box::new(gapsafe::GapSafe::logistic()))
+        } else {
+            None
+        };
         Ok(LogisticProblem {
             x,
             y,
@@ -276,7 +316,10 @@ impl<'a> LogisticProblem<'a> {
             tol: cfg.tol,
             max_irls: cfg.max_irls,
             max_iter: cfg.max_iter,
+            rescreen_every: cfg.rescreen_every,
             lambda_max,
+            ctx: gapsafe::logistic_context(y, p, lambda_max, cfg.penalty),
+            safe_rule,
             b0: (ybar / (1.0 - ybar)).ln(),
             beta: vec![0.0; p],
             eta: vec![(ybar / (1.0 - ybar)).ln(); n],
@@ -289,6 +332,33 @@ impl<'a> LogisticProblem<'a> {
             wr: vec![0.0; n],
             xwx: vec![0.0; p],
         })
+    }
+
+    /// Whether the attached safe rule is dynamic (gap-safe).
+    fn dynamic_rule(&self) -> bool {
+        self.safe_rule.as_ref().map(|r| r.dynamic()).unwrap_or(false)
+    }
+
+    /// Materialize safe discards of still-live coefficients (support can
+    /// shrink along the path): zero the coefficient, remove its
+    /// contribution from `η`, refresh the score residual, and invalidate
+    /// the lazy scores.
+    fn zero_discarded(&mut self, survive: &[bool]) {
+        let mut changed = false;
+        for j in 0..self.beta.len() {
+            if !survive[j] && self.beta[j] != 0.0 {
+                let b = self.beta[j];
+                ops::axpy(-b, self.x.col(j), &mut self.eta);
+                self.beta[j] = 0.0;
+                changed = true;
+            }
+        }
+        if changed {
+            for i in 0..self.eta.len() {
+                self.resid[i] = self.y[i] - sigmoid(self.eta[i]);
+            }
+            self.z_valid.iter_mut().for_each(|v| *v = false);
+        }
     }
 }
 
@@ -306,7 +376,9 @@ impl Problem for LogisticProblem<'_> {
     }
 
     fn has_safe_rule(&self) -> bool {
-        false // the quadratic-loss safe rules do not port to this dual
+        // Static quadratic-loss safe rules do not port to this dual; the
+        // dynamic gap-safe rule does (SsrGapSafe).
+        self.safe_rule.is_some()
     }
 
     fn needs_kkt(&self) -> bool {
@@ -317,44 +389,75 @@ impl Problem for LogisticProblem<'_> {
         &mut self,
         lam: f64,
         lam_prev: f64,
-        _run_safe: bool,
+        run_safe: bool,
         fused: bool,
         survive: &mut [bool],
         m: &mut LambdaMetrics,
     ) -> Result<ScreenStage> {
         let p = self.beta.len();
         let uses_ssr = self.rule.uses_ssr();
-        let mut stage = ScreenStage::default();
+        let mut stage =
+            ScreenStage { dynamic: self.dynamic_rule(), ..ScreenStage::default() };
 
         if fused && uses_ssr {
-            // One traversal refreshes stale scores and classifies against
-            // the GLM strong threshold α(2λ − λ_prev).
+            // One traversal applies the gap-safe predicate (when attached),
+            // refreshes stale scores over the survivors, and classifies
+            // against the GLM strong threshold α(2λ − λ_prev).
             let ssr_t = ssr::threshold(self.penalty, lam, lam_prev);
-            let fout = self.engine.fused_screen(
-                self.x,
-                &self.resid,
-                None,
-                ssr_t,
-                survive,
-                &mut self.z,
-                &mut self.z_valid,
-            )?;
+            let mut masked_d = 0usize;
+            let fout = {
+                let keep = if !run_safe {
+                    None
+                } else if let Some(rule) = self.safe_rule.as_mut() {
+                    let prev = PrevSolution {
+                        lambda: lam_prev,
+                        r: &self.resid,
+                        beta: Some(&self.beta),
+                    };
+                    rule.plan(self.x, &self.ctx, &prev, lam, survive, &mut masked_d)
+                } else {
+                    None
+                };
+                self.engine.fused_screen(
+                    self.x,
+                    &self.resid,
+                    keep.as_deref(),
+                    ssr_t,
+                    survive,
+                    &mut self.z,
+                    &mut self.z_valid,
+                )?
+            };
+            stage.discarded = masked_d + fout.discarded;
             m.safe_size = fout.safe_size;
             m.cols_scanned += fout.cols_scanned;
-            // glmnet-style ever-active inclusion: active features join H
-            // even when their score dips below the strong threshold.
+            // glmnet-style ever-active inclusion: surviving active features
+            // join H even when their score dips below the strong threshold.
             let mut keep = vec![false; p];
             for &j in &fout.strong {
                 keep[j] = true;
             }
-            stage.strong =
-                (0..p).filter(|&j| keep[j] || self.beta[j] != 0.0).collect();
+            stage.strong = (0..p)
+                .filter(|&j| keep[j] || (survive[j] && self.beta[j] != 0.0))
+                .collect();
+            self.zero_discarded(survive);
             return Ok(stage);
         }
 
-        m.safe_size = p;
+        if run_safe {
+            if let Some(rule) = self.safe_rule.as_mut() {
+                let prev = PrevSolution {
+                    lambda: lam_prev,
+                    r: &self.resid,
+                    beta: Some(&self.beta),
+                };
+                stage.discarded = rule.screen(self.x, &self.ctx, &prev, lam, survive);
+            }
+        }
+        m.safe_size = survive.iter().filter(|&&s| s).count();
         if uses_ssr {
-            let stale: Vec<usize> = (0..p).filter(|&j| !self.z_valid[j]).collect();
+            let stale: Vec<usize> =
+                (0..p).filter(|&j| survive[j] && !self.z_valid[j]).collect();
             column_refresh(
                 self.engine,
                 self.x,
@@ -374,10 +477,13 @@ impl Problem for LogisticProblem<'_> {
             _ => {
                 let t = ssr::threshold(self.penalty, lam, lam_prev);
                 (0..p)
-                    .filter(|&j| self.z[j].abs() >= t || self.beta[j] != 0.0)
+                    .filter(|&j| {
+                        survive[j] && (self.z[j].abs() >= t || self.beta[j] != 0.0)
+                    })
                     .collect()
             }
         };
+        self.zero_discarded(survive);
         Ok(stage)
     }
 
@@ -389,8 +495,12 @@ impl Problem for LogisticProblem<'_> {
         m: &mut LambdaMetrics,
     ) -> Result<()> {
         let n = self.x.nrows();
-        // ---- IRLS outer loop over the strong set ----
-        for _irls in 0..self.max_irls {
+        let dynamic = self.rescreen_every > 0 && self.dynamic_rule();
+        // The working set: fixed at `strong` for static strategies; pruned
+        // between IRLS rounds by the dynamic gap-safe rule.
+        let mut work: Vec<usize> = strong.to_vec();
+        // ---- IRLS outer loop over the working set ----
+        for irls in 0..self.max_irls {
             // weights + working residual at current (b0, beta)
             for i in 0..n {
                 let pi = sigmoid(self.eta[i]);
@@ -398,7 +508,7 @@ impl Problem for LogisticProblem<'_> {
                 self.w[i] = wi;
                 self.wr[i] = (self.y[i] - pi) / wi;
             }
-            for &j in strong {
+            for &j in &work {
                 let col = self.x.col(j);
                 let mut s = 0.0;
                 for i in 0..n {
@@ -423,14 +533,14 @@ impl Problem for LogisticProblem<'_> {
                     self.x,
                     self.penalty,
                     lam,
-                    strong,
+                    &work,
                     &self.w,
                     &self.xwx,
                     &mut self.beta,
                     &mut self.wr,
                 );
                 m.cd_cycles += 1;
-                m.coord_updates += strong.len() as u64;
+                m.coord_updates += work.len() as u64;
                 if inner_delta < self.tol {
                     break;
                 }
@@ -453,6 +563,35 @@ impl Problem for LogisticProblem<'_> {
             if outer_delta < 1e-8 {
                 break;
             }
+            // Dynamic re-fire between IRLS rounds (the logistic "epoch"):
+            // the gap is computed at the *true* logistic iterate (not the
+            // WLS surrogate), so discards are certified against this λ's
+            // logistic optimum. Pruned coefficients are zeroed and removed
+            // from η before the next round rebuilds the surrogate.
+            if dynamic && !work.is_empty() && (irls + 1) % self.rescreen_every == 0 {
+                for i in 0..n {
+                    self.resid[i] = self.y[i] - sigmoid(self.eta[i]);
+                }
+                let mut keep = vec![true; self.beta.len()];
+                if let Some(rule) = self.safe_rule.as_mut() {
+                    let prev =
+                        PrevSolution { lambda: lam, r: &self.resid, beta: Some(&self.beta) };
+                    rule.screen(self.x, &self.ctx, &prev, lam, &mut keep);
+                }
+                let before = work.len();
+                let mut kept = Vec::with_capacity(before);
+                for &j in &work {
+                    if keep[j] {
+                        kept.push(j);
+                    } else if self.beta[j] != 0.0 {
+                        let b = self.beta[j];
+                        ops::axpy(-b, self.x.col(j), &mut self.eta);
+                        self.beta[j] = 0.0;
+                    }
+                }
+                work = kept;
+                m.rescreen_discards += before - work.len();
+            }
         }
         // Scan residual for screening/KKT: y − p̂ at the updated iterate.
         for i in 0..n {
@@ -460,6 +599,34 @@ impl Problem for LogisticProblem<'_> {
         }
         self.z_valid.iter_mut().for_each(|v| *v = false);
         Ok(())
+    }
+
+    fn rescreen(
+        &mut self,
+        lam: f64,
+        survive: &mut [bool],
+        in_strong: &[bool],
+        _m: &mut LambdaMetrics,
+    ) -> Result<usize> {
+        if !self.dynamic_rule() {
+            return Ok(0);
+        }
+        let mut mask = survive.to_vec();
+        if let Some(rule) = self.safe_rule.as_mut() {
+            let prev = PrevSolution { lambda: lam, r: &self.resid, beta: Some(&self.beta) };
+            rule.screen(self.x, &self.ctx, &prev, lam, &mut mask);
+        }
+        let mut discarded = 0;
+        for j in 0..mask.len() {
+            // Strong units stay; so does any unit still carrying a
+            // warm-start coefficient (the KKT pass owns those) — see the
+            // Gaussian rescreen.
+            if survive[j] && !mask[j] && !in_strong[j] && self.beta[j] == 0.0 {
+                survive[j] = false;
+                discarded += 1;
+            }
+        }
+        Ok(discarded)
     }
 
     fn kkt(
@@ -533,6 +700,11 @@ impl Problem for LogisticProblem<'_> {
 /// Fit the ℓ1-logistic path with the default (native, pool-backed) scan
 /// engine. `y` must be 0/1 labels (the Dataset's centered-`y` convention
 /// does not apply; pass raw labels).
+///
+/// `RuleKind::SsrGapSafe` additionally requires a **standardized** design
+/// (centered columns with `‖x_j‖² = n`, condition (2) — what
+/// [`crate::data::standardize`] produces); this is validated at
+/// construction. The other strategies are scale-exact.
 pub fn fit_logistic_path(
     x: &DenseMatrix,
     y: &[f64],
@@ -654,7 +826,7 @@ mod tests {
     #[test]
     fn strategies_agree() {
         let (_, _, basic) = fit(100, 40, RuleKind::BasicPcd, 3);
-        for rule in [RuleKind::ActiveCycling, RuleKind::Ssr] {
+        for rule in [RuleKind::ActiveCycling, RuleKind::Ssr, RuleKind::SsrGapSafe] {
             let (_, _, other) = fit(100, 40, rule, 3);
             for k in 0..basic.lambdas.len() {
                 let a = basic.beta_dense(k);
@@ -673,7 +845,12 @@ mod tests {
     #[test]
     fn fused_logistic_bit_identical_to_unfused() {
         let (x, y, _) = synthetic_logistic(120, 60, 5, 9);
-        for rule in [RuleKind::BasicPcd, RuleKind::ActiveCycling, RuleKind::Ssr] {
+        for rule in [
+            RuleKind::BasicPcd,
+            RuleKind::ActiveCycling,
+            RuleKind::Ssr,
+            RuleKind::SsrGapSafe,
+        ] {
             let cfg = LogisticPathConfig {
                 rule,
                 n_lambda: 20,
@@ -697,6 +874,39 @@ mod tests {
                 assert_eq!(mf.violations, mu.violations, "{rule:?} viols at λ#{k}");
             }
         }
+    }
+
+    /// The first safe-screened GLM path: SSR-GapSafe actually screens
+    /// (|S| < p somewhere on the path), re-fires dynamically, and matches
+    /// the exact solution.
+    #[test]
+    fn gapsafe_logistic_screens_and_stays_exact() {
+        let (x, y, _) = synthetic_logistic(150, 80, 5, 8);
+        let cfg = LogisticPathConfig {
+            rule: RuleKind::SsrGapSafe,
+            n_lambda: 25,
+            tol: 1e-9,
+            ..Default::default()
+        };
+        let fit = fit_logistic_path(&x, &y, &cfg).unwrap();
+        let basic = fit_logistic_path(
+            &x,
+            &y,
+            &LogisticPathConfig { rule: RuleKind::BasicPcd, ..cfg.clone() },
+        )
+        .unwrap();
+        for k in 0..fit.lambdas.len() {
+            let a = fit.beta_dense(k);
+            let b = basic.beta_dense(k);
+            for j in 0..x.ncols() {
+                assert!((a[j] - b[j]).abs() < 1e-4, "λ#{k} β[{j}] deviates");
+            }
+            assert!((fit.intercepts[k] - basic.intercepts[k]).abs() < 1e-4);
+        }
+        assert!(
+            fit.metrics.iter().any(|m| m.safe_size < x.ncols()),
+            "gap-safe never screened a logistic λ step"
+        );
     }
 
     #[test]
@@ -732,6 +942,25 @@ mod tests {
         assert!(matches!(fit_logistic_path(&x, &y, &bad), Err(HssrError::Config(_))));
         let ones = vec![1.0; 50];
         assert!(matches!(fit_logistic_path(&x, &ones, &cfg), Err(HssrError::Config(_))));
+    }
+
+    /// The gap-safe strategy validates standardization (2) up front — the
+    /// one precondition the scale-exact strategies don't need.
+    #[test]
+    fn gapsafe_requires_standardized_design() {
+        let (x, y, _) = synthetic_logistic(60, 20, 3, 10);
+        // Break standardization: rescale one column.
+        let raw = DenseMatrix::from_fn(60, 20, |i, j| {
+            x.get(i, j) * if j == 3 { 2.0 } else { 1.0 }
+        });
+        let cfg = LogisticPathConfig { rule: RuleKind::SsrGapSafe, ..Default::default() };
+        assert!(matches!(
+            fit_logistic_path(&raw, &y, &cfg),
+            Err(HssrError::Config(_))
+        ));
+        // The standardized design passes the same validation.
+        let ok = fit_logistic_path(&x, &y, &LogisticPathConfig { n_lambda: 5, ..cfg });
+        assert!(ok.is_ok());
     }
 
     #[test]

@@ -11,6 +11,7 @@
 //! | `SsrBedpp`          | BEDPP set            | SSR ∩ S                 | `S \ H`        |
 //! | `SsrDome`           | Dome set             | SSR ∩ S                 | `S \ H`        |
 //! | `SsrBedppSedpp`     | BEDPP→frozen-SEDPP   | SSR ∩ S                 | `S \ H`        |
+//! | `SsrGapSafe`        | dynamic gap-safe set | SSR ∩ S                 | `S \ H`, re-screened |
 //!
 //! The λ-loop itself lives in the **generic driver**
 //! ([`crate::solver::driver::drive`]); this module contributes the
@@ -46,7 +47,7 @@
 //! test in [`crate::prop`]).
 
 use crate::data::Dataset;
-use crate::error::Result;
+use crate::error::{HssrError, Result};
 use crate::linalg::{ops, DenseMatrix};
 use crate::runtime::{native::NativeEngine, ScanEngine};
 use crate::screening::{make_safe_rule, ssr, PrevSolution, RuleKind, SafeContext, SafeRule};
@@ -78,6 +79,11 @@ pub struct PathConfig {
     /// unfused scan-then-filter driver is retained for benchmarking and
     /// equivalence testing; both select identical feature sets.
     pub fused: bool,
+    /// CD epochs between *dynamic* gap-safe re-fires inside the inner
+    /// solve (`--rule ssr-gapsafe`); `0` disables the mid-solve prunes
+    /// (the per-λ screen and the pre-KKT driver re-screen remain). Ignored
+    /// by static rules.
+    pub rescreen_every: usize,
 }
 
 impl Default for PathConfig {
@@ -92,6 +98,7 @@ impl Default for PathConfig {
             max_iter: 100_000,
             lambdas: None,
             fused: fused_default(),
+            rescreen_every: 10,
         }
     }
 }
@@ -239,6 +246,7 @@ pub struct GaussianLasso<'a> {
     rule: RuleKind,
     tol: f64,
     max_iter: usize,
+    rescreen_every: usize,
     ctx: SafeContext,
     safe_rule: Option<Box<dyn SafeRule>>,
     beta: Vec<f64>,
@@ -270,6 +278,7 @@ impl<'a> GaussianLasso<'a> {
             rule: cfg.rule,
             tol: cfg.tol,
             max_iter: cfg.max_iter,
+            rescreen_every: cfg.rescreen_every,
             safe_rule: make_safe_rule(cfg.rule),
             beta: vec![0.0; p],
             r: ds.y.clone(),
@@ -278,6 +287,32 @@ impl<'a> GaussianLasso<'a> {
             scratch: vec![0.0; p],
             ctx,
         })
+    }
+
+    /// Whether the attached safe rule is dynamic (gap-safe).
+    fn dynamic_rule(&self) -> bool {
+        self.safe_rule.as_ref().map(|r| r.dynamic()).unwrap_or(false)
+    }
+
+    /// Materialize safe discards of still-live coefficients: a dynamic rule
+    /// can discard a feature whose previous-λ coefficient is nonzero (the
+    /// support shrinks along the path). Zero it, return its contribution to
+    /// the residual, and invalidate the lazy correlations (the residual
+    /// moved). Runs identically in the fused and unfused pipelines, after
+    /// the strong set is classified.
+    fn zero_discarded(&mut self, survive: &[bool]) {
+        let mut changed = false;
+        for j in 0..self.beta.len() {
+            if !survive[j] && self.beta[j] != 0.0 {
+                let b = self.beta[j];
+                ops::axpy(b, self.x.col(j), &mut self.r);
+                self.beta[j] = 0.0;
+                changed = true;
+            }
+        }
+        if changed {
+            self.z_valid.iter_mut().for_each(|v| *v = false);
+        }
     }
 }
 
@@ -314,7 +349,8 @@ impl Problem for GaussianLasso<'_> {
     ) -> Result<ScreenStage> {
         let p = self.ctx.p;
         let uses_ssr = self.rule.uses_ssr();
-        let mut stage = ScreenStage::default();
+        let mut stage =
+            ScreenStage { dynamic: self.dynamic_rule(), ..ScreenStage::default() };
 
         if fused && uses_ssr {
             // ---- fused screening (lines 2–10 in one traversal) ----
@@ -324,7 +360,8 @@ impl Problem for GaussianLasso<'_> {
                 let keep = if !run_safe {
                     None
                 } else if let Some(rule) = self.safe_rule.as_mut() {
-                    let prev = PrevSolution { lambda: lam_prev, r: &self.r };
+                    let prev =
+                        PrevSolution { lambda: lam_prev, r: &self.r, beta: Some(&self.beta) };
                     rule.plan(self.x, &self.ctx, &prev, lam, survive, &mut masked_d)
                 } else {
                     None
@@ -350,13 +387,15 @@ impl Problem for GaussianLasso<'_> {
             m.safe_size = fout.safe_size;
             m.cols_scanned += fout.cols_scanned;
             stage.strong = fout.strong;
+            self.zero_discarded(survive);
             return Ok(stage);
         }
 
         // ---- unfused screening (Algorithm 1 lines 2–9) ----
         if run_safe {
             if let Some(rule) = self.safe_rule.as_mut() {
-                let prev = PrevSolution { lambda: lam_prev, r: &self.r };
+                let prev =
+                    PrevSolution { lambda: lam_prev, r: &self.r, beta: Some(&self.beta) };
                 stage.discarded = rule.screen(self.x, &self.ctx, &prev, lam, survive);
                 stage.rule_dead = rule.dead();
             }
@@ -388,6 +427,7 @@ impl Problem for GaussianLasso<'_> {
             RuleKind::Sedpp => (0..p).filter(|&j| survive[j]).collect(),
             _ => ssr::strong_set(self.penalty, lam, lam_prev, &self.z, survive),
         };
+        self.zero_discarded(survive);
         Ok(stage)
     }
 
@@ -398,23 +438,113 @@ impl Problem for GaussianLasso<'_> {
         strong: &[usize],
         m: &mut LambdaMetrics,
     ) -> Result<()> {
-        let stats = cd::cd_solve(
-            self.x,
-            self.penalty,
-            lam,
-            strong,
-            &mut self.beta,
-            &mut self.r,
-            self.tol,
-            self.max_iter,
-            lambda_index,
-        )?;
-        m.cd_cycles += stats.cycles;
-        m.coord_updates += stats.coord_updates;
-        if stats.cycles > 0 {
+        let dynamic = self.rescreen_every > 0 && self.dynamic_rule();
+        if !dynamic {
+            let stats = cd::cd_solve(
+                self.x,
+                self.penalty,
+                lam,
+                strong,
+                &mut self.beta,
+                &mut self.r,
+                self.tol,
+                self.max_iter,
+                lambda_index,
+            )?;
+            m.cd_cycles += stats.cycles;
+            m.coord_updates += stats.coord_updates;
+            if stats.cycles > 0 {
+                self.z_valid.iter_mut().for_each(|v| *v = false);
+            }
+            return Ok(());
+        }
+        // Dynamic (gap-safe) solve: run CD in bounded bursts, re-firing the
+        // rule between bursts at the *current* residual so certified-inactive
+        // features leave the working set mid-optimization. Their coefficients
+        // are zeroed and returned to the residual first — safe, because the
+        // ball certificate is against this λ's optimum.
+        let mut work: Vec<usize> = strong.to_vec();
+        let mut cycles_used = 0usize;
+        let mut ran = false;
+        while !work.is_empty() {
+            let mut converged = false;
+            let mut last_delta = f64::INFINITY;
+            let burst = self.rescreen_every.min(self.max_iter - cycles_used);
+            for _ in 0..burst {
+                last_delta =
+                    cd::cd_cycle(self.x, self.penalty, lam, &work, &mut self.beta, &mut self.r);
+                cycles_used += 1;
+                m.cd_cycles += 1;
+                m.coord_updates += work.len() as u64;
+                ran = true;
+                if last_delta < self.tol {
+                    converged = true;
+                    break;
+                }
+            }
+            if converged {
+                break;
+            }
+            if cycles_used >= self.max_iter {
+                return Err(HssrError::NoConvergence {
+                    lambda_index,
+                    max_iter: self.max_iter,
+                    last_delta,
+                });
+            }
+            // Gap-safe prune of the working set at the current iterate.
+            let mut keep = vec![true; self.ctx.p];
+            if let Some(rule) = self.safe_rule.as_mut() {
+                let prev = PrevSolution { lambda: lam, r: &self.r, beta: Some(&self.beta) };
+                rule.screen(self.x, &self.ctx, &prev, lam, &mut keep);
+            }
+            let before = work.len();
+            let mut kept = Vec::with_capacity(before);
+            for &j in &work {
+                if keep[j] {
+                    kept.push(j);
+                } else if self.beta[j] != 0.0 {
+                    let b = self.beta[j];
+                    ops::axpy(b, self.x.col(j), &mut self.r);
+                    self.beta[j] = 0.0;
+                }
+            }
+            work = kept;
+            m.rescreen_discards += before - work.len();
+        }
+        if ran {
             self.z_valid.iter_mut().for_each(|v| *v = false);
         }
         Ok(())
+    }
+
+    fn rescreen(
+        &mut self,
+        lam: f64,
+        survive: &mut [bool],
+        in_strong: &[bool],
+        _m: &mut LambdaMetrics,
+    ) -> Result<usize> {
+        if !self.dynamic_rule() {
+            return Ok(0);
+        }
+        let mut mask = survive.to_vec();
+        if let Some(rule) = self.safe_rule.as_mut() {
+            let prev = PrevSolution { lambda: lam, r: &self.r, beta: Some(&self.beta) };
+            rule.screen(self.x, &self.ctx, &prev, lam, &mut mask);
+        }
+        let mut discarded = 0;
+        for j in 0..mask.len() {
+            // Strong units stay (the optimizer owns them); so does any unit
+            // still carrying a warm-start coefficient — dropping it here
+            // would orphan the stale β_j past the KKT backstop. Such units
+            // are simply left to the KKT pass, which re-adds them if needed.
+            if survive[j] && !mask[j] && !in_strong[j] && self.beta[j] == 0.0 {
+                survive[j] = false;
+                discarded += 1;
+            }
+        }
+        Ok(discarded)
     }
 
     fn kkt(
@@ -545,6 +675,7 @@ mod tests {
             RuleKind::SsrBedpp,
             RuleKind::SsrDome,
             RuleKind::SsrBedppSedpp,
+            RuleKind::SsrGapSafe,
         ] {
             let fit = fit_lasso_path(&ds, &small_cfg(rule)).unwrap();
             let d = max_beta_diff(&baseline, &fit);
@@ -567,6 +698,7 @@ mod tests {
             RuleKind::SsrBedpp,
             RuleKind::SsrDome,
             RuleKind::SsrBedppSedpp,
+            RuleKind::SsrGapSafe,
         ] {
             let fused = fit_lasso_path(
                 &ds,
@@ -667,10 +799,37 @@ mod tests {
             ..PathConfig::default()
         };
         let base = fit_lasso_path(&ds, &mk(RuleKind::BasicPcd)).unwrap();
-        for rule in [RuleKind::Ssr, RuleKind::SsrBedpp, RuleKind::Sedpp] {
+        for rule in
+            [RuleKind::Ssr, RuleKind::SsrBedpp, RuleKind::Sedpp, RuleKind::SsrGapSafe]
+        {
             let fit = fit_lasso_path(&ds, &mk(rule)).unwrap();
             assert!(max_beta_diff(&base, &fit) < 1e-5, "{rule:?} enet mismatch");
         }
+    }
+
+    /// The dynamic rule's extra machinery (mid-solve prunes + pre-KKT
+    /// re-screens) must leave the KKT system satisfied and report its
+    /// discards in the metrics.
+    #[test]
+    fn gapsafe_path_dynamic_rescreens_and_stays_exact() {
+        let ds = DataSpec::gene_like(90, 250).generate(9);
+        let fit = fit_lasso_path(&ds, &small_cfg(RuleKind::SsrGapSafe)).unwrap();
+        let base = fit_lasso_path(&ds, &small_cfg(RuleKind::BasicPcd)).unwrap();
+        assert!(max_beta_diff(&base, &fit) < 1e-5, "gap-safe path deviates");
+        // Deep in the path the dynamic rule still screens (safe_size < p),
+        // where the static BEDPP rule has long been flag-shut.
+        let last = fit.metrics.last().unwrap();
+        assert!(last.safe_size < ds.p(), "gap-safe dead at λmin: |S| = {}", last.safe_size);
+        let rescreens: usize = fit.metrics.iter().map(|m| m.rescreen_discards).sum();
+        assert!(rescreens > 0, "dynamic re-screens never fired");
+        // And the mid-solve prune knob can be turned off without changing
+        // the solution.
+        let off = fit_lasso_path(
+            &ds,
+            &PathConfig { rescreen_every: 0, ..small_cfg(RuleKind::SsrGapSafe) },
+        )
+        .unwrap();
+        assert!(max_beta_diff(&fit, &off) < 1e-5, "rescreen_every=0 deviates");
     }
 
     #[test]

@@ -30,7 +30,7 @@ fn screening_power_curves_complete() {
     let ds = DataSpec::gene_like(60, 120).generate(2);
     let curves =
         screening_power(&ds, &PathConfig { n_lambda: 15, ..PathConfig::default() }).unwrap();
-    assert_eq!(curves.len(), 5);
+    assert_eq!(curves.len(), 6); // Dome, BEDPP, SEDPP, SSR, SSR-BEDPP, SSR-GapSafe
     for c in &curves {
         assert_eq!(c.lambda_frac.len(), 15);
         assert!(c.discarded_frac.iter().all(|&d| (0.0..=1.0).contains(&d)), "{}", c.rule);

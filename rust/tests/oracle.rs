@@ -29,7 +29,7 @@ use hssr::solver::Penalty;
 
 const ORACLE_TOL: f64 = 1e-8;
 
-const COLUMN_RULES: [RuleKind; 7] = [
+const COLUMN_RULES: [RuleKind; 8] = [
     RuleKind::BasicPcd,
     RuleKind::ActiveCycling,
     RuleKind::Ssr,
@@ -37,14 +37,16 @@ const COLUMN_RULES: [RuleKind; 7] = [
     RuleKind::SsrBedpp,
     RuleKind::SsrDome,
     RuleKind::SsrBedppSedpp,
+    RuleKind::SsrGapSafe,
 ];
 
-const GROUP_RULES: [RuleKind; 5] = [
+const GROUP_RULES: [RuleKind; 6] = [
     RuleKind::BasicPcd,
     RuleKind::ActiveCycling,
     RuleKind::Ssr,
     RuleKind::Sedpp,
     RuleKind::SsrBedpp,
+    RuleKind::SsrGapSafe,
 ];
 
 /// Entry `(i, k)` of the 8×8 Sylvester–Hadamard matrix.
@@ -294,6 +296,100 @@ fn group_oracle_closed_form_all_rules_both_engines() {
                 }
             });
         }
+    }
+}
+
+/// Duality-gap oracle on the Hadamard design: at the closed-form solution
+/// `β_j(λ) = S(a_j, αλ)/(1+(1−α)λ)` the gap of [`quadratic_ball`] must be
+/// (numerically) zero, and at deliberately suboptimal points it must be
+/// strictly positive — for the lasso, the elastic net, and the grouped
+/// form of the same design.
+#[test]
+fn duality_gap_matches_hadamard_closed_form() {
+    use hssr::solver::duality::quadratic_ball;
+    let a = [0.9, -0.55, 0.3, 0.1];
+    let ds = hadamard_dataset(&a);
+    let n = ds.n() as f64;
+    for penalty in [Penalty::Lasso, Penalty::ElasticNet { alpha: 0.5 }] {
+        let alpha = penalty.alpha();
+        let ridge_of = |lam: f64| (1.0 - alpha) * lam;
+        let lam_max = a.iter().fold(0.0f64, |m, v| m.max(v.abs())) / alpha;
+        for frac in [1.0, 0.75, 0.5, 0.2] {
+            let lam = frac * lam_max;
+            // closed-form solution and its residual
+            let beta: Vec<f64> = a
+                .iter()
+                .map(|&aj| soft(aj, alpha * lam) / (1.0 + ridge_of(lam)))
+                .collect();
+            let xb = ds.x.matvec(&beta);
+            let r: Vec<f64> = ds.y.iter().zip(&xb).map(|(y, f)| y - f).collect();
+            let l1: f64 = beta.iter().map(|b| b.abs()).sum();
+            let sq: f64 = beta.iter().map(|b| b * b).sum();
+            // z̃_j = x_jᵀr/n − (1−α)λβ_j; on this orthonormal design
+            // x_jᵀr/n = a_j − β_j·(1 + ridge·…) decouples exactly.
+            let feas = (0..4).fold(0.0f64, |m, j| {
+                let z = ops::dot(ds.x.col(j), &r) / n;
+                m.max((z - ridge_of(lam) * beta[j]).abs())
+            });
+            let ball = quadratic_ball(&ds.y, &r, sq, l1, feas, lam, penalty);
+            assert!(
+                ball.gap <= 1e-12,
+                "{penalty:?} frac={frac}: gap {} at the closed-form optimum",
+                ball.gap
+            );
+            assert!((ball.scaling - 1.0).abs() < 1e-9, "{penalty:?}: scaling");
+            // a suboptimal point (β = 0 at λ < λmax) has a positive gap
+            if frac < 1.0 {
+                let zball =
+                    quadratic_ball(&ds.y, &ds.y, 0.0, 0.0, alpha * lam_max, lam, penalty);
+                assert!(zball.gap > 1e-6, "{penalty:?} frac={frac}: zero-β gap");
+                assert!(zball.rho > 0.0);
+            }
+        }
+    }
+
+    // Grouped form: the multivariate soft threshold is the optimum.
+    let ag = [0.8, 0.6, 0.3, -0.4, 0.1, 0.05];
+    let gds = hadamard_grouped(&ag);
+    let w_sqrt = 2.0f64.sqrt();
+    let znorms: Vec<f64> = (0..3)
+        .map(|g| (ag[2 * g] * ag[2 * g] + ag[2 * g + 1] * ag[2 * g + 1]).sqrt())
+        .collect();
+    let lam_max = znorms.iter().fold(0.0f64, |m, &v| m.max(v)) / w_sqrt;
+    for frac in [0.8, 0.4] {
+        let lam = frac * lam_max;
+        let mut beta = vec![0.0; 6];
+        for g in 0..3 {
+            let thresh = lam * w_sqrt;
+            let scale =
+                if znorms[g] > thresh { 1.0 - thresh / znorms[g] } else { 0.0 };
+            beta[2 * g] = scale * ag[2 * g];
+            beta[2 * g + 1] = scale * ag[2 * g + 1];
+        }
+        let xb = gds.x.matvec(&beta);
+        let r: Vec<f64> = gds.y.iter().zip(&xb).map(|(y, f)| y - f).collect();
+        let nf = gds.n() as f64;
+        let pen: f64 = (0..3)
+            .map(|g| {
+                w_sqrt
+                    * (beta[2 * g] * beta[2 * g] + beta[2 * g + 1] * beta[2 * g + 1]).sqrt()
+            })
+            .sum();
+        let feas = (0..3).fold(0.0f64, |m, g| {
+            let z0 = ops::dot(gds.x.col(2 * g), &r) / nf;
+            let z1 = ops::dot(gds.x.col(2 * g + 1), &r) / nf;
+            m.max((z0 * z0 + z1 * z1).sqrt() / w_sqrt)
+        });
+        let ball = hssr::solver::duality::quadratic_ball(
+            &gds.y,
+            &r,
+            beta.iter().map(|b| b * b).sum(),
+            pen,
+            feas,
+            lam,
+            Penalty::Lasso,
+        );
+        assert!(ball.gap <= 1e-12, "group frac={frac}: gap {}", ball.gap);
     }
 }
 

@@ -1,6 +1,7 @@
 //! Screening-power regression against committed goldens (paper Fig. 1/4):
-//! on fixed seeded workloads, the per-λ BEDPP rejection counts and the
-//! path's safe/strong set sizes must match
+//! on fixed seeded workloads, the per-λ BEDPP rejection counts, the
+//! dynamic gap-safe rejection counts (screen-time |S| and mid-λ re-fires),
+//! and the path's safe/strong set sizes must match
 //! `tests/goldens/screening_power.json` **exactly**. Counts are integers
 //! produced by deterministic arithmetic, so any drift means a screening
 //! bound silently loosened (fewer rejections) or became unsafe (more).
@@ -59,6 +60,19 @@ fn compute_golden() -> String {
     let safe: Vec<usize> = fit.metrics.iter().map(|m| m.safe_size).collect();
     let strong: Vec<usize> = fit.metrics.iter().map(|m| m.strong_size).collect();
 
+    // ---- gap-safe lasso workload: same data/grid, SSR-GapSafe ----
+    let gap_fit = fit_lasso_path(
+        &ds,
+        &PathConfig { rule: RuleKind::SsrGapSafe, ..cfg.clone() },
+    )
+    .expect("gap-safe lasso fit");
+    let gap_rej: Vec<usize> =
+        gap_fit.metrics.iter().map(|m| ds.p() - m.safe_size).collect();
+    let gap_refires: Vec<usize> =
+        gap_fit.metrics.iter().map(|m| m.rescreen_discards).collect();
+    let gap_strong: Vec<usize> =
+        gap_fit.metrics.iter().map(|m| m.strong_size).collect();
+
     // ---- group workload: synth n=80, G=30, W=4, seed 14, SSR-BEDPP ----
     let gds = generate_grouped(80, 30, 4, 4, 14);
     let gcfg = GroupPathConfig {
@@ -98,6 +112,20 @@ fn compute_golden() -> String {
     let esafe: Vec<usize> = efit.metrics.iter().map(|m| m.safe_size).collect();
     let estrong: Vec<usize> = efit.metrics.iter().map(|m| m.strong_size).collect();
 
+    // ---- gap-safe group workload: same data/grid, SSR-GapSafe ----
+    let ggap_fit = fit_group_path(
+        &gds,
+        &GroupPathConfig { rule: RuleKind::SsrGapSafe, ..gcfg.clone() },
+    )
+    .expect("gap-safe group fit");
+    let ggap_rej: Vec<usize> = ggap_fit
+        .metrics
+        .iter()
+        .map(|m| gds.num_groups() - m.safe_size)
+        .collect();
+    let ggap_refires: Vec<usize> =
+        ggap_fit.metrics.iter().map(|m| m.rescreen_discards).collect();
+
     let mut out = String::new();
     out.push_str("{\n  \"lasso_gene_n80_p200_seed7_ssrbedpp_k40\": {\n");
     ints(&mut out, "bedpp_rejected", &bedpp_rej);
@@ -117,6 +145,16 @@ fn compute_golden() -> String {
     ints(&mut out, "safe_size", &esafe);
     out.push_str(",\n");
     ints(&mut out, "strong_size", &estrong);
+    out.push_str("\n  },\n  \"lasso_gene_n80_p200_seed7_ssrgapsafe_k40\": {\n");
+    ints(&mut out, "gapsafe_rejected", &gap_rej);
+    out.push_str(",\n");
+    ints(&mut out, "rescreen_discards", &gap_refires);
+    out.push_str(",\n");
+    ints(&mut out, "strong_size", &gap_strong);
+    out.push_str("\n  },\n  \"group_synth_n80_G30_W4_seed14_ssrgapsafe_k25\": {\n");
+    ints(&mut out, "gapsafe_rejected", &ggap_rej);
+    out.push_str(",\n");
+    ints(&mut out, "rescreen_discards", &ggap_refires);
     out.push_str("\n  }\n}\n");
     out
 }

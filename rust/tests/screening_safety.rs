@@ -2,17 +2,21 @@
 //! active in the exact solution — the defining property the paper's hybrid
 //! construction rests on. Verified against fully converged solutions over
 //! randomized problems (the in-crate property harness), for BEDPP, Dome,
-//! SEDPP, the frozen-SEDPP rehybrid, and the group-lasso rules.
+//! SEDPP, the frozen-SEDPP rehybrid, the group-lasso rules, and the
+//! dynamic gap-safe rules of all three families (sequential *and*
+//! same-λ/dynamic usage, native and chunked engines).
 
+use hssr::data::chunked::{ChunkedMatrix, ChunkedScanEngine};
 use hssr::data::synth::generate_grouped;
 use hssr::data::DataSpec;
 use hssr::prop::{check, PropConfig};
 use hssr::prop_assert;
 use hssr::screening::bedpp::Bedpp;
 use hssr::screening::dome::DomeTest;
+use hssr::screening::gapsafe::{logistic_context, GapSafe, GroupGapSafe};
 use hssr::screening::group::{GroupBedpp, GroupSafeContext, GroupSedpp};
 use hssr::screening::sedpp::Sedpp;
-use hssr::screening::{PrevSolution, RuleKind, SafeContext};
+use hssr::screening::{PrevSolution, RuleKind, SafeContext, SafeRule};
 use hssr::solver::path::{fit_lasso_path, PathConfig};
 use hssr::solver::Penalty;
 
@@ -58,7 +62,7 @@ fn sedpp_never_discards_active_features() {
             let beta = fit.beta_dense(k);
             let xb = ds.x.matvec(&beta);
             let r: Vec<f64> = ds.y.iter().zip(&xb).map(|(y, f)| y - f).collect();
-            let prev = PrevSolution { lambda: fit.lambdas[k], r: &r };
+            let prev = PrevSolution { lambda: fit.lambdas[k], r: &r, beta: Some(&beta) };
             let mut survive = vec![true; ds.p()];
             let mut rule = Sedpp::new();
             rule.screen_with(&ds.x, &ctx, &prev, fit.lambdas[k + 1], &mut survive);
@@ -140,7 +144,8 @@ fn group_rules_never_discard_active_groups() {
                     let xb = ds.x.matvec(&bprev);
                     let r: Vec<f64> =
                         ds.y.iter().zip(&xb).map(|(y, f)| y - f).collect();
-                    let prev = PrevSolution { lambda: fit.lambdas[k - 1], r: &r };
+                    let prev =
+                        PrevSolution { lambda: fit.lambdas[k - 1], r: &r, beta: Some(&bprev) };
                     let mut survive = vec![true; ds.num_groups()];
                     GroupSedpp::new().screen_with(
                         &ds.x,
@@ -160,6 +165,264 @@ fn group_rules_never_discard_active_groups() {
         }
         Ok(())
     });
+}
+
+/// Gap-safe (columns, lasso + elastic net): screening λ_{k+1} from the
+/// exact solution at λ_k — and *dynamically* re-screening λ_k from its own
+/// solution — must never discard a feature active in the exact solution.
+#[test]
+fn gapsafe_never_discards_active_features() {
+    check(PropConfig { cases: 6, seed: 505 }, |rng, _| {
+        let alpha = 0.4 + 0.5 * rng.uniform();
+        let ds = DataSpec::synthetic(70, 120, 6).generate(rng.next_u64());
+        for penalty in [Penalty::Lasso, Penalty::ElasticNet { alpha }] {
+            let ctx = SafeContext::build(&ds.x, &ds.y, penalty, false);
+            let fit = fit_lasso_path(
+                &ds,
+                &PathConfig {
+                    rule: RuleKind::BasicPcd,
+                    penalty,
+                    n_lambda: 20,
+                    tol: 1e-10,
+                    ..PathConfig::default()
+                },
+            )
+            .map_err(|e| e.to_string())?;
+            for k in 0..fit.lambdas.len() {
+                let beta = fit.beta_dense(k);
+                let xb = ds.x.matvec(&beta);
+                let r: Vec<f64> = ds.y.iter().zip(&xb).map(|(y, f)| y - f).collect();
+                let prev = PrevSolution { lambda: fit.lambdas[k], r: &r, beta: Some(&beta) };
+                // dynamic usage: re-screen λ_k at its own solution
+                let mut s_dyn = vec![true; ds.p()];
+                GapSafe::quadratic().screen(&ds.x, &ctx, &prev, fit.lambdas[k], &mut s_dyn);
+                for &(j, _) in &fit.betas[k] {
+                    prop_assert!(
+                        s_dyn[j],
+                        "gap-safe/{penalty:?} discarded active {j} dynamically at λ#{k}"
+                    );
+                }
+                // sequential usage: screen λ_{k+1} from λ_k's solution
+                if k + 1 < fit.lambdas.len() {
+                    let mut s_seq = vec![true; ds.p()];
+                    GapSafe::quadratic().screen(
+                        &ds.x,
+                        &ctx,
+                        &prev,
+                        fit.lambdas[k + 1],
+                        &mut s_seq,
+                    );
+                    for &(j, _) in &fit.betas[k + 1] {
+                        prop_assert!(
+                            s_seq[j],
+                            "gap-safe/{penalty:?} discarded active {j} at λ#{}",
+                            k + 1
+                        );
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Gap-safe (groups, lasso + elastic net): same invariant at group
+/// granularity.
+#[test]
+fn group_gapsafe_never_discards_active_groups() {
+    check(PropConfig { cases: 5, seed: 606 }, |rng, _| {
+        let g_total = 10 + rng.below(12) as usize;
+        let ds = generate_grouped(80, g_total, 4, 3, rng.next_u64());
+        let alpha = 0.4 + 0.5 * rng.uniform();
+        for penalty in [Penalty::Lasso, Penalty::ElasticNet { alpha }] {
+            let ctx = GroupSafeContext::build(&ds.x, &ds.y, &ds.layout, penalty);
+            let fit = hssr::solver::group_path::fit_group_path(
+                &ds,
+                &hssr::solver::group_path::GroupPathConfig {
+                    rule: RuleKind::BasicPcd,
+                    penalty,
+                    n_lambda: 18,
+                    tol: 1e-10,
+                    ..Default::default()
+                },
+            )
+            .map_err(|e| e.to_string())?;
+            for k in 0..fit.lambdas.len() {
+                let beta = fit.beta_dense(k);
+                let active: Vec<usize> = (0..ds.num_groups())
+                    .filter(|&g| ds.layout.range(g).any(|j| beta[j] != 0.0))
+                    .collect();
+                let xb = ds.x.matvec(&beta);
+                let r: Vec<f64> = ds.y.iter().zip(&xb).map(|(y, f)| y - f).collect();
+                let prev = PrevSolution { lambda: fit.lambdas[k], r: &r, beta: Some(&beta) };
+                let mut s_dyn = vec![true; ds.num_groups()];
+                GroupGapSafe::new().screen(&ds.x, &ctx, &prev, fit.lambdas[k], &mut s_dyn);
+                for &g in &active {
+                    prop_assert!(
+                        s_dyn[g],
+                        "group gap-safe/{penalty:?} discarded active group {g} at λ#{k}"
+                    );
+                }
+                if k + 1 < fit.lambdas.len() {
+                    let bnext = fit.beta_dense(k + 1);
+                    let mut s_seq = vec![true; ds.num_groups()];
+                    GroupGapSafe::new().screen(
+                        &ds.x,
+                        &ctx,
+                        &prev,
+                        fit.lambdas[k + 1],
+                        &mut s_seq,
+                    );
+                    for g in 0..ds.num_groups() {
+                        if ds.layout.range(g).any(|j| bnext[j] != 0.0) {
+                            prop_assert!(
+                                s_seq[g],
+                                "group gap-safe/{penalty:?} discarded active group {g} at λ#{}",
+                                k + 1
+                            );
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Gap-safe (logistic, lasso + elastic net): screening from the exact
+/// IRLS solution must keep every feature active at the screened λ — the
+/// invariant that makes this the repo's first safe-screened GLM.
+#[test]
+fn logistic_gapsafe_never_discards_active_features() {
+    use hssr::solver::logistic::{
+        fit_logistic_path, synthetic_logistic, LogisticPathConfig,
+    };
+    check(PropConfig { cases: 5, seed: 707 }, |rng, _| {
+        let (x, y, _) = synthetic_logistic(120, 50, 4, rng.next_u64());
+        let alpha = 0.5 + 0.4 * rng.uniform();
+        for penalty in [Penalty::Lasso, Penalty::ElasticNet { alpha }] {
+            let fit = fit_logistic_path(
+                &x,
+                &y,
+                &LogisticPathConfig {
+                    rule: RuleKind::BasicPcd,
+                    penalty,
+                    n_lambda: 15,
+                    tol: 1e-10,
+                    ..Default::default()
+                },
+            )
+            .map_err(|e| e.to_string())?;
+            let ctx = logistic_context(&y, x.ncols(), fit.lambda_max, penalty);
+            for k in 0..fit.lambdas.len() {
+                let beta = fit.beta_dense(k);
+                let probs = fit.predict_proba(&x, k);
+                let resid: Vec<f64> =
+                    y.iter().zip(&probs).map(|(yi, pi)| yi - pi).collect();
+                let prev =
+                    PrevSolution { lambda: fit.lambdas[k], r: &resid, beta: Some(&beta) };
+                let mut s_dyn = vec![true; x.ncols()];
+                GapSafe::logistic().screen(&x, &ctx, &prev, fit.lambdas[k], &mut s_dyn);
+                for &(j, _) in &fit.betas[k] {
+                    prop_assert!(
+                        s_dyn[j],
+                        "logistic gap-safe/{penalty:?} discarded active {j} at λ#{k}"
+                    );
+                }
+                if k + 1 < fit.lambdas.len() {
+                    let mut s_seq = vec![true; x.ncols()];
+                    GapSafe::logistic().screen(
+                        &x,
+                        &ctx,
+                        &prev,
+                        fit.lambdas[k + 1],
+                        &mut s_seq,
+                    );
+                    for &(j, _) in &fit.betas[k + 1] {
+                        prop_assert!(
+                            s_seq[j],
+                            "logistic gap-safe/{penalty:?} discarded active {j} at λ#{}",
+                            k + 1
+                        );
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Full-path integration across engines: the SSR-GapSafe paths driven
+/// through the counting chunked engine (trait-default fused passes) must
+/// equal the native one-traversal paths bit-for-bit — columns, groups, and
+/// logistic — and match the exact baseline.
+#[test]
+fn gapsafe_paths_agree_across_engines() {
+    use hssr::runtime::native::NativeEngine;
+    use hssr::solver::group_path::{fit_group_path_with_engine, GroupPathConfig};
+    use hssr::solver::logistic::{
+        fit_logistic_path_with_engine, synthetic_logistic, LogisticPathConfig,
+    };
+    use hssr::solver::path::fit_lasso_path_with_engine;
+    let native = NativeEngine::new();
+
+    // columns
+    let ds = DataSpec::gene_like(80, 200).generate(18);
+    let cfg = PathConfig {
+        rule: RuleKind::SsrGapSafe,
+        n_lambda: 20,
+        tol: 1e-9,
+        fused: true,
+        ..PathConfig::default()
+    };
+    let store = ChunkedMatrix::from_dense(&ds.x, 32);
+    let chunked = ChunkedScanEngine::new(&store);
+    let a = fit_lasso_path_with_engine(&ds, &cfg, &chunked).unwrap();
+    let b = fit_lasso_path_with_engine(&ds, &cfg, &native).unwrap();
+    assert_eq!(a.betas, b.betas, "gap-safe column paths differ across engines");
+    let exact = fit_lasso_path(
+        &ds,
+        &PathConfig { rule: RuleKind::BasicPcd, ..cfg.clone() },
+    )
+    .unwrap();
+    for k in 0..a.lambdas.len() {
+        let da = a.beta_dense(k);
+        let de = exact.beta_dense(k);
+        for j in 0..ds.p() {
+            assert!((da[j] - de[j]).abs() < 1e-5, "λ#{k} β[{j}] deviates from exact");
+        }
+    }
+
+    // groups
+    let gds = generate_grouped(70, 20, 4, 4, 19);
+    let gcfg = GroupPathConfig {
+        rule: RuleKind::SsrGapSafe,
+        n_lambda: 15,
+        tol: 1e-9,
+        fused: true,
+        ..GroupPathConfig::default()
+    };
+    let gstore = ChunkedMatrix::from_dense(&gds.x, 16);
+    let gchunked = ChunkedScanEngine::new(&gstore);
+    let ga = fit_group_path_with_engine(&gds, &gcfg, &gchunked).unwrap();
+    let gb = fit_group_path_with_engine(&gds, &gcfg, &native).unwrap();
+    assert_eq!(ga.betas, gb.betas, "gap-safe group paths differ across engines");
+
+    // logistic
+    let (x, y, _) = synthetic_logistic(100, 60, 4, 20);
+    let lcfg = LogisticPathConfig {
+        rule: RuleKind::SsrGapSafe,
+        n_lambda: 15,
+        tol: 1e-9,
+        fused: true,
+        ..LogisticPathConfig::default()
+    };
+    let lstore = ChunkedMatrix::from_dense(&x, 16);
+    let lchunked = ChunkedScanEngine::new(&lstore);
+    let la = fit_logistic_path_with_engine(&x, &y, &lcfg, &lchunked).unwrap();
+    let lb = fit_logistic_path_with_engine(&x, &y, &lcfg, &native).unwrap();
+    assert_eq!(la.betas, lb.betas, "gap-safe logistic paths differ across engines");
+    assert_eq!(la.intercepts, lb.intercepts);
 }
 
 /// SSR *can* err (it is heuristic); what must hold is that the KKT loop

@@ -11,13 +11,14 @@ use hssr::solver::lambda::GridKind;
 use hssr::solver::path::{fit_lasso_path, PathConfig, PathFit};
 use hssr::solver::Penalty;
 
-const ALL_RULES: [RuleKind; 6] = [
+const ALL_RULES: [RuleKind; 7] = [
     RuleKind::ActiveCycling,
     RuleKind::Ssr,
     RuleKind::Sedpp,
     RuleKind::SsrBedpp,
     RuleKind::SsrDome,
     RuleKind::SsrBedppSedpp,
+    RuleKind::SsrGapSafe,
 ];
 
 fn max_beta_diff(a: &PathFit, b: &PathFit) -> f64 {
