@@ -1,14 +1,19 @@
-//! Out-of-core column store with scan accounting.
+//! In-RAM *model* of the out-of-core column substrate, with scan
+//! accounting.
 //!
 //! §3.2.3 of the paper argues HSSR's *memory* advantage: SSR and SEDPP must
 //! fully scan the feature matrix at every λ, while HSSR scans only the safe
 //! set — decisive when the matrix lives on disk (biglasso's memory-mapped
-//! big.matrix). This module models that substrate: a [`ChunkedMatrix`]
-//! stores columns in fixed-size chunks and *counts every column fetched*,
-//! so benches can report bytes-scanned per rule (ablation `abl1`).
+//! big.matrix). This module models that substrate cheaply: a
+//! [`ChunkedMatrix`] stores columns in fixed-size chunks and *counts every
+//! column fetched* (through the shared
+//! [`crate::data::store::StoreCounters`]), so benches can report
+//! bytes-scanned per rule without touching disk. The **real** disk-backed
+//! substrate — seek/read chunks, LRU cache, measured byte traffic — is
+//! [`crate::data::store::ColumnStore`] behind
+//! [`crate::runtime::ooc::OocEngine`].
 
-use std::sync::atomic::{AtomicU64, Ordering};
-
+use crate::data::store::StoreCounters;
 use crate::error::Result;
 use crate::linalg::{ops, DenseMatrix};
 use crate::runtime::ScanEngine;
@@ -19,8 +24,7 @@ pub struct ChunkedMatrix {
     p: usize,
     chunk_cols: usize,
     chunks: Vec<Vec<f64>>,
-    cols_fetched: AtomicU64,
-    chunk_faults: AtomicU64,
+    counters: StoreCounters,
 }
 
 impl ChunkedMatrix {
@@ -36,14 +40,7 @@ impl ChunkedMatrix {
             chunks.push(x.col_block(j, w).to_vec());
             j += w;
         }
-        ChunkedMatrix {
-            n,
-            p,
-            chunk_cols: cc,
-            chunks,
-            cols_fetched: AtomicU64::new(0),
-            chunk_faults: AtomicU64::new(0),
-        }
+        ChunkedMatrix { n, p, chunk_cols: cc, chunks, counters: StoreCounters::default() }
     }
 
     /// Rows.
@@ -59,11 +56,13 @@ impl ChunkedMatrix {
     /// Column view with access accounting.
     pub fn col(&self, j: usize) -> &[f64] {
         debug_assert!(j < self.p);
-        self.cols_fetched.fetch_add(1, Ordering::Relaxed);
+        self.counters.add_col();
         let c = j / self.chunk_cols;
         let off = (j - c * self.chunk_cols) * self.n;
         if off == 0 {
-            self.chunk_faults.fetch_add(1, Ordering::Relaxed);
+            // A fetch landing on a chunk's first column models the chunk
+            // load a disk-backed store would pay.
+            self.counters.add_load((self.chunks[c].len() * 8) as u64);
         }
         &self.chunks[c][off..off + self.n]
     }
@@ -80,13 +79,13 @@ impl ChunkedMatrix {
 
     /// Total columns fetched since construction (or last reset).
     pub fn cols_fetched(&self) -> u64 {
-        self.cols_fetched.load(Ordering::Relaxed)
+        self.counters.cols_fetched()
     }
 
     /// Chunk faults (fetches landing on a chunk's first column — the
     /// would-be chunk loads of a disk-backed store).
     pub fn chunk_faults(&self) -> u64 {
-        self.chunk_faults.load(Ordering::Relaxed)
+        self.counters.chunk_loads()
     }
 
     /// Bytes fetched, assuming each column fetch reads its f64 data.
@@ -94,10 +93,14 @@ impl ChunkedMatrix {
         self.cols_fetched() * (self.n as u64) * 8
     }
 
+    /// The shared counter block (modeled traffic).
+    pub fn counters(&self) -> &StoreCounters {
+        &self.counters
+    }
+
     /// Reset the access counters.
     pub fn reset_counters(&self) {
-        self.cols_fetched.store(0, Ordering::Relaxed);
-        self.chunk_faults.store(0, Ordering::Relaxed);
+        self.counters.reset();
     }
 }
 

@@ -1,15 +1,25 @@
 //! Dataset I/O: CSV ingestion for user data and a fast binary cache — the
 //! adoption path for fitting external data through the CLI
-//! (`hssr fit --csv data.csv`).
+//! (`hssr fit --data csv --path data.csv`).
 //!
 //! * CSV: numeric matrix, optional header row (auto-detected), response in
 //!   the first column, features in the rest. Standardization to paper
-//!   condition (2) happens on load.
+//!   condition (2) happens on load. [`CsvRows`] is the shared streaming
+//!   row parser — [`load_csv`] buffers it into a [`Dataset`], while the
+//!   column store's `hssr convert` path
+//!   ([`crate::data::store::writer::convert_csv`]) streams it straight to
+//!   disk with Welford standardization, never holding the matrix.
 //! * Binary cache: little-endian `HSSRBIN1` + dims + raw f64s; ~20× faster
-//!   to reload than CSV for big matrices (and what an out-of-core backend
-//!   would memory-map).
+//!   to reload than CSV for big matrices. Either format can be converted
+//!   to the **real out-of-core column store** ([`crate::data::store`],
+//!   `hssr convert in.csv out.store`): fitting with `--engine ooc` then
+//!   serves every screening/KKT scan — the §3.2.3 memory-traffic
+//!   bottleneck — from disk through a bounded LRU chunk cache
+//!   (`HSSR_CACHE_MB`), with real I/O measured by
+//!   `examples/out_of_core.rs`. (The inner CD solver still reads a
+//!   resident design; bounding it the same way is a ROADMAP open item.)
 
-use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::io::{BufRead, BufReader, BufWriter, Lines, Read, Write};
 use std::path::Path;
 
 use super::standardize::standardize_in_place;
@@ -19,42 +29,82 @@ use crate::linalg::DenseMatrix;
 
 const MAGIC: &[u8; 8] = b"HSSRBIN1";
 
+/// Streaming CSV row parser: yields one `Vec<f64>` per data row, skipping
+/// blank lines, `#` comments, and an auto-detected header row, and
+/// enforcing a constant width. Shared by [`load_csv`] (which buffers the
+/// rows) and the out-of-core converter
+/// ([`crate::data::store::writer::convert_csv`], which never does).
+pub struct CsvRows {
+    lines: std::iter::Enumerate<Lines<BufReader<std::fs::File>>>,
+    width: Option<usize>,
+    any_data: bool,
+}
+
+impl CsvRows {
+    /// Open a CSV file for streaming row iteration.
+    pub fn open(path: &Path) -> Result<CsvRows> {
+        let f = std::fs::File::open(path)?;
+        Ok(CsvRows {
+            lines: BufReader::new(f).lines().enumerate(),
+            width: None,
+            any_data: false,
+        })
+    }
+}
+
+impl Iterator for CsvRows {
+    type Item = Result<Vec<f64>>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        loop {
+            let (lineno, line) = self.lines.next()?;
+            let line = match line {
+                Ok(l) => l,
+                Err(e) => return Some(Err(e.into())),
+            };
+            let trimmed = line.trim();
+            if trimmed.is_empty() || trimmed.starts_with('#') {
+                continue;
+            }
+            let parsed: std::result::Result<Vec<f64>, _> =
+                trimmed.split(',').map(|c| c.trim().parse::<f64>()).collect();
+            match parsed {
+                Ok(vals) => {
+                    if let Some(w) = self.width {
+                        if vals.len() != w {
+                            return Some(Err(HssrError::Dimension(format!(
+                                "csv line {}: {} columns, expected {w}",
+                                lineno + 1,
+                                vals.len()
+                            ))));
+                        }
+                    } else {
+                        self.width = Some(vals.len());
+                    }
+                    self.any_data = true;
+                    return Some(Ok(vals));
+                }
+                Err(_) if !self.any_data => continue, // header row
+                Err(e) => {
+                    return Some(Err(HssrError::Config(format!(
+                        "csv line {}: {e}",
+                        lineno + 1
+                    ))))
+                }
+            }
+        }
+    }
+}
+
 /// Parse a CSV file: `y, x1, x2, …` per row; `#` comments and an optional
 /// header row are skipped. Returns a standardized [`Dataset`].
 pub fn load_csv(path: &Path) -> Result<Dataset> {
-    let f = std::fs::File::open(path)?;
-    let reader = BufReader::new(f);
     let mut rows: Vec<Vec<f64>> = Vec::new();
     let mut width: Option<usize> = None;
-    for (lineno, line) in reader.lines().enumerate() {
-        let line = line?;
-        let trimmed = line.trim();
-        if trimmed.is_empty() || trimmed.starts_with('#') {
-            continue;
-        }
-        let cells: Vec<&str> = trimmed.split(',').map(|c| c.trim()).collect();
-        let parsed: std::result::Result<Vec<f64>, _> =
-            cells.iter().map(|c| c.parse::<f64>()).collect();
-        match parsed {
-            Ok(vals) => {
-                if let Some(w) = width {
-                    if vals.len() != w {
-                        return Err(HssrError::Dimension(format!(
-                            "csv line {}: {} columns, expected {w}",
-                            lineno + 1,
-                            vals.len()
-                        )));
-                    }
-                } else {
-                    width = Some(vals.len());
-                }
-                rows.push(vals);
-            }
-            Err(_) if rows.is_empty() => continue, // header row
-            Err(e) => {
-                return Err(HssrError::Config(format!("csv line {}: {e}", lineno + 1)));
-            }
-        }
+    for row in CsvRows::open(path)? {
+        let vals = row?;
+        width = Some(vals.len());
+        rows.push(vals);
     }
     let w = width.ok_or_else(|| HssrError::Config("csv: no data rows".into()))?;
     if w < 2 {

@@ -15,6 +15,7 @@ pub mod chunked;
 pub mod io;
 pub mod realistic;
 pub mod standardize;
+pub mod store;
 pub mod synth;
 
 use crate::linalg::DenseMatrix;

@@ -1,0 +1,140 @@
+//! Bounded LRU chunk cache for the column-store reader.
+//!
+//! The budget is in **bytes** (`HSSR_CACHE_MB` at the CLI); eviction is
+//! least-recently-used via a monotone touch stamp. Buffers are handed out
+//! as `Arc<Vec<f64>>` so an in-flight scan keeps its chunk alive even if a
+//! concurrent insert evicts it — resident accounting tracks what the cache
+//! *holds*, which is what the budget bounds.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+struct Entry {
+    buf: Arc<Vec<f64>>,
+    stamp: u64,
+}
+
+/// A byte-budgeted LRU map from chunk index to decoded column data.
+pub struct ChunkCache {
+    budget: usize,
+    map: HashMap<usize, Entry>,
+    clock: u64,
+    resident: usize,
+}
+
+impl ChunkCache {
+    /// Create a cache bounded by `budget` bytes (a single chunk larger
+    /// than the budget is still admitted — the cache never refuses the
+    /// chunk a scan is about to read).
+    pub fn new(budget: usize) -> Self {
+        ChunkCache { budget, map: HashMap::new(), clock: 0, resident: 0 }
+    }
+
+    /// The configured byte budget.
+    pub fn budget(&self) -> usize {
+        self.budget
+    }
+
+    /// Bytes currently held.
+    pub fn resident(&self) -> usize {
+        self.resident
+    }
+
+    /// Whether chunk `c` is cached (no LRU touch).
+    pub fn contains(&self, c: usize) -> bool {
+        self.map.contains_key(&c)
+    }
+
+    /// Fetch chunk `c`, marking it most-recently-used.
+    pub fn get(&mut self, c: usize) -> Option<Arc<Vec<f64>>> {
+        self.clock += 1;
+        let clock = self.clock;
+        self.map.get_mut(&c).map(|e| {
+            e.stamp = clock;
+            Arc::clone(&e.buf)
+        })
+    }
+
+    /// Insert chunk `c`, evicting least-recently-used chunks until the
+    /// budget holds (or the cache is empty). Returns the number of chunks
+    /// evicted.
+    pub fn insert(&mut self, c: usize, buf: Arc<Vec<f64>>) -> usize {
+        let bytes = buf.len() * 8;
+        let mut evicted = 0;
+        while !self.map.is_empty() && self.resident + bytes > self.budget {
+            let oldest = self
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.stamp)
+                .map(|(&k, _)| k)
+                .expect("non-empty cache has an oldest entry");
+            if oldest == c {
+                break; // replacing in place; handled below
+            }
+            if let Some(e) = self.map.remove(&oldest) {
+                self.resident -= e.buf.len() * 8;
+                evicted += 1;
+            }
+        }
+        self.clock += 1;
+        if let Some(old) = self.map.insert(c, Entry { buf, stamp: self.clock }) {
+            self.resident -= old.buf.len() * 8;
+        }
+        self.resident += bytes;
+        evicted
+    }
+
+    /// Drop every cached chunk (used between per-rule bench runs).
+    pub fn clear(&mut self) {
+        self.map.clear();
+        self.resident = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chunk(len: usize, fill: f64) -> Arc<Vec<f64>> {
+        Arc::new(vec![fill; len])
+    }
+
+    #[test]
+    fn lru_evicts_oldest_under_budget() {
+        // budget = 2 chunks of 4 f64 (32 bytes each)
+        let mut c = ChunkCache::new(64);
+        c.insert(0, chunk(4, 0.0));
+        c.insert(1, chunk(4, 1.0));
+        assert_eq!(c.resident(), 64);
+        // touch 0 so 1 becomes LRU
+        assert!(c.get(0).is_some());
+        let evicted = c.insert(2, chunk(4, 2.0));
+        assert_eq!(evicted, 1);
+        assert!(c.contains(0) && c.contains(2) && !c.contains(1));
+        assert_eq!(c.resident(), 64);
+    }
+
+    #[test]
+    fn oversized_chunk_still_admitted() {
+        let mut c = ChunkCache::new(16);
+        c.insert(0, chunk(100, 0.0)); // 800 bytes ≫ budget
+        assert!(c.contains(0));
+        assert_eq!(c.resident(), 800);
+        // next insert evicts it
+        c.insert(1, chunk(1, 0.0));
+        assert!(!c.contains(0) && c.contains(1));
+        assert_eq!(c.resident(), 8);
+    }
+
+    #[test]
+    fn reinsert_replaces_without_leaking_resident() {
+        let mut c = ChunkCache::new(1024);
+        c.insert(3, chunk(8, 0.0));
+        c.insert(3, chunk(8, 1.0));
+        assert_eq!(c.resident(), 64);
+        assert_eq!(c.get(3).unwrap()[0], 1.0);
+        c.clear();
+        assert_eq!(c.resident(), 0);
+        assert!(c.get(3).is_none());
+    }
+}

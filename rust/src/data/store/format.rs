@@ -1,0 +1,185 @@
+//! The `HSSRSTOR1` on-disk layout: header encode/decode and offset math.
+//!
+//! ```text
+//! offset 0   magic  b"HSSRSTOR1"                      (9 bytes)
+//! offset 9   standardized flag: 1 ⇒ the chunk data is already in paper
+//!            condition (2) and the per-column stats are informational;
+//!            0 ⇒ the chunk data is raw and the reader applies
+//!            (x − center)/scale per column on load   (1 byte)
+//! offset 10  reserved (zero)                          (6 bytes)
+//! offset 16  n  (rows)        u64 LE
+//! offset 24  p  (columns)     u64 LE
+//! offset 32  chunk_cols       u64 LE
+//! offset 40  chunk data: the n×p matrix, column-major, grouped into
+//!            ⌈p/chunk_cols⌉ fixed-size chunks (every chunk holds
+//!            chunk_cols columns except a possibly-short tail), so
+//!            chunk c starts at 40 + c·chunk_cols·n·8 and column j
+//!            starts at 40 + j·n·8
+//! …          y        (n × f64 LE, centered)
+//! …          centers  (p × f64 LE)
+//! …          scales   (p × f64 LE; 0 marks a constant column)
+//! ```
+//!
+//! All offsets are computable from `(n, p, chunk_cols)` alone, which is
+//! what lets the reader serve any column slice with one `seek`/`read`.
+
+use crate::error::{HssrError, Result};
+
+/// Store magic: format name + version in one token.
+pub const MAGIC: &[u8; 9] = b"HSSRSTOR1";
+
+/// Fixed header length in bytes (magic + flag + reserved + three u64s).
+pub const HEADER_LEN: u64 = 40;
+
+/// Decoded fixed header of a store file.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Header {
+    /// Rows (observations).
+    pub n: usize,
+    /// Columns (features).
+    pub p: usize,
+    /// Columns per chunk (the fetch granularity).
+    pub chunk_cols: usize,
+    /// Whether the chunk data is pre-standardized (see module docs).
+    pub standardized: bool,
+}
+
+impl Header {
+    /// Number of chunks covering the `p` columns.
+    pub fn num_chunks(&self) -> usize {
+        self.p.div_ceil(self.chunk_cols.max(1))
+    }
+
+    /// Column width of chunk `c` (the tail chunk may be short).
+    pub fn chunk_width(&self, c: usize) -> usize {
+        debug_assert!(c < self.num_chunks());
+        self.chunk_cols.min(self.p - c * self.chunk_cols)
+    }
+
+    /// Payload bytes of chunk `c`.
+    pub fn chunk_bytes(&self, c: usize) -> usize {
+        self.chunk_width(c) * self.n * 8
+    }
+
+    /// Byte offset of chunk `c`'s payload.
+    pub fn chunk_offset(&self, c: usize) -> u64 {
+        HEADER_LEN + (c * self.chunk_cols * self.n * 8) as u64
+    }
+
+    /// Byte offset of the tail (`y`, then `centers`, then `scales`).
+    pub fn tail_offset(&self) -> u64 {
+        HEADER_LEN + (self.n * self.p * 8) as u64
+    }
+
+    /// Total file size implied by the header.
+    pub fn file_len(&self) -> u64 {
+        self.tail_offset() + ((self.n + 2 * self.p) * 8) as u64
+    }
+
+    /// [`Header::file_len`] with overflow-checked arithmetic — `None`
+    /// means the header's dimensions cannot describe a real file (a
+    /// corrupt or crafted header whose size math would wrap), so readers
+    /// can reject it instead of attempting an absurd allocation.
+    pub fn checked_file_len(&self) -> Option<u64> {
+        let n = self.n as u64;
+        let p = self.p as u64;
+        let matrix = n.checked_mul(p)?.checked_mul(8)?;
+        let tail = n.checked_add(p.checked_mul(2)?)?.checked_mul(8)?;
+        HEADER_LEN.checked_add(matrix)?.checked_add(tail)
+    }
+
+    /// Matrix footprint in bytes (`n·p·8`) — what "larger than the cache
+    /// budget" is measured against.
+    pub fn matrix_bytes(&self) -> u64 {
+        (self.n * self.p * 8) as u64
+    }
+
+    /// Encode the fixed header.
+    pub fn encode(&self) -> [u8; HEADER_LEN as usize] {
+        let mut buf = [0u8; HEADER_LEN as usize];
+        buf[..9].copy_from_slice(MAGIC);
+        buf[9] = self.standardized as u8;
+        buf[16..24].copy_from_slice(&(self.n as u64).to_le_bytes());
+        buf[24..32].copy_from_slice(&(self.p as u64).to_le_bytes());
+        buf[32..40].copy_from_slice(&(self.chunk_cols as u64).to_le_bytes());
+        buf
+    }
+
+    /// Decode and validate a fixed header.
+    pub fn decode(buf: &[u8; HEADER_LEN as usize]) -> Result<Header> {
+        if &buf[..9] != MAGIC {
+            return Err(HssrError::Config(
+                "not an HSSRSTOR1 column store (bad magic)".into(),
+            ));
+        }
+        let u = |off: usize| {
+            u64::from_le_bytes(buf[off..off + 8].try_into().unwrap()) as usize
+        };
+        let h = Header {
+            n: u(16),
+            p: u(24),
+            chunk_cols: u(32),
+            standardized: buf[9] != 0,
+        };
+        if h.n == 0 || h.p == 0 || h.chunk_cols == 0 {
+            return Err(HssrError::Config(format!(
+                "store header is degenerate (n={}, p={}, chunk_cols={})",
+                h.n, h.p, h.chunk_cols
+            )));
+        }
+        Ok(h)
+    }
+}
+
+/// Pick a chunk width for a store of `n`-row columns targeting roughly
+/// `target_bytes` per chunk (at least one column, at most all `p`).
+pub fn chunk_cols_for(n: usize, p: usize, target_bytes: usize) -> usize {
+    (target_bytes / (n.max(1) * 8)).clamp(1, p.max(1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn header_roundtrip() {
+        let h = Header { n: 17, p: 103, chunk_cols: 16, standardized: true };
+        let back = Header::decode(&h.encode()).unwrap();
+        assert_eq!(h, back);
+        assert_eq!(back.num_chunks(), 7);
+        assert_eq!(back.chunk_width(6), 103 - 6 * 16);
+        assert_eq!(back.chunk_offset(0), HEADER_LEN);
+        assert_eq!(back.chunk_offset(2), HEADER_LEN + (2 * 16 * 17 * 8) as u64);
+        assert_eq!(back.tail_offset(), HEADER_LEN + (17 * 103 * 8) as u64);
+        assert_eq!(
+            back.file_len(),
+            back.tail_offset() + ((17 + 2 * 103) * 8) as u64
+        );
+    }
+
+    #[test]
+    fn bad_headers_rejected() {
+        let h = Header { n: 3, p: 4, chunk_cols: 2, standardized: false };
+        let mut buf = h.encode();
+        buf[0] = b'X';
+        assert!(Header::decode(&buf).is_err());
+        let degenerate = Header { n: 0, p: 4, chunk_cols: 2, standardized: false };
+        assert!(Header::decode(&degenerate.encode()).is_err());
+    }
+
+    #[test]
+    fn checked_len_rejects_wrapping_headers() {
+        let ok = Header { n: 17, p: 103, chunk_cols: 16, standardized: false };
+        assert_eq!(ok.checked_file_len(), Some(ok.file_len()));
+        let huge =
+            Header { n: 1 << 61, p: 4, chunk_cols: 1, standardized: false };
+        assert_eq!(huge.checked_file_len(), None);
+    }
+
+    #[test]
+    fn chunk_sizing() {
+        assert_eq!(chunk_cols_for(100, 1000, 256 * 1024), 327);
+        assert_eq!(chunk_cols_for(1_000_000, 10, 1024), 1);
+        assert_eq!(chunk_cols_for(10, 5, 1 << 20), 5);
+    }
+}

@@ -1,0 +1,366 @@
+//! The `HSSRSTOR1` reader: seek/read column service through a bounded LRU
+//! chunk cache with pool-dispatched prefetch, counting real I/O.
+//!
+//! [`ColumnStore`] is the disk-backed analogue of
+//! [`crate::data::chunked::ChunkedMatrix`]: the same column-serving
+//! surface, but every chunk miss is an actual positioned read, the cache
+//! is bounded by a byte budget (`HSSR_CACHE_MB`), and the counters report
+//! measured traffic — columns served, chunk loads, **bytes read from
+//! disk**, cache hits, and peak resident bytes. Scans are bit-identical to
+//! the dense path: a served column slice holds exactly the values the
+//! in-memory design would, and the per-column reduction is the same
+//! `ops::dot(col, v)/n` every engine uses.
+
+use std::fs::File;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use super::cache::ChunkCache;
+use super::format::{Header, HEADER_LEN};
+use super::{pread, StoreCounters};
+use crate::data::Dataset;
+use crate::error::{HssrError, Result};
+use crate::linalg::{ops, pool, DenseMatrix};
+
+/// A disk-backed column store with a bounded chunk cache.
+pub struct ColumnStore {
+    file: File,
+    header: Header,
+    y: Vec<f64>,
+    centers: Vec<f64>,
+    scales: Vec<f64>,
+    name: String,
+    cache: Mutex<ChunkCache>,
+    counters: StoreCounters,
+}
+
+impl ColumnStore {
+    /// Open a store, validating the header and loading the (small) tail:
+    /// `y` and the per-column stats. `budget_bytes` bounds the chunk
+    /// cache; a budget smaller than one chunk still admits the chunk
+    /// being scanned (the cache never wedges).
+    pub fn open(path: &Path, budget_bytes: usize) -> Result<ColumnStore> {
+        let file = File::open(path)?;
+        let mut head = [0u8; HEADER_LEN as usize];
+        pread(&file, &mut head, 0)?;
+        let header = Header::decode(&head)?;
+        // Overflow-checked size math: a corrupt header whose dimensions
+        // wrap must be rejected here, not surface as a huge allocation.
+        let expect = header.checked_file_len().ok_or_else(|| {
+            HssrError::Config(format!(
+                "{}: store header dimensions overflow (n={}, p={})",
+                path.display(),
+                header.n,
+                header.p
+            ))
+        })?;
+        let actual = file.metadata()?.len();
+        if actual != expect {
+            return Err(HssrError::Config(format!(
+                "{}: store truncated ({actual} bytes, header implies {expect})",
+                path.display()
+            )));
+        }
+        let mut tail = vec![0u8; (header.n + 2 * header.p) * 8];
+        pread(&file, &mut tail, header.tail_offset())?;
+        let f64s = |range: std::ops::Range<usize>| -> Vec<f64> {
+            tail[range.start * 8..range.end * 8]
+                .chunks_exact(8)
+                .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+                .collect()
+        };
+        let (n, p) = (header.n, header.p);
+        Ok(ColumnStore {
+            file,
+            header,
+            y: f64s(0..n),
+            centers: f64s(n..n + p),
+            scales: f64s(n + p..n + 2 * p),
+            name: path
+                .file_name()
+                .and_then(|s| s.to_str())
+                .unwrap_or("store")
+                .to_string(),
+            cache: Mutex::new(ChunkCache::new(budget_bytes.max(1))),
+            counters: StoreCounters::default(),
+        })
+    }
+
+    /// Rows.
+    pub fn nrows(&self) -> usize {
+        self.header.n
+    }
+
+    /// Columns.
+    pub fn ncols(&self) -> usize {
+        self.header.p
+    }
+
+    /// The decoded header.
+    pub fn header(&self) -> &Header {
+        &self.header
+    }
+
+    /// Centered response stored in the tail.
+    pub fn y(&self) -> &[f64] {
+        &self.y
+    }
+
+    /// Per-column centers (raw-data means for a converted store; dataset
+    /// metadata for a spilled one).
+    pub fn centers(&self) -> &[f64] {
+        &self.centers
+    }
+
+    /// Per-column scales (0 marks a constant column).
+    pub fn scales(&self) -> &[f64] {
+        &self.scales
+    }
+
+    /// File name, used as the workload label.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// The real-I/O counters.
+    pub fn counters(&self) -> &StoreCounters {
+        &self.counters
+    }
+
+    /// The cache byte budget.
+    pub fn budget_bytes(&self) -> usize {
+        self.cache.lock().unwrap().budget()
+    }
+
+    /// Zero the counters and drop every cached chunk (per-rule bench
+    /// isolation).
+    pub fn reset(&self) {
+        self.counters.reset();
+        self.cache.lock().unwrap().clear();
+    }
+
+    /// Read chunk `c` from disk and decode it to standardized column
+    /// values. Counts the load. Does not touch the cache.
+    fn load_chunk(&self, c: usize) -> Result<Vec<f64>> {
+        let bytes = self.header.chunk_bytes(c);
+        let mut raw = vec![0u8; bytes];
+        pread(&self.file, &mut raw, self.header.chunk_offset(c))?;
+        self.counters.add_load(bytes as u64);
+        Ok(self.decode_chunk(c, &raw))
+    }
+
+    /// Decode a chunk payload, applying the per-column affine transform
+    /// when the store holds raw data.
+    fn decode_chunk(&self, c: usize, raw: &[u8]) -> Vec<f64> {
+        let n = self.header.n;
+        let width = self.header.chunk_width(c);
+        let j0 = c * self.header.chunk_cols;
+        let mut out = Vec::with_capacity(width * n);
+        for (local, col) in raw.chunks_exact(n * 8).enumerate() {
+            let j = j0 + local;
+            let scale = self.scales[j];
+            if self.header.standardized {
+                out.extend(col.chunks_exact(8).map(|b| f64::from_le_bytes(b.try_into().unwrap())));
+            } else if scale == 0.0 {
+                // Constant column: standardization zeroes it out.
+                out.resize(out.len() + n, 0.0);
+            } else {
+                let center = self.centers[j];
+                let inv = 1.0 / scale;
+                out.extend(col.chunks_exact(8).map(|b| {
+                    (f64::from_le_bytes(b.try_into().unwrap()) - center) * inv
+                }));
+            }
+        }
+        out
+    }
+
+    /// Fetch chunk `c` through the cache (hit: LRU touch; miss: disk load
+    /// + insert with LRU eviction under the byte budget).
+    fn chunk(&self, c: usize) -> Result<Arc<Vec<f64>>> {
+        if let Some(buf) = self.cache.lock().unwrap().get(c) {
+            self.counters.add_hit();
+            return Ok(buf);
+        }
+        let buf = Arc::new(self.load_chunk(c)?);
+        let mut cache = self.cache.lock().unwrap();
+        cache.insert(c, Arc::clone(&buf));
+        self.counters.note_resident(cache.resident() as u64);
+        Ok(buf)
+    }
+
+    /// Serve column `j` to `f`, counting the fetch. The slice holds the
+    /// standardized values of the column.
+    pub fn with_col<R>(&self, j: usize, f: impl FnOnce(&[f64]) -> R) -> Result<R> {
+        debug_assert!(j < self.header.p);
+        self.counters.add_col();
+        let c = j / self.header.chunk_cols;
+        let buf = self.chunk(c)?;
+        let off = (j - c * self.header.chunk_cols) * self.header.n;
+        Ok(f(&buf[off..off + self.header.n]))
+    }
+
+    /// Pool-dispatched prefetch: load the (distinct) chunks covering
+    /// `cols` that are not yet cached, in parallel on the persistent
+    /// worker pool, up to the cache capacity — the read-ahead the scan
+    /// engine issues for the upcoming safe set before its dot loop.
+    pub fn prefetch(&self, cols: &[usize]) -> Result<()> {
+        let mut wanted: Vec<usize> = Vec::new();
+        {
+            let cache = self.cache.lock().unwrap();
+            let capacity = (cache.budget() / self.header.chunk_bytes(0).max(1)).max(1);
+            for &j in cols {
+                let c = j / self.header.chunk_cols;
+                if wanted.len() >= capacity {
+                    break;
+                }
+                if !cache.contains(c) && !wanted.contains(&c) {
+                    wanted.push(c);
+                }
+            }
+        }
+        if wanted.is_empty() {
+            return Ok(());
+        }
+        let loaded: Vec<Result<Vec<f64>>> =
+            pool::global().map(wanted.len(), |k| self.load_chunk(wanted[k]));
+        let mut cache = self.cache.lock().unwrap();
+        for (c, buf) in wanted.into_iter().zip(loaded) {
+            cache.insert(c, Arc::new(buf?));
+        }
+        self.counters.note_resident(cache.resident() as u64);
+        Ok(())
+    }
+
+    /// Scan `out[k] = x_{idx[k]}ᵀ v / n` against the store: prefetch the
+    /// covering chunks, then the same per-column reduction every engine
+    /// uses (bit-identical to the dense path — per-column dots are
+    /// independent, so dispatching them on the pool changes wall-clock,
+    /// not bits). Small scans stay serial, mirroring the native kernels'
+    /// [`crate::linalg::blocked::PAR_THRESHOLD`].
+    pub fn scan_subset(&self, v: &[f64], idx: &[usize], out: &mut [f64]) -> Result<()> {
+        assert_eq!(out.len(), idx.len());
+        assert_eq!(v.len(), self.header.n);
+        self.prefetch(idx)?;
+        let inv_n = 1.0 / self.header.n as f64;
+        if self.header.n * idx.len() < crate::linalg::blocked::PAR_THRESHOLD {
+            for (k, &j) in idx.iter().enumerate() {
+                out[k] = self.with_col(j, |col| ops::dot(col, v))? * inv_n;
+            }
+            return Ok(());
+        }
+        let dots: Vec<Result<f64>> = pool::global().map(idx.len(), |k| {
+            self.with_col(idx[k], |col| ops::dot(col, v)).map(|d| d * inv_n)
+        });
+        for (o, d) in out.iter_mut().zip(dots) {
+            *o = d?;
+        }
+        Ok(())
+    }
+
+    /// Materialize the full standardized dataset (dense). Reads every
+    /// chunk once, directly — bypassing the cache and the counters, since
+    /// this is a load, not scan traffic.
+    pub fn to_dataset(&self) -> Result<Dataset> {
+        let (n, p) = (self.header.n, self.header.p);
+        let mut data = Vec::with_capacity(n * p);
+        for c in 0..self.header.num_chunks() {
+            let bytes = self.header.chunk_bytes(c);
+            let mut raw = vec![0u8; bytes];
+            pread(&self.file, &mut raw, self.header.chunk_offset(c))?;
+            data.extend(self.decode_chunk(c, &raw));
+        }
+        Ok(Dataset {
+            x: DenseMatrix::from_col_major(n, p, data)?,
+            y: self.y.clone(),
+            centers: self.centers.clone(),
+            scales: self.scales.clone(),
+            name: self.name.clone(),
+            truth: None,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::store::writer::write_dataset;
+    use crate::data::DataSpec;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("hssr_store_reader_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn dense_store_dense_is_exact() {
+        let ds = DataSpec::gene_like(23, 41).generate(7);
+        let path = tmp("exact.store");
+        write_dataset(&ds, 8, &path).unwrap();
+        let store = ColumnStore::open(&path, 1 << 20).unwrap();
+        assert_eq!((store.nrows(), store.ncols()), (23, 41));
+        let back = store.to_dataset().unwrap();
+        assert_eq!(back.x.as_slice(), ds.x.as_slice(), "matrix bytes drifted");
+        assert_eq!(back.y, ds.y);
+        assert_eq!(back.centers, ds.centers);
+        assert_eq!(back.scales, ds.scales);
+        // column service matches too, and is counted
+        for j in [0usize, 7, 40] {
+            let col = store.with_col(j, |c| c.to_vec()).unwrap();
+            assert_eq!(col.as_slice(), ds.x.col(j));
+        }
+        assert_eq!(store.counters().cols_fetched(), 3);
+    }
+
+    #[test]
+    fn tiny_budget_forces_eviction_but_stays_correct() {
+        let ds = DataSpec::synthetic(16, 30, 3).generate(1);
+        let path = tmp("tiny.store");
+        write_dataset(&ds, 4, &path).unwrap();
+        // Budget of exactly one 4-column chunk (4·16·8 bytes).
+        let store = ColumnStore::open(&path, 4 * 16 * 8).unwrap();
+        let v: Vec<f64> = (0..16).map(|i| (i as f64).sin()).collect();
+        let idx: Vec<usize> = (0..30).collect();
+        let mut got = vec![0.0; 30];
+        store.scan_subset(&v, &idx, &mut got).unwrap();
+        let want = crate::linalg::blocked::scan_all_vec(&ds.x, &v);
+        assert_eq!(got, want, "scans under eviction must stay bit-identical");
+        // every chunk had to be loaded, and the cache never outgrew one chunk
+        assert!(store.counters().chunk_loads() >= 8);
+        assert!(store.counters().peak_resident() <= (4 * 16 * 8) as u64);
+        // a second pass re-faults (the working set exceeds the budget)
+        store.scan_subset(&v, &idx, &mut got).unwrap();
+        assert!(store.counters().chunk_loads() >= 16);
+    }
+
+    #[test]
+    fn warm_cache_serves_hits_without_reloads() {
+        let ds = DataSpec::synthetic(10, 12, 2).generate(2);
+        let path = tmp("warm.store");
+        write_dataset(&ds, 4, &path).unwrap();
+        let store = ColumnStore::open(&path, 1 << 20).unwrap();
+        let v = vec![1.0; 10];
+        let mut out = vec![0.0; 12];
+        store.scan_subset(&v, &(0..12).collect::<Vec<_>>(), &mut out).unwrap();
+        let loads = store.counters().chunk_loads();
+        assert_eq!(loads, 3);
+        store.scan_subset(&v, &(0..12).collect::<Vec<_>>(), &mut out).unwrap();
+        assert_eq!(store.counters().chunk_loads(), loads, "warm pass reloaded");
+        assert!(store.counters().cache_hits() >= 12);
+        store.reset();
+        assert_eq!(store.counters().chunk_loads(), 0);
+    }
+
+    #[test]
+    fn truncated_store_rejected() {
+        let ds = DataSpec::synthetic(8, 5, 2).generate(3);
+        let path = tmp("trunc.store");
+        write_dataset(&ds, 2, &path).unwrap();
+        let len = std::fs::metadata(&path).unwrap().len();
+        let f = std::fs::OpenOptions::new().write(true).open(&path).unwrap();
+        f.set_len(len - 8).unwrap();
+        drop(f);
+        assert!(ColumnStore::open(&path, 1 << 20).is_err());
+    }
+}

@@ -1,0 +1,331 @@
+//! Streaming writers for the `HSSRSTOR1` column store.
+//!
+//! Three producers, all with bounded memory:
+//!
+//! * [`convert_csv`] — the adoption path for external data
+//!   (`hssr convert data.csv data.store`). CSV arrives row-major while the
+//!   store is column-major, so the converter makes one cheap row-count
+//!   pass and then a single parse pass that **streams standardization**:
+//!   per-column Welford mean/variance accumulate while row blocks are
+//!   scattered to their final column offsets with positioned writes. The
+//!   chunk data stays *raw*; the center/scale stats land in the tail and
+//!   the reader applies `(x − center)/scale` at chunk load, so the full
+//!   `n×p` matrix is never resident during conversion (memory is one
+//!   row block plus the Welford state and `y`).
+//! * [`convert_bin`] — `HSSRBIN1` caches are already standardized and
+//!   column-major; the converter is a straight re-framed stream copy.
+//! * [`write_matrix`] / [`write_dataset`] — spill an in-memory
+//!   (standardized) design to a store, column-major sequential. This is
+//!   what `--engine ooc` uses to mount a generated dataset, and what the
+//!   equivalence tests use to get bit-exact values on disk.
+
+use std::fs::File;
+use std::io::{BufWriter, Read, Write};
+use std::path::Path;
+
+use super::format::{Header, HEADER_LEN};
+use super::pwrite;
+use crate::data::io::CsvRows;
+use crate::data::Dataset;
+use crate::error::{HssrError, Result};
+use crate::linalg::DenseMatrix;
+
+/// What a writer produced: the decoded header plus the file size.
+#[derive(Clone, Copy, Debug)]
+pub struct StoreSummary {
+    /// The header written.
+    pub header: Header,
+    /// Total bytes in the store file.
+    pub file_bytes: u64,
+}
+
+fn write_f64s<W: Write>(w: &mut W, vals: &[f64]) -> Result<()> {
+    // 8 KiB staging buffer keeps the syscall count low without holding
+    // more than a sliver of the data.
+    let mut buf = Vec::with_capacity(8192);
+    for chunk in vals.chunks(1024) {
+        buf.clear();
+        for v in chunk {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        w.write_all(&buf)?;
+    }
+    Ok(())
+}
+
+/// Write a column-major matrix (plus response and per-column stats) as a
+/// store. `standardized` declares whether `x` is already in paper
+/// condition (2) — if `true` the reader serves the values verbatim and
+/// `centers`/`scales` are carried as dataset metadata; if `false` the
+/// reader applies `(x − center)/scale` per column at chunk load.
+pub fn write_matrix(
+    x: &DenseMatrix,
+    y: &[f64],
+    centers: &[f64],
+    scales: &[f64],
+    standardized: bool,
+    chunk_cols: usize,
+    path: &Path,
+) -> Result<StoreSummary> {
+    let (n, p) = (x.nrows(), x.ncols());
+    if y.len() != n || centers.len() != p || scales.len() != p {
+        return Err(HssrError::Dimension(format!(
+            "store write: y/centers/scales lengths ({}, {}, {}) do not match n={n}, p={p}",
+            y.len(),
+            centers.len(),
+            scales.len()
+        )));
+    }
+    let header = Header { n, p, chunk_cols: chunk_cols.clamp(1, p.max(1)), standardized };
+    let mut w = BufWriter::new(File::create(path)?);
+    w.write_all(&header.encode())?;
+    // The backing slice is already column-major — the chunk layout is a
+    // pure re-framing of the same byte order.
+    write_f64s(&mut w, x.as_slice())?;
+    write_f64s(&mut w, y)?;
+    write_f64s(&mut w, centers)?;
+    write_f64s(&mut w, scales)?;
+    w.flush()?;
+    Ok(StoreSummary { header, file_bytes: header.file_len() })
+}
+
+/// Spill a standardized [`Dataset`] to a store (identity read transform;
+/// the dataset's centers/scales ride along as metadata).
+pub fn write_dataset(ds: &Dataset, chunk_cols: usize, path: &Path) -> Result<StoreSummary> {
+    write_matrix(&ds.x, &ds.y, &ds.centers, &ds.scales, true, chunk_cols, path)
+}
+
+/// Convert an `HSSRBIN1` binary cache (already standardized, column-major)
+/// to a store by streaming: the matrix payload is copied in fixed-size
+/// buffers, never fully resident.
+pub fn convert_bin(src: &Path, chunk_cols: usize, out: &Path) -> Result<StoreSummary> {
+    let mut r = std::io::BufReader::new(File::open(src)?);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != b"HSSRBIN1" {
+        return Err(HssrError::Config(format!(
+            "{}: not an HSSR binary cache",
+            src.display()
+        )));
+    }
+    let mut u = [0u8; 8];
+    r.read_exact(&mut u)?;
+    let n = u64::from_le_bytes(u) as usize;
+    r.read_exact(&mut u)?;
+    let p = u64::from_le_bytes(u) as usize;
+    if n == 0 || p == 0 {
+        return Err(HssrError::Config("binary cache is empty".into()));
+    }
+    // HSSRBIN layout: y, x, centers, scales. Store layout: x, y, centers,
+    // scales — so hold y (length n) and stream everything else.
+    let mut ybytes = vec![0u8; n * 8];
+    r.read_exact(&mut ybytes)?;
+    let header = Header { n, p, chunk_cols: chunk_cols.clamp(1, p), standardized: true };
+    let mut w = BufWriter::new(File::create(out)?);
+    w.write_all(&header.encode())?;
+    let mut remaining = (n * p * 8) as u64;
+    let mut buf = vec![0u8; 1 << 20];
+    while remaining > 0 {
+        let take = (buf.len() as u64).min(remaining) as usize;
+        r.read_exact(&mut buf[..take])?;
+        w.write_all(&buf[..take])?;
+        remaining -= take as u64;
+    }
+    w.write_all(&ybytes)?;
+    let mut stats = (2 * p * 8) as u64;
+    while stats > 0 {
+        let take = (buf.len() as u64).min(stats) as usize;
+        r.read_exact(&mut buf[..take])?;
+        w.write_all(&buf[..take])?;
+        stats -= take as u64;
+    }
+    w.flush()?;
+    Ok(StoreSummary { header, file_bytes: header.file_len() })
+}
+
+/// Per-column Welford accumulator (numerically stable streaming
+/// mean/variance — the "streaming standardization" state).
+#[derive(Clone, Copy, Default)]
+struct Welford {
+    count: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    fn push(&mut self, x: f64) {
+        self.count += 1;
+        let d = x - self.mean;
+        self.mean += d / self.count as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    /// Population scale `√(Σ(x−x̄)²/n)`; 0 marks a constant column (the
+    /// same `1e-12` threshold as
+    /// [`crate::data::standardize::standardize_in_place`]).
+    fn scale(&self) -> f64 {
+        let sd = (self.m2 / self.count.max(1) as f64).sqrt();
+        if sd > 1e-12 {
+            sd
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Convert a CSV file (`y, x1, …, xp` per row, `#` comments and an
+/// optional header skipped — the same dialect as
+/// [`crate::data::io::load_csv`]) to a store, with streaming
+/// standardization. Returns the summary of the written store.
+pub fn convert_csv(src: &Path, chunk_cols: usize, out: &Path) -> Result<StoreSummary> {
+    // Pass 1: count data rows (and learn the width) without buffering.
+    let mut n = 0usize;
+    let mut width = 0usize;
+    for row in CsvRows::open(src)? {
+        let row = row?;
+        width = row.len();
+        n += 1;
+    }
+    if n == 0 {
+        return Err(HssrError::Config("csv: no data rows".into()));
+    }
+    if width < 2 {
+        return Err(HssrError::Config("csv needs ≥ 2 columns (y + features)".into()));
+    }
+    let p = width - 1;
+    let header = Header { n, p, chunk_cols: chunk_cols.clamp(1, p), standardized: false };
+
+    // Pass 2: stream rows, scattering row blocks to their final
+    // column-major offsets while the Welford state accumulates.
+    let file = File::create(out)?;
+    pwrite(&file, &header.encode(), 0)?;
+    let block_rows = ((4 << 20) / (p * 8)).clamp(1, n);
+    let mut block: Vec<Vec<f64>> = vec![Vec::with_capacity(block_rows); p];
+    let mut stats = vec![Welford::default(); p];
+    let mut y = Vec::with_capacity(n);
+    let mut rows_done = 0usize;
+    let mut colbytes = Vec::with_capacity(block_rows * 8);
+    let mut flush = |block: &mut Vec<Vec<f64>>, rows_done: usize| -> Result<()> {
+        for (j, col) in block.iter_mut().enumerate() {
+            if col.is_empty() {
+                continue;
+            }
+            colbytes.clear();
+            for v in col.iter() {
+                colbytes.extend_from_slice(&v.to_le_bytes());
+            }
+            let off = HEADER_LEN + ((j * n + rows_done) * 8) as u64;
+            pwrite(&file, &colbytes, off)?;
+            col.clear();
+        }
+        Ok(())
+    };
+    for row in CsvRows::open(src)? {
+        let row = row?;
+        if row.len() != width {
+            return Err(HssrError::Dimension(format!(
+                "csv changed width mid-stream ({} vs {width})",
+                row.len()
+            )));
+        }
+        if y.len() == n {
+            return Err(HssrError::Dimension(
+                "csv grew between passes (more rows than counted)".into(),
+            ));
+        }
+        y.push(row[0]);
+        for j in 0..p {
+            let v = row[j + 1];
+            stats[j].push(v);
+            block[j].push(v);
+        }
+        if block[0].len() == block_rows {
+            flush(&mut block, rows_done)?;
+            rows_done += block_rows;
+        }
+    }
+    let tail_rows = block[0].len();
+    flush(&mut block, rows_done)?;
+    rows_done += tail_rows;
+    if rows_done != n {
+        return Err(HssrError::Dimension(format!(
+            "csv shrank between passes ({rows_done} rows vs {n} counted)"
+        )));
+    }
+
+    // Tail: centered y, then the streaming centers/scales.
+    let ybar = y.iter().sum::<f64>() / n as f64;
+    for v in y.iter_mut() {
+        *v -= ybar;
+    }
+    let centers: Vec<f64> = stats.iter().map(|s| s.mean).collect();
+    let scales: Vec<f64> = stats.iter().map(|s| s.scale()).collect();
+    let mut tail = Vec::with_capacity((n + 2 * p) * 8);
+    for v in y.iter().chain(&centers).chain(&scales) {
+        tail.extend_from_slice(&v.to_le_bytes());
+    }
+    pwrite(&file, &tail, header.tail_offset())?;
+    file.sync_all().ok();
+    Ok(StoreSummary { header, file_bytes: header.file_len() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("hssr_store_writer_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn welford_matches_two_pass() {
+        let xs = [3.0, -1.5, 2.25, 0.5, 9.0, -4.0];
+        let mut w = Welford::default();
+        for &x in &xs {
+            w.push(x);
+        }
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / xs.len() as f64;
+        assert!((w.mean - mean).abs() < 1e-12);
+        assert!((w.scale() - var.sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn welford_constant_column_zero_scale() {
+        let mut w = Welford::default();
+        for _ in 0..10 {
+            w.push(7.0);
+        }
+        assert_eq!(w.scale(), 0.0);
+    }
+
+    #[test]
+    fn write_matrix_rejects_bad_dims() {
+        let x = DenseMatrix::zeros(4, 3);
+        let err = write_matrix(
+            &x,
+            &[0.0; 3], // wrong length
+            &[0.0; 3],
+            &[1.0; 3],
+            true,
+            2,
+            &tmp("bad.store"),
+        );
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn convert_bin_roundtrips_header() {
+        use crate::data::DataSpec;
+        let ds = DataSpec::synthetic(12, 7, 2).generate(3);
+        let bin = tmp("cb.bin");
+        crate::data::io::save_bin(&ds, &bin).unwrap();
+        let out = tmp("cb.store");
+        let s = convert_bin(&bin, 3, &out).unwrap();
+        assert_eq!((s.header.n, s.header.p, s.header.chunk_cols), (12, 7, 3));
+        assert!(s.header.standardized);
+        assert_eq!(std::fs::metadata(&out).unwrap().len(), s.file_bytes);
+    }
+}

@@ -47,6 +47,12 @@
 //!   `available_parallelism()`, read once at pool creation).
 //! * `HSSR_FUSED` — `0` flips every config's `fused` default to the
 //!   unfused scan-then-filter drivers (CI runs the suite both ways).
+//! * `HSSR_ENGINE` — `ooc` reroutes the default-engine `fit_*` shims
+//!   through an out-of-core spill store ([`runtime::ooc`]), so every
+//!   screening/KKT scan is served from disk (CI runs the suite this way
+//!   under a tiny cache budget).
+//! * `HSSR_CACHE_MB` — chunk-cache budget (megabytes) for the out-of-core
+//!   column store ([`data::store`]; default 64).
 //!
 //! ## Quickstart
 //!

@@ -2,24 +2,30 @@
 //!
 //! ```text
 //! hssr fit   [--data synth|gene|mnist|gwas|nyt] [--n N] [--p P] [--rule METHOD]
-//!            [--alpha A] [--nlambda K] [--lmin-ratio R] [--seed S] [--engine native|pjrt]
+//!            [--alpha A] [--nlambda K] [--lmin-ratio R] [--seed S]
+//!            [--engine native|pjrt|ooc] [--cache-mb M]
 //! hssr group [--data synth|grvs|spline] [--groups G] [--gsize W] [--rule METHOD]
 //!            [--alpha A]                              # group elastic net when A < 1
 //! hssr power [--data gene] [--n N] [--p P]          # Figure-1 style curves
 //! hssr cv    [--folds K] [--data ...]                # k-fold CV for λ
 //! hssr logistic [--n N] [--p P] [--rule basic|ac|ssr|ssr-gapsafe]
-//!               [--engine native|pjrt]               # sparse logistic path (§6)
+//!               [--engine native|pjrt|ooc]           # sparse logistic path (§6)
+//! hssr convert <in.csv|in.bin> <out.store> [--chunk-cols C]
+//!                                # stream CSV/HSSRBIN to the out-of-core store
 //! hssr info                                          # build/runtime info
 //! ```
 //!
-//! `--data csv --path file.csv` loads external data (response in column 1).
+//! `--data csv --path file.csv` loads external data (response in column 1);
+//! `--data store --path file.store` loads a converted column store, and with
+//! `--engine ooc` serves every screening/KKT scan from that store through a
+//! bounded chunk cache (`HSSR_CACHE_MB` or `--cache-mb`).
 
 use hssr::coordinator::config::{parse_rule, Config};
 use hssr::coordinator::metrics::screening_power;
 use hssr::coordinator::report::Table;
-use hssr::data::{bspline, realistic, synth, DataSpec, Dataset, GroupedDataset};
+use hssr::data::{bspline, realistic, store, synth, DataSpec, Dataset, GroupedDataset};
 use hssr::error::{HssrError, Result};
-use hssr::runtime::{make_engine, EngineKind};
+use hssr::runtime::{make_engine, ooc::OocEngine, EngineKind, ScanEngine};
 use hssr::screening::RuleKind;
 use hssr::solver::group_path::{fit_group_path, GroupPathConfig};
 use hssr::solver::path::{fit_lasso_path_with_engine, PathConfig};
@@ -27,10 +33,34 @@ use hssr::solver::Penalty;
 
 fn usage() -> ! {
     eprintln!(
-        "usage: hssr <fit|group|power|cv|logistic|info> [--key value ...]\n\
+        "usage: hssr <fit|group|power|cv|logistic|convert|info> [--key value ...]\n\
          see README.md for the full flag reference"
     );
     std::process::exit(2);
+}
+
+/// Cache budget in bytes: `--cache-mb` beats `HSSR_CACHE_MB` beats the
+/// default.
+fn cache_budget_from(cfg: &Config) -> usize {
+    match cfg.get("cache-mb") {
+        Some(v) => store::parse_cache_mb(Some(v), store::DEFAULT_CACHE_MB) << 20,
+        None => store::cache_budget_bytes(),
+    }
+}
+
+/// Mount the out-of-core engine for a fit: reuse the store file when the
+/// data came from one (`--data store --path …`), else spill the generated
+/// dataset to a temp store.
+fn ooc_engine_for(cfg: &Config, x: &hssr::linalg::DenseMatrix, y: &[f64]) -> Result<OocEngine> {
+    let budget = cache_budget_from(cfg);
+    if cfg.get_str("data", "synth") == "store" {
+        let path = cfg
+            .get("path")
+            .ok_or_else(|| HssrError::Config("--data store requires --path".into()))?;
+        return OocEngine::open(std::path::Path::new(path), budget);
+    }
+    eprintln!("spilling design to a temp store (budget {} MB)…", budget >> 20);
+    OocEngine::spill(x, y, budget)
 }
 
 fn dataset_from_cfg(cfg: &Config) -> Result<Dataset> {
@@ -65,6 +95,14 @@ fn dataset_from_cfg(cfg: &Config) -> Result<Dataset> {
             eprintln!("loading {path}…");
             return hssr::data::io::load_csv(std::path::Path::new(path));
         }
+        "store" => {
+            let path = cfg
+                .get("path")
+                .ok_or_else(|| HssrError::Config("--data store requires --path".into()))?;
+            eprintln!("loading store {path}…");
+            let st = store::ColumnStore::open(std::path::Path::new(path), 1 << 20)?;
+            return st.to_dataset();
+        }
         other => {
             return Err(HssrError::Config(format!("unknown --data '{other}'")));
         }
@@ -95,9 +133,20 @@ fn cmd_fit(cfg: &Config) -> Result<()> {
     let ds = dataset_from_cfg(cfg)?;
     let pcfg = path_config_from(cfg)?;
     let engine_kind = EngineKind::parse(&cfg.get_str("engine", "native"))
-        .ok_or_else(|| HssrError::Config("engine must be native|pjrt".into()))?;
-    let engine = make_engine(engine_kind, &cfg.get_str("artifacts", "artifacts"))?;
-    let fit = fit_lasso_path_with_engine(&ds, &pcfg, engine.as_ref())?;
+        .ok_or_else(|| HssrError::Config("engine must be native|pjrt|ooc".into()))?;
+    let ooc = match engine_kind {
+        EngineKind::Ooc => Some(ooc_engine_for(cfg, &ds.x, &ds.y)?),
+        _ => None,
+    };
+    let boxed;
+    let engine: &dyn ScanEngine = match &ooc {
+        Some(e) => e,
+        None => {
+            boxed = make_engine(engine_kind, &cfg.get_str("artifacts", "artifacts"))?;
+            boxed.as_ref()
+        }
+    };
+    let fit = fit_lasso_path_with_engine(&ds, &pcfg, engine)?;
     println!(
         "fitted {} over {} λ values in {:.3}s  (rule {}, engine {})",
         ds.name,
@@ -130,6 +179,65 @@ fn cmd_fit(cfg: &Config) -> Result<()> {
         fit.total_cols_scanned(),
         fit.total_kkt_checks(),
         fit.total_violations()
+    );
+    if let Some(e) = &ooc {
+        let c = e.store().counters();
+        println!(
+            "ooc I/O: {} cols served, {} chunk loads, {:.1} MB read from disk, \
+             {} cache hits, peak resident {:.1} MB (budget {:.0} MB, matrix {:.1} MB)",
+            c.cols_fetched(),
+            c.chunk_loads(),
+            c.bytes_read() as f64 / 1e6,
+            c.cache_hits(),
+            c.peak_resident() as f64 / 1e6,
+            e.store().budget_bytes() as f64 / 1e6,
+            e.store().header().matrix_bytes() as f64 / 1e6,
+        );
+    }
+    Ok(())
+}
+
+/// `hssr convert <in.csv|in.bin> <out.store>` — stream external data to
+/// the out-of-core column store. The input format is sniffed from the
+/// `HSSRBIN1` magic; anything else is parsed as CSV with streaming
+/// (Welford) standardization.
+fn cmd_convert(cfg: &Config) -> Result<()> {
+    let [input, output] = match cfg.positional.as_slice() {
+        [a, b] => [a.clone(), b.clone()],
+        _ => {
+            return Err(HssrError::Config(
+                "convert needs two positional args: <in.csv|in.bin> <out.store>".into(),
+            ))
+        }
+    };
+    let chunk_cols = cfg.get_parse("chunk-cols", 256usize)?;
+    let inp = std::path::Path::new(&input);
+    let outp = std::path::Path::new(&output);
+    let mut magic = [0u8; 8];
+    let is_bin = std::fs::File::open(inp).and_then(|mut f| {
+        use std::io::Read;
+        f.read_exact(&mut magic)
+    });
+    let summary = match is_bin {
+        Ok(()) if &magic == b"HSSRBIN1" => {
+            eprintln!("converting binary cache {input} → {output}…");
+            store::convert_bin(inp, chunk_cols, outp)?
+        }
+        _ => {
+            eprintln!("converting csv {input} → {output} (streaming standardization)…");
+            store::convert_csv(inp, chunk_cols, outp)?
+        }
+    };
+    let h = summary.header;
+    println!(
+        "wrote {output}: n={}, p={}, {} chunks × {} cols, {:.1} MB \
+         ({}; fit with: hssr fit --data store --path {output} --engine ooc)",
+        h.n,
+        h.p,
+        h.num_chunks(),
+        h.chunk_cols,
+        summary.file_bytes as f64 / 1e6,
+        if h.standardized { "pre-standardized" } else { "raw + read-time standardization" },
     );
     Ok(())
 }
@@ -270,9 +378,20 @@ fn cmd_logistic(cfg: &Config) -> Result<()> {
         ..Default::default()
     };
     let engine_kind = EngineKind::parse(&cfg.get_str("engine", "native"))
-        .ok_or_else(|| HssrError::Config("engine must be native|pjrt".into()))?;
-    let engine = make_engine(engine_kind, &cfg.get_str("artifacts", "artifacts"))?;
-    let fit = fit_logistic_path_with_engine(&x, &y, &lcfg, engine.as_ref())?;
+        .ok_or_else(|| HssrError::Config("engine must be native|pjrt|ooc".into()))?;
+    let ooc = match engine_kind {
+        EngineKind::Ooc => Some(OocEngine::spill(&x, &y, cache_budget_from(cfg))?),
+        _ => None,
+    };
+    let boxed;
+    let engine: &dyn ScanEngine = match &ooc {
+        Some(e) => e,
+        None => {
+            boxed = make_engine(engine_kind, &cfg.get_str("artifacts", "artifacts"))?;
+            boxed.as_ref()
+        }
+    };
+    let fit = fit_logistic_path_with_engine(&x, &y, &lcfg, engine)?;
     println!(
         "logistic path (n={n}, p={p}) fitted in {:.3}s (rule {}, engine {})",
         fit.seconds,
@@ -316,6 +435,7 @@ fn main() {
         "power" => cmd_power(&cfg),
         "cv" => cmd_cv(&cfg),
         "logistic" => cmd_logistic(&cfg),
+        "convert" => cmd_convert(&cfg),
         "info" => cmd_info(),
         _ => usage(),
     };

@@ -1,7 +1,7 @@
 //! Execution engines for the screening scan `z = Xᵀr/n` — the hot compute
 //! of every rule and of KKT checking.
 //!
-//! Two interchangeable engines implement [`ScanEngine`]:
+//! Three interchangeable engines implement [`ScanEngine`]:
 //!
 //! * [`native::NativeEngine`] — blocked pure-Rust kernels dispatched on the
 //!   persistent [`crate::linalg::pool`] worker pool (the default; fastest
@@ -14,6 +14,11 @@
 //!   the L1/L2/L3 composition path: the same kernel validated against the
 //!   pure-jnp oracle in `python/tests` runs inside the Rust coordinator
 //!   with *no Python at runtime*.
+//! * [`ooc::OocEngine`] — out-of-core: scans served from the disk-backed
+//!   [`crate::data::store::ColumnStore`] through a bounded LRU chunk cache
+//!   (`--engine ooc`, `HSSR_CACHE_MB`), reporting real I/O per rule. It
+//!   keeps the scan-then-filter fused defaults so every column read is a
+//!   counted store fetch, with selections bit-identical to native.
 //!
 //! ## Fused entry points
 //!
@@ -34,6 +39,7 @@
 //! `python/compile/aot.py` for the tile shapes emitted.
 
 pub mod native;
+pub mod ooc;
 pub mod pjrt;
 
 use crate::error::Result;
@@ -291,6 +297,9 @@ pub enum EngineKind {
     Native,
     /// AOT JAX/Pallas artifacts through PJRT.
     Pjrt,
+    /// Out-of-core: scans served from a disk-backed column store through
+    /// a bounded LRU chunk cache ([`ooc::OocEngine`], `HSSR_CACHE_MB`).
+    Ooc,
 }
 
 impl EngineKind {
@@ -299,6 +308,7 @@ impl EngineKind {
         match s.to_ascii_lowercase().as_str() {
             "native" => Some(EngineKind::Native),
             "pjrt" | "xla" => Some(EngineKind::Pjrt),
+            "ooc" | "store" => Some(EngineKind::Ooc),
             _ => None,
         }
     }
@@ -306,11 +316,19 @@ impl EngineKind {
 
 /// Build an engine. For [`EngineKind::Pjrt`], `artifact_dir` must contain
 /// the HLO artifacts (default `artifacts/`) and the crate must be built
-/// with the `pjrt` feature.
+/// with the `pjrt` feature. [`EngineKind::Ooc`] cannot be built here —
+/// an out-of-core engine is mounted *on data* ([`ooc::OocEngine::open`] on
+/// a converted store, or [`ooc::OocEngine::spill`] for an in-memory
+/// design); the CLI wires this per command.
 pub fn make_engine(kind: EngineKind, artifact_dir: &str) -> Result<Box<dyn ScanEngine>> {
     match kind {
         EngineKind::Native => Ok(Box::new(native::NativeEngine::new())),
         EngineKind::Pjrt => Ok(Box::new(pjrt::PjrtEngine::load(artifact_dir)?)),
+        EngineKind::Ooc => Err(crate::error::HssrError::Config(
+            "the ooc engine is mounted on a store, not built standalone — \
+             use OocEngine::open/spill (the CLI does this for --engine ooc)"
+                .into(),
+        )),
     }
 }
 
@@ -323,7 +341,10 @@ mod tests {
         assert_eq!(EngineKind::parse("native"), Some(EngineKind::Native));
         assert_eq!(EngineKind::parse("PJRT"), Some(EngineKind::Pjrt));
         assert_eq!(EngineKind::parse("xla"), Some(EngineKind::Pjrt));
+        assert_eq!(EngineKind::parse("ooc"), Some(EngineKind::Ooc));
+        assert_eq!(EngineKind::parse("STORE"), Some(EngineKind::Ooc));
         assert_eq!(EngineKind::parse("gpu"), None);
+        assert!(make_engine(EngineKind::Ooc, "artifacts").is_err());
     }
 
     /// The default (scan-then-filter) fused implementations must select

@@ -32,7 +32,9 @@
 //! `z̃_u` and the dual feasibility scaling `s` at once.
 
 use super::{group::GroupSafeContext, PrevSolution, SafeContext, SafeRule};
-use crate::linalg::{blocked, ops, DenseMatrix};
+use crate::error::Result;
+use crate::linalg::{ops, DenseMatrix};
+use crate::runtime::{native::NativeEngine, ScanEngine};
 use crate::solver::duality;
 use crate::solver::Penalty;
 
@@ -83,19 +85,24 @@ impl GapSafe {
     }
 
     /// One full scan at `prev`'s iterate: fill `self.zt` with `|z̃_j|`,
-    /// build the dual ball, and return the test scalars. `None` ⇔ no valid
-    /// dual point exists at this iterate (the rule is powerless, never
-    /// unsafe).
+    /// build the dual ball, and return the test scalars. The scan is
+    /// dispatched through `engine` (and its `p` columns added to
+    /// `*scanned`) so chunked/OOC accounting sees the rule's own
+    /// traversal. `Ok(None)` ⇔ no valid dual point exists at this iterate
+    /// (the rule is powerless, never unsafe).
     fn prepare(
         &mut self,
+        engine: &dyn ScanEngine,
         x: &DenseMatrix,
         ctx: &SafeContext,
         prev: &PrevSolution<'_>,
         lam: f64,
-    ) -> Option<Scalars> {
+        scanned: &mut u64,
+    ) -> Result<Option<Scalars>> {
         let p = ctx.p;
         self.zt.resize(p, 0.0);
-        blocked::scan_all(x, prev.r, &mut self.zt);
+        engine.scan_all(x, prev.r, &mut self.zt)?;
+        *scanned += p as u64;
         let ridge = ctx.penalty.l2_weight() * lam;
         let mut pen_l1 = 0.0;
         let mut beta_sq = 0.0;
@@ -116,11 +123,20 @@ impl GapSafe {
             GapLoss::Quadratic => duality::quadratic_ball(
                 &ctx.y, prev.r, beta_sq, pen_l1, feas, lam, ctx.penalty,
             ),
-            GapLoss::Logistic => duality::logistic_ball(
-                &ctx.y, prev.r, beta_sq, pen_l1, feas, lam, ctx.penalty,
-            )?,
+            GapLoss::Logistic => {
+                match duality::logistic_ball(
+                    &ctx.y, prev.r, beta_sq, pen_l1, feas, lam, ctx.penalty,
+                ) {
+                    Some(b) => b,
+                    None => return Ok(None),
+                }
+            }
         };
-        Some(Scalars { s: ball.scaling, rho: ball.rho, thresh: ctx.penalty.alpha() * lam })
+        Ok(Some(Scalars {
+            s: ball.scaling,
+            rho: ball.rho,
+            thresh: ctx.penalty.alpha() * lam,
+        }))
     }
 }
 
@@ -140,17 +156,9 @@ impl SafeRule for GapSafe {
         lam_next: f64,
         survive: &mut [bool],
     ) -> usize {
-        let Some(sc) = self.prepare(x, ctx, prev, lam_next) else {
-            return 0;
-        };
-        let mut discarded = 0;
-        for (zj, sj) in self.zt.iter().zip(survive.iter_mut()) {
-            if *sj && zj / sc.s + sc.rho < sc.thresh {
-                *sj = false;
-                discarded += 1;
-            }
-        }
-        discarded
+        let mut scanned = 0u64;
+        self.screen_routed(&NativeEngine::new(), x, ctx, prev, lam_next, survive, &mut scanned)
+            .expect("native scans are infallible")
     }
 
     fn dead(&self) -> bool {
@@ -171,16 +179,69 @@ impl SafeRule for GapSafe {
         ctx: &'s SafeContext,
         prev: &PrevSolution<'_>,
         lam_next: f64,
-        _survive: &mut [bool],
+        survive: &mut [bool],
         masked_discards: &mut usize,
     ) -> Option<Box<dyn Fn(usize) -> bool + Sync + 's>> {
+        let mut scanned = 0u64;
+        self.plan_routed(
+            &NativeEngine::new(),
+            x,
+            ctx,
+            prev,
+            lam_next,
+            survive,
+            masked_discards,
+            &mut scanned,
+        )
+        .expect("native scans are infallible")
+    }
+
+    /// The engine-routed screen: one counted `O(np)` traversal through
+    /// `engine`, then the pointwise ball test.
+    fn screen_routed(
+        &mut self,
+        engine: &dyn ScanEngine,
+        x: &DenseMatrix,
+        ctx: &SafeContext,
+        prev: &PrevSolution<'_>,
+        lam_next: f64,
+        survive: &mut [bool],
+        scanned: &mut u64,
+    ) -> Result<usize> {
+        let Some(sc) = self.prepare(engine, x, ctx, prev, lam_next, scanned)? else {
+            return Ok(0);
+        };
+        let mut discarded = 0;
+        for (zj, sj) in self.zt.iter().zip(survive.iter_mut()) {
+            if *sj && zj / sc.s + sc.rho < sc.thresh {
+                *sj = false;
+                discarded += 1;
+            }
+        }
+        Ok(discarded)
+    }
+
+    /// The engine-routed plan — decisions bit-identical to
+    /// [`GapSafe::screen`], traversal counted like
+    /// [`SafeRule::screen_routed`].
+    fn plan_routed<'s>(
+        &'s mut self,
+        engine: &dyn ScanEngine,
+        x: &DenseMatrix,
+        ctx: &'s SafeContext,
+        prev: &PrevSolution<'_>,
+        lam_next: f64,
+        _survive: &mut [bool],
+        masked_discards: &mut usize,
+        scanned: &mut u64,
+    ) -> Result<Option<Box<dyn Fn(usize) -> bool + Sync + 's>>> {
         *masked_discards = 0;
-        match self.prepare(x, ctx, prev, lam_next) {
-            None => Some(Box::new(|_| true)), // powerless: keep everything
+        match self.prepare(engine, x, ctx, prev, lam_next, scanned)? {
+            None => Ok(Some(Box::new(|_| true))), // powerless: keep everything
             Some(sc) => {
                 let zt = &self.zt;
                 // exact complement of `screen`'s discard test
-                Some(Box::new(move |j: usize| zt[j] / sc.s + sc.rho >= sc.thresh))
+                Ok(Some(Box::new(move |j: usize| zt[j] / sc.s + sc.rho >= sc.thresh)))
             }
         }
     }
@@ -204,18 +265,22 @@ impl GroupGapSafe {
     }
 
     /// Group analogue of [`GapSafe::prepare`]: fill `self.zt` with
-    /// `‖z̃_g‖` and return the test scalars.
+    /// `‖z̃_g‖` and return the test scalars. The column traversal goes
+    /// through `engine` and is added to `*scanned`.
     fn prepare(
         &mut self,
+        engine: &dyn ScanEngine,
         x: &DenseMatrix,
         ctx: &GroupSafeContext,
         prev: &PrevSolution<'_>,
         lam: f64,
-    ) -> Scalars {
+        scanned: &mut u64,
+    ) -> Result<Scalars> {
         let p = ctx.p;
         let g_count = ctx.layout.num_groups();
         self.cols.resize(p, 0.0);
-        blocked::scan_all(x, prev.r, &mut self.cols);
+        engine.scan_all(x, prev.r, &mut self.cols)?;
+        *scanned += p as u64;
         let ridge = ctx.penalty.l2_weight() * lam;
         let mut pen_l1 = 0.0;
         let mut beta_sq = 0.0;
@@ -240,7 +305,7 @@ impl GroupGapSafe {
         }
         let ball =
             duality::quadratic_ball(&ctx.y, prev.r, beta_sq, pen_l1, feas, lam, ctx.penalty);
-        Scalars { s: ball.scaling, rho: ball.rho, thresh: ctx.penalty.alpha() * lam }
+        Ok(Scalars { s: ball.scaling, rho: ball.rho, thresh: ctx.penalty.alpha() * lam })
     }
 }
 
@@ -257,16 +322,9 @@ impl SafeRule<GroupSafeContext> for GroupGapSafe {
         lam_next: f64,
         survive: &mut [bool],
     ) -> usize {
-        let sc = self.prepare(x, ctx, prev, lam_next);
-        let mut discarded = 0;
-        for (g, sg) in survive.iter_mut().enumerate() {
-            let w_sqrt = (ctx.layout.sizes[g] as f64).sqrt();
-            if *sg && self.zt[g] / sc.s + sc.rho < sc.thresh * w_sqrt {
-                *sg = false;
-                discarded += 1;
-            }
-        }
-        discarded
+        let mut scanned = 0u64;
+        self.screen_routed(&NativeEngine::new(), x, ctx, prev, lam_next, survive, &mut scanned)
+            .expect("native scans are infallible")
     }
 
     fn dead(&self) -> bool {
@@ -285,18 +343,68 @@ impl SafeRule<GroupSafeContext> for GroupGapSafe {
         ctx: &'s GroupSafeContext,
         prev: &PrevSolution<'_>,
         lam_next: f64,
-        _survive: &mut [bool],
+        survive: &mut [bool],
         masked_discards: &mut usize,
     ) -> Option<Box<dyn Fn(usize) -> bool + Sync + 's>> {
+        let mut scanned = 0u64;
+        self.plan_routed(
+            &NativeEngine::new(),
+            x,
+            ctx,
+            prev,
+            lam_next,
+            survive,
+            masked_discards,
+            &mut scanned,
+        )
+        .expect("native scans are infallible")
+    }
+
+    /// Engine-routed group screen: one counted `O(np)` traversal.
+    fn screen_routed(
+        &mut self,
+        engine: &dyn ScanEngine,
+        x: &DenseMatrix,
+        ctx: &GroupSafeContext,
+        prev: &PrevSolution<'_>,
+        lam_next: f64,
+        survive: &mut [bool],
+        scanned: &mut u64,
+    ) -> Result<usize> {
+        let sc = self.prepare(engine, x, ctx, prev, lam_next, scanned)?;
+        let mut discarded = 0;
+        for (g, sg) in survive.iter_mut().enumerate() {
+            let w_sqrt = (ctx.layout.sizes[g] as f64).sqrt();
+            if *sg && self.zt[g] / sc.s + sc.rho < sc.thresh * w_sqrt {
+                *sg = false;
+                discarded += 1;
+            }
+        }
+        Ok(discarded)
+    }
+
+    /// Engine-routed group plan — decisions bit-identical to
+    /// [`GroupGapSafe::screen`].
+    fn plan_routed<'s>(
+        &'s mut self,
+        engine: &dyn ScanEngine,
+        x: &DenseMatrix,
+        ctx: &'s GroupSafeContext,
+        prev: &PrevSolution<'_>,
+        lam_next: f64,
+        _survive: &mut [bool],
+        masked_discards: &mut usize,
+        scanned: &mut u64,
+    ) -> Result<Option<Box<dyn Fn(usize) -> bool + Sync + 's>>> {
         *masked_discards = 0;
-        let sc = self.prepare(x, ctx, prev, lam_next);
+        let sc = self.prepare(engine, x, ctx, prev, lam_next, scanned)?;
         let zt = &self.zt;
         let sizes = &ctx.layout.sizes;
         // exact complement of `screen`'s discard test
-        Some(Box::new(move |g: usize| {
+        Ok(Some(Box::new(move |g: usize| {
             let w_sqrt = (sizes[g] as f64).sqrt();
             zt[g] / sc.s + sc.rho >= sc.thresh * w_sqrt
-        }))
+        })))
     }
 }
 
@@ -330,6 +438,7 @@ mod tests {
     use super::*;
     use crate::data::synth::generate_grouped;
     use crate::data::DataSpec;
+    use crate::linalg::blocked;
 
     fn ctx_for(seed: u64, penalty: Penalty) -> (crate::data::Dataset, SafeContext) {
         let ds = DataSpec::synthetic(60, 40, 4).generate(seed);

@@ -255,6 +255,48 @@ pub trait SafeRule<C = SafeContext>: Send {
         *masked_discards = self.screen(x, ctx, prev, lam_next, survive);
         None
     }
+
+    /// Engine-routed [`SafeRule::screen`]. Rules that traverse `X` *inside*
+    /// the rule (the dynamic gap-safe family's full `z̃ = Xᵀr/n` scan)
+    /// override this to dispatch that traversal through `engine` — so a
+    /// chunked or out-of-core engine both serves and **counts** the reads —
+    /// and add the columns read to `*scanned` (the caller folds them into
+    /// `LambdaMetrics::cols_scanned`, keeping the path's accounting equal
+    /// to the store's fetch counters). Static rules screen purely from
+    /// per-fit precomputes; this default keeps them engine-free.
+    #[allow(clippy::too_many_arguments)]
+    fn screen_routed(
+        &mut self,
+        engine: &dyn crate::runtime::ScanEngine,
+        x: &DenseMatrix,
+        ctx: &C,
+        prev: &PrevSolution<'_>,
+        lam_next: f64,
+        survive: &mut [bool],
+        scanned: &mut u64,
+    ) -> crate::error::Result<usize> {
+        let _ = (engine, &scanned);
+        Ok(self.screen(x, ctx, prev, lam_next, survive))
+    }
+
+    /// Engine-routed [`SafeRule::plan`] — same contract as `plan`, with the
+    /// in-rule traversal dispatched and accounted like
+    /// [`SafeRule::screen_routed`].
+    #[allow(clippy::too_many_arguments)]
+    fn plan_routed<'s>(
+        &'s mut self,
+        engine: &dyn crate::runtime::ScanEngine,
+        x: &DenseMatrix,
+        ctx: &'s C,
+        prev: &PrevSolution<'_>,
+        lam_next: f64,
+        survive: &mut [bool],
+        masked_discards: &mut usize,
+        scanned: &mut u64,
+    ) -> crate::error::Result<Option<Box<dyn Fn(usize) -> bool + Sync + 's>>> {
+        let _ = (engine, &scanned);
+        Ok(self.plan(x, ctx, prev, lam_next, survive, masked_discards))
+    }
 }
 
 /// Construct the safe rule (if any) used by a [`RuleKind`] strategy.

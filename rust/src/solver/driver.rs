@@ -38,7 +38,7 @@
 
 use std::time::Instant;
 
-use crate::error::Result;
+use crate::error::{HssrError, Result};
 use crate::screening::RuleKind;
 use crate::solver::lambda::GridKind;
 
@@ -242,6 +242,133 @@ pub trait Problem {
 
     /// Objective value at the current iterate.
     fn objective(&self, lam: f64) -> f64;
+}
+
+/// Materialize screen-stage discards of still-live units — shared by the
+/// three families' `zero_discarded` steps. For every unit with
+/// `survive[u] == false`, `evict(u)` zeroes its coefficients back into the
+/// residual and reports whether anything actually moved; returns `true`
+/// when any unit did (the caller invalidates its lazy correlations).
+pub fn zero_discarded_units(
+    survive: &[bool],
+    mut evict: impl FnMut(usize) -> bool,
+) -> bool {
+    let mut changed = false;
+    for (u, &s) in survive.iter().enumerate() {
+        if !s && evict(u) {
+            changed = true;
+        }
+    }
+    changed
+}
+
+/// Apply a freshly-computed dynamic-rule `mask` to `survive` — the shared
+/// tail of every family's [`Problem::rescreen`]: strong units stay (the
+/// optimizer owns them), and so does any unit still carrying a warm-start
+/// coefficient (`unit_live`) — dropping it would orphan the stale β past
+/// the KKT backstop; the KKT pass re-adds such units if needed. Returns
+/// the number of units discarded.
+pub fn apply_rescreen_mask(
+    survive: &mut [bool],
+    mask: &[bool],
+    in_strong: &[bool],
+    mut unit_live: impl FnMut(usize) -> bool,
+) -> usize {
+    let mut discarded = 0;
+    for u in 0..mask.len() {
+        if survive[u] && !mask[u] && !in_strong[u] && !unit_live(u) {
+            survive[u] = false;
+            discarded += 1;
+        }
+    }
+    discarded
+}
+
+/// Drop working-set units the dynamic rule no longer keeps, calling
+/// `evict` for each pruned unit (the family zeroes its coefficients back
+/// into the residual there). Returns the number of units pruned — shared
+/// by the families' mid-solve burst prunes.
+pub fn prune_working_set(
+    work: &mut Vec<usize>,
+    keep: &[bool],
+    mut evict: impl FnMut(usize),
+) -> usize {
+    let before = work.len();
+    work.retain(|&u| {
+        if keep[u] {
+            true
+        } else {
+            evict(u);
+            false
+        }
+    });
+    before - work.len()
+}
+
+/// The family-specific slice of the shared dynamic burst solve
+/// ([`dynamic_burst_solve`]): one optimizer cycle, the gap-safe keep-mask
+/// at the current iterate, and coefficient eviction.
+pub trait BurstProblem {
+    /// Run one optimizer epoch over `work` (a CD or GD cycle), updating
+    /// `m.coord_updates`, and return the cycle's max coefficient delta.
+    fn cycle(&mut self, work: &[usize], m: &mut LambdaMetrics) -> f64;
+
+    /// Fire the dynamic rule at the *current* iterate, clearing `keep[u]`
+    /// for units certified inactive at this λ. Scans must be accounted
+    /// into `m.cols_scanned` when engine-routed.
+    fn rescreen_keep(&mut self, keep: &mut [bool], m: &mut LambdaMetrics) -> Result<()>;
+
+    /// Zero a pruned unit's coefficients back into the residual.
+    fn evict(&mut self, unit: usize);
+}
+
+/// The dynamic (gap-safe) inner solve shared by the Gaussian and group
+/// families: run the optimizer in bounded bursts of `rescreen_every`
+/// epochs, re-firing the rule between bursts at the current residual and
+/// pruning the working set — certified-inactive units leave
+/// mid-optimization, their coefficients zeroed back into the residual
+/// first (safe: the ball certificate is against this λ's optimum).
+/// Returns whether any cycle ran (the caller invalidates lazy
+/// correlations if so).
+#[allow(clippy::too_many_arguments)]
+pub fn dynamic_burst_solve<B: BurstProblem>(
+    prob: &mut B,
+    strong: &[usize],
+    n_units: usize,
+    rescreen_every: usize,
+    max_iter: usize,
+    tol: f64,
+    lambda_index: usize,
+    m: &mut LambdaMetrics,
+) -> Result<bool> {
+    let mut work: Vec<usize> = strong.to_vec();
+    let mut cycles_used = 0usize;
+    let mut ran = false;
+    while !work.is_empty() {
+        let mut converged = false;
+        let mut last_delta = f64::INFINITY;
+        let burst = rescreen_every.min(max_iter - cycles_used);
+        for _ in 0..burst {
+            last_delta = prob.cycle(&work, m);
+            cycles_used += 1;
+            m.cd_cycles += 1;
+            ran = true;
+            if last_delta < tol {
+                converged = true;
+                break;
+            }
+        }
+        if converged {
+            break;
+        }
+        if cycles_used >= max_iter {
+            return Err(HssrError::NoConvergence { lambda_index, max_iter, last_delta });
+        }
+        let mut keep = vec![true; n_units];
+        prob.rescreen_keep(&mut keep, m)?;
+        m.rescreen_discards += prune_working_set(&mut work, &keep, |u| prob.evict(u));
+    }
+    Ok(ran)
 }
 
 /// A [`Problem`] paired with its [`DriverConfig`]. The problem owns warm

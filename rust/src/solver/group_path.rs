@@ -26,10 +26,13 @@
 use crate::data::{GroupLayout, GroupedDataset};
 use crate::error::{HssrError, Result};
 use crate::linalg::{ops, DenseMatrix};
-use crate::runtime::{native::NativeEngine, ScanEngine};
+use crate::runtime::{native::NativeEngine, ooc, ScanEngine};
 use crate::screening::group::{make_group_safe_rule, GroupSafeContext};
 use crate::screening::{PrevSolution, RuleKind, SafeRule};
-use crate::solver::driver::{drive, fused_default, DriverConfig, Problem, ScreenStage};
+use crate::solver::driver::{
+    apply_rescreen_mask, drive, dynamic_burst_solve, fused_default, zero_discarded_units,
+    BurstProblem, DriverConfig, Problem, ScreenStage,
+};
 use crate::solver::lambda::GridKind;
 use crate::solver::path::LambdaMetrics;
 use crate::solver::{gd, kkt, Penalty};
@@ -229,23 +232,67 @@ impl<'a> GroupLassoProblem<'a> {
     /// of `GaussianLasso::zero_discarded`): zero the block, return its
     /// contribution to the residual, invalidate the lazy norms.
     fn zero_discarded(&mut self, survive: &[bool]) {
-        let layout = self.layout;
-        let mut changed = false;
-        for g in 0..layout.num_groups() {
-            if survive[g] {
-                continue;
-            }
+        let (x, layout, beta, r) = (self.x, self.layout, &mut self.beta, &mut self.r);
+        let changed = zero_discarded_units(survive, |g| {
+            let mut moved = false;
             for j in layout.range(g) {
-                if self.beta[j] != 0.0 {
-                    let b = self.beta[j];
-                    ops::axpy(b, self.x.col(j), &mut self.r);
-                    self.beta[j] = 0.0;
-                    changed = true;
+                if beta[j] != 0.0 {
+                    let b = beta[j];
+                    ops::axpy(b, x.col(j), r);
+                    beta[j] = 0.0;
+                    moved = true;
                 }
             }
-        }
+            moved
+        });
         if changed {
             self.znorm_valid.iter_mut().for_each(|v| *v = false);
+        }
+    }
+}
+
+/// [`BurstProblem`] view of [`GroupLassoProblem`] at one λ — the shared
+/// [`dynamic_burst_solve`] drives GD bursts and gap-safe prunes through it.
+struct GroupBurst<'p, 'a> {
+    prob: &'p mut GroupLassoProblem<'a>,
+    lam: f64,
+}
+
+impl BurstProblem for GroupBurst<'_, '_> {
+    fn cycle(&mut self, work: &[usize], m: &mut LambdaMetrics) -> f64 {
+        let p = &mut *self.prob;
+        m.coord_updates += work.iter().map(|&g| p.layout.sizes[g] as u64).sum::<u64>();
+        gd::gd_cycle(
+            p.x,
+            p.penalty,
+            self.lam,
+            work,
+            &p.layout.starts,
+            &p.layout.sizes,
+            &mut p.beta,
+            &mut p.r,
+        )
+    }
+
+    fn rescreen_keep(&mut self, keep: &mut [bool], m: &mut LambdaMetrics) -> Result<()> {
+        let p = &mut *self.prob;
+        if let Some(rule) = p.safe_rule.as_mut() {
+            let prev = PrevSolution { lambda: self.lam, r: &p.r, beta: Some(&p.beta) };
+            let mut scanned = 0u64;
+            rule.screen_routed(p.engine, p.x, &p.ctx, &prev, self.lam, keep, &mut scanned)?;
+            m.cols_scanned += scanned;
+        }
+        Ok(())
+    }
+
+    fn evict(&mut self, g: usize) {
+        let p = &mut *self.prob;
+        for j in p.layout.range(g) {
+            if p.beta[j] != 0.0 {
+                let b = p.beta[j];
+                ops::axpy(b, p.x.col(j), &mut p.r);
+                p.beta[j] = 0.0;
+            }
         }
     }
 }
@@ -291,13 +338,23 @@ impl Problem for GroupLassoProblem<'_> {
             // safe predicate, refreshes stale norms, and classifies ----
             let ssr_t = crate::screening::ssr::threshold(self.penalty, lam, lam_prev);
             let mut masked_d = 0usize;
+            let mut rule_scanned = 0u64;
             let (fout, was_pointwise) = {
                 let keep = if !run_safe {
                     None
                 } else if let Some(rule) = self.safe_rule.as_mut() {
                     let prev =
                         PrevSolution { lambda: lam_prev, r: &self.r, beta: Some(&self.beta) };
-                    rule.plan(self.x, &self.ctx, &prev, lam, survive, &mut masked_d)
+                    rule.plan_routed(
+                        self.engine,
+                        self.x,
+                        &self.ctx,
+                        &prev,
+                        lam,
+                        survive,
+                        &mut masked_d,
+                        &mut rule_scanned,
+                    )?
                 } else {
                     None
                 };
@@ -315,6 +372,7 @@ impl Problem for GroupLassoProblem<'_> {
                 )?;
                 (out, wp)
             };
+            m.cols_scanned += rule_scanned;
             stage.discarded = masked_d + fout.discarded;
             stage.rule_dead = !was_pointwise
                 && self.safe_rule.as_ref().map(|ru| ru.dead()).unwrap_or(false);
@@ -330,7 +388,17 @@ impl Problem for GroupLassoProblem<'_> {
             if let Some(rule) = self.safe_rule.as_mut() {
                 let prev =
                     PrevSolution { lambda: lam_prev, r: &self.r, beta: Some(&self.beta) };
-                stage.discarded = rule.screen(self.x, &self.ctx, &prev, lam, survive);
+                let mut scanned = 0u64;
+                stage.discarded = rule.screen_routed(
+                    self.engine,
+                    self.x,
+                    &self.ctx,
+                    &prev,
+                    lam,
+                    survive,
+                    &mut scanned,
+                )?;
+                m.cols_scanned += scanned;
                 stage.rule_dead = rule.dead();
             }
         }
@@ -402,69 +470,21 @@ impl Problem for GroupLassoProblem<'_> {
             }
             return Ok(());
         }
-        // Dynamic (gap-safe) solve: bounded GD bursts with gap-safe prunes
-        // of the working group set in between (see the lasso driver).
-        let layout = self.layout;
-        let mut work: Vec<usize> = strong.to_vec();
-        let mut cycles_used = 0usize;
-        let mut ran = false;
-        while !work.is_empty() {
-            let mut converged = false;
-            let mut last_delta = f64::INFINITY;
-            let burst = self.rescreen_every.min(self.max_iter - cycles_used);
-            for _ in 0..burst {
-                last_delta = gd::gd_cycle(
-                    self.x,
-                    self.penalty,
-                    lam,
-                    &work,
-                    &layout.starts,
-                    &layout.sizes,
-                    &mut self.beta,
-                    &mut self.r,
-                );
-                cycles_used += 1;
-                m.cd_cycles += 1;
-                m.coord_updates += work.iter().map(|&g| layout.sizes[g] as u64).sum::<u64>();
-                ran = true;
-                if last_delta < self.tol {
-                    converged = true;
-                    break;
-                }
-            }
-            if converged {
-                break;
-            }
-            if cycles_used >= self.max_iter {
-                return Err(HssrError::NoConvergence {
-                    lambda_index,
-                    max_iter: self.max_iter,
-                    last_delta,
-                });
-            }
-            let mut keep = vec![true; layout.num_groups()];
-            if let Some(rule) = self.safe_rule.as_mut() {
-                let prev = PrevSolution { lambda: lam, r: &self.r, beta: Some(&self.beta) };
-                rule.screen(self.x, &self.ctx, &prev, lam, &mut keep);
-            }
-            let before = work.len();
-            let mut kept = Vec::with_capacity(before);
-            for &g in &work {
-                if keep[g] {
-                    kept.push(g);
-                    continue;
-                }
-                for j in layout.range(g) {
-                    if self.beta[j] != 0.0 {
-                        let b = self.beta[j];
-                        ops::axpy(b, self.x.col(j), &mut self.r);
-                        self.beta[j] = 0.0;
-                    }
-                }
-            }
-            work = kept;
-            m.rescreen_discards += before - work.len();
-        }
+        // Dynamic (gap-safe) solve: the shared burst driver runs GD in
+        // bounded bursts with gap-safe prunes of the working group set in
+        // between (see the lasso driver).
+        let (rescreen_every, max_iter, tol, n_units) =
+            (self.rescreen_every, self.max_iter, self.tol, self.layout.num_groups());
+        let ran = dynamic_burst_solve(
+            &mut GroupBurst { prob: self, lam },
+            strong,
+            n_units,
+            rescreen_every,
+            max_iter,
+            tol,
+            lambda_index,
+            m,
+        )?;
         if ran {
             self.znorm_valid.iter_mut().for_each(|v| *v = false);
         }
@@ -476,7 +496,7 @@ impl Problem for GroupLassoProblem<'_> {
         lam: f64,
         survive: &mut [bool],
         in_strong: &[bool],
-        _m: &mut LambdaMetrics,
+        m: &mut LambdaMetrics,
     ) -> Result<usize> {
         if !self.dynamic_rule() {
             return Ok(0);
@@ -484,24 +504,22 @@ impl Problem for GroupLassoProblem<'_> {
         let mut mask = survive.to_vec();
         if let Some(rule) = self.safe_rule.as_mut() {
             let prev = PrevSolution { lambda: lam, r: &self.r, beta: Some(&self.beta) };
-            rule.screen(self.x, &self.ctx, &prev, lam, &mut mask);
+            let mut scanned = 0u64;
+            rule.screen_routed(
+                self.engine,
+                self.x,
+                &self.ctx,
+                &prev,
+                lam,
+                &mut mask,
+                &mut scanned,
+            )?;
+            m.cols_scanned += scanned;
         }
-        let layout = self.layout;
-        let mut discarded = 0;
-        for g in 0..mask.len() {
-            // Strong groups stay; so does any group still carrying a
-            // warm-start coefficient (dropping it would orphan the stale
-            // block past the KKT backstop) — the KKT pass handles those.
-            if survive[g]
-                && !mask[g]
-                && !in_strong[g]
-                && layout.range(g).all(|j| self.beta[j] == 0.0)
-            {
-                survive[g] = false;
-                discarded += 1;
-            }
-        }
-        Ok(discarded)
+        let (layout, beta) = (self.layout, &self.beta);
+        Ok(apply_rescreen_mask(survive, &mask, in_strong, |g| {
+            layout.range(g).any(|j| beta[j] != 0.0)
+        }))
     }
 
     fn kkt(
@@ -604,8 +622,13 @@ impl Problem for GroupLassoProblem<'_> {
     }
 }
 
-/// Fit with the default native (pool-backed) engine.
+/// Fit with the default engine: native (pool-backed), or an out-of-core
+/// spill engine when `HSSR_ENGINE=ooc` (see
+/// [`crate::runtime::ooc::env_engine_for`]).
 pub fn fit_group_path(ds: &GroupedDataset, cfg: &GroupPathConfig) -> Result<GroupPathFit> {
+    if let Some(engine) = ooc::env_engine_for(&ds.x, &ds.y)? {
+        return fit_group_path_with_engine(ds, cfg, &engine);
+    }
     fit_group_path_with_engine(ds, cfg, &NativeEngine::new())
 }
 

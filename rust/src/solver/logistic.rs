@@ -38,9 +38,12 @@
 use crate::data::Dataset;
 use crate::error::{HssrError, Result};
 use crate::linalg::{ops, DenseMatrix};
-use crate::runtime::{native::NativeEngine, ScanEngine};
+use crate::runtime::{native::NativeEngine, ooc, ScanEngine};
 use crate::screening::{gapsafe, ssr, PrevSolution, RuleKind, SafeContext, SafeRule};
-use crate::solver::driver::{drive, DriverConfig, Problem, ScreenStage};
+use crate::solver::driver::{
+    apply_rescreen_mask, drive, prune_working_set, zero_discarded_units, DriverConfig,
+    Problem, ScreenStage,
+};
 use crate::solver::lambda::GridKind;
 use crate::solver::path::{column_kkt, column_refresh, LambdaMetrics};
 use crate::solver::Penalty;
@@ -344,15 +347,17 @@ impl<'a> LogisticProblem<'a> {
     /// contribution from `η`, refresh the score residual, and invalidate
     /// the lazy scores.
     fn zero_discarded(&mut self, survive: &[bool]) {
-        let mut changed = false;
-        for j in 0..self.beta.len() {
-            if !survive[j] && self.beta[j] != 0.0 {
-                let b = self.beta[j];
-                ops::axpy(-b, self.x.col(j), &mut self.eta);
-                self.beta[j] = 0.0;
-                changed = true;
+        let (x, beta, eta) = (self.x, &mut self.beta, &mut self.eta);
+        let changed = zero_discarded_units(survive, |j| {
+            if beta[j] != 0.0 {
+                let b = beta[j];
+                ops::axpy(-b, x.col(j), eta);
+                beta[j] = 0.0;
+                true
+            } else {
+                false
             }
-        }
+        });
         if changed {
             for i in 0..self.eta.len() {
                 self.resid[i] = self.y[i] - sigmoid(self.eta[i]);
@@ -405,6 +410,7 @@ impl Problem for LogisticProblem<'_> {
             // against the GLM strong threshold α(2λ − λ_prev).
             let ssr_t = ssr::threshold(self.penalty, lam, lam_prev);
             let mut masked_d = 0usize;
+            let mut rule_scanned = 0u64;
             let fout = {
                 let keep = if !run_safe {
                     None
@@ -414,7 +420,16 @@ impl Problem for LogisticProblem<'_> {
                         r: &self.resid,
                         beta: Some(&self.beta),
                     };
-                    rule.plan(self.x, &self.ctx, &prev, lam, survive, &mut masked_d)
+                    rule.plan_routed(
+                        self.engine,
+                        self.x,
+                        &self.ctx,
+                        &prev,
+                        lam,
+                        survive,
+                        &mut masked_d,
+                        &mut rule_scanned,
+                    )?
                 } else {
                     None
                 };
@@ -428,6 +443,7 @@ impl Problem for LogisticProblem<'_> {
                     &mut self.z_valid,
                 )?
             };
+            m.cols_scanned += rule_scanned;
             stage.discarded = masked_d + fout.discarded;
             m.safe_size = fout.safe_size;
             m.cols_scanned += fout.cols_scanned;
@@ -451,7 +467,17 @@ impl Problem for LogisticProblem<'_> {
                     r: &self.resid,
                     beta: Some(&self.beta),
                 };
-                stage.discarded = rule.screen(self.x, &self.ctx, &prev, lam, survive);
+                let mut scanned = 0u64;
+                stage.discarded = rule.screen_routed(
+                    self.engine,
+                    self.x,
+                    &self.ctx,
+                    &prev,
+                    lam,
+                    survive,
+                    &mut scanned,
+                )?;
+                m.cols_scanned += scanned;
             }
         }
         m.safe_size = survive.iter().filter(|&&s| s).count();
@@ -576,21 +602,26 @@ impl Problem for LogisticProblem<'_> {
                 if let Some(rule) = self.safe_rule.as_mut() {
                     let prev =
                         PrevSolution { lambda: lam, r: &self.resid, beta: Some(&self.beta) };
-                    rule.screen(self.x, &self.ctx, &prev, lam, &mut keep);
+                    let mut scanned = 0u64;
+                    rule.screen_routed(
+                        self.engine,
+                        self.x,
+                        &self.ctx,
+                        &prev,
+                        lam,
+                        &mut keep,
+                        &mut scanned,
+                    )?;
+                    m.cols_scanned += scanned;
                 }
-                let before = work.len();
-                let mut kept = Vec::with_capacity(before);
-                for &j in &work {
-                    if keep[j] {
-                        kept.push(j);
-                    } else if self.beta[j] != 0.0 {
-                        let b = self.beta[j];
-                        ops::axpy(-b, self.x.col(j), &mut self.eta);
-                        self.beta[j] = 0.0;
+                let (x, beta, eta) = (self.x, &mut self.beta, &mut self.eta);
+                m.rescreen_discards += prune_working_set(&mut work, &keep, |j| {
+                    if beta[j] != 0.0 {
+                        let b = beta[j];
+                        ops::axpy(-b, x.col(j), eta);
+                        beta[j] = 0.0;
                     }
-                }
-                work = kept;
-                m.rescreen_discards += before - work.len();
+                });
             }
         }
         // Scan residual for screening/KKT: y − p̂ at the updated iterate.
@@ -606,7 +637,7 @@ impl Problem for LogisticProblem<'_> {
         lam: f64,
         survive: &mut [bool],
         in_strong: &[bool],
-        _m: &mut LambdaMetrics,
+        m: &mut LambdaMetrics,
     ) -> Result<usize> {
         if !self.dynamic_rule() {
             return Ok(0);
@@ -614,19 +645,20 @@ impl Problem for LogisticProblem<'_> {
         let mut mask = survive.to_vec();
         if let Some(rule) = self.safe_rule.as_mut() {
             let prev = PrevSolution { lambda: lam, r: &self.resid, beta: Some(&self.beta) };
-            rule.screen(self.x, &self.ctx, &prev, lam, &mut mask);
+            let mut scanned = 0u64;
+            rule.screen_routed(
+                self.engine,
+                self.x,
+                &self.ctx,
+                &prev,
+                lam,
+                &mut mask,
+                &mut scanned,
+            )?;
+            m.cols_scanned += scanned;
         }
-        let mut discarded = 0;
-        for j in 0..mask.len() {
-            // Strong units stay; so does any unit still carrying a
-            // warm-start coefficient (the KKT pass owns those) — see the
-            // Gaussian rescreen.
-            if survive[j] && !mask[j] && !in_strong[j] && self.beta[j] == 0.0 {
-                survive[j] = false;
-                discarded += 1;
-            }
-        }
-        Ok(discarded)
+        let beta = &self.beta;
+        Ok(apply_rescreen_mask(survive, &mask, in_strong, |j| beta[j] != 0.0))
     }
 
     fn kkt(
@@ -710,6 +742,9 @@ pub fn fit_logistic_path(
     y: &[f64],
     cfg: &LogisticPathConfig,
 ) -> Result<LogisticPathFit> {
+    if let Some(engine) = ooc::env_engine_for(x, y)? {
+        return fit_logistic_path_with_engine(x, y, cfg, &engine);
+    }
     fit_logistic_path_with_engine(x, y, cfg, &NativeEngine::new())
 }
 

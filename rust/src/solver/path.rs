@@ -47,11 +47,14 @@
 //! test in [`crate::prop`]).
 
 use crate::data::Dataset;
-use crate::error::{HssrError, Result};
+use crate::error::Result;
 use crate::linalg::{ops, DenseMatrix};
-use crate::runtime::{native::NativeEngine, ScanEngine};
+use crate::runtime::{native::NativeEngine, ooc, ScanEngine};
 use crate::screening::{make_safe_rule, ssr, PrevSolution, RuleKind, SafeContext, SafeRule};
-use crate::solver::driver::{drive, fused_default, DriverConfig, Problem, ScreenStage};
+use crate::solver::driver::{
+    apply_rescreen_mask, drive, dynamic_burst_solve, fused_default, zero_discarded_units,
+    BurstProblem, DriverConfig, Problem, ScreenStage,
+};
 use crate::solver::{cd, kkt, lambda::GridKind, Penalty};
 
 pub use crate::solver::driver::LambdaMetrics;
@@ -301,17 +304,54 @@ impl<'a> GaussianLasso<'a> {
     /// moved). Runs identically in the fused and unfused pipelines, after
     /// the strong set is classified.
     fn zero_discarded(&mut self, survive: &[bool]) {
-        let mut changed = false;
-        for j in 0..self.beta.len() {
-            if !survive[j] && self.beta[j] != 0.0 {
-                let b = self.beta[j];
-                ops::axpy(b, self.x.col(j), &mut self.r);
-                self.beta[j] = 0.0;
-                changed = true;
+        let (x, beta, r) = (self.x, &mut self.beta, &mut self.r);
+        let changed = zero_discarded_units(survive, |j| {
+            if beta[j] != 0.0 {
+                let b = beta[j];
+                ops::axpy(b, x.col(j), r);
+                beta[j] = 0.0;
+                true
+            } else {
+                false
             }
-        }
+        });
         if changed {
             self.z_valid.iter_mut().for_each(|v| *v = false);
+        }
+    }
+}
+
+/// [`BurstProblem`] view of [`GaussianLasso`] at one λ — the shared
+/// [`dynamic_burst_solve`] drives CD bursts and gap-safe prunes through it.
+struct GaussianBurst<'p, 'a> {
+    prob: &'p mut GaussianLasso<'a>,
+    lam: f64,
+}
+
+impl BurstProblem for GaussianBurst<'_, '_> {
+    fn cycle(&mut self, work: &[usize], m: &mut LambdaMetrics) -> f64 {
+        m.coord_updates += work.len() as u64;
+        let p = &mut *self.prob;
+        cd::cd_cycle(p.x, p.penalty, self.lam, work, &mut p.beta, &mut p.r)
+    }
+
+    fn rescreen_keep(&mut self, keep: &mut [bool], m: &mut LambdaMetrics) -> Result<()> {
+        let p = &mut *self.prob;
+        if let Some(rule) = p.safe_rule.as_mut() {
+            let prev = PrevSolution { lambda: self.lam, r: &p.r, beta: Some(&p.beta) };
+            let mut scanned = 0u64;
+            rule.screen_routed(p.engine, p.x, &p.ctx, &prev, self.lam, keep, &mut scanned)?;
+            m.cols_scanned += scanned;
+        }
+        Ok(())
+    }
+
+    fn evict(&mut self, j: usize) {
+        let p = &mut *self.prob;
+        if p.beta[j] != 0.0 {
+            let b = p.beta[j];
+            ops::axpy(b, p.x.col(j), &mut p.r);
+            p.beta[j] = 0.0;
         }
     }
 }
@@ -356,13 +396,23 @@ impl Problem for GaussianLasso<'_> {
             // ---- fused screening (lines 2–10 in one traversal) ----
             let ssr_t = ssr::threshold(self.penalty, lam, lam_prev);
             let mut masked_d = 0usize;
+            let mut rule_scanned = 0u64;
             let (fout, was_pointwise) = {
                 let keep = if !run_safe {
                     None
                 } else if let Some(rule) = self.safe_rule.as_mut() {
                     let prev =
                         PrevSolution { lambda: lam_prev, r: &self.r, beta: Some(&self.beta) };
-                    rule.plan(self.x, &self.ctx, &prev, lam, survive, &mut masked_d)
+                    rule.plan_routed(
+                        self.engine,
+                        self.x,
+                        &self.ctx,
+                        &prev,
+                        lam,
+                        survive,
+                        &mut masked_d,
+                        &mut rule_scanned,
+                    )?
                 } else {
                     None
                 };
@@ -378,6 +428,7 @@ impl Problem for GaussianLasso<'_> {
                 )?;
                 (out, wp)
             };
+            m.cols_scanned += rule_scanned;
             stage.discarded = masked_d + fout.discarded;
             // Masked rules that discard report `dead` only alongside zero
             // discards, so the flag condition matches the unfused driver
@@ -396,7 +447,17 @@ impl Problem for GaussianLasso<'_> {
             if let Some(rule) = self.safe_rule.as_mut() {
                 let prev =
                     PrevSolution { lambda: lam_prev, r: &self.r, beta: Some(&self.beta) };
-                stage.discarded = rule.screen(self.x, &self.ctx, &prev, lam, survive);
+                let mut scanned = 0u64;
+                stage.discarded = rule.screen_routed(
+                    self.engine,
+                    self.x,
+                    &self.ctx,
+                    &prev,
+                    lam,
+                    survive,
+                    &mut scanned,
+                )?;
+                m.cols_scanned += scanned;
                 stage.rule_dead = rule.dead();
             }
         }
@@ -458,60 +519,24 @@ impl Problem for GaussianLasso<'_> {
             }
             return Ok(());
         }
-        // Dynamic (gap-safe) solve: run CD in bounded bursts, re-firing the
-        // rule between bursts at the *current* residual so certified-inactive
-        // features leave the working set mid-optimization. Their coefficients
-        // are zeroed and returned to the residual first — safe, because the
-        // ball certificate is against this λ's optimum.
-        let mut work: Vec<usize> = strong.to_vec();
-        let mut cycles_used = 0usize;
-        let mut ran = false;
-        while !work.is_empty() {
-            let mut converged = false;
-            let mut last_delta = f64::INFINITY;
-            let burst = self.rescreen_every.min(self.max_iter - cycles_used);
-            for _ in 0..burst {
-                last_delta =
-                    cd::cd_cycle(self.x, self.penalty, lam, &work, &mut self.beta, &mut self.r);
-                cycles_used += 1;
-                m.cd_cycles += 1;
-                m.coord_updates += work.len() as u64;
-                ran = true;
-                if last_delta < self.tol {
-                    converged = true;
-                    break;
-                }
-            }
-            if converged {
-                break;
-            }
-            if cycles_used >= self.max_iter {
-                return Err(HssrError::NoConvergence {
-                    lambda_index,
-                    max_iter: self.max_iter,
-                    last_delta,
-                });
-            }
-            // Gap-safe prune of the working set at the current iterate.
-            let mut keep = vec![true; self.ctx.p];
-            if let Some(rule) = self.safe_rule.as_mut() {
-                let prev = PrevSolution { lambda: lam, r: &self.r, beta: Some(&self.beta) };
-                rule.screen(self.x, &self.ctx, &prev, lam, &mut keep);
-            }
-            let before = work.len();
-            let mut kept = Vec::with_capacity(before);
-            for &j in &work {
-                if keep[j] {
-                    kept.push(j);
-                } else if self.beta[j] != 0.0 {
-                    let b = self.beta[j];
-                    ops::axpy(b, self.x.col(j), &mut self.r);
-                    self.beta[j] = 0.0;
-                }
-            }
-            work = kept;
-            m.rescreen_discards += before - work.len();
-        }
+        // Dynamic (gap-safe) solve: the shared burst driver runs CD in
+        // bounded bursts, re-firing the rule between bursts at the
+        // *current* residual so certified-inactive features leave the
+        // working set mid-optimization (their coefficients zeroed back
+        // into the residual first — safe, because the ball certificate is
+        // against this λ's optimum).
+        let (rescreen_every, max_iter, tol, n_units) =
+            (self.rescreen_every, self.max_iter, self.tol, self.ctx.p);
+        let ran = dynamic_burst_solve(
+            &mut GaussianBurst { prob: self, lam },
+            strong,
+            n_units,
+            rescreen_every,
+            max_iter,
+            tol,
+            lambda_index,
+            m,
+        )?;
         if ran {
             self.z_valid.iter_mut().for_each(|v| *v = false);
         }
@@ -523,7 +548,7 @@ impl Problem for GaussianLasso<'_> {
         lam: f64,
         survive: &mut [bool],
         in_strong: &[bool],
-        _m: &mut LambdaMetrics,
+        m: &mut LambdaMetrics,
     ) -> Result<usize> {
         if !self.dynamic_rule() {
             return Ok(0);
@@ -531,20 +556,20 @@ impl Problem for GaussianLasso<'_> {
         let mut mask = survive.to_vec();
         if let Some(rule) = self.safe_rule.as_mut() {
             let prev = PrevSolution { lambda: lam, r: &self.r, beta: Some(&self.beta) };
-            rule.screen(self.x, &self.ctx, &prev, lam, &mut mask);
+            let mut scanned = 0u64;
+            rule.screen_routed(
+                self.engine,
+                self.x,
+                &self.ctx,
+                &prev,
+                lam,
+                &mut mask,
+                &mut scanned,
+            )?;
+            m.cols_scanned += scanned;
         }
-        let mut discarded = 0;
-        for j in 0..mask.len() {
-            // Strong units stay (the optimizer owns them); so does any unit
-            // still carrying a warm-start coefficient — dropping it here
-            // would orphan the stale β_j past the KKT backstop. Such units
-            // are simply left to the KKT pass, which re-adds them if needed.
-            if survive[j] && !mask[j] && !in_strong[j] && self.beta[j] == 0.0 {
-                survive[j] = false;
-                discarded += 1;
-            }
-        }
-        Ok(discarded)
+        let beta = &self.beta;
+        Ok(apply_rescreen_mask(survive, &mask, in_strong, |j| beta[j] != 0.0))
     }
 
     fn kkt(
@@ -609,8 +634,14 @@ impl Problem for GaussianLasso<'_> {
     }
 }
 
-/// Fit the full path with the default (native, pool-backed) scan engine.
+/// Fit the full path with the default scan engine: the native pool-backed
+/// kernels, or — when `HSSR_ENGINE=ooc` — an out-of-core engine mounted on
+/// a spilled store, so the whole suite can run with every scan served from
+/// disk under an `HSSR_CACHE_MB` budget.
 pub fn fit_lasso_path(ds: &Dataset, cfg: &PathConfig) -> Result<PathFit> {
+    if let Some(engine) = ooc::env_engine_for(&ds.x, &ds.y)? {
+        return fit_lasso_path_with_engine(ds, cfg, &engine);
+    }
     fit_lasso_path_with_engine(ds, cfg, &NativeEngine::new())
 }
 

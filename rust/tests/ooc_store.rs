@@ -1,0 +1,259 @@
+//! The out-of-core storage subsystem, pinned end to end: store round-trips
+//! are exact, conversion matches the in-memory CSV loader, and — the
+//! acceptance bar — an `OocEngine` fit with a cache budget far below the
+//! matrix footprint produces **bit-identical** selections and coefficients
+//! to the native engine for all three families × every applicable rule,
+//! with the store's fetch counters equal to the path's own accounting and
+//! peak resident bytes bounded by the budget.
+
+use hssr::data::store::{convert_csv, write_dataset, ColumnStore};
+use hssr::data::synth::generate_grouped;
+use hssr::data::DataSpec;
+use hssr::prop::{check, PropConfig};
+use hssr::prop_assert;
+use hssr::runtime::native::NativeEngine;
+use hssr::runtime::ooc::OocEngine;
+use hssr::screening::RuleKind;
+use hssr::solver::group_path::{fit_group_path_with_engine, GroupPathConfig};
+use hssr::solver::logistic::{
+    fit_logistic_path_with_engine, synthetic_logistic, LogisticPathConfig,
+};
+use hssr::solver::path::{fit_lasso_path_with_engine, PathConfig};
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("hssr_ooc_store_it");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+/// dense → store → dense is byte-exact, across random shapes and chunk
+/// widths (including widths that do not divide p, and single-column
+/// chunks).
+#[test]
+fn store_roundtrip_property() {
+    check(PropConfig { cases: 8, seed: 0x570E }, |rng, scale| {
+        let n = 5 + (rng.below(40) as f64 * scale) as usize;
+        let p = 3 + (rng.below(60) as f64 * scale) as usize;
+        let chunk = 1 + rng.below(p as u64 + 2) as usize;
+        let ds = DataSpec::synthetic(n, p, 2).generate(rng.next_u64());
+        let path = tmp(&format!("rt-{n}-{p}-{chunk}.store"));
+        write_dataset(&ds, chunk, &path).map_err(|e| e.to_string())?;
+        let store = ColumnStore::open(&path, 1 << 16).map_err(|e| e.to_string())?;
+        let back = store.to_dataset().map_err(|e| e.to_string())?;
+        prop_assert!(
+            back.x.as_slice() == ds.x.as_slice(),
+            "matrix drifted (n={n}, p={p}, chunk={chunk})"
+        );
+        prop_assert!(back.y == ds.y, "y drifted");
+        prop_assert!(back.centers == ds.centers && back.scales == ds.scales, "stats drifted");
+        Ok(())
+    });
+}
+
+/// CSV → store (streaming Welford standardization) agrees with the
+/// in-memory CSV loader to numerical precision, constant columns
+/// included.
+#[test]
+fn convert_csv_matches_load_csv() {
+    let csv = tmp("conv.csv");
+    let mut body = String::from("y,a,b,c,const\n# comment line\n");
+    let mut rng = hssr::rng::Pcg64::new(11);
+    for _ in 0..60 {
+        let a = rng.normal() * 3.0 + 1.0;
+        let b = rng.normal() * 0.2 - 5.0;
+        let c = rng.normal();
+        let y = 2.0 * a - b + 0.1 * rng.normal();
+        body.push_str(&format!("{y},{a},{b},{c},7.5\n"));
+    }
+    std::fs::write(&csv, body).unwrap();
+    let out = tmp("conv.store");
+    let summary = convert_csv(&csv, 2, &out).unwrap();
+    assert_eq!((summary.header.n, summary.header.p), (60, 4));
+    assert!(!summary.header.standardized, "csv stores raw + read-time transform");
+    let store = ColumnStore::open(&out, 1 << 20).unwrap();
+    let from_store = store.to_dataset().unwrap();
+    let direct = hssr::data::io::load_csv(&csv).unwrap();
+    assert_eq!(from_store.scales[3], 0.0, "constant column must get scale 0");
+    for j in 0..4 {
+        assert!(
+            (from_store.centers[j] - direct.centers[j]).abs() < 1e-10,
+            "center {j} drifted"
+        );
+        assert!(
+            (from_store.scales[j] - direct.scales[j]).abs() < 1e-10,
+            "scale {j} drifted"
+        );
+        for i in 0..60 {
+            assert!(
+                (from_store.x.get(i, j) - direct.x.get(i, j)).abs() < 1e-10,
+                "x[{i},{j}] drifted"
+            );
+        }
+    }
+    for i in 0..60 {
+        assert!((from_store.y[i] - direct.y[i]).abs() < 1e-10, "y[{i}] drifted");
+    }
+}
+
+/// The acceptance bar, column family: OOC fits under a one-chunk cache
+/// budget (far below the matrix footprint, forcing eviction on every
+/// scan) are bit-identical to native for every RuleKind, and the store's
+/// fetch counters equal the path's own `cols_scanned` accounting —
+/// including SSR-GapSafe, whose in-rule scans are engine-routed.
+#[test]
+fn ooc_lasso_bit_identical_to_native_under_pressure() {
+    let ds = DataSpec::gene_like(70, 180).generate(31);
+    let path = tmp("lasso.store");
+    let chunk = 16;
+    write_dataset(&ds, chunk, &path).unwrap();
+    let budget = chunk * ds.n() * 8; // exactly one chunk resident
+    assert!(budget < ds.n() * ds.p() * 8, "budget must be below the matrix");
+    let native = NativeEngine::new();
+    for rule in [
+        RuleKind::BasicPcd,
+        RuleKind::ActiveCycling,
+        RuleKind::Ssr,
+        RuleKind::Sedpp,
+        RuleKind::SsrBedpp,
+        RuleKind::SsrDome,
+        RuleKind::SsrBedppSedpp,
+        RuleKind::SsrGapSafe,
+    ] {
+        let cfg = PathConfig { rule, n_lambda: 15, tol: 1e-8, ..PathConfig::default() };
+        let ooc = OocEngine::open(&path, budget).unwrap();
+        let a = fit_lasso_path_with_engine(&ds, &cfg, &ooc).unwrap();
+        let b = fit_lasso_path_with_engine(&ds, &cfg, &native).unwrap();
+        assert_eq!(a.betas, b.betas, "{rule:?}: ooc betas differ from native");
+        for (k, (ma, mb)) in a.metrics.iter().zip(b.metrics.iter()).enumerate() {
+            assert_eq!(ma.safe_size, mb.safe_size, "{rule:?} |S| at λ#{k}");
+            assert_eq!(ma.strong_size, mb.strong_size, "{rule:?} |H| at λ#{k}");
+            assert_eq!(ma.violations, mb.violations, "{rule:?} viols at λ#{k}");
+        }
+        let counters = ooc.store().counters();
+        assert_eq!(
+            counters.cols_fetched(),
+            a.total_cols_scanned(),
+            "{rule:?}: store fetches != path accounting"
+        );
+        assert!(
+            counters.peak_resident() <= budget as u64,
+            "{rule:?}: peak resident {} exceeded budget {budget}",
+            counters.peak_resident()
+        );
+        if counters.cols_fetched() > 0 {
+            assert!(counters.chunk_loads() > 0, "{rule:?}: no real reads happened");
+        }
+    }
+}
+
+/// Group family under the same one-chunk budget: bit-identical paths and
+/// exact counter agreement for every supported rule.
+#[test]
+fn ooc_group_bit_identical_to_native_under_pressure() {
+    let gds = generate_grouped(60, 24, 4, 4, 33);
+    let path = tmp("group.store");
+    let chunk = 8;
+    let zeros = vec![0.0; gds.p()];
+    let ones = vec![1.0; gds.p()];
+    hssr::data::store::write_matrix(&gds.x, &gds.y, &zeros, &ones, true, chunk, &path)
+        .unwrap();
+    let budget = chunk * gds.n() * 8;
+    let native = NativeEngine::new();
+    for rule in [
+        RuleKind::BasicPcd,
+        RuleKind::ActiveCycling,
+        RuleKind::Ssr,
+        RuleKind::Sedpp,
+        RuleKind::SsrBedpp,
+        RuleKind::SsrGapSafe,
+    ] {
+        let cfg =
+            GroupPathConfig { rule, n_lambda: 12, tol: 1e-8, ..GroupPathConfig::default() };
+        let ooc = OocEngine::open(&path, budget).unwrap();
+        let a = fit_group_path_with_engine(&gds, &cfg, &ooc).unwrap();
+        let b = fit_group_path_with_engine(&gds, &cfg, &native).unwrap();
+        assert_eq!(a.betas, b.betas, "{rule:?}: ooc group betas differ");
+        let counters = ooc.store().counters();
+        assert_eq!(
+            counters.cols_fetched(),
+            a.total_cols_scanned(),
+            "{rule:?}: group store fetches != path accounting"
+        );
+        assert!(counters.peak_resident() <= budget as u64, "{rule:?}: budget exceeded");
+    }
+}
+
+/// Logistic family: bit-identical paths and intercepts for every
+/// supported rule under a one-chunk budget. (The constructor's λmax and
+/// standardization scans go through the engine before metrics exist, so
+/// counters are checked for activity, not equality.)
+#[test]
+fn ooc_logistic_bit_identical_to_native_under_pressure() {
+    let (x, y, _) = synthetic_logistic(80, 60, 4, 35);
+    let path = tmp("logit.store");
+    let chunk = 8;
+    let zeros = vec![0.0; x.ncols()];
+    let ones = vec![1.0; x.ncols()];
+    hssr::data::store::write_matrix(&x, &y, &zeros, &ones, true, chunk, &path).unwrap();
+    let budget = chunk * x.nrows() * 8;
+    let native = NativeEngine::new();
+    for rule in [
+        RuleKind::BasicPcd,
+        RuleKind::ActiveCycling,
+        RuleKind::Ssr,
+        RuleKind::SsrGapSafe,
+    ] {
+        let cfg = LogisticPathConfig {
+            rule,
+            n_lambda: 12,
+            tol: 1e-8,
+            ..LogisticPathConfig::default()
+        };
+        let ooc = OocEngine::open(&path, budget).unwrap();
+        let a = fit_logistic_path_with_engine(&x, &y, &cfg, &ooc).unwrap();
+        let b = fit_logistic_path_with_engine(&x, &y, &cfg, &native).unwrap();
+        assert_eq!(a.betas, b.betas, "{rule:?}: ooc logistic betas differ");
+        assert_eq!(a.intercepts, b.intercepts, "{rule:?}: intercepts differ");
+        assert!(
+            ooc.store().counters().cols_fetched() > 0,
+            "{rule:?}: logistic fit never touched the store"
+        );
+        assert!(
+            ooc.store().counters().peak_resident() <= budget as u64,
+            "{rule:?}: budget exceeded"
+        );
+    }
+}
+
+/// Randomized engine-independence sweep: OOC ≡ native across random
+/// shapes, penalties, and chunk/budget mixes for the headline hybrid and
+/// the dynamic rule.
+#[test]
+fn property_ooc_selects_same_as_native() {
+    check(PropConfig { cases: 4, seed: 0x00C5 }, |rng, scale| {
+        let n = 30 + (rng.below(40) as f64 * scale) as usize;
+        let p = 40 + (rng.below(100) as f64 * scale) as usize;
+        let ds = DataSpec::synthetic(n, p, 4).generate(rng.next_u64());
+        let chunk = 1 + rng.below(24) as usize;
+        let path = tmp(&format!("prop-{n}-{p}-{chunk}.store"));
+        write_dataset(&ds, chunk, &path).map_err(|e| e.to_string())?;
+        let budget = (1 + rng.below(3) as usize) * chunk * n * 8;
+        let native = NativeEngine::new();
+        for rule in [RuleKind::SsrBedpp, RuleKind::SsrGapSafe] {
+            let cfg = PathConfig { rule, n_lambda: 10, tol: 1e-8, ..PathConfig::default() };
+            let ooc = OocEngine::open(&path, budget).map_err(|e| e.to_string())?;
+            let a = fit_lasso_path_with_engine(&ds, &cfg, &ooc).map_err(|e| e.to_string())?;
+            let b =
+                fit_lasso_path_with_engine(&ds, &cfg, &native).map_err(|e| e.to_string())?;
+            prop_assert!(
+                a.betas == b.betas,
+                "{rule:?}: ooc path differs (n={n}, p={p}, chunk={chunk})"
+            );
+            prop_assert!(
+                ooc.store().counters().cols_fetched() == a.total_cols_scanned(),
+                "{rule:?}: accounting drift (n={n}, p={p}, chunk={chunk})"
+            );
+        }
+        Ok(())
+    });
+}

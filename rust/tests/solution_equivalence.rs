@@ -156,6 +156,39 @@ fn pool_engine_reproduces_solution_paths() {
     }
 }
 
+/// Regression under the out-of-core engine: serving every screening/KKT
+/// scan from the disk-backed column store — through a cache budget of a
+/// single chunk, forcing eviction throughout — must reproduce the default
+/// path bit-for-bit for every rule, fused and unfused.
+#[test]
+fn ooc_engine_reproduces_solution_paths() {
+    use hssr::data::store::write_dataset;
+    use hssr::runtime::ooc::OocEngine;
+    use hssr::solver::path::fit_lasso_path_with_engine;
+    let ds = DataSpec::gene_like(90, 220).generate(10);
+    let store_path = std::env::temp_dir().join("hssr-solution-equiv.store");
+    let chunk = 32;
+    write_dataset(&ds, chunk, &store_path).expect("store write");
+    let budget = chunk * ds.n() * 8; // one chunk ≪ the 220-column matrix
+    for rule in ALL_RULES {
+        let cfg = PathConfig { rule, n_lambda: 25, tol: 1e-9, ..PathConfig::default() };
+        let default_fit = fit_lasso_path(&ds, &cfg).expect("default fit");
+        let ooc = OocEngine::open(&store_path, budget).expect("store open");
+        let ooc_fit = fit_lasso_path_with_engine(&ds, &cfg, &ooc).expect("ooc fit");
+        assert_eq!(default_fit.betas, ooc_fit.betas, "{rule:?} ooc-engine mismatch");
+        let unfused = fit_lasso_path_with_engine(
+            &ds,
+            &PathConfig { fused: false, ..cfg },
+            &ooc,
+        )
+        .expect("unfused ooc fit");
+        assert_eq!(
+            default_fit.betas, unfused.betas,
+            "{rule:?} unfused ooc-engine mismatch"
+        );
+    }
+}
+
 /// Warm starts + screening must not leak state across λ: refitting with a
 /// truncated grid reproduces the prefix of the full-path solution.
 #[test]
