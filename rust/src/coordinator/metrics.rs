@@ -181,6 +181,13 @@ pub struct OocTraffic {
     pub cache_hits: u64,
     /// Peak cache-resident bytes (must stay within the budget).
     pub peak_resident: u64,
+    /// Read attempts beyond the first (transient faults absorbed by the
+    /// retry policy; 0 unless faults were injected or the disk misbehaved).
+    pub retries: u64,
+    /// Chunk loads rejected by CRC verification and retried.
+    pub checksum_failures: u64,
+    /// Reads that returned fewer bytes than requested and were retried.
+    pub short_reads: u64,
     /// The path's own `cols_scanned` accounting (must equal
     /// `cols_fetched` — every scan, including the gap-safe rule's in-rule
     /// traversals, is engine-routed).
@@ -223,6 +230,9 @@ pub fn ooc_scan_traffic(
             bytes_read: counters.bytes_read(),
             cache_hits: counters.cache_hits(),
             peak_resident: counters.peak_resident(),
+            retries: counters.retries(),
+            checksum_failures: counters.checksum_failures(),
+            short_reads: counters.short_reads(),
             metric_cols: fit.total_cols_scanned(),
         });
     }
@@ -243,6 +253,8 @@ pub fn ooc_traffic_table(title: &str, rows: &[OocTraffic]) -> Table {
             "MB read (disk)",
             "cache hits",
             "peak res MB",
+            "retries",
+            "crc fail",
             "vs first",
         ],
     );
@@ -256,6 +268,8 @@ pub fn ooc_traffic_table(title: &str, rows: &[OocTraffic]) -> Table {
             format!("{:.1}", r.bytes_read as f64 / 1e6),
             r.cache_hits.to_string(),
             format!("{:.2}", r.peak_resident as f64 / 1e6),
+            r.retries.to_string(),
+            r.checksum_failures.to_string(),
             format!("{:.2}x less", base as f64 / r.bytes_read.max(1) as f64),
         ]);
     }

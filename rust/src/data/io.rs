@@ -115,12 +115,27 @@ pub fn load_csv(path: &Path) -> Result<Dataset> {
     let mut y = Vec::with_capacity(n);
     let mut x = DenseMatrix::zeros(n, p);
     for (i, row) in rows.iter().enumerate() {
+        if let Some(j) = row.iter().position(|v| !v.is_finite()) {
+            return Err(HssrError::Config(format!(
+                "csv data row {}: non-finite value ({}) in column {j} — \
+                 clean the data before fitting",
+                i + 1,
+                row[j]
+            )));
+        }
         y.push(row[0]);
         for j in 0..p {
             x.set(i, j, row[j + 1]);
         }
     }
     let (centers, scales) = standardize_in_place(&mut x, &mut y);
+    if let Some(j) = scales.iter().position(|&s| s == 0.0) {
+        return Err(HssrError::Config(format!(
+            "csv feature column {j} has zero variance — a constant column \
+             carries no signal and breaks standardization; drop it before \
+             fitting"
+        )));
+    }
     Ok(Dataset {
         x,
         y,
@@ -170,12 +185,37 @@ pub fn load_bin(path: &Path) -> Result<Dataset> {
     let mut read_f64s = |count: usize| -> Result<Vec<f64>> {
         let mut buf = vec![0u8; count * 8];
         r.read_exact(&mut buf)?;
-        Ok(buf.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect())
+        Ok(buf
+            .chunks_exact(8)
+            .map(|c| {
+                let mut b = [0u8; 8];
+                b.copy_from_slice(c);
+                f64::from_le_bytes(b)
+            })
+            .collect())
     };
     let y = read_f64s(n)?;
     let data = read_f64s(n * p)?;
     let centers = read_f64s(p)?;
     let scales = read_f64s(p)?;
+    for (what, vals) in
+        [("response", &y), ("matrix", &data), ("centers", &centers), ("scales", &scales)]
+    {
+        if let Some(i) = vals.iter().position(|v| !v.is_finite()) {
+            return Err(HssrError::Config(format!(
+                "{}: non-finite {what} value at index {i} — the cache is \
+                 corrupt or was written from unclean data",
+                path.display()
+            )));
+        }
+    }
+    if let Some(j) = scales.iter().position(|&s| s == 0.0) {
+        return Err(HssrError::Config(format!(
+            "{}: feature column {j} has zero variance — drop constant \
+             columns before caching",
+            path.display()
+        )));
+    }
     Ok(Dataset {
         x: DenseMatrix::from_col_major(n, p, data)?,
         y,
@@ -245,6 +285,35 @@ mod tests {
         let path = tmp("t5.bin");
         std::fs::write(&path, b"NOTHSSR!xxxx").unwrap();
         assert!(load_bin(&path).is_err());
+    }
+
+    /// NaN/Inf and zero-variance columns are typed load-time errors —
+    /// bad data must never flow silently into a fit.
+    #[test]
+    fn csv_rejects_nonfinite_and_constant_columns() {
+        let path = tmp("t7.csv");
+        std::fs::write(&path, "1.0,2.0,3.0\n-1.0,inf,1.0\n0.5,0.25,2.0\n").unwrap();
+        let err = load_csv(&path).unwrap_err();
+        assert!(err.to_string().contains("non-finite"), "got {err}");
+        let path = tmp("t8.csv");
+        std::fs::write(&path, "1.0,2.0,7.5\n-1.0,3.0,7.5\n0.5,0.25,7.5\n").unwrap();
+        let err = load_csv(&path).unwrap_err();
+        assert!(err.to_string().contains("zero variance"), "got {err}");
+    }
+
+    #[test]
+    fn bin_rejects_nonfinite_payload() {
+        let ds = DataSpec::synthetic(10, 4, 2).generate(9);
+        let path = tmp("t9.bin");
+        save_bin(&ds, &path).unwrap();
+        // poison one matrix value with NaN (y is 10 f64s after the
+        // 24-byte preamble; matrix follows)
+        let mut bytes = std::fs::read(&path).unwrap();
+        let off = 24 + 10 * 8 + 5 * 8;
+        bytes[off..off + 8].copy_from_slice(&f64::NAN.to_le_bytes());
+        std::fs::write(&path, bytes).unwrap();
+        let err = load_bin(&path).unwrap_err();
+        assert!(err.to_string().contains("non-finite"), "got {err}");
     }
 
     #[test]

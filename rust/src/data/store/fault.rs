@@ -1,0 +1,312 @@
+//! Deterministic fault injection between [`ColumnStore`] and the
+//! filesystem.
+//!
+//! The store's retry/checksum machinery is only trustworthy if it can be
+//! *proven* to mask faults without changing results. [`FaultInjector`]
+//! sits in the chunk-read path and, driven by a seeded hash of
+//! `(file offset, attempt)`, injects the three storage failure modes the
+//! retry policy must absorb:
+//!
+//! * **transient read errors** — the read fails with `Interrupted`,
+//! * **short reads** — the read fails with `UnexpectedEof`,
+//! * **bit flips** — one bit of the returned buffer is corrupted (only
+//!   exercised on checksummed stores, where CRC verification converts the
+//!   flip into a retried checksum failure instead of silent corruption).
+//!
+//! Decisions are pure functions of `(seed, offset, attempt)`, so a given
+//! spec replays identically, and **no fault is ever injected at attempt
+//! [`FaultInjector::MAX_FAULT_ATTEMPTS`] or later** — within the store's
+//! retry budget every read deterministically succeeds, which is what lets
+//! the property tests assert bit-identical fits under injection
+//! (`tests/fault_tolerance.rs`).
+//!
+//! Activation: `HSSR_FAULTS="seed=42,transient=0.1,short=0.05,flip=0.02"`
+//! in the environment (picked up by every [`ColumnStore::open`], which is
+//! how CI runs the whole suite under injected faults), or the CLI's
+//! `--faults <spec>` flag, or [`ColumnStore::set_faults`] from tests.
+//!
+//! [`ColumnStore`]: super::reader::ColumnStore
+//! [`ColumnStore::open`]: super::reader::ColumnStore::open
+//! [`ColumnStore::set_faults`]: super::reader::ColumnStore::set_faults
+
+use crate::error::{HssrError, Result};
+use crate::rng::splitmix64;
+
+/// Parsed fault-injection parameters.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultSpec {
+    /// Seed for the deterministic fault stream.
+    pub seed: u64,
+    /// Probability of a transient (`Interrupted`) read error per attempt.
+    pub transient: f64,
+    /// Probability of a short read (`UnexpectedEof`) per attempt.
+    pub short: f64,
+    /// Probability of a single bit flip in the returned buffer.
+    pub flip: f64,
+}
+
+impl Default for FaultSpec {
+    fn default() -> Self {
+        FaultSpec { seed: 0, transient: 0.0, short: 0.0, flip: 0.0 }
+    }
+}
+
+impl FaultSpec {
+    /// Parse a `key=value` comma list, e.g.
+    /// `"seed=42,transient=0.1,short=0.05,flip=0.02"`. Unknown keys and
+    /// out-of-range rates are typed errors — a mistyped spec must not
+    /// silently disable injection.
+    pub fn parse(s: &str) -> Result<FaultSpec> {
+        let mut spec = FaultSpec::default();
+        for part in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (key, val) = part.split_once('=').ok_or_else(|| {
+                HssrError::Config(format!("fault spec '{part}': expected key=value"))
+            })?;
+            let rate = |v: &str| -> Result<f64> {
+                let r: f64 = v.parse().map_err(|_| {
+                    HssrError::Config(format!("fault spec: bad rate '{v}'"))
+                })?;
+                if !(0.0..=1.0).contains(&r) {
+                    return Err(HssrError::Config(format!(
+                        "fault spec: rate {r} outside [0, 1]"
+                    )));
+                }
+                Ok(r)
+            };
+            match key.trim() {
+                "seed" => {
+                    spec.seed = val.trim().parse().map_err(|_| {
+                        HssrError::Config(format!("fault spec: bad seed '{val}'"))
+                    })?;
+                }
+                "transient" => spec.transient = rate(val.trim())?,
+                "short" => spec.short = rate(val.trim())?,
+                "flip" => spec.flip = rate(val.trim())?,
+                other => {
+                    return Err(HssrError::Config(format!(
+                        "fault spec: unknown key '{other}' \
+                         (expected seed/transient/short/flip)"
+                    )))
+                }
+            }
+        }
+        Ok(spec)
+    }
+
+    /// Whether any fault mode has a non-zero rate.
+    pub fn is_active(&self) -> bool {
+        self.transient > 0.0 || self.short > 0.0 || self.flip > 0.0
+    }
+}
+
+/// The outcome of one injection decision.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Fault {
+    /// Fail the read with `io::ErrorKind::Interrupted`.
+    Transient,
+    /// Fail the read with `io::ErrorKind::UnexpectedEof`.
+    ShortRead,
+    /// Flip the given bit of the read buffer (byte index, bit index).
+    BitFlip(usize, u8),
+    /// Let the read through untouched.
+    None,
+}
+
+/// Deterministic fault source keyed by `(seed, offset, attempt)`.
+#[derive(Clone, Debug)]
+pub struct FaultInjector {
+    spec: FaultSpec,
+}
+
+impl FaultInjector {
+    /// Attempts `>= MAX_FAULT_ATTEMPTS` are never faulted, guaranteeing
+    /// deterministic success within any retry budget above it.
+    pub const MAX_FAULT_ATTEMPTS: u32 = 3;
+
+    /// Build an injector from a parsed spec.
+    pub fn new(spec: FaultSpec) -> FaultInjector {
+        FaultInjector { spec }
+    }
+
+    /// Build from the `HSSR_FAULTS` environment variable: `Ok(None)` when
+    /// unset or inactive, a typed error when set but malformed.
+    pub fn from_env() -> Result<Option<FaultInjector>> {
+        match std::env::var("HSSR_FAULTS") {
+            Ok(s) if !s.trim().is_empty() => {
+                let spec = FaultSpec::parse(&s)?;
+                Ok(spec.is_active().then(|| FaultInjector::new(spec)))
+            }
+            _ => Ok(None),
+        }
+    }
+
+    /// The spec this injector replays.
+    pub fn spec(&self) -> &FaultSpec {
+        &self.spec
+    }
+
+    /// Decide the fault for a read of `len` bytes at file `offset`, on
+    /// retry `attempt` (0-based). `flip_ok` gates bit flips to reads whose
+    /// consumer verifies a checksum — flipping an unverified read would
+    /// silently corrupt data, the exact failure the layer exists to stop.
+    pub fn decide(&self, offset: u64, attempt: u32, len: usize, flip_ok: bool) -> Fault {
+        if attempt >= Self::MAX_FAULT_ATTEMPTS || len == 0 {
+            return Fault::None;
+        }
+        let base = splitmix64(
+            self.spec.seed ^ splitmix64(offset) ^ splitmix64(0x9E37_79B9 + attempt as u64),
+        );
+        let unit = |h: u64| (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+        let d1 = splitmix64(base);
+        if unit(d1) < self.spec.transient {
+            return Fault::Transient;
+        }
+        let d2 = splitmix64(d1);
+        if unit(d2) < self.spec.short {
+            return Fault::ShortRead;
+        }
+        let d3 = splitmix64(d2);
+        if flip_ok && unit(d3) < self.spec.flip {
+            let d4 = splitmix64(d3);
+            let byte = (d4 % len as u64) as usize;
+            let bit = (splitmix64(d4) % 8) as u8;
+            return Fault::BitFlip(byte, bit);
+        }
+        Fault::None
+    }
+
+    /// Apply the decision to a completed read: error faults become
+    /// `io::Error`s (as if the filesystem had failed), bit flips mutate
+    /// the buffer in place.
+    pub fn inject(
+        &self,
+        offset: u64,
+        attempt: u32,
+        buf: &mut [u8],
+        flip_ok: bool,
+    ) -> std::io::Result<()> {
+        match self.decide(offset, attempt, buf.len(), flip_ok) {
+            Fault::Transient => Err(std::io::Error::new(
+                std::io::ErrorKind::Interrupted,
+                format!("injected transient fault at offset {offset}, attempt {attempt}"),
+            )),
+            Fault::ShortRead => Err(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                format!("injected short read at offset {offset}, attempt {attempt}"),
+            )),
+            Fault::BitFlip(byte, bit) => {
+                buf[byte] ^= 1 << bit;
+                Ok(())
+            }
+            Fault::None => Ok(()),
+        }
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_parsing() {
+        let s = FaultSpec::parse("seed=42, transient=0.1, short=0.05, flip=0.02").unwrap();
+        assert_eq!(
+            s,
+            FaultSpec { seed: 42, transient: 0.1, short: 0.05, flip: 0.02 }
+        );
+        assert!(s.is_active());
+        assert!(!FaultSpec::parse("seed=7").unwrap().is_active());
+        assert!(FaultSpec::parse("transient=1.5").is_err());
+        assert!(FaultSpec::parse("bogus=1").is_err());
+        assert!(FaultSpec::parse("transient").is_err());
+        assert_eq!(FaultSpec::parse("").unwrap(), FaultSpec::default());
+    }
+
+    /// Decisions are pure: the same (seed, offset, attempt) always yields
+    /// the same fault, and different seeds yield different streams.
+    #[test]
+    fn decisions_are_deterministic() {
+        let spec = FaultSpec { seed: 9, transient: 0.3, short: 0.2, flip: 0.2 };
+        let inj = FaultInjector::new(spec);
+        for offset in [0u64, 40, 4096, 1 << 30] {
+            for attempt in 0..3 {
+                let a = inj.decide(offset, attempt, 512, true);
+                let b = inj.decide(offset, attempt, 512, true);
+                assert_eq!(a, b);
+            }
+        }
+        let other = FaultInjector::new(FaultSpec { seed: 10, ..spec });
+        let differs = (0..200u64)
+            .any(|o| inj.decide(o * 64, 0, 512, true) != other.decide(o * 64, 0, 512, true));
+        assert!(differs, "seeds 9 and 10 produced identical fault streams");
+    }
+
+    /// The retry-budget guarantee: attempts at or past the cutoff are
+    /// never faulted, even at rate 1.0.
+    #[test]
+    fn attempts_past_cutoff_always_succeed() {
+        let inj = FaultInjector::new(FaultSpec {
+            seed: 1,
+            transient: 1.0,
+            short: 1.0,
+            flip: 1.0,
+        });
+        for offset in (0..100u64).map(|i| i * 123) {
+            assert_eq!(inj.decide(offset, 0, 64, true), Fault::Transient);
+            assert_eq!(
+                inj.decide(offset, FaultInjector::MAX_FAULT_ATTEMPTS, 64, true),
+                Fault::None
+            );
+            assert_eq!(inj.decide(offset, 7, 64, true), Fault::None);
+        }
+    }
+
+    /// At realistic rates every fault mode actually fires somewhere.
+    #[test]
+    fn all_modes_reachable() {
+        let inj = FaultInjector::new(FaultSpec {
+            seed: 3,
+            transient: 0.2,
+            short: 0.2,
+            flip: 0.2,
+        });
+        let mut seen = (false, false, false);
+        for offset in (0..500u64).map(|i| i * 57) {
+            match inj.decide(offset, 0, 256, true) {
+                Fault::Transient => seen.0 = true,
+                Fault::ShortRead => seen.1 = true,
+                Fault::BitFlip(b, bit) => {
+                    assert!(b < 256 && bit < 8);
+                    seen.2 = true;
+                }
+                Fault::None => {}
+            }
+        }
+        assert!(seen.0 && seen.1 && seen.2, "modes seen: {seen:?}");
+    }
+
+    /// Bit flips are suppressed on reads with no checksum backstop.
+    #[test]
+    fn flips_gated_on_verification() {
+        let inj =
+            FaultInjector::new(FaultSpec { seed: 5, transient: 0.0, short: 0.0, flip: 1.0 });
+        assert!(matches!(inj.decide(0, 0, 64, true), Fault::BitFlip(..)));
+        assert_eq!(inj.decide(0, 0, 64, false), Fault::None);
+    }
+
+    #[test]
+    fn inject_mutates_buffer_on_flip() {
+        let inj =
+            FaultInjector::new(FaultSpec { seed: 5, transient: 0.0, short: 0.0, flip: 1.0 });
+        let clean = vec![0u8; 64];
+        let mut buf = clean.clone();
+        inj.inject(0, 0, &mut buf, true).unwrap();
+        let flipped: usize = clean
+            .iter()
+            .zip(&buf)
+            .map(|(a, b)| (a ^ b).count_ones() as usize)
+            .sum();
+        assert_eq!(flipped, 1, "exactly one bit must flip");
+    }
+}

@@ -1,7 +1,7 @@
-//! The `HSSRSTOR1` on-disk layout: header encode/decode and offset math.
+//! The `HSSRSTOR` on-disk layout: header encode/decode and offset math.
 //!
 //! ```text
-//! offset 0   magic  b"HSSRSTOR1"                      (9 bytes)
+//! offset 0   magic  b"HSSRSTOR1" | b"HSSRSTOR2"       (9 bytes)
 //! offset 9   standardized flag: 1 ⇒ the chunk data is already in paper
 //!            condition (2) and the per-column stats are informational;
 //!            0 ⇒ the chunk data is raw and the reader applies
@@ -18,15 +18,24 @@
 //! …          y        (n × f64 LE, centered)
 //! …          centers  (p × f64 LE)
 //! …          scales   (p × f64 LE; 0 marks a constant column)
+//! …          [v2 only] checksum section: one CRC32 (u32 LE) per chunk
+//!            in order, then one CRC32 of the whole tail
+//!            (y ‖ centers ‖ scales) — (num_chunks + 1) × 4 bytes
 //! ```
 //!
-//! All offsets are computable from `(n, p, chunk_cols)` alone, which is
-//! what lets the reader serve any column slice with one `seek`/`read`.
+//! Version 2 (`HSSRSTOR2`) appends the checksum section and is what the
+//! writers now produce; version-1 files remain fully readable (the reader
+//! simply has no integrity data to verify against). All offsets are
+//! computable from `(n, p, chunk_cols)` alone, which is what lets the
+//! reader serve any column slice with one `seek`/`read`.
 
 use crate::error::{HssrError, Result};
 
-/// Store magic: format name + version in one token.
+/// Version-1 store magic (no checksum section).
 pub const MAGIC: &[u8; 9] = b"HSSRSTOR1";
+
+/// Version-2 store magic: layout of v1 plus the trailing CRC32 section.
+pub const MAGIC2: &[u8; 9] = b"HSSRSTOR2";
 
 /// Fixed header length in bytes (magic + flag + reserved + three u64s).
 pub const HEADER_LEN: u64 = 40;
@@ -42,6 +51,8 @@ pub struct Header {
     pub chunk_cols: usize,
     /// Whether the chunk data is pre-standardized (see module docs).
     pub standardized: bool,
+    /// Whether the file carries the v2 trailing checksum section.
+    pub checksums: bool,
 }
 
 impl Header {
@@ -71,9 +82,25 @@ impl Header {
         HEADER_LEN + (self.n * self.p * 8) as u64
     }
 
+    /// Tail section size in bytes (`y` + `centers` + `scales`).
+    pub fn tail_bytes(&self) -> usize {
+        (self.n + 2 * self.p) * 8
+    }
+
+    /// Byte offset of the v2 checksum section (= the v1 end of file).
+    pub fn checksum_offset(&self) -> u64 {
+        self.tail_offset() + self.tail_bytes() as u64
+    }
+
+    /// Size of the v2 checksum section: one CRC32 per chunk + one for the
+    /// tail. Zero for v1 files.
+    pub fn checksum_bytes(&self) -> u64 {
+        if self.checksums { 4 * (self.num_chunks() as u64 + 1) } else { 0 }
+    }
+
     /// Total file size implied by the header.
     pub fn file_len(&self) -> u64 {
-        self.tail_offset() + ((self.n + 2 * self.p) * 8) as u64
+        self.checksum_offset() + self.checksum_bytes()
     }
 
     /// [`Header::file_len`] with overflow-checked arithmetic — `None`
@@ -85,7 +112,12 @@ impl Header {
         let p = self.p as u64;
         let matrix = n.checked_mul(p)?.checked_mul(8)?;
         let tail = n.checked_add(p.checked_mul(2)?)?.checked_mul(8)?;
-        HEADER_LEN.checked_add(matrix)?.checked_add(tail)
+        let base = HEADER_LEN.checked_add(matrix)?.checked_add(tail)?;
+        if !self.checksums {
+            return Some(base);
+        }
+        let chunks = p.div_ceil(self.chunk_cols.max(1) as u64);
+        base.checked_add(chunks.checked_add(1)?.checked_mul(4)?)
     }
 
     /// Matrix footprint in bytes (`n·p·8`) — what "larger than the cache
@@ -94,10 +126,10 @@ impl Header {
         (self.n * self.p * 8) as u64
     }
 
-    /// Encode the fixed header.
+    /// Encode the fixed header (the magic carries the version).
     pub fn encode(&self) -> [u8; HEADER_LEN as usize] {
         let mut buf = [0u8; HEADER_LEN as usize];
-        buf[..9].copy_from_slice(MAGIC);
+        buf[..9].copy_from_slice(if self.checksums { MAGIC2 } else { MAGIC });
         buf[9] = self.standardized as u8;
         buf[16..24].copy_from_slice(&(self.n as u64).to_le_bytes());
         buf[24..32].copy_from_slice(&(self.p as u64).to_le_bytes());
@@ -105,21 +137,28 @@ impl Header {
         buf
     }
 
-    /// Decode and validate a fixed header.
+    /// Decode and validate a fixed header (either version).
     pub fn decode(buf: &[u8; HEADER_LEN as usize]) -> Result<Header> {
-        if &buf[..9] != MAGIC {
-            return Err(HssrError::Config(
-                "not an HSSRSTOR1 column store (bad magic)".into(),
-            ));
-        }
+        let checksums = match &buf[..9] {
+            m if m == MAGIC => false,
+            m if m == MAGIC2 => true,
+            _ => {
+                return Err(HssrError::Config(
+                    "not an HSSRSTOR column store (bad magic)".into(),
+                ))
+            }
+        };
         let u = |off: usize| {
-            u64::from_le_bytes(buf[off..off + 8].try_into().unwrap()) as usize
+            let mut b = [0u8; 8];
+            b.copy_from_slice(&buf[off..off + 8]);
+            u64::from_le_bytes(b) as usize
         };
         let h = Header {
             n: u(16),
             p: u(24),
             chunk_cols: u(32),
             standardized: buf[9] != 0,
+            checksums,
         };
         if h.n == 0 || h.p == 0 || h.chunk_cols == 0 {
             return Err(HssrError::Config(format!(
@@ -138,12 +177,13 @@ pub fn chunk_cols_for(n: usize, p: usize, target_bytes: usize) -> usize {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
 
     #[test]
     fn header_roundtrip() {
-        let h = Header { n: 17, p: 103, chunk_cols: 16, standardized: true };
+        let h = Header { n: 17, p: 103, chunk_cols: 16, standardized: true, checksums: true };
         let back = Header::decode(&h.encode()).unwrap();
         assert_eq!(h, back);
         assert_eq!(back.num_chunks(), 7);
@@ -153,27 +193,44 @@ mod tests {
         assert_eq!(back.tail_offset(), HEADER_LEN + (17 * 103 * 8) as u64);
         assert_eq!(
             back.file_len(),
-            back.tail_offset() + ((17 + 2 * 103) * 8) as u64
+            back.tail_offset() + ((17 + 2 * 103) * 8) as u64 + 4 * 8
         );
+    }
+
+    /// Version-1 headers decode with `checksums: false` and keep the old
+    /// file-length math — existing stores stay readable byte for byte.
+    #[test]
+    fn v1_header_still_readable() {
+        let h = Header { n: 17, p: 103, chunk_cols: 16, standardized: true, checksums: false };
+        let enc = h.encode();
+        assert_eq!(&enc[..9], MAGIC);
+        let back = Header::decode(&enc).unwrap();
+        assert_eq!(back, h);
+        assert_eq!(back.checksum_bytes(), 0);
+        assert_eq!(back.file_len(), back.tail_offset() + ((17 + 2 * 103) * 8) as u64);
+        assert_eq!(back.checksum_offset(), back.file_len());
     }
 
     #[test]
     fn bad_headers_rejected() {
-        let h = Header { n: 3, p: 4, chunk_cols: 2, standardized: false };
+        let h = Header { n: 3, p: 4, chunk_cols: 2, standardized: false, checksums: true };
         let mut buf = h.encode();
         buf[0] = b'X';
         assert!(Header::decode(&buf).is_err());
-        let degenerate = Header { n: 0, p: 4, chunk_cols: 2, standardized: false };
+        let degenerate =
+            Header { n: 0, p: 4, chunk_cols: 2, standardized: false, checksums: true };
         assert!(Header::decode(&degenerate.encode()).is_err());
     }
 
     #[test]
     fn checked_len_rejects_wrapping_headers() {
-        let ok = Header { n: 17, p: 103, chunk_cols: 16, standardized: false };
-        assert_eq!(ok.checked_file_len(), Some(ok.file_len()));
-        let huge =
-            Header { n: 1 << 61, p: 4, chunk_cols: 1, standardized: false };
-        assert_eq!(huge.checked_file_len(), None);
+        for checksums in [false, true] {
+            let ok = Header { n: 17, p: 103, chunk_cols: 16, standardized: false, checksums };
+            assert_eq!(ok.checked_file_len(), Some(ok.file_len()));
+            let huge =
+                Header { n: 1 << 61, p: 4, chunk_cols: 1, standardized: false, checksums };
+            assert_eq!(huge.checked_file_len(), None);
+        }
     }
 
     #[test]

@@ -26,13 +26,27 @@
 //! [`crate::runtime::ScanEngine`] trait, so every family's screening/KKT
 //! scans run out-of-core with zero driver changes. The cache budget comes
 //! from `HSSR_CACHE_MB` ([`cache_budget_bytes`]).
+//!
+//! **Fault tolerance** (see `docs/ARCHITECTURE.md` § Fault tolerance): the
+//! v2 format checksums every chunk and the tail; the reader verifies on
+//! load, retries transient failures with bounded backoff, quarantines
+//! chunks whose retries exhaust, and counts it all here
+//! ([`StoreCounters::retries`] / `checksum_failures` / `short_reads`).
+//! [`fault`] provides the deterministic injector that proves the policy
+//! masks faults without changing a single bit of any fit.
+
+// The storage layer must never panic on bad data — a flipped bit or a
+// poisoned lock has a typed-error path. Test modules opt back out.
+#![deny(clippy::unwrap_used)]
 
 pub mod cache;
+pub mod fault;
 pub mod format;
 pub mod reader;
 pub mod writer;
 
-pub use format::{chunk_cols_for, Header, HEADER_LEN, MAGIC};
+pub use fault::{FaultInjector, FaultSpec};
+pub use format::{chunk_cols_for, Header, HEADER_LEN, MAGIC, MAGIC2};
 pub use reader::ColumnStore;
 pub use writer::{convert_bin, convert_csv, write_dataset, write_matrix, StoreSummary};
 
@@ -75,6 +89,9 @@ pub struct StoreCounters {
     bytes_read: AtomicU64,
     cache_hits: AtomicU64,
     peak_resident: AtomicU64,
+    retries: AtomicU64,
+    checksum_failures: AtomicU64,
+    short_reads: AtomicU64,
 }
 
 impl StoreCounters {
@@ -99,6 +116,22 @@ impl StoreCounters {
     /// running peak).
     pub fn note_resident(&self, bytes: u64) {
         self.peak_resident.fetch_max(bytes, Ordering::Relaxed);
+    }
+
+    /// Count one retried read attempt (transient fault or checksum
+    /// mismatch absorbed by the retry policy).
+    pub fn add_retry(&self) {
+        self.retries.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one chunk/tail read whose CRC32 did not match.
+    pub fn add_checksum_failure(&self) {
+        self.checksum_failures.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one short read (`UnexpectedEof` before the buffer filled).
+    pub fn add_short_read(&self) {
+        self.short_reads.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Columns served since construction (or last reset).
@@ -126,6 +159,22 @@ impl StoreCounters {
         self.peak_resident.load(Ordering::Relaxed)
     }
 
+    /// Read attempts that were retried (transient faults + CRC retries).
+    pub fn retries(&self) -> u64 {
+        self.retries.load(Ordering::Relaxed)
+    }
+
+    /// Checksum verification failures observed (each one retried or, when
+    /// the budget exhausts, quarantined).
+    pub fn checksum_failures(&self) -> u64 {
+        self.checksum_failures.load(Ordering::Relaxed)
+    }
+
+    /// Short reads observed.
+    pub fn short_reads(&self) -> u64 {
+        self.short_reads.load(Ordering::Relaxed)
+    }
+
     /// Zero every counter.
     pub fn reset(&self) {
         self.cols_fetched.store(0, Ordering::Relaxed);
@@ -133,6 +182,9 @@ impl StoreCounters {
         self.bytes_read.store(0, Ordering::Relaxed);
         self.cache_hits.store(0, Ordering::Relaxed);
         self.peak_resident.store(0, Ordering::Relaxed);
+        self.retries.store(0, Ordering::Relaxed);
+        self.checksum_failures.store(0, Ordering::Relaxed);
+        self.short_reads.store(0, Ordering::Relaxed);
     }
 }
 
@@ -177,6 +229,7 @@ pub(crate) fn pwrite(file: &File, buf: &[u8], offset: u64) -> Result<()> {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
 
@@ -198,13 +251,21 @@ mod tests {
         c.add_hit();
         c.note_resident(64);
         c.note_resident(32);
+        c.add_retry();
+        c.add_retry();
+        c.add_checksum_failure();
+        c.add_short_read();
         assert_eq!(c.cols_fetched(), 2);
         assert_eq!(c.chunk_loads(), 1);
         assert_eq!(c.bytes_read(), 100);
         assert_eq!(c.cache_hits(), 1);
         assert_eq!(c.peak_resident(), 64);
+        assert_eq!(c.retries(), 2);
+        assert_eq!(c.checksum_failures(), 1);
+        assert_eq!(c.short_reads(), 1);
         c.reset();
         assert_eq!(c.cols_fetched() + c.chunk_loads() + c.bytes_read(), 0);
+        assert_eq!(c.retries() + c.checksum_failures() + c.short_reads(), 0);
     }
 
     #[test]

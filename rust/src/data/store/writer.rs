@@ -1,4 +1,5 @@
-//! Streaming writers for the `HSSRSTOR1` column store.
+//! Streaming writers for the `HSSRSTOR` column store (v2: every chunk and
+//! the tail are CRC32-checksummed; see [`super::format`]).
 //!
 //! Three producers, all with bounded memory:
 //!
@@ -18,17 +19,25 @@
 //!   (standardized) design to a store, column-major sequential. This is
 //!   what `--engine ooc` uses to mount a generated dataset, and what the
 //!   equivalence tests use to get bit-exact values on disk.
+//!
+//! All three validate their inputs — non-finite values (and, for the
+//! conversion paths, zero-variance feature columns) are typed errors at
+//! the write boundary, never data that surfaces later as a diverging fit —
+//! and finish with a checksum pass ([`append_checksums`]) that reads the
+//! written payload back and appends one CRC32 per chunk plus one for the
+//! tail.
 
 use std::fs::File;
 use std::io::{BufWriter, Read, Write};
 use std::path::Path;
 
 use super::format::{Header, HEADER_LEN};
-use super::pwrite;
+use super::{pread, pwrite};
 use crate::data::io::CsvRows;
 use crate::data::Dataset;
 use crate::error::{HssrError, Result};
 use crate::linalg::DenseMatrix;
+use crate::serialize::crc32;
 
 /// What a writer produced: the decoded header plus the file size.
 #[derive(Clone, Copy, Debug)]
@@ -37,6 +46,42 @@ pub struct StoreSummary {
     pub header: Header,
     /// Total bytes in the store file.
     pub file_bytes: u64,
+}
+
+/// Read the written payload back and append the v2 checksum section: one
+/// CRC32 per chunk in order, then one CRC32 of the whole tail. The file
+/// handle must be readable and writable.
+fn append_checksums(file: &File, header: &Header) -> Result<()> {
+    debug_assert!(header.checksums);
+    let mut sect = Vec::with_capacity(header.checksum_bytes() as usize);
+    let mut buf = Vec::new();
+    for c in 0..header.num_chunks() {
+        buf.resize(header.chunk_bytes(c), 0u8);
+        pread(file, &mut buf, header.chunk_offset(c))?;
+        sect.extend_from_slice(&crc32(&buf).to_le_bytes());
+    }
+    let mut tail = vec![0u8; header.tail_bytes()];
+    pread(file, &mut tail, header.tail_offset())?;
+    sect.extend_from_slice(&crc32(&tail).to_le_bytes());
+    pwrite(file, &sect, header.checksum_offset())?;
+    Ok(())
+}
+
+/// Reject non-finite values in a little-endian f64 byte run. `base` is the
+/// global value index of `bytes[0]`, so the error names the real position.
+fn check_finite_bytes(bytes: &[u8], base: usize, what: &str) -> Result<()> {
+    for (i, c) in bytes.chunks_exact(8).enumerate() {
+        let mut b = [0u8; 8];
+        b.copy_from_slice(c);
+        let v = f64::from_le_bytes(b);
+        if !v.is_finite() {
+            return Err(HssrError::Config(format!(
+                "{what}: non-finite value ({v}) at index {}",
+                base + i
+            )));
+        }
+    }
+    Ok(())
 }
 
 fn write_f64s<W: Write>(w: &mut W, vals: &[f64]) -> Result<()> {
@@ -76,8 +121,28 @@ pub fn write_matrix(
             scales.len()
         )));
     }
-    let header = Header { n, p, chunk_cols: chunk_cols.clamp(1, p.max(1)), standardized };
-    let mut w = BufWriter::new(File::create(path)?);
+    if let Some(pos) = x.as_slice().iter().position(|v| !v.is_finite()) {
+        return Err(HssrError::Config(format!(
+            "store write: non-finite value in design matrix \
+             (column {}, row {})",
+            pos / n.max(1),
+            pos % n.max(1)
+        )));
+    }
+    if let Some(i) = y.iter().position(|v| !v.is_finite()) {
+        return Err(HssrError::Config(format!(
+            "store write: non-finite response value at row {i}"
+        )));
+    }
+    let header = Header {
+        n,
+        p,
+        chunk_cols: chunk_cols.clamp(1, p.max(1)),
+        standardized,
+        checksums: true,
+    };
+    let file = File::options().read(true).write(true).create(true).truncate(true).open(path)?;
+    let mut w = BufWriter::new(&file);
     w.write_all(&header.encode())?;
     // The backing slice is already column-major — the chunk layout is a
     // pure re-framing of the same byte order.
@@ -86,6 +151,8 @@ pub fn write_matrix(
     write_f64s(&mut w, centers)?;
     write_f64s(&mut w, scales)?;
     w.flush()?;
+    drop(w);
+    append_checksums(&file, &header)?;
     Ok(StoreSummary { header, file_bytes: header.file_len() })
 }
 
@@ -120,26 +187,44 @@ pub fn convert_bin(src: &Path, chunk_cols: usize, out: &Path) -> Result<StoreSum
     // scales — so hold y (length n) and stream everything else.
     let mut ybytes = vec![0u8; n * 8];
     r.read_exact(&mut ybytes)?;
-    let header = Header { n, p, chunk_cols: chunk_cols.clamp(1, p), standardized: true };
-    let mut w = BufWriter::new(File::create(out)?);
+    check_finite_bytes(&ybytes, 0, "binary cache response")?;
+    let header =
+        Header { n, p, chunk_cols: chunk_cols.clamp(1, p), standardized: true, checksums: true };
+    let file = File::options().read(true).write(true).create(true).truncate(true).open(out)?;
+    let mut w = BufWriter::new(&file);
     w.write_all(&header.encode())?;
     let mut remaining = (n * p * 8) as u64;
+    let mut done = 0usize;
     let mut buf = vec![0u8; 1 << 20];
     while remaining > 0 {
         let take = (buf.len() as u64).min(remaining) as usize;
         r.read_exact(&mut buf[..take])?;
+        check_finite_bytes(&buf[..take], done, "binary cache matrix")?;
         w.write_all(&buf[..take])?;
         remaining -= take as u64;
+        done += take / 8;
     }
     w.write_all(&ybytes)?;
-    let mut stats = (2 * p * 8) as u64;
-    while stats > 0 {
-        let take = (buf.len() as u64).min(stats) as usize;
-        r.read_exact(&mut buf[..take])?;
-        w.write_all(&buf[..take])?;
-        stats -= take as u64;
+    // Stats tail is small (2p values): buffer it so the scales half can be
+    // validated — a zero scale marks a constant (zero-variance) column.
+    let mut stats = vec![0u8; 2 * p * 8];
+    r.read_exact(&mut stats)?;
+    check_finite_bytes(&stats, 0, "binary cache column stats")?;
+    for (j, c) in stats[p * 8..].chunks_exact(8).enumerate() {
+        let mut b = [0u8; 8];
+        b.copy_from_slice(c);
+        if f64::from_le_bytes(b) == 0.0 {
+            return Err(HssrError::Config(format!(
+                "{}: feature column {j} has zero variance — drop constant \
+                 columns before converting",
+                src.display()
+            )));
+        }
     }
+    w.write_all(&stats)?;
     w.flush()?;
+    drop(w);
+    append_checksums(&file, &header)?;
     Ok(StoreSummary { header, file_bytes: header.file_len() })
 }
 
@@ -193,11 +278,12 @@ pub fn convert_csv(src: &Path, chunk_cols: usize, out: &Path) -> Result<StoreSum
         return Err(HssrError::Config("csv needs ≥ 2 columns (y + features)".into()));
     }
     let p = width - 1;
-    let header = Header { n, p, chunk_cols: chunk_cols.clamp(1, p), standardized: false };
+    let header =
+        Header { n, p, chunk_cols: chunk_cols.clamp(1, p), standardized: false, checksums: true };
 
     // Pass 2: stream rows, scattering row blocks to their final
     // column-major offsets while the Welford state accumulates.
-    let file = File::create(out)?;
+    let file = File::options().read(true).write(true).create(true).truncate(true).open(out)?;
     pwrite(&file, &header.encode(), 0)?;
     let block_rows = ((4 << 20) / (p * 8)).clamp(1, n);
     let mut block: Vec<Vec<f64>> = vec![Vec::with_capacity(block_rows); p];
@@ -233,6 +319,15 @@ pub fn convert_csv(src: &Path, chunk_cols: usize, out: &Path) -> Result<StoreSum
                 "csv grew between passes (more rows than counted)".into(),
             ));
         }
+        if let Some(j) = row.iter().position(|v| !v.is_finite()) {
+            let _ = std::fs::remove_file(out);
+            return Err(HssrError::Config(format!(
+                "csv row {}: non-finite value ({}) in column {j} — clean the \
+                 data before converting",
+                y.len() + 1,
+                row[j]
+            )));
+        }
         y.push(row[0]);
         for j in 0..p {
             let v = row[j + 1];
@@ -260,16 +355,26 @@ pub fn convert_csv(src: &Path, chunk_cols: usize, out: &Path) -> Result<StoreSum
     }
     let centers: Vec<f64> = stats.iter().map(|s| s.mean).collect();
     let scales: Vec<f64> = stats.iter().map(|s| s.scale()).collect();
+    if let Some(j) = scales.iter().position(|&s| s == 0.0) {
+        let _ = std::fs::remove_file(out);
+        return Err(HssrError::Config(format!(
+            "csv feature column {j} has zero variance — a constant column \
+             carries no signal and breaks standardization; drop it before \
+             converting"
+        )));
+    }
     let mut tail = Vec::with_capacity((n + 2 * p) * 8);
     for v in y.iter().chain(&centers).chain(&scales) {
         tail.extend_from_slice(&v.to_le_bytes());
     }
     pwrite(&file, &tail, header.tail_offset())?;
+    append_checksums(&file, &header)?;
     file.sync_all().ok();
     Ok(StoreSummary { header, file_bytes: header.file_len() })
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
 
@@ -326,6 +431,69 @@ mod tests {
         let s = convert_bin(&bin, 3, &out).unwrap();
         assert_eq!((s.header.n, s.header.p, s.header.chunk_cols), (12, 7, 3));
         assert!(s.header.standardized);
+        assert!(s.header.checksums, "writers must produce v2 stores");
         assert_eq!(std::fs::metadata(&out).unwrap().len(), s.file_bytes);
+    }
+
+    /// The appended checksum section holds the real CRC32 of each chunk
+    /// payload and of the tail, byte for byte.
+    #[test]
+    fn checksum_section_matches_payload() {
+        use crate::data::DataSpec;
+        let ds = DataSpec::synthetic(9, 10, 2).generate(11);
+        let path = tmp("crc.store");
+        let s = write_dataset(&ds, 4, &path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        let h = s.header;
+        assert_eq!(bytes.len() as u64, h.file_len());
+        let mut off = h.checksum_offset() as usize;
+        for c in 0..h.num_chunks() {
+            let start = h.chunk_offset(c) as usize;
+            let want = crc32(&bytes[start..start + h.chunk_bytes(c)]);
+            let got = u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap());
+            assert_eq!(got, want, "chunk {c} CRC mismatch");
+            off += 4;
+        }
+        let tail_start = h.tail_offset() as usize;
+        let want = crc32(&bytes[tail_start..tail_start + h.tail_bytes()]);
+        let got = u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap());
+        assert_eq!(got, want, "tail CRC mismatch");
+    }
+
+    #[test]
+    fn non_finite_values_rejected() {
+        let mut data = vec![0.5; 12];
+        data[7] = f64::NAN;
+        let x = DenseMatrix::from_col_major(4, 3, data).unwrap();
+        let err = write_matrix(&x, &[0.0; 4], &[0.0; 3], &[1.0; 3], true, 2, &tmp("nan.store"))
+            .unwrap_err();
+        assert!(err.to_string().contains("non-finite"), "got {err}");
+        let x = DenseMatrix::from_col_major(4, 3, vec![0.5; 12]).unwrap();
+        let err = write_matrix(
+            &x,
+            &[0.0, f64::INFINITY, 0.0, 0.0],
+            &[0.0; 3],
+            &[1.0; 3],
+            true,
+            2,
+            &tmp("inf.store"),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("non-finite"), "got {err}");
+    }
+
+    #[test]
+    fn convert_csv_rejects_bad_columns() {
+        // constant feature column → zero variance → typed rejection
+        let csv = tmp("zv.csv");
+        std::fs::write(&csv, "1.0,2.0,7.5\n-1.0,3.5,7.5\n0.5,1.25,7.5\n").unwrap();
+        let err = convert_csv(&csv, 2, &tmp("zv.store")).unwrap_err();
+        assert!(err.to_string().contains("zero variance"), "got {err}");
+        assert!(!tmp("zv.store").exists(), "rejected store must not linger");
+        // non-finite value → typed rejection naming the spot
+        let csv = tmp("nf.csv");
+        std::fs::write(&csv, "1.0,2.0,3.0\n-1.0,nan,1.0\n").unwrap();
+        let err = convert_csv(&csv, 2, &tmp("nf.store")).unwrap_err();
+        assert!(err.to_string().contains("non-finite"), "got {err}");
     }
 }

@@ -1,7 +1,13 @@
-//! Crate-wide error type.
+//! Crate-wide error type and the storage-layer fault taxonomy.
 //!
 //! Hand-written `Display`/`Error` impls (the offline registry has no
 //! `thiserror`; this is the 10 lines of it we need).
+//!
+//! The fault-tolerance layer (`data::store`, `solver::driver`) classifies
+//! failures along two axes: **transience** ([`FaultClass`], driving the
+//! store's retry-with-backoff policy) and **recoverability**
+//! ([`HssrError::is_degradable`], driving the path driver's graceful
+//! truncation of a λ-path instead of discarding the completed prefix).
 
 use std::fmt;
 
@@ -24,6 +30,19 @@ pub enum HssrError {
         last_delta: f64,
     },
 
+    /// The optimizer produced a non-finite quantity (NaN/Inf residual,
+    /// coefficient update, or objective) — divergence, not slowness.
+    NonFinite {
+        /// Index into the λ grid where the non-finite value appeared.
+        lambda_index: usize,
+        /// Which quantity went non-finite (e.g. "cd delta", "irls delta").
+        context: String,
+    },
+
+    /// Stored data failed integrity verification (checksum mismatch,
+    /// quarantined chunk, malformed checkpoint) and retries are exhausted.
+    Corrupt(String),
+
     /// An AOT artifact was missing or malformed.
     Artifact(String),
 
@@ -32,6 +51,44 @@ pub enum HssrError {
 
     /// I/O error (dataset cache, artifact files, report output).
     Io(std::io::Error),
+}
+
+/// Transience classification for storage-layer I/O failures: transient
+/// faults are worth a bounded retry; permanent ones are surfaced at once.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultClass {
+    /// Interrupted syscalls, timeouts, short reads — retry with backoff.
+    Transient,
+    /// Missing files, permission errors, bad descriptors — fail fast.
+    Permanent,
+}
+
+/// Classify an I/O error for the store's retry policy. `Interrupted`,
+/// `WouldBlock`, and `TimedOut` are classic transient kernel conditions;
+/// `UnexpectedEof` covers short reads of a file that may still be growing
+/// or a racing reader. Everything else is treated as permanent.
+pub fn io_fault_class(e: &std::io::Error) -> FaultClass {
+    use std::io::ErrorKind;
+    match e.kind() {
+        ErrorKind::Interrupted
+        | ErrorKind::WouldBlock
+        | ErrorKind::TimedOut
+        | ErrorKind::UnexpectedEof => FaultClass::Transient,
+        _ => FaultClass::Permanent,
+    }
+}
+
+impl HssrError {
+    /// Whether a λ-path hitting this error mid-grid can degrade gracefully
+    /// — keep the completed λ-prefix and report the failure — rather than
+    /// discard the whole fit. Divergence (`NoConvergence`, `NonFinite`) is
+    /// a property of one λ; config/dimension/IO errors poison the run.
+    pub fn is_degradable(&self) -> bool {
+        matches!(
+            self,
+            HssrError::NoConvergence { .. } | HssrError::NonFinite { .. }
+        )
+    }
 }
 
 impl fmt::Display for HssrError {
@@ -44,6 +101,12 @@ impl fmt::Display for HssrError {
                 "solver did not converge at lambda index {lambda_index} \
                  (max_iter={max_iter}, last delta={last_delta:.3e})"
             ),
+            HssrError::NonFinite { lambda_index, context } => write!(
+                f,
+                "solver diverged at lambda index {lambda_index}: \
+                 non-finite {context}"
+            ),
+            HssrError::Corrupt(s) => write!(f, "data corruption: {s}"),
             HssrError::Artifact(s) => write!(f, "runtime artifact error: {s}"),
             HssrError::Xla(s) => write!(f, "xla runtime error: {s}"),
             HssrError::Io(e) => write!(f, "io error: {e}"),
@@ -88,5 +151,38 @@ mod tests {
         assert!(e.to_string().contains("lambda index 3"));
         let e = HssrError::Io(std::io::Error::new(std::io::ErrorKind::Other, "boom"));
         assert!(e.to_string().contains("boom"));
+        let e = HssrError::NonFinite { lambda_index: 4, context: "cd delta".into() };
+        assert!(e.to_string().contains("lambda index 4"));
+        assert!(e.to_string().contains("cd delta"));
+        let e = HssrError::Corrupt("chunk 3 checksum".into());
+        assert!(e.to_string().contains("corruption"));
+    }
+
+    #[test]
+    fn fault_classification() {
+        use std::io::{Error, ErrorKind};
+        for k in [
+            ErrorKind::Interrupted,
+            ErrorKind::WouldBlock,
+            ErrorKind::TimedOut,
+            ErrorKind::UnexpectedEof,
+        ] {
+            assert_eq!(io_fault_class(&Error::new(k, "x")), FaultClass::Transient);
+        }
+        for k in [ErrorKind::NotFound, ErrorKind::PermissionDenied, ErrorKind::Other] {
+            assert_eq!(io_fault_class(&Error::new(k, "x")), FaultClass::Permanent);
+        }
+    }
+
+    #[test]
+    fn degradable_errors_are_per_lambda() {
+        assert!(HssrError::NoConvergence { lambda_index: 0, max_iter: 1, last_delta: 1.0 }
+            .is_degradable());
+        assert!(HssrError::NonFinite { lambda_index: 0, context: "r".into() }
+            .is_degradable());
+        assert!(!HssrError::Config("bad".into()).is_degradable());
+        assert!(!HssrError::Corrupt("chunk".into()).is_degradable());
+        assert!(!HssrError::Io(std::io::Error::new(std::io::ErrorKind::Other, "x"))
+            .is_degradable());
     }
 }

@@ -74,6 +74,7 @@ pub mod prop;
 pub mod rng;
 pub mod runtime;
 pub mod screening;
+pub mod serialize;
 pub mod solver;
 
 #[cfg(test)]

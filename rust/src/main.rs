@@ -4,6 +4,7 @@
 //! hssr fit   [--data synth|gene|mnist|gwas|nyt] [--n N] [--p P] [--rule METHOD]
 //!            [--alpha A] [--nlambda K] [--lmin-ratio R] [--seed S]
 //!            [--engine native|pjrt|ooc] [--cache-mb M]
+//!            [--checkpoint file.ckpt]   # crash-resumable λ-path
 //! hssr group [--data synth|grvs|spline] [--groups G] [--gsize W] [--rule METHOD]
 //!            [--alpha A]                              # group elastic net when A < 1
 //! hssr power [--data gene] [--n N] [--p P]          # Figure-1 style curves
@@ -19,6 +20,12 @@
 //! `--data store --path file.store` loads a converted column store, and with
 //! `--engine ooc` serves every screening/KKT scan from that store through a
 //! bounded chunk cache (`HSSR_CACHE_MB` or `--cache-mb`).
+//!
+//! `--checkpoint file` (fit/group/logistic) writes a crash-resumable
+//! checkpoint after every completed λ and resumes from it when it exists.
+//! `--faults spec` (any command) arms the deterministic storage fault
+//! injector — equivalent to setting `HSSR_FAULTS=spec` — for exercising
+//! the retry/checksum machinery; see `docs/ARCHITECTURE.md`.
 
 use hssr::coordinator::config::{parse_rule, Config};
 use hssr::coordinator::metrics::screening_power;
@@ -125,8 +132,17 @@ fn path_config_from(cfg: &Config) -> Result<PathConfig> {
         lambda_min_ratio: cfg.get_parse("lmin-ratio", 0.1)?,
         tol: cfg.get_parse("tol", 1e-7)?,
         rescreen_every: cfg.get_parse("rescreen-every", 10usize)?,
+        checkpoint: cfg.get("checkpoint").map(std::path::PathBuf::from),
         ..PathConfig::default()
     })
+}
+
+/// Report a gracefully degraded path: the completed λ-prefix is valid and
+/// returned; the failure is surfaced, not hidden.
+fn warn_degraded(error: Option<&hssr::solver::driver::PathError>, kept: usize) {
+    if let Some(e) = error {
+        eprintln!("warning: {e}; keeping the {kept}-λ completed prefix");
+    }
 }
 
 fn cmd_fit(cfg: &Config) -> Result<()> {
@@ -147,6 +163,7 @@ fn cmd_fit(cfg: &Config) -> Result<()> {
         }
     };
     let fit = fit_lasso_path_with_engine(&ds, &pcfg, engine)?;
+    warn_degraded(fit.error.as_ref(), fit.lambdas.len());
     println!(
         "fitted {} over {} λ values in {:.3}s  (rule {}, engine {})",
         ds.name,
@@ -192,6 +209,12 @@ fn cmd_fit(cfg: &Config) -> Result<()> {
             c.peak_resident() as f64 / 1e6,
             e.store().budget_bytes() as f64 / 1e6,
             e.store().header().matrix_bytes() as f64 / 1e6,
+        );
+        println!(
+            "ooc faults: {} read retries, {} checksum failures, {} short reads",
+            c.retries(),
+            c.checksum_failures(),
+            c.short_reads(),
         );
     }
     Ok(())
@@ -289,9 +312,11 @@ fn cmd_group(cfg: &Config) -> Result<()> {
         lambda_min_ratio: cfg.get_parse("lmin-ratio", 0.1)?,
         tol: cfg.get_parse("tol", 1e-7)?,
         rescreen_every: cfg.get_parse("rescreen-every", 10usize)?,
+        checkpoint: cfg.get("checkpoint").map(std::path::PathBuf::from),
         ..GroupPathConfig::default()
     };
     let fit = fit_group_path(&ds, &gcfg)?;
+    warn_degraded(fit.error.as_ref(), fit.lambdas.len());
     println!(
         "fitted {} ({} groups) over {} λ values in {:.3}s (rule {}, α={alpha})",
         ds.name,
@@ -375,6 +400,7 @@ fn cmd_logistic(cfg: &Config) -> Result<()> {
         rule,
         n_lambda: cfg.get_parse("nlambda", 100usize)?,
         rescreen_every: cfg.get_parse("rescreen-every", 1usize)?,
+        checkpoint: cfg.get("checkpoint").map(std::path::PathBuf::from),
         ..Default::default()
     };
     let engine_kind = EngineKind::parse(&cfg.get_str("engine", "native"))
@@ -392,6 +418,7 @@ fn cmd_logistic(cfg: &Config) -> Result<()> {
         }
     };
     let fit = fit_logistic_path_with_engine(&x, &y, &lcfg, engine)?;
+    warn_degraded(fit.error.as_ref(), fit.lambdas.len());
     println!(
         "logistic path (n={n}, p={p}) fitted in {:.3}s (rule {}, engine {})",
         fit.seconds,
@@ -428,6 +455,18 @@ fn main() {
     if let Err(e) = cfg.apply_args(args) {
         eprintln!("argument error: {e}");
         std::process::exit(2);
+    }
+    // `--faults spec` arms the deterministic storage fault injector for
+    // this process — validated eagerly so a typo fails fast, then handed
+    // to the reader layer through the same HSSR_FAULTS path the env var
+    // uses.
+    if let Some(spec) = cfg.get("faults") {
+        if let Err(e) = store::FaultSpec::parse(spec) {
+            eprintln!("argument error: bad --faults spec: {e}");
+            std::process::exit(2);
+        }
+        std::env::set_var("HSSR_FAULTS", spec);
+        eprintln!("fault injection armed: {spec}");
     }
     let result = match cmd.as_str() {
         "fit" => cmd_fit(&cfg),

@@ -124,6 +124,22 @@ impl SafeRule for Bedpp {
         self.dead
     }
 
+    fn save_state(&self) -> Vec<u8> {
+        vec![self.dead as u8]
+    }
+
+    fn load_state(&mut self, state: &[u8]) -> crate::error::Result<()> {
+        match state {
+            [d] => {
+                self.dead = *d != 0;
+                Ok(())
+            }
+            _ => Err(crate::error::HssrError::Corrupt(
+                "BEDPP: malformed safe-rule state in checkpoint".into(),
+            )),
+        }
+    }
+
     /// Point-wise plan: BEDPP's test is a scalar linear form in the per-fit
     /// precomputes, so the fused kernel applies it per column with no mask
     /// traversal. Keep `j` iff `j = *` or `|a·xty_j − b·xtx*_j| ≥ rhs` —

@@ -146,6 +146,22 @@ impl SafeRule for DomeTest {
         d
     }
 
+    fn save_state(&self) -> Vec<u8> {
+        vec![self.dead as u8]
+    }
+
+    fn load_state(&mut self, state: &[u8]) -> crate::error::Result<()> {
+        match state {
+            [d] => {
+                self.dead = *d != 0;
+                Ok(())
+            }
+            _ => Err(crate::error::HssrError::Corrupt(
+                "Dome: malformed safe-rule state in checkpoint".into(),
+            )),
+        }
+    }
+
     fn dead(&self) -> bool {
         self.dead
     }

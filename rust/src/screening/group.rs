@@ -245,6 +245,22 @@ impl SafeRule<GroupSafeContext> for GroupBedpp {
         self.dead
     }
 
+    fn save_state(&self) -> Vec<u8> {
+        vec![self.dead as u8]
+    }
+
+    fn load_state(&mut self, state: &[u8]) -> crate::error::Result<()> {
+        match state {
+            [d] => {
+                self.dead = *d != 0;
+                Ok(())
+            }
+            _ => Err(crate::error::HssrError::Corrupt(
+                "gBEDPP: malformed safe-rule state in checkpoint".into(),
+            )),
+        }
+    }
+
     /// Point-wise plan: rule (22) is a scalar form in the per-fit
     /// precomputes, so the fused group screen applies it per group. Keep
     /// `g` iff [`GroupBedpp::screen_at`] would not discard it.
@@ -360,6 +376,22 @@ impl SafeRule<GroupSafeContext> for GroupSedpp {
 
     fn dead(&self) -> bool {
         self.dead
+    }
+
+    fn save_state(&self) -> Vec<u8> {
+        vec![self.dead as u8]
+    }
+
+    fn load_state(&mut self, state: &[u8]) -> crate::error::Result<()> {
+        match state {
+            [d] => {
+                self.dead = *d != 0;
+                Ok(())
+            }
+            _ => Err(crate::error::HssrError::Corrupt(
+                "gSEDPP: malformed safe-rule state in checkpoint".into(),
+            )),
+        }
     }
 }
 

@@ -297,6 +297,29 @@ pub trait SafeRule<C = SafeContext>: Send {
         let _ = (engine, &scanned);
         Ok(self.plan(x, ctx, prev, lam_next, survive, masked_discards))
     }
+
+    /// Serialize the rule's path-position state (dead flags, frozen-phase
+    /// constants) for a crash-resume checkpoint. The default — an empty
+    /// blob — is correct for stateless rules: the gap-safe family's only
+    /// fields are per-call scratch recomputed at the next screen.
+    fn save_state(&self) -> Vec<u8> {
+        Vec::new()
+    }
+
+    /// Restore state written by [`SafeRule::save_state`]. The default
+    /// accepts only the empty blob the default `save_state` produced — a
+    /// stateful blob reaching a stateless rule means the checkpoint is
+    /// from a different configuration.
+    fn load_state(&mut self, state: &[u8]) -> crate::error::Result<()> {
+        if state.is_empty() {
+            Ok(())
+        } else {
+            Err(crate::error::HssrError::Corrupt(format!(
+                "{}: unexpected safe-rule state in checkpoint",
+                self.name()
+            )))
+        }
+    }
 }
 
 /// Construct the safe rule (if any) used by a [`RuleKind`] strategy.

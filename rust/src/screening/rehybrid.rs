@@ -12,6 +12,7 @@
 use super::bedpp::Bedpp;
 use super::{PrevSolution, SafeContext, SafeRule};
 use crate::linalg::{blocked, DenseMatrix};
+use crate::serialize::{ByteReader, ByteWriter};
 
 /// Per-feature constants of the frozen rule.
 struct Frozen {
@@ -142,6 +143,50 @@ impl SafeRule for BedppThenFrozenSedpp {
 
     fn dead(&self) -> bool {
         self.dead
+    }
+
+    /// The re-hybridized rule's phase machine *is* path state: whether
+    /// BEDPP is still alive, and — once frozen — the `O(p)` constants of
+    /// rule (10) at λ_ref. A resumed fit must not re-freeze at a different
+    /// λ (the frozen rule would screen differently), so the whole frozen
+    /// block rides in the checkpoint.
+    fn save_state(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        w.put_u8(self.bedpp_alive as u8);
+        w.put_u8(self.dead as u8);
+        match &self.frozen {
+            None => w.put_u8(0),
+            Some(f) => {
+                w.put_u8(1);
+                w.put_f64(f.lam_ref);
+                w.put_f64s(&f.u);
+                w.put_f64s(&f.w);
+                w.put_f64(f.rhs_root);
+            }
+        }
+        w.into_bytes()
+    }
+
+    fn load_state(&mut self, state: &[u8]) -> crate::error::Result<()> {
+        let mut r = ByteReader::new(state);
+        self.bedpp_alive = r.get_u8()? != 0;
+        self.dead = r.get_u8()? != 0;
+        self.frozen = if r.get_u8()? != 0 {
+            Some(Frozen {
+                lam_ref: r.get_f64()?,
+                u: r.get_f64s()?,
+                w: r.get_f64s()?,
+                rhs_root: r.get_f64()?,
+            })
+        } else {
+            None
+        };
+        if r.remaining() != 0 {
+            return Err(crate::error::HssrError::Corrupt(
+                "BEDPP→SEDPP: trailing bytes in safe-rule checkpoint state".into(),
+            ));
+        }
+        Ok(())
     }
 }
 

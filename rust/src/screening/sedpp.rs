@@ -106,6 +106,22 @@ impl SafeRule for Sedpp {
     fn dead(&self) -> bool {
         self.dead
     }
+
+    fn save_state(&self) -> Vec<u8> {
+        vec![self.dead as u8]
+    }
+
+    fn load_state(&mut self, state: &[u8]) -> crate::error::Result<()> {
+        match state {
+            [d] => {
+                self.dead = *d != 0;
+                Ok(())
+            }
+            _ => Err(crate::error::HssrError::Corrupt(
+                "SEDPP: malformed safe-rule state in checkpoint".into(),
+            )),
+        }
+    }
 }
 
 /// First-principles helper shared with tests: the EDPP dual ball at

@@ -1,0 +1,327 @@
+//! Integrity and serialization primitives for the fault-tolerance layer:
+//! a dependency-free CRC32 (IEEE 802.3, the zlib polynomial) plus small
+//! little-endian byte-buffer codecs.
+//!
+//! Consumers: the v2 column-store format ([`crate::data::store::format`])
+//! checksums every chunk and the tail section; the path driver's
+//! crash-resume checkpoints ([`crate::solver::driver`]) serialize warm-start
+//! state through [`ByteWriter`]/[`ByteReader`] and seal the file with a
+//! trailing CRC. Both sides must agree bit-for-bit, which is why the
+//! implementation lives in one place.
+
+use crate::error::{HssrError, Result};
+
+/// The CRC32 lookup table (reflected polynomial 0xEDB88320), built once.
+fn crc_table() -> &'static [u32; 256] {
+    static TABLE: std::sync::OnceLock<[u32; 256]> = std::sync::OnceLock::new();
+    TABLE.get_or_init(|| {
+        let mut t = [0u32; 256];
+        for (i, e) in t.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            }
+            *e = c;
+        }
+        t
+    })
+}
+
+/// Streaming CRC32 state: feed bytes with [`Crc32::update`], read the
+/// digest with [`Crc32::finish`].
+#[derive(Clone, Debug)]
+pub struct Crc32 {
+    state: u32,
+}
+
+impl Default for Crc32 {
+    fn default() -> Self {
+        Crc32::new()
+    }
+}
+
+impl Crc32 {
+    /// Fresh state (all-ones preset, per the IEEE definition).
+    pub fn new() -> Self {
+        Crc32 { state: 0xFFFF_FFFF }
+    }
+
+    /// Absorb a byte slice.
+    pub fn update(&mut self, bytes: &[u8]) {
+        let table = crc_table();
+        let mut c = self.state;
+        for &b in bytes {
+            c = table[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+        }
+        self.state = c;
+    }
+
+    /// The final (bit-inverted) digest.
+    pub fn finish(&self) -> u32 {
+        !self.state
+    }
+}
+
+/// One-shot CRC32 of a byte slice.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = Crc32::new();
+    c.update(bytes);
+    c.finish()
+}
+
+/// Little-endian append-only byte buffer for checkpoint serialization.
+#[derive(Default)]
+pub struct ByteWriter {
+    buf: Vec<u8>,
+}
+
+impl ByteWriter {
+    /// Fresh empty buffer.
+    pub fn new() -> Self {
+        ByteWriter::default()
+    }
+
+    /// Append a single byte.
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    /// Append a `u32` (LE).
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Append a `u64` (LE).
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Append an `f64` (LE bit pattern — exact, no formatting round-trip).
+    pub fn put_f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Append raw bytes.
+    pub fn put_bytes(&mut self, v: &[u8]) {
+        self.buf.extend_from_slice(v);
+    }
+
+    /// Append a length-prefixed f64 slice.
+    pub fn put_f64s(&mut self, v: &[f64]) {
+        self.put_u64(v.len() as u64);
+        for &x in v {
+            self.put_f64(x);
+        }
+    }
+
+    /// Append a length-prefixed bool slice (one byte each).
+    pub fn put_bools(&mut self, v: &[bool]) {
+        self.put_u64(v.len() as u64);
+        for &b in v {
+            self.put_u8(b as u8);
+        }
+    }
+
+    /// Append a length-prefixed nested byte blob.
+    pub fn put_blob(&mut self, v: &[u8]) {
+        self.put_u64(v.len() as u64);
+        self.put_bytes(v);
+    }
+
+    /// Consume into the underlying byte vector.
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    /// Bytes written so far.
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Whether nothing has been written.
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+}
+
+/// Cursor over a little-endian byte buffer; every read is bounds-checked
+/// and surfaces a typed [`HssrError::Corrupt`] on underrun (a truncated or
+/// garbled checkpoint must never panic).
+pub struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    /// Wrap a byte slice.
+    pub fn new(buf: &'a [u8]) -> Self {
+        ByteReader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self.pos.checked_add(n).filter(|&e| e <= self.buf.len());
+        match end {
+            Some(e) => {
+                let s = &self.buf[self.pos..e];
+                self.pos = e;
+                Ok(s)
+            }
+            None => Err(HssrError::Corrupt(format!(
+                "serialized blob truncated: need {n} bytes at offset {} of {}",
+                self.pos,
+                self.buf.len()
+            ))),
+        }
+    }
+
+    /// Read one byte.
+    pub fn get_u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    /// Read a `u32` (LE).
+    pub fn get_u32(&mut self) -> Result<u32> {
+        let mut b = [0u8; 4];
+        b.copy_from_slice(self.take(4)?);
+        Ok(u32::from_le_bytes(b))
+    }
+
+    /// Read a `u64` (LE).
+    pub fn get_u64(&mut self) -> Result<u64> {
+        let mut b = [0u8; 8];
+        b.copy_from_slice(self.take(8)?);
+        Ok(u64::from_le_bytes(b))
+    }
+
+    /// Read an `f64` (LE bit pattern).
+    pub fn get_f64(&mut self) -> Result<f64> {
+        let mut b = [0u8; 8];
+        b.copy_from_slice(self.take(8)?);
+        Ok(f64::from_le_bytes(b))
+    }
+
+    /// Read `n` raw bytes.
+    pub fn get_bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        self.take(n)
+    }
+
+    /// Read a length-prefixed f64 slice (length sanity-capped against the
+    /// remaining buffer so a corrupt prefix cannot trigger a huge alloc).
+    pub fn get_f64s(&mut self) -> Result<Vec<f64>> {
+        let n = self.get_u64()? as usize;
+        if n > self.remaining() / 8 {
+            return Err(HssrError::Corrupt(format!(
+                "serialized f64 slice claims {n} items but only {} bytes remain",
+                self.remaining()
+            )));
+        }
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.get_f64()?);
+        }
+        Ok(out)
+    }
+
+    /// Read a length-prefixed bool slice.
+    pub fn get_bools(&mut self) -> Result<Vec<bool>> {
+        let n = self.get_u64()? as usize;
+        if n > self.remaining() {
+            return Err(HssrError::Corrupt(format!(
+                "serialized bool slice claims {n} items but only {} bytes remain",
+                self.remaining()
+            )));
+        }
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.get_u8()? != 0);
+        }
+        Ok(out)
+    }
+
+    /// Read a length-prefixed nested byte blob.
+    pub fn get_blob(&mut self) -> Result<&'a [u8]> {
+        let n = self.get_u64()? as usize;
+        if n > self.remaining() {
+            return Err(HssrError::Corrupt(format!(
+                "serialized blob claims {n} bytes but only {} remain",
+                self.remaining()
+            )));
+        }
+        self.take(n)
+    }
+
+    /// Bytes left unread.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Known-answer vectors for IEEE CRC32 (the "check" value of the
+    /// catalogue entry, plus edge cases).
+    #[test]
+    fn crc32_known_answers() {
+        assert_eq!(crc32(b""), 0x0000_0000);
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b"The quick brown fox jumps over the lazy dog"), 0x414F_A339);
+    }
+
+    /// Streaming in arbitrary split points matches the one-shot digest.
+    #[test]
+    fn crc32_streaming_matches_one_shot() {
+        let data: Vec<u8> = (0u32..1000).map(|i| (i * 7 + 3) as u8).collect();
+        let want = crc32(&data);
+        for split in [0, 1, 13, 500, 999, 1000] {
+            let mut c = Crc32::new();
+            c.update(&data[..split]);
+            c.update(&data[split..]);
+            assert_eq!(c.finish(), want, "split at {split}");
+        }
+    }
+
+    #[test]
+    fn byte_roundtrip_exact() {
+        let mut w = ByteWriter::new();
+        w.put_u8(7);
+        w.put_u32(0xDEAD_BEEF);
+        w.put_u64(u64::MAX - 1);
+        w.put_f64(-0.0);
+        w.put_f64(f64::NAN);
+        w.put_f64s(&[1.5, -2.25, 1e300]);
+        w.put_bools(&[true, false, true]);
+        w.put_blob(b"nested");
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes);
+        assert_eq!(r.get_u8().unwrap(), 7);
+        assert_eq!(r.get_u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.get_u64().unwrap(), u64::MAX - 1);
+        assert_eq!(r.get_f64().unwrap().to_bits(), (-0.0f64).to_bits());
+        assert!(r.get_f64().unwrap().is_nan());
+        assert_eq!(r.get_f64s().unwrap(), vec![1.5, -2.25, 1e300]);
+        assert_eq!(r.get_bools().unwrap(), vec![true, false, true]);
+        assert_eq!(r.get_blob().unwrap(), b"nested");
+        assert_eq!(r.remaining(), 0);
+    }
+
+    /// Underruns and absurd length prefixes surface as typed `Corrupt`
+    /// errors, never panics or giant allocations.
+    #[test]
+    fn truncation_is_typed_not_panicking() {
+        let mut w = ByteWriter::new();
+        w.put_u64(5);
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes[..4]);
+        assert!(matches!(r.get_u64(), Err(crate::error::HssrError::Corrupt(_))));
+        // A length prefix far beyond the buffer is rejected up front.
+        let mut w = ByteWriter::new();
+        w.put_u64(u64::MAX / 2);
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes);
+        assert!(matches!(r.get_f64s(), Err(crate::error::HssrError::Corrupt(_))));
+        let mut r = ByteReader::new(&bytes);
+        assert!(matches!(r.get_blob(), Err(crate::error::HssrError::Corrupt(_))));
+    }
+}

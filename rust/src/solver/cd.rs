@@ -74,7 +74,25 @@ pub fn cd_solve(
         last_delta = cd_cycle(x, penalty, lam, active, beta, r);
         stats.cycles += 1;
         stats.coord_updates += active.len() as u64;
+        if !last_delta.is_finite() {
+            // Divergence guardrail: a NaN/Inf update would otherwise
+            // poison β and the residual for every later λ — surface it as
+            // a typed, degradable error instead.
+            return Err(HssrError::NonFinite {
+                lambda_index,
+                context: "coordinate-descent update delta".into(),
+            });
+        }
         if last_delta < tol {
+            // NaN correlations soft-threshold to 0, so a poisoned iterate
+            // can look "converged" — verify the residual before trusting
+            // the solution.
+            if r.iter().any(|v| !v.is_finite()) {
+                return Err(HssrError::NonFinite {
+                    lambda_index,
+                    context: "coordinate-descent residual".into(),
+                });
+            }
             return Ok(stats);
         }
     }
@@ -82,6 +100,7 @@ pub fn cd_solve(
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
     use crate::data::DataSpec;
@@ -186,6 +205,24 @@ mod tests {
                 assert_eq!(lambda_index, 7);
                 assert_eq!(max_iter, 3);
             }
+            other => panic!("wrong error {other}"),
+        }
+    }
+
+    /// A poisoned (NaN) residual must surface as a typed `NonFinite` error
+    /// — NaN correlations soft-threshold to 0, so without the guard the
+    /// solve would falsely report convergence with garbage state.
+    #[test]
+    fn divergence_is_typed_nonfinite() {
+        let ds = DataSpec::synthetic(20, 5, 2).generate(8);
+        let active: Vec<usize> = (0..5).collect();
+        let mut beta = vec![0.0; 5];
+        let mut r = ds.y.clone();
+        r[3] = f64::NAN;
+        let err = cd_solve(&ds.x, Penalty::Lasso, 1e-3, &active, &mut beta, &mut r, 1e-9, 50, 4)
+            .unwrap_err();
+        match err {
+            HssrError::NonFinite { lambda_index, .. } => assert_eq!(lambda_index, 4),
             other => panic!("wrong error {other}"),
         }
     }

@@ -35,11 +35,33 @@
 //! their inner solves every `rescreen_every` epochs (bounded CD/GD bursts,
 //! IRLS rounds for the logistic), pruning the working set mid-optimization
 //! — the defining usage of gap-safe sphere rules.
+//!
+//! ## Fault tolerance (see `docs/ARCHITECTURE.md` § Fault tolerance)
+//!
+//! Two guardrails harden the walk:
+//!
+//! * **Graceful degradation** — a *degradable* solver failure at λ_k
+//!   ([`HssrError::is_degradable`]: non-convergence or a non-finite
+//!   iterate) does not discard the work already done. The driver stops the
+//!   walk, truncates the grid to the completed prefix λ_0..λ_{k−1}, and
+//!   returns `Ok` with [`DriverFit::error`] carrying a typed [`PathError`]
+//!   (index, λ, reason, the partial metrics of the failed λ). Garbage
+//!   coefficients are never returned. Non-degradable errors (I/O,
+//!   corruption, config) still abort with `Err`.
+//! * **Per-λ checkpointing** — with `DriverConfig::checkpoint` set, the
+//!   driver serializes the completed λ-prefix (βs, metrics, `Flag`, the
+//!   problem's warm-start state via [`Problem::save_state`]) after every λ,
+//!   atomically (tmp + rename), sealed with a CRC32. On the next run the
+//!   checkpoint resumes the walk at λ_k **bit-identically** to an
+//!   uninterrupted fit, provided the configuration matches (rule, pipeline,
+//!   dimensions, λ_max, and the completed λ-prefix compared bit-for-bit).
 
+use std::path::Path;
 use std::time::Instant;
 
 use crate::error::{HssrError, Result};
 use crate::screening::RuleKind;
+use crate::serialize::{crc32, ByteReader, ByteWriter};
 use crate::solver::lambda::GridKind;
 
 /// Default for the fused-pipeline switch of every family config
@@ -55,7 +77,7 @@ pub fn fused_default() -> bool {
 /// Per-λ instrumentation (feeds Figures 1/3 and the ablation benches).
 /// Shared by every problem family; the group lasso reports *group* counts
 /// in the set-size fields.
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct LambdaMetrics {
     /// λ value.
     pub lambda: f64,
@@ -102,6 +124,11 @@ pub struct DriverConfig {
     /// the scan-then-filter driver (bit-identical selections, kept for A/B
     /// benchmarking and the equivalence property tests).
     pub fused: bool,
+    /// Checkpoint file for crash-resumable paths: after each λ the
+    /// completed prefix and the problem's warm-start state are written
+    /// here atomically; an existing compatible checkpoint resumes the walk
+    /// bit-identically to an uninterrupted fit. `None` disables.
+    pub checkpoint: Option<std::path::PathBuf>,
 }
 
 /// Outcome of one screening stage ([`Problem::screen`]) at one λ.
@@ -120,12 +147,39 @@ pub struct ScreenStage {
     pub dynamic: bool,
 }
 
+/// Typed record of a degradable failure that truncated a λ-path: which λ
+/// diverged and why, plus the partial metrics of the failed λ. Carried on
+/// [`DriverFit::error`] — the completed prefix is still a valid fit.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PathError {
+    /// Index of the λ at which the solver failed (= the length of the
+    /// completed prefix).
+    pub lambda_index: usize,
+    /// The λ value that failed.
+    pub lambda: f64,
+    /// Human-readable failure reason (from the typed solver error).
+    pub reason: String,
+    /// Instrumentation accumulated at the failed λ before the failure.
+    pub partial: LambdaMetrics,
+}
+
+impl std::fmt::Display for PathError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "path truncated at lambda index {} (lambda = {:.6e}): {}",
+            self.lambda_index, self.lambda, self.reason
+        )
+    }
+}
+
 /// Result of a generic path fit. Family-specific wrappers (`PathFit`,
 /// `GroupPathFit`, `LogisticPathFit`) are built from this plus whatever
 /// extras the problem recorded (e.g. logistic intercepts).
 #[derive(Clone, Debug)]
 pub struct DriverFit {
-    /// The λ grid actually used (decreasing).
+    /// The λ grid actually used (decreasing). On a degraded fit this is
+    /// the *completed prefix* of the requested grid.
     pub lambdas: Vec<f64>,
     /// Sparse coefficient vectors, one per λ: `(coefficient, value)` pairs.
     pub betas: Vec<Vec<(usize, f64)>>,
@@ -139,6 +193,9 @@ pub struct DriverFit {
     pub seconds: f64,
     /// Strategy used.
     pub rule: RuleKind,
+    /// `Some` when the walk degraded gracefully: the solver failed at
+    /// `error.lambda_index` and the fit holds only the completed prefix.
+    pub error: Option<PathError>,
 }
 
 /// What varies between lasso-type problem families in Algorithm 1. The
@@ -242,6 +299,25 @@ pub trait Problem {
 
     /// Objective value at the current iterate.
     fn objective(&self, lam: f64) -> f64;
+
+    /// Serialize the family's full warm-path state (coefficients,
+    /// residual, lazy-correlation caches, safe-rule state) for a resume
+    /// checkpoint. Everything that feeds the next λ must round-trip
+    /// bit-for-bit — resumed fits are asserted bit-identical to
+    /// uninterrupted ones, *including* scan/metric accounting. `None`
+    /// (the default) disables checkpointing for the family.
+    fn save_state(&self) -> Option<Vec<u8>> {
+        None
+    }
+
+    /// Restore state written by [`Problem::save_state`]. The default
+    /// rejects — a family that cannot restore must not silently resume
+    /// from nothing.
+    fn restore_state(&mut self, _state: &[u8]) -> Result<()> {
+        Err(HssrError::Config(
+            "this problem family does not support checkpoint resume".into(),
+        ))
+    }
 }
 
 /// Materialize screen-stage discards of still-live units — shared by the
@@ -353,6 +429,16 @@ pub fn dynamic_burst_solve<B: BurstProblem>(
             cycles_used += 1;
             m.cd_cycles += 1;
             ran = true;
+            if !last_delta.is_finite() {
+                // A NaN/Inf delta means the iterate has left the feasible
+                // region — converting it to a typed error here is what
+                // lets the driver degrade gracefully instead of walking
+                // the rest of the path on garbage.
+                return Err(HssrError::NonFinite {
+                    lambda_index,
+                    context: "coefficient update delta".into(),
+                });
+            }
             if last_delta < tol {
                 converged = true;
                 break;
@@ -369,6 +455,170 @@ pub fn dynamic_burst_solve<B: BurstProblem>(
         m.rescreen_discards += prune_working_set(&mut work, &keep, |u| prob.evict(u));
     }
     Ok(ran)
+}
+
+/// Magic prefix of a driver checkpoint file (version 1).
+pub const CHECKPOINT_MAGIC: &[u8; 9] = b"HSSRCKPT1";
+
+/// The serialized contents of a per-λ resume checkpoint: everything the
+/// driver needs to continue the walk at `betas.len()` exactly as an
+/// uninterrupted fit would, plus the opaque family state blob.
+struct Checkpoint {
+    /// `format!("{:?}")` of the rule — resume refuses a different one.
+    rule: String,
+    fused: bool,
+    flag_off: bool,
+    p: usize,
+    n_units: usize,
+    lambda_max: f64,
+    lam_prev: f64,
+    /// The completed λ-prefix, bit-compared against the new grid.
+    lambdas: Vec<f64>,
+    betas: Vec<Vec<(usize, f64)>>,
+    metrics: Vec<LambdaMetrics>,
+    /// Opaque [`Problem::save_state`] blob.
+    state: Vec<u8>,
+}
+
+fn encode_metrics(w: &mut ByteWriter, m: &LambdaMetrics) {
+    w.put_f64(m.lambda);
+    w.put_u64(m.safe_size as u64);
+    w.put_u64(m.strong_size as u64);
+    w.put_u64(m.kkt_checked as u64);
+    w.put_u64(m.violations as u64);
+    w.put_u64(m.cd_cycles as u64);
+    w.put_u64(m.coord_updates);
+    w.put_u64(m.cols_scanned);
+    w.put_u64(m.nonzero as u64);
+    w.put_f64(m.objective);
+    w.put_u64(m.rescreen_discards as u64);
+}
+
+fn decode_metrics(r: &mut ByteReader) -> Result<LambdaMetrics> {
+    Ok(LambdaMetrics {
+        lambda: r.get_f64()?,
+        safe_size: r.get_u64()? as usize,
+        strong_size: r.get_u64()? as usize,
+        kkt_checked: r.get_u64()? as usize,
+        violations: r.get_u64()? as usize,
+        cd_cycles: r.get_u64()? as usize,
+        coord_updates: r.get_u64()?,
+        cols_scanned: r.get_u64()?,
+        nonzero: r.get_u64()? as usize,
+        objective: r.get_f64()?,
+        rescreen_discards: r.get_u64()? as usize,
+    })
+}
+
+/// Serialize and atomically replace the checkpoint file (tmp + rename, so
+/// a crash mid-write leaves the previous checkpoint intact), sealed with a
+/// trailing CRC32.
+fn write_checkpoint(path: &Path, ck: &Checkpoint) -> Result<()> {
+    let mut w = ByteWriter::new();
+    w.put_bytes(CHECKPOINT_MAGIC);
+    w.put_blob(ck.rule.as_bytes());
+    w.put_u8(ck.fused as u8);
+    w.put_u8(ck.flag_off as u8);
+    w.put_u64(ck.p as u64);
+    w.put_u64(ck.n_units as u64);
+    w.put_f64(ck.lambda_max);
+    w.put_f64(ck.lam_prev);
+    w.put_f64s(&ck.lambdas);
+    w.put_u64(ck.betas.len() as u64);
+    for b in &ck.betas {
+        w.put_u64(b.len() as u64);
+        for &(j, v) in b {
+            w.put_u64(j as u64);
+            w.put_f64(v);
+        }
+    }
+    for m in &ck.metrics {
+        encode_metrics(&mut w, m);
+    }
+    w.put_blob(&ck.state);
+    let mut bytes = w.into_bytes();
+    let crc = crc32(&bytes);
+    bytes.extend_from_slice(&crc.to_le_bytes());
+    let tmp = path.with_extension("ckpt-tmp");
+    std::fs::write(&tmp, &bytes)?;
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+/// Read and verify a checkpoint file: bad magic, a failed CRC, or any
+/// truncation surfaces as a typed [`HssrError::Corrupt`] — a damaged
+/// checkpoint must never silently seed a fit.
+fn read_checkpoint(path: &Path) -> Result<Checkpoint> {
+    let bytes = std::fs::read(path)?;
+    if bytes.len() < CHECKPOINT_MAGIC.len() + 4 || !bytes.starts_with(CHECKPOINT_MAGIC) {
+        return Err(HssrError::Corrupt(format!(
+            "{}: not an HSSR checkpoint file",
+            path.display()
+        )));
+    }
+    let (body, crc_bytes) = bytes.split_at(bytes.len() - 4);
+    let mut stored = [0u8; 4];
+    stored.copy_from_slice(crc_bytes);
+    let stored = u32::from_le_bytes(stored);
+    let got = crc32(body);
+    if got != stored {
+        return Err(HssrError::Corrupt(format!(
+            "{}: checkpoint failed CRC32 (stored {stored:#010x}, computed {got:#010x})",
+            path.display()
+        )));
+    }
+    let mut r = ByteReader::new(&body[CHECKPOINT_MAGIC.len()..]);
+    let rule = String::from_utf8_lossy(r.get_blob()?).into_owned();
+    let fused = r.get_u8()? != 0;
+    let flag_off = r.get_u8()? != 0;
+    let p = r.get_u64()? as usize;
+    let n_units = r.get_u64()? as usize;
+    let lambda_max = r.get_f64()?;
+    let lam_prev = r.get_f64()?;
+    let lambdas = r.get_f64s()?;
+    let k = r.get_u64()? as usize;
+    if k != lambdas.len() {
+        return Err(HssrError::Corrupt(format!(
+            "{}: checkpoint β count ({k}) disagrees with λ-prefix ({})",
+            path.display(),
+            lambdas.len()
+        )));
+    }
+    let mut betas = Vec::with_capacity(k);
+    for _ in 0..k {
+        let nnz = r.get_u64()? as usize;
+        if nnz > r.remaining() / 16 {
+            return Err(HssrError::Corrupt(format!(
+                "{}: checkpoint β block overruns the file",
+                path.display()
+            )));
+        }
+        let mut b = Vec::with_capacity(nnz);
+        for _ in 0..nnz {
+            let j = r.get_u64()? as usize;
+            let v = r.get_f64()?;
+            b.push((j, v));
+        }
+        betas.push(b);
+    }
+    let mut metrics = Vec::with_capacity(k);
+    for _ in 0..k {
+        metrics.push(decode_metrics(&mut r)?);
+    }
+    let state = r.get_blob()?.to_vec();
+    Ok(Checkpoint {
+        rule,
+        fused,
+        flag_off,
+        p,
+        n_units,
+        lambda_max,
+        lam_prev,
+        lambdas,
+        betas,
+        metrics,
+        state,
+    })
 }
 
 /// A [`Problem`] paired with its [`DriverConfig`]. The problem owns warm
@@ -414,80 +664,187 @@ pub fn drive<P: Problem>(prob: &mut P, cfg: &DriverConfig) -> Result<DriverFit> 
     let needs_kkt = prob.needs_kkt();
     // Algorithm 1 `Flag`: TRUE once the safe rule stops discarding.
     let mut flag_off = !prob.has_safe_rule();
-    let mut betas = Vec::with_capacity(lambdas.len());
-    let mut metrics = Vec::with_capacity(lambdas.len());
-
+    let mut betas: Vec<Vec<(usize, f64)>> = Vec::with_capacity(lambdas.len());
+    let mut metrics: Vec<LambdaMetrics> = Vec::with_capacity(lambdas.len());
     let mut lam_prev = lambda_max;
-    for (k, &lam) in lambdas.iter().enumerate() {
+
+    // ---- crash-resume: adopt a compatible checkpoint's λ-prefix ----
+    let rule_label = format!("{:?}", cfg.rule);
+    if let Some(ck_path) = &cfg.checkpoint {
+        if ck_path.exists() {
+            let ck = read_checkpoint(ck_path)?;
+            let prefix_matches = ck.lambdas.len() <= lambdas.len()
+                && ck.lambdas.iter().zip(&lambdas).all(|(a, b)| a.to_bits() == b.to_bits());
+            if ck.rule != rule_label
+                || ck.fused != cfg.fused
+                || ck.p != prob.n_coef()
+                || ck.n_units != units
+                || ck.lambda_max.to_bits() != lambda_max.to_bits()
+                || !prefix_matches
+            {
+                return Err(HssrError::Config(format!(
+                    "{}: checkpoint is from a different fit (rule {}, fused \
+                     {}, p {}, units {}, λmax {:.6e}) — delete it or point \
+                     --checkpoint elsewhere",
+                    ck_path.display(),
+                    ck.rule,
+                    ck.fused,
+                    ck.p,
+                    ck.n_units,
+                    ck.lambda_max
+                )));
+            }
+            prob.restore_state(&ck.state)?;
+            flag_off = ck.flag_off;
+            lam_prev = ck.lam_prev;
+            betas = ck.betas;
+            metrics = ck.metrics;
+        }
+    }
+
+    let mut error = None;
+    for (k, &lam) in lambdas.iter().enumerate().skip(betas.len()) {
         let mut m = LambdaMetrics { lambda: lam, ..Default::default() };
-
-        // ---- screening (lines 2–10) ----
-        let mut survive = vec![true; units];
-        let run_safe = !flag_off;
-        let stage = prob.screen(lam, lam_prev, run_safe, cfg.fused, &mut survive, &mut m)?;
-        let dynamic_rule = stage.dynamic;
-        if run_safe
-            && prob.has_safe_rule()
-            && !dynamic_rule
-            && (stage.discarded == 0 || stage.rule_dead)
+        match run_one_lambda(prob, lam, lam_prev, k, cfg, units, needs_kkt, &mut flag_off, &mut m)
         {
-            // |S| = p ⇒ Flag ← TRUE: switch the safe rule off permanently.
-            // Dynamic (gap-safe) rules are exempt: their power returns as
-            // the solver converges, so they are never shut off.
-            flag_off = true;
-            survive.iter_mut().for_each(|s| *s = true);
-        }
-        let mut strong = stage.strong;
-        let mut in_strong = vec![false; units];
-        for &u in &strong {
-            in_strong[u] = true;
-        }
-
-        // ---- solve + dynamic re-screen + KKT loop (lines 11–18) ----
-        loop {
-            prob.solve(lam, k, &strong, &mut m)?;
-            if !needs_kkt {
-                break; // exact / safe ⇒ nothing to verify
-            }
-            if dynamic_rule && run_safe {
-                // Re-fire the dynamic rule at the converged-on-H residual,
-                // where the gap (hence the ball) is at its tightest: units
-                // it discards now drop out of the KKT check set entirely.
-                let d = prob.rescreen(lam, &mut survive, &in_strong, &mut m)?;
-                m.rescreen_discards += d;
-            }
-            let viols = prob.kkt(lam, cfg.fused, &survive, &in_strong, &mut m)?;
-            if viols.is_empty() {
+            Ok(()) => {}
+            Err(e) if e.is_degradable() => {
+                // Graceful degradation: keep the completed λ-prefix, report
+                // the failure as typed data. The current iterate may be
+                // garbage — it is *not* harvested.
+                error = Some(PathError {
+                    lambda_index: k,
+                    lambda: lam,
+                    reason: e.to_string(),
+                    partial: m,
+                });
                 break;
             }
-            m.violations += viols.len();
-            for &u in &viols {
-                in_strong[u] = true;
-            }
-            strong.extend(viols);
+            Err(e) => return Err(e),
         }
-
-        prob.end_lambda(lam, cfg.fused, &strong, &mut m)?;
-        m.strong_size = strong.len();
         let sparse = prob.sparse_beta();
         m.nonzero = sparse.len();
         m.objective = prob.objective(lam);
+        if !m.objective.is_finite() {
+            // Family-independent backstop: whatever slipped past the inner
+            // guards, a non-finite objective means this λ's solution is
+            // garbage — degrade rather than record it.
+            error = Some(PathError {
+                lambda_index: k,
+                lambda: lam,
+                reason: format!("non-finite objective ({})", m.objective),
+                partial: m,
+            });
+            break;
+        }
         betas.push(sparse);
         metrics.push(m);
         lam_prev = lam;
+
+        // ---- per-λ checkpoint (atomic tmp + rename) ----
+        if let Some(ck_path) = &cfg.checkpoint {
+            if let Some(state) = prob.save_state() {
+                write_checkpoint(
+                    ck_path,
+                    &Checkpoint {
+                        rule: rule_label.clone(),
+                        fused: cfg.fused,
+                        flag_off,
+                        p: prob.n_coef(),
+                        n_units: units,
+                        lambda_max,
+                        lam_prev,
+                        lambdas: lambdas[..betas.len()].to_vec(),
+                        betas: betas.clone(),
+                        metrics: metrics.clone(),
+                        state,
+                    },
+                )?;
+            }
+        }
     }
+    let done = betas.len();
     Ok(DriverFit {
-        lambdas,
+        lambdas: lambdas[..done].to_vec(),
         betas,
         metrics,
         p: prob.n_coef(),
         lambda_max,
         seconds: start.elapsed().as_secs_f64(),
         rule: cfg.rule,
+        error,
     })
 }
 
+/// One full λ step of Algorithm 1 (screen → solve → dynamic re-screen →
+/// KKT → violation rounds → end-of-λ), factored out of [`drive`] so a
+/// degradable solver failure can truncate the walk without losing the
+/// completed prefix.
+#[allow(clippy::too_many_arguments)]
+fn run_one_lambda<P: Problem>(
+    prob: &mut P,
+    lam: f64,
+    lam_prev: f64,
+    k: usize,
+    cfg: &DriverConfig,
+    units: usize,
+    needs_kkt: bool,
+    flag_off: &mut bool,
+    m: &mut LambdaMetrics,
+) -> Result<()> {
+    // ---- screening (lines 2–10) ----
+    let mut survive = vec![true; units];
+    let run_safe = !*flag_off;
+    let stage = prob.screen(lam, lam_prev, run_safe, cfg.fused, &mut survive, m)?;
+    let dynamic_rule = stage.dynamic;
+    if run_safe
+        && prob.has_safe_rule()
+        && !dynamic_rule
+        && (stage.discarded == 0 || stage.rule_dead)
+    {
+        // |S| = p ⇒ Flag ← TRUE: switch the safe rule off permanently.
+        // Dynamic (gap-safe) rules are exempt: their power returns as
+        // the solver converges, so they are never shut off.
+        *flag_off = true;
+        survive.iter_mut().for_each(|s| *s = true);
+    }
+    let mut strong = stage.strong;
+    let mut in_strong = vec![false; units];
+    for &u in &strong {
+        in_strong[u] = true;
+    }
+
+    // ---- solve + dynamic re-screen + KKT loop (lines 11–18) ----
+    loop {
+        prob.solve(lam, k, &strong, m)?;
+        if !needs_kkt {
+            break; // exact / safe ⇒ nothing to verify
+        }
+        if dynamic_rule && run_safe {
+            // Re-fire the dynamic rule at the converged-on-H residual,
+            // where the gap (hence the ball) is at its tightest: units
+            // it discards now drop out of the KKT check set entirely.
+            let d = prob.rescreen(lam, &mut survive, &in_strong, m)?;
+            m.rescreen_discards += d;
+        }
+        let viols = prob.kkt(lam, cfg.fused, &survive, &in_strong, m)?;
+        if viols.is_empty() {
+            break;
+        }
+        m.violations += viols.len();
+        for &u in &viols {
+            in_strong[u] = true;
+        }
+        strong.extend(viols);
+    }
+
+    prob.end_lambda(lam, cfg.fused, &strong, m)?;
+    m.strong_size = strong.len();
+    Ok(())
+}
+
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
 
@@ -589,6 +946,7 @@ mod tests {
             grid: GridKind::Linear,
             lambdas: None,
             fused: true,
+            checkpoint: None,
         };
         let fit = drive(&mut prob, &cfg).unwrap();
         assert_eq!(fit.lambdas.len(), 2);
@@ -613,9 +971,159 @@ mod tests {
             grid: GridKind::Linear,
             lambdas: Some(vec![0.7, 0.2]),
             fused: false,
+            checkpoint: None,
         };
         let fit = drive(&mut prob, &cfg).unwrap();
         assert_eq!(fit.lambdas, vec![0.7, 0.2]);
         assert_eq!(fit.rule, RuleKind::BasicPcd);
+        assert!(fit.error.is_none());
+    }
+
+    /// A problem whose solver diverges at a chosen λ index: the driver must
+    /// return the completed prefix with a typed [`PathError`], never `Err`
+    /// and never garbage coefficients at the failed λ.
+    struct Diverging {
+        fail_at: usize,
+    }
+
+    impl Problem for Diverging {
+        fn n_units(&self) -> usize {
+            1
+        }
+        fn n_coef(&self) -> usize {
+            1
+        }
+        fn lambda_max(&self) -> f64 {
+            1.0
+        }
+        fn has_safe_rule(&self) -> bool {
+            false
+        }
+        fn needs_kkt(&self) -> bool {
+            false
+        }
+        fn screen(
+            &mut self,
+            _lam: f64,
+            _lam_prev: f64,
+            _run_safe: bool,
+            _fused: bool,
+            _survive: &mut [bool],
+            m: &mut LambdaMetrics,
+        ) -> Result<ScreenStage> {
+            m.safe_size = 1;
+            Ok(ScreenStage { strong: vec![0], ..Default::default() })
+        }
+        fn solve(
+            &mut self,
+            _lam: f64,
+            lambda_index: usize,
+            _strong: &[usize],
+            _m: &mut LambdaMetrics,
+        ) -> Result<()> {
+            if lambda_index == self.fail_at {
+                return Err(HssrError::NonFinite {
+                    lambda_index,
+                    context: "residual".into(),
+                });
+            }
+            Ok(())
+        }
+        fn kkt(
+            &mut self,
+            _lam: f64,
+            _fused: bool,
+            _survive: &[bool],
+            _in_strong: &[bool],
+            _m: &mut LambdaMetrics,
+        ) -> Result<Vec<usize>> {
+            Ok(Vec::new())
+        }
+        fn end_lambda(
+            &mut self,
+            _lam: f64,
+            _fused: bool,
+            _strong: &[usize],
+            _m: &mut LambdaMetrics,
+        ) -> Result<()> {
+            Ok(())
+        }
+        fn sparse_beta(&self) -> Vec<(usize, f64)> {
+            vec![(0, 0.25)]
+        }
+        fn objective(&self, _lam: f64) -> f64 {
+            0.0
+        }
+    }
+
+    #[test]
+    fn degradable_failure_truncates_to_completed_prefix() {
+        let mut prob = Diverging { fail_at: 2 };
+        let cfg = DriverConfig {
+            rule: RuleKind::BasicPcd,
+            n_lambda: 5,
+            lambda_min_ratio: 0.1,
+            grid: GridKind::Linear,
+            lambdas: None,
+            fused: true,
+            checkpoint: None,
+        };
+        let fit = drive(&mut prob, &cfg).unwrap();
+        assert_eq!(fit.lambdas.len(), 2, "prefix before the failed λ only");
+        assert_eq!(fit.betas.len(), 2);
+        assert_eq!(fit.metrics.len(), 2);
+        let err = fit.error.expect("degradation must be reported");
+        assert_eq!(err.lambda_index, 2);
+        assert!(err.reason.contains("non-finite"), "got {}", err.reason);
+        // A failure at λ#0 yields an empty-but-Ok fit.
+        let mut prob = Diverging { fail_at: 0 };
+        let fit = drive(&mut prob, &cfg).unwrap();
+        assert!(fit.lambdas.is_empty() && fit.betas.is_empty());
+        assert_eq!(fit.error.unwrap().lambda_index, 0);
+    }
+
+    #[test]
+    fn checkpoint_roundtrip_and_corruption_detection() {
+        let dir = std::env::temp_dir().join("hssr_driver_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("roundtrip.ckpt");
+        let ck = Checkpoint {
+            rule: "SsrBedpp".into(),
+            fused: true,
+            flag_off: false,
+            p: 11,
+            n_units: 11,
+            lambda_max: 0.75,
+            lam_prev: 0.3,
+            lambdas: vec![0.75, 0.5, 0.3],
+            betas: vec![vec![], vec![(3, -0.5)], vec![(3, -0.75), (7, 0.125)]],
+            metrics: vec![
+                LambdaMetrics { lambda: 0.75, ..Default::default() },
+                LambdaMetrics { lambda: 0.5, cd_cycles: 4, ..Default::default() },
+                LambdaMetrics { lambda: 0.3, cols_scanned: 9, ..Default::default() },
+            ],
+            state: vec![1, 2, 3, 250],
+        };
+        write_checkpoint(&path, &ck).unwrap();
+        let back = read_checkpoint(&path).unwrap();
+        assert_eq!(back.rule, ck.rule);
+        assert_eq!((back.fused, back.flag_off), (true, false));
+        assert_eq!((back.p, back.n_units), (11, 11));
+        assert_eq!(back.lambda_max.to_bits(), ck.lambda_max.to_bits());
+        assert_eq!(back.lam_prev.to_bits(), ck.lam_prev.to_bits());
+        assert_eq!(back.lambdas, ck.lambdas);
+        assert_eq!(back.betas, ck.betas);
+        assert_eq!(back.metrics, ck.metrics);
+        assert_eq!(back.state, ck.state);
+        // a flipped byte in the body fails the trailing CRC, typed
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x04;
+        let bad = dir.join("corrupt.ckpt");
+        std::fs::write(&bad, &bytes).unwrap();
+        assert!(matches!(read_checkpoint(&bad), Err(HssrError::Corrupt(_))));
+        // garbage file: typed, not a panic
+        std::fs::write(&bad, b"not a checkpoint").unwrap();
+        assert!(matches!(read_checkpoint(&bad), Err(HssrError::Corrupt(_))));
     }
 }

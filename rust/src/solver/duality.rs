@@ -248,6 +248,7 @@ pub fn logistic_ball(
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
     use crate::data::DataSpec;

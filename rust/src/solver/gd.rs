@@ -85,7 +85,23 @@ pub fn gd_solve(
         last_delta = gd_cycle(x, penalty, lam, active, starts, sizes, beta, r);
         stats.cycles += 1;
         stats.coord_updates += active.iter().map(|&g| sizes[g] as u64).sum::<u64>();
+        if !last_delta.is_finite() {
+            // Divergence guardrail — see `cd_solve`.
+            return Err(HssrError::NonFinite {
+                lambda_index,
+                context: "group-descent update delta".into(),
+            });
+        }
         if last_delta < tol {
+            // NaN block correlations scale to 0 (the `z_norm > thresh`
+            // comparison is false for NaN), so verify the residual before
+            // trusting an apparently-converged iterate.
+            if r.iter().any(|v| !v.is_finite()) {
+                return Err(HssrError::NonFinite {
+                    lambda_index,
+                    context: "group-descent residual".into(),
+                });
+            }
             return Ok(stats);
         }
     }
@@ -93,10 +109,41 @@ pub fn gd_solve(
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
     use crate::data::synth::generate_grouped;
     use crate::linalg::blocked;
+
+    /// A poisoned residual must surface as a typed `NonFinite` error, not
+    /// a silently "converged" garbage iterate.
+    #[test]
+    fn divergence_is_typed_nonfinite() {
+        let ds = generate_grouped(30, 4, 3, 2, 7);
+        let active: Vec<usize> = (0..4).collect();
+        let mut beta = vec![0.0; ds.p()];
+        let mut r = ds.y.clone();
+        r[5] = f64::INFINITY;
+        let err = gd_solve(
+            &ds.x,
+            Penalty::Lasso,
+            1e-3,
+            &active,
+            &ds.layout.starts,
+            &ds.layout.sizes,
+            &mut beta,
+            &mut r,
+            1e-9,
+            50,
+            3,
+        )
+        .unwrap_err();
+        assert!(
+            matches!(err, HssrError::NonFinite { lambda_index: 3, .. })
+                || matches!(err, HssrError::NoConvergence { .. }),
+            "wrong error {err}"
+        );
+    }
 
     /// With orthonormal groups and a *single* group active, the solution is
     /// the closed-form multivariate soft threshold of X_gᵀy/n.

@@ -40,9 +40,10 @@ use crate::error::{HssrError, Result};
 use crate::linalg::{ops, DenseMatrix};
 use crate::runtime::{native::NativeEngine, ooc, ScanEngine};
 use crate::screening::{gapsafe, ssr, PrevSolution, RuleKind, SafeContext, SafeRule};
+use crate::serialize::{ByteReader, ByteWriter};
 use crate::solver::driver::{
     apply_rescreen_mask, drive, prune_working_set, zero_discarded_units, DriverConfig,
-    Problem, ScreenStage,
+    PathError, Problem, ScreenStage,
 };
 use crate::solver::lambda::GridKind;
 use crate::solver::path::{column_kkt, column_refresh, LambdaMetrics};
@@ -74,6 +75,11 @@ pub struct LogisticPathConfig {
     /// family's inner "epochs"), pruning the working set mid-optimization;
     /// `0` disables the mid-solve prunes. Ignored by static strategies.
     pub rescreen_every: usize,
+    /// Explicit λ grid (overrides `n_lambda`/`lambda_min_ratio`).
+    pub lambdas: Option<Vec<f64>>,
+    /// Write a crash-resumable checkpoint here after every completed λ and
+    /// resume from it when it already exists (see the generic driver).
+    pub checkpoint: Option<std::path::PathBuf>,
 }
 
 impl Default for LogisticPathConfig {
@@ -89,6 +95,8 @@ impl Default for LogisticPathConfig {
             max_iter: 10_000,
             fused: crate::solver::driver::fused_default(),
             rescreen_every: 1,
+            lambdas: None,
+            checkpoint: None,
         }
     }
 }
@@ -101,8 +109,9 @@ impl LogisticPathConfig {
             n_lambda: self.n_lambda,
             lambda_min_ratio: self.lambda_min_ratio,
             grid: self.grid,
-            lambdas: None,
+            lambdas: self.lambdas.clone(),
             fused: self.fused,
+            checkpoint: self.checkpoint.clone(),
         }
     }
 }
@@ -126,6 +135,9 @@ pub struct LogisticPathFit {
     pub seconds: f64,
     /// Strategy.
     pub rule: RuleKind,
+    /// When the path degraded gracefully, the λ step it stopped at and
+    /// why; the per-λ vectors above hold the completed prefix.
+    pub error: Option<PathError>,
 }
 
 impl LogisticPathFit {
@@ -571,6 +583,16 @@ impl Problem for LogisticProblem<'_> {
                     break;
                 }
             }
+            if !inner_delta.is_finite() {
+                // NaN fails every `<`/`>=` comparison, so a poisoned
+                // surrogate would otherwise sail past both convergence
+                // checks as if it had converged — surface it as a typed,
+                // degradable divergence instead.
+                return Err(HssrError::NonFinite {
+                    lambda_index,
+                    context: "IRLS weighted-CD update delta".into(),
+                });
+            }
             if inner_delta >= self.tol {
                 return Err(HssrError::NoConvergence {
                     lambda_index,
@@ -585,6 +607,12 @@ impl Problem for LogisticProblem<'_> {
                 let new_eta = self.b0 + fit[i];
                 outer_delta = outer_delta.max((new_eta - self.eta[i]).abs());
                 self.eta[i] = new_eta;
+            }
+            if !outer_delta.is_finite() {
+                return Err(HssrError::NonFinite {
+                    lambda_index,
+                    context: "IRLS linear predictor".into(),
+                });
             }
             if outer_delta < 1e-8 {
                 break;
@@ -727,6 +755,59 @@ impl Problem for LogisticProblem<'_> {
                 * 0.5
                 * self.beta.iter().map(|b| b * b).sum::<f64>()
     }
+
+    /// Everything a resumed λ step observes: the iterate `(b0, β, η)`, the
+    /// score residual, the lazy scores *with* their validity mask (so
+    /// `cols_scanned` reproduces bit-for-bit), the per-λ intercepts
+    /// collected so far, and the safe rule's phase state.
+    fn save_state(&self) -> Option<Vec<u8>> {
+        let mut w = ByteWriter::new();
+        w.put_f64(self.b0);
+        w.put_f64s(&self.beta);
+        w.put_f64s(&self.eta);
+        w.put_f64s(&self.z);
+        w.put_bools(&self.z_valid);
+        w.put_f64s(&self.resid);
+        w.put_f64s(&self.intercepts);
+        let rule_state =
+            self.safe_rule.as_ref().map(|ru| ru.save_state()).unwrap_or_default();
+        w.put_blob(&rule_state);
+        Some(w.into_bytes())
+    }
+
+    fn restore_state(&mut self, state: &[u8]) -> Result<()> {
+        let mut rd = ByteReader::new(state);
+        let b0 = rd.get_f64()?;
+        let beta = rd.get_f64s()?;
+        let eta = rd.get_f64s()?;
+        let z = rd.get_f64s()?;
+        let z_valid = rd.get_bools()?;
+        let resid = rd.get_f64s()?;
+        let intercepts = rd.get_f64s()?;
+        let rule_state = rd.get_blob()?.to_vec();
+        let (n, p) = (self.x.nrows(), self.x.ncols());
+        if beta.len() != p
+            || z.len() != p
+            || z_valid.len() != p
+            || eta.len() != n
+            || resid.len() != n
+        {
+            return Err(HssrError::Corrupt(
+                "logistic checkpoint state dimensions do not match the data".into(),
+            ));
+        }
+        if let Some(rule) = self.safe_rule.as_mut() {
+            rule.load_state(&rule_state)?;
+        }
+        self.b0 = b0;
+        self.beta = beta;
+        self.eta = eta;
+        self.z = z;
+        self.z_valid = z_valid;
+        self.resid = resid;
+        self.intercepts = intercepts;
+        Ok(())
+    }
 }
 
 /// Fit the ℓ1-logistic path with the default (native, pool-backed) scan
@@ -767,6 +848,7 @@ pub fn fit_logistic_path_with_engine(
         lambda_max: fit.lambda_max,
         seconds: fit.seconds,
         rule: fit.rule,
+        error: fit.error,
     })
 }
 
@@ -808,6 +890,7 @@ pub fn fit_logistic_from_dataset(
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
     use crate::linalg::blocked;
@@ -996,6 +1079,58 @@ mod tests {
         // The standardized design passes the same validation.
         let ok = fit_logistic_path(&x, &y, &LogisticPathConfig { n_lambda: 5, ..cfg });
         assert!(ok.is_ok());
+    }
+
+    /// A path interrupted mid-grid and resumed from its checkpoint must
+    /// reproduce the uninterrupted fit bit-for-bit — coefficients,
+    /// intercepts, and per-λ instrumentation — for the first
+    /// safe-screened GLM family too.
+    #[test]
+    fn checkpoint_resume_is_bit_identical() {
+        let dir = std::env::temp_dir().join("hssr_logistic_ckpt_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let (x, y, _) = synthetic_logistic(120, 60, 5, 12);
+        for rule in [RuleKind::Ssr, RuleKind::SsrGapSafe] {
+            let cfg = LogisticPathConfig {
+                rule,
+                n_lambda: 20,
+                tol: 1e-9,
+                ..Default::default()
+            };
+            let full = fit_logistic_path(&x, &y, &cfg).unwrap();
+            let grid = full.lambdas.clone();
+            let ckpt = dir.join(format!("logistic-{rule:?}.ckpt"));
+            let _ = std::fs::remove_file(&ckpt);
+            // "Crash" after 8 of 20 λs: fit only the grid prefix,
+            // checkpointing each step.
+            let prefix = fit_logistic_path(
+                &x,
+                &y,
+                &LogisticPathConfig {
+                    lambdas: Some(grid[..8].to_vec()),
+                    checkpoint: Some(ckpt.clone()),
+                    ..cfg.clone()
+                },
+            )
+            .unwrap();
+            assert_eq!(prefix.betas.len(), 8, "{rule:?} prefix length");
+            // Resume over the full grid from the survived checkpoint.
+            let resumed = fit_logistic_path(
+                &x,
+                &y,
+                &LogisticPathConfig {
+                    lambdas: Some(grid.clone()),
+                    checkpoint: Some(ckpt.clone()),
+                    ..cfg.clone()
+                },
+            )
+            .unwrap();
+            assert_eq!(resumed.lambdas, full.lambdas, "{rule:?} λ grid");
+            assert_eq!(resumed.betas, full.betas, "{rule:?} betas");
+            assert_eq!(resumed.intercepts, full.intercepts, "{rule:?} intercepts");
+            assert_eq!(resumed.metrics, full.metrics, "{rule:?} per-λ metrics");
+            std::fs::remove_file(&ckpt).unwrap();
+        }
     }
 
     #[test]

@@ -6,6 +6,10 @@
 //! (lasso/elastic net), [`group_path`] (group lasso), and [`logistic`]
 //! (ℓ1-logistic, §6) are `Problem` instances plus thin config shims.
 
+// Solvers must degrade through typed errors (`PathError`, `NonFinite`),
+// never panic mid-path. Test modules opt back out.
+#![deny(clippy::unwrap_used)]
+
 pub mod cd;
 pub mod driver;
 pub mod duality;

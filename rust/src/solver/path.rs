@@ -47,17 +47,18 @@
 //! test in [`crate::prop`]).
 
 use crate::data::Dataset;
-use crate::error::Result;
+use crate::error::{HssrError, Result};
 use crate::linalg::{ops, DenseMatrix};
 use crate::runtime::{native::NativeEngine, ooc, ScanEngine};
 use crate::screening::{make_safe_rule, ssr, PrevSolution, RuleKind, SafeContext, SafeRule};
+use crate::serialize::{ByteReader, ByteWriter};
 use crate::solver::driver::{
     apply_rescreen_mask, drive, dynamic_burst_solve, fused_default, zero_discarded_units,
     BurstProblem, DriverConfig, Problem, ScreenStage,
 };
 use crate::solver::{cd, kkt, lambda::GridKind, Penalty};
 
-pub use crate::solver::driver::LambdaMetrics;
+pub use crate::solver::driver::{LambdaMetrics, PathError};
 
 /// Configuration for a pathwise fit.
 #[derive(Clone, Debug)]
@@ -87,6 +88,10 @@ pub struct PathConfig {
     /// (the per-λ screen and the pre-KKT driver re-screen remain). Ignored
     /// by static rules.
     pub rescreen_every: usize,
+    /// Crash-resume checkpoint file (`--checkpoint`): the driver rewrites
+    /// it atomically after every λ and resumes from it bit-identically.
+    /// `None` disables checkpointing.
+    pub checkpoint: Option<std::path::PathBuf>,
 }
 
 impl Default for PathConfig {
@@ -102,6 +107,7 @@ impl Default for PathConfig {
             lambdas: None,
             fused: fused_default(),
             rescreen_every: 10,
+            checkpoint: None,
         }
     }
 }
@@ -116,6 +122,7 @@ impl PathConfig {
             grid: self.grid,
             lambdas: self.lambdas.clone(),
             fused: self.fused,
+            checkpoint: self.checkpoint.clone(),
         }
     }
 }
@@ -137,6 +144,9 @@ pub struct PathFit {
     pub seconds: f64,
     /// Strategy used.
     pub rule: RuleKind,
+    /// `Some` when the path degraded gracefully: the solver failed at
+    /// `error.lambda_index` and the fit holds only the completed λ-prefix.
+    pub error: Option<PathError>,
 }
 
 impl PathFit {
@@ -632,6 +642,48 @@ impl Problem for GaussianLasso<'_> {
     fn objective(&self, lam: f64) -> f64 {
         objective(&self.r, &self.beta, self.penalty, lam, self.ctx.n)
     }
+
+    /// Checkpoint everything that feeds the next λ: β, the residual, the
+    /// lazy correlations *with their validity mask* (serialized, not
+    /// invalidated — a resumed fit must reproduce the uninterrupted fit's
+    /// `cols_scanned` bit-for-bit), and the safe rule's phase state.
+    fn save_state(&self) -> Option<Vec<u8>> {
+        let mut w = ByteWriter::new();
+        w.put_f64s(&self.beta);
+        w.put_f64s(&self.r);
+        w.put_f64s(&self.z);
+        w.put_bools(&self.z_valid);
+        let rule_state =
+            self.safe_rule.as_ref().map(|ru| ru.save_state()).unwrap_or_default();
+        w.put_blob(&rule_state);
+        Some(w.into_bytes())
+    }
+
+    fn restore_state(&mut self, state: &[u8]) -> Result<()> {
+        let mut rd = ByteReader::new(state);
+        let beta = rd.get_f64s()?;
+        let r = rd.get_f64s()?;
+        let z = rd.get_f64s()?;
+        let z_valid = rd.get_bools()?;
+        let rule_state = rd.get_blob()?.to_vec();
+        if beta.len() != self.ctx.p
+            || r.len() != self.ctx.n
+            || z.len() != self.ctx.p
+            || z_valid.len() != self.ctx.p
+        {
+            return Err(HssrError::Corrupt(
+                "lasso checkpoint state dimensions do not match the data".into(),
+            ));
+        }
+        if let Some(rule) = self.safe_rule.as_mut() {
+            rule.load_state(&rule_state)?;
+        }
+        self.beta = beta;
+        self.r = r;
+        self.z = z;
+        self.z_valid = z_valid;
+        Ok(())
+    }
 }
 
 /// Fit the full path with the default scan engine: the native pool-backed
@@ -661,6 +713,7 @@ pub fn fit_lasso_path_with_engine(
         lambda_max: fit.lambda_max,
         seconds: fit.seconds,
         rule: fit.rule,
+        error: fit.error,
     })
 }
 
@@ -674,6 +727,7 @@ pub fn objective(r: &[f64], beta: &[f64], penalty: Penalty, lam: f64, n: usize) 
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
     use crate::data::DataSpec;
@@ -873,6 +927,55 @@ mod tests {
         let fit = fit_lasso_path(&ds, &cfg).unwrap();
         assert_eq!(fit.lambdas, vec![0.5, 0.3, 0.1]);
         assert_eq!(fit.betas.len(), 3);
+    }
+
+    /// Crash-resume: a fit killed after k λs and resumed from its
+    /// checkpoint must be bit-identical — βs, metrics, scan accounting —
+    /// to one that never stopped. Exercised for the headline hybrid rule
+    /// (static BEDPP phase state) and the frozen re-hybridized rule.
+    #[test]
+    fn checkpoint_resume_is_bit_identical() {
+        let dir = std::env::temp_dir().join("hssr_path_ckpt_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let ds = DataSpec::gene_like(70, 120).generate(31);
+        for rule in [RuleKind::SsrBedpp, RuleKind::SsrBedppSedpp, RuleKind::SsrGapSafe] {
+            let full = fit_lasso_path(&ds, &small_cfg(rule)).unwrap();
+            let grid = full.lambdas.clone();
+            let ck = dir.join(format!("{rule:?}.ckpt"));
+            let _ = std::fs::remove_file(&ck);
+            // "Crash" after 11 of 30 λs: fit only the prefix, checkpointing.
+            let prefix_cfg = PathConfig {
+                lambdas: Some(grid[..11].to_vec()),
+                checkpoint: Some(ck.clone()),
+                ..small_cfg(rule)
+            };
+            fit_lasso_path(&ds, &prefix_cfg).unwrap();
+            // Resume over the full grid from the same checkpoint.
+            let resume_cfg = PathConfig {
+                lambdas: Some(grid.clone()),
+                checkpoint: Some(ck.clone()),
+                ..small_cfg(rule)
+            };
+            let resumed = fit_lasso_path(&ds, &resume_cfg).unwrap();
+            assert_eq!(resumed.lambdas, full.lambdas, "{rule:?} grid");
+            assert_eq!(resumed.betas, full.betas, "{rule:?} betas differ");
+            for (k, (ma, mb)) in
+                full.metrics.iter().zip(resumed.metrics.iter()).enumerate()
+            {
+                assert_eq!(ma, mb, "{rule:?} metrics at λ#{k}");
+            }
+            // A checkpoint from a different rule is refused, typed.
+            let other = PathConfig {
+                lambdas: Some(grid.clone()),
+                checkpoint: Some(ck.clone()),
+                ..small_cfg(RuleKind::Ssr)
+            };
+            assert!(matches!(
+                fit_lasso_path(&ds, &other),
+                Err(crate::error::HssrError::Config(_))
+            ));
+            let _ = std::fs::remove_file(&ck);
+        }
     }
 
     #[test]

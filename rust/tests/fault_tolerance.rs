@@ -1,0 +1,214 @@
+//! The fault-tolerance acceptance bar, end to end.
+//!
+//! * **Injection masking** — with the deterministic [`FaultInjector`]
+//!   armed (transient read errors, short reads, bit flips), OOC fits for
+//!   all three families are **bit-identical** to native-engine fits, and
+//!   the store's retry counters prove faults actually fired and were
+//!   absorbed rather than never happening.
+//! * **Corruption detection** — a single flipped byte in a store chunk
+//!   turns a fit into a typed [`HssrError::Corrupt`], never silent wrong
+//!   numbers; same for a flipped byte in a resume checkpoint.
+//!
+//! The injector never faults attempt ≥ [`FaultInjector::MAX_FAULT_ATTEMPTS`],
+//! and the reader retries more times than that, so every injected fault is
+//! deterministically recoverable — which is what makes bit-identity a
+//! provable property rather than a lucky run.
+
+use hssr::data::store::{write_dataset, ColumnStore, FaultInjector, FaultSpec, HEADER_LEN};
+use hssr::data::synth::generate_grouped;
+use hssr::data::DataSpec;
+use hssr::error::HssrError;
+use hssr::runtime::native::NativeEngine;
+use hssr::runtime::ooc::OocEngine;
+use hssr::screening::RuleKind;
+use hssr::solver::group_path::{fit_group_path_with_engine, GroupPathConfig};
+use hssr::solver::logistic::{
+    fit_logistic_path_with_engine, synthetic_logistic, LogisticPathConfig,
+};
+use hssr::solver::path::{fit_lasso_path, fit_lasso_path_with_engine, PathConfig};
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("hssr_fault_it");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+/// Mount `path` with an aggressive deterministic fault mix attached via
+/// the test hook (the `HSSR_FAULTS` env path is exercised by the CI
+/// fault-injection leg, which runs the whole suite under it).
+fn faulted_engine(path: &std::path::Path, budget: usize, seed: u64) -> OocEngine {
+    let mut store = ColumnStore::open(path, budget).unwrap();
+    let spec =
+        FaultSpec::parse(&format!("seed={seed},transient=0.2,short=0.15,flip=0.1")).unwrap();
+    store.set_faults(Some(FaultInjector::new(spec)));
+    OocEngine::from_store(store)
+}
+
+/// Lasso, every rule: injected faults are absorbed bit-identically — the
+/// faulted OOC path equals the native path in coefficients and in every
+/// per-λ screening statistic — and the retry counters show the faults
+/// really fired.
+#[test]
+fn lasso_fits_bit_identical_under_injected_faults() {
+    let ds = DataSpec::gene_like(70, 180).generate(31);
+    let path = tmp("flt-lasso.store");
+    let chunk = 16;
+    write_dataset(&ds, chunk, &path).unwrap();
+    let budget = chunk * ds.n() * 8; // one chunk resident: every scan re-reads
+    let native = NativeEngine::new();
+    let mut total_retries = 0;
+    for (i, rule) in [
+        RuleKind::BasicPcd,
+        RuleKind::ActiveCycling,
+        RuleKind::Ssr,
+        RuleKind::Sedpp,
+        RuleKind::SsrBedpp,
+        RuleKind::SsrDome,
+        RuleKind::SsrBedppSedpp,
+        RuleKind::SsrGapSafe,
+    ]
+    .into_iter()
+    .enumerate()
+    {
+        let cfg = PathConfig { rule, n_lambda: 15, tol: 1e-8, ..PathConfig::default() };
+        let ooc = faulted_engine(&path, budget, 41 + i as u64);
+        let a = fit_lasso_path_with_engine(&ds, &cfg, &ooc).unwrap();
+        let b = fit_lasso_path_with_engine(&ds, &cfg, &native).unwrap();
+        assert_eq!(a.betas, b.betas, "{rule:?}: faulted betas differ from native");
+        for (k, (ma, mb)) in a.metrics.iter().zip(b.metrics.iter()).enumerate() {
+            assert_eq!(ma.safe_size, mb.safe_size, "{rule:?} |S| at λ#{k}");
+            assert_eq!(ma.strong_size, mb.strong_size, "{rule:?} |H| at λ#{k}");
+            assert_eq!(ma.violations, mb.violations, "{rule:?} viols at λ#{k}");
+        }
+        let c = ooc.store().counters();
+        total_retries += c.retries();
+    }
+    assert!(
+        total_retries > 0,
+        "fault rates this high must trigger retries — injection is not wired"
+    );
+}
+
+/// Group lasso under the same fault mix: bit-identical group selections
+/// and coefficients for every supported rule.
+#[test]
+fn group_fits_bit_identical_under_injected_faults() {
+    let gds = generate_grouped(60, 24, 4, 4, 33);
+    let path = tmp("flt-group.store");
+    let chunk = 8;
+    let zeros = vec![0.0; gds.p()];
+    let ones = vec![1.0; gds.p()];
+    hssr::data::store::write_matrix(&gds.x, &gds.y, &zeros, &ones, true, chunk, &path)
+        .unwrap();
+    let budget = chunk * gds.n() * 8;
+    let native = NativeEngine::new();
+    let mut total_retries = 0;
+    for (i, rule) in [
+        RuleKind::BasicPcd,
+        RuleKind::ActiveCycling,
+        RuleKind::Ssr,
+        RuleKind::Sedpp,
+        RuleKind::SsrBedpp,
+        RuleKind::SsrGapSafe,
+    ]
+    .into_iter()
+    .enumerate()
+    {
+        let cfg =
+            GroupPathConfig { rule, n_lambda: 12, tol: 1e-8, ..GroupPathConfig::default() };
+        let ooc = faulted_engine(&path, budget, 61 + i as u64);
+        let a = fit_group_path_with_engine(&gds, &cfg, &ooc).unwrap();
+        let b = fit_group_path_with_engine(&gds, &cfg, &native).unwrap();
+        assert_eq!(a.betas, b.betas, "{rule:?}: faulted group betas differ");
+        total_retries += ooc.store().counters().retries();
+    }
+    assert!(total_retries > 0, "group fault injection never fired");
+}
+
+/// Logistic (the safe-screened GLM) under the same fault mix:
+/// bit-identical coefficients and intercepts for every supported rule.
+#[test]
+fn logistic_fits_bit_identical_under_injected_faults() {
+    let (x, y, _) = synthetic_logistic(80, 60, 4, 35);
+    let path = tmp("flt-logit.store");
+    let chunk = 8;
+    let zeros = vec![0.0; x.ncols()];
+    let ones = vec![1.0; x.ncols()];
+    hssr::data::store::write_matrix(&x, &y, &zeros, &ones, true, chunk, &path).unwrap();
+    let budget = chunk * x.nrows() * 8;
+    let native = NativeEngine::new();
+    let mut total_retries = 0;
+    for (i, rule) in [
+        RuleKind::BasicPcd,
+        RuleKind::ActiveCycling,
+        RuleKind::Ssr,
+        RuleKind::SsrGapSafe,
+    ]
+    .into_iter()
+    .enumerate()
+    {
+        let cfg = LogisticPathConfig {
+            rule,
+            n_lambda: 12,
+            tol: 1e-8,
+            ..LogisticPathConfig::default()
+        };
+        let ooc = faulted_engine(&path, budget, 81 + i as u64);
+        let a = fit_logistic_path_with_engine(&x, &y, &cfg, &ooc).unwrap();
+        let b = fit_logistic_path_with_engine(&x, &y, &cfg, &native).unwrap();
+        assert_eq!(a.betas, b.betas, "{rule:?}: faulted logistic betas differ");
+        assert_eq!(a.intercepts, b.intercepts, "{rule:?}: intercepts differ");
+        total_retries += ooc.store().counters().retries();
+    }
+    assert!(total_retries > 0, "logistic fault injection never fired");
+}
+
+/// One flipped byte in a chunk payload is a typed corruption error at fit
+/// time — the CRC gate catches what a retry cannot fix, and the fit
+/// refuses to produce numbers from the damaged chunk.
+#[test]
+fn flipped_store_byte_is_detected_not_served() {
+    let ds = DataSpec::gene_like(50, 90).generate(17);
+    let path = tmp("flt-corrupt.store");
+    let chunk = 16;
+    write_dataset(&ds, chunk, &path).unwrap();
+    // Flip one bit inside the first chunk's payload (chunks start right
+    // after the fixed header).
+    let mut bytes = std::fs::read(&path).unwrap();
+    bytes[HEADER_LEN + 40] ^= 0x01;
+    std::fs::write(&path, &bytes).unwrap();
+    let budget = chunk * ds.n() * 8;
+    let ooc = OocEngine::open(&path, budget).unwrap();
+    let cfg =
+        PathConfig { rule: RuleKind::SsrBedpp, n_lambda: 10, tol: 1e-8, ..PathConfig::default() };
+    let err = fit_lasso_path_with_engine(&ds, &cfg, &ooc).unwrap_err();
+    assert!(matches!(err, HssrError::Corrupt(_)), "wrong error kind: {err}");
+    assert!(
+        ooc.store().counters().checksum_failures() > 0,
+        "the CRC gate never rejected the damaged chunk"
+    );
+}
+
+/// A flipped byte in a resume checkpoint is refused with a typed
+/// corruption error — a damaged checkpoint must never silently seed a fit.
+#[test]
+fn flipped_checkpoint_byte_is_refused_on_resume() {
+    let ds = DataSpec::gene_like(50, 90).generate(7);
+    let ckpt = tmp("flt-corrupt.ckpt");
+    let _ = std::fs::remove_file(&ckpt);
+    let cfg = PathConfig {
+        rule: RuleKind::SsrBedpp,
+        n_lambda: 12,
+        tol: 1e-8,
+        checkpoint: Some(ckpt.clone()),
+        ..PathConfig::default()
+    };
+    fit_lasso_path(&ds, &cfg).unwrap();
+    let mut bytes = std::fs::read(&ckpt).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x10;
+    std::fs::write(&ckpt, &bytes).unwrap();
+    let err = fit_lasso_path(&ds, &cfg).unwrap_err();
+    assert!(matches!(err, HssrError::Corrupt(_)), "wrong error kind: {err}");
+    std::fs::remove_file(&ckpt).unwrap();
+}

@@ -51,30 +51,28 @@ fn store_roundtrip_property() {
 }
 
 /// CSV → store (streaming Welford standardization) agrees with the
-/// in-memory CSV loader to numerical precision, constant columns
-/// included.
+/// in-memory CSV loader to numerical precision.
 #[test]
 fn convert_csv_matches_load_csv() {
     let csv = tmp("conv.csv");
-    let mut body = String::from("y,a,b,c,const\n# comment line\n");
+    let mut body = String::from("y,a,b,c\n# comment line\n");
     let mut rng = hssr::rng::Pcg64::new(11);
     for _ in 0..60 {
         let a = rng.normal() * 3.0 + 1.0;
         let b = rng.normal() * 0.2 - 5.0;
         let c = rng.normal();
         let y = 2.0 * a - b + 0.1 * rng.normal();
-        body.push_str(&format!("{y},{a},{b},{c},7.5\n"));
+        body.push_str(&format!("{y},{a},{b},{c}\n"));
     }
     std::fs::write(&csv, body).unwrap();
     let out = tmp("conv.store");
     let summary = convert_csv(&csv, 2, &out).unwrap();
-    assert_eq!((summary.header.n, summary.header.p), (60, 4));
+    assert_eq!((summary.header.n, summary.header.p), (60, 3));
     assert!(!summary.header.standardized, "csv stores raw + read-time transform");
     let store = ColumnStore::open(&out, 1 << 20).unwrap();
     let from_store = store.to_dataset().unwrap();
     let direct = hssr::data::io::load_csv(&csv).unwrap();
-    assert_eq!(from_store.scales[3], 0.0, "constant column must get scale 0");
-    for j in 0..4 {
+    for j in 0..3 {
         assert!(
             (from_store.centers[j] - direct.centers[j]).abs() < 1e-10,
             "center {j} drifted"
@@ -93,6 +91,30 @@ fn convert_csv_matches_load_csv() {
     for i in 0..60 {
         assert!((from_store.y[i] - direct.y[i]).abs() < 1e-10, "y[{i}] drifted");
     }
+}
+
+/// Load-time validation at the conversion boundary: constant (zero
+/// variance) feature columns and non-finite values are typed errors for
+/// both the streaming converter and the in-memory loader — bad data never
+/// reaches a store file or a fit.
+#[test]
+fn convert_csv_rejects_constant_and_nonfinite_columns() {
+    let csv = tmp("conv-bad-const.csv");
+    std::fs::write(&csv, "y,a,const\n1.0,2.0,7.5\n-1.0,3.0,7.5\n0.5,0.25,7.5\n").unwrap();
+    let out = tmp("conv-bad-const.store");
+    let err = convert_csv(&csv, 2, &out).unwrap_err();
+    assert!(err.to_string().contains("zero variance"), "got {err}");
+    assert!(
+        hssr::data::io::load_csv(&csv)
+            .unwrap_err()
+            .to_string()
+            .contains("zero variance")
+    );
+    let csv = tmp("conv-bad-nan.csv");
+    std::fs::write(&csv, "y,a,b\n1.0,2.0,3.0\n-1.0,nan,1.0\n0.5,0.25,2.0\n").unwrap();
+    let out = tmp("conv-bad-nan.store");
+    let err = convert_csv(&csv, 2, &out).unwrap_err();
+    assert!(err.to_string().contains("non-finite"), "got {err}");
 }
 
 /// The acceptance bar, column family: OOC fits under a one-chunk cache
