@@ -4,15 +4,20 @@
 #   make tier1      exactly the tier-1 command the CI driver runs
 #   make doc        rustdoc with warnings denied (the CI doc job)
 #   make bench      perf probe (emits BENCH_perf.json at the repo root)
+#   make diskless   the CI test-diskless leg locally: the whole suite with
+#                   store-backed fits, a 4 MB cache, and the prefetcher on
 #   make artifacts  AOT-lower the JAX/Pallas scan kernels to HLO text
 #                   (needs the python toolchain; not required for tier-1)
 
 CARGO_DIR := rust
 
-.PHONY: verify tier1 lint doc bench artifacts
+.PHONY: verify tier1 lint doc bench diskless artifacts
 
 tier1:
 	cd $(CARGO_DIR) && cargo build --release && cargo test -q
+
+diskless:
+	cd $(CARGO_DIR) && HSSR_ENGINE=ooc HSSR_CACHE_MB=4 HSSR_PREFETCH=1 cargo test -q
 
 lint:
 	cd $(CARGO_DIR) && cargo fmt --check

@@ -6,14 +6,13 @@
 //! actual read traffic.
 //!
 //! Expected: SSR and AC scan Θ(pK) columns; HSSR scans `Σ_k |S_k|` ≪ pK;
-//! SEDPP's scans happen inside the rule (full pK — reported via its
-//! analytic count); gap-safe's in-rule scans are engine-routed since the
-//! store subsystem landed, so its count is fully measured; Basic PCD
-//! scans nothing but pays Θ(pK) CD updates.
+//! SEDPP's in-rule scans — the last analytic holdout — are engine-routed
+//! now, like gap-safe's, so every column in the table is *measured*;
+//! Basic PCD scans nothing but pays Θ(pK) CD updates.
 
 use hssr::coordinator::metrics::{
-    group_scan_traffic, ooc_scan_traffic, ooc_traffic_table, scan_traffic,
-    scan_traffic_table,
+    group_scan_traffic, ooc_fit_traffic, ooc_scan_traffic, ooc_traffic_table,
+    scan_traffic, scan_traffic_table,
 };
 use hssr::coordinator::report::Table;
 use hssr::data::synth::generate_grouped;
@@ -30,7 +29,7 @@ fn main() {
 
     let mut table = Table::new(
         "Table 1 (measured) — column-scan and update counts over the path",
-        &["Method", "screen+KKT cols", "analytic", "CD coord updates", "cols / pK"],
+        &["Method", "screen+KKT cols", "CD coord updates", "cols / pK"],
     );
     for rule in [
         RuleKind::BasicPcd,
@@ -44,25 +43,16 @@ fn main() {
     ] {
         let cfg = PathConfig { rule, n_lambda: k, ..PathConfig::default() };
         let fit = fit_lasso_path(&ds, &cfg).expect("fit");
-        // SEDPP (and the frozen-SEDPP hybrid's freeze-time scan) still
-        // hide full scans inside the rule: account those analytically.
-        // Gap-safe's in-rule scans are engine-routed and therefore
-        // *measured* — its analytic column equals the measured one.
-        let analytic = match rule {
-            RuleKind::Sedpp => pk,
-            RuleKind::SsrBedppSedpp => {
-                // one full scan at freeze time + per-λ safe-set scans
-                fit.total_cols_scanned() + ds.p() as u64
-            }
-            _ => fit.total_cols_scanned(),
-        };
+        // Every rule's in-rule scans — SEDPP's per-λ dual scans, the
+        // re-hybridized rule's freeze-time scan, gap-safe's dual
+        // refreshes — are engine-routed, so the measured column *is* the
+        // analytic count (no derived entries remain).
         let updates: u64 = fit.metrics.iter().map(|m| m.coord_updates).sum();
         table.push_row(vec![
             rule.label().to_string(),
             fit.total_cols_scanned().to_string(),
-            analytic.to_string(),
             updates.to_string(),
-            format!("{:.2}", analytic as f64 / pk as f64),
+            format!("{:.2}", fit.total_cols_scanned() as f64 / pk as f64),
         ]);
     }
     table.emit("ablation_scans").expect("emit");
@@ -147,21 +137,19 @@ fn main() {
     .emit("ablation_scans_ooc")
     .expect("emit ooc traffic");
 
-    // Cache-pressure row: the same paths under a budget of ~2 chunks —
+    // Cache-pressure rows: the same paths under a budget of ~2 chunks —
     // every non-resident touch is a real read; HSSR's shrinking safe set
-    // is the only thing that keeps traffic sublinear.
+    // is the only thing that keeps traffic sublinear. Run prefetch-off
+    // then prefetch-on so the λ-ahead prefetcher's hit rate, waste, and
+    // demand-stall savings are measured head-to-head on one store.
     let harsh = 2 * chunk_cols * ds.n() * 8;
-    let harsh_rows = ooc_scan_traffic(
-        &ds,
-        &cfg,
-        chunk_cols,
-        harsh,
-        &[RuleKind::Ssr, RuleKind::SsrBedpp, RuleKind::SsrGapSafe],
-    )
-    .expect("harsh ooc traffic");
+    let harsh_rules = [RuleKind::Ssr, RuleKind::SsrBedpp, RuleKind::SsrGapSafe];
+    let harsh_rows = ooc_fit_traffic(&ds, &cfg, chunk_cols, harsh, &harsh_rules, false)
+        .expect("harsh ooc traffic");
     ooc_traffic_table(
         &format!(
-            "cache-pressure: budget {:.1} MB (2 chunks) vs {:.0} MB matrix",
+            "cache-pressure: budget {:.1} MB (2 chunks) vs {:.0} MB matrix, \
+             prefetch OFF",
             harsh as f64 / 1e6,
             matrix_bytes as f64 / 1e6
         ),
@@ -169,6 +157,56 @@ fn main() {
     )
     .emit("ablation_scans_ooc_pressure")
     .expect("emit ooc pressure");
+    let pf_rows = ooc_fit_traffic(&ds, &cfg, chunk_cols, harsh, &harsh_rules, true)
+        .expect("harsh ooc traffic, prefetch");
+    ooc_traffic_table(
+        &format!(
+            "cache-pressure: budget {:.1} MB (2 chunks) vs {:.0} MB matrix, \
+             prefetch ON (λ-ahead)",
+            harsh as f64 / 1e6,
+            matrix_bytes as f64 / 1e6
+        ),
+        &pf_rows,
+    )
+    .emit("ablation_scans_ooc_pressure_prefetch")
+    .expect("emit ooc pressure prefetch");
+    for (off, on) in harsh_rows.iter().zip(&pf_rows) {
+        let issued = on.prefetch_issued.max(1);
+        println!(
+            "prefetch ablation [{}]: stalls {} → {}, hit rate {:.0}% \
+             ({} hits / {} issued, {} wasted)",
+            off.rule.label(),
+            off.stalls,
+            on.stalls,
+            100.0 * on.prefetch_hits as f64 / issued as f64,
+            on.prefetch_hits,
+            on.prefetch_issued,
+            on.prefetch_wasted,
+        );
+    }
+
+    // mmap vs seek/read chunk service, same budget and rules. The gate is
+    // compile-time (feature `mmap`) *and* runtime (HSSR_MMAP), so one
+    // binary benches both services back to back.
+    #[cfg(feature = "mmap")]
+    {
+        std::env::set_var("HSSR_MMAP", "1");
+        let mmap_rows =
+            ooc_fit_traffic(&ds, &cfg, chunk_cols, harsh, &harsh_rules, false)
+                .expect("harsh ooc traffic, mmap");
+        std::env::remove_var("HSSR_MMAP");
+        ooc_traffic_table(
+            &format!(
+                "cache-pressure: budget {:.1} MB (2 chunks), mmap chunk service",
+                harsh as f64 / 1e6
+            ),
+            &mmap_rows,
+        )
+        .emit("ablation_scans_ooc_pressure_mmap")
+        .expect("emit ooc pressure mmap");
+    }
+    #[cfg(not(feature = "mmap"))]
+    println!("mmap chunk service not compiled in (enable with --features mmap)");
 
     // ---- group screen: single-traversal bytes per rule ----
     // The fused pipeline's `fused_group_screen` + `fused_group_kkt` read

@@ -189,9 +189,21 @@ pub struct OocTraffic {
     /// Reads that returned fewer bytes than requested and were retried.
     pub short_reads: u64,
     /// The path's own `cols_scanned` accounting (must equal
-    /// `cols_fetched` — every scan, including the gap-safe rule's in-rule
-    /// traversals, is engine-routed).
+    /// `cols_fetched` — every scan, including the gap-safe and SEDPP
+    /// rules' in-rule traversals, is engine-routed).
     pub metric_cols: u64,
+    /// Columns served to the inner solvers through the pinned-chunk
+    /// cursor (diskless fit traffic; separate from scan `cols_fetched`).
+    pub solver_cols: u64,
+    /// Demand chunk loads that blocked compute (cache misses on the
+    /// synchronous path).
+    pub stalls: u64,
+    /// Chunks the async λ-ahead prefetcher was asked to stage.
+    pub prefetch_issued: u64,
+    /// Prefetched chunks that were later used by a demand access.
+    pub prefetch_hits: u64,
+    /// Prefetched chunks evicted or refused before any demand use.
+    pub prefetch_wasted: u64,
 }
 
 /// Measure §3.2.3 as **actual read traffic**: spill `ds` to a temp store
@@ -206,12 +218,30 @@ pub fn ooc_scan_traffic(
     budget_bytes: usize,
     rules: &[RuleKind],
 ) -> Result<Vec<OocTraffic>> {
+    ooc_fit_traffic(ds, cfg, chunk_cols, budget_bytes, rules, false)
+}
+
+/// [`ooc_scan_traffic`] with the async λ-ahead prefetcher optionally
+/// armed, so the same store/budget can be measured prefetch-on vs
+/// prefetch-off (hit rate, waste, and demand-stall counts per rule).
+pub fn ooc_fit_traffic(
+    ds: &Dataset,
+    cfg: &PathConfig,
+    chunk_cols: usize,
+    budget_bytes: usize,
+    rules: &[RuleKind],
+    prefetch: bool,
+) -> Result<Vec<OocTraffic>> {
     let path = std::env::temp_dir().join(format!(
-        "hssr-traffic-{}-{chunk_cols}.store",
-        std::process::id()
+        "hssr-traffic-{}-{chunk_cols}-{}.store",
+        std::process::id(),
+        prefetch as u8,
     ));
     write_dataset(ds, chunk_cols, &path)?;
-    let engine = OocEngine::from_store(ColumnStore::open(&path, budget_bytes)?);
+    let mut engine = OocEngine::from_store(ColumnStore::open(&path, budget_bytes)?);
+    if prefetch {
+        engine.enable_prefetch();
+    }
     // Unlink early where the platform allows (the open handle keeps the
     // store readable); the post-drop removal below covers the rest.
     #[cfg(unix)]
@@ -234,6 +264,11 @@ pub fn ooc_scan_traffic(
             checksum_failures: counters.checksum_failures(),
             short_reads: counters.short_reads(),
             metric_cols: fit.total_cols_scanned(),
+            solver_cols: counters.solver_cols(),
+            stalls: counters.stalls(),
+            prefetch_issued: counters.prefetch_issued(),
+            prefetch_hits: counters.prefetch_hits(),
+            prefetch_wasted: counters.prefetch_wasted(),
         });
     }
     drop(engine); // close the handle so the removal works everywhere
@@ -249,10 +284,13 @@ pub fn ooc_traffic_table(title: &str, rows: &[OocTraffic]) -> Table {
         &[
             "Method",
             "cols served",
+            "solver cols",
             "chunk loads",
             "MB read (disk)",
             "cache hits",
             "peak res MB",
+            "stalls",
+            "pf hit/iss/waste",
             "retries",
             "crc fail",
             "vs first",
@@ -264,10 +302,13 @@ pub fn ooc_traffic_table(title: &str, rows: &[OocTraffic]) -> Table {
         t.push_row(vec![
             r.rule.label().to_string(),
             r.cols_fetched.to_string(),
+            r.solver_cols.to_string(),
             r.chunk_loads.to_string(),
             format!("{:.1}", r.bytes_read as f64 / 1e6),
             r.cache_hits.to_string(),
             format!("{:.2}", r.peak_resident as f64 / 1e6),
+            r.stalls.to_string(),
+            format!("{}/{}/{}", r.prefetch_hits, r.prefetch_issued, r.prefetch_wasted),
             r.retries.to_string(),
             r.checksum_failures.to_string(),
             format!("{:.2}x less", base as f64 / r.bytes_read.max(1) as f64),

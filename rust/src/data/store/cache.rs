@@ -5,6 +5,24 @@
 //! as `Arc<Vec<f64>>` so an in-flight scan keeps its chunk alive even if a
 //! concurrent insert evicts it — resident accounting tracks what the cache
 //! *holds*, which is what the budget bounds.
+//!
+//! ## Pins
+//!
+//! A store-backed inner solver walks its working set through a pinned
+//! chunk view ([`crate::data::store::reader::PinnedColumns`]): the chunk
+//! under the cursor is **pinned**, which exempts it from LRU eviction —
+//! mid-burst churn can never evict the chunk a coordinate update is
+//! reading — while its bytes stay counted against `resident`, so the
+//! byte-budget guarantee covers pinned data too. Pins are released when
+//! the cursor advances (and unconditionally on drop, i.e. per solve).
+//!
+//! ## Prefetch tagging
+//!
+//! Chunks inserted by the async λ-ahead prefetcher are tagged; the first
+//! demand access of a tagged chunk counts a *prefetch hit*, and evicting a
+//! tagged chunk that was never used counts a *prefetch waste*. The stats
+//! accumulate here (under the cache lock) and are drained into the store's
+//! atomic [`crate::data::store::StoreCounters`] by the reader.
 
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -12,6 +30,10 @@ use std::sync::Arc;
 struct Entry {
     buf: Arc<Vec<f64>>,
     stamp: u64,
+    /// Pin count: > 0 exempts the entry from LRU eviction.
+    pins: u32,
+    /// Inserted by the prefetcher and not yet used by a demand access.
+    prefetched: bool,
 }
 
 /// A byte-budgeted LRU map from chunk index to decoded column data.
@@ -20,6 +42,11 @@ pub struct ChunkCache {
     map: HashMap<usize, Entry>,
     clock: u64,
     resident: usize,
+    /// Demand accesses that found a prefetched chunk (drained via
+    /// [`ChunkCache::take_prefetch_stats`]).
+    prefetch_hits: u64,
+    /// Prefetched chunks evicted without ever being used.
+    prefetch_wasted: u64,
 }
 
 impl ChunkCache {
@@ -27,7 +54,14 @@ impl ChunkCache {
     /// than the budget is still admitted — the cache never refuses the
     /// chunk a scan is about to read).
     pub fn new(budget: usize) -> Self {
-        ChunkCache { budget, map: HashMap::new(), clock: 0, resident: 0 }
+        ChunkCache {
+            budget,
+            map: HashMap::new(),
+            clock: 0,
+            resident: 0,
+            prefetch_hits: 0,
+            prefetch_wasted: 0,
+        }
     }
 
     /// The configured byte budget.
@@ -40,54 +74,143 @@ impl ChunkCache {
         self.resident
     }
 
+    /// Bytes held by pinned entries (always ≤ `resident`).
+    pub fn pinned_bytes(&self) -> usize {
+        self.map
+            .values()
+            .filter(|e| e.pins > 0)
+            .map(|e| e.buf.len() * 8)
+            .sum()
+    }
+
     /// Whether chunk `c` is cached (no LRU touch).
     pub fn contains(&self, c: usize) -> bool {
         self.map.contains_key(&c)
     }
 
-    /// Fetch chunk `c`, marking it most-recently-used.
+    /// Fetch chunk `c`, marking it most-recently-used. A first demand hit
+    /// on a prefetched chunk clears its tag and counts a prefetch hit.
     pub fn get(&mut self, c: usize) -> Option<Arc<Vec<f64>>> {
         self.clock += 1;
         let clock = self.clock;
+        let hits = &mut self.prefetch_hits;
         self.map.get_mut(&c).map(|e| {
             e.stamp = clock;
+            if e.prefetched {
+                e.prefetched = false;
+                *hits += 1;
+            }
             Arc::clone(&e.buf)
         })
     }
 
-    /// Insert chunk `c`, evicting least-recently-used chunks until the
-    /// budget holds (or the cache is empty). Returns the number of chunks
-    /// evicted.
+    /// Pin chunk `c` (must already be cached): exempt it from eviction
+    /// until the matching [`ChunkCache::unpin`]. Counts as a use for the
+    /// prefetch-hit accounting. Returns whether the entry was present.
+    pub fn pin(&mut self, c: usize) -> bool {
+        match self.map.get_mut(&c) {
+            Some(e) => {
+                e.pins += 1;
+                if e.prefetched {
+                    e.prefetched = false;
+                    self.prefetch_hits += 1;
+                }
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Release one pin on chunk `c` (no-op when absent or unpinned).
+    pub fn unpin(&mut self, c: usize) {
+        if let Some(e) = self.map.get_mut(&c) {
+            e.pins = e.pins.saturating_sub(1);
+        }
+    }
+
+    /// Pick the LRU eviction victim: the smallest-stamp entry that is not
+    /// pinned and not `keep`.
+    fn lru_victim(&self, keep: usize) -> Option<usize> {
+        self.map
+            .iter()
+            .filter(|(&k, e)| e.pins == 0 && k != keep)
+            .min_by_key(|(_, e)| e.stamp)
+            .map(|(&k, _)| k)
+    }
+
+    /// Remove `victim`, maintaining resident/waste accounting.
+    fn evict(&mut self, victim: usize) {
+        if let Some(e) = self.map.remove(&victim) {
+            self.resident -= e.buf.len() * 8;
+            if e.prefetched {
+                self.prefetch_wasted += 1;
+            }
+        }
+    }
+
+    /// Insert chunk `c`, evicting least-recently-used *unpinned* chunks
+    /// until the budget holds (or nothing evictable remains). Returns the
+    /// number of chunks evicted.
     pub fn insert(&mut self, c: usize, buf: Arc<Vec<f64>>) -> usize {
         let bytes = buf.len() * 8;
         let mut evicted = 0;
         while self.resident + bytes > self.budget {
-            // An empty map has no LRU victim — stop evicting rather than
-            // panic (the oversized chunk is still admitted; see `new`).
-            let Some(oldest) = self.map.iter().min_by_key(|(_, e)| e.stamp).map(|(&k, _)| k)
-            else {
+            // No unpinned LRU victim — stop evicting rather than panic
+            // (the oversized chunk is still admitted; see `new`).
+            let Some(oldest) = self.lru_victim(c) else {
                 break;
             };
-            if oldest == c {
-                break; // replacing in place; handled below
-            }
-            if let Some(e) = self.map.remove(&oldest) {
-                self.resident -= e.buf.len() * 8;
-                evicted += 1;
-            }
+            self.evict(oldest);
+            evicted += 1;
         }
         self.clock += 1;
-        if let Some(old) = self.map.insert(c, Entry { buf, stamp: self.clock }) {
+        if let Some(old) = self.map.insert(
+            c,
+            Entry { buf, stamp: self.clock, pins: 0, prefetched: false },
+        ) {
             self.resident -= old.buf.len() * 8;
         }
         self.resident += bytes;
         evicted
     }
 
+    /// Prefetch-path insert: admit chunk `c` tagged as prefetched **only
+    /// if it fits** — unpinned LRU entries are evicted to make room, but
+    /// if the budget still cannot hold it (e.g. everything else is
+    /// pinned), the buffer is discarded and `false` returned, so the
+    /// async prefetcher can never push `resident` past the budget. An
+    /// already-cached chunk is left untouched (`true`).
+    pub fn insert_prefetched(&mut self, c: usize, buf: Arc<Vec<f64>>) -> bool {
+        if self.map.contains_key(&c) {
+            return true;
+        }
+        let bytes = buf.len() * 8;
+        while self.resident + bytes > self.budget {
+            let Some(oldest) = self.lru_victim(c) else {
+                return false;
+            };
+            self.evict(oldest);
+        }
+        self.clock += 1;
+        self.map.insert(c, Entry { buf, stamp: self.clock, pins: 0, prefetched: true });
+        self.resident += bytes;
+        true
+    }
+
+    /// Drain the accumulated `(prefetch hits, prefetch wastes)`.
+    pub fn take_prefetch_stats(&mut self) -> (u64, u64) {
+        let out = (self.prefetch_hits, self.prefetch_wasted);
+        self.prefetch_hits = 0;
+        self.prefetch_wasted = 0;
+        out
+    }
+
     /// Drop every cached chunk (used between per-rule bench runs).
     pub fn clear(&mut self) {
         self.map.clear();
         self.resident = 0;
+        self.prefetch_hits = 0;
+        self.prefetch_wasted = 0;
     }
 }
 
@@ -137,5 +260,57 @@ mod tests {
         c.clear();
         assert_eq!(c.resident(), 0);
         assert!(c.get(3).is_none());
+    }
+
+    #[test]
+    fn pinned_chunks_survive_eviction_pressure() {
+        // budget = 1 chunk of 4 f64
+        let mut c = ChunkCache::new(32);
+        c.insert(0, chunk(4, 0.0));
+        assert!(c.pin(0));
+        assert_eq!(c.pinned_bytes(), 32);
+        // A plain insert cannot evict the pinned chunk: it is admitted
+        // over budget (the demand path must be served)…
+        c.insert(1, chunk(4, 1.0));
+        assert!(c.contains(0), "pinned chunk was evicted");
+        assert_eq!(c.resident(), 64);
+        // …and once unpinned, the old chunk is evictable again.
+        c.unpin(0);
+        assert_eq!(c.pinned_bytes(), 0);
+        c.insert(2, chunk(4, 2.0));
+        assert!(!c.contains(0) && c.contains(2));
+        assert!(c.resident() <= 64);
+    }
+
+    #[test]
+    fn prefetched_insert_respects_budget_and_pins() {
+        let mut c = ChunkCache::new(32);
+        c.insert(0, chunk(4, 0.0));
+        c.pin(0);
+        // Everything resident is pinned: the prefetcher must refuse.
+        assert!(!c.insert_prefetched(1, chunk(4, 1.0)));
+        assert_eq!(c.resident(), 32);
+        c.unpin(0);
+        // Now it fits by evicting chunk 0.
+        assert!(c.insert_prefetched(1, chunk(4, 1.0)));
+        assert!(c.contains(1) && !c.contains(0));
+        assert_eq!(c.resident(), 32);
+    }
+
+    #[test]
+    fn prefetch_hit_and_waste_accounting() {
+        let mut c = ChunkCache::new(64);
+        assert!(c.insert_prefetched(0, chunk(4, 0.0)));
+        assert!(c.insert_prefetched(1, chunk(4, 1.0)));
+        // Demand-use chunk 0: one hit, counted once.
+        assert!(c.get(0).is_some());
+        assert!(c.get(0).is_some());
+        // Evict chunk 1 without ever using it: one waste.
+        c.insert(2, chunk(4, 2.0));
+        c.insert(3, chunk(4, 3.0));
+        let (hits, wasted) = c.take_prefetch_stats();
+        assert_eq!((hits, wasted), (1, 1));
+        // Drained.
+        assert_eq!(c.take_prefetch_stats(), (0, 0));
     }
 }

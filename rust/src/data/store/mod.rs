@@ -47,7 +47,7 @@ pub mod writer;
 
 pub use fault::{FaultInjector, FaultSpec};
 pub use format::{chunk_cols_for, Header, HEADER_LEN, MAGIC, MAGIC2};
-pub use reader::ColumnStore;
+pub use reader::{ColumnStore, PinnedColumns, Prefetcher};
 pub use writer::{convert_bin, convert_csv, write_dataset, write_matrix, StoreSummary};
 
 use std::fs::File;
@@ -92,6 +92,11 @@ pub struct StoreCounters {
     retries: AtomicU64,
     checksum_failures: AtomicU64,
     short_reads: AtomicU64,
+    solver_cols: AtomicU64,
+    stalls: AtomicU64,
+    prefetch_issued: AtomicU64,
+    prefetch_hits: AtomicU64,
+    prefetch_wasted: AtomicU64,
 }
 
 impl StoreCounters {
@@ -132,6 +137,36 @@ impl StoreCounters {
     /// Count one short read (`UnexpectedEof` before the buffer filled).
     pub fn add_short_read(&self) {
         self.short_reads.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one column served to an inner solver through a pinned chunk
+    /// view. Kept separate from [`StoreCounters::add_col`] so the
+    /// scan-accounting invariant (`cols_fetched == cols_scanned`) is
+    /// unaffected by store-backed optimizer traffic.
+    pub fn add_solver_col(&self) {
+        self.solver_cols.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one stall: a demand chunk access that missed the cache and
+    /// had to block on a disk read (the cycles prefetch exists to hide).
+    pub fn add_stall(&self) {
+        self.stalls.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one chunk loaded by the async λ-ahead prefetcher.
+    pub fn add_prefetch_issued(&self) {
+        self.prefetch_issued.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Fold in drained cache stats: demand accesses that found a
+    /// prefetched chunk, and prefetched chunks evicted unused.
+    pub fn add_prefetch_stats(&self, hits: u64, wasted: u64) {
+        if hits > 0 {
+            self.prefetch_hits.fetch_add(hits, Ordering::Relaxed);
+        }
+        if wasted > 0 {
+            self.prefetch_wasted.fetch_add(wasted, Ordering::Relaxed);
+        }
     }
 
     /// Columns served since construction (or last reset).
@@ -175,6 +210,31 @@ impl StoreCounters {
         self.short_reads.load(Ordering::Relaxed)
     }
 
+    /// Columns served to inner solvers through pinned chunk views.
+    pub fn solver_cols(&self) -> u64 {
+        self.solver_cols.load(Ordering::Relaxed)
+    }
+
+    /// Demand chunk accesses that blocked on a disk read.
+    pub fn stalls(&self) -> u64 {
+        self.stalls.load(Ordering::Relaxed)
+    }
+
+    /// Chunks loaded asynchronously by the λ-ahead prefetcher.
+    pub fn prefetch_issued(&self) -> u64 {
+        self.prefetch_issued.load(Ordering::Relaxed)
+    }
+
+    /// Demand accesses served by a previously prefetched chunk.
+    pub fn prefetch_hits(&self) -> u64 {
+        self.prefetch_hits.load(Ordering::Relaxed)
+    }
+
+    /// Prefetched chunks evicted without ever being used.
+    pub fn prefetch_wasted(&self) -> u64 {
+        self.prefetch_wasted.load(Ordering::Relaxed)
+    }
+
     /// Zero every counter.
     pub fn reset(&self) {
         self.cols_fetched.store(0, Ordering::Relaxed);
@@ -185,6 +245,11 @@ impl StoreCounters {
         self.retries.store(0, Ordering::Relaxed);
         self.checksum_failures.store(0, Ordering::Relaxed);
         self.short_reads.store(0, Ordering::Relaxed);
+        self.solver_cols.store(0, Ordering::Relaxed);
+        self.stalls.store(0, Ordering::Relaxed);
+        self.prefetch_issued.store(0, Ordering::Relaxed);
+        self.prefetch_hits.store(0, Ordering::Relaxed);
+        self.prefetch_wasted.store(0, Ordering::Relaxed);
     }
 }
 
@@ -255,6 +320,10 @@ mod tests {
         c.add_retry();
         c.add_checksum_failure();
         c.add_short_read();
+        c.add_solver_col();
+        c.add_stall();
+        c.add_prefetch_issued();
+        c.add_prefetch_stats(2, 1);
         assert_eq!(c.cols_fetched(), 2);
         assert_eq!(c.chunk_loads(), 1);
         assert_eq!(c.bytes_read(), 100);
@@ -263,9 +332,15 @@ mod tests {
         assert_eq!(c.retries(), 2);
         assert_eq!(c.checksum_failures(), 1);
         assert_eq!(c.short_reads(), 1);
+        assert_eq!(c.solver_cols(), 1);
+        assert_eq!(c.stalls(), 1);
+        assert_eq!(c.prefetch_issued(), 1);
+        assert_eq!((c.prefetch_hits(), c.prefetch_wasted()), (2, 1));
         c.reset();
         assert_eq!(c.cols_fetched() + c.chunk_loads() + c.bytes_read(), 0);
         assert_eq!(c.retries() + c.checksum_failures() + c.short_reads(), 0);
+        assert_eq!(c.solver_cols() + c.stalls() + c.prefetch_issued(), 0);
+        assert_eq!(c.prefetch_hits() + c.prefetch_wasted(), 0);
     }
 
     #[test]

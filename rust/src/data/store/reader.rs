@@ -31,10 +31,31 @@
 //! so cache-accounting invariants hold bit-for-bit whether or not faults
 //! were injected along the way; the absorbed faults are visible separately
 //! as `retries`, `checksum_failures`, and `short_reads`.
+//!
+//! ## Pinned chunk views and the λ-ahead prefetcher
+//!
+//! Two additions let the inner optimizers (CD/GD/IRLS) run *on* the store
+//! instead of on resident columns:
+//!
+//! * [`PinnedColumns`] — a cursor over store columns that **pins** the
+//!   chunk under it (exempt from LRU eviction, still counted against the
+//!   byte budget) and releases the pin on advance/drop. Because every
+//!   inner loop walks ascending working sets, one pinned chunk at a time
+//!   suffices even under a one-chunk budget. Columns served this way are
+//!   counted as `solver_cols`, *not* `cols_fetched`, so the scan
+//!   accounting invariant is untouched.
+//! * [`Prefetcher`] — a background thread that loads the chunks of the
+//!   next λ's SSR-predicted working set while the current inner solve
+//!   runs. Prefetch inserts are tagged and budget-respecting (they never
+//!   evict pinned chunks and never push `resident` past the budget), and
+//!   a prefetch read failure is simply dropped — the demand path retries
+//!   from scratch, so an injected fault on the prefetch thread can never
+//!   poison a fit. Counters: `prefetch_issued` / `prefetch_hits` /
+//!   `prefetch_wasted`, with blocking demand loads counted as `stalls`.
 
 use std::fs::File;
 use std::path::Path;
-use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
+use std::sync::{mpsc, Arc, Mutex, MutexGuard, PoisonError};
 
 use super::cache::ChunkCache;
 use super::fault::FaultInjector;
@@ -73,6 +94,87 @@ pub struct ColumnStore {
     quarantined: Mutex<std::collections::HashSet<usize>>,
     /// Optional deterministic fault source (env/CLI/tests).
     faults: Option<FaultInjector>,
+    /// Read-only file mapping serving chunk reads instead of `pread` when
+    /// the `mmap` chunk service is selected at runtime (`HSSR_MMAP`).
+    #[cfg(all(feature = "mmap", unix))]
+    map: Option<mm::Mmap>,
+}
+
+/// `mmap`-backed chunk service (cargo feature `mmap`, unix only): the
+/// whole store file is mapped read-only at open, and chunk reads copy out
+/// of the mapping instead of issuing positioned reads. Runtime-selected
+/// via `HSSR_MMAP=1` so a single bench binary can A/B the two services.
+#[cfg(all(feature = "mmap", unix))]
+mod mm {
+    use std::fs::File;
+    use std::os::unix::io::AsRawFd;
+
+    const PROT_READ: i32 = 1;
+    const MAP_SHARED: i32 = 1;
+
+    extern "C" {
+        fn mmap(
+            addr: *mut core::ffi::c_void,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut core::ffi::c_void;
+        fn munmap(addr: *mut core::ffi::c_void, len: usize) -> i32;
+    }
+
+    /// A read-only mapping of the whole store file.
+    pub struct Mmap {
+        ptr: *mut core::ffi::c_void,
+        len: usize,
+    }
+
+    // The mapping is immutable shared memory owned by this struct; the
+    // raw pointer is just a base address, safe to read from any thread.
+    unsafe impl Send for Mmap {}
+    unsafe impl Sync for Mmap {}
+
+    impl Mmap {
+        /// Map `len` bytes of `file` read-only. `None` on failure — the
+        /// caller silently falls back to positioned reads.
+        pub fn map(file: &File, len: usize) -> Option<Mmap> {
+            if len == 0 {
+                return None;
+            }
+            let ptr = unsafe {
+                mmap(std::ptr::null_mut(), len, PROT_READ, MAP_SHARED, file.as_raw_fd(), 0)
+            };
+            if ptr as isize == -1 {
+                return None;
+            }
+            Some(Mmap { ptr, len })
+        }
+
+        /// The mapped bytes.
+        pub fn bytes(&self) -> &[u8] {
+            // Safety: `ptr` maps exactly `len` readable bytes until Drop.
+            unsafe { std::slice::from_raw_parts(self.ptr as *const u8, self.len) }
+        }
+    }
+
+    impl Drop for Mmap {
+        fn drop(&mut self) {
+            // Safety: `ptr`/`len` came from a successful `mmap`.
+            unsafe {
+                munmap(self.ptr, self.len);
+            }
+        }
+    }
+}
+
+/// Whether `HSSR_MMAP` selects the mapped chunk service at runtime.
+#[cfg(all(feature = "mmap", unix))]
+fn mmap_requested() -> bool {
+    matches!(
+        std::env::var("HSSR_MMAP").as_deref(),
+        Ok("1") | Ok("true") | Ok("on")
+    )
 }
 
 impl ColumnStore {
@@ -137,6 +239,12 @@ impl ColumnStore {
             }
         }
         let (n, p) = (header.n, header.p);
+        #[cfg(all(feature = "mmap", unix))]
+        let map = if mmap_requested() {
+            mm::Mmap::map(&file, actual as usize)
+        } else {
+            None
+        };
         Ok(ColumnStore {
             file,
             header,
@@ -153,6 +261,8 @@ impl ColumnStore {
             chunk_crcs,
             quarantined: Mutex::new(std::collections::HashSet::new()),
             faults: FaultInjector::from_env()?,
+            #[cfg(all(feature = "mmap", unix))]
+            map,
         })
     }
 
@@ -230,10 +340,44 @@ impl ColumnStore {
         self.cache_lock().clear();
     }
 
+    /// One positioned chunk-payload read — through the file mapping when
+    /// the `mmap` chunk service is active (feature `mmap` + `HSSR_MMAP`),
+    /// else a plain `pread`. Copying out of the map into the caller's
+    /// buffer keeps the CRC/fault/retry logic byte-for-byte identical
+    /// across both services.
+    fn raw_read(&self, buf: &mut [u8], offset: u64) -> Result<()> {
+        #[cfg(all(feature = "mmap", unix))]
+        if let Some(map) = &self.map {
+            let bytes = map.bytes();
+            let start = offset as usize;
+            match start.checked_add(buf.len()).filter(|&end| end <= bytes.len()) {
+                Some(end) => {
+                    buf.copy_from_slice(&bytes[start..end]);
+                    return Ok(());
+                }
+                None => {
+                    return Err(HssrError::Io(std::io::Error::from(
+                        std::io::ErrorKind::UnexpectedEof,
+                    )))
+                }
+            }
+        }
+        pread(&self.file, buf, offset)
+    }
+
     /// Read chunk `c`'s raw payload with fault injection, checksum
     /// verification, bounded retry, and quarantine — the single gate
     /// between this store and the filesystem. Does not count a load.
     fn read_chunk_verified(&self, c: usize) -> Result<Vec<u8>> {
+        self.read_chunk_verified_opts(c, true)
+    }
+
+    /// [`ColumnStore::read_chunk_verified`] with quarantining optional:
+    /// the async prefetcher reads with `quarantine_on_exhaust = false`, so
+    /// a fault burst on the prefetch thread can only leave a chunk *cold*
+    /// — the demand path retries it from scratch with its own full retry
+    /// budget, instead of fast-failing on a prefetch-poisoned entry.
+    fn read_chunk_verified_opts(&self, c: usize, quarantine_on_exhaust: bool) -> Result<Vec<u8>> {
         if self.quarantine_lock().contains(&c) {
             return Err(HssrError::Corrupt(format!(
                 "{}: chunk {c} is quarantined after repeated read failures",
@@ -245,7 +389,7 @@ impl ColumnStore {
         let mut raw = vec![0u8; bytes];
         let mut attempt = 0u32;
         loop {
-            let read = pread(&self.file, &mut raw, offset).and_then(|()| {
+            let read = self.raw_read(&mut raw, offset).and_then(|()| {
                 if let Some(inj) = &self.faults {
                     // Bit flips are only injected when a checksum can
                     // catch them (v2) — see `FaultInjector::decide`.
@@ -286,10 +430,14 @@ impl ColumnStore {
             };
             attempt += 1;
             if attempt >= Self::MAX_READ_ATTEMPTS {
-                self.quarantine_lock().insert(c);
+                let note = if quarantine_on_exhaust {
+                    self.quarantine_lock().insert(c);
+                    "; chunk quarantined"
+                } else {
+                    ""
+                };
                 return Err(HssrError::Corrupt(format!(
-                    "{}: chunk {c} failed after {attempt} attempts — {failure}; \
-                     chunk quarantined",
+                    "{}: chunk {c} failed after {attempt} attempts — {failure}{note}",
                     self.name
                 )));
             }
@@ -332,18 +480,69 @@ impl ColumnStore {
         out
     }
 
+    /// Drain the cache's accumulated prefetch hit/waste tallies into the
+    /// atomic counters (called wherever the cache was just touched).
+    fn drain_prefetch_stats(&self, cache: &mut ChunkCache) {
+        let (hits, wasted) = cache.take_prefetch_stats();
+        self.counters.add_prefetch_stats(hits, wasted);
+    }
+
     /// Fetch chunk `c` through the cache (hit: LRU touch; miss: disk load
-    /// + insert with LRU eviction under the byte budget).
+    /// + insert with LRU eviction under the byte budget). A miss is a
+    /// *stall*: compute blocked on a synchronous disk read.
     fn chunk(&self, c: usize) -> Result<Arc<Vec<f64>>> {
-        if let Some(buf) = self.cache_lock().get(c) {
-            self.counters.add_hit();
-            return Ok(buf);
+        {
+            let mut cache = self.cache_lock();
+            if let Some(buf) = cache.get(c) {
+                self.drain_prefetch_stats(&mut cache);
+                drop(cache);
+                self.counters.add_hit();
+                return Ok(buf);
+            }
         }
+        self.counters.add_stall();
         let buf = Arc::new(self.load_chunk(c)?);
         let mut cache = self.cache_lock();
         cache.insert(c, Arc::clone(&buf));
         self.counters.note_resident(cache.resident() as u64);
+        self.drain_prefetch_stats(&mut cache);
         Ok(buf)
+    }
+
+    /// Fetch chunk `c` and **pin** it: the entry is exempt from LRU
+    /// eviction (its bytes still count against the budget) until the
+    /// matching [`ColumnStore::unpin_chunk`]. Like [`ColumnStore::chunk`],
+    /// a miss is a stall.
+    fn pin_chunk(&self, c: usize) -> Result<Arc<Vec<f64>>> {
+        {
+            let mut cache = self.cache_lock();
+            if let Some(buf) = cache.get(c) {
+                cache.pin(c);
+                self.drain_prefetch_stats(&mut cache);
+                drop(cache);
+                self.counters.add_hit();
+                return Ok(buf);
+            }
+        }
+        self.counters.add_stall();
+        let buf = Arc::new(self.load_chunk(c)?);
+        let mut cache = self.cache_lock();
+        cache.insert(c, Arc::clone(&buf));
+        cache.pin(c);
+        self.counters.note_resident(cache.resident() as u64);
+        self.drain_prefetch_stats(&mut cache);
+        Ok(buf)
+    }
+
+    /// Release one pin on chunk `c`.
+    fn unpin_chunk(&self, c: usize) {
+        self.cache_lock().unpin(c);
+    }
+
+    /// A pinned single-chunk cursor over store columns, for the inner
+    /// optimizers — see [`PinnedColumns`].
+    pub fn pin_cols(&self) -> PinnedColumns<'_> {
+        PinnedColumns { store: self, current: None }
     }
 
     /// Serve column `j` to `f`, counting the fetch. The slice holds the
@@ -379,14 +578,61 @@ impl ColumnStore {
         if wanted.is_empty() {
             return Ok(());
         }
-        let loaded: Vec<Result<Vec<f64>>> =
-            pool::global().map(wanted.len(), |k| self.load_chunk(wanted[k]));
+        let loaded: Vec<Result<Vec<f64>>> = pool::global().map(wanted.len(), |k| {
+            // The scan blocks on these reads — they are demand stalls,
+            // unlike the async λ-ahead loads in `prefetch_tagged`.
+            self.counters.add_stall();
+            self.load_chunk(wanted[k])
+        });
         let mut cache = self.cache_lock();
         for (c, buf) in wanted.into_iter().zip(loaded) {
             cache.insert(c, Arc::new(buf?));
         }
         self.counters.note_resident(cache.resident() as u64);
+        self.drain_prefetch_stats(&mut cache);
         Ok(())
+    }
+
+    /// Asynchronous-path prefetch, called from the [`Prefetcher`] thread:
+    /// load the uncached chunks covering `cols` and insert them *tagged*
+    /// via the budget-refusing [`ChunkCache::insert_prefetched`]. Reads do
+    /// not quarantine on retry exhaustion, and every error is swallowed —
+    /// a failed prefetch just leaves the chunk cold for the demand path.
+    pub(crate) fn prefetch_tagged(&self, cols: &[usize]) {
+        let mut wanted: Vec<usize> = Vec::new();
+        {
+            let cache = self.cache_lock();
+            let chunk_bytes = self.header.chunk_bytes(0).max(1);
+            // Only what fits beside the pinned bytes is worth fetching.
+            let free = cache.budget().saturating_sub(cache.pinned_bytes());
+            let capacity = free / chunk_bytes;
+            for &j in cols {
+                let c = j / self.header.chunk_cols;
+                if wanted.len() >= capacity {
+                    break;
+                }
+                if !cache.contains(c) && !wanted.contains(&c) {
+                    wanted.push(c);
+                }
+            }
+        }
+        for c in wanted {
+            let Ok(raw) = self.read_chunk_verified_opts(c, false) else {
+                continue;
+            };
+            self.counters.add_load(raw.len() as u64);
+            let buf = Arc::new(self.decode_chunk(c, &raw));
+            let mut cache = self.cache_lock();
+            if cache.insert_prefetched(c, buf) {
+                self.counters.add_prefetch_issued();
+            } else {
+                // Loaded but not admitted (everything else pinned): pure
+                // waste, visible as such.
+                self.counters.add_prefetch_stats(0, 1);
+            }
+            self.counters.note_resident(cache.resident() as u64);
+            self.drain_prefetch_stats(&mut cache);
+        }
     }
 
     /// Scan `out[k] = x_{idx[k]}ᵀ v / n` against the store: prefetch the
@@ -434,6 +680,115 @@ impl ColumnStore {
             name: self.name.clone(),
             truth: None,
         })
+    }
+}
+
+/// A pinned single-chunk cursor serving store columns to an inner solver.
+///
+/// The chunk under the cursor is pinned (exempt from LRU eviction, bytes
+/// still budgeted); moving to a column in a different chunk swaps the pin
+/// — release old, pin new — so at most **one** chunk is ever pinned per
+/// cursor, which is what lets a full fit run under a one-chunk cache
+/// budget. Backward moves (e.g. group descent's second pass over a group
+/// straddling a chunk boundary) are just another swap.
+///
+/// Columns served here count as `solver_cols`, not `cols_fetched`, so the
+/// scan-accounting invariant (`cols_fetched == cols_scanned`) is
+/// unaffected by solver traffic. Dropping the cursor releases its pin.
+pub struct PinnedColumns<'s> {
+    store: &'s ColumnStore,
+    current: Option<(usize, Arc<Vec<f64>>)>,
+}
+
+impl PinnedColumns<'_> {
+    /// Rows served per column.
+    pub fn nrows(&self) -> usize {
+        self.store.header.n
+    }
+
+    /// Serve standardized column `j`, pinning its chunk (swapping the
+    /// previous pin if `j` lives elsewhere). Counts a `solver_col`.
+    pub fn col(&mut self, j: usize) -> Result<&[f64]> {
+        let h = &self.store.header;
+        debug_assert!(j < h.p);
+        let c = j / h.chunk_cols;
+        if self.current.as_ref().map(|(cur, _)| *cur) != Some(c) {
+            if let Some((old, _)) = self.current.take() {
+                self.store.unpin_chunk(old);
+            }
+            let buf = self.store.pin_chunk(c)?;
+            self.current = Some((c, buf));
+        }
+        self.store.counters.add_solver_col();
+        let buf = self
+            .current
+            .as_ref()
+            .map(|(_, b)| b)
+            .ok_or_else(|| HssrError::Config("pinned cursor lost its chunk".into()))?;
+        let off = (j - c * h.chunk_cols) * h.n;
+        Ok(&buf[off..off + h.n])
+    }
+}
+
+impl Drop for PinnedColumns<'_> {
+    fn drop(&mut self) {
+        if let Some((c, _)) = self.current.take() {
+            self.store.unpin_chunk(c);
+        }
+    }
+}
+
+/// The async λ-ahead prefetch service: a dedicated thread that loads the
+/// chunks of the *next* λ's SSR-predicted working set while the current
+/// inner solve runs on the main/pool threads.
+///
+/// Requests coalesce — only the newest matters, since a stale working-set
+/// prediction is worthless once the driver has moved on. All I/O errors
+/// are swallowed on this thread (see [`ColumnStore::prefetch_tagged`]):
+/// prefetch can make a fit faster, never wrong. Dropping the service
+/// closes the channel and joins the thread.
+pub struct Prefetcher {
+    tx: Option<mpsc::Sender<Vec<usize>>>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Prefetcher {
+    /// Spawn the prefetch thread over a shared store handle.
+    pub fn spawn(store: Arc<ColumnStore>) -> Prefetcher {
+        let (tx, rx) = mpsc::channel::<Vec<usize>>();
+        let handle = std::thread::Builder::new()
+            .name("hssr-prefetch".into())
+            .spawn(move || {
+                while let Ok(mut job) = rx.recv() {
+                    // Coalesce to the newest request.
+                    while let Ok(next) = rx.try_recv() {
+                        job = next;
+                    }
+                    store.prefetch_tagged(&job);
+                }
+            })
+            .ok();
+        Prefetcher { tx: Some(tx), handle }
+    }
+
+    /// Queue a column set for background prefetch (non-blocking; a send
+    /// to a dead thread is silently dropped).
+    pub fn request(&self, cols: &[usize]) {
+        if cols.is_empty() {
+            return;
+        }
+        if let Some(tx) = &self.tx {
+            let _ = tx.send(cols.to_vec());
+        }
+    }
+}
+
+impl Drop for Prefetcher {
+    fn drop(&mut self) {
+        self.tx.take();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
     }
 }
 
@@ -629,5 +984,65 @@ mod tests {
         assert!(store.counters().retries() > 0, "faults were never injected");
         let back = store.to_dataset().unwrap();
         assert_eq!(back.x.as_slice(), ds.x.as_slice());
+    }
+
+    /// The pinned cursor serves bit-identical columns under a one-chunk
+    /// budget, counts them as solver traffic (not scan traffic), and
+    /// never lets the cache outgrow the budget.
+    #[test]
+    fn pinned_cursor_serves_exact_columns_within_budget() {
+        let ds = DataSpec::synthetic(16, 30, 3).generate(9);
+        let path = tmp("pin.store");
+        write_dataset(&ds, 4, &path).unwrap();
+        let budget = 4 * 16 * 8; // exactly one chunk
+        let store = ColumnStore::open(&path, budget).unwrap();
+        {
+            let mut cur = store.pin_cols();
+            // Ascending walk, then a backward move (GD's second pass).
+            for j in (0..30).chain([2usize, 17]) {
+                let col = cur.col(j).unwrap().to_vec();
+                assert_eq!(col.as_slice(), ds.x.col(j), "column {j} drifted");
+            }
+        }
+        assert_eq!(store.counters().cols_fetched(), 0, "solver traffic leaked into scans");
+        assert_eq!(store.counters().solver_cols(), 32);
+        assert!(store.counters().stalls() >= 8);
+        assert!(store.counters().peak_resident() <= budget as u64);
+        // The cursor dropped: nothing left pinned, inserts evict freely.
+        assert_eq!(store.cache_lock().pinned_bytes(), 0);
+    }
+
+    /// Tagged prefetch fills the cache without quarantining on failure,
+    /// and demand use of prefetched chunks shows up as hits.
+    #[test]
+    fn tagged_prefetch_feeds_demand_hits() {
+        let ds = DataSpec::synthetic(12, 16, 2).generate(10);
+        let path = tmp("tagpf.store");
+        write_dataset(&ds, 4, &path).unwrap();
+        let store = ColumnStore::open(&path, 1 << 20).unwrap();
+        store.prefetch_tagged(&(0..16).collect::<Vec<_>>());
+        assert_eq!(store.counters().prefetch_issued(), 4);
+        let v = vec![1.0; 12];
+        let mut out = vec![0.0; 16];
+        store.scan_subset(&v, &(0..16).collect::<Vec<_>>(), &mut out).unwrap();
+        assert_eq!(store.counters().prefetch_hits(), 4);
+        assert_eq!(store.counters().stalls(), 0, "prefetched scan still stalled");
+    }
+
+    /// The background prefetcher loads chunks while the requester does
+    /// other work; requests on a dropped store thread are harmless.
+    #[test]
+    fn background_prefetcher_loads_chunks() {
+        let ds = DataSpec::synthetic(12, 16, 2).generate(11);
+        let path = tmp("bgpf.store");
+        write_dataset(&ds, 4, &path).unwrap();
+        let store = Arc::new(ColumnStore::open(&path, 1 << 20).unwrap());
+        let pf = Prefetcher::spawn(Arc::clone(&store));
+        pf.request(&(0..16).collect::<Vec<_>>());
+        drop(pf); // joins the thread → all requested work done
+        assert_eq!(store.counters().prefetch_issued(), 4);
+        let col = store.with_col(5, |c| c.to_vec()).unwrap();
+        assert_eq!(col.as_slice(), ds.x.col(5));
+        assert_eq!(store.counters().stalls(), 0);
     }
 }

@@ -3,7 +3,7 @@
 //! ```text
 //! hssr fit   [--data synth|gene|mnist|gwas|nyt] [--n N] [--p P] [--rule METHOD]
 //!            [--alpha A] [--nlambda K] [--lmin-ratio R] [--seed S]
-//!            [--engine native|pjrt|ooc] [--cache-mb M]
+//!            [--engine native|pjrt|ooc] [--cache-mb M] [--prefetch]
 //!            [--checkpoint file.ckpt]   # crash-resumable λ-path
 //! hssr group [--data synth|grvs|spline] [--groups G] [--gsize W] [--rule METHOD]
 //!            [--alpha A]                              # group elastic net when A < 1
@@ -209,6 +209,16 @@ fn cmd_fit(cfg: &Config) -> Result<()> {
             c.peak_resident() as f64 / 1e6,
             e.store().budget_bytes() as f64 / 1e6,
             e.store().header().matrix_bytes() as f64 / 1e6,
+        );
+        println!(
+            "ooc solver: {} cols pinned-served, {} demand stalls; prefetch {} \
+             issued, {} hits, {} wasted{}",
+            c.solver_cols(),
+            c.stalls(),
+            c.prefetch_issued(),
+            c.prefetch_hits(),
+            c.prefetch_wasted(),
+            if e.prefetch_enabled() { "" } else { " (prefetch off)" },
         );
         println!(
             "ooc faults: {} read retries, {} checksum failures, {} short reads",
@@ -467,6 +477,12 @@ fn main() {
         }
         std::env::set_var("HSSR_FAULTS", spec);
         eprintln!("fault injection armed: {spec}");
+    }
+    // `--prefetch` turns on the async λ-ahead chunk prefetcher for
+    // `--engine ooc` fits — equivalent to HSSR_PREFETCH=1, which the
+    // out-of-core engine reads when it mounts the store.
+    if cfg.get_bool("prefetch", false) {
+        std::env::set_var("HSSR_PREFETCH", "1");
     }
     let result = match cmd.as_str() {
         "fit" => cmd_fit(&cfg),

@@ -67,6 +67,21 @@ pub trait ScanEngine {
     /// `out[j] = x_jᵀ v / n` over all columns.
     fn scan_all(&self, x: &DenseMatrix, v: &[f64], out: &mut [f64]) -> Result<()>;
 
+    /// The disk-backed column store this engine serves scans from, if
+    /// any. A `Some` return is the signal for the inner optimizers to run
+    /// store-backed (pinned chunk cursors instead of resident columns) —
+    /// see [`crate::solver::columns::ColSource`]. Default: `None` (the
+    /// engine computes on the resident design).
+    fn column_store(&self) -> Option<&crate::data::store::ColumnStore> {
+        None
+    }
+
+    /// Hint that `cols` will be wanted soon (the next λ's SSR-predicted
+    /// working set): a store-backed engine with an async prefetcher hands
+    /// the set to its background thread. Default: no-op — prefetch is an
+    /// overlap optimization, never a correctness requirement.
+    fn prefetch_columns(&self, _cols: &[usize]) {}
+
     /// Fused screening pass at one λ step: apply the point-wise safe
     /// predicate `keep` (when given), lazily refresh stale `z_j`, and
     /// classify survivors against the SSR threshold — see

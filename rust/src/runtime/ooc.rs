@@ -11,11 +11,21 @@
 //! report *real* I/O per rule: disk chunk loads, bytes read, cache hits,
 //! and peak resident bytes, all bounded by the `HSSR_CACHE_MB` budget.
 //!
-//! Because the inner optimizers (CD/GD/IRLS) intentionally run on the
-//! resident strong-set columns, an OOC fit still receives the design
-//! matrix; the engine cross-checks its shape and serves every *scan* from
-//! the store, exactly like the accounting-only
-//! [`crate::data::chunked::ChunkedScanEngine`] it generalizes.
+//! The inner optimizers (CD/GD/IRLS) run **on the store too**: when a fit
+//! sees [`ScanEngine::column_store`] return `Some`, it routes coordinate
+//! updates through a pinned single-chunk cursor
+//! ([`crate::data::store::PinnedColumns`]) instead of resident strong-set
+//! columns, so `--engine ooc` fits — not just scans — out-of-core, with
+//! peak resident bytes bounded by the cache budget. The engine still
+//! receives the design matrix for shape cross-checks (and because spills
+//! are created *from* it), but no solver or scan path reads its columns.
+//!
+//! With prefetch enabled (`--prefetch` / `HSSR_PREFETCH=1`), the engine
+//! additionally owns a [`crate::data::store::Prefetcher`]: the driver
+//! hands it the next λ's SSR-predicted working set via
+//! [`ScanEngine::prefetch_columns`] while the current inner solve runs,
+//! hiding chunk-read latency behind compute — measured by the
+//! `stalls`/`prefetch_*` counters, never assumed.
 //!
 //! Setting `HSSR_ENGINE=ooc` reroutes the default-engine `fit_*` shims
 //! through a spilled store (see [`env_engine_for`]) — this is how CI runs
@@ -23,9 +33,10 @@
 
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 use super::ScanEngine;
-use crate::data::store::{self, ColumnStore};
+use crate::data::store::{self, ColumnStore, Prefetcher};
 use crate::error::Result;
 use crate::linalg::DenseMatrix;
 
@@ -41,23 +52,61 @@ impl Drop for TempSpill {
     }
 }
 
-/// A [`ScanEngine`] serving scans from a disk-backed [`ColumnStore`].
+/// A [`ScanEngine`] serving scans — and, via pinned chunk cursors, the
+/// inner solvers — from a disk-backed [`ColumnStore`].
 pub struct OocEngine {
-    store: ColumnStore,
+    /// Shared so the async [`Prefetcher`] thread can read alongside the
+    /// fit.
+    store: Arc<ColumnStore>,
+    /// The λ-ahead prefetch service, when enabled. Declared before
+    /// `_cleanup` so its Drop joins the reader thread while the spill
+    /// file is still alive.
+    prefetcher: Option<Prefetcher>,
     // Field order matters: dropped after `store` releases the handle.
     _cleanup: Option<TempSpill>,
 }
 
 impl OocEngine {
     /// Mount an existing store file with an explicit cache budget
-    /// (bytes).
+    /// (bytes). `HSSR_PREFETCH=1` enables the async prefetcher.
     pub fn open(path: &Path, budget_bytes: usize) -> Result<OocEngine> {
-        Ok(OocEngine { store: ColumnStore::open(path, budget_bytes)?, _cleanup: None })
+        let engine = OocEngine {
+            store: Arc::new(ColumnStore::open(path, budget_bytes)?),
+            prefetcher: None,
+            _cleanup: None,
+        };
+        Ok(engine.auto_prefetch())
     }
 
-    /// Wrap an already-open store.
+    /// Wrap an already-open store. `HSSR_PREFETCH=1` enables the async
+    /// prefetcher here too.
     pub fn from_store(store: ColumnStore) -> OocEngine {
-        OocEngine { store, _cleanup: None }
+        let engine =
+            OocEngine { store: Arc::new(store), prefetcher: None, _cleanup: None };
+        engine.auto_prefetch()
+    }
+
+    /// Spawn the λ-ahead prefetch thread (idempotent). The driver feeds
+    /// it through [`ScanEngine::prefetch_columns`].
+    pub fn enable_prefetch(&mut self) {
+        if self.prefetcher.is_none() {
+            self.prefetcher = Some(Prefetcher::spawn(Arc::clone(&self.store)));
+        }
+    }
+
+    /// Whether the async prefetcher is running.
+    pub fn prefetch_enabled(&self) -> bool {
+        self.prefetcher.is_some()
+    }
+
+    fn auto_prefetch(mut self) -> OocEngine {
+        if matches!(
+            std::env::var("HSSR_PREFETCH").as_deref(),
+            Ok("1") | Ok("true") | Ok("on")
+        ) {
+            self.enable_prefetch();
+        }
+        self
     }
 
     /// Spill an in-memory (standardized) design to a fresh store file
@@ -128,6 +177,16 @@ impl ScanEngine for OocEngine {
         let idx: Vec<usize> = (0..self.store.ncols()).collect();
         self.scan_subset(x, v, &idx, out)
     }
+
+    fn column_store(&self) -> Option<&ColumnStore> {
+        Some(&self.store)
+    }
+
+    fn prefetch_columns(&self, cols: &[usize]) {
+        if let Some(pf) = &self.prefetcher {
+            pf.request(cols);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -164,6 +223,27 @@ mod tests {
         assert_eq!(sa, vec![b[3], b[17], b[88]]);
         assert_eq!(ooc.store().counters().cols_fetched(), 93);
         assert!(ooc.store().counters().bytes_read() > 0);
+    }
+
+    /// `prefetch_columns` hands the set to the background service, which
+    /// fills the cache without any demand stall; the engine advertises
+    /// its store to the solver layer.
+    #[test]
+    fn prefetch_columns_feeds_the_background_service() {
+        let ds = DataSpec::synthetic(20, 24, 3).generate(11);
+        let mut ooc = OocEngine::spill(&ds.x, &ds.y, 1 << 20).unwrap();
+        assert!(ooc.column_store().is_some(), "ooc must advertise its store");
+        ooc.enable_prefetch();
+        assert!(ooc.prefetch_enabled());
+        ooc.prefetch_columns(&(0..24).collect::<Vec<_>>());
+        // The service is async: wait (bounded) for it to drain the job.
+        for _ in 0..400 {
+            if ooc.store().counters().prefetch_issued() >= 1 {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        assert!(ooc.store().counters().prefetch_issued() >= 1, "prefetcher never ran");
     }
 
     #[test]

@@ -27,8 +27,32 @@ struct Frozen {
 }
 
 impl Frozen {
-    /// Freeze rule (10) at the previous solution. `O(np)` (one scan).
+    /// Freeze rule (10) at the previous solution. `O(np)` (one scan, via
+    /// the in-process blocked kernels — the unrouted path).
+    #[cfg(test)]
     fn build(x: &DenseMatrix, ctx: &SafeContext, prev: &PrevSolution<'_>) -> Option<Frozen> {
+        // The in-process blocked scan cannot fail.
+        match Frozen::build_with(ctx, prev, |z| {
+            blocked::scan_all(x, prev.r, z);
+            Ok(())
+        }) {
+            Ok(Some((f, _))) => Some(f),
+            _ => None,
+        }
+    }
+
+    /// Freeze-time body with the `O(np)` scan abstracted: `scan` fills
+    /// `z = Xᵀr/n`; the second return value is the number of columns that
+    /// pass read (0 when freezing is impossible), so routed callers can
+    /// account the traffic.
+    fn build_with<F>(
+        ctx: &SafeContext,
+        prev: &PrevSolution<'_>,
+        scan: F,
+    ) -> crate::error::Result<Option<(Frozen, u64)>>
+    where
+        F: FnOnce(&mut [f64]) -> crate::error::Result<()>,
+    {
         let n = ctx.n as f64;
         let mut xb_sq = 0.0;
         let mut a = 0.0;
@@ -38,10 +62,10 @@ impl Frozen {
             a += yi * f;
         }
         if xb_sq < 1e-12 {
-            return None; // no solution mass yet; cannot freeze
+            return Ok(None); // no solution mass yet; cannot freeze
         }
         let mut z = vec![0.0; ctx.p];
-        blocked::scan_all(x, prev.r, &mut z);
+        scan(&mut z)?;
         let mut u = Vec::with_capacity(ctx.p);
         let mut w = Vec::with_capacity(ctx.p);
         for j in 0..ctx.p {
@@ -51,7 +75,7 @@ impl Frozen {
             w.push(ctx.xty[j] - a * xjxb / xb_sq);
         }
         let rhs_root = (n * ctx.y_sq - n * a * a / xb_sq).max(0.0).sqrt();
-        Some(Frozen { lam_ref: prev.lambda, u, w, rhs_root })
+        Ok(Some((Frozen { lam_ref: prev.lambda, u, w, rhs_root }, ctx.p as u64)))
     }
 
     /// `O(p)` evaluation at `lam < lam_ref`.
@@ -92,6 +116,62 @@ impl BedppThenFrozenSedpp {
     pub fn is_frozen(&self) -> bool {
         self.frozen.is_some()
     }
+
+    /// Phase machine shared by the dense and engine-routed screens. `scan`
+    /// fills `z = Xᵀr/n` at freeze time; `scanned` receives the columns it
+    /// read. Every other phase — BEDPP, the frozen rule — is `O(p)` over
+    /// precomputed constants and reads no columns.
+    fn screen_core<F>(
+        &mut self,
+        ctx: &SafeContext,
+        prev: &PrevSolution<'_>,
+        lam_next: f64,
+        survive: &mut [bool],
+        scan: F,
+        scanned: &mut u64,
+    ) -> crate::error::Result<usize>
+    where
+        F: FnOnce(&mut [f64]) -> crate::error::Result<()>,
+    {
+        if self.dead {
+            return Ok(0);
+        }
+        if self.bedpp_alive {
+            let d = Bedpp::screen_at(ctx, lam_next, survive);
+            if d > 0 {
+                return Ok(d);
+            }
+            // BEDPP just died — re-hybridize by freezing SEDPP here. The
+            // frozen rule is rule (10), which is derived for the lasso
+            // only (the enet's augmented design varies with λ), so under
+            // an elastic-net penalty we simply shut off like plain BEDPP.
+            self.bedpp_alive = false;
+            self.frozen = if matches!(ctx.penalty, crate::solver::Penalty::Lasso) {
+                match Frozen::build_with(ctx, prev, scan)? {
+                    Some((f, cols)) => {
+                        *scanned += cols;
+                        Some(f)
+                    }
+                    None => None,
+                }
+            } else {
+                None
+            };
+            if self.frozen.is_none() {
+                self.dead = true;
+                return Ok(0);
+            }
+        }
+        let frozen = self.frozen.as_ref().expect("frozen phase");
+        let d = frozen.screen_at(ctx, lam_next, survive);
+        if d == 0 {
+            // The frozen rule's power decays too; once it discards nothing
+            // it never will again at smaller λ-to-λ_ref gaps that only grow,
+            // so shut off (Algorithm 1 Flag semantics).
+            self.dead = true;
+        }
+        Ok(d)
+    }
 }
 
 impl SafeRule for BedppThenFrozenSedpp {
@@ -107,38 +187,56 @@ impl SafeRule for BedppThenFrozenSedpp {
         lam_next: f64,
         survive: &mut [bool],
     ) -> usize {
-        if self.dead {
-            return 0;
-        }
-        if self.bedpp_alive {
-            let d = Bedpp::screen_at(ctx, lam_next, survive);
-            if d > 0 {
-                return d;
-            }
-            // BEDPP just died — re-hybridize by freezing SEDPP here. The
-            // frozen rule is rule (10), which is derived for the lasso
-            // only (the enet's augmented design varies with λ), so under
-            // an elastic-net penalty we simply shut off like plain BEDPPP.
-            self.bedpp_alive = false;
-            self.frozen = if matches!(ctx.penalty, crate::solver::Penalty::Lasso) {
-                Frozen::build(x, ctx, prev)
-            } else {
-                None
-            };
-            if self.frozen.is_none() {
-                self.dead = true;
-                return 0;
-            }
-        }
-        let frozen = self.frozen.as_ref().expect("frozen phase");
-        let d = frozen.screen_at(ctx, lam_next, survive);
-        if d == 0 {
-            // The frozen rule's power decays too; once it discards nothing
-            // it never will again at smaller λ-to-λ_ref gaps that only grow,
-            // so shut off (Algorithm 1 Flag semantics).
-            self.dead = true;
-        }
-        d
+        let mut scanned = 0u64;
+        // The in-process blocked scan cannot fail.
+        self.screen_core(
+            ctx,
+            prev,
+            lam_next,
+            survive,
+            |z| {
+                blocked::scan_all(x, prev.r, z);
+                Ok(())
+            },
+            &mut scanned,
+        )
+        .unwrap_or(0)
+    }
+
+    fn screen_routed(
+        &mut self,
+        engine: &dyn crate::runtime::ScanEngine,
+        x: &DenseMatrix,
+        ctx: &SafeContext,
+        prev: &PrevSolution<'_>,
+        lam_next: f64,
+        survive: &mut [bool],
+        scanned: &mut u64,
+    ) -> crate::error::Result<usize> {
+        self.screen_core(
+            ctx,
+            prev,
+            lam_next,
+            survive,
+            |z| engine.scan_all(x, prev.r, z),
+            scanned,
+        )
+    }
+
+    fn plan_routed<'s>(
+        &'s mut self,
+        engine: &dyn crate::runtime::ScanEngine,
+        x: &DenseMatrix,
+        ctx: &'s SafeContext,
+        prev: &PrevSolution<'_>,
+        lam_next: f64,
+        survive: &mut [bool],
+        masked_discards: &mut usize,
+        scanned: &mut u64,
+    ) -> crate::error::Result<Option<Box<dyn Fn(usize) -> bool + Sync + 's>>> {
+        *masked_discards =
+            self.screen_routed(engine, x, ctx, prev, lam_next, survive, scanned)?;
+        Ok(None)
     }
 
     fn dead(&self) -> bool {

@@ -36,12 +36,36 @@ impl Sedpp {
         lam_next: f64,
         survive: &mut [bool],
     ) -> usize {
+        // The in-process blocked scan cannot fail.
+        self.screen_core(ctx, prev, lam_next, survive, |scratch| {
+            blocked::scan_all(x, prev.r, scratch);
+            Ok(())
+        })
+        .map_or(0, |(d, _)| d)
+    }
+
+    /// Shared decision body of rule (10). `scan` fills `scratch` with
+    /// `z = Xᵀr/n` when the rule actually needs its `O(np)` pass; the
+    /// second return value is the number of columns that pass read (0 on
+    /// the BEDPP-fallback and dead-RHS branches), so routed callers can
+    /// account the traffic exactly.
+    fn screen_core<F>(
+        &mut self,
+        ctx: &SafeContext,
+        prev: &PrevSolution<'_>,
+        lam_next: f64,
+        survive: &mut [bool],
+        scan: F,
+    ) -> crate::error::Result<(usize, u64)>
+    where
+        F: FnOnce(&mut [f64]) -> crate::error::Result<()>,
+    {
         // Rule (10) is derived for the lasso. For the elastic net the
         // augmented design X̃ depends on λ itself, so the sequential form
         // does not carry over (the paper, like Wang et al., derives only
         // the *basic* EDPP rule for the enet — Thm 4.1); fall back to it.
         if !matches!(ctx.penalty, crate::solver::Penalty::Lasso) {
-            return Bedpp::screen_at(ctx, lam_next, survive);
+            return Ok((Bedpp::screen_at(ctx, lam_next, survive), 0));
         }
         let n = ctx.n as f64;
         // Xβ̂ = y − r, ‖Xβ̂‖², a = yᵀXβ̂ — all O(n).
@@ -54,17 +78,17 @@ impl Sedpp {
         }
         if xb_sq < 1e-12 {
             // β̂(λ_k) = 0 ⇒ k = 0 case: BEDPP at lam_next.
-            return Bedpp::screen_at(ctx, lam_next, survive);
+            return Ok((Bedpp::screen_at(ctx, lam_next, survive), 0));
         }
         let lam_k = prev.lambda;
         let c = (lam_k - lam_next) / (lam_k * lam_next);
         let rhs = n - 0.5 * c * (n * ctx.y_sq - n * a * a / xb_sq).max(0.0).sqrt();
         if rhs <= 0.0 {
-            return 0;
+            return Ok((0, 0));
         }
         // z_j = x_jᵀ r / n for all features: the O(np) scan.
         self.scratch.resize(ctx.p, 0.0);
-        blocked::scan_all(x, prev.r, &mut self.scratch);
+        scan(&mut self.scratch)?;
         let mut discarded = 0;
         for j in 0..ctx.p {
             if !survive[j] {
@@ -78,7 +102,7 @@ impl Sedpp {
                 discarded += 1;
             }
         }
-        discarded
+        Ok((discarded, ctx.p as u64))
     }
 }
 
@@ -101,6 +125,47 @@ impl SafeRule for Sedpp {
         // |S| = p test.
         self.dead = d == 0;
         d
+    }
+
+    /// Engine-routed screen: the rule's in-rule `O(np)` pass dispatches
+    /// through `engine` — a chunked or out-of-core engine both serves and
+    /// counts the reads — and `*scanned` gains `p` exactly when the pass
+    /// ran (the BEDPP-fallback and dead-RHS branches read no columns).
+    fn screen_routed(
+        &mut self,
+        engine: &dyn crate::runtime::ScanEngine,
+        x: &DenseMatrix,
+        ctx: &SafeContext,
+        prev: &PrevSolution<'_>,
+        lam_next: f64,
+        survive: &mut [bool],
+        scanned: &mut u64,
+    ) -> crate::error::Result<usize> {
+        let (d, cols) = self.screen_core(ctx, prev, lam_next, survive, |scratch| {
+            engine.scan_all(x, prev.r, scratch)
+        })?;
+        *scanned += cols;
+        self.dead = d == 0;
+        Ok(d)
+    }
+
+    /// Engine-routed plan: SEDPP always screens into the mask (its test is
+    /// not point-wise in per-fit precomputes), so the fused pipeline takes
+    /// the scan-then-filter path with the scan routed and accounted.
+    fn plan_routed<'s>(
+        &'s mut self,
+        engine: &dyn crate::runtime::ScanEngine,
+        x: &DenseMatrix,
+        ctx: &'s SafeContext,
+        prev: &PrevSolution<'_>,
+        lam_next: f64,
+        survive: &mut [bool],
+        masked_discards: &mut usize,
+        scanned: &mut u64,
+    ) -> crate::error::Result<Option<Box<dyn Fn(usize) -> bool + Sync + 's>>> {
+        *masked_discards =
+            self.screen_routed(engine, x, ctx, prev, lam_next, survive, scanned)?;
+        Ok(None)
     }
 
     fn dead(&self) -> bool {

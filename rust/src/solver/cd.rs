@@ -10,9 +10,17 @@
 //!
 //! The residual is maintained exactly, so `x_jᵀr/n` quantities seen by the
 //! screening rules and the KKT checker always refer to the current iterate.
+//!
+//! The loop body is generic over [`ColAccess`]
+//! ([`cd_cycle_on`]/[`cd_solve_on`]): the same updates run on the
+//! resident design or, for `--engine ooc`, on a pinned store cursor —
+//! bit-identical either way, since a spilled store serves the exact
+//! standardized bytes. The historical dense entry points
+//! ([`cd_cycle`]/[`cd_solve`]) are thin infallible wrappers.
 
 use crate::error::{HssrError, Result};
 use crate::linalg::{ops, DenseMatrix};
+use crate::solver::columns::{ColAccess, DenseCols};
 use crate::solver::Penalty;
 
 /// Statistics from one inner-solver invocation.
@@ -24,22 +32,25 @@ pub struct CdStats {
     pub coord_updates: u64,
 }
 
-/// One full coordinate cycle over `active`. Returns the largest |Δβ_j|.
-pub fn cd_cycle(
-    x: &DenseMatrix,
+/// One full coordinate cycle over `active`, served by any column source
+/// (`active` must be ascending, which every caller's working set is — a
+/// pinned store cursor then swaps each chunk at most once per cycle).
+/// Returns the largest |Δβ_j|; `Err` only from a store-backed source.
+pub fn cd_cycle_on<C: ColAccess>(
+    cols: &mut C,
     penalty: Penalty,
     lam: f64,
     active: &[usize],
     beta: &mut [f64],
     r: &mut [f64],
-) -> f64 {
-    let n_inv = 1.0 / x.nrows() as f64;
+) -> Result<f64> {
+    let n_inv = 1.0 / cols.nrows() as f64;
     let alpha = penalty.alpha();
     let thresh = alpha * lam;
     let denom = 1.0 + penalty.l2_weight() * lam;
     let mut max_delta = 0.0f64;
     for &j in active {
-        let col = x.col(j);
+        let col = cols.col(j)?;
         let z = ops::dot(col, r) * n_inv + beta[j];
         let b_new = ops::soft_threshold(z, thresh) / denom;
         let delta = b_new - beta[j];
@@ -49,13 +60,29 @@ pub fn cd_cycle(
             max_delta = max_delta.max(delta.abs());
         }
     }
-    max_delta
+    Ok(max_delta)
 }
 
-/// Iterate [`cd_cycle`] until the largest coefficient change falls below
-/// `tol` (or error after `max_iter` cycles).
-pub fn cd_solve(
+/// One full coordinate cycle over `active` on the resident design.
+/// Returns the largest |Δβ_j|.
+pub fn cd_cycle(
     x: &DenseMatrix,
+    penalty: Penalty,
+    lam: f64,
+    active: &[usize],
+    beta: &mut [f64],
+    r: &mut [f64],
+) -> f64 {
+    // The dense source never errs.
+    cd_cycle_on(&mut DenseCols::new(x), penalty, lam, active, beta, r)
+        .unwrap_or(f64::NAN)
+}
+
+/// Iterate [`cd_cycle_on`] until the largest coefficient change falls
+/// below `tol` (or error after `max_iter` cycles).
+#[allow(clippy::too_many_arguments)]
+pub fn cd_solve_on<C: ColAccess>(
+    cols: &mut C,
     penalty: Penalty,
     lam: f64,
     active: &[usize],
@@ -71,7 +98,7 @@ pub fn cd_solve(
     }
     let mut last_delta = f64::INFINITY;
     for _ in 0..max_iter {
-        last_delta = cd_cycle(x, penalty, lam, active, beta, r);
+        last_delta = cd_cycle_on(cols, penalty, lam, active, beta, r)?;
         stats.cycles += 1;
         stats.coord_updates += active.len() as u64;
         if !last_delta.is_finite() {
@@ -97,6 +124,32 @@ pub fn cd_solve(
         }
     }
     Err(HssrError::NoConvergence { lambda_index, max_iter, last_delta })
+}
+
+/// [`cd_solve_on`] over the resident design — the historical entry point.
+#[allow(clippy::too_many_arguments)]
+pub fn cd_solve(
+    x: &DenseMatrix,
+    penalty: Penalty,
+    lam: f64,
+    active: &[usize],
+    beta: &mut [f64],
+    r: &mut [f64],
+    tol: f64,
+    max_iter: usize,
+    lambda_index: usize,
+) -> Result<CdStats> {
+    cd_solve_on(
+        &mut DenseCols::new(x),
+        penalty,
+        lam,
+        active,
+        beta,
+        r,
+        tol,
+        max_iter,
+        lambda_index,
+    )
 }
 
 #[cfg(test)]

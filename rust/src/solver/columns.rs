@@ -1,0 +1,175 @@
+//! Column sources for the inner optimizers: resident design vs pinned
+//! store cursor.
+//!
+//! The inner loops (CD, blockwise GD, weighted CD inside IRLS) only ever
+//! need *one column at a time*, walked in ascending working-set order.
+//! [`ColAccess`] captures exactly that contract, so the same generic loop
+//! body ([`crate::solver::cd::cd_solve_on`], …) runs either on the
+//! resident [`DenseMatrix`] ([`DenseCols`], infallible) or directly on a
+//! disk-backed [`crate::data::store::ColumnStore`] through a pinned
+//! single-chunk cursor ([`StoreCols`]) — the chunk under the cursor is
+//! exempt from LRU eviction and swapped as the walk advances, so a full
+//! fit completes under a one-chunk cache budget with peak resident bytes
+//! ≤ budget.
+//!
+//! Served values are **bit-identical** across sources: spilled stores
+//! hold the exact standardized bytes of the design, so every dot/axpy in
+//! the inner loops sees the same numbers in the same order. The only
+//! difference is fallibility (disk reads can fail) and accounting (store
+//! columns count as `solver_cols`).
+//!
+//! [`ColSource::for_engine`] picks the source the way the fits do: a
+//! store-advertising engine ([`ScanEngine::column_store`]) gets the
+//! pinned cursor, every other engine the resident design.
+
+use crate::data::store::{ColumnStore, PinnedColumns};
+use crate::error::Result;
+use crate::linalg::{ops, DenseMatrix};
+use crate::runtime::ScanEngine;
+
+/// One-column-at-a-time access to the standardized design.
+pub trait ColAccess {
+    /// Rows per column.
+    fn nrows(&self) -> usize;
+
+    /// Serve standardized column `j`. `&mut` because a store-backed
+    /// source moves its pinned chunk; the dense source never fails.
+    fn col(&mut self, j: usize) -> Result<&[f64]>;
+}
+
+/// Resident columns of a [`DenseMatrix`] — the native/PJRT path.
+pub struct DenseCols<'a>(&'a DenseMatrix);
+
+impl<'a> DenseCols<'a> {
+    /// Wrap a resident design.
+    pub fn new(x: &'a DenseMatrix) -> Self {
+        DenseCols(x)
+    }
+}
+
+impl ColAccess for DenseCols<'_> {
+    fn nrows(&self) -> usize {
+        self.0.nrows()
+    }
+
+    fn col(&mut self, j: usize) -> Result<&[f64]> {
+        Ok(self.0.col(j))
+    }
+}
+
+/// Store-served columns through a pinned single-chunk cursor — the
+/// out-of-core path.
+pub struct StoreCols<'a>(PinnedColumns<'a>);
+
+impl<'a> StoreCols<'a> {
+    /// Open a pinned cursor on `store`.
+    pub fn new(store: &'a ColumnStore) -> Self {
+        StoreCols(store.pin_cols())
+    }
+}
+
+impl ColAccess for StoreCols<'_> {
+    fn nrows(&self) -> usize {
+        self.0.nrows()
+    }
+
+    fn col(&mut self, j: usize) -> Result<&[f64]> {
+        self.0.col(j)
+    }
+}
+
+/// Runtime-selected column source: what the `Problem` impls hand their
+/// inner loops.
+pub enum ColSource<'a> {
+    /// Resident design (infallible).
+    Dense(DenseCols<'a>),
+    /// Pinned store cursor (diskless fit).
+    Store(StoreCols<'a>),
+}
+
+impl<'a> ColSource<'a> {
+    /// The source matching `engine`: the pinned store cursor when the
+    /// engine advertises a column store, else the resident design.
+    pub fn for_engine(engine: &'a dyn ScanEngine, x: &'a DenseMatrix) -> ColSource<'a> {
+        match engine.column_store() {
+            Some(store) => ColSource::Store(StoreCols::new(store)),
+            None => ColSource::Dense(DenseCols::new(x)),
+        }
+    }
+
+    /// Whether this source reads from a store (for tests/reports).
+    pub fn is_store(&self) -> bool {
+        matches!(self, ColSource::Store(_))
+    }
+}
+
+impl ColAccess for ColSource<'_> {
+    fn nrows(&self) -> usize {
+        match self {
+            ColSource::Dense(d) => d.nrows(),
+            ColSource::Store(s) => ColAccess::nrows(s),
+        }
+    }
+
+    fn col(&mut self, j: usize) -> Result<&[f64]> {
+        match self {
+            ColSource::Dense(d) => d.col(j),
+            ColSource::Store(s) => s.col(j),
+        }
+    }
+}
+
+/// `X · β` through a column source: ascending sparse axpy over the
+/// nonzero coefficients — exactly [`DenseMatrix::matvec`]'s skip-zeros
+/// accumulation order, so the result is bit-identical to the dense
+/// product (IRLS uses this to refresh `η` without touching the resident
+/// design).
+pub fn fit_eta<C: ColAccess>(cols: &mut C, beta: &[f64]) -> Result<Vec<f64>> {
+    let mut out = vec![0.0; cols.nrows()];
+    for (j, &bj) in beta.iter().enumerate() {
+        if bj != 0.0 {
+            ops::axpy(bj, cols.col(j)?, &mut out);
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used)]
+mod tests {
+    use super::*;
+    use crate::data::store::write_dataset;
+    use crate::data::DataSpec;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("hssr_colsource_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn store_source_matches_dense_bitwise() {
+        let ds = DataSpec::gene_like(18, 25).generate(3);
+        let path = tmp("colsrc.store");
+        write_dataset(&ds, 4, &path).unwrap();
+        let store = ColumnStore::open(&path, 4 * 18 * 8).unwrap();
+        let mut dense = DenseCols::new(&ds.x);
+        let mut disk = StoreCols::new(&store);
+        assert_eq!(ColAccess::nrows(&dense), ColAccess::nrows(&disk));
+        for j in [0usize, 7, 24, 3] {
+            assert_eq!(dense.col(j).unwrap(), disk.col(j).unwrap(), "col {j}");
+        }
+        drop(disk);
+
+        let mut beta = vec![0.0; 25];
+        beta[2] = 0.7;
+        beta[11] = -1.3;
+        beta[24] = 0.01;
+        let want = ds.x.matvec(&beta);
+        let got = fit_eta(&mut StoreCols::new(&store), &beta).unwrap();
+        assert_eq!(got, want, "store-backed eta refresh drifted");
+        // Only the nonzero coefficients' columns were served.
+        assert!(store.counters().solver_cols() >= 3);
+        assert_eq!(store.counters().cols_fetched(), 0);
+    }
+}

@@ -294,6 +294,24 @@ pub trait Problem {
         m: &mut LambdaMetrics,
     ) -> Result<()>;
 
+    /// Columns the family scanned through its engine *before* the driver
+    /// ran (λmax / standardization scans in the constructor, before any
+    /// [`LambdaMetrics`] existed). The driver folds this into the first
+    /// λ's `cols_scanned` so path accounting matches engine-side traffic
+    /// counters exactly. Default: 0 (families that scan nothing in their
+    /// constructor).
+    fn preamble_cols(&self) -> u64 {
+        0
+    }
+
+    /// λ-ahead prefetch hook, called after this λ's screening and before
+    /// its inner solve: predict the *next* λ's working set from the
+    /// current correlations (the SSR threshold is computable before the
+    /// solve finishes — the predictive heart of sequential strong rules)
+    /// and hand its columns to the engine's async prefetcher. Overlap
+    /// only — never correctness. Default: no-op.
+    fn prefetch_next(&mut self, _lam: f64, _lam_next: Option<f64>) {}
+
     /// Sparse nonzero coefficients at the current iterate (ascending).
     fn sparse_beta(&self) -> Vec<(usize, f64)>;
 
@@ -387,7 +405,9 @@ pub fn prune_working_set(
 pub trait BurstProblem {
     /// Run one optimizer epoch over `work` (a CD or GD cycle), updating
     /// `m.coord_updates`, and return the cycle's max coefficient delta.
-    fn cycle(&mut self, work: &[usize], m: &mut LambdaMetrics) -> f64;
+    /// Fallible because a store-backed cycle reads from disk; I/O errors
+    /// must surface typed (they are *not* degradable divergence).
+    fn cycle(&mut self, work: &[usize], m: &mut LambdaMetrics) -> Result<f64>;
 
     /// Fire the dynamic rule at the *current* iterate, clearing `keep[u]`
     /// for units certified inactive at this λ. Scans must be accounted
@@ -425,7 +445,7 @@ pub fn dynamic_burst_solve<B: BurstProblem>(
         let mut last_delta = f64::INFINITY;
         let burst = rescreen_every.min(max_iter - cycles_used);
         for _ in 0..burst {
-            last_delta = prob.cycle(&work, m);
+            last_delta = prob.cycle(&work, m)?;
             cycles_used += 1;
             m.cd_cycles += 1;
             ran = true;
@@ -705,8 +725,19 @@ pub fn drive<P: Problem>(prob: &mut P, cfg: &DriverConfig) -> Result<DriverFit> 
     let mut error = None;
     for (k, &lam) in lambdas.iter().enumerate().skip(betas.len()) {
         let mut m = LambdaMetrics { lambda: lam, ..Default::default() };
-        match run_one_lambda(prob, lam, lam_prev, k, cfg, units, needs_kkt, &mut flag_off, &mut m)
-        {
+        let lam_next = lambdas.get(k + 1).copied();
+        match run_one_lambda(
+            prob,
+            lam,
+            lam_prev,
+            lam_next,
+            k,
+            cfg,
+            units,
+            needs_kkt,
+            &mut flag_off,
+            &mut m,
+        ) {
             Ok(()) => {}
             Err(e) if e.is_degradable() => {
                 // Graceful degradation: keep the completed λ-prefix, report
@@ -785,6 +816,7 @@ fn run_one_lambda<P: Problem>(
     prob: &mut P,
     lam: f64,
     lam_prev: f64,
+    lam_next: Option<f64>,
     k: usize,
     cfg: &DriverConfig,
     units: usize,
@@ -792,6 +824,14 @@ fn run_one_lambda<P: Problem>(
     flag_off: &mut bool,
     m: &mut LambdaMetrics,
 ) -> Result<()> {
+    if k == 0 {
+        // Fold the family's constructor-time scans (λmax /
+        // standardization checks, issued before any metrics existed) into
+        // the first λ so `total_cols_scanned()` equals the engine's
+        // `cols_fetched` exactly. Resume-safe: a resumed walk adopts λ0's
+        // metrics from the checkpoint and never re-enters k == 0.
+        m.cols_scanned += prob.preamble_cols();
+    }
     // ---- screening (lines 2–10) ----
     let mut survive = vec![true; units];
     let run_safe = !*flag_off;
@@ -813,6 +853,11 @@ fn run_one_lambda<P: Problem>(
     for &u in &strong {
         in_strong[u] = true;
     }
+
+    // ---- λ-ahead prefetch: while this λ's inner solve runs, the async
+    // service loads the chunks of λ_{k+1}'s SSR-predicted working set
+    // (computable right now — SSR predicts from current correlations).
+    prob.prefetch_next(lam, lam_next);
 
     // ---- solve + dynamic re-screen + KKT loop (lines 11–18) ----
     loop {

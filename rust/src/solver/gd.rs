@@ -14,13 +14,18 @@
 use crate::error::{HssrError, Result};
 use crate::linalg::{ops, DenseMatrix};
 use super::cd::CdStats;
+use super::columns::{ColAccess, DenseCols};
 use super::Penalty;
 
-/// One full cycle of group updates over `active` (group indices). Returns
-/// the largest |Δβ_j| across all coordinates.
+/// One full cycle of group updates over `active` (group indices), served
+/// by any column source. Each group makes two passes over its columns
+/// (norm accumulation, then the update axpys); for a group straddling a
+/// chunk boundary, the second pass is a *backward* move for a pinned
+/// store cursor — just another pin swap. Returns the largest |Δβ_j|
+/// across all coordinates; `Err` only from a store-backed source.
 #[allow(clippy::too_many_arguments)]
-pub fn gd_cycle(
-    x: &DenseMatrix,
+pub fn gd_cycle_on<C: ColAccess>(
+    cols: &mut C,
     penalty: Penalty,
     lam: f64,
     active: &[usize],
@@ -28,8 +33,8 @@ pub fn gd_cycle(
     sizes: &[usize],
     beta: &mut [f64],
     r: &mut [f64],
-) -> f64 {
-    let n_inv = 1.0 / x.nrows() as f64;
+) -> Result<f64> {
+    let n_inv = 1.0 / cols.nrows() as f64;
     let alpha = penalty.alpha();
     let denom = 1.0 + penalty.l2_weight() * lam;
     let mut max_delta = 0.0f64;
@@ -40,7 +45,7 @@ pub fn gd_cycle(
         z.reserve(w);
         let mut z_norm_sq = 0.0;
         for dj in 0..w {
-            let zj = ops::dot(x.col(j0 + dj), r) * n_inv + beta[j0 + dj];
+            let zj = ops::dot(cols.col(j0 + dj)?, r) * n_inv + beta[j0 + dj];
             z_norm_sq += zj * zj;
             z.push(zj);
         }
@@ -52,19 +57,37 @@ pub fn gd_cycle(
             let b_new = scale * z[dj];
             let delta = b_new - beta[j0 + dj];
             if delta != 0.0 {
-                ops::axpy(-delta, x.col(j0 + dj), r);
+                ops::axpy(-delta, cols.col(j0 + dj)?, r);
                 beta[j0 + dj] = b_new;
                 max_delta = max_delta.max(delta.abs());
             }
         }
     }
-    max_delta
+    Ok(max_delta)
 }
 
-/// Iterate [`gd_cycle`] to convergence.
+/// One full cycle of group updates over `active` (group indices) on the
+/// resident design. Returns the largest |Δβ_j| across all coordinates.
 #[allow(clippy::too_many_arguments)]
-pub fn gd_solve(
+pub fn gd_cycle(
     x: &DenseMatrix,
+    penalty: Penalty,
+    lam: f64,
+    active: &[usize],
+    starts: &[usize],
+    sizes: &[usize],
+    beta: &mut [f64],
+    r: &mut [f64],
+) -> f64 {
+    // The dense source never errs.
+    gd_cycle_on(&mut DenseCols::new(x), penalty, lam, active, starts, sizes, beta, r)
+        .unwrap_or(f64::NAN)
+}
+
+/// Iterate [`gd_cycle_on`] to convergence.
+#[allow(clippy::too_many_arguments)]
+pub fn gd_solve_on<C: ColAccess>(
+    cols: &mut C,
     penalty: Penalty,
     lam: f64,
     active: &[usize],
@@ -82,7 +105,7 @@ pub fn gd_solve(
     }
     let mut last_delta = f64::INFINITY;
     for _ in 0..max_iter {
-        last_delta = gd_cycle(x, penalty, lam, active, starts, sizes, beta, r);
+        last_delta = gd_cycle_on(cols, penalty, lam, active, starts, sizes, beta, r)?;
         stats.cycles += 1;
         stats.coord_updates += active.iter().map(|&g| sizes[g] as u64).sum::<u64>();
         if !last_delta.is_finite() {
@@ -106,6 +129,36 @@ pub fn gd_solve(
         }
     }
     Err(HssrError::NoConvergence { lambda_index, max_iter, last_delta })
+}
+
+/// [`gd_solve_on`] over the resident design — the historical entry point.
+#[allow(clippy::too_many_arguments)]
+pub fn gd_solve(
+    x: &DenseMatrix,
+    penalty: Penalty,
+    lam: f64,
+    active: &[usize],
+    starts: &[usize],
+    sizes: &[usize],
+    beta: &mut [f64],
+    r: &mut [f64],
+    tol: f64,
+    max_iter: usize,
+    lambda_index: usize,
+) -> Result<CdStats> {
+    gd_solve_on(
+        &mut DenseCols::new(x),
+        penalty,
+        lam,
+        active,
+        starts,
+        sizes,
+        beta,
+        r,
+        tol,
+        max_iter,
+        lambda_index,
+    )
 }
 
 #[cfg(test)]

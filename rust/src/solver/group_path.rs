@@ -30,6 +30,7 @@ use crate::runtime::{native::NativeEngine, ooc, ScanEngine};
 use crate::screening::group::{make_group_safe_rule, GroupSafeContext};
 use crate::screening::{PrevSolution, RuleKind, SafeRule};
 use crate::serialize::{ByteReader, ByteWriter};
+use crate::solver::columns::ColSource;
 use crate::solver::driver::{
     apply_rescreen_mask, drive, dynamic_burst_solve, fused_default, zero_discarded_units,
     BurstProblem, DriverConfig, PathError, Problem, ScreenStage,
@@ -266,11 +267,12 @@ struct GroupBurst<'p, 'a> {
 }
 
 impl BurstProblem for GroupBurst<'_, '_> {
-    fn cycle(&mut self, work: &[usize], m: &mut LambdaMetrics) -> f64 {
+    fn cycle(&mut self, work: &[usize], m: &mut LambdaMetrics) -> Result<f64> {
         let p = &mut *self.prob;
         m.coord_updates += work.iter().map(|&g| p.layout.sizes[g] as u64).sum::<u64>();
-        gd::gd_cycle(
-            p.x,
+        let mut cols = ColSource::for_engine(p.engine, p.x);
+        gd::gd_cycle_on(
+            &mut cols,
             p.penalty,
             self.lam,
             work,
@@ -323,6 +325,29 @@ impl Problem for GroupLassoProblem<'_> {
 
     fn needs_kkt(&self) -> bool {
         !matches!(self.rule, RuleKind::BasicPcd | RuleKind::Sedpp)
+    }
+
+    /// λ-ahead prefetch at group granularity: a group is predicted for
+    /// λ_{k+1} if it is active or its lazy norm clears the group-SSR
+    /// threshold `√W_g·α(2λ_{k+1} − λ_k)`; the prediction expands to the
+    /// member columns. Overlap only, never correctness.
+    fn prefetch_next(&mut self, lam: f64, lam_next: Option<f64>) {
+        let Some(lam_next) = lam_next else { return };
+        if self.engine.column_store().is_none() {
+            return;
+        }
+        let t = crate::screening::ssr::threshold(self.penalty, lam_next, lam);
+        let layout = self.layout;
+        let mut cols = Vec::new();
+        for g in 0..layout.num_groups() {
+            let active = layout.range(g).any(|j| self.beta[j] != 0.0);
+            let predicted = self.znorm_valid[g]
+                && self.znorm[g] >= (layout.sizes[g] as f64).sqrt() * t;
+            if active || predicted {
+                cols.extend(layout.range(g));
+            }
+        }
+        self.engine.prefetch_columns(&cols);
     }
 
     fn screen(
@@ -457,8 +482,11 @@ impl Problem for GroupLassoProblem<'_> {
     ) -> Result<()> {
         let dynamic = self.rescreen_every > 0 && self.dynamic_rule();
         if !dynamic {
-            let stats = gd::gd_solve(
-                self.x,
+            // Blockwise GD over the engine's column source: resident
+            // natively, pinned store cursor out-of-core (diskless fit).
+            let mut cols = ColSource::for_engine(self.engine, self.x);
+            let stats = gd::gd_solve_on(
+                &mut cols,
                 self.penalty,
                 lam,
                 strong,

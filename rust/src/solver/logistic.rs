@@ -41,6 +41,7 @@ use crate::linalg::{ops, DenseMatrix};
 use crate::runtime::{native::NativeEngine, ooc, ScanEngine};
 use crate::screening::{gapsafe, ssr, PrevSolution, RuleKind, SafeContext, SafeRule};
 use crate::serialize::{ByteReader, ByteWriter};
+use crate::solver::columns::{self, ColAccess, ColSource};
 use crate::solver::driver::{
     apply_rescreen_mask, drive, prune_working_set, zero_discarded_units, DriverConfig,
     PathError, Problem, ScreenStage,
@@ -150,6 +151,12 @@ impl LogisticPathFit {
         b
     }
 
+    /// Total columns scanned over the path (screening + KKT, plus the
+    /// constructor's λmax/standardization preamble folded into λ0).
+    pub fn total_cols_scanned(&self) -> u64 {
+        self.metrics.iter().map(|m| m.cols_scanned).sum()
+    }
+
     /// Predicted probabilities on the (standardized) design at index `k`.
     pub fn predict_proba(&self, x: &DenseMatrix, k: usize) -> Vec<f64> {
         let beta = self.beta_dense(k);
@@ -182,12 +189,15 @@ pub fn deviance(y: &[f64], p: &[f64]) -> f64 {
     d / y.len() as f64
 }
 
-/// One weighted CD cycle on the IRLS surrogate. `w` are the IRLS weights,
-/// `r` is the working residual `z − η` (maintained exactly), `xwx[j] =
-/// Σ w_i x_ij²/n`. Returns max |Δβ|.
+/// One weighted CD cycle on the IRLS surrogate, served by any column
+/// source (resident design or pinned store cursor — `active` ascending, so
+/// the cursor swaps each chunk at most once per cycle). `w` are the IRLS
+/// weights, `r` is the working residual `z − η` (maintained exactly),
+/// `xwx[j] = Σ w_i x_ij²/n`. Returns max |Δβ|; `Err` only from a
+/// store-backed source.
 #[allow(clippy::too_many_arguments)]
-fn wcd_cycle(
-    x: &DenseMatrix,
+fn wcd_cycle<C: ColAccess>(
+    cols: &mut C,
     penalty: Penalty,
     lam: f64,
     active: &[usize],
@@ -195,13 +205,13 @@ fn wcd_cycle(
     xwx: &[f64],
     beta: &mut [f64],
     r: &mut [f64],
-) -> f64 {
-    let n_inv = 1.0 / x.nrows() as f64;
+) -> Result<f64> {
+    let n_inv = 1.0 / cols.nrows() as f64;
     let alpha = penalty.alpha();
     let l2 = penalty.l2_weight() * lam;
     let mut max_delta = 0.0f64;
     for &j in active {
-        let col = x.col(j);
+        let col = cols.col(j)?;
         let mut grad = 0.0;
         for i in 0..col.len() {
             grad += w[i] * col[i] * r[i];
@@ -220,7 +230,7 @@ fn wcd_cycle(
             max_delta = max_delta.max(delta.abs() * v.sqrt().max(1.0));
         }
     }
-    max_delta
+    Ok(max_delta)
 }
 
 /// The ℓ1-logistic problem as a [`Problem`] instance: IRLS-wrapped
@@ -257,6 +267,10 @@ pub struct LogisticProblem<'a> {
     w: Vec<f64>,
     wr: Vec<f64>,
     xwx: Vec<f64>,
+    // Engine columns scanned at construction (λmax + gap-safe
+    // standardization checks) — folded into the first λ's `cols_scanned`
+    // by the driver so scan accounting is exact, not off-by-the-preamble.
+    preamble_cols: u64,
 }
 
 impl<'a> LogisticProblem<'a> {
@@ -298,6 +312,7 @@ impl<'a> LogisticProblem<'a> {
         let resid0: Vec<f64> = y.iter().map(|yi| yi - ybar).collect();
         let mut score0 = vec![0.0; p];
         engine.scan_all(x, &resid0, &mut score0)?;
+        let mut preamble_cols = p as u64;
         let lambda_max = ops::inf_norm(&score0) / cfg.penalty.alpha();
         let safe_rule: Option<Box<dyn SafeRule>> = if cfg.rule == RuleKind::SsrGapSafe {
             // The gap-safe ball assumes standardization (2): centered
@@ -308,6 +323,7 @@ impl<'a> LogisticProblem<'a> {
             let ones = vec![1.0; n];
             let mut means = vec![0.0; p];
             engine.scan_all(x, &ones, &mut means)?; // x_jᵀ1/n
+            preamble_cols += p as u64;
             for (j, &mj) in means.iter().enumerate() {
                 let nrm = ops::nrm2_sq(x.col(j)) / n as f64;
                 if mj.abs() > 1e-6 || (nrm - 1.0).abs() > 1e-6 {
@@ -346,6 +362,7 @@ impl<'a> LogisticProblem<'a> {
             w: vec![0.0; n],
             wr: vec![0.0; n],
             xwx: vec![0.0; p],
+            preamble_cols,
         })
     }
 
@@ -400,6 +417,28 @@ impl Problem for LogisticProblem<'_> {
 
     fn needs_kkt(&self) -> bool {
         !matches!(self.rule, RuleKind::BasicPcd)
+    }
+
+    fn preamble_cols(&self) -> u64 {
+        self.preamble_cols
+    }
+
+    /// λ-ahead prefetch: the GLM strong rule predicts λ_{k+1}'s working
+    /// set from the current scores (active features always included);
+    /// columns go to the engine's async prefetch service. Overlap only —
+    /// a wrong prediction costs a wasted load, never correctness.
+    fn prefetch_next(&mut self, lam: f64, lam_next: Option<f64>) {
+        let Some(lam_next) = lam_next else { return };
+        if self.engine.column_store().is_none() {
+            return;
+        }
+        let t = ssr::threshold(self.penalty, lam_next, lam);
+        let cols: Vec<usize> = (0..self.beta.len())
+            .filter(|&j| {
+                self.beta[j] != 0.0 || (self.z_valid[j] && self.z[j].abs() >= t)
+            })
+            .collect();
+        self.engine.prefetch_columns(&cols);
     }
 
     fn screen(
@@ -546,62 +585,71 @@ impl Problem for LogisticProblem<'_> {
                 self.w[i] = wi;
                 self.wr[i] = (self.y[i] - pi) / wi;
             }
-            for &j in &work {
-                let col = self.x.col(j);
-                let mut s = 0.0;
-                for i in 0..n {
-                    s += self.w[i] * col[i] * col[i];
+            // One column source per IRLS round serves the curvature pass,
+            // the weighted CD cycles, and the η refresh; it drops before
+            // the gap-safe rescreen so pinned chunks never overlap the
+            // rule's engine scans (resident design natively, pinned store
+            // cursor out-of-core — bit-identical bytes).
+            let fit = {
+                let mut cols = ColSource::for_engine(self.engine, self.x);
+                for &j in &work {
+                    let col = cols.col(j)?;
+                    let mut s = 0.0;
+                    for i in 0..n {
+                        s += self.w[i] * col[i] * col[i];
+                    }
+                    self.xwx[j] = s / n as f64;
                 }
-                self.xwx[j] = s / n as f64;
-            }
-            // intercept update (unpenalized)
-            let sw: f64 = ops::sum(&self.w);
-            let swr: f64 = self.w.iter().zip(&self.wr).map(|(wi, ri)| wi * ri).sum();
-            let db = swr / sw;
-            if db != 0.0 {
-                self.b0 += db;
-                for ri in self.wr.iter_mut() {
-                    *ri -= db;
+                // intercept update (unpenalized)
+                let sw: f64 = ops::sum(&self.w);
+                let swr: f64 =
+                    self.w.iter().zip(&self.wr).map(|(wi, ri)| wi * ri).sum();
+                let db = swr / sw;
+                if db != 0.0 {
+                    self.b0 += db;
+                    for ri in self.wr.iter_mut() {
+                        *ri -= db;
+                    }
                 }
-            }
-            // inner weighted CD
-            let mut inner_delta = f64::INFINITY;
-            for _ in 0..self.max_iter {
-                inner_delta = wcd_cycle(
-                    self.x,
-                    self.penalty,
-                    lam,
-                    &work,
-                    &self.w,
-                    &self.xwx,
-                    &mut self.beta,
-                    &mut self.wr,
-                );
-                m.cd_cycles += 1;
-                m.coord_updates += work.len() as u64;
-                if inner_delta < self.tol {
-                    break;
+                // inner weighted CD
+                let mut inner_delta = f64::INFINITY;
+                for _ in 0..self.max_iter {
+                    inner_delta = wcd_cycle(
+                        &mut cols,
+                        self.penalty,
+                        lam,
+                        &work,
+                        &self.w,
+                        &self.xwx,
+                        &mut self.beta,
+                        &mut self.wr,
+                    )?;
+                    m.cd_cycles += 1;
+                    m.coord_updates += work.len() as u64;
+                    if inner_delta < self.tol {
+                        break;
+                    }
                 }
-            }
-            if !inner_delta.is_finite() {
-                // NaN fails every `<`/`>=` comparison, so a poisoned
-                // surrogate would otherwise sail past both convergence
-                // checks as if it had converged — surface it as a typed,
-                // degradable divergence instead.
-                return Err(HssrError::NonFinite {
-                    lambda_index,
-                    context: "IRLS weighted-CD update delta".into(),
-                });
-            }
-            if inner_delta >= self.tol {
-                return Err(HssrError::NoConvergence {
-                    lambda_index,
-                    max_iter: self.max_iter,
-                    last_delta: inner_delta,
-                });
-            }
-            // refresh η from scratch (cheap, avoids drift): η = b0 + Xβ
-            let fit = self.x.matvec(&self.beta);
+                if !inner_delta.is_finite() {
+                    // NaN fails every `<`/`>=` comparison, so a poisoned
+                    // surrogate would otherwise sail past both convergence
+                    // checks as if it had converged — surface it as a typed,
+                    // degradable divergence instead.
+                    return Err(HssrError::NonFinite {
+                        lambda_index,
+                        context: "IRLS weighted-CD update delta".into(),
+                    });
+                }
+                if inner_delta >= self.tol {
+                    return Err(HssrError::NoConvergence {
+                        lambda_index,
+                        max_iter: self.max_iter,
+                        last_delta: inner_delta,
+                    });
+                }
+                // refresh η from scratch (cheap, avoids drift): η = b0 + Xβ
+                columns::fit_eta(&mut cols, &self.beta)?
+            };
             let mut outer_delta = 0.0f64;
             for i in 0..n {
                 let new_eta = self.b0 + fit[i];

@@ -11,6 +11,7 @@
 #![deny(clippy::unwrap_used)]
 
 pub mod cd;
+pub mod columns;
 pub mod driver;
 pub mod duality;
 pub mod gd;

@@ -52,6 +52,7 @@ use crate::linalg::{ops, DenseMatrix};
 use crate::runtime::{native::NativeEngine, ooc, ScanEngine};
 use crate::screening::{make_safe_rule, ssr, PrevSolution, RuleKind, SafeContext, SafeRule};
 use crate::serialize::{ByteReader, ByteWriter};
+use crate::solver::columns::ColSource;
 use crate::solver::driver::{
     apply_rescreen_mask, drive, dynamic_burst_solve, fused_default, zero_discarded_units,
     BurstProblem, DriverConfig, Problem, ScreenStage,
@@ -339,10 +340,11 @@ struct GaussianBurst<'p, 'a> {
 }
 
 impl BurstProblem for GaussianBurst<'_, '_> {
-    fn cycle(&mut self, work: &[usize], m: &mut LambdaMetrics) -> f64 {
+    fn cycle(&mut self, work: &[usize], m: &mut LambdaMetrics) -> Result<f64> {
         m.coord_updates += work.len() as u64;
         let p = &mut *self.prob;
-        cd::cd_cycle(p.x, p.penalty, self.lam, work, &mut p.beta, &mut p.r)
+        let mut cols = ColSource::for_engine(p.engine, p.x);
+        cd::cd_cycle_on(&mut cols, p.penalty, self.lam, work, &mut p.beta, &mut p.r)
     }
 
     fn rescreen_keep(&mut self, keep: &mut [bool], m: &mut LambdaMetrics) -> Result<()> {
@@ -386,6 +388,25 @@ impl Problem for GaussianLasso<'_> {
     fn needs_kkt(&self) -> bool {
         // BasicPcd/SEDPP never KKT-check (exact / safe ⇒ nothing to verify).
         !matches!(self.rule, RuleKind::BasicPcd | RuleKind::Sedpp)
+    }
+
+    /// λ-ahead prefetch: predict λ_{k+1}'s working set with the SSR
+    /// threshold at the *current* correlations (active features always
+    /// included) and hand the columns to the engine's async prefetch
+    /// service. Overlap only — a wrong prediction costs a wasted load,
+    /// never correctness.
+    fn prefetch_next(&mut self, lam: f64, lam_next: Option<f64>) {
+        let Some(lam_next) = lam_next else { return };
+        if self.engine.column_store().is_none() {
+            return;
+        }
+        let t = ssr::threshold(self.penalty, lam_next, lam);
+        let cols: Vec<usize> = (0..self.ctx.p)
+            .filter(|&j| {
+                self.beta[j] != 0.0 || (self.z_valid[j] && self.z[j].abs() >= t)
+            })
+            .collect();
+        self.engine.prefetch_columns(&cols);
     }
 
     fn screen(
@@ -511,8 +532,12 @@ impl Problem for GaussianLasso<'_> {
     ) -> Result<()> {
         let dynamic = self.rescreen_every > 0 && self.dynamic_rule();
         if !dynamic {
-            let stats = cd::cd_solve(
-                self.x,
+            // The inner CD loop runs on the engine's column source: the
+            // resident design natively, or a pinned store cursor when the
+            // engine is out-of-core (a fully diskless fit).
+            let mut cols = ColSource::for_engine(self.engine, self.x);
+            let stats = cd::cd_solve_on(
+                &mut cols,
                 self.penalty,
                 lam,
                 strong,

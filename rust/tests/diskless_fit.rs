@@ -1,0 +1,239 @@
+//! Fully diskless fits, pinned end to end: the inner solvers (CD, GD, the
+//! logistic IRLS loop) consume store-backed column views through the
+//! pinned-chunk cursor, so `--engine ooc` no longer materializes the
+//! dense design for the solve — and the result is still **bit-identical**
+//! to a resident fit for all three families under a one-chunk cache
+//! budget. The λ-ahead prefetcher overlaps I/O with the current solve and
+//! must never push resident bytes past the budget, stay correct under
+//! injected storage faults, and show up in the prefetch counters.
+
+use hssr::data::store::{write_dataset, ColumnStore, FaultInjector, FaultSpec};
+use hssr::data::synth::generate_grouped;
+use hssr::data::DataSpec;
+use hssr::prop::{check, PropConfig};
+use hssr::prop_assert;
+use hssr::runtime::native::NativeEngine;
+use hssr::runtime::ooc::OocEngine;
+use hssr::screening::RuleKind;
+use hssr::solver::group_path::{fit_group_path_with_engine, GroupPathConfig};
+use hssr::solver::logistic::{
+    fit_logistic_path_with_engine, synthetic_logistic, LogisticPathConfig,
+};
+use hssr::solver::path::{fit_lasso_path_with_engine, PathConfig};
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("hssr_diskless_it");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+/// Gaussian family: with a one-chunk budget the solve itself is served
+/// from the store (the `solver_cols` counter proves the inner CD loop ran
+/// store-backed, not against a resident matrix), the coefficients are
+/// bit-identical to a native fit, and scan accounting stays exact.
+#[test]
+fn gaussian_pinned_fit_is_diskless_and_bit_identical() {
+    let ds = DataSpec::gene_like(70, 180).generate(41);
+    let path = tmp("dl-lasso.store");
+    let chunk = 16;
+    write_dataset(&ds, chunk, &path).unwrap();
+    let budget = chunk * ds.n() * 8; // exactly one chunk resident
+    let native = NativeEngine::new();
+    for rule in [RuleKind::Ssr, RuleKind::SsrBedpp, RuleKind::SsrGapSafe] {
+        let cfg = PathConfig { rule, n_lambda: 15, tol: 1e-8, ..PathConfig::default() };
+        let ooc = OocEngine::open(&path, budget).unwrap();
+        let a = fit_lasso_path_with_engine(&ds, &cfg, &ooc).unwrap();
+        let b = fit_lasso_path_with_engine(&ds, &cfg, &native).unwrap();
+        assert_eq!(a.betas, b.betas, "{rule:?}: pinned fit differs from resident fit");
+        let c = ooc.store().counters();
+        assert!(c.solver_cols() > 0, "{rule:?}: the solve never used the store");
+        assert_eq!(
+            c.cols_fetched(),
+            a.total_cols_scanned(),
+            "{rule:?}: solver traffic leaked into scan accounting"
+        );
+        assert!(
+            c.peak_resident() <= budget as u64,
+            "{rule:?}: peak resident {} exceeded budget {budget} with pins",
+            c.peak_resident()
+        );
+    }
+}
+
+/// Group family: the GD inner loop walks store-backed group columns
+/// through the same pinned cursor, bit-identically.
+#[test]
+fn group_pinned_fit_is_diskless_and_bit_identical() {
+    let gds = generate_grouped(60, 24, 4, 4, 43);
+    let path = tmp("dl-group.store");
+    let chunk = 8;
+    let zeros = vec![0.0; gds.p()];
+    let ones = vec![1.0; gds.p()];
+    hssr::data::store::write_matrix(&gds.x, &gds.y, &zeros, &ones, true, chunk, &path)
+        .unwrap();
+    let budget = chunk * gds.n() * 8;
+    let native = NativeEngine::new();
+    for rule in [RuleKind::Ssr, RuleKind::SsrBedpp, RuleKind::SsrGapSafe] {
+        let cfg =
+            GroupPathConfig { rule, n_lambda: 12, tol: 1e-8, ..GroupPathConfig::default() };
+        let ooc = OocEngine::open(&path, budget).unwrap();
+        let a = fit_group_path_with_engine(&gds, &cfg, &ooc).unwrap();
+        let b = fit_group_path_with_engine(&gds, &cfg, &native).unwrap();
+        assert_eq!(a.betas, b.betas, "{rule:?}: pinned group fit differs");
+        let c = ooc.store().counters();
+        assert!(c.solver_cols() > 0, "{rule:?}: group solve never used the store");
+        assert!(c.peak_resident() <= budget as u64, "{rule:?}: budget exceeded");
+    }
+}
+
+/// Logistic family: the IRLS loop (curvature refresh, weighted CD, and
+/// the η refresh) runs store-backed and bit-identical.
+#[test]
+fn logistic_pinned_fit_is_diskless_and_bit_identical() {
+    let (x, y, _) = synthetic_logistic(80, 60, 4, 45);
+    let path = tmp("dl-logit.store");
+    let chunk = 8;
+    let zeros = vec![0.0; x.ncols()];
+    let ones = vec![1.0; x.ncols()];
+    hssr::data::store::write_matrix(&x, &y, &zeros, &ones, true, chunk, &path).unwrap();
+    let budget = chunk * x.nrows() * 8;
+    let native = NativeEngine::new();
+    for rule in [RuleKind::Ssr, RuleKind::SsrGapSafe] {
+        let cfg = LogisticPathConfig {
+            rule,
+            n_lambda: 12,
+            tol: 1e-8,
+            ..LogisticPathConfig::default()
+        };
+        let ooc = OocEngine::open(&path, budget).unwrap();
+        let a = fit_logistic_path_with_engine(&x, &y, &cfg, &ooc).unwrap();
+        let b = fit_logistic_path_with_engine(&x, &y, &cfg, &native).unwrap();
+        assert_eq!(a.betas, b.betas, "{rule:?}: pinned logistic fit differs");
+        assert_eq!(a.intercepts, b.intercepts, "{rule:?}: intercepts differ");
+        let c = ooc.store().counters();
+        assert!(c.solver_cols() > 0, "{rule:?}: IRLS never used the store");
+        assert!(c.peak_resident() <= budget as u64, "{rule:?}: budget exceeded");
+    }
+}
+
+/// With the async prefetcher armed the fit stays bit-identical, the
+/// prefetcher demonstrably ran (issued > 0, hits + waste ≤ issued), and —
+/// the core guarantee — peak resident bytes never exceed the budget even
+/// though a background thread is staging chunks while the solver pins.
+#[test]
+fn prefetch_fit_is_bit_identical_and_budget_bounded() {
+    let ds = DataSpec::gene_like(70, 180).generate(47);
+    let path = tmp("dl-prefetch.store");
+    let chunk = 16;
+    write_dataset(&ds, chunk, &path).unwrap();
+    let budget = 4 * chunk * ds.n() * 8; // room for pins + staged chunks
+    let native = NativeEngine::new();
+    let cfg = PathConfig {
+        rule: RuleKind::SsrBedpp,
+        n_lambda: 15,
+        tol: 1e-8,
+        ..PathConfig::default()
+    };
+    let mut ooc = OocEngine::open(&path, budget).unwrap();
+    ooc.enable_prefetch();
+    assert!(ooc.prefetch_enabled());
+    let a = fit_lasso_path_with_engine(&ds, &cfg, &ooc).unwrap();
+    let b = fit_lasso_path_with_engine(&ds, &cfg, &native).unwrap();
+    assert_eq!(a.betas, b.betas, "prefetching changed the fit");
+    // The service is async: wait (bounded) for it to drain issued jobs.
+    for _ in 0..400 {
+        if ooc.store().counters().prefetch_issued() > 0 {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    let c = ooc.store().counters();
+    assert!(c.prefetch_issued() > 0, "the λ-ahead prefetcher never ran");
+    assert!(
+        c.prefetch_hits() + c.prefetch_wasted() <= c.prefetch_issued(),
+        "prefetch accounting drift: {} hits + {} wasted > {} issued",
+        c.prefetch_hits(),
+        c.prefetch_wasted(),
+        c.prefetch_issued()
+    );
+    assert!(
+        c.peak_resident() <= budget as u64,
+        "prefetcher pushed resident {} past budget {budget}",
+        c.peak_resident()
+    );
+}
+
+/// Prefetch under injected storage faults: a staged chunk that fails its
+/// read or CRC is simply not admitted (never quarantined, never served),
+/// the demand path retries fresh, and the fit stays bit-identical.
+#[test]
+fn prefetch_fit_survives_injected_faults() {
+    let ds = DataSpec::gene_like(70, 180).generate(53);
+    let path = tmp("dl-prefetch-faults.store");
+    let chunk = 16;
+    write_dataset(&ds, chunk, &path).unwrap();
+    let budget = 4 * chunk * ds.n() * 8;
+    let native = NativeEngine::new();
+    let cfg = PathConfig {
+        rule: RuleKind::SsrBedpp,
+        n_lambda: 15,
+        tol: 1e-8,
+        ..PathConfig::default()
+    };
+    let mut store = ColumnStore::open(&path, budget).unwrap();
+    let spec =
+        FaultSpec::parse("seed=97,transient=0.2,short=0.15,flip=0.1").unwrap();
+    store.set_faults(Some(FaultInjector::new(spec)));
+    let mut ooc = OocEngine::from_store(store);
+    ooc.enable_prefetch();
+    let a = fit_lasso_path_with_engine(&ds, &cfg, &ooc).unwrap();
+    let b = fit_lasso_path_with_engine(&ds, &cfg, &native).unwrap();
+    assert_eq!(a.betas, b.betas, "faulted prefetching fit differs from native");
+    let c = ooc.store().counters();
+    assert!(c.retries() > 0, "fault rates this high must trigger retries");
+    assert!(c.peak_resident() <= budget as u64, "budget exceeded under faults");
+}
+
+/// Property: across random shapes, chunk widths, and budget multiples —
+/// prefetch on and off — a store-backed fit never exceeds its byte budget
+/// and matches the native fit bit for bit.
+#[test]
+fn property_peak_resident_never_exceeds_budget() {
+    check(PropConfig { cases: 4, seed: 0xD15C }, |rng, scale| {
+        let n = 30 + (rng.below(40) as f64 * scale) as usize;
+        let p = 40 + (rng.below(100) as f64 * scale) as usize;
+        let ds = DataSpec::synthetic(n, p, 4).generate(rng.next_u64());
+        let chunk = 1 + rng.below(24) as usize;
+        let budget = (1 + rng.below(4) as usize) * chunk * n * 8;
+        let prefetch = rng.below(2) == 1;
+        let path = tmp(&format!("dl-prop-{n}-{p}-{chunk}-{prefetch}.store"));
+        write_dataset(&ds, chunk, &path).map_err(|e| e.to_string())?;
+        let native = NativeEngine::new();
+        let cfg = PathConfig {
+            rule: RuleKind::SsrBedpp,
+            n_lambda: 10,
+            tol: 1e-8,
+            ..PathConfig::default()
+        };
+        let mut ooc = OocEngine::open(&path, budget).map_err(|e| e.to_string())?;
+        if prefetch {
+            ooc.enable_prefetch();
+        }
+        let a = fit_lasso_path_with_engine(&ds, &cfg, &ooc).map_err(|e| e.to_string())?;
+        let b =
+            fit_lasso_path_with_engine(&ds, &cfg, &native).map_err(|e| e.to_string())?;
+        prop_assert!(
+            a.betas == b.betas,
+            "diskless fit differs (n={n}, p={p}, chunk={chunk}, prefetch={prefetch})"
+        );
+        let c = ooc.store().counters();
+        prop_assert!(
+            c.peak_resident() <= budget as u64,
+            "peak resident {} > budget {budget} (n={n}, p={p}, chunk={chunk}, \
+             prefetch={prefetch})",
+            c.peak_resident()
+        );
+        prop_assert!(c.solver_cols() > 0, "solve never touched the store");
+        Ok(())
+    });
+}

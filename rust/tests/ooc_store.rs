@@ -206,9 +206,10 @@ fn ooc_group_bit_identical_to_native_under_pressure() {
 }
 
 /// Logistic family: bit-identical paths and intercepts for every
-/// supported rule under a one-chunk budget. (The constructor's λmax and
-/// standardization scans go through the engine before metrics exist, so
-/// counters are checked for activity, not equality.)
+/// supported rule under a one-chunk budget. The constructor's λmax and
+/// standardization preamble scans are folded into the first λ's
+/// `cols_scanned` by the driver, so the counter check is exact equality —
+/// not merely activity.
 #[test]
 fn ooc_logistic_bit_identical_to_native_under_pressure() {
     let (x, y, _) = synthetic_logistic(80, 60, 4, 35);
@@ -236,12 +237,18 @@ fn ooc_logistic_bit_identical_to_native_under_pressure() {
         let b = fit_logistic_path_with_engine(&x, &y, &cfg, &native).unwrap();
         assert_eq!(a.betas, b.betas, "{rule:?}: ooc logistic betas differ");
         assert_eq!(a.intercepts, b.intercepts, "{rule:?}: intercepts differ");
+        let counters = ooc.store().counters();
+        assert_eq!(
+            counters.cols_fetched(),
+            a.total_cols_scanned(),
+            "{rule:?}: logistic store fetches != path accounting (preamble)"
+        );
         assert!(
-            ooc.store().counters().cols_fetched() > 0,
+            counters.cols_fetched() > 0,
             "{rule:?}: logistic fit never touched the store"
         );
         assert!(
-            ooc.store().counters().peak_resident() <= budget as u64,
+            counters.peak_resident() <= budget as u64,
             "{rule:?}: budget exceeded"
         );
     }
