@@ -3,7 +3,8 @@
 #   make verify     tier-1 gate (build + tests) plus fmt/clippy lint + docs
 #   make tier1      exactly the tier-1 command the CI driver runs
 #   make doc        rustdoc with warnings denied (the CI doc job)
-#   make bench      perf probe (emits BENCH_perf.json at the repo root)
+#   make bench      perf probes (emit BENCH_perf.json + BENCH_serve.json
+#                   at the repo root)
 #   make diskless   the CI test-diskless leg locally: the whole suite with
 #                   store-backed fits, a 4 MB cache, and the prefetcher on
 #   make artifacts  AOT-lower the JAX/Pallas scan kernels to HLO text
@@ -30,6 +31,7 @@ verify: tier1 lint doc
 
 bench:
 	cd $(CARGO_DIR) && cargo bench --bench perf_probe
+	cd $(CARGO_DIR) && cargo bench --bench serve_throughput
 
 artifacts:
 	python3 python/compile/aot.py

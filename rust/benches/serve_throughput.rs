@@ -1,0 +1,96 @@
+//! Serve-mode throughput probe (not a paper artifact): fits/sec when many
+//! concurrent clients share one [`FitService`] — one worker pool, one
+//! store, one chunk cache — as the admission bound doubles from 1 to
+//! `HSSR_BENCH_CLIENTS`. Emits machine-readable `BENCH_serve.json` at the
+//! repository root (same row shape as `BENCH_perf.json`: `ns_iter` is
+//! nanoseconds per *fit*), so the serving-throughput trajectory is
+//! tracked across PRs alongside the kernel probe.
+//!
+//! Scale knobs (CI keeps the defaults small; the paper regime is
+//! p = 10⁴–10⁵ with up to 64 clients):
+//!
+//! * `HSSR_BENCH_N` / `HSSR_BENCH_P` — problem shape (default 200×10000);
+//! * `HSSR_BENCH_CLIENTS` — top of the 1,2,4,… concurrency sweep (8);
+//! * `HSSR_BENCH_FITS` — requests per sweep point (2× top concurrency).
+
+use std::time::Instant;
+
+use hssr::coordinator::serve::FitService;
+use hssr::data::DataSpec;
+use hssr::linalg::pool;
+use hssr::runtime::ooc::OocEngine;
+use hssr::screening::RuleKind;
+use hssr::solver::path::PathConfig;
+
+fn env_or(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let threads = pool::global().threads();
+    let n = env_or("HSSR_BENCH_N", 200);
+    let p = env_or("HSSR_BENCH_P", 10_000);
+    let max_clients = env_or("HSSR_BENCH_CLIENTS", 8).max(1);
+    let fits = env_or("HSSR_BENCH_FITS", 2 * max_clients).max(1);
+    let ds = DataSpec::synthetic(n, p, 20).generate(4);
+    let budget = hssr::data::store::cache_budget_bytes();
+    let engine = OocEngine::spill(&ds.x, &ds.y, budget).expect("spill design");
+    println!(
+        "serve_throughput: n={n}, p={p}, {fits} fits per point, pool threads={threads}, \
+         cache budget {} MB",
+        budget >> 20
+    );
+
+    let rules = [RuleKind::Ssr, RuleKind::SsrBedpp, RuleKind::SsrGapSafe];
+    let cfgs: Vec<PathConfig> = (0..fits)
+        .map(|i| PathConfig {
+            rule: rules[i % rules.len()],
+            n_lambda: 30,
+            tol: 1e-6,
+            ..PathConfig::default()
+        })
+        .collect();
+
+    // Warm the pool and the page cache once, untimed.
+    let warm = FitService::new(engine.shared_store(), 1);
+    warm.run_one(&cfgs[0]).expect("warmup fit");
+
+    let mut rows: Vec<(String, f64)> = Vec::new();
+    let mut clients = 1usize;
+    while clients <= max_clients {
+        engine.store().reset();
+        let svc = FitService::new(engine.shared_store(), clients);
+        let t0 = Instant::now();
+        let out = svc.run_batch(&cfgs).expect("serve batch");
+        let secs = t0.elapsed().as_secs_f64();
+        let c = svc.store().counters();
+        println!(
+            "concurrency {clients:>3}: {:.3}s for {} fits ({:.2} fits/s), \
+             {} cache hits ({} cross-fit), peak resident {:.2} MB",
+            secs,
+            out.len(),
+            out.len() as f64 / secs.max(1e-9),
+            c.cache_hits(),
+            c.cross_fit_hits(),
+            c.peak_resident() as f64 / 1e6,
+        );
+        rows.push((format!("serve_fit_c{clients}"), secs * 1e9 / out.len() as f64));
+        clients *= 2;
+    }
+
+    let mut json = String::from("[\n");
+    for (i, (op, ns)) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "  {{\"op\": \"{op}\", \"n\": {n}, \"p\": {p}, \"ns_iter\": {ns:.1}, \
+             \"threads\": {threads}}}{}\n",
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("]\n");
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|root| root.join("BENCH_serve.json"))
+        .unwrap_or_else(|| std::path::PathBuf::from("BENCH_serve.json"));
+    std::fs::write(&path, json).expect("write BENCH_serve.json");
+    println!("wrote {}", path.display());
+}

@@ -50,7 +50,14 @@ impl Config {
                 if let Some((k, v)) = stripped.split_once('=') {
                     self.values.insert(k.to_string(), v.to_string());
                 } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
-                    let v = it.next().unwrap();
+                    // The peek above proved a next token exists; bind it
+                    // instead of unwrapping so a racing/odd iterator can
+                    // never panic the parser.
+                    let Some(v) = it.next() else {
+                        return Err(HssrError::Config(format!(
+                            "flag '--{stripped}' expects a value"
+                        )));
+                    };
                     self.values.insert(stripped.to_string(), v);
                 } else {
                     self.values.insert(stripped.to_string(), "true".to_string());
@@ -134,6 +141,36 @@ mod tests {
     #[test]
     fn rejects_malformed_lines() {
         assert!(Config::from_str_body("oops").is_err());
+        // `=`-less junk, keys without values, and bare separators are all
+        // typed Config errors — never panics.
+        for body in ["key", "a b c", "=", " = ", "x = 1\nbroken line\n"] {
+            match Config::from_str_body(body) {
+                Ok(cfg) => {
+                    // `=` with empty key/value parses to empty strings;
+                    // what matters is that nothing panicked.
+                    let _ = cfg.get_str("x", "");
+                }
+                Err(HssrError::Config(_)) => {}
+                Err(other) => panic!("unexpected error type: {other}"),
+            }
+        }
+    }
+
+    /// Trailing value-less flags and `--`-prefixed lookalikes must parse
+    /// without panicking (regression: `it.next().unwrap()`).
+    #[test]
+    fn malformed_args_never_panic() {
+        let mut cfg = Config::default();
+        cfg.apply_args(["--alone"].map(String::from)).unwrap();
+        assert!(cfg.get_bool("alone", false));
+        let mut cfg = Config::default();
+        cfg.apply_args(["--a", "--b", "--c="].map(String::from)).unwrap();
+        assert!(cfg.get_bool("a", false) && cfg.get_bool("b", false));
+        assert_eq!(cfg.get_str("c", "miss"), "");
+        let mut cfg = Config::default();
+        cfg.apply_args(["--k", "v", "--end"].map(String::from)).unwrap();
+        assert_eq!(cfg.get_str("k", ""), "v");
+        assert!(cfg.get_bool("end", false));
     }
 
     #[test]

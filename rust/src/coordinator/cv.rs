@@ -1,17 +1,31 @@
 //! K-fold cross-validation for λ selection — the standard downstream
 //! workflow around a path solver (cv.biglasso / cv.glmnet).
 //!
-//! Folds are deterministic given the seed; fold fits run across worker
-//! threads via [`super::jobs::parallel_map`]; the λ grid is fixed globally
-//! (computed on the full data) so fold errors are comparable per λ. Each
-//! fold fit runs through the unified Algorithm-1 driver
-//! ([`crate::solver::driver::drive`]) via [`fit_lasso_path`], so engine
-//! and screening improvements land here automatically.
+//! Folds are deterministic given the seed; fold fits run as parallel jobs
+//! on the shared worker pool via [`super::jobs::try_parallel_map`], so a
+//! failing fold surfaces as a typed [`HssrError::Cv`] carrying its fold
+//! index (and the failing λ, when the path degraded) instead of poisoning
+//! the whole run. The λ grid is fixed globally (computed on the full
+//! data) so fold errors are comparable per λ.
+//!
+//! CV is **engine-routed**: under `HSSR_ENGINE=ooc` each fold streams its
+//! restandardized training view straight into a temp column store — one
+//! column in flight, never an `n×p` fold copy — and fits it through
+//! [`fit_lasso_path_store`], so `k` concurrent fold fits keep peak
+//! resident bytes bounded by the chunk-cache budget. The dense route
+//! materializes the fold as before.
 
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::data::store::{self, write_columns, ColumnSpill, ColumnStore};
 use crate::data::Dataset;
 use crate::error::{HssrError, Result};
-use crate::linalg::DenseMatrix;
-use crate::solver::path::{fit_lasso_path, PathConfig};
+use crate::linalg::{ops, DenseMatrix};
+use crate::solver::path::{
+    fit_lasso_path, fit_lasso_path_store, PathConfig, PathFit,
+};
 
 /// Cross-validation result.
 #[derive(Clone, Debug)]
@@ -59,7 +73,29 @@ pub fn fold_assignment(n: usize, k: usize, seed: u64) -> Vec<usize> {
 /// Each training fold is restandardized (centering/scaling is part of the
 /// estimator), the model fitted over the *global* λ grid, and held-out MSE
 /// computed on the raw held-out rows of the standardized full design.
+/// Fold fits route through the configured engine: see the module docs for
+/// the `HSSR_ENGINE=ooc` streaming path.
 pub fn cv_lasso(ds: &Dataset, cfg: &PathConfig, k: usize, seed: u64) -> Result<CvResult> {
+    let ooc = matches!(
+        std::env::var("HSSR_ENGINE"),
+        Ok(v) if v.eq_ignore_ascii_case("ooc")
+    );
+    cv_lasso_routed(ds, cfg, k, seed, ooc)
+}
+
+/// [`cv_lasso`] with the engine route pinned explicitly instead of read
+/// from `HSSR_ENGINE`: `ooc = true` streams every training fold through a
+/// disk spill (never materializing k in-flight dense fold copies),
+/// `false` materializes fold designs in memory. Both routes are
+/// bit-identical; tests pin that equivalence without touching the
+/// process environment.
+pub fn cv_lasso_routed(
+    ds: &Dataset,
+    cfg: &PathConfig,
+    k: usize,
+    seed: u64,
+    ooc: bool,
+) -> Result<CvResult> {
     if k < 2 || k > ds.n() / 2 {
         return Err(HssrError::Config(format!("cv folds must be in [2, n/2], got {k}")));
     }
@@ -74,62 +110,12 @@ pub fn cv_lasso(ds: &Dataset, cfg: &PathConfig, k: usize, seed: u64) -> Result<C
     let fold_of = fold_assignment(ds.n(), k, seed);
 
     let fold_mse: Vec<Vec<f64>> =
-        super::jobs::parallel_map(k, super::jobs::default_threads(), |f| {
-            // --- split ---
-            let train_rows: Vec<usize> =
-                (0..ds.n()).filter(|&i| fold_of[i] != f).collect();
-            let test_rows: Vec<usize> = (0..ds.n()).filter(|&i| fold_of[i] == f).collect();
-            // training design (rows of the standardized full design are
-            // re-centered/scaled to keep condition (2) on the subsample)
-            let mut xtr = DenseMatrix::zeros(train_rows.len(), ds.p());
-            for j in 0..ds.p() {
-                let col = ds.x.col(j);
-                let dst = xtr.col_mut(j);
-                for (a, &i) in train_rows.iter().enumerate() {
-                    dst[a] = col[i];
-                }
-            }
-            let mut ytr: Vec<f64> = train_rows.iter().map(|&i| ds.y[i]).collect();
-            let (centers, scales) =
-                crate::data::standardize::standardize_in_place(&mut xtr, &mut ytr);
-            let y_mean_shift: f64 = {
-                // standardize_in_place centered ytr; recover the shift
-                let orig_mean: f64 = train_rows.iter().map(|&i| ds.y[i]).sum::<f64>()
-                    / train_rows.len() as f64;
-                orig_mean
-            };
-            let sub = Dataset {
-                x: xtr,
-                y: ytr,
-                centers: centers.clone(),
-                scales: scales.clone(),
-                name: format!("{}-fold{f}", ds.name),
-                truth: None,
-            };
-            let mut fold_cfg = cfg.clone();
-            fold_cfg.lambdas = Some(lambdas.clone());
-            let fit = fit_lasso_path(&sub, &fold_cfg).expect("fold fit");
-            // --- evaluate on held-out rows ---
-            lambdas
-                .iter()
-                .enumerate()
-                .map(|(li, _)| {
-                    let beta = fit.beta_dense(li);
-                    let mut mse = 0.0;
-                    for &i in &test_rows {
-                        let mut eta = y_mean_shift;
-                        for (j, &b) in beta.iter().enumerate() {
-                            if b != 0.0 && scales[j] > 0.0 {
-                                eta += b * (ds.x.get(i, j) - centers[j]) / scales[j];
-                            }
-                        }
-                        let e = ds.y[i] - eta;
-                        mse += e * e;
-                    }
-                    mse / test_rows.len() as f64
-                })
-                .collect()
-        });
+        super::jobs::try_parallel_map(k, super::jobs::default_threads(), |f| {
+            fold_mse_for(ds, cfg, &lambdas, &fold_of, f, ooc).map_err(|e| match e {
+                e @ HssrError::Cv { .. } => e,
+                other => HssrError::Cv { fold: Some(f), message: other.to_string() },
+            })
+        })?;
 
     let kl = lambdas.len();
     let mut cv_mean = vec![0.0; kl];
@@ -142,22 +128,223 @@ pub fn cv_lasso(ds: &Dataset, cfg: &PathConfig, k: usize, seed: u64) -> Result<C
         cv_mean[li] = mean;
         cv_se[li] = (var / k as f64).sqrt();
     }
-    let idx_min = cv_mean
-        .iter()
-        .enumerate()
-        .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-        .map(|(i, _)| i)
-        .unwrap_or(0);
-    let threshold = cv_mean[idx_min] + cv_se[idx_min];
-    let idx_1se = (0..=idx_min).find(|&i| cv_mean[i] <= threshold).unwrap_or(idx_min);
+    let (idx_min, idx_1se) = select_lambda(&cv_mean, &cv_se)?;
     Ok(CvResult { lambdas, cv_mean, cv_se, idx_min, idx_1se, folds: k })
 }
 
+/// Pick `(idx_min, idx_1se)` from the per-λ CV means: a total-order argmin
+/// over the *finite* means only — a non-finite fold mean (overflowed MSE
+/// at an extreme λ) can never win the argmin, and never panics the
+/// comparator. When every mean is non-finite there is no λ to select:
+/// typed [`HssrError::Cv`] with no fold attribution.
+fn select_lambda(cv_mean: &[f64], cv_se: &[f64]) -> Result<(usize, usize)> {
+    let idx_min = cv_mean
+        .iter()
+        .enumerate()
+        .filter(|(_, m)| m.is_finite())
+        .min_by(|a, b| a.1.total_cmp(b.1))
+        .map(|(i, _)| i)
+        .ok_or_else(|| HssrError::Cv {
+            fold: None,
+            message: format!(
+                "all {} per-λ CV means are non-finite — no λ can be selected",
+                cv_mean.len()
+            ),
+        })?;
+    let threshold = cv_mean[idx_min] + cv_se[idx_min];
+    // NaN means fail the `<=` and are skipped, as they must be.
+    let idx_1se = (0..=idx_min).find(|&i| cv_mean[i] <= threshold).unwrap_or(idx_min);
+    Ok((idx_min, idx_1se))
+}
+
+/// Fit fold `f` over the global grid and return its per-λ held-out MSE.
+fn fold_mse_for(
+    ds: &Dataset,
+    cfg: &PathConfig,
+    lambdas: &[f64],
+    fold_of: &[usize],
+    f: usize,
+    ooc: bool,
+) -> Result<Vec<f64>> {
+    // --- split ---
+    let train_rows: Vec<usize> = (0..ds.n()).filter(|&i| fold_of[i] != f).collect();
+    let test_rows: Vec<usize> = (0..ds.n()).filter(|&i| fold_of[i] == f).collect();
+    let mut fold_cfg = cfg.clone();
+    fold_cfg.lambdas = Some(lambdas.to_vec());
+    let y_mean_shift: f64 =
+        train_rows.iter().map(|&i| ds.y[i]).sum::<f64>() / train_rows.len() as f64;
+
+    let (fit, centers, scales) = if ooc {
+        fit_fold_store(ds, &train_rows, &fold_cfg, f)?
+    } else {
+        fit_fold_dense(ds, &train_rows, &fold_cfg, f)?
+    };
+    if let Some(perr) = &fit.error {
+        return Err(HssrError::Cv {
+            fold: Some(f),
+            message: format!(
+                "path degraded at λ#{} (λ = {:.6e}): {}",
+                perr.lambda_index, perr.lambda, perr.reason
+            ),
+        });
+    }
+
+    // --- evaluate on held-out rows ---
+    Ok(lambdas
+        .iter()
+        .enumerate()
+        .map(|(li, _)| {
+            let beta = fit.beta_dense(li);
+            let mut mse = 0.0;
+            for &i in &test_rows {
+                let mut eta = y_mean_shift;
+                for (j, &b) in beta.iter().enumerate() {
+                    if b != 0.0 && scales[j] > 0.0 {
+                        eta += b * (ds.x.get(i, j) - centers[j]) / scales[j];
+                    }
+                }
+                let e = ds.y[i] - eta;
+                mse += e * e;
+            }
+            mse / test_rows.len() as f64
+        })
+        .collect())
+}
+
+/// Dense fold route: materialize and restandardize the training rows
+/// (re-centered/scaled to keep condition (2) on the subsample), then fit
+/// through the default engine.
+fn fit_fold_dense(
+    ds: &Dataset,
+    train_rows: &[usize],
+    fold_cfg: &PathConfig,
+    f: usize,
+) -> Result<(PathFit, Vec<f64>, Vec<f64>)> {
+    let mut xtr = DenseMatrix::zeros(train_rows.len(), ds.p());
+    for j in 0..ds.p() {
+        let col = ds.x.col(j);
+        let dst = xtr.col_mut(j);
+        for (a, &i) in train_rows.iter().enumerate() {
+            dst[a] = col[i];
+        }
+    }
+    let mut ytr: Vec<f64> = train_rows.iter().map(|&i| ds.y[i]).collect();
+    let (centers, scales) =
+        crate::data::standardize::standardize_in_place(&mut xtr, &mut ytr);
+    let sub = Dataset {
+        x: xtr,
+        y: ytr,
+        centers: centers.clone(),
+        scales: scales.clone(),
+        name: format!("{}-fold{f}", ds.name),
+        truth: None,
+    };
+    let fit = fit_lasso_path(&sub, fold_cfg)?;
+    Ok((fit, centers, scales))
+}
+
+/// Out-of-core fold route: stream the restandardized training view of the
+/// fold straight into a temp column store — one column in flight, never an
+/// `n×p` copy — and fit it from the store under the cache budget. The
+/// arithmetic per column is identical to
+/// [`crate::data::standardize::standardize_in_place`] on the materialized
+/// fold, so both routes produce bit-identical fits.
+fn fit_fold_store(
+    ds: &Dataset,
+    train_rows: &[usize],
+    fold_cfg: &PathConfig,
+    f: usize,
+) -> Result<(PathFit, Vec<f64>, Vec<f64>)> {
+    let n = train_rows.len();
+    let p = ds.p();
+    let mut ytr: Vec<f64> = train_rows.iter().map(|&i| ds.y[i]).collect();
+    crate::data::standardize::center(&mut ytr);
+    // Pass 1: per-column centers/scales of the training view.
+    let mut centers = vec![0.0; p];
+    let mut scales = vec![0.0; p];
+    let mut buf = vec![0.0; n];
+    for j in 0..p {
+        let col = ds.x.col(j);
+        for (a, &i) in train_rows.iter().enumerate() {
+            buf[a] = col[i];
+        }
+        let m = ops::mean(&buf);
+        for v in buf.iter_mut() {
+            *v -= m;
+        }
+        let sd = (ops::nrm2_sq(&buf) / n as f64).sqrt();
+        centers[j] = m;
+        scales[j] = if sd > 1e-12 { sd } else { 0.0 };
+    }
+    // Pass 2: stream the standardized columns into the spill.
+    let path = fold_spill_path(f);
+    let spec = ColumnSpill {
+        n,
+        p,
+        y: &ytr,
+        centers: &centers,
+        scales: &scales,
+        standardized: true,
+        chunk_cols: store::chunk_cols_for(n, p, store::DEFAULT_CHUNK_BYTES),
+    };
+    let written = write_columns(
+        &spec,
+        |j, out| {
+            out.clear();
+            let col = ds.x.col(j);
+            out.extend(train_rows.iter().map(|&i| col[i]));
+            let m = centers[j];
+            if scales[j] > 0.0 {
+                let inv = 1.0 / scales[j];
+                for v in out.iter_mut() {
+                    *v -= m;
+                    *v *= inv;
+                }
+            } else {
+                for v in out.iter_mut() {
+                    *v = 0.0;
+                }
+            }
+            Ok(())
+        },
+        &path,
+    );
+    if let Err(e) = written {
+        let _ = std::fs::remove_file(&path);
+        return Err(e);
+    }
+    let opened = ColumnStore::open(&path, store::cache_budget_bytes());
+    // Unix: unlink immediately — the open handle keeps it readable and
+    // the spill can never outlive the process.
+    #[cfg(unix)]
+    let _ = std::fs::remove_file(&path);
+    let store = match opened {
+        Ok(s) => Arc::new(s),
+        Err(e) => {
+            let _ = std::fs::remove_file(&path);
+            return Err(e);
+        }
+    };
+    let res = fit_lasso_path_store(store, fold_cfg, None);
+    let _ = std::fs::remove_file(&path);
+    let (fit, _) = res?;
+    Ok((fit, centers, scales))
+}
+
+fn fold_spill_path(f: usize) -> PathBuf {
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    let seq = SEQ.fetch_add(1, Ordering::Relaxed);
+    std::env::temp_dir()
+        .join(format!("hssr-cvfold-{}-{f}-{seq}.store", std::process::id()))
+}
+
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
     use crate::data::DataSpec;
     use crate::screening::RuleKind;
+    use crate::solver::Penalty;
 
     #[test]
     fn folds_partition_evenly() {
@@ -192,5 +379,60 @@ mod tests {
         let cfg = PathConfig::default();
         assert!(cv_lasso(&ds, &cfg, 1, 1).is_err());
         assert!(cv_lasso(&ds, &cfg, 20, 1).is_err());
+    }
+
+    /// The streamed out-of-core fold route must reproduce the dense route
+    /// exactly: same standardization arithmetic, same fits, same CV curve.
+    #[test]
+    fn ooc_fold_route_matches_dense_bitwise() {
+        let ds = DataSpec::synthetic(90, 30, 4).generate(6);
+        let cfg = PathConfig { n_lambda: 12, ..PathConfig::default() };
+        let dense = cv_lasso_routed(&ds, &cfg, 3, 9, false).unwrap();
+        let ooc = cv_lasso_routed(&ds, &cfg, 3, 9, true).unwrap();
+        assert_eq!(dense.cv_mean, ooc.cv_mean, "ooc CV curve deviates from dense");
+        assert_eq!(dense.cv_se, ooc.cv_se);
+        assert_eq!((dense.idx_min, dense.idx_1se), (ooc.idx_min, ooc.idx_1se));
+    }
+
+    /// An injected fold-fit failure (invalid penalty caught in the fold's
+    /// problem constructor) surfaces as a typed [`HssrError::Cv`] carrying
+    /// the first failing fold's index — never a panic.
+    #[test]
+    fn fold_fit_failure_is_typed_with_fold_index() {
+        let ds = DataSpec::synthetic(60, 20, 3).generate(5);
+        let cfg = PathConfig {
+            penalty: Penalty::ElasticNet { alpha: 0.0 },
+            n_lambda: 5,
+            ..PathConfig::default()
+        };
+        match cv_lasso(&ds, &cfg, 3, 1) {
+            Err(HssrError::Cv { fold: Some(0), message }) => {
+                assert!(!message.is_empty());
+            }
+            other => panic!("expected Cv error for fold 0, got {other:?}"),
+        }
+    }
+
+    /// Non-finite per-λ means sink in the selection order; when every mean
+    /// is non-finite the failure is typed, with no fold attribution.
+    #[test]
+    fn lambda_selection_sinks_non_finite_means() {
+        let se = vec![0.0; 4];
+        // NaN and +inf can never win the argmin.
+        let (idx_min, idx_1se) =
+            select_lambda(&[f64::NAN, 3.0, 2.0, f64::INFINITY], &se).unwrap();
+        assert_eq!(idx_min, 2);
+        assert!(idx_1se <= idx_min);
+        // A NaN inside the 1-SE prefix is skipped, not selected.
+        let (_, idx_1se) = select_lambda(&[f64::NAN, 2.5, 2.0, 9.0], &[0.0, 0.6, 0.6, 0.6])
+            .unwrap();
+        assert_eq!(idx_1se, 1);
+        // All non-finite: typed error, no fold index.
+        match select_lambda(&[f64::NAN, f64::INFINITY], &[0.0, 0.0]) {
+            Err(HssrError::Cv { fold: None, message }) => {
+                assert!(message.contains("non-finite"), "{message}");
+            }
+            other => panic!("expected Cv error, got {other:?}"),
+        }
     }
 }

@@ -10,6 +10,7 @@
 //! reentrancy guard), so the machine is never oversubscribed the way
 //! nested `thread::scope` fan-outs were.
 
+use crate::error::Result;
 use crate::linalg::pool;
 
 /// Run `f(i)` for `i in 0..jobs` across the shared worker pool, returning
@@ -26,6 +27,24 @@ where
         return (0..jobs).map(f).collect();
     }
     pool::global().map(jobs, f)
+}
+
+/// Fallible [`parallel_map`]: every job returns a `Result`, all jobs run
+/// to completion (no cancellation mid-pool-dispatch), and the call returns
+/// either every success in index order or the **first error by job index**
+/// — deterministic regardless of which worker hit its error first. A fold
+/// fit that fails must surface typed, never `panic!` a pool worker.
+pub fn try_parallel_map<T, F>(jobs: usize, threads: usize, f: F) -> Result<Vec<T>>
+where
+    T: Send,
+    F: Fn(usize) -> Result<T> + Sync,
+{
+    let results: Vec<Result<T>> = parallel_map(jobs, threads, &f);
+    let mut out = Vec::with_capacity(jobs);
+    for r in results {
+        out.push(r?);
+    }
+    Ok(out)
 }
 
 /// Default worker-thread count for untimed work: the shared pool's size
@@ -93,5 +112,33 @@ mod tests {
     #[test]
     fn default_threads_positive() {
         assert!(default_threads() >= 1);
+    }
+
+    #[test]
+    fn try_map_collects_successes_in_order() {
+        let out = try_parallel_map(16, 4, |i| Ok(i * 3)).unwrap();
+        assert_eq!(out, (0..16).map(|i| i * 3).collect::<Vec<_>>());
+    }
+
+    /// The error surfaced is the first *by job index*, not by wall-clock
+    /// completion order — deterministic under work stealing.
+    #[test]
+    fn try_map_returns_first_error_by_index() {
+        use crate::error::HssrError;
+        let err = try_parallel_map(12, 4, |i| -> crate::error::Result<usize> {
+            if i == 3 || i == 9 {
+                Err(HssrError::Config(format!("job {i} failed")))
+            } else {
+                Ok(i)
+            }
+        })
+        .unwrap_err();
+        assert!(err.to_string().contains("job 3 failed"), "got {err}");
+    }
+
+    #[test]
+    fn try_map_serial_path_matches() {
+        let out = try_parallel_map(5, 1, |i| Ok(i)).unwrap();
+        assert_eq!(out, vec![0, 1, 2, 3, 4]);
     }
 }

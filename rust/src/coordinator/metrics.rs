@@ -179,6 +179,10 @@ pub struct OocTraffic {
     pub bytes_read: u64,
     /// Chunk-cache hits.
     pub cache_hits: u64,
+    /// Cache hits on chunks loaded by a *different* fit — nonzero only
+    /// in serve mode, where concurrent paths share one chunk cache
+    /// (single-fit runs report 0).
+    pub cross_fit_hits: u64,
     /// Peak cache-resident bytes (must stay within the budget).
     pub peak_resident: u64,
     /// Read attempts beyond the first (transient faults absorbed by the
@@ -259,6 +263,7 @@ pub fn ooc_fit_traffic(
             chunk_loads: counters.chunk_loads(),
             bytes_read: counters.bytes_read(),
             cache_hits: counters.cache_hits(),
+            cross_fit_hits: counters.cross_fit_hits(),
             peak_resident: counters.peak_resident(),
             retries: counters.retries(),
             checksum_failures: counters.checksum_failures(),
@@ -288,6 +293,7 @@ pub fn ooc_traffic_table(title: &str, rows: &[OocTraffic]) -> Table {
             "chunk loads",
             "MB read (disk)",
             "cache hits",
+            "xfit hits",
             "peak res MB",
             "stalls",
             "pf hit/iss/waste",
@@ -306,6 +312,7 @@ pub fn ooc_traffic_table(title: &str, rows: &[OocTraffic]) -> Table {
             r.chunk_loads.to_string(),
             format!("{:.1}", r.bytes_read as f64 / 1e6),
             r.cache_hits.to_string(),
+            r.cross_fit_hits.to_string(),
             format!("{:.2}", r.peak_resident as f64 / 1e6),
             r.stalls.to_string(),
             format!("{}/{}/{}", r.prefetch_hits, r.prefetch_issued, r.prefetch_wasted),

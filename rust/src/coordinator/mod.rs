@@ -11,6 +11,7 @@ pub mod cv;
 pub mod jobs;
 pub mod metrics;
 pub mod report;
+pub mod serve;
 
 use crate::bench_harness::{measure, Timing};
 use crate::data::DataSpec;
@@ -149,6 +150,8 @@ mod tests {
             max_iter: 100_000,
             lambdas: None,
             fused: true,
+            rescreen_every: 10,
+            checkpoint: None,
         };
         let cells = run_method_sweep(&specs, &methods, 2, &cfg, 5).unwrap();
         assert_eq!(cells.len(), 2);

@@ -1,0 +1,306 @@
+//! The concurrent fit service: many λ-paths, one worker pool, one cache.
+//!
+//! [`FitService`] multiplexes many concurrent [`PathConfig`] fits onto a
+//! **single** shared [`ColumnStore`] — one bounded chunk cache, one set of
+//! I/O counters — instead of giving every fit its own spill and cache.
+//! Three mechanisms make that safe and fast:
+//!
+//! * **Admission control.** A counting semaphore (`max_concurrent`
+//!   permits) bounds how many fits are in flight at once, so a burst of
+//!   requests degrades into an orderly queue instead of thrashing the
+//!   shared cache. Queued fits park on a condvar; permits are RAII so an
+//!   erroring fit can never leak its slot.
+//! * **Fit tagging.** Every admitted fit gets a process-unique id
+//!   (starting at 1; 0 means untagged) installed as the thread's
+//!   [`FitTag`]. The store stamps cached chunks with the id that loaded
+//!   them, so a cache hit on another fit's chunk is counted as a
+//!   *cross-fit* hit ([`crate::data::store::StoreCounters::cross_fit_hits`])
+//!   — the measurable payoff of sharing one cache.
+//! * **Warm-start registry.** Completed fits deposit their
+//!   [`WarmStart`] (final solver state + λ-prefix) keyed by everything
+//!   that affects the solution *except* the λ grid. A later request with
+//!   a compatible grid prefix resumes from the registry instead of
+//!   re-solving from λmax — bit-identical to a cold fit by the driver's
+//!   adoption contract (see [`WarmStart::compatible`]).
+//!
+//! Batches run on the shared worker pool via
+//! [`super::jobs::try_parallel_map`]; the pool's inline-reentrancy rule
+//! means fits waiting on a permit can never deadlock the scans of the
+//! fits that hold one.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+
+use super::jobs;
+use crate::data::store::{ColumnStore, FitTag};
+use crate::error::Result;
+use crate::solver::path::{fit_lasso_path_store, PathConfig, PathFit, WarmStart};
+
+/// Lock with poison recovery: a fit that panicked while holding the lock
+/// must not wedge the whole service (the guarded state — a permit count
+/// and a warm-start map — is valid at every step).
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// One completed fit from the service.
+#[derive(Clone, Debug)]
+pub struct FitResponse {
+    /// The fitted path (identical to a standalone [`fit_lasso_path_store`]
+    /// run of the same config).
+    pub fit: PathFit,
+    /// The process-unique fit id this job ran under (chunk-cache owner
+    /// tag; ids start at 1).
+    pub fit_id: u64,
+    /// Whether the warm-start registry held an entry for this config's
+    /// key and offered it to the driver (adoption is still subject to
+    /// [`WarmStart::compatible`] — an incompatible grid falls back to a
+    /// cold start silently).
+    pub warm_hit: bool,
+}
+
+/// A long-running fit service over one shared [`ColumnStore`].
+///
+/// The service is `Sync`: call [`FitService::run_one`] from any number of
+/// threads, or hand a whole batch to [`FitService::run_batch`].
+pub struct FitService {
+    store: Arc<ColumnStore>,
+    /// Free admission permits; waiters park on `available`.
+    slots: Mutex<usize>,
+    available: Condvar,
+    /// Best known warm start per config key (longest λ-prefix wins).
+    registry: Mutex<HashMap<String, WarmStart>>,
+    /// Monotone fit-id source; also counts fits admitted so far.
+    next_fit: AtomicU64,
+    in_flight: AtomicU64,
+    peak_in_flight: AtomicU64,
+    max_concurrent: usize,
+}
+
+/// RAII admission permit: returns the slot (and decrements the in-flight
+/// gauge) on drop, even when the fit errors.
+struct Permit<'a> {
+    svc: &'a FitService,
+}
+
+impl Drop for Permit<'_> {
+    fn drop(&mut self) {
+        self.svc.in_flight.fetch_sub(1, Ordering::Relaxed);
+        let mut slots = lock(&self.svc.slots);
+        *slots += 1;
+        self.svc.available.notify_one();
+    }
+}
+
+/// The registry key: everything that affects the solution path *except*
+/// the λ grid, so a request extending an earlier grid still hits. Floats
+/// are keyed by bit pattern ([`WarmStart::compatible`] re-checks the
+/// grid prefix bitwise at adoption time).
+fn registry_key(cfg: &PathConfig) -> String {
+    format!(
+        "{:?}|a{:016x}|t{:016x}|i{}|r{}|f{}",
+        cfg.rule,
+        cfg.penalty.alpha().to_bits(),
+        cfg.tol.to_bits(),
+        cfg.max_iter,
+        cfg.rescreen_every,
+        cfg.fused
+    )
+}
+
+impl FitService {
+    /// Stand up a service over an already-mounted store. `max_concurrent`
+    /// bounds in-flight fits (clamped to at least 1).
+    pub fn new(store: Arc<ColumnStore>, max_concurrent: usize) -> FitService {
+        let max_concurrent = max_concurrent.max(1);
+        FitService {
+            store,
+            slots: Mutex::new(max_concurrent),
+            available: Condvar::new(),
+            registry: Mutex::new(HashMap::new()),
+            next_fit: AtomicU64::new(0),
+            in_flight: AtomicU64::new(0),
+            peak_in_flight: AtomicU64::new(0),
+            max_concurrent,
+        }
+    }
+
+    /// Block until an admission permit is free, then claim it.
+    fn acquire(&self) -> Permit<'_> {
+        let mut slots = lock(&self.slots);
+        while *slots == 0 {
+            slots = self
+                .available
+                .wait(slots)
+                .unwrap_or_else(std::sync::PoisonError::into_inner);
+        }
+        *slots -= 1;
+        drop(slots);
+        let now = self.in_flight.fetch_add(1, Ordering::Relaxed) + 1;
+        self.peak_in_flight.fetch_max(now, Ordering::Relaxed);
+        Permit { svc: self }
+    }
+
+    /// Run one fit: wait for admission, tag the thread with a fresh fit
+    /// id, consult the warm-start registry, fit against the shared store,
+    /// and deposit the resulting warm start (longest λ-prefix per key
+    /// wins).
+    pub fn run_one(&self, cfg: &PathConfig) -> Result<FitResponse> {
+        let _permit = self.acquire();
+        let fit_id = self.next_fit.fetch_add(1, Ordering::Relaxed) + 1;
+        let _tag = FitTag::set(fit_id);
+        let key = registry_key(cfg);
+        let warm = lock(&self.registry).get(&key).cloned();
+        let warm_hit = warm.is_some();
+        let (fit, warm_out) = fit_lasso_path_store(Arc::clone(&self.store), cfg, warm.as_ref())?;
+        if let Some(w) = warm_out {
+            let mut reg = lock(&self.registry);
+            let keep = match reg.get(&key) {
+                Some(prev) => prev.prefix_len() < w.prefix_len(),
+                None => true,
+            };
+            if keep {
+                reg.insert(key, w);
+            }
+        }
+        Ok(FitResponse { fit, fit_id, warm_hit })
+    }
+
+    /// Run a batch of fits concurrently on the shared worker pool. All
+    /// jobs run to completion; the first error (by batch index) is
+    /// returned, otherwise responses come back in batch order.
+    pub fn run_batch(&self, cfgs: &[PathConfig]) -> Result<Vec<FitResponse>> {
+        jobs::try_parallel_map(cfgs.len(), jobs::default_threads(), |i| self.run_one(&cfgs[i]))
+    }
+
+    /// The shared store (shape, cache budget, counters).
+    pub fn store(&self) -> &ColumnStore {
+        &self.store
+    }
+
+    /// Cache hits on chunks loaded by a *different* fit — the measurable
+    /// benefit of one shared chunk cache across concurrent paths.
+    pub fn cross_fit_hits(&self) -> u64 {
+        self.store.counters().cross_fit_hits()
+    }
+
+    /// Total fits admitted so far (equals the highest fit id handed out).
+    pub fn fits_served(&self) -> u64 {
+        self.next_fit.load(Ordering::Relaxed)
+    }
+
+    /// High-water mark of concurrently running fits (≤ `max_concurrent`).
+    pub fn peak_in_flight(&self) -> u64 {
+        self.peak_in_flight.load(Ordering::Relaxed)
+    }
+
+    /// The admission bound this service was built with.
+    pub fn max_concurrent(&self) -> usize {
+        self.max_concurrent
+    }
+
+    /// Number of distinct warm-start registry entries currently held.
+    pub fn registry_len(&self) -> usize {
+        lock(&self.registry).len()
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used)]
+mod tests {
+    use super::*;
+    use crate::data::DataSpec;
+    use crate::runtime::ooc::OocEngine;
+    use crate::screening::RuleKind;
+
+    fn cfg_for(rule: RuleKind) -> PathConfig {
+        PathConfig {
+            rule,
+            n_lambda: 8,
+            lambda_min_ratio: 0.2,
+            tol: 1e-6,
+            max_iter: 2_000,
+            ..PathConfig::default()
+        }
+    }
+
+    /// A concurrent batch over one shared store must be bit-identical to
+    /// standalone fits of the same configs, while the shared cache
+    /// records cross-fit hits and admission stays within its bound.
+    #[test]
+    fn concurrent_batch_matches_standalone_and_shares_cache() {
+        let ds = DataSpec::gene_like(40, 120).generate(7);
+        let engine = OocEngine::spill(&ds.x, &ds.y, 1 << 20).unwrap();
+        let svc = FitService::new(engine.shared_store(), 2);
+        let cfgs: Vec<PathConfig> =
+            [RuleKind::Ssr, RuleKind::SsrBedpp, RuleKind::SsrGapSafe, RuleKind::Ssr]
+                .iter()
+                .map(|&r| cfg_for(r))
+                .collect();
+        let out = svc.run_batch(&cfgs).unwrap();
+        assert_eq!(out.len(), 4);
+        for (cfg, resp) in cfgs.iter().zip(&out) {
+            let fresh = OocEngine::spill(&ds.x, &ds.y, 1 << 20).unwrap();
+            let (want, _) = fit_lasso_path_store(fresh.shared_store(), cfg, None).unwrap();
+            assert_eq!(resp.fit.lambdas, want.lambdas, "{:?}: λ grid differs", cfg.rule);
+            assert_eq!(resp.fit.betas, want.betas, "{:?}: betas differ", cfg.rule);
+            assert!(resp.fit.error.is_none());
+        }
+        let mut ids: Vec<u64> = out.iter().map(|r| r.fit_id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 4, "fit ids must be unique");
+        assert!(ids.iter().all(|&id| id >= 1), "fit ids start at 1");
+        assert!(svc.cross_fit_hits() > 0, "shared cache never crossed fits");
+        assert_eq!(svc.fits_served(), 4);
+        assert!(svc.peak_in_flight() <= 2, "admission bound violated");
+    }
+
+    /// A second request with the same config key and an extended λ grid
+    /// resumes from the registry: the prefix is served verbatim and the
+    /// extended fit is bit-identical to a cold fit over the full grid.
+    #[test]
+    fn warm_start_registry_serves_prefixes() {
+        let ds = DataSpec::synthetic(30, 40, 3).generate(3);
+        let engine = OocEngine::spill(&ds.x, &ds.y, 1 << 20).unwrap();
+        let svc = FitService::new(engine.shared_store(), 1);
+        let mut cfg = cfg_for(RuleKind::SsrBedpp);
+        cfg.n_lambda = 6;
+        let first = svc.run_one(&cfg).unwrap();
+        assert!(!first.warm_hit, "empty registry cannot hit");
+        assert_eq!(svc.registry_len(), 1);
+        let mut grid = first.fit.lambdas.clone();
+        grid.push(grid.last().unwrap() * 0.5);
+        cfg.lambdas = Some(grid.clone());
+        let second = svc.run_one(&cfg).unwrap();
+        assert!(second.warm_hit, "registry entry was not offered");
+        assert_eq!(second.fit.lambdas, grid);
+        let k = first.fit.betas.len();
+        assert_eq!(&second.fit.betas[..k], &first.fit.betas[..], "prefix not served verbatim");
+        let fresh = OocEngine::spill(&ds.x, &ds.y, 1 << 20).unwrap();
+        let (cold, _) = fit_lasso_path_store(fresh.shared_store(), &cfg, None).unwrap();
+        assert_eq!(second.fit.betas, cold.betas, "warm resume deviates from cold fit");
+    }
+
+    /// Different rules key different registry entries; a narrower
+    /// admission bound still completes every job in the batch.
+    #[test]
+    fn registry_keys_are_config_scoped() {
+        let ds = DataSpec::synthetic(25, 30, 2).generate(11);
+        let engine = OocEngine::spill(&ds.x, &ds.y, 1 << 20).unwrap();
+        let svc = FitService::new(engine.shared_store(), 1);
+        let cfgs = vec![cfg_for(RuleKind::Ssr), cfg_for(RuleKind::SsrBedpp)];
+        let out = svc.run_batch(&cfgs).unwrap();
+        assert_eq!(out.len(), 2);
+        assert_eq!(svc.registry_len(), 2, "distinct rules must not share a key");
+        assert!(svc.peak_in_flight() <= 1);
+        let mut tol_cfg = cfg_for(RuleKind::Ssr);
+        tol_cfg.tol = 1e-8;
+        assert_ne!(
+            registry_key(&cfgs[0]),
+            registry_key(&tol_cfg),
+            "tolerance must be part of the key"
+        );
+    }
+}

@@ -34,6 +34,11 @@ struct Entry {
     pins: u32,
     /// Inserted by the prefetcher and not yet used by a demand access.
     prefetched: bool,
+    /// Fit id that loaded this chunk (`0` = untagged: single-fit CLI runs
+    /// and the async prefetcher). A demand hit from a *different* non-zero
+    /// fit id is a cross-fit hit — the serve-mode sharing the cache exists
+    /// to produce (counted by the reader via [`ChunkCache::owner_of`]).
+    owner: u64,
 }
 
 /// A byte-budgeted LRU map from chunk index to decoded column data.
@@ -86,6 +91,13 @@ impl ChunkCache {
     /// Whether chunk `c` is cached (no LRU touch).
     pub fn contains(&self, c: usize) -> bool {
         self.map.contains_key(&c)
+    }
+
+    /// Fit id that loaded chunk `c` (no LRU touch); `None` when absent.
+    /// Read *before* the demand [`ChunkCache::get`]/[`ChunkCache::pin`] to
+    /// classify the hit as same-fit or cross-fit.
+    pub fn owner_of(&self, c: usize) -> Option<u64> {
+        self.map.get(&c).map(|e| e.owner)
     }
 
     /// Fetch chunk `c`, marking it most-recently-used. A first demand hit
@@ -148,10 +160,10 @@ impl ChunkCache {
         }
     }
 
-    /// Insert chunk `c`, evicting least-recently-used *unpinned* chunks
-    /// until the budget holds (or nothing evictable remains). Returns the
-    /// number of chunks evicted.
-    pub fn insert(&mut self, c: usize, buf: Arc<Vec<f64>>) -> usize {
+    /// Insert chunk `c` loaded by fit `owner` (`0` = untagged), evicting
+    /// least-recently-used *unpinned* chunks until the budget holds (or
+    /// nothing evictable remains). Returns the number of chunks evicted.
+    pub fn insert(&mut self, c: usize, buf: Arc<Vec<f64>>, owner: u64) -> usize {
         let bytes = buf.len() * 8;
         let mut evicted = 0;
         while self.resident + bytes > self.budget {
@@ -166,7 +178,7 @@ impl ChunkCache {
         self.clock += 1;
         if let Some(old) = self.map.insert(
             c,
-            Entry { buf, stamp: self.clock, pins: 0, prefetched: false },
+            Entry { buf, stamp: self.clock, pins: 0, prefetched: false, owner },
         ) {
             self.resident -= old.buf.len() * 8;
         }
@@ -180,7 +192,7 @@ impl ChunkCache {
     /// pinned), the buffer is discarded and `false` returned, so the
     /// async prefetcher can never push `resident` past the budget. An
     /// already-cached chunk is left untouched (`true`).
-    pub fn insert_prefetched(&mut self, c: usize, buf: Arc<Vec<f64>>) -> bool {
+    pub fn insert_prefetched(&mut self, c: usize, buf: Arc<Vec<f64>>, owner: u64) -> bool {
         if self.map.contains_key(&c) {
             return true;
         }
@@ -192,7 +204,8 @@ impl ChunkCache {
             self.evict(oldest);
         }
         self.clock += 1;
-        self.map.insert(c, Entry { buf, stamp: self.clock, pins: 0, prefetched: true });
+        self.map
+            .insert(c, Entry { buf, stamp: self.clock, pins: 0, prefetched: true, owner });
         self.resident += bytes;
         true
     }
@@ -227,12 +240,12 @@ mod tests {
     fn lru_evicts_oldest_under_budget() {
         // budget = 2 chunks of 4 f64 (32 bytes each)
         let mut c = ChunkCache::new(64);
-        c.insert(0, chunk(4, 0.0));
-        c.insert(1, chunk(4, 1.0));
+        c.insert(0, chunk(4, 0.0), 0);
+        c.insert(1, chunk(4, 1.0), 0);
         assert_eq!(c.resident(), 64);
         // touch 0 so 1 becomes LRU
         assert!(c.get(0).is_some());
-        let evicted = c.insert(2, chunk(4, 2.0));
+        let evicted = c.insert(2, chunk(4, 2.0), 0);
         assert_eq!(evicted, 1);
         assert!(c.contains(0) && c.contains(2) && !c.contains(1));
         assert_eq!(c.resident(), 64);
@@ -241,11 +254,11 @@ mod tests {
     #[test]
     fn oversized_chunk_still_admitted() {
         let mut c = ChunkCache::new(16);
-        c.insert(0, chunk(100, 0.0)); // 800 bytes ≫ budget
+        c.insert(0, chunk(100, 0.0), 0); // 800 bytes ≫ budget
         assert!(c.contains(0));
         assert_eq!(c.resident(), 800);
         // next insert evicts it
-        c.insert(1, chunk(1, 0.0));
+        c.insert(1, chunk(1, 0.0), 0);
         assert!(!c.contains(0) && c.contains(1));
         assert_eq!(c.resident(), 8);
     }
@@ -253,8 +266,8 @@ mod tests {
     #[test]
     fn reinsert_replaces_without_leaking_resident() {
         let mut c = ChunkCache::new(1024);
-        c.insert(3, chunk(8, 0.0));
-        c.insert(3, chunk(8, 1.0));
+        c.insert(3, chunk(8, 0.0), 0);
+        c.insert(3, chunk(8, 1.0), 0);
         assert_eq!(c.resident(), 64);
         assert_eq!(c.get(3).unwrap()[0], 1.0);
         c.clear();
@@ -266,18 +279,18 @@ mod tests {
     fn pinned_chunks_survive_eviction_pressure() {
         // budget = 1 chunk of 4 f64
         let mut c = ChunkCache::new(32);
-        c.insert(0, chunk(4, 0.0));
+        c.insert(0, chunk(4, 0.0), 0);
         assert!(c.pin(0));
         assert_eq!(c.pinned_bytes(), 32);
         // A plain insert cannot evict the pinned chunk: it is admitted
         // over budget (the demand path must be served)…
-        c.insert(1, chunk(4, 1.0));
+        c.insert(1, chunk(4, 1.0), 0);
         assert!(c.contains(0), "pinned chunk was evicted");
         assert_eq!(c.resident(), 64);
         // …and once unpinned, the old chunk is evictable again.
         c.unpin(0);
         assert_eq!(c.pinned_bytes(), 0);
-        c.insert(2, chunk(4, 2.0));
+        c.insert(2, chunk(4, 2.0), 0);
         assert!(!c.contains(0) && c.contains(2));
         assert!(c.resident() <= 64);
     }
@@ -285,14 +298,14 @@ mod tests {
     #[test]
     fn prefetched_insert_respects_budget_and_pins() {
         let mut c = ChunkCache::new(32);
-        c.insert(0, chunk(4, 0.0));
+        c.insert(0, chunk(4, 0.0), 0);
         c.pin(0);
         // Everything resident is pinned: the prefetcher must refuse.
-        assert!(!c.insert_prefetched(1, chunk(4, 1.0)));
+        assert!(!c.insert_prefetched(1, chunk(4, 1.0), 0));
         assert_eq!(c.resident(), 32);
         c.unpin(0);
         // Now it fits by evicting chunk 0.
-        assert!(c.insert_prefetched(1, chunk(4, 1.0)));
+        assert!(c.insert_prefetched(1, chunk(4, 1.0), 0));
         assert!(c.contains(1) && !c.contains(0));
         assert_eq!(c.resident(), 32);
     }
@@ -300,17 +313,35 @@ mod tests {
     #[test]
     fn prefetch_hit_and_waste_accounting() {
         let mut c = ChunkCache::new(64);
-        assert!(c.insert_prefetched(0, chunk(4, 0.0)));
-        assert!(c.insert_prefetched(1, chunk(4, 1.0)));
+        assert!(c.insert_prefetched(0, chunk(4, 0.0), 0));
+        assert!(c.insert_prefetched(1, chunk(4, 1.0), 0));
         // Demand-use chunk 0: one hit, counted once.
         assert!(c.get(0).is_some());
         assert!(c.get(0).is_some());
         // Evict chunk 1 without ever using it: one waste.
-        c.insert(2, chunk(4, 2.0));
-        c.insert(3, chunk(4, 3.0));
+        c.insert(2, chunk(4, 2.0), 0);
+        c.insert(3, chunk(4, 3.0), 0);
         let (hits, wasted) = c.take_prefetch_stats();
         assert_eq!((hits, wasted), (1, 1));
         // Drained.
         assert_eq!(c.take_prefetch_stats(), (0, 0));
+    }
+
+    /// Owner tags stick to the loading fit: reinsert replaces the owner,
+    /// demand hits do not, and eviction removes the record entirely.
+    #[test]
+    fn owner_tag_tracks_loading_fit() {
+        let mut c = ChunkCache::new(64);
+        c.insert(0, chunk(4, 0.0), 7);
+        assert_eq!(c.owner_of(0), Some(7));
+        assert_eq!(c.owner_of(1), None);
+        // A demand hit from another fit leaves the loader's tag in place.
+        assert!(c.get(0).is_some());
+        assert_eq!(c.owner_of(0), Some(7));
+        // Reinsert (reload after eviction elsewhere) re-tags.
+        c.insert(0, chunk(4, 0.5), 9);
+        assert_eq!(c.owner_of(0), Some(9));
+        assert!(c.insert_prefetched(1, chunk(4, 1.0), 0));
+        assert_eq!(c.owner_of(1), Some(0));
     }
 }

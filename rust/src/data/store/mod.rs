@@ -47,8 +47,11 @@ pub mod writer;
 
 pub use fault::{FaultInjector, FaultSpec};
 pub use format::{chunk_cols_for, Header, HEADER_LEN, MAGIC, MAGIC2};
-pub use reader::{ColumnStore, PinnedColumns, Prefetcher};
-pub use writer::{convert_bin, convert_csv, write_dataset, write_matrix, StoreSummary};
+pub use reader::{current_fit, ColumnStore, FitTag, PinnedColumns, Prefetcher};
+pub use writer::{
+    convert_bin, convert_csv, write_columns, write_dataset, write_matrix, ColumnSpill,
+    StoreSummary,
+};
 
 use std::fs::File;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -97,6 +100,7 @@ pub struct StoreCounters {
     prefetch_issued: AtomicU64,
     prefetch_hits: AtomicU64,
     prefetch_wasted: AtomicU64,
+    cross_fit_hits: AtomicU64,
 }
 
 impl StoreCounters {
@@ -169,6 +173,15 @@ impl StoreCounters {
         }
     }
 
+    /// Count one cross-fit cache hit: a demand access from one tagged fit
+    /// (see [`reader::FitTag`]) that found a chunk loaded by a *different*
+    /// tagged fit. This is the sharing the serve-mode shared cache exists
+    /// to create — CV folds and concurrent clients over one design hitting
+    /// each other's chunks.
+    pub fn add_cross_fit_hit(&self) {
+        self.cross_fit_hits.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Columns served since construction (or last reset).
     pub fn cols_fetched(&self) -> u64 {
         self.cols_fetched.load(Ordering::Relaxed)
@@ -235,6 +248,11 @@ impl StoreCounters {
         self.prefetch_wasted.load(Ordering::Relaxed)
     }
 
+    /// Demand hits on chunks loaded by a different concurrent fit.
+    pub fn cross_fit_hits(&self) -> u64 {
+        self.cross_fit_hits.load(Ordering::Relaxed)
+    }
+
     /// Zero every counter.
     pub fn reset(&self) {
         self.cols_fetched.store(0, Ordering::Relaxed);
@@ -250,6 +268,7 @@ impl StoreCounters {
         self.prefetch_issued.store(0, Ordering::Relaxed);
         self.prefetch_hits.store(0, Ordering::Relaxed);
         self.prefetch_wasted.store(0, Ordering::Relaxed);
+        self.cross_fit_hits.store(0, Ordering::Relaxed);
     }
 }
 
@@ -324,6 +343,7 @@ mod tests {
         c.add_stall();
         c.add_prefetch_issued();
         c.add_prefetch_stats(2, 1);
+        c.add_cross_fit_hit();
         assert_eq!(c.cols_fetched(), 2);
         assert_eq!(c.chunk_loads(), 1);
         assert_eq!(c.bytes_read(), 100);
@@ -336,11 +356,12 @@ mod tests {
         assert_eq!(c.stalls(), 1);
         assert_eq!(c.prefetch_issued(), 1);
         assert_eq!((c.prefetch_hits(), c.prefetch_wasted()), (2, 1));
+        assert_eq!(c.cross_fit_hits(), 1);
         c.reset();
         assert_eq!(c.cols_fetched() + c.chunk_loads() + c.bytes_read(), 0);
         assert_eq!(c.retries() + c.checksum_failures() + c.short_reads(), 0);
         assert_eq!(c.solver_cols() + c.stalls() + c.prefetch_issued(), 0);
-        assert_eq!(c.prefetch_hits() + c.prefetch_wasted(), 0);
+        assert_eq!(c.prefetch_hits() + c.prefetch_wasted() + c.cross_fit_hits(), 0);
     }
 
     #[test]

@@ -53,6 +53,7 @@
 //!   poison a fit. Counters: `prefetch_issued` / `prefetch_hits` /
 //!   `prefetch_wasted`, with blocking demand loads counted as `stalls`.
 
+use std::cell::Cell;
 use std::fs::File;
 use std::path::Path;
 use std::sync::{mpsc, Arc, Mutex, MutexGuard, PoisonError};
@@ -65,6 +66,42 @@ use crate::data::Dataset;
 use crate::error::{io_fault_class, FaultClass, HssrError, Result};
 use crate::linalg::{ops, pool, DenseMatrix};
 use crate::serialize::crc32;
+
+thread_local! {
+    /// The fit id tagged onto this thread (`0` = untagged). Serve-mode
+    /// concurrent fits each run under a distinct tag so the shared chunk
+    /// cache can attribute loads and classify hits as same- or cross-fit.
+    static FIT_ID: Cell<u64> = const { Cell::new(0) };
+}
+
+/// RAII fit tag: while alive, cache traffic issued from this thread is
+/// attributed to fit `id`. Dropping restores the previous tag, so nested
+/// scopes (a serve worker running a fold fit inside a service fit) unwind
+/// correctly. Pool fan-outs inside [`ColumnStore`] re-tag their worker
+/// closures with the dispatching thread's fit, so attribution survives the
+/// work-stealing pool; the async [`Prefetcher`] thread stays untagged —
+/// speculative loads belong to no fit.
+pub struct FitTag {
+    prev: u64,
+}
+
+impl FitTag {
+    /// Tag the current thread with fit `id` until the guard drops.
+    pub fn set(id: u64) -> FitTag {
+        FitTag { prev: FIT_ID.with(|c| c.replace(id)) }
+    }
+}
+
+impl Drop for FitTag {
+    fn drop(&mut self) {
+        FIT_ID.with(|c| c.set(self.prev));
+    }
+}
+
+/// The fit id tagged onto the current thread (`0` when untagged).
+pub fn current_fit() -> u64 {
+    FIT_ID.with(|c| c.get())
+}
 
 /// Decode a little-endian f64 byte run (length must be a multiple of 8).
 fn le_f64s(bytes: &[u8]) -> Vec<f64> {
@@ -487,23 +524,36 @@ impl ColumnStore {
         self.counters.add_prefetch_stats(hits, wasted);
     }
 
+    /// Count a cross-fit hit when a *tagged* fit's demand access found a
+    /// chunk loaded by a *different* tagged fit — the sharing the serve
+    /// mode's one-cache design exists to create. Untagged traffic (plain
+    /// CLI fits, the prefetcher) never counts on either side.
+    fn note_cross_fit(&self, owner: u64) {
+        let fit = current_fit();
+        if fit != 0 && owner != 0 && owner != fit {
+            self.counters.add_cross_fit_hit();
+        }
+    }
+
     /// Fetch chunk `c` through the cache (hit: LRU touch; miss: disk load
     /// + insert with LRU eviction under the byte budget). A miss is a
     /// *stall*: compute blocked on a synchronous disk read.
     fn chunk(&self, c: usize) -> Result<Arc<Vec<f64>>> {
         {
             let mut cache = self.cache_lock();
+            let owner = cache.owner_of(c);
             if let Some(buf) = cache.get(c) {
                 self.drain_prefetch_stats(&mut cache);
                 drop(cache);
                 self.counters.add_hit();
+                self.note_cross_fit(owner.unwrap_or(0));
                 return Ok(buf);
             }
         }
         self.counters.add_stall();
         let buf = Arc::new(self.load_chunk(c)?);
         let mut cache = self.cache_lock();
-        cache.insert(c, Arc::clone(&buf));
+        cache.insert(c, Arc::clone(&buf), current_fit());
         self.counters.note_resident(cache.resident() as u64);
         self.drain_prefetch_stats(&mut cache);
         Ok(buf)
@@ -516,18 +566,20 @@ impl ColumnStore {
     fn pin_chunk(&self, c: usize) -> Result<Arc<Vec<f64>>> {
         {
             let mut cache = self.cache_lock();
+            let owner = cache.owner_of(c);
             if let Some(buf) = cache.get(c) {
                 cache.pin(c);
                 self.drain_prefetch_stats(&mut cache);
                 drop(cache);
                 self.counters.add_hit();
+                self.note_cross_fit(owner.unwrap_or(0));
                 return Ok(buf);
             }
         }
         self.counters.add_stall();
         let buf = Arc::new(self.load_chunk(c)?);
         let mut cache = self.cache_lock();
-        cache.insert(c, Arc::clone(&buf));
+        cache.insert(c, Arc::clone(&buf), current_fit());
         cache.pin(c);
         self.counters.note_resident(cache.resident() as u64);
         self.drain_prefetch_stats(&mut cache);
@@ -578,6 +630,7 @@ impl ColumnStore {
         if wanted.is_empty() {
             return Ok(());
         }
+        let fit = current_fit();
         let loaded: Vec<Result<Vec<f64>>> = pool::global().map(wanted.len(), |k| {
             // The scan blocks on these reads — they are demand stalls,
             // unlike the async λ-ahead loads in `prefetch_tagged`.
@@ -586,7 +639,7 @@ impl ColumnStore {
         });
         let mut cache = self.cache_lock();
         for (c, buf) in wanted.into_iter().zip(loaded) {
-            cache.insert(c, Arc::new(buf?));
+            cache.insert(c, Arc::new(buf?), fit);
         }
         self.counters.note_resident(cache.resident() as u64);
         self.drain_prefetch_stats(&mut cache);
@@ -623,7 +676,7 @@ impl ColumnStore {
             self.counters.add_load(raw.len() as u64);
             let buf = Arc::new(self.decode_chunk(c, &raw));
             let mut cache = self.cache_lock();
-            if cache.insert_prefetched(c, buf) {
+            if cache.insert_prefetched(c, buf, current_fit()) {
                 self.counters.add_prefetch_issued();
             } else {
                 // Loaded but not admitted (everything else pinned): pure
@@ -652,7 +705,11 @@ impl ColumnStore {
             }
             return Ok(());
         }
+        // Pool workers have their own thread-locals: re-tag each closure
+        // with the dispatching fit so cache attribution survives fan-out.
+        let fit = current_fit();
         let dots: Vec<Result<f64>> = pool::global().map(idx.len(), |k| {
+            let _tag = FitTag::set(fit);
             self.with_col(idx[k], |col| ops::dot(col, v)).map(|d| d * inv_n)
         });
         for (o, d) in out.iter_mut().zip(dots) {
@@ -1027,6 +1084,41 @@ mod tests {
         store.scan_subset(&v, &(0..16).collect::<Vec<_>>(), &mut out).unwrap();
         assert_eq!(store.counters().prefetch_hits(), 4);
         assert_eq!(store.counters().stalls(), 0, "prefetched scan still stalled");
+    }
+
+    /// Cross-fit hits count exactly when a tagged fit's demand access
+    /// lands on a chunk a *different* tagged fit loaded — never for
+    /// same-fit or untagged traffic — and tags unwind on drop.
+    #[test]
+    fn cross_fit_hits_counted_between_tagged_fits() {
+        let ds = DataSpec::synthetic(10, 8, 2).generate(12);
+        let path = tmp("xfit.store");
+        write_dataset(&ds, 4, &path).unwrap();
+        let store = ColumnStore::open(&path, 1 << 20).unwrap();
+        {
+            let _tag = FitTag::set(1);
+            assert_eq!(current_fit(), 1);
+            {
+                let _inner = FitTag::set(5);
+                assert_eq!(current_fit(), 5);
+            }
+            assert_eq!(current_fit(), 1, "nested tag did not unwind");
+            // Fit 1 loads chunk 0, then hits it again: same-fit traffic.
+            store.with_col(0, |c| c.len()).unwrap();
+            store.with_col(1, |c| c.len()).unwrap();
+        }
+        assert_eq!(current_fit(), 0);
+        assert_eq!(store.counters().cross_fit_hits(), 0);
+        {
+            // Fit 2 hits the chunk fit 1 loaded: one cross-fit hit.
+            let _tag = FitTag::set(2);
+            store.with_col(2, |c| c.len()).unwrap();
+        }
+        assert_eq!(store.counters().cross_fit_hits(), 1);
+        // Untagged demand traffic on the same chunk never counts.
+        store.with_col(3, |c| c.len()).unwrap();
+        assert_eq!(store.counters().cross_fit_hits(), 1);
+        assert!(store.counters().cache_hits() >= 3);
     }
 
     /// The background prefetcher loads chunks while the requester does

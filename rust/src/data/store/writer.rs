@@ -162,6 +162,88 @@ pub fn write_dataset(ds: &Dataset, chunk_cols: usize, path: &Path) -> Result<Sto
     write_matrix(&ds.x, &ds.y, &ds.centers, &ds.scales, true, chunk_cols, path)
 }
 
+/// Dimensions and tail metadata for a [`write_columns`] streaming spill.
+pub struct ColumnSpill<'a> {
+    /// Rows per column.
+    pub n: usize,
+    /// Number of columns the generator will be asked for.
+    pub p: usize,
+    /// Response vector for the tail (length `n`).
+    pub y: &'a [f64],
+    /// Per-column centers metadata (length `p`).
+    pub centers: &'a [f64],
+    /// Per-column scales metadata (length `p`).
+    pub scales: &'a [f64],
+    /// Whether the generated values are already standardized (served
+    /// verbatim) — see [`write_matrix`].
+    pub standardized: bool,
+    /// Chunk width in columns (clamped to `1..=p`).
+    pub chunk_cols: usize,
+}
+
+/// Write a store from a **column generator**: `col(j, buf)` fills `buf`
+/// with column `j`'s `n` values, called once per column in ascending
+/// order. Peak memory is one column plus one chunk (the checksum pass) —
+/// never `n×p` — which is what lets CV spill a standardized fold view of
+/// an out-of-core design without materializing the fold.
+pub fn write_columns(
+    spec: &ColumnSpill<'_>,
+    mut col: impl FnMut(usize, &mut Vec<f64>) -> Result<()>,
+    path: &Path,
+) -> Result<StoreSummary> {
+    let (n, p) = (spec.n, spec.p);
+    if n == 0 || p == 0 {
+        return Err(HssrError::Config("store write: empty design".into()));
+    }
+    if spec.y.len() != n || spec.centers.len() != p || spec.scales.len() != p {
+        return Err(HssrError::Dimension(format!(
+            "store write: y/centers/scales lengths ({}, {}, {}) do not match n={n}, p={p}",
+            spec.y.len(),
+            spec.centers.len(),
+            spec.scales.len()
+        )));
+    }
+    if let Some(i) = spec.y.iter().position(|v| !v.is_finite()) {
+        return Err(HssrError::Config(format!(
+            "store write: non-finite response value at row {i}"
+        )));
+    }
+    let header = Header {
+        n,
+        p,
+        chunk_cols: spec.chunk_cols.clamp(1, p),
+        standardized: spec.standardized,
+        checksums: true,
+    };
+    let file = File::options().read(true).write(true).create(true).truncate(true).open(path)?;
+    let mut w = BufWriter::new(&file);
+    w.write_all(&header.encode())?;
+    let mut buf: Vec<f64> = Vec::with_capacity(n);
+    for j in 0..p {
+        buf.clear();
+        col(j, &mut buf)?;
+        if buf.len() != n {
+            return Err(HssrError::Dimension(format!(
+                "store write: column generator produced {} rows for column {j}, expected {n}",
+                buf.len()
+            )));
+        }
+        if let Some(i) = buf.iter().position(|v| !v.is_finite()) {
+            return Err(HssrError::Config(format!(
+                "store write: non-finite value in generated column {j}, row {i}"
+            )));
+        }
+        write_f64s(&mut w, &buf)?;
+    }
+    write_f64s(&mut w, spec.y)?;
+    write_f64s(&mut w, spec.centers)?;
+    write_f64s(&mut w, spec.scales)?;
+    w.flush()?;
+    drop(w);
+    append_checksums(&file, &header)?;
+    Ok(StoreSummary { header, file_bytes: header.file_len() })
+}
+
 /// Convert an `HSSRBIN1` binary cache (already standardized, column-major)
 /// to a store by streaming: the matrix payload is copied in fixed-size
 /// buffers, never fully resident.
@@ -458,6 +540,78 @@ mod tests {
         let want = crc32(&bytes[tail_start..tail_start + h.tail_bytes()]);
         let got = u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap());
         assert_eq!(got, want, "tail CRC mismatch");
+    }
+
+    /// A `write_columns` spill of the same data is byte-identical to the
+    /// `write_matrix` spill — the streamed layout is the same format.
+    #[test]
+    fn write_columns_matches_write_matrix_bytes() {
+        use crate::data::DataSpec;
+        let ds = DataSpec::synthetic(11, 9, 2).generate(13);
+        let a = tmp("wc_a.store");
+        write_dataset(&ds, 4, &a).unwrap();
+        let b = tmp("wc_b.store");
+        let spec = ColumnSpill {
+            n: 11,
+            p: 9,
+            y: &ds.y,
+            centers: &ds.centers,
+            scales: &ds.scales,
+            standardized: true,
+            chunk_cols: 4,
+        };
+        write_columns(
+            &spec,
+            |j, buf| {
+                buf.extend_from_slice(ds.x.col(j));
+                Ok(())
+            },
+            &b,
+        )
+        .unwrap();
+        assert_eq!(std::fs::read(&a).unwrap(), std::fs::read(&b).unwrap());
+    }
+
+    /// Generator misbehavior — wrong column length, non-finite values —
+    /// surfaces typed, and generator errors pass through.
+    #[test]
+    fn write_columns_rejects_bad_generators() {
+        let spec = ColumnSpill {
+            n: 4,
+            p: 2,
+            y: &[0.0; 4],
+            centers: &[0.0; 2],
+            scales: &[1.0; 2],
+            standardized: true,
+            chunk_cols: 2,
+        };
+        let err = write_columns(
+            &spec,
+            |_, buf| {
+                buf.extend_from_slice(&[1.0; 3]); // short column
+                Ok(())
+            },
+            &tmp("wc_short.store"),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("expected 4"), "got {err}");
+        let err = write_columns(
+            &spec,
+            |_, buf| {
+                buf.extend_from_slice(&[1.0, f64::NAN, 0.0, 0.0]);
+                Ok(())
+            },
+            &tmp("wc_nan.store"),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("non-finite"), "got {err}");
+        let err = write_columns(
+            &spec,
+            |_, _| Err(HssrError::Config("generator failed".into())),
+            &tmp("wc_gen.store"),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("generator failed"), "got {err}");
     }
 
     #[test]

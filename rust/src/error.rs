@@ -43,6 +43,17 @@ pub enum HssrError {
     /// quarantined chunk, malformed checkpoint) and retries are exhausted.
     Corrupt(String),
 
+    /// A cross-validation run failed: a fold fit errored (the fold index is
+    /// attached) or λ selection found no finite fold-mean MSE. Not
+    /// degradable — a CV estimate built on missing folds is not an estimate.
+    Cv {
+        /// Fold whose fit failed; `None` for selection-stage failures that
+        /// are not attributable to one fold.
+        fold: Option<usize>,
+        /// The underlying failure, rendered (fold-fit error, λ context).
+        message: String,
+    },
+
     /// An AOT artifact was missing or malformed.
     Artifact(String),
 
@@ -107,6 +118,12 @@ impl fmt::Display for HssrError {
                  non-finite {context}"
             ),
             HssrError::Corrupt(s) => write!(f, "data corruption: {s}"),
+            HssrError::Cv { fold: Some(k), message } => {
+                write!(f, "cross-validation failed at fold {k}: {message}")
+            }
+            HssrError::Cv { fold: None, message } => {
+                write!(f, "cross-validation failed: {message}")
+            }
             HssrError::Artifact(s) => write!(f, "runtime artifact error: {s}"),
             HssrError::Xla(s) => write!(f, "xla runtime error: {s}"),
             HssrError::Io(e) => write!(f, "io error: {e}"),
@@ -156,6 +173,10 @@ mod tests {
         assert!(e.to_string().contains("cd delta"));
         let e = HssrError::Corrupt("chunk 3 checksum".into());
         assert!(e.to_string().contains("corruption"));
+        let e = HssrError::Cv { fold: Some(2), message: "solver diverged".into() };
+        assert_eq!(e.to_string(), "cross-validation failed at fold 2: solver diverged");
+        let e = HssrError::Cv { fold: None, message: "all fold-mean MSEs non-finite".into() };
+        assert!(e.to_string().starts_with("cross-validation failed: "));
     }
 
     #[test]
@@ -182,6 +203,7 @@ mod tests {
             .is_degradable());
         assert!(!HssrError::Config("bad".into()).is_degradable());
         assert!(!HssrError::Corrupt("chunk".into()).is_degradable());
+        assert!(!HssrError::Cv { fold: Some(0), message: "x".into() }.is_degradable());
         assert!(!HssrError::Io(std::io::Error::new(std::io::ErrorKind::Other, "x"))
             .is_degradable());
     }

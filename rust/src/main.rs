@@ -13,6 +13,9 @@
 //!               [--engine native|pjrt|ooc]           # sparse logistic path (§6)
 //! hssr convert <in.csv|in.bin> <out.store> [--chunk-cols C]
 //!                                # stream CSV/HSSRBIN to the out-of-core store
+//! hssr serve [--clients N] [--max-concurrent M] [--data ...] [--cache-mb M]
+//!                                # N concurrent λ-paths, one store, one cache
+//! hssr bench-serve [--fits F] [--clients N]          # fits/sec vs concurrency
 //! hssr info                                          # build/runtime info
 //! ```
 //!
@@ -40,7 +43,8 @@ use hssr::solver::Penalty;
 
 fn usage() -> ! {
     eprintln!(
-        "usage: hssr <fit|group|power|cv|logistic|convert|info> [--key value ...]\n\
+        "usage: hssr <fit|group|power|cv|logistic|convert|serve|bench-serve|info> \
+         [--key value ...]\n\
          see README.md for the full flag reference"
     );
     std::process::exit(2);
@@ -441,6 +445,111 @@ fn cmd_logistic(cfg: &Config) -> Result<()> {
     Ok(())
 }
 
+/// The request mix a serve run simulates: clients cycle through the
+/// sequential strategies so the shared cache sees heterogeneous paths.
+const SERVE_RULES: [RuleKind; 3] = [RuleKind::Ssr, RuleKind::SsrBedpp, RuleKind::SsrGapSafe];
+
+/// Build the `--clients` concurrent requests for a serve run from the
+/// base CLI config (per-fit checkpoints are disabled: one file cannot be
+/// shared by concurrent fits).
+fn serve_requests(base: &PathConfig, clients: usize) -> Vec<PathConfig> {
+    if base.checkpoint.is_some() {
+        eprintln!("note: --checkpoint is ignored in serve mode");
+    }
+    (0..clients)
+        .map(|i| {
+            let mut c = base.clone();
+            c.rule = SERVE_RULES[i % SERVE_RULES.len()];
+            c.checkpoint = None;
+            c
+        })
+        .collect()
+}
+
+fn cmd_serve(cfg: &Config) -> Result<()> {
+    use hssr::coordinator::serve::FitService;
+    let ds = dataset_from_cfg(cfg)?;
+    let base = path_config_from(cfg)?;
+    let clients = cfg.get_parse("clients", 8usize)?;
+    let max_c =
+        cfg.get_parse("max-concurrent", hssr::coordinator::jobs::default_threads())?;
+    let engine = ooc_engine_for(cfg, &ds.x, &ds.y)?;
+    let svc = FitService::new(engine.shared_store(), max_c);
+    let cfgs = serve_requests(&base, clients);
+    let t0 = std::time::Instant::now();
+    let out = svc.run_batch(&cfgs)?;
+    let secs = t0.elapsed().as_secs_f64();
+    let mut t = Table::new(
+        &format!("serve — {clients} clients on {} (admission {max_c})", ds.name),
+        &["client", "rule", "fit id", "λs", "nnz@λmin", "warm", "secs"],
+    );
+    for (i, r) in out.iter().enumerate() {
+        t.push_row(vec![
+            i.to_string(),
+            r.fit.rule.label().to_string(),
+            r.fit_id.to_string(),
+            r.fit.lambdas.len().to_string(),
+            r.fit.betas.last().map(Vec::len).unwrap_or(0).to_string(),
+            if r.warm_hit { "hit" } else { "cold" }.to_string(),
+            format!("{:.3}", r.fit.seconds),
+        ]);
+    }
+    println!("{}", t.render());
+    let c = svc.store().counters();
+    let hits = c.cache_hits();
+    println!(
+        "served {} fits in {secs:.3}s ({:.2} fits/s, peak {} in flight)",
+        out.len(),
+        out.len() as f64 / secs.max(1e-9),
+        svc.peak_in_flight(),
+    );
+    println!(
+        "shared cache: {} chunk loads, {hits} hits, {} cross-fit hits \
+         ({:.1}% of hits), peak resident {:.1} MB (budget {:.0} MB)",
+        c.chunk_loads(),
+        c.cross_fit_hits(),
+        100.0 * c.cross_fit_hits() as f64 / hits.max(1) as f64,
+        c.peak_resident() as f64 / 1e6,
+        svc.store().budget_bytes() as f64 / 1e6,
+    );
+    println!("warm registry: {} entries", svc.registry_len());
+    Ok(())
+}
+
+fn cmd_bench_serve(cfg: &Config) -> Result<()> {
+    use hssr::coordinator::serve::FitService;
+    let ds = dataset_from_cfg(cfg)?;
+    let base = path_config_from(cfg)?;
+    let fits = cfg.get_parse("fits", 16usize)?;
+    let max_clients = cfg.get_parse("clients", 8usize)?;
+    let engine = ooc_engine_for(cfg, &ds.x, &ds.y)?;
+    let cfgs = serve_requests(&base, fits);
+    let mut t = Table::new(
+        &format!("serve throughput — {fits} fits on {}", ds.name),
+        &["concurrency", "secs", "fits/s", "cache hits", "xfit hits", "peak res MB"],
+    );
+    let mut clients = 1usize;
+    while clients <= max_clients.max(1) {
+        engine.store().reset();
+        let svc = FitService::new(engine.shared_store(), clients);
+        let t0 = std::time::Instant::now();
+        let out = svc.run_batch(&cfgs)?;
+        let secs = t0.elapsed().as_secs_f64();
+        let c = svc.store().counters();
+        t.push_row(vec![
+            clients.to_string(),
+            format!("{secs:.3}"),
+            format!("{:.2}", out.len() as f64 / secs.max(1e-9)),
+            c.cache_hits().to_string(),
+            c.cross_fit_hits().to_string(),
+            format!("{:.2}", c.peak_resident() as f64 / 1e6),
+        ]);
+        clients *= 2;
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
 fn cmd_info() -> Result<()> {
     println!(
         "hssr {} — hybrid safe-strong rules for lasso-type problems",
@@ -491,6 +600,8 @@ fn main() {
         "cv" => cmd_cv(&cfg),
         "logistic" => cmd_logistic(&cfg),
         "convert" => cmd_convert(&cfg),
+        "serve" => cmd_serve(&cfg),
+        "bench-serve" => cmd_bench_serve(&cfg),
         "info" => cmd_info(),
         _ => usage(),
     };

@@ -100,7 +100,9 @@ pub trait ScanEngine {
         z: &mut [f64],
         z_valid: &mut [bool],
     ) -> Result<FusedScreenOut> {
-        let p = x.ncols();
+        // `p` comes from the state slices, not `x` — a store-backed fit
+        // passes a zero-column dummy design (the store has the columns).
+        let p = survive.len();
         let mut out = FusedScreenOut::default();
         if let Some(pred) = keep {
             for j in 0..p {
@@ -148,7 +150,7 @@ pub trait ScanEngine {
         z: &mut [f64],
         z_valid: &mut [bool],
     ) -> Result<FusedKktOut> {
-        let p = x.ncols();
+        let p = survive.len();
         let mut out = FusedKktOut::default();
         let check: Vec<usize> = (0..p).filter(|&j| survive[j] && !in_strong[j]).collect();
         if !check.is_empty() {

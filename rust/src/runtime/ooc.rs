@@ -81,9 +81,22 @@ impl OocEngine {
     /// Wrap an already-open store. `HSSR_PREFETCH=1` enables the async
     /// prefetcher here too.
     pub fn from_store(store: ColumnStore) -> OocEngine {
-        let engine =
-            OocEngine { store: Arc::new(store), prefetcher: None, _cleanup: None };
+        OocEngine::from_shared(Arc::new(store))
+    }
+
+    /// Wrap a **shared** store handle: the serve-mode path, where many
+    /// concurrent fits each mount their own engine over one store — one
+    /// chunk cache, one set of counters. `HSSR_PREFETCH=1` enables a
+    /// per-engine async prefetcher.
+    pub fn from_shared(store: Arc<ColumnStore>) -> OocEngine {
+        let engine = OocEngine { store, prefetcher: None, _cleanup: None };
         engine.auto_prefetch()
+    }
+
+    /// A clonable handle to the mounted store (serve mode hands these to
+    /// per-job engines via [`OocEngine::from_shared`]).
+    pub fn shared_store(&self) -> Arc<ColumnStore> {
+        Arc::clone(&self.store)
     }
 
     /// Spawn the λ-ahead prefetch thread (idempotent). The driver feeds
@@ -166,9 +179,13 @@ impl ScanEngine for OocEngine {
         idx: &[usize],
         out: &mut [f64],
     ) -> Result<()> {
-        // Columns come from the store; `x` only cross-checks shape.
-        debug_assert_eq!(x.nrows(), self.store.nrows(), "store/design row mismatch");
-        debug_assert_eq!(x.ncols(), self.store.ncols(), "store/design col mismatch");
+        // Columns come from the store; `x` only cross-checks shape. A
+        // zero-column `x` is the store-only dummy design (serve/CV fits
+        // that never materialize the matrix) and skips the check.
+        debug_assert!(
+            x.ncols() == 0 || (x.nrows() == self.store.nrows() && x.ncols() == self.store.ncols()),
+            "store/design shape mismatch"
+        );
         let _ = x;
         self.store.scan_subset(v, idx, out)
     }

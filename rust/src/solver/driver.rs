@@ -480,24 +480,66 @@ pub fn dynamic_burst_solve<B: BurstProblem>(
 /// Magic prefix of a driver checkpoint file (version 1).
 pub const CHECKPOINT_MAGIC: &[u8; 9] = b"HSSRCKPT1";
 
-/// The serialized contents of a per-λ resume checkpoint: everything the
-/// driver needs to continue the walk at `betas.len()` exactly as an
-/// uninterrupted fit would, plus the opaque family state blob.
-struct Checkpoint {
-    /// `format!("{:?}")` of the rule — resume refuses a different one.
-    rule: String,
-    fused: bool,
-    flag_off: bool,
-    p: usize,
-    n_units: usize,
-    lambda_max: f64,
-    lam_prev: f64,
+/// A completed λ-prefix of a path fit, sufficient to continue (or re-run)
+/// the walk from `betas.len()` exactly as an uninterrupted fit would. Two
+/// consumers: the per-λ crash-resume checkpoint (serialized to disk with a
+/// CRC32 seal) and the serve-mode **warm-start registry**, which keeps
+/// finished fits' `WarmStart`s in memory and seeds new requests over the
+/// same design from them via [`drive_warm`].
+#[derive(Clone, Debug)]
+pub struct WarmStart {
+    /// `format!("{:?}")` of the rule — adoption refuses a different one.
+    pub rule: String,
+    /// Fused/unfused pipeline the prefix was fit with.
+    pub fused: bool,
+    /// Algorithm 1 `Flag` state after the prefix.
+    pub flag_off: bool,
+    /// Coefficient dimension.
+    pub p: usize,
+    /// Screening-unit count.
+    pub n_units: usize,
+    /// λmax of the fit (bit-compared on adoption).
+    pub lambda_max: f64,
+    /// The last completed λ (warm-start anchor for the next step).
+    pub lam_prev: f64,
     /// The completed λ-prefix, bit-compared against the new grid.
-    lambdas: Vec<f64>,
-    betas: Vec<Vec<(usize, f64)>>,
-    metrics: Vec<LambdaMetrics>,
+    pub lambdas: Vec<f64>,
+    /// Sparse coefficients of the completed prefix.
+    pub betas: Vec<Vec<(usize, f64)>>,
+    /// Per-λ instrumentation of the completed prefix.
+    pub metrics: Vec<LambdaMetrics>,
     /// Opaque [`Problem::save_state`] blob.
-    state: Vec<u8>,
+    pub state: Vec<u8>,
+}
+
+impl WarmStart {
+    /// Number of λ steps this warm start covers.
+    pub fn prefix_len(&self) -> usize {
+        self.betas.len()
+    }
+
+    /// Whether this prefix can seed a walk with the given shape: same
+    /// rule/pipeline/dimensions, bit-identical λmax, and a bit-identical
+    /// λ-prefix of the new grid. Callers keying a registry must fold any
+    /// remaining solver knobs (tolerance, iteration caps, penalty) into
+    /// the key — this check covers only what the driver itself sees.
+    pub fn compatible(
+        &self,
+        rule_label: &str,
+        fused: bool,
+        p: usize,
+        n_units: usize,
+        lambda_max: f64,
+        lambdas: &[f64],
+    ) -> bool {
+        self.rule == rule_label
+            && self.fused == fused
+            && self.p == p
+            && self.n_units == n_units
+            && self.lambda_max.to_bits() == lambda_max.to_bits()
+            && self.lambdas.len() <= lambdas.len()
+            && self.lambdas.iter().zip(lambdas).all(|(a, b)| a.to_bits() == b.to_bits())
+    }
 }
 
 fn encode_metrics(w: &mut ByteWriter, m: &LambdaMetrics) {
@@ -533,7 +575,7 @@ fn decode_metrics(r: &mut ByteReader) -> Result<LambdaMetrics> {
 /// Serialize and atomically replace the checkpoint file (tmp + rename, so
 /// a crash mid-write leaves the previous checkpoint intact), sealed with a
 /// trailing CRC32.
-fn write_checkpoint(path: &Path, ck: &Checkpoint) -> Result<()> {
+fn write_checkpoint(path: &Path, ck: &WarmStart) -> Result<()> {
     let mut w = ByteWriter::new();
     w.put_bytes(CHECKPOINT_MAGIC);
     w.put_blob(ck.rule.as_bytes());
@@ -568,7 +610,7 @@ fn write_checkpoint(path: &Path, ck: &Checkpoint) -> Result<()> {
 /// Read and verify a checkpoint file: bad magic, a failed CRC, or any
 /// truncation surfaces as a typed [`HssrError::Corrupt`] — a damaged
 /// checkpoint must never silently seed a fit.
-fn read_checkpoint(path: &Path) -> Result<Checkpoint> {
+fn read_checkpoint(path: &Path) -> Result<WarmStart> {
     let bytes = std::fs::read(path)?;
     if bytes.len() < CHECKPOINT_MAGIC.len() + 4 || !bytes.starts_with(CHECKPOINT_MAGIC) {
         return Err(HssrError::Corrupt(format!(
@@ -626,7 +668,7 @@ fn read_checkpoint(path: &Path) -> Result<Checkpoint> {
         metrics.push(decode_metrics(&mut r)?);
     }
     let state = r.get_blob()?.to_vec();
-    Ok(Checkpoint {
+    Ok(WarmStart {
         rule,
         fused,
         flag_off,
@@ -669,6 +711,22 @@ impl<P: Problem> PathDriver<P> {
 /// Run Algorithm 1 over the λ grid: the single path loop shared by every
 /// problem family. See the module docs for the stage contract.
 pub fn drive<P: Problem>(prob: &mut P, cfg: &DriverConfig) -> Result<DriverFit> {
+    drive_warm(prob, cfg, None).map(|(fit, _)| fit)
+}
+
+/// [`drive`] with the serve-mode warm-start hook: when `warm` holds a
+/// compatible prefix (see [`WarmStart::compatible`]) the walk adopts it
+/// and starts at its end instead of λmax; an incompatible prefix is
+/// **silently** ignored (the registry is best-effort — a cold start is
+/// always correct). A `--checkpoint` file, when present, takes precedence
+/// and keeps its strict error-on-mismatch contract. Returns the fit plus
+/// the completed walk's own `WarmStart` (`None` when the family does not
+/// support state capture or the path degraded).
+pub fn drive_warm<P: Problem>(
+    prob: &mut P,
+    cfg: &DriverConfig,
+    warm: Option<&WarmStart>,
+) -> Result<(DriverFit, Option<WarmStart>)> {
     let start = Instant::now();
     let lambda_max = prob.lambda_max();
     let lambdas = match &cfg.lambdas {
@@ -719,6 +777,24 @@ pub fn drive<P: Problem>(prob: &mut P, cfg: &DriverConfig) -> Result<DriverFit> 
             lam_prev = ck.lam_prev;
             betas = ck.betas;
             metrics = ck.metrics;
+        }
+    }
+
+    // ---- serve-mode warm start: adopt a compatible in-memory prefix ----
+    // Only when no checkpoint seeded the walk. Unlike checkpoints, an
+    // incompatible registry entry is skipped silently: cold-starting is
+    // always correct, and the registry is an opportunistic cache.
+    if betas.is_empty() {
+        if let Some(w) = warm {
+            if !w.betas.is_empty()
+                && w.compatible(&rule_label, cfg.fused, prob.n_coef(), units, lambda_max, &lambdas)
+                && prob.restore_state(&w.state).is_ok()
+            {
+                flag_off = w.flag_off;
+                lam_prev = w.lam_prev;
+                betas = w.betas.clone();
+                metrics = w.metrics.clone();
+            }
         }
     }
 
@@ -777,7 +853,7 @@ pub fn drive<P: Problem>(prob: &mut P, cfg: &DriverConfig) -> Result<DriverFit> 
             if let Some(state) = prob.save_state() {
                 write_checkpoint(
                     ck_path,
-                    &Checkpoint {
+                    &WarmStart {
                         rule: rule_label.clone(),
                         fused: cfg.fused,
                         flag_off,
@@ -795,7 +871,26 @@ pub fn drive<P: Problem>(prob: &mut P, cfg: &DriverConfig) -> Result<DriverFit> 
         }
     }
     let done = betas.len();
-    Ok(DriverFit {
+    // Capture the completed walk for the warm-start registry. A degraded
+    // path is never served as a seed: its final state is suspect.
+    let warm_out = if error.is_none() {
+        prob.save_state().map(|state| WarmStart {
+            rule: rule_label.clone(),
+            fused: cfg.fused,
+            flag_off,
+            p: prob.n_coef(),
+            n_units: units,
+            lambda_max,
+            lam_prev,
+            lambdas: lambdas[..done].to_vec(),
+            betas: betas.clone(),
+            metrics: metrics.clone(),
+            state,
+        })
+    } else {
+        None
+    };
+    let fit = DriverFit {
         lambdas: lambdas[..done].to_vec(),
         betas,
         metrics,
@@ -804,7 +899,8 @@ pub fn drive<P: Problem>(prob: &mut P, cfg: &DriverConfig) -> Result<DriverFit> 
         seconds: start.elapsed().as_secs_f64(),
         rule: cfg.rule,
         error,
-    })
+    };
+    Ok((fit, warm_out))
 }
 
 /// One full λ step of Algorithm 1 (screen → solve → dynamic re-screen →
@@ -1132,7 +1228,7 @@ mod tests {
         let dir = std::env::temp_dir().join("hssr_driver_tests");
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("roundtrip.ckpt");
-        let ck = Checkpoint {
+        let ck = WarmStart {
             rule: "SsrBedpp".into(),
             fused: true,
             flag_off: false,
@@ -1170,5 +1266,144 @@ mod tests {
         // garbage file: typed, not a panic
         std::fs::write(&bad, b"not a checkpoint").unwrap();
         assert!(matches!(read_checkpoint(&bad), Err(HssrError::Corrupt(_))));
+    }
+
+    /// A stateful toy family: `value` increments once per solve and is the
+    /// reported coefficient, so a warm-started walk is distinguishable
+    /// from a cold one by counting `solve_calls`.
+    struct Resumable {
+        solve_calls: usize,
+        value: f64,
+    }
+
+    impl Problem for Resumable {
+        fn n_units(&self) -> usize {
+            1
+        }
+        fn n_coef(&self) -> usize {
+            1
+        }
+        fn lambda_max(&self) -> f64 {
+            1.0
+        }
+        fn has_safe_rule(&self) -> bool {
+            false
+        }
+        fn needs_kkt(&self) -> bool {
+            false
+        }
+        fn screen(
+            &mut self,
+            _lam: f64,
+            _lam_prev: f64,
+            _run_safe: bool,
+            _fused: bool,
+            _survive: &mut [bool],
+            _m: &mut LambdaMetrics,
+        ) -> Result<ScreenStage> {
+            Ok(ScreenStage { strong: vec![0], ..Default::default() })
+        }
+        fn solve(
+            &mut self,
+            _lam: f64,
+            _lambda_index: usize,
+            _strong: &[usize],
+            _m: &mut LambdaMetrics,
+        ) -> Result<()> {
+            self.solve_calls += 1;
+            self.value += 1.0;
+            Ok(())
+        }
+        fn kkt(
+            &mut self,
+            _lam: f64,
+            _fused: bool,
+            _survive: &[bool],
+            _in_strong: &[bool],
+            _m: &mut LambdaMetrics,
+        ) -> Result<Vec<usize>> {
+            Ok(Vec::new())
+        }
+        fn end_lambda(
+            &mut self,
+            _lam: f64,
+            _fused: bool,
+            _strong: &[usize],
+            _m: &mut LambdaMetrics,
+        ) -> Result<()> {
+            Ok(())
+        }
+        fn sparse_beta(&self) -> Vec<(usize, f64)> {
+            vec![(0, self.value)]
+        }
+        fn objective(&self, _lam: f64) -> f64 {
+            0.0
+        }
+        fn save_state(&self) -> Option<Vec<u8>> {
+            Some(self.value.to_le_bytes().to_vec())
+        }
+        fn restore_state(&mut self, state: &[u8]) -> Result<()> {
+            let mut b = [0u8; 8];
+            if state.len() != 8 {
+                return Err(HssrError::Corrupt("bad Resumable state".into()));
+            }
+            b.copy_from_slice(state);
+            self.value = f64::from_le_bytes(b);
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn warm_start_adopts_compatible_prefix_and_skips_it() {
+        let cfg2 = DriverConfig {
+            rule: RuleKind::BasicPcd,
+            n_lambda: 2,
+            lambda_min_ratio: 0.5,
+            grid: GridKind::Linear,
+            lambdas: Some(vec![0.8, 0.4]),
+            fused: false,
+            checkpoint: None,
+        };
+        let mut prob = Resumable { solve_calls: 0, value: 0.0 };
+        let (fit, warm) = drive_warm(&mut prob, &cfg2, None).unwrap();
+        assert_eq!(fit.lambdas.len(), 2);
+        assert_eq!(prob.solve_calls, 2);
+        let warm = warm.expect("stateful family must emit a warm start");
+        assert_eq!(warm.prefix_len(), 2);
+
+        // Extended grid sharing the prefix: only the new λ is solved, and
+        // the adopted prefix is returned verbatim.
+        let cfg3 = DriverConfig {
+            rule: RuleKind::BasicPcd,
+            n_lambda: 3,
+            lambda_min_ratio: 0.5,
+            grid: GridKind::Linear,
+            lambdas: Some(vec![0.8, 0.4, 0.2]),
+            fused: false,
+            checkpoint: None,
+        };
+        let mut seeded = Resumable { solve_calls: 0, value: 0.0 };
+        let (fit3, warm3) = drive_warm(&mut seeded, &cfg3, Some(&warm)).unwrap();
+        assert_eq!(seeded.solve_calls, 1, "warm start must skip the shared prefix");
+        assert_eq!(fit3.lambdas.len(), 3);
+        assert_eq!(fit3.betas[..2], fit.betas[..2]);
+        assert_eq!(fit3.betas[2], vec![(0, 3.0)], "state must carry across the seam");
+        assert_eq!(warm3.expect("completed walk").prefix_len(), 3);
+
+        // An incompatible entry (different pipeline flag) is skipped
+        // silently: full cold start, no error.
+        let cfg_bad = DriverConfig {
+            rule: RuleKind::BasicPcd,
+            n_lambda: 3,
+            lambda_min_ratio: 0.5,
+            grid: GridKind::Linear,
+            lambdas: Some(vec![0.8, 0.4, 0.2]),
+            fused: true,
+            checkpoint: None,
+        };
+        let mut cold = Resumable { solve_calls: 0, value: 0.0 };
+        let (fit_cold, _) = drive_warm(&mut cold, &cfg_bad, Some(&warm)).unwrap();
+        assert_eq!(cold.solve_calls, 3, "incompatible warm start must cold-start");
+        assert_eq!(fit_cold.lambdas.len(), 3);
     }
 }

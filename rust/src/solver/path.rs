@@ -46,6 +46,9 @@
 //! (`fused: false`, kept for A/B benchmarking and the equivalence property
 //! test in [`crate::prop`]).
 
+use std::sync::Arc;
+
+use crate::data::store::ColumnStore;
 use crate::data::Dataset;
 use crate::error::{HssrError, Result};
 use crate::linalg::{ops, DenseMatrix};
@@ -54,12 +57,12 @@ use crate::screening::{make_safe_rule, ssr, PrevSolution, RuleKind, SafeContext,
 use crate::serialize::{ByteReader, ByteWriter};
 use crate::solver::columns::ColSource;
 use crate::solver::driver::{
-    apply_rescreen_mask, drive, dynamic_burst_solve, fused_default, zero_discarded_units,
-    BurstProblem, DriverConfig, Problem, ScreenStage,
+    apply_rescreen_mask, drive_warm, dynamic_burst_solve, fused_default,
+    zero_discarded_units, BurstProblem, DriverConfig, DriverFit, Problem, ScreenStage,
 };
 use crate::solver::{cd, kkt, lambda::GridKind, Penalty};
 
-pub use crate::solver::driver::{LambdaMetrics, PathError};
+pub use crate::solver::driver::{LambdaMetrics, PathError, WarmStart};
 
 /// Configuration for a pathwise fit.
 #[derive(Clone, Debug)]
@@ -239,7 +242,9 @@ pub(crate) fn column_kkt(
         m.kkt_checked += fout.checked;
         return Ok(fout.violations);
     }
-    let p = x.ncols();
+    // `survive.len()`, not `x.ncols()`: store-backed fits pass a
+    // zero-column dummy design and the engine serves the real columns.
+    let p = survive.len();
     let check: Vec<usize> = (0..p).filter(|&j| survive[j] && !in_strong[j]).collect();
     if check.is_empty() {
         return Ok(Vec::new());
@@ -269,6 +274,54 @@ pub struct GaussianLasso<'a> {
     z: Vec<f64>,
     z_valid: Vec<bool>,
     scratch: Vec<f64>,
+    // Columns the constructor scanned (store-backed builds only), folded
+    // into λ0's metrics so engine counters reconcile with path accounting.
+    preamble: u64,
+    // Store read failure parked by the infallible `BurstProblem::evict`;
+    // `solve` surfaces it after the burst driver returns.
+    deferred: Option<HssrError>,
+}
+
+/// Build the safe-rule context entirely from a column store: the same
+/// `O(np)` precompute as [`SafeContext::build`], every scan served by the
+/// store (bit-identical — the store scan is the same per-column
+/// reduction). Returns the context plus the columns fetched, which the
+/// problem reports as [`Problem::preamble_cols`].
+fn store_safe_context(
+    store: &ColumnStore,
+    penalty: Penalty,
+    need_star: bool,
+) -> Result<(SafeContext, u64)> {
+    let n = store.nrows();
+    let p = store.ncols();
+    let y = store.y().to_vec();
+    let idx: Vec<usize> = (0..p).collect();
+    let mut xty = vec![0.0; p];
+    store.scan_subset(&y, &idx, &mut xty)?;
+    for v in xty.iter_mut() {
+        *v *= n as f64;
+    }
+    let (star, max_abs) = ops::abs_argmax(&xty);
+    let lambda_max = max_abs / (penalty.alpha() * n as f64);
+    let sign_star = if xty[star] >= 0.0 { 1.0 } else { -1.0 };
+    let mut fetched = p as u64;
+    let xtx_star = if need_star {
+        let star_col = store.with_col(star, |col| col.to_vec())?;
+        let mut v = vec![0.0; p];
+        store.scan_subset(&star_col, &idx, &mut v)?;
+        for w in v.iter_mut() {
+            *w *= n as f64;
+        }
+        fetched += p as u64 + 1;
+        v
+    } else {
+        Vec::new()
+    };
+    let y_sq = ops::nrm2_sq(&y);
+    Ok((
+        SafeContext { n, p, y, xty, xtx_star, y_sq, lambda_max, star, sign_star, penalty },
+        fetched,
+    ))
 }
 
 impl<'a> GaussianLasso<'a> {
@@ -299,6 +352,50 @@ impl<'a> GaussianLasso<'a> {
             z,
             z_valid: vec![true; p],
             scratch: vec![0.0; p],
+            preamble: 0,
+            deferred: None,
+            ctx,
+        })
+    }
+
+    /// Build the problem directly over the engine's column store — the
+    /// serve/CV path, where the design is never materialized in memory.
+    /// `x` must be the caller-owned zero-column dummy design
+    /// (`DenseMatrix::zeros(n, 0)`): it carries the row count for shape
+    /// checks; nothing reads its columns. The safe-rule precompute runs
+    /// through the store and is reported via [`Problem::preamble_cols`].
+    pub fn from_store(
+        x: &'a DenseMatrix,
+        cfg: &PathConfig,
+        engine: &'a dyn ScanEngine,
+    ) -> Result<Self> {
+        cfg.penalty.validate()?;
+        let store = engine.column_store().ok_or_else(|| {
+            HssrError::Config(
+                "store-backed fit requires an engine that advertises a column store".into(),
+            )
+        })?;
+        debug_assert_eq!(x.ncols(), 0, "store-backed fits take the zero-column dummy");
+        debug_assert_eq!(x.nrows(), store.nrows());
+        let (ctx, preamble) = store_safe_context(store, cfg.penalty, cfg.rule.needs_star())?;
+        let (n, p) = (ctx.n, ctx.p);
+        let z: Vec<f64> = ctx.xty.iter().map(|v| v / n as f64).collect();
+        Ok(GaussianLasso {
+            x,
+            engine,
+            penalty: cfg.penalty,
+            rule: cfg.rule,
+            tol: cfg.tol,
+            max_iter: cfg.max_iter,
+            rescreen_every: cfg.rescreen_every,
+            safe_rule: make_safe_rule(cfg.rule),
+            beta: vec![0.0; p],
+            r: ctx.y.clone(),
+            z,
+            z_valid: vec![true; p],
+            scratch: vec![0.0; p],
+            preamble,
+            deferred: None,
             ctx,
         })
     }
@@ -314,21 +411,55 @@ impl<'a> GaussianLasso<'a> {
     /// the residual, and invalidate the lazy correlations (the residual
     /// moved). Runs identically in the fused and unfused pipelines, after
     /// the strong set is classified.
-    fn zero_discarded(&mut self, survive: &[bool]) {
-        let (x, beta, r) = (self.x, &mut self.beta, &mut self.r);
-        let changed = zero_discarded_units(survive, |j| {
-            if beta[j] != 0.0 {
-                let b = beta[j];
-                ops::axpy(b, x.col(j), r);
-                beta[j] = 0.0;
-                true
-            } else {
-                false
+    fn zero_discarded(&mut self, survive: &[bool]) -> Result<()> {
+        let changed;
+        if self.x.ncols() == 0 {
+            // Store-only fit: serve the evicted column from a pinned
+            // cursor (solver traffic, like the CD loop's own reads).
+            let engine = self.engine;
+            let store = engine.column_store().ok_or_else(|| {
+                HssrError::Config("store-only fit lost its column store".into())
+            })?;
+            let mut pc = store.pin_cols();
+            let (beta, r) = (&mut self.beta, &mut self.r);
+            let mut err = None;
+            changed = zero_discarded_units(survive, |j| {
+                if beta[j] != 0.0 && err.is_none() {
+                    match pc.col(j) {
+                        Ok(col) => {
+                            ops::axpy(beta[j], col, r);
+                            beta[j] = 0.0;
+                            true
+                        }
+                        Err(e) => {
+                            err = Some(e);
+                            false
+                        }
+                    }
+                } else {
+                    false
+                }
+            });
+            if let Some(e) = err {
+                return Err(e);
             }
-        });
+        } else {
+            let (x, beta, r) = (self.x, &mut self.beta, &mut self.r);
+            changed = zero_discarded_units(survive, |j| {
+                if beta[j] != 0.0 {
+                    let b = beta[j];
+                    ops::axpy(b, x.col(j), r);
+                    beta[j] = 0.0;
+                    true
+                } else {
+                    false
+                }
+            });
+        }
         if changed {
             self.z_valid.iter_mut().for_each(|v| *v = false);
         }
+        Ok(())
     }
 }
 
@@ -360,8 +491,29 @@ impl BurstProblem for GaussianBurst<'_, '_> {
 
     fn evict(&mut self, j: usize) {
         let p = &mut *self.prob;
-        if p.beta[j] != 0.0 {
-            let b = p.beta[j];
+        if p.beta[j] == 0.0 || p.deferred.is_some() {
+            return;
+        }
+        let b = p.beta[j];
+        if p.x.ncols() == 0 {
+            // Store-only fit: the design was never materialized, and this
+            // trait method is infallible — park a read failure for
+            // `solve` to surface after the burst driver returns.
+            let engine = p.engine;
+            let Some(store) = engine.column_store() else {
+                p.deferred =
+                    Some(HssrError::Config("store-only fit lost its column store".into()));
+                return;
+            };
+            let mut pc = store.pin_cols();
+            match pc.col(j) {
+                Ok(col) => {
+                    ops::axpy(b, col, &mut p.r);
+                    p.beta[j] = 0.0;
+                }
+                Err(e) => p.deferred = Some(e),
+            }
+        } else {
             ops::axpy(b, p.x.col(j), &mut p.r);
             p.beta[j] = 0.0;
         }
@@ -379,6 +531,10 @@ impl Problem for GaussianLasso<'_> {
 
     fn lambda_max(&self) -> f64 {
         self.ctx.lambda_max
+    }
+
+    fn preamble_cols(&self) -> u64 {
+        self.preamble
     }
 
     fn has_safe_rule(&self) -> bool {
@@ -469,7 +625,7 @@ impl Problem for GaussianLasso<'_> {
             m.safe_size = fout.safe_size;
             m.cols_scanned += fout.cols_scanned;
             stage.strong = fout.strong;
-            self.zero_discarded(survive);
+            self.zero_discarded(survive)?;
             return Ok(stage);
         }
 
@@ -519,7 +675,7 @@ impl Problem for GaussianLasso<'_> {
             RuleKind::Sedpp => (0..p).filter(|&j| survive[j]).collect(),
             _ => ssr::strong_set(self.penalty, lam, lam_prev, &self.z, survive),
         };
-        self.zero_discarded(survive);
+        self.zero_discarded(survive)?;
         Ok(stage)
     }
 
@@ -572,6 +728,9 @@ impl Problem for GaussianLasso<'_> {
             lambda_index,
             m,
         )?;
+        if let Some(e) = self.deferred.take() {
+            return Err(e);
+        }
         if ran {
             self.z_valid.iter_mut().for_each(|v| *v = false);
         }
@@ -728,9 +887,42 @@ pub fn fit_lasso_path_with_engine(
     cfg: &PathConfig,
     engine: &dyn ScanEngine,
 ) -> Result<PathFit> {
+    fit_lasso_path_warm_with_engine(ds, cfg, engine, None).map(|(fit, _)| fit)
+}
+
+/// [`fit_lasso_path_with_engine`] with the warm-start hooks: `warm` seeds
+/// the walk when compatible (silently cold-starting otherwise), and the
+/// completed fit's own [`WarmStart`] is returned for a registry.
+pub fn fit_lasso_path_warm_with_engine(
+    ds: &Dataset,
+    cfg: &PathConfig,
+    engine: &dyn ScanEngine,
+    warm: Option<&WarmStart>,
+) -> Result<(PathFit, Option<WarmStart>)> {
     let mut prob = GaussianLasso::new(ds, cfg, engine)?;
-    let fit = drive(&mut prob, &cfg.driver())?;
-    Ok(PathFit {
+    let (fit, warm_out) = drive_warm(&mut prob, &cfg.driver(), warm)?;
+    Ok((path_fit(fit), warm_out))
+}
+
+/// Fit the full path **entirely from a column store** — no resident
+/// design. This is the serve/CV engine-routed entry: peak resident bytes
+/// stay bounded by the store's chunk-cache budget (shared across
+/// concurrent fits when callers clone the [`Arc`]), and `warm` seeds the
+/// walk from a previously completed job's [`WarmStart`].
+pub fn fit_lasso_path_store(
+    store: Arc<ColumnStore>,
+    cfg: &PathConfig,
+    warm: Option<&WarmStart>,
+) -> Result<(PathFit, Option<WarmStart>)> {
+    let engine = ooc::OocEngine::from_shared(store);
+    let dummy = DenseMatrix::zeros(engine.store().nrows(), 0);
+    let mut prob = GaussianLasso::from_store(&dummy, cfg, &engine)?;
+    let (fit, warm_out) = drive_warm(&mut prob, &cfg.driver(), warm)?;
+    Ok((path_fit(fit), warm_out))
+}
+
+fn path_fit(fit: DriverFit) -> PathFit {
+    PathFit {
         lambdas: fit.lambdas,
         betas: fit.betas,
         metrics: fit.metrics,
@@ -739,7 +931,7 @@ pub fn fit_lasso_path_with_engine(
         seconds: fit.seconds,
         rule: fit.rule,
         error: fit.error,
-    })
+    }
 }
 
 /// Elastic-net objective `‖r‖²/(2n) + αλ‖β‖₁ + (1−α)λ/2·‖β‖²`.
@@ -1000,6 +1192,37 @@ mod tests {
                 Err(crate::error::HssrError::Config(_))
             ));
             let _ = std::fs::remove_file(&ck);
+        }
+    }
+
+    /// A fit that never materializes the design — safe-rule precompute,
+    /// screening, KKT, and the inner CD loop all served from the store —
+    /// must be bit-identical to the dense in-memory fit, and its own
+    /// `WarmStart` must seed an extended-grid fit past the shared prefix.
+    #[test]
+    fn store_backed_fit_matches_dense_bitwise() {
+        let ds = DataSpec::gene_like(60, 140).generate(17);
+        for rule in [RuleKind::Ssr, RuleKind::SsrBedpp, RuleKind::SsrGapSafe] {
+            let cfg = small_cfg(rule);
+            let dense = fit_lasso_path_with_engine(&ds, &cfg, &NativeEngine::new()).unwrap();
+            let engine = ooc::OocEngine::spill(&ds.x, &ds.y, 1 << 18).unwrap();
+            let (fit, warm) =
+                fit_lasso_path_store(engine.shared_store(), &cfg, None).unwrap();
+            assert_eq!(fit.lambdas, dense.lambdas, "{rule:?} grid");
+            assert_eq!(fit.betas, dense.betas, "{rule:?} betas differ");
+            let warm = warm.expect("store fit must emit a warm start");
+            assert_eq!(warm.prefix_len(), fit.lambdas.len());
+            // Warm-started refit over a longer grid: prefix adopted
+            // verbatim, tail identical to a cold fit of the same grid.
+            let mut grid = fit.lambdas.clone();
+            let last = *grid.last().unwrap();
+            grid.push(last * 0.8);
+            let wcfg = PathConfig { lambdas: Some(grid.clone()), ..cfg.clone() };
+            let (wfit, _) =
+                fit_lasso_path_store(engine.shared_store(), &wcfg, Some(&warm)).unwrap();
+            let (cold, _) =
+                fit_lasso_path_store(engine.shared_store(), &wcfg, None).unwrap();
+            assert_eq!(wfit.betas, cold.betas, "{rule:?} warm tail deviates");
         }
     }
 

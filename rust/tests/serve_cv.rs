@@ -1,0 +1,142 @@
+//! Serve-mode and CV engine-routing pins: many concurrent λ-paths
+//! multiplexed onto **one** shared column store must be bit-identical to
+//! standalone fits while the shared chunk cache stays inside its budget
+//! and records cross-fit hits; k-fold CV routed out-of-core must stream
+//! fold spills (never k dense in-flight fold copies) and reproduce the
+//! in-memory route bitwise, with fold failures surfaced as typed errors.
+
+use std::sync::Arc;
+
+use hssr::coordinator::cv::cv_lasso_routed;
+use hssr::coordinator::serve::FitService;
+use hssr::data::store::{write_dataset, ColumnStore};
+use hssr::data::DataSpec;
+use hssr::error::HssrError;
+use hssr::runtime::ooc::OocEngine;
+use hssr::screening::RuleKind;
+use hssr::solver::path::{fit_lasso_path_store, PathConfig};
+use hssr::solver::Penalty;
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("hssr_serve_cv_it");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+fn serve_cfg(rule: RuleKind) -> PathConfig {
+    PathConfig {
+        rule,
+        n_lambda: 12,
+        lambda_min_ratio: 0.15,
+        tol: 1e-7,
+        ..PathConfig::default()
+    }
+}
+
+/// The tentpole pin: a concurrent batch over one shared store/cache is
+/// bit-identical to standalone fits of the same configs, the shared
+/// cache's peak resident bytes never outgrow its budget even with
+/// multiple fits pinning solver chunks, and sharing is measurable as
+/// cross-fit cache hits.
+#[test]
+fn concurrent_fits_share_one_bounded_cache_bit_identically() {
+    let ds = DataSpec::gene_like(60, 200).generate(17);
+    let path = tmp("serve.store");
+    let chunk = 16;
+    write_dataset(&ds, chunk, &path).unwrap();
+    let budget = 6 * chunk * ds.n() * 8; // 6 chunks ≪ 200 columns
+    let engine = OocEngine::from_store(ColumnStore::open(&path, budget).unwrap());
+    let svc = FitService::new(engine.shared_store(), 2);
+
+    let rules = [RuleKind::Ssr, RuleKind::SsrBedpp, RuleKind::SsrGapSafe];
+    let cfgs: Vec<PathConfig> =
+        (0..6).map(|i| serve_cfg(rules[i % rules.len()])).collect();
+    let out = svc.run_batch(&cfgs).unwrap();
+    assert_eq!(out.len(), 6);
+
+    for (cfg, resp) in cfgs.iter().zip(&out) {
+        assert!(resp.fit.error.is_none(), "{:?} degraded in serve mode", cfg.rule);
+        let solo = Arc::new(ColumnStore::open(&path, budget).unwrap());
+        let (want, _) = fit_lasso_path_store(solo, cfg, None).unwrap();
+        assert_eq!(resp.fit.lambdas, want.lambdas, "{:?}: λ grid differs", cfg.rule);
+        assert_eq!(resp.fit.betas, want.betas, "{:?}: served βs differ", cfg.rule);
+    }
+
+    assert!(
+        svc.cross_fit_hits() > 0,
+        "concurrent fits over one cache never hit each other's chunks"
+    );
+    assert!(svc.peak_in_flight() <= 2, "admission bound violated");
+    assert!(
+        svc.store().counters().peak_resident() <= budget as u64,
+        "shared cache outgrew its budget: {} > {budget}",
+        svc.store().counters().peak_resident()
+    );
+    let _ = std::fs::remove_file(&path);
+}
+
+/// Warm-start service across requests: a repeated config key with an
+/// extended λ grid resumes from the registry and stays bit-identical to
+/// a cold fit over the extended grid.
+#[test]
+fn serve_warm_start_resume_is_bit_identical() {
+    let ds = DataSpec::synthetic(40, 60, 4).generate(23);
+    let path = tmp("warm.store");
+    write_dataset(&ds, 16, &path).unwrap();
+    let budget = 1 << 20;
+    let engine = OocEngine::from_store(ColumnStore::open(&path, budget).unwrap());
+    let svc = FitService::new(engine.shared_store(), 2);
+
+    let mut cfg = serve_cfg(RuleKind::SsrBedpp);
+    cfg.n_lambda = 8;
+    let first = svc.run_one(&cfg).unwrap();
+    assert!(!first.warm_hit);
+    let mut grid = first.fit.lambdas.clone();
+    grid.push(grid.last().unwrap() * 0.6);
+    grid.push(grid.last().unwrap() * 0.6);
+    cfg.lambdas = Some(grid.clone());
+    let second = svc.run_one(&cfg).unwrap();
+    assert!(second.warm_hit, "registry never offered the completed prefix");
+    let k = first.fit.betas.len();
+    assert_eq!(&second.fit.betas[..k], &first.fit.betas[..]);
+
+    let solo = Arc::new(ColumnStore::open(&path, budget).unwrap());
+    let (cold, _) = fit_lasso_path_store(solo, &cfg, None).unwrap();
+    assert_eq!(second.fit.betas, cold.betas, "warm resume deviates from cold fit");
+    let _ = std::fs::remove_file(&path);
+}
+
+/// CV engine routing: the out-of-core route (streamed fold spills) must
+/// reproduce the in-memory route bit for bit — selections included.
+#[test]
+fn ooc_cv_route_matches_dense_route_bitwise() {
+    let ds = DataSpec::synthetic(60, 50, 5).generate(31);
+    let cfg = PathConfig { n_lambda: 15, tol: 1e-6, ..PathConfig::default() };
+    let dense = cv_lasso_routed(&ds, &cfg, 5, 7, false).unwrap();
+    let ooc = cv_lasso_routed(&ds, &cfg, 5, 7, true).unwrap();
+    assert_eq!(dense.lambdas, ooc.lambdas);
+    assert_eq!(dense.cv_mean, ooc.cv_mean, "fold MSE means diverge across routes");
+    assert_eq!(dense.cv_se, ooc.cv_se);
+    assert_eq!((dense.idx_min, dense.idx_1se), (ooc.idx_min, ooc.idx_1se));
+}
+
+/// A failing fold fit must surface as a typed CV error carrying the fold
+/// index — on both engine routes, with no panic.
+#[test]
+fn failing_fold_is_a_typed_cv_error_on_both_routes() {
+    let ds = DataSpec::synthetic(40, 30, 3).generate(5);
+    let cfg = PathConfig {
+        penalty: Penalty::ElasticNet { alpha: 0.0 },
+        n_lambda: 8,
+        ..PathConfig::default()
+    };
+    for ooc in [false, true] {
+        match cv_lasso_routed(&ds, &cfg, 4, 3, ooc) {
+            Err(HssrError::Cv { fold: Some(f), message }) => {
+                assert!(f < 4, "fold index out of range (route ooc={ooc})");
+                assert!(!message.is_empty());
+            }
+            other => panic!("expected typed Cv error on route ooc={ooc}, got {other:?}"),
+        }
+    }
+}
