@@ -17,6 +17,8 @@ use hssr::coordinator::metrics::{
 use hssr::coordinator::report::Table;
 use hssr::data::synth::generate_grouped;
 use hssr::data::DataSpec;
+use hssr::linalg::simd;
+use hssr::runtime::Precision;
 use hssr::screening::RuleKind;
 use hssr::solver::group_path::{fit_group_path, GroupPathConfig};
 use hssr::solver::path::{fit_lasso_path, PathConfig};
@@ -247,4 +249,47 @@ fn main() {
     scan_traffic_table("measured chunked-store group traffic (64-col chunks)", &grows)
         .emit("ablation_scans_group_traffic")
         .expect("emit group traffic");
+
+    // ---- kernel-shape ablation: SIMD × precision × fused epoch ----
+    // Same SSR-GapSafe path under the four SIMD/precision combinations
+    // (f32 only reshapes the screening scans — the coefficient paths must
+    // not move a bit) plus the fused-epoch two-pass baseline, so the
+    // hardware knobs' wall-clock and traffic effects are on the record.
+    let mut ktable = Table::new(
+        "kernel ablation — SSR-GapSafe path under SIMD / precision / fused-epoch knobs",
+        &["config", "seconds", "screen+KKT cols", "betas vs baseline"],
+    );
+    let kcfg = PathConfig {
+        rule: RuleKind::SsrGapSafe,
+        n_lambda: k,
+        precision: Precision::F64,
+        fused_epoch: true,
+        ..PathConfig::default()
+    };
+    simd::force(false);
+    let baseline = fit_lasso_path(&ds, &kcfg).expect("kernel-ablation baseline");
+    let variants: [(&str, bool, Precision, bool); 5] = [
+        ("simd=0 f64", false, Precision::F64, true),
+        ("simd=1 f64", true, Precision::F64, true),
+        ("simd=0 f32", false, Precision::F32, true),
+        ("simd=1 f32", true, Precision::F32, true),
+        ("simd=1 f64 two-pass", true, Precision::F64, false),
+    ];
+    for (label, simd_on, precision, fused_epoch) in variants {
+        simd::force(simd_on);
+        let fit = fit_lasso_path(&ds, &PathConfig { precision, fused_epoch, ..kcfg.clone() })
+            .expect("kernel-ablation fit");
+        ktable.push_row(vec![
+            label.to_string(),
+            format!("{:.3}", fit.seconds),
+            fit.total_cols_scanned().to_string(),
+            if fit.betas == baseline.betas { "identical".into() } else { "DIFFER".into() },
+        ]);
+        assert_eq!(
+            fit.betas, baseline.betas,
+            "{label}: kernel knobs changed the solution"
+        );
+    }
+    simd::reset();
+    ktable.emit("ablation_scans_kernels").expect("emit kernel ablation");
 }

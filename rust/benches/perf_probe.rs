@@ -15,7 +15,7 @@
 use std::time::Instant;
 
 use hssr::data::DataSpec;
-use hssr::linalg::{blocked, pool};
+use hssr::linalg::{blocked, pool, simd};
 use hssr::screening::RuleKind;
 use hssr::solver::path::{fit_lasso_path, PathConfig};
 
@@ -128,6 +128,70 @@ fn main() {
         p,
         ns_iter: t_path_3pass * 1e9 / n_lambda as f64,
     });
+
+    // -- SIMD A/B on the fused screen kernel, L2-resident sizing --
+    // The p ≫ n matrix above is DRAM-bound; the SIMD rows use a 512×200
+    // design (≈0.8 MB, L2-resident) so the kernels are compute-bound and
+    // the lane win is what's measured.
+    let l2 = DataSpec::synthetic(512, 200, 10).generate(6);
+    let (ln, lp) = (l2.n(), l2.p());
+    let lr = l2.y.clone();
+    let mut lsurvive = vec![true; lp];
+    let mut lz = vec![0.0; lp];
+    let mut lz_valid = vec![false; lp];
+    let mut screen_times = [0.0f64; 2];
+    for (slot, on) in [false, true].into_iter().enumerate() {
+        simd::force(on);
+        let t = time_it(2_000, || {
+            lsurvive.iter_mut().for_each(|s| *s = true);
+            lz_valid.iter_mut().for_each(|v| *v = false);
+            std::hint::black_box(blocked::fused_screen(
+                &l2.x,
+                &lr,
+                None,
+                0.02,
+                &mut lsurvive,
+                &mut lz,
+                &mut lz_valid,
+            ));
+        });
+        screen_times[slot] = t;
+        entries.push(Entry {
+            op: if on { "fused_screen_simd" } else { "fused_screen_scalar" },
+            n: ln,
+            p: lp,
+            ns_iter: t * 1e9,
+        });
+    }
+    println!(
+        "fused_screen {ln}×{lp}: scalar {:.2} µs vs SIMD ({}) {:.2} µs ({:.2}×)",
+        screen_times[0] * 1e6,
+        simd::level().label(),
+        screen_times[1] * 1e6,
+        screen_times[0] / screen_times[1]
+    );
+
+    // -- f32 shadow scan vs f64 scan, same L2-resident size --
+    let mirror: Vec<f32> = (0..lp)
+        .flat_map(|j| l2.x.col(j).iter().map(|&v| v as f32).collect::<Vec<f32>>())
+        .collect();
+    let v32: Vec<f32> = lr.iter().map(|&v| v as f32).collect();
+    let mut lout = vec![0.0; lp];
+    let t64 = time_it(2_000, || {
+        blocked::scan_all(&l2.x, std::hint::black_box(&lr), &mut lout);
+    });
+    let t32 = time_it(2_000, || {
+        blocked::scan_all_f32_mirror(&mirror, ln, lp, std::hint::black_box(&v32), &mut lout);
+    });
+    println!(
+        "scan {ln}×{lp}: f64 {:.2} µs vs f32 {:.2} µs ({:.2}×)",
+        t64 * 1e6,
+        t32 * 1e6,
+        t64 / t32
+    );
+    entries.push(Entry { op: "scan_f64", n: ln, p: lp, ns_iter: t64 * 1e9 });
+    entries.push(Entry { op: "scan_f32", n: ln, p: lp, ns_iter: t32 * 1e9 });
+    simd::reset();
 
     // -- emit BENCH_perf.json at the repo root --
     let mut json = String::from("[\n");

@@ -152,6 +152,7 @@ mod tests {
             fused: true,
             rescreen_every: 10,
             checkpoint: None,
+            ..PathConfig::default()
         };
         let cells = run_method_sweep(&specs, &methods, 2, &cfg, 5).unwrap();
         assert_eq!(cells.len(), 2);

@@ -6,7 +6,9 @@
 //!            condition (2) and the per-column stats are informational;
 //!            0 ⇒ the chunk data is raw and the reader applies
 //!            (x − center)/scale per column on load   (1 byte)
-//! offset 10  reserved (zero)                          (6 bytes)
+//! offset 10  f32-shadow flag: 1 ⇒ an f32 shadow section follows the
+//!            checksum section (see below)             (1 byte)
+//! offset 11  reserved (zero)                          (5 bytes)
 //! offset 16  n  (rows)        u64 LE
 //! offset 24  p  (columns)     u64 LE
 //! offset 32  chunk_cols       u64 LE
@@ -21,13 +23,25 @@
 //! …          [v2 only] checksum section: one CRC32 (u32 LE) per chunk
 //!            in order, then one CRC32 of the whole tail
 //!            (y ‖ centers ‖ scales) — (num_chunks + 1) × 4 bytes
+//! …          [f32 shadow, when byte 10 = 1] the **standardized** matrix
+//!            re-cast to f32 LE in the same chunk framing
+//!            (chunk c holds chunk_width(c)·n f32 values), followed by
+//!            one CRC32 (u32 LE) per shadow chunk — n·p·4 + num_chunks·4
+//!            bytes total. The shadow holds exactly
+//!            `standardized_value as f32` per entry, so a shadow scan is
+//!            bit-identical to casting the served f64 columns.
 //! ```
 //!
 //! Version 2 (`HSSRSTOR2`) appends the checksum section and is what the
 //! writers now produce; version-1 files remain fully readable (the reader
-//! simply has no integrity data to verify against). All offsets are
-//! computable from `(n, p, chunk_cols)` alone, which is what lets the
-//! reader serve any column slice with one `seek`/`read`.
+//! simply has no integrity data to verify against). The optional f32
+//! shadow section (`HSSR_STORE_F32=1`, or
+//! [`super::writer::append_f32_shadow`] post hoc) feeds mixed-precision
+//! *screening* scans — it is advisory data the flag byte gates, so every
+//! pre-shadow reader keeps working and a crash mid-append (flag still 0)
+//! leaves a valid shadow-less store. All offsets are computable from
+//! `(n, p, chunk_cols)` alone, which is what lets the reader serve any
+//! column slice with one `seek`/`read`.
 
 use crate::error::{HssrError, Result};
 
@@ -53,6 +67,9 @@ pub struct Header {
     pub standardized: bool,
     /// Whether the file carries the v2 trailing checksum section.
     pub checksums: bool,
+    /// Whether the file carries the trailing f32 shadow section (the
+    /// standardized matrix re-cast to f32, plus per-shadow-chunk CRC32s).
+    pub f32_shadow: bool,
 }
 
 impl Header {
@@ -98,9 +115,41 @@ impl Header {
         if self.checksums { 4 * (self.num_chunks() as u64 + 1) } else { 0 }
     }
 
+    /// Byte offset of the f32 shadow section (right after the checksum
+    /// section; meaningful only when [`Header::f32_shadow`] is set).
+    pub fn shadow_offset(&self) -> u64 {
+        self.checksum_offset() + self.checksum_bytes()
+    }
+
+    /// Byte offset of shadow chunk `c`'s f32 payload.
+    pub fn shadow_chunk_offset(&self, c: usize) -> u64 {
+        self.shadow_offset() + (c * self.chunk_cols * self.n * 4) as u64
+    }
+
+    /// Payload bytes of shadow chunk `c` (f32 values).
+    pub fn shadow_chunk_bytes(&self, c: usize) -> usize {
+        self.chunk_width(c) * self.n * 4
+    }
+
+    /// Byte offset of the shadow CRC section (one CRC32 per shadow
+    /// chunk, after all shadow payloads).
+    pub fn shadow_crc_offset(&self) -> u64 {
+        self.shadow_offset() + (self.n * self.p * 4) as u64
+    }
+
+    /// Size of the whole f32 shadow section (payloads + CRCs); zero when
+    /// the store carries no shadow.
+    pub fn shadow_bytes(&self) -> u64 {
+        if self.f32_shadow {
+            (self.n * self.p * 4 + 4 * self.num_chunks()) as u64
+        } else {
+            0
+        }
+    }
+
     /// Total file size implied by the header.
     pub fn file_len(&self) -> u64 {
-        self.checksum_offset() + self.checksum_bytes()
+        self.checksum_offset() + self.checksum_bytes() + self.shadow_bytes()
     }
 
     /// [`Header::file_len`] with overflow-checked arithmetic — `None`
@@ -113,11 +162,17 @@ impl Header {
         let matrix = n.checked_mul(p)?.checked_mul(8)?;
         let tail = n.checked_add(p.checked_mul(2)?)?.checked_mul(8)?;
         let base = HEADER_LEN.checked_add(matrix)?.checked_add(tail)?;
-        if !self.checksums {
-            return Some(base);
-        }
         let chunks = p.div_ceil(self.chunk_cols.max(1) as u64);
-        base.checked_add(chunks.checked_add(1)?.checked_mul(4)?)
+        let with_crcs = if self.checksums {
+            base.checked_add(chunks.checked_add(1)?.checked_mul(4)?)?
+        } else {
+            base
+        };
+        if !self.f32_shadow {
+            return Some(with_crcs);
+        }
+        let shadow = n.checked_mul(p)?.checked_mul(4)?.checked_add(chunks.checked_mul(4)?)?;
+        with_crcs.checked_add(shadow)
     }
 
     /// Matrix footprint in bytes (`n·p·8`) — what "larger than the cache
@@ -131,6 +186,7 @@ impl Header {
         let mut buf = [0u8; HEADER_LEN as usize];
         buf[..9].copy_from_slice(if self.checksums { MAGIC2 } else { MAGIC });
         buf[9] = self.standardized as u8;
+        buf[10] = self.f32_shadow as u8;
         buf[16..24].copy_from_slice(&(self.n as u64).to_le_bytes());
         buf[24..32].copy_from_slice(&(self.p as u64).to_le_bytes());
         buf[32..40].copy_from_slice(&(self.chunk_cols as u64).to_le_bytes());
@@ -159,6 +215,7 @@ impl Header {
             chunk_cols: u(32),
             standardized: buf[9] != 0,
             checksums,
+            f32_shadow: buf[10] != 0,
         };
         if h.n == 0 || h.p == 0 || h.chunk_cols == 0 {
             return Err(HssrError::Config(format!(
@@ -183,7 +240,14 @@ mod tests {
 
     #[test]
     fn header_roundtrip() {
-        let h = Header { n: 17, p: 103, chunk_cols: 16, standardized: true, checksums: true };
+        let h = Header {
+            n: 17,
+            p: 103,
+            chunk_cols: 16,
+            standardized: true,
+            checksums: true,
+            f32_shadow: false,
+        };
         let back = Header::decode(&h.encode()).unwrap();
         assert_eq!(h, back);
         assert_eq!(back.num_chunks(), 7);
@@ -201,7 +265,14 @@ mod tests {
     /// file-length math — existing stores stay readable byte for byte.
     #[test]
     fn v1_header_still_readable() {
-        let h = Header { n: 17, p: 103, chunk_cols: 16, standardized: true, checksums: false };
+        let h = Header {
+            n: 17,
+            p: 103,
+            chunk_cols: 16,
+            standardized: true,
+            checksums: false,
+            f32_shadow: false,
+        };
         let enc = h.encode();
         assert_eq!(&enc[..9], MAGIC);
         let back = Header::decode(&enc).unwrap();
@@ -213,24 +284,81 @@ mod tests {
 
     #[test]
     fn bad_headers_rejected() {
-        let h = Header { n: 3, p: 4, chunk_cols: 2, standardized: false, checksums: true };
+        let h = Header {
+            n: 3,
+            p: 4,
+            chunk_cols: 2,
+            standardized: false,
+            checksums: true,
+            f32_shadow: false,
+        };
         let mut buf = h.encode();
         buf[0] = b'X';
         assert!(Header::decode(&buf).is_err());
-        let degenerate =
-            Header { n: 0, p: 4, chunk_cols: 2, standardized: false, checksums: true };
+        let degenerate = Header {
+            n: 0,
+            p: 4,
+            chunk_cols: 2,
+            standardized: false,
+            checksums: true,
+            f32_shadow: false,
+        };
         assert!(Header::decode(&degenerate.encode()).is_err());
     }
 
     #[test]
     fn checked_len_rejects_wrapping_headers() {
         for checksums in [false, true] {
-            let ok = Header { n: 17, p: 103, chunk_cols: 16, standardized: false, checksums };
-            assert_eq!(ok.checked_file_len(), Some(ok.file_len()));
-            let huge =
-                Header { n: 1 << 61, p: 4, chunk_cols: 1, standardized: false, checksums };
-            assert_eq!(huge.checked_file_len(), None);
+            for f32_shadow in [false, true] {
+                let ok = Header {
+                    n: 17,
+                    p: 103,
+                    chunk_cols: 16,
+                    standardized: false,
+                    checksums,
+                    f32_shadow,
+                };
+                assert_eq!(ok.checked_file_len(), Some(ok.file_len()));
+                let huge = Header {
+                    n: 1 << 61,
+                    p: 4,
+                    chunk_cols: 1,
+                    standardized: false,
+                    checksums,
+                    f32_shadow,
+                };
+                assert_eq!(huge.checked_file_len(), None);
+            }
         }
+    }
+
+    /// Shadow offset math: payloads in the same chunk framing (4 bytes
+    /// per value), then one CRC per shadow chunk; the flag round-trips
+    /// through byte 10 and extends the implied file length.
+    #[test]
+    fn shadow_section_math() {
+        let h = Header {
+            n: 17,
+            p: 103,
+            chunk_cols: 16,
+            standardized: true,
+            checksums: true,
+            f32_shadow: true,
+        };
+        let back = Header::decode(&h.encode()).unwrap();
+        assert_eq!(back, h);
+        assert!(back.f32_shadow);
+        let base = h.checksum_offset() + h.checksum_bytes();
+        assert_eq!(h.shadow_offset(), base);
+        assert_eq!(h.shadow_chunk_offset(0), base);
+        assert_eq!(h.shadow_chunk_offset(2), base + (2 * 16 * 17 * 4) as u64);
+        assert_eq!(h.shadow_chunk_bytes(6), (103 - 6 * 16) * 17 * 4);
+        assert_eq!(h.shadow_crc_offset(), base + (17 * 103 * 4) as u64);
+        assert_eq!(h.shadow_bytes(), (17 * 103 * 4 + 7 * 4) as u64);
+        assert_eq!(h.file_len(), base + h.shadow_bytes());
+        let plain = Header { f32_shadow: false, ..h };
+        assert_eq!(plain.shadow_bytes(), 0);
+        assert_eq!(plain.file_len(), base);
     }
 
     #[test]

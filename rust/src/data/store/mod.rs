@@ -49,8 +49,8 @@ pub use fault::{FaultInjector, FaultSpec};
 pub use format::{chunk_cols_for, Header, HEADER_LEN, MAGIC, MAGIC2};
 pub use reader::{current_fit, ColumnStore, FitTag, PinnedColumns, Prefetcher};
 pub use writer::{
-    convert_bin, convert_csv, write_columns, write_dataset, write_matrix, ColumnSpill,
-    StoreSummary,
+    append_f32_shadow, convert_bin, convert_csv, write_columns, write_dataset, write_matrix,
+    ColumnSpill, StoreSummary,
 };
 
 use std::fs::File;

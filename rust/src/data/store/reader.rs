@@ -64,7 +64,7 @@ use super::format::{Header, HEADER_LEN};
 use super::{pread, StoreCounters};
 use crate::data::Dataset;
 use crate::error::{io_fault_class, FaultClass, HssrError, Result};
-use crate::linalg::{ops, pool, DenseMatrix};
+use crate::linalg::{ops, pool, simd, DenseMatrix};
 use crate::serialize::crc32;
 
 thread_local! {
@@ -115,6 +115,18 @@ fn le_f64s(bytes: &[u8]) -> Vec<f64> {
         .collect()
 }
 
+/// Decode a little-endian f32 byte run (length must be a multiple of 4).
+fn le_f32s(bytes: &[u8]) -> Vec<f32> {
+    bytes
+        .chunks_exact(4)
+        .map(|c| {
+            let mut b = [0u8; 4];
+            b.copy_from_slice(c);
+            f32::from_le_bytes(b)
+        })
+        .collect()
+}
+
 /// A disk-backed column store with a bounded chunk cache.
 pub struct ColumnStore {
     file: File,
@@ -127,6 +139,9 @@ pub struct ColumnStore {
     counters: StoreCounters,
     /// Per-chunk CRC32s from the v2 checksum section (empty for v1).
     chunk_crcs: Vec<u32>,
+    /// Per-shadow-chunk CRC32s from the f32 shadow section (empty when
+    /// the store carries no shadow).
+    shadow_crcs: Vec<u32>,
     /// Chunks whose reads exhausted the retry budget — fail fast.
     quarantined: Mutex<std::collections::HashSet<usize>>,
     /// Optional deterministic fault source (env/CLI/tests).
@@ -243,7 +258,10 @@ impl ColumnStore {
             ))
         })?;
         let actual = file.metadata()?.len();
-        if actual != expect {
+        // Shorter than the header implies = truncation, always fatal.
+        // Longer is tolerated: a crash mid-`append_f32_shadow` leaves
+        // extra bytes after the (still unflagged) end of the store.
+        if actual < expect {
             return Err(HssrError::Config(format!(
                 "{}: store truncated ({actual} bytes, header implies {expect})",
                 path.display()
@@ -275,6 +293,19 @@ impl ColumnStore {
                 )));
             }
         }
+        let mut shadow_crcs = Vec::new();
+        if header.f32_shadow {
+            let mut sect = vec![0u8; 4 * header.num_chunks()];
+            pread(&file, &mut sect, header.shadow_crc_offset())?;
+            shadow_crcs = sect
+                .chunks_exact(4)
+                .map(|c| {
+                    let mut b = [0u8; 4];
+                    b.copy_from_slice(c);
+                    u32::from_le_bytes(b)
+                })
+                .collect();
+        }
         let (n, p) = (header.n, header.p);
         #[cfg(all(feature = "mmap", unix))]
         let map = if mmap_requested() {
@@ -296,6 +327,7 @@ impl ColumnStore {
             cache: Mutex::new(ChunkCache::new(budget_bytes.max(1))),
             counters: StoreCounters::default(),
             chunk_crcs,
+            shadow_crcs,
             quarantined: Mutex::new(std::collections::HashSet::new()),
             faults: FaultInjector::from_env()?,
             #[cfg(all(feature = "mmap", unix))]
@@ -415,30 +447,67 @@ impl ColumnStore {
     /// — the demand path retries it from scratch with its own full retry
     /// budget, instead of fast-failing on a prefetch-poisoned entry.
     fn read_chunk_verified_opts(&self, c: usize, quarantine_on_exhaust: bool) -> Result<Vec<u8>> {
-        if self.quarantine_lock().contains(&c) {
+        self.read_verified(
+            self.header.chunk_offset(c),
+            self.header.chunk_bytes(c),
+            self.chunk_crcs.get(c).copied(),
+            c,
+            &format!("chunk {c}"),
+            quarantine_on_exhaust,
+        )
+    }
+
+    /// Read and verify the f32 shadow payload of chunk `c` through the
+    /// same fault/retry/quarantine gate as the f64 chunks. Shadow chunks
+    /// quarantine under their own keys (`num_chunks + c`), so a corrupt
+    /// shadow never blocks the exact f64 path for the same columns.
+    fn read_shadow_chunk(&self, c: usize) -> Result<Vec<u8>> {
+        debug_assert!(self.header.f32_shadow);
+        self.read_verified(
+            self.header.shadow_chunk_offset(c),
+            self.header.shadow_chunk_bytes(c),
+            self.shadow_crcs.get(c).copied(),
+            self.header.num_chunks() + c,
+            &format!("f32 shadow chunk {c}"),
+            true,
+        )
+    }
+
+    /// The generalized verified-read gate behind both the f64 chunks and
+    /// the f32 shadow chunks: positioned read (optionally fault-injected),
+    /// CRC32 verification when `want_crc` is present, bounded
+    /// retry-with-backoff, and quarantine under `qkey` on exhaustion.
+    fn read_verified(
+        &self,
+        offset: u64,
+        len: usize,
+        want_crc: Option<u32>,
+        qkey: usize,
+        what: &str,
+        quarantine_on_exhaust: bool,
+    ) -> Result<Vec<u8>> {
+        if self.quarantine_lock().contains(&qkey) {
             return Err(HssrError::Corrupt(format!(
-                "{}: chunk {c} is quarantined after repeated read failures",
+                "{}: {what} is quarantined after repeated read failures",
                 self.name
             )));
         }
-        let offset = self.header.chunk_offset(c);
-        let bytes = self.header.chunk_bytes(c);
-        let mut raw = vec![0u8; bytes];
+        let mut raw = vec![0u8; len];
         let mut attempt = 0u32;
         loop {
             let read = self.raw_read(&mut raw, offset).and_then(|()| {
                 if let Some(inj) = &self.faults {
                     // Bit flips are only injected when a checksum can
                     // catch them (v2) — see `FaultInjector::decide`.
-                    inj.inject(offset, attempt, &mut raw, self.header.checksums)
+                    inj.inject(offset, attempt, &mut raw, want_crc.is_some())
                         .map_err(HssrError::Io)?;
                 }
                 Ok(())
             });
             let failure = match read {
                 Ok(()) => {
-                    match self.chunk_crcs.get(c) {
-                        Some(&want) => {
+                    match want_crc {
+                        Some(want) => {
                             let got = crc32(&raw);
                             if got == want {
                                 return Ok(raw);
@@ -468,13 +537,13 @@ impl ColumnStore {
             attempt += 1;
             if attempt >= Self::MAX_READ_ATTEMPTS {
                 let note = if quarantine_on_exhaust {
-                    self.quarantine_lock().insert(c);
+                    self.quarantine_lock().insert(qkey);
                     "; chunk quarantined"
                 } else {
                     ""
                 };
                 return Err(HssrError::Corrupt(format!(
-                    "{}: chunk {c} failed after {attempt} attempts — {failure}{note}",
+                    "{}: {what} failed after {attempt} attempts — {failure}{note}",
                     self.name
                 )));
             }
@@ -718,6 +787,55 @@ impl ColumnStore {
         Ok(())
     }
 
+    /// Whether the mounted file carries the f32 shadow section.
+    pub fn has_f32_shadow(&self) -> bool {
+        self.header.f32_shadow
+    }
+
+    /// Mixed-precision full scan: `out[j] = x̃_jᵀ ṽ / n` computed in f32,
+    /// where `x̃`/`ṽ` are the standardized columns and `v` cast to f32.
+    /// With a shadow section the f32 columns stream straight off disk
+    /// (half the bytes of the exact scan, one verified read per shadow
+    /// chunk, no caching — screening scans touch each column once); a
+    /// shadow-less store serves the f64 columns through the chunk cache
+    /// and casts, which produces **identical f32 bits** (the shadow holds
+    /// exactly `value as f32`), so callers never see which path ran.
+    /// Every approximate value must still be widened by
+    /// [`crate::linalg::simd::f32_scan_error_bound`] before any screening
+    /// decision — see [`crate::runtime::ScanEngine::scan_all_f32`].
+    pub fn scan_all_f32(&self, v: &[f64], out: &mut [f64]) -> Result<()> {
+        let (n, p) = (self.header.n, self.header.p);
+        assert_eq!(v.len(), n);
+        assert_eq!(out.len(), p);
+        let inv_n = 1.0 / n as f64;
+        let v32: Vec<f32> = v.iter().map(|&e| e as f32).collect();
+        if !self.header.f32_shadow {
+            let mut col32 = vec![0.0f32; n];
+            for (j, o) in out.iter_mut().enumerate() {
+                *o = self.with_col(j, |col| {
+                    for (d, &s) in col32.iter_mut().zip(col) {
+                        *d = s as f32;
+                    }
+                    simd::dot_f32(&col32, &v32)
+                })? as f64
+                    * inv_n;
+            }
+            return Ok(());
+        }
+        for c in 0..self.header.num_chunks() {
+            let raw = self.read_shadow_chunk(c)?;
+            self.counters.add_load(raw.len() as u64);
+            let cols = le_f32s(&raw);
+            let j0 = c * self.header.chunk_cols;
+            for local in 0..self.header.chunk_width(c) {
+                self.counters.add_col();
+                let col = &cols[local * n..(local + 1) * n];
+                out[j0 + local] = simd::dot_f32(col, &v32) as f64 * inv_n;
+            }
+        }
+        Ok(())
+    }
+
     /// Materialize the full standardized dataset (dense). Reads every
     /// chunk once, directly — bypassing the cache and the load counters,
     /// since this is a load, not scan traffic — but still through the
@@ -957,6 +1075,69 @@ mod tests {
         let back = store.to_dataset().unwrap();
         assert_eq!(back.x.as_slice(), ds.x.as_slice(), "v1 data drifted");
         assert_eq!(back.y, ds.y);
+    }
+
+    /// The f32 shadow scan returns bit-identical values whether the f32
+    /// columns stream from the shadow section or are cast from the served
+    /// f64 columns of a shadow-less store.
+    #[test]
+    fn shadow_scan_matches_cast_scan_bitwise() {
+        let ds = DataSpec::gene_like(23, 41).generate(19);
+        let a = tmp("sh_a.store");
+        let b = tmp("sh_b.store");
+        write_dataset(&ds, 8, &a).unwrap();
+        write_dataset(&ds, 8, &b).unwrap();
+        crate::data::store::append_f32_shadow(&b).unwrap();
+        let plain = ColumnStore::open(&a, 1 << 20).unwrap();
+        let shadowed = ColumnStore::open(&b, 1 << 20).unwrap();
+        assert!(!plain.has_f32_shadow());
+        assert!(shadowed.has_f32_shadow());
+        let mut rng = crate::rng::Pcg64::new(21);
+        let v = rng.normal_vec(23);
+        let mut from_cast = vec![0.0; 41];
+        let mut from_shadow = vec![0.0; 41];
+        plain.scan_all_f32(&v, &mut from_cast).unwrap();
+        shadowed.scan_all_f32(&v, &mut from_shadow).unwrap();
+        assert_eq!(from_cast, from_shadow, "shadow path changed f32 scan bits");
+        // Sanity: the f32 scan approximates the exact one within the
+        // published error bound.
+        let exact = crate::linalg::blocked::scan_all_vec(&ds.x, &v);
+        let r_norm = ops::dot(&v, &v).sqrt();
+        let eps = simd::f32_scan_error_bound(23, r_norm);
+        for j in 0..41 {
+            assert!(
+                (from_shadow[j] - exact[j]).abs() <= eps,
+                "column {j}: |{} - {}| > {eps}",
+                from_shadow[j],
+                exact[j]
+            );
+        }
+        // Shadow reads are real I/O: loads and columns are counted.
+        assert!(shadowed.counters().chunk_loads() >= 6);
+        assert_eq!(shadowed.counters().cols_fetched(), 41);
+    }
+
+    /// A corrupt shadow chunk quarantines under its own key: the f32 scan
+    /// fails typed while the exact f64 path for the same columns keeps
+    /// serving clean data.
+    #[test]
+    fn corrupt_shadow_does_not_block_f64_path() {
+        let ds = DataSpec::synthetic(10, 8, 2).generate(23);
+        let path = tmp("shflip.store");
+        write_dataset(&ds, 4, &path).unwrap();
+        let h = crate::data::store::append_f32_shadow(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[h.shadow_chunk_offset(1) as usize + 9] ^= 0x20;
+        std::fs::write(&path, bytes).unwrap();
+        let store = ColumnStore::open(&path, 1 << 20).unwrap();
+        let v = vec![1.0; 10];
+        let mut out = vec![0.0; 8];
+        let err = store.scan_all_f32(&v, &mut out).unwrap_err();
+        assert!(matches!(err, HssrError::Corrupt(_)), "got {err}");
+        assert!(err.to_string().contains("f32 shadow chunk 1"), "got {err}");
+        // The f64 chunks are untouched and not quarantined.
+        let back = store.to_dataset().unwrap();
+        assert_eq!(back.x.as_slice(), ds.x.as_slice());
     }
 
     /// A flipped payload byte is detected by the chunk CRC and surfaced

@@ -48,6 +48,94 @@ pub struct StoreSummary {
     pub file_bytes: u64,
 }
 
+/// Whether `HSSR_STORE_F32=1` asks the writers to append an f32 shadow
+/// section to every store they produce.
+fn f32_shadow_requested() -> bool {
+    matches!(
+        std::env::var("HSSR_STORE_F32").as_deref(),
+        Ok("1") | Ok("true") | Ok("on")
+    )
+}
+
+/// Append the f32 shadow section to an existing store: the standardized
+/// matrix re-cast to f32 in the same chunk framing, one CRC32 per shadow
+/// chunk, and — **last**, so a crash mid-append leaves a valid
+/// shadow-less file — the header flag at byte 10. Idempotent: a store
+/// that already carries a shadow is returned unchanged. Returns the
+/// updated header.
+///
+/// Each shadow value is `standardized_value as f32`, where the
+/// standardized f64 is computed exactly as the reader's chunk decode does
+/// (`(x − center)·(1/scale)`, zero for constant columns) — so a shadow
+/// scan is bit-identical to casting the served f64 columns, which is what
+/// lets the mixed-precision screening path swap freely between shadowed
+/// and shadow-less stores.
+pub fn append_f32_shadow(path: &Path) -> Result<Header> {
+    let file = File::options().read(true).write(true).open(path)?;
+    let mut head = [0u8; HEADER_LEN as usize];
+    pread(&file, &mut head, 0)?;
+    let header = Header::decode(&head)?;
+    if header.f32_shadow {
+        return Ok(header);
+    }
+    let (n, p) = (header.n, header.p);
+    // Per-column stats live in the tail: needed to standardize raw chunks.
+    let mut stats = vec![0u8; 2 * p * 8];
+    pread(&file, &mut stats, header.tail_offset() + (n * 8) as u64)?;
+    let decode = |b: &[u8]| -> Vec<f64> {
+        b.chunks_exact(8)
+            .map(|c| {
+                let mut v = [0u8; 8];
+                v.copy_from_slice(c);
+                f64::from_le_bytes(v)
+            })
+            .collect()
+    };
+    let centers = decode(&stats[..p * 8]);
+    let scales = decode(&stats[p * 8..]);
+    let shadowed = Header { f32_shadow: true, ..header };
+    let mut crcs = Vec::with_capacity(4 * shadowed.num_chunks());
+    let mut raw = Vec::new();
+    let mut cast = Vec::new();
+    for c in 0..shadowed.num_chunks() {
+        raw.resize(shadowed.chunk_bytes(c), 0u8);
+        pread(&file, &mut raw, shadowed.chunk_offset(c))?;
+        cast.clear();
+        let j0 = c * shadowed.chunk_cols;
+        for (local, col) in raw.chunks_exact(n * 8).enumerate() {
+            let j = j0 + local;
+            let scale = scales[j];
+            let center = centers[j];
+            let inv = 1.0 / scale;
+            for v in decode(col) {
+                let std = if shadowed.standardized {
+                    v
+                } else if scale == 0.0 {
+                    0.0
+                } else {
+                    (v - center) * inv
+                };
+                cast.extend_from_slice(&(std as f32).to_le_bytes());
+            }
+        }
+        crcs.extend_from_slice(&crc32(&cast).to_le_bytes());
+        pwrite(&file, &cast, shadowed.shadow_chunk_offset(c))?;
+    }
+    pwrite(&file, &crcs, shadowed.shadow_crc_offset())?;
+    file.sync_all()?;
+    // Publish the shadow only after every byte of it is durable.
+    pwrite(&file, &[1u8], 10)?;
+    file.sync_all().ok();
+    Ok(shadowed)
+}
+
+/// Run the `HSSR_STORE_F32` writer hook: append the shadow when
+/// requested, returning the (possibly updated) summary.
+fn finish_store(header: Header, path: &Path) -> Result<StoreSummary> {
+    let header = if f32_shadow_requested() { append_f32_shadow(path)? } else { header };
+    Ok(StoreSummary { header, file_bytes: header.file_len() })
+}
+
 /// Read the written payload back and append the v2 checksum section: one
 /// CRC32 per chunk in order, then one CRC32 of the whole tail. The file
 /// handle must be readable and writable.
@@ -140,6 +228,7 @@ pub fn write_matrix(
         chunk_cols: chunk_cols.clamp(1, p.max(1)),
         standardized,
         checksums: true,
+        f32_shadow: false,
     };
     let file = File::options().read(true).write(true).create(true).truncate(true).open(path)?;
     let mut w = BufWriter::new(&file);
@@ -153,7 +242,7 @@ pub fn write_matrix(
     w.flush()?;
     drop(w);
     append_checksums(&file, &header)?;
-    Ok(StoreSummary { header, file_bytes: header.file_len() })
+    finish_store(header, path)
 }
 
 /// Spill a standardized [`Dataset`] to a store (identity read transform;
@@ -214,6 +303,7 @@ pub fn write_columns(
         chunk_cols: spec.chunk_cols.clamp(1, p),
         standardized: spec.standardized,
         checksums: true,
+        f32_shadow: false,
     };
     let file = File::options().read(true).write(true).create(true).truncate(true).open(path)?;
     let mut w = BufWriter::new(&file);
@@ -241,7 +331,7 @@ pub fn write_columns(
     w.flush()?;
     drop(w);
     append_checksums(&file, &header)?;
-    Ok(StoreSummary { header, file_bytes: header.file_len() })
+    finish_store(header, path)
 }
 
 /// Convert an `HSSRBIN1` binary cache (already standardized, column-major)
@@ -270,8 +360,14 @@ pub fn convert_bin(src: &Path, chunk_cols: usize, out: &Path) -> Result<StoreSum
     let mut ybytes = vec![0u8; n * 8];
     r.read_exact(&mut ybytes)?;
     check_finite_bytes(&ybytes, 0, "binary cache response")?;
-    let header =
-        Header { n, p, chunk_cols: chunk_cols.clamp(1, p), standardized: true, checksums: true };
+    let header = Header {
+        n,
+        p,
+        chunk_cols: chunk_cols.clamp(1, p),
+        standardized: true,
+        checksums: true,
+        f32_shadow: false,
+    };
     let file = File::options().read(true).write(true).create(true).truncate(true).open(out)?;
     let mut w = BufWriter::new(&file);
     w.write_all(&header.encode())?;
@@ -307,7 +403,7 @@ pub fn convert_bin(src: &Path, chunk_cols: usize, out: &Path) -> Result<StoreSum
     w.flush()?;
     drop(w);
     append_checksums(&file, &header)?;
-    Ok(StoreSummary { header, file_bytes: header.file_len() })
+    finish_store(header, out)
 }
 
 /// Per-column Welford accumulator (numerically stable streaming
@@ -360,8 +456,14 @@ pub fn convert_csv(src: &Path, chunk_cols: usize, out: &Path) -> Result<StoreSum
         return Err(HssrError::Config("csv needs ≥ 2 columns (y + features)".into()));
     }
     let p = width - 1;
-    let header =
-        Header { n, p, chunk_cols: chunk_cols.clamp(1, p), standardized: false, checksums: true };
+    let header = Header {
+        n,
+        p,
+        chunk_cols: chunk_cols.clamp(1, p),
+        standardized: false,
+        checksums: true,
+        f32_shadow: false,
+    };
 
     // Pass 2: stream rows, scattering row blocks to their final
     // column-major offsets while the Welford state accumulates.
@@ -452,7 +554,7 @@ pub fn convert_csv(src: &Path, chunk_cols: usize, out: &Path) -> Result<StoreSum
     pwrite(&file, &tail, header.tail_offset())?;
     append_checksums(&file, &header)?;
     file.sync_all().ok();
-    Ok(StoreSummary { header, file_bytes: header.file_len() })
+    finish_store(header, out)
 }
 
 #[cfg(test)]
@@ -540,6 +642,49 @@ mod tests {
         let want = crc32(&bytes[tail_start..tail_start + h.tail_bytes()]);
         let got = u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap());
         assert_eq!(got, want, "tail CRC mismatch");
+    }
+
+    /// `append_f32_shadow` writes exactly `value as f32` per entry in the
+    /// chunk framing, CRCs each shadow chunk, flips the flag byte, and is
+    /// idempotent.
+    #[test]
+    fn f32_shadow_holds_cast_values() {
+        use crate::data::DataSpec;
+        let ds = DataSpec::synthetic(9, 10, 2).generate(17);
+        let path = tmp("shadow.store");
+        let s = write_dataset(&ds, 4, &path).unwrap();
+        assert!(!s.header.f32_shadow);
+        let h = append_f32_shadow(&path).unwrap();
+        assert!(h.f32_shadow);
+        let bytes = std::fs::read(&path).unwrap();
+        assert_eq!(bytes.len() as u64, h.file_len());
+        assert_eq!(bytes[10], 1, "flag byte not patched");
+        // Shadow values are the standardized design cast to f32, column
+        // by column in the same chunk framing.
+        for j in 0..10usize {
+            let c = j / 4;
+            let local = j - c * 4;
+            let off = h.shadow_chunk_offset(c) as usize + local * 9 * 4;
+            for (i, &want) in ds.x.col(j).iter().enumerate() {
+                let got = f32::from_le_bytes(
+                    bytes[off + i * 4..off + i * 4 + 4].try_into().unwrap(),
+                );
+                assert_eq!(got, want as f32, "shadow value drifted at ({i}, {j})");
+            }
+        }
+        // Shadow CRCs cover the shadow payloads.
+        let mut crc_off = h.shadow_crc_offset() as usize;
+        for c in 0..h.num_chunks() {
+            let start = h.shadow_chunk_offset(c) as usize;
+            let want = crc32(&bytes[start..start + h.shadow_chunk_bytes(c)]);
+            let got = u32::from_le_bytes(bytes[crc_off..crc_off + 4].try_into().unwrap());
+            assert_eq!(got, want, "shadow chunk {c} CRC mismatch");
+            crc_off += 4;
+        }
+        // Idempotent: a second append changes nothing.
+        let again = append_f32_shadow(&path).unwrap();
+        assert_eq!(again, h);
+        assert_eq!(std::fs::read(&path).unwrap(), bytes);
     }
 
     /// A `write_columns` spill of the same data is byte-identical to the

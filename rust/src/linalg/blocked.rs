@@ -103,6 +103,36 @@ pub fn scan_all_vec(x: &DenseMatrix, v: &[f64]) -> Vec<f64> {
     out
 }
 
+/// Pool-parallel f32 shadow scan: `out[j] = fl32(x32_jᵀ v32) / n` over
+/// every column of the column-major `n × p` f32 `mirror` (division done
+/// in f64). Feeds the mixed-precision screening prefilters only — every
+/// consumer must widen its bounds by
+/// [`super::simd::f32_scan_error_bound`].
+pub fn scan_all_f32_mirror(mirror: &[f32], n: usize, p: usize, v32: &[f32], out: &mut [f64]) {
+    assert_eq!(mirror.len(), n * p);
+    assert_eq!(v32.len(), n);
+    assert_eq!(out.len(), p);
+    let inv_n = 1.0 / n as f64;
+    if n * p < PAR_THRESHOLD {
+        for (j, o) in out.iter_mut().enumerate() {
+            *o = super::simd::dot_f32(&mirror[j * n..(j + 1) * n], v32) as f64 * inv_n;
+        }
+        return;
+    }
+    let pool = pool::global();
+    let per = cols_per_chunk(p, pool.threads());
+    let outp = RacyPtr(out.as_mut_ptr());
+    pool.run(p.div_ceil(per), &|c| {
+        let j0 = c * per;
+        let j1 = (j0 + per).min(p);
+        for j in j0..j1 {
+            let d = super::simd::dot_f32(&mirror[j * n..(j + 1) * n], v32) as f64 * inv_n;
+            // SAFETY: chunk c owns out[j0..j1] exclusively.
+            unsafe { *outp.0.add(j) = d };
+        }
+    });
+}
+
 // ---------------------------------------------------------------------------
 // Legacy spawn-per-scan kernels, kept for pooled-vs-scoped benchmarking.
 // ---------------------------------------------------------------------------
@@ -323,6 +353,15 @@ pub fn fused_screen(
 ///   residual — subsuming the unfused end-of-step strong refresh);
 /// * non-strong survivors get `z_j` recomputed and `violates(z_j)` applied.
 ///
+/// Columns whose `z_valid[j]` is already set are **not** rescanned: the
+/// cached `z[j]` is used directly (and not counted in `cols_scanned`).
+/// This is the fused-epoch contract — a dynamic rule's rescreen pass may
+/// publish the correlations it just computed at the *same residual* into
+/// `z`/`z_valid`, and this pass then reuses them instead of paying a
+/// second column traversal. Callers that cannot guarantee freshness must
+/// clear `z_valid` first (the solver does so whenever CD moved the
+/// residual).
+///
 /// Violators come back ascending, matching the unfused
 /// scan-subset-then-filter order exactly.
 #[allow(clippy::too_many_arguments)]
@@ -344,10 +383,8 @@ pub fn fused_kkt(
     assert_eq!(z_valid.len(), p);
     assert_eq!(r.len(), n);
     let inv_n = 1.0 / n as f64;
-    let work = survive
-        .iter()
-        .zip(in_strong.iter())
-        .filter(|&(&s, &h)| s && (!h || refresh_strong))
+    let work = (0..p)
+        .filter(|&j| survive[j] && !z_valid[j] && (!in_strong[j] || refresh_strong))
         .count();
     let mut out = FusedKktOut::default();
     if work * n < PAR_THRESHOLD {
@@ -356,16 +393,18 @@ pub fn fused_kkt(
                 continue;
             }
             if in_strong[j] {
-                if refresh_strong {
+                if refresh_strong && !z_valid[j] {
                     z[j] = ops::dot(x.col(j), r) * inv_n;
                     z_valid[j] = true;
                     out.cols_scanned += 1;
                 }
                 continue;
             }
-            z[j] = ops::dot(x.col(j), r) * inv_n;
-            z_valid[j] = true;
-            out.cols_scanned += 1;
+            if !z_valid[j] {
+                z[j] = ops::dot(x.col(j), r) * inv_n;
+                z_valid[j] = true;
+                out.cols_scanned += 1;
+            }
             out.checked += 1;
             if violates(z[j]) {
                 out.violations.push(j);
@@ -391,8 +430,10 @@ pub fn fused_kkt(
                 if !survive[j] {
                     continue;
                 }
+                // SAFETY: chunk c owns z[j] and z_valid[j] exclusively.
+                let vj = unsafe { *vp.0.add(j) };
                 if in_strong[j] {
-                    if refresh_strong {
+                    if refresh_strong && !vj {
                         unsafe {
                             *zp.0.add(j) = ops::dot(x.col(j), r) * inv_n;
                             *vp.0.add(j) = true;
@@ -401,12 +442,18 @@ pub fn fused_kkt(
                     }
                     continue;
                 }
-                let zj = ops::dot(x.col(j), r) * inv_n;
-                unsafe {
-                    *zp.0.add(j) = zj;
-                    *vp.0.add(j) = true;
-                }
-                acc.scanned += 1;
+                let zj = if vj {
+                    // SAFETY: as above; the cached value is fresh.
+                    unsafe { *zp.0.add(j) }
+                } else {
+                    let zj = ops::dot(x.col(j), r) * inv_n;
+                    unsafe {
+                        *zp.0.add(j) = zj;
+                        *vp.0.add(j) = true;
+                    }
+                    acc.scanned += 1;
+                    zj
+                };
                 acc.checked += 1;
                 if violates(zj) {
                     acc.picked.push(j);

@@ -8,6 +8,7 @@
 pub mod blocked;
 pub mod ops;
 pub mod pool;
+pub mod simd;
 
 use crate::error::{HssrError, Result};
 

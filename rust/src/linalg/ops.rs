@@ -2,10 +2,47 @@
 //!
 //! These are written to auto-vectorize: fixed-width unrolled accumulators,
 //! no bounds checks in the hot loops (slices pre-split into chunks).
+//!
+//! `dot` / `axpy` additionally dispatch to the explicit SIMD kernels in
+//! [`super::simd`] when the `HSSR_SIMD` knob enables them; every SIMD
+//! variant is bit-identical to the scalar reference here (same per-lane
+//! operations, same reduction order, same sequential tail), so callers
+//! never observe the knob numerically. The `*_scalar` functions are the
+//! fixed references the conformance suite compares against.
 
-/// Dot product with 8-way unrolled accumulators (auto-vectorizes to AVX).
+use super::simd;
+
+/// Dot product, dispatched: scalar reference by default, SIMD kernel when
+/// `HSSR_SIMD` enables one (bit-identical either way).
 #[inline]
 pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    if simd::active() {
+        return simd::dot(a, b);
+    }
+    dot_scalar(a, b)
+}
+
+/// `y += alpha * x`, dispatched like [`dot`].
+#[inline]
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    if simd::active() {
+        return simd::axpy(alpha, x, y);
+    }
+    axpy_scalar(alpha, x, y)
+}
+
+/// Fused `y += alpha·x; dot(w, y)` in a single traversal of `y` — the
+/// fused-CD-epoch kernel. Bit-identical to `axpy(alpha, x, y)` followed
+/// by `dot(w, y)` at every dispatch level (see [`super::simd::axpy_dot`]).
+#[inline]
+pub fn axpy_dot(alpha: f64, x: &[f64], w: &[f64], y: &mut [f64]) -> f64 {
+    simd::axpy_dot(alpha, x, w, y)
+}
+
+/// Scalar reference dot product with 8-way unrolled accumulators
+/// (auto-vectorizes to SSE2 on the x86-64 baseline).
+#[inline]
+pub fn dot_scalar(a: &[f64], b: &[f64]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
     let chunks = a.len() / 8;
     let (a8, atail) = a.split_at(chunks * 8);
@@ -23,9 +60,9 @@ pub fn dot(a: &[f64], b: &[f64]) -> f64 {
     s
 }
 
-/// `y += alpha * x`.
+/// Scalar reference `y += alpha * x`.
 #[inline]
-pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+pub fn axpy_scalar(alpha: f64, x: &[f64], y: &mut [f64]) {
     debug_assert_eq!(x.len(), y.len());
     let chunks = x.len() / 8;
     let (x8, xtail) = x.split_at(chunks * 8);

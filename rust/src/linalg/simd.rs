@@ -1,0 +1,532 @@
+//! Explicit SIMD micro-kernels behind the `HSSR_SIMD` runtime knob.
+//!
+//! The scalar kernels in [`super::ops`] are 8-way unrolled so the
+//! compiler *may* vectorize them, but a portable build (`x86-64` baseline)
+//! only gets SSE2. This module provides the hardware-shaped versions:
+//!
+//! * **f64**: portable 8-lane dot / axpy micro-kernels plus AVX2
+//!   intrinsic versions, all **bit-identical** to [`super::ops::dot`] /
+//!   [`super::ops::axpy`] — the scalar kernel's eight independent
+//!   accumulators map exactly onto two 4-lane vector registers, its
+//!   reduction `(a0+a4)+(a1+a5)+(a2+a6)+(a3+a7)` is exactly the lane-wise
+//!   vector add `p = lo + hi` followed by the left-to-right scalar sum
+//!   `((p0+p1)+p2)+p3`, and the tail is handled sequentially by the same
+//!   code. No FMA is ever used (Rust never contracts float ops, and these
+//!   kernels only emit mul/add), so every product and sum rounds exactly
+//!   like the scalar reference.
+//! * **f32**: a sequential scalar reference plus portable 16-lane and AVX2
+//!   (2×8-lane) dot kernels for the mixed-precision screening scan. f32
+//!   results are *not* bit-identical across kernels (the accumulation
+//!   trees differ); they are covered by the proven error bound
+//!   [`f32_scan_error_bound`], which holds for **any** summation order.
+//!
+//! Dispatch is process-global and read from `HSSR_SIMD` once, with a test
+//! override ([`force`] / [`reset`]) so benches and the conformance suite
+//! can A/B both paths in one process:
+//!
+//! * `HSSR_SIMD` unset or `0` — scalar kernels (the default; opt-in knob);
+//! * `HSSR_SIMD=1` — autodetect: AVX2 intrinsics when the CPU supports
+//!   them, otherwise the portable lane kernels;
+//! * `HSSR_SIMD=portable` — force the portable lane kernels (no
+//!   intrinsics, any architecture).
+//!
+//! The hot callers ([`super::ops::dot`], [`super::ops::axpy`], and through
+//! them every blocked/fused kernel, the CD inner loop, and the store
+//! scans) consult [`level`] per call — one relaxed atomic load, noise
+//! against the O(n) kernel work — so the knob applies everywhere without
+//! threading a config handle through the pool workers.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Dispatch level for the micro-kernels.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Level {
+    /// Scalar reference kernels ([`super::ops`]).
+    Scalar,
+    /// Portable fixed-lane-array kernels (no intrinsics).
+    Portable,
+    /// AVX2 intrinsic kernels (x86-64 with runtime-detected support).
+    Avx2,
+}
+
+impl Level {
+    /// Display label for reports and benches.
+    pub fn label(self) -> &'static str {
+        match self {
+            Level::Scalar => "scalar",
+            Level::Portable => "portable",
+            Level::Avx2 => "avx2",
+        }
+    }
+}
+
+// 0 = uninitialized, 1 = scalar, 2 = portable, 3 = avx2.
+static STATE: AtomicU8 = AtomicU8::new(0);
+
+fn detect_auto() -> u8 {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::is_x86_feature_detected!("avx2") {
+            return 3;
+        }
+    }
+    2
+}
+
+fn init_from_env() -> u8 {
+    let code = match std::env::var("HSSR_SIMD").as_deref() {
+        Ok("1") | Ok("on") | Ok("true") | Ok("auto") | Ok("avx2") => detect_auto(),
+        Ok("portable") | Ok("lanes") => 2,
+        _ => 1,
+    };
+    STATE.store(code, Ordering::Relaxed);
+    code
+}
+
+/// The active dispatch level (lazily initialized from `HSSR_SIMD`).
+#[inline]
+pub fn level() -> Level {
+    let mut code = STATE.load(Ordering::Relaxed);
+    if code == 0 {
+        code = init_from_env();
+    }
+    match code {
+        3 => Level::Avx2,
+        2 => Level::Portable,
+        _ => Level::Scalar,
+    }
+}
+
+/// Whether a non-scalar kernel is active.
+#[inline]
+pub fn active() -> bool {
+    level() != Level::Scalar
+}
+
+/// Test/bench override: force SIMD on (autodetected level) or off,
+/// ignoring `HSSR_SIMD`. Process-global — callers that toggle it around a
+/// measurement should restore with [`reset`] or a saved [`force`] state.
+pub fn force(enabled: bool) {
+    STATE.store(if enabled { detect_auto() } else { 1 }, Ordering::Relaxed);
+}
+
+/// Drop any [`force`] override and re-read `HSSR_SIMD`.
+pub fn reset() {
+    STATE.store(0, Ordering::Relaxed);
+}
+
+// ---------------------------------------------------------------------------
+// f64 kernels — every variant bit-identical to the ops.rs scalar reference.
+// ---------------------------------------------------------------------------
+
+/// Portable 8-lane dot: the scalar reference's accumulator array written
+/// as an explicit lane kernel (same lane ops, same reduction order, same
+/// sequential tail ⇒ bit-identical to [`super::ops::dot`]).
+pub fn dot_lanes(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let chunks = a.len() / 8;
+    let (a8, atail) = a.split_at(chunks * 8);
+    let (b8, btail) = b.split_at(chunks * 8);
+    let mut acc = [0.0f64; 8];
+    for (ca, cb) in a8.chunks_exact(8).zip(b8.chunks_exact(8)) {
+        for k in 0..8 {
+            acc[k] += ca[k] * cb[k];
+        }
+    }
+    let p = [acc[0] + acc[4], acc[1] + acc[5], acc[2] + acc[6], acc[3] + acc[7]];
+    let mut s = ((p[0] + p[1]) + p[2]) + p[3];
+    for (x, y) in atail.iter().zip(btail) {
+        s += x * y;
+    }
+    s
+}
+
+/// Portable 8-lane axpy (`y += alpha·x`); element-wise, so trivially
+/// bit-identical to [`super::ops::axpy`].
+pub fn axpy_lanes(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    let chunks = x.len() / 8;
+    let (x8, xtail) = x.split_at(chunks * 8);
+    let (y8, ytail) = y.split_at_mut(chunks * 8);
+    for (cx, cy) in x8.chunks_exact(8).zip(y8.chunks_exact_mut(8)) {
+        for k in 0..8 {
+            cy[k] += alpha * cx[k];
+        }
+    }
+    for (x, y) in xtail.iter().zip(ytail) {
+        *y += alpha * x;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    //! AVX2 intrinsic kernels. Safety: every function is
+    //! `#[target_feature(enable = "avx2")]` and only called after runtime
+    //! detection; loads/stores are unaligned-safe (`loadu`/`storeu`) and
+    //! stay within the slices' bounds. Only mul/add are emitted — never
+    //! FMA — so rounding matches the scalar reference operation for
+    //! operation.
+
+    #[allow(clippy::missing_safety_doc)]
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot(a: &[f64], b: &[f64]) -> f64 {
+        use core::arch::x86_64::*;
+        let chunks = a.len() / 8;
+        let (a8, atail) = a.split_at(chunks * 8);
+        let (b8, btail) = b.split_at(chunks * 8);
+        let ap = a8.as_ptr();
+        let bp = b8.as_ptr();
+        // Two 4-lane accumulators = the scalar kernel's acc[0..4]/acc[4..8].
+        let mut lo = _mm256_setzero_pd();
+        let mut hi = _mm256_setzero_pd();
+        for i in 0..chunks {
+            let off = i * 8;
+            let a0 = _mm256_loadu_pd(ap.add(off));
+            let b0 = _mm256_loadu_pd(bp.add(off));
+            let a1 = _mm256_loadu_pd(ap.add(off + 4));
+            let b1 = _mm256_loadu_pd(bp.add(off + 4));
+            lo = _mm256_add_pd(lo, _mm256_mul_pd(a0, b0));
+            hi = _mm256_add_pd(hi, _mm256_mul_pd(a1, b1));
+        }
+        // p[k] = acc[k] + acc[k+4], then the scalar reduction order
+        // ((p0+p1)+p2)+p3 — exactly ops::dot's
+        // (a0+a4)+(a1+a5)+(a2+a6)+(a3+a7).
+        let p = _mm256_add_pd(lo, hi);
+        let mut lanes = [0.0f64; 4];
+        _mm256_storeu_pd(lanes.as_mut_ptr(), p);
+        let mut s = ((lanes[0] + lanes[1]) + lanes[2]) + lanes[3];
+        for (x, y) in atail.iter().zip(btail) {
+            s += x * y;
+        }
+        s
+    }
+
+    #[allow(clippy::missing_safety_doc)]
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+        use core::arch::x86_64::*;
+        let chunks = x.len() / 4;
+        let (x4, xtail) = x.split_at(chunks * 4);
+        let (y4, ytail) = y.split_at_mut(chunks * 4);
+        let va = _mm256_set1_pd(alpha);
+        let xp = x4.as_ptr();
+        let yp = y4.as_mut_ptr();
+        for i in 0..chunks {
+            let off = i * 4;
+            let vx = _mm256_loadu_pd(xp.add(off));
+            let vy = _mm256_loadu_pd(yp.add(off));
+            _mm256_storeu_pd(yp.add(off), _mm256_add_pd(vy, _mm256_mul_pd(va, vx)));
+        }
+        for (x, y) in xtail.iter().zip(ytail) {
+            *y += alpha * x;
+        }
+    }
+
+    #[allow(clippy::missing_safety_doc)]
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy_dot(alpha: f64, x: &[f64], w: &[f64], y: &mut [f64]) -> f64 {
+        use core::arch::x86_64::*;
+        let chunks = x.len() / 8;
+        let (x8, xtail) = x.split_at(chunks * 8);
+        let (w8, wtail) = w.split_at(chunks * 8);
+        let (y8, ytail) = y.split_at_mut(chunks * 8);
+        let va = _mm256_set1_pd(alpha);
+        let xp = x8.as_ptr();
+        let wp = w8.as_ptr();
+        let yp = y8.as_mut_ptr();
+        let mut lo = _mm256_setzero_pd();
+        let mut hi = _mm256_setzero_pd();
+        for i in 0..chunks {
+            let off = i * 8;
+            let y0 = _mm256_add_pd(
+                _mm256_loadu_pd(yp.add(off)),
+                _mm256_mul_pd(va, _mm256_loadu_pd(xp.add(off))),
+            );
+            let y1 = _mm256_add_pd(
+                _mm256_loadu_pd(yp.add(off + 4)),
+                _mm256_mul_pd(va, _mm256_loadu_pd(xp.add(off + 4))),
+            );
+            _mm256_storeu_pd(yp.add(off), y0);
+            _mm256_storeu_pd(yp.add(off + 4), y1);
+            lo = _mm256_add_pd(lo, _mm256_mul_pd(_mm256_loadu_pd(wp.add(off)), y0));
+            hi = _mm256_add_pd(hi, _mm256_mul_pd(_mm256_loadu_pd(wp.add(off + 4)), y1));
+        }
+        let p = _mm256_add_pd(lo, hi);
+        let mut lanes = [0.0f64; 4];
+        _mm256_storeu_pd(lanes.as_mut_ptr(), p);
+        let mut s = ((lanes[0] + lanes[1]) + lanes[2]) + lanes[3];
+        for ((x, w), y) in xtail.iter().zip(wtail).zip(ytail) {
+            *y += alpha * x;
+            s += w * *y;
+        }
+        s
+    }
+
+    #[allow(clippy::missing_safety_doc)]
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+        use core::arch::x86_64::*;
+        let chunks = a.len() / 16;
+        let (a16, atail) = a.split_at(chunks * 16);
+        let (b16, btail) = b.split_at(chunks * 16);
+        let ap = a16.as_ptr();
+        let bp = b16.as_ptr();
+        let mut lo = _mm256_setzero_ps();
+        let mut hi = _mm256_setzero_ps();
+        for i in 0..chunks {
+            let off = i * 16;
+            lo = _mm256_add_ps(
+                lo,
+                _mm256_mul_ps(_mm256_loadu_ps(ap.add(off)), _mm256_loadu_ps(bp.add(off))),
+            );
+            hi = _mm256_add_ps(
+                hi,
+                _mm256_mul_ps(
+                    _mm256_loadu_ps(ap.add(off + 8)),
+                    _mm256_loadu_ps(bp.add(off + 8)),
+                ),
+            );
+        }
+        // Same reduction tree as the portable 16-lane kernel: p[k] =
+        // acc[k] + acc[k+8], then a left-to-right scalar sum.
+        let p = _mm256_add_ps(lo, hi);
+        let mut lanes = [0.0f32; 8];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), p);
+        let mut s = lanes[0];
+        for &l in &lanes[1..] {
+            s += l;
+        }
+        for (x, y) in atail.iter().zip(btail) {
+            s += x * y;
+        }
+        s
+    }
+}
+
+/// Dispatched dot product — bit-identical to [`super::ops::dot`] at every
+/// level (see module docs for the lane ↔ accumulator mapping).
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    match level() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Level::Avx2 is only set after runtime detection.
+        Level::Avx2 => unsafe { avx2::dot(a, b) },
+        Level::Portable => dot_lanes(a, b),
+        _ => dot_lanes(a, b),
+    }
+}
+
+/// Dispatched `y += alpha·x` — bit-identical at every level.
+#[inline]
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    match level() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Level::Avx2 is only set after runtime detection.
+        Level::Avx2 => unsafe { avx2::axpy(alpha, x, y) },
+        _ => axpy_lanes(alpha, x, y),
+    }
+}
+
+/// Fused `y += alpha·x; dot(w, y)` in one traversal, for the fused CD
+/// epoch: the deferred residual update of the previous coordinate and the
+/// correlation of the next one share a single pass over `y`.
+///
+/// Bit-identical to `axpy(alpha, x, y)` followed by `dot(w, y)`: each
+/// `y[i]` is updated exactly once before the dot term reads it, the update
+/// is the same mul/add, and the dot accumulates in [`super::ops::dot`]'s
+/// lane/reduction order.
+pub fn axpy_dot(alpha: f64, x: &[f64], w: &[f64], y: &mut [f64]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    debug_assert_eq!(w.len(), y.len());
+    #[cfg(target_arch = "x86_64")]
+    if level() == Level::Avx2 {
+        // SAFETY: Level::Avx2 is only set after runtime detection.
+        return unsafe { avx2::axpy_dot(alpha, x, w, y) };
+    }
+    let chunks = x.len() / 8;
+    let (x8, xtail) = x.split_at(chunks * 8);
+    let (w8, wtail) = w.split_at(chunks * 8);
+    let (y8, ytail) = y.split_at_mut(chunks * 8);
+    let mut acc = [0.0f64; 8];
+    for ((cx, cw), cy) in
+        x8.chunks_exact(8).zip(w8.chunks_exact(8)).zip(y8.chunks_exact_mut(8))
+    {
+        for k in 0..8 {
+            cy[k] += alpha * cx[k];
+            acc[k] += cw[k] * cy[k];
+        }
+    }
+    let p = [acc[0] + acc[4], acc[1] + acc[5], acc[2] + acc[6], acc[3] + acc[7]];
+    let mut s = ((p[0] + p[1]) + p[2]) + p[3];
+    for ((x, w), y) in xtail.iter().zip(wtail).zip(ytail) {
+        *y += alpha * x;
+        s += w * *y;
+    }
+    s
+}
+
+// ---------------------------------------------------------------------------
+// f32 kernels — the mixed-precision screening scan.
+// ---------------------------------------------------------------------------
+
+/// Sequential scalar f32 dot — the conformance reference for the f32
+/// kernels.
+pub fn dot_f32_scalar(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = 0.0f32;
+    for (x, y) in a.iter().zip(b) {
+        s += x * y;
+    }
+    s
+}
+
+/// Portable 16-lane f32 dot (two 8-lane accumulator blocks, sequential
+/// tail). Not bit-identical to the sequential reference — covered by
+/// [`f32_scan_error_bound`], which holds for any accumulation order.
+pub fn dot_f32_lanes(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let chunks = a.len() / 16;
+    let (a16, atail) = a.split_at(chunks * 16);
+    let (b16, btail) = b.split_at(chunks * 16);
+    let mut acc = [0.0f32; 16];
+    for (ca, cb) in a16.chunks_exact(16).zip(b16.chunks_exact(16)) {
+        for k in 0..16 {
+            acc[k] += ca[k] * cb[k];
+        }
+    }
+    let mut p = [0.0f32; 8];
+    for k in 0..8 {
+        p[k] = acc[k] + acc[k + 8];
+    }
+    let mut s = p[0];
+    for &l in &p[1..] {
+        s += l;
+    }
+    for (x, y) in atail.iter().zip(btail) {
+        s += x * y;
+    }
+    s
+}
+
+/// Dispatched f32 dot: scalar reference when SIMD is off, lane/AVX2
+/// kernel when on.
+#[inline]
+pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+    match level() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Level::Avx2 is only set after runtime detection.
+        Level::Avx2 => unsafe { avx2::dot_f32(a, b) },
+        Level::Portable => dot_f32_lanes(a, b),
+        _ => dot_f32_scalar(a, b),
+    }
+}
+
+/// Worst-case absolute error of the f32 screening scan entry
+/// `z32_j = fl32(x32_jᵀ r32)/n` against the exact f64 `z_j = x_jᵀ r / n`,
+/// for a standardized column (`‖x_j‖₂ = √n`) and residual 2-norm
+/// `r_norm`:
+///
+/// ```text
+/// |z32_j − z_j| ≤ (n + 4)·ε32·r_norm/√n + n·η32
+/// ```
+///
+/// where `ε32 = 2⁻²³` (`f32::EPSILON`) and `η32` is the smallest normal
+/// f32. Derivation: casting the inputs costs a relative `u = ε32/2` each;
+/// an n-term f32 summation in **any** order carries the standard
+/// `γ_n = nu/(1−nu)` factor; Cauchy–Schwarz bounds the accumulated
+/// magnitude by `‖x_j‖·‖r‖ = √n·r_norm`. `(n+4)·ε32 ≈ 2·(n+2)·u` leaves a
+/// ×2 margin over the proven `γ_{n+2}` factor, and the `n·η32` term
+/// absorbs the absolute rounding of any subnormal intermediates.
+pub fn f32_scan_error_bound(n: usize, r_norm: f64) -> f64 {
+    let nf = n as f64;
+    (nf + 4.0) * (f32::EPSILON as f64) * r_norm / nf.sqrt() + nf * (f32::MIN_POSITIVE as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::ops;
+    use crate::rng::Pcg64;
+
+    fn vecs(n: usize, seed: u64) -> (Vec<f64>, Vec<f64>) {
+        let mut rng = Pcg64::new(seed);
+        (rng.normal_vec(n), rng.normal_vec(n))
+    }
+
+    #[test]
+    fn lanes_dot_bit_identical_to_scalar() {
+        for n in [0usize, 1, 7, 8, 9, 15, 16, 17, 64, 100, 1031] {
+            let (a, b) = vecs(n, 7 + n as u64);
+            assert_eq!(dot_lanes(&a, &b).to_bits(), ops::dot(&a, &b).to_bits(), "n={n}");
+        }
+    }
+
+    #[test]
+    fn lanes_axpy_bit_identical_to_scalar() {
+        for n in [0usize, 3, 8, 21, 130] {
+            let (x, y0) = vecs(n, 31 + n as u64);
+            let mut y1 = y0.clone();
+            let mut y2 = y0.clone();
+            ops::axpy(0.37, &x, &mut y1);
+            axpy_lanes(0.37, &x, &mut y2);
+            assert_eq!(y1, y2, "n={n}");
+        }
+    }
+
+    #[test]
+    fn axpy_dot_equals_axpy_then_dot() {
+        for n in [0usize, 1, 8, 13, 64, 257] {
+            let mut rng = Pcg64::new(91 + n as u64);
+            let x = rng.normal_vec(n);
+            let w = rng.normal_vec(n);
+            let y0 = rng.normal_vec(n);
+            let mut y1 = y0.clone();
+            let mut y2 = y0.clone();
+            ops::axpy(-0.61, &x, &mut y1);
+            let want = ops::dot(&w, &y1);
+            let got = axpy_dot(-0.61, &x, &w, &mut y2);
+            assert_eq!(y1, y2, "residual drift at n={n}");
+            assert_eq!(got.to_bits(), want.to_bits(), "dot drift at n={n}");
+        }
+    }
+
+    #[test]
+    fn forced_simd_dot_stays_bit_identical() {
+        let before = level();
+        for n in [5usize, 8, 64, 129, 1000] {
+            let (a, b) = vecs(n, 400 + n as u64);
+            force(false);
+            let off = dot(&a, &b);
+            force(true);
+            let on = dot(&a, &b);
+            assert_eq!(on.to_bits(), off.to_bits(), "n={n}, level={:?}", level());
+        }
+        force(before != Level::Scalar);
+        reset();
+    }
+
+    #[test]
+    fn f32_kernels_within_error_bound() {
+        for n in [16usize, 33, 200, 1024] {
+            let mut rng = Pcg64::new(17 + n as u64);
+            // Standardized-like column: unit-variance entries.
+            let a: Vec<f64> = rng.normal_vec(n);
+            let r: Vec<f64> = rng.normal_vec(n);
+            let a32: Vec<f32> = a.iter().map(|&v| v as f32).collect();
+            let r32: Vec<f32> = r.iter().map(|&v| v as f32).collect();
+            let exact = ops::dot(&a, &r) / n as f64;
+            let norm_a = ops::nrm2(&a);
+            // Rescale the bound for a column of norm ‖a‖ instead of √n.
+            let bound = f32_scan_error_bound(n, ops::nrm2(&r)) * norm_a / (n as f64).sqrt();
+            for got in [
+                dot_f32_scalar(&a32, &r32) as f64 / n as f64,
+                dot_f32_lanes(&a32, &r32) as f64 / n as f64,
+            ] {
+                assert!(
+                    (got - exact).abs() <= bound,
+                    "n={n}: |{got} - {exact}| > {bound}"
+                );
+            }
+        }
+    }
+}

@@ -5,6 +5,7 @@
 //!            [--alpha A] [--nlambda K] [--lmin-ratio R] [--seed S]
 //!            [--engine native|pjrt|ooc] [--cache-mb M] [--prefetch]
 //!            [--checkpoint file.ckpt]   # crash-resumable λ-path
+//!            [--precision f32|f64]      # mixed-precision screening scans
 //! hssr group [--data synth|grvs|spline] [--groups G] [--gsize W] [--rule METHOD]
 //!            [--alpha A]                              # group elastic net when A < 1
 //! hssr power [--data gene] [--n N] [--p P]          # Figure-1 style curves
@@ -26,6 +27,9 @@
 //!
 //! `--checkpoint file` (fit/group/logistic) writes a crash-resumable
 //! checkpoint after every completed λ and resumes from it when it exists.
+//! `--precision f32` (fit/group; default `HSSR_PRECISION`) prefilters
+//! safe-rule screening with error-bounded f32 scans, confirming boundary
+//! decisions exactly in f64 — fits are bit-identical to `--precision f64`.
 //! `--faults spec` (any command) arms the deterministic storage fault
 //! injector — equivalent to setting `HSSR_FAULTS=spec` — for exercising
 //! the retry/checksum machinery; see `docs/ARCHITECTURE.md`.
@@ -137,8 +141,20 @@ fn path_config_from(cfg: &Config) -> Result<PathConfig> {
         tol: cfg.get_parse("tol", 1e-7)?,
         rescreen_every: cfg.get_parse("rescreen-every", 10usize)?,
         checkpoint: cfg.get("checkpoint").map(std::path::PathBuf::from),
+        precision: precision_from(cfg)?,
         ..PathConfig::default()
     })
+}
+
+/// `--precision f32|f64` (defaults to `HSSR_PRECISION`, then f64). f32
+/// routes supporting safe-rule scans through the mixed-precision
+/// prefilter; results stay bit-identical to f64 (see docs/ARCHITECTURE.md).
+fn precision_from(cfg: &Config) -> Result<hssr::runtime::Precision> {
+    match cfg.get("precision") {
+        None => Ok(hssr::runtime::Precision::from_env()),
+        Some(s) => hssr::runtime::Precision::parse(s)
+            .ok_or_else(|| HssrError::Config(format!("unknown --precision '{s}' (f32|f64)"))),
+    }
 }
 
 /// Report a gracefully degraded path: the completed λ-prefix is valid and
@@ -327,6 +343,7 @@ fn cmd_group(cfg: &Config) -> Result<()> {
         tol: cfg.get_parse("tol", 1e-7)?,
         rescreen_every: cfg.get_parse("rescreen-every", 10usize)?,
         checkpoint: cfg.get("checkpoint").map(std::path::PathBuf::from),
+        precision: precision_from(cfg)?,
         ..GroupPathConfig::default()
     };
     let fit = fit_group_path(&ds, &gcfg)?;

@@ -308,6 +308,163 @@ mod tests {
         });
     }
 
+    /// Mixed-precision screening: a fit whose safe-rule scans run through
+    /// the f32 prefilter (`precision: F32`) must produce **bit-identical**
+    /// coefficient paths and set sizes to the all-f64 fit — the f32 pass
+    /// may only change the *order* of work (prefilter + exact confirm),
+    /// never a decision. Covered for the f32-capable rules (SEDPP,
+    /// gap-safe), a rule where f32 is a documented no-op (SSR-BEDPP), an
+    /// engine with f32 support (native mirror) and one without (chunked →
+    /// exact fallback), and the group family.
+    #[test]
+    fn f32_screening_is_bit_identical_to_f64() {
+        use crate::data::chunked::{ChunkedMatrix, ChunkedScanEngine};
+        use crate::data::synth::generate_grouped;
+        use crate::data::DataSpec;
+        use crate::runtime::Precision;
+        use crate::screening::RuleKind;
+        use crate::solver::group_path::{fit_group_path, GroupPathConfig};
+        use crate::solver::path::{fit_lasso_path_with_engine, PathConfig};
+        use crate::solver::Penalty;
+        check(PropConfig { cases: 3, seed: 0xF320 }, |rng, scale| {
+            let n = 50 + (rng.below(50) as f64 * scale) as usize;
+            let p = 70 + (rng.below(130) as f64 * scale) as usize;
+            let ds = DataSpec::synthetic(n, p, 5).generate(rng.next_u64());
+            let alpha = 0.4 + 0.5 * rng.uniform();
+            let native = crate::runtime::native::NativeEngine::new();
+            let store = ChunkedMatrix::from_dense(&ds.x, 32);
+            for penalty in [Penalty::Lasso, Penalty::ElasticNet { alpha }] {
+                for rule in [RuleKind::Sedpp, RuleKind::SsrBedpp, RuleKind::SsrGapSafe] {
+                    let cfg64 = PathConfig {
+                        rule,
+                        penalty,
+                        n_lambda: 14,
+                        tol: 1e-8,
+                        precision: Precision::F64,
+                        ..PathConfig::default()
+                    };
+                    let cfg32 =
+                        PathConfig { precision: Precision::F32, ..cfg64.clone() };
+                    let a = fit_lasso_path_with_engine(&ds, &cfg64, &native)
+                        .map_err(|e| e.to_string())?;
+                    let b = fit_lasso_path_with_engine(&ds, &cfg32, &native)
+                        .map_err(|e| e.to_string())?;
+                    prop_assert!(
+                        a.betas == b.betas,
+                        "{rule:?}/{penalty:?}: f32-screened fit differs (n={n}, p={p})"
+                    );
+                    for (k, (ma, mb)) in a.metrics.iter().zip(&b.metrics).enumerate() {
+                        prop_assert!(
+                            ma.safe_size == mb.safe_size
+                                && ma.strong_size == mb.strong_size,
+                            "{rule:?}/{penalty:?}: set sizes differ at λ#{k} under f32"
+                        );
+                    }
+                    // An engine without f32 support must decline the
+                    // prefilter and fall back to the exact path.
+                    let engine = ChunkedScanEngine::new(&store);
+                    let c = fit_lasso_path_with_engine(&ds, &cfg32, &engine)
+                        .map_err(|e| e.to_string())?;
+                    prop_assert!(
+                        c.betas == a.betas,
+                        "{rule:?}/{penalty:?}: f32 on a non-f32 engine diverged"
+                    );
+                }
+            }
+            // Group family: the group gap-safe norm prefilter.
+            let gds = generate_grouped(n.min(70), 12, 3, 2, rng.next_u64());
+            for rule in [RuleKind::SsrBedpp, RuleKind::SsrGapSafe] {
+                let g64 = GroupPathConfig {
+                    rule,
+                    n_lambda: 12,
+                    tol: 1e-8,
+                    precision: Precision::F64,
+                    ..GroupPathConfig::default()
+                };
+                let g32 = GroupPathConfig { precision: Precision::F32, ..g64.clone() };
+                let a = fit_group_path(&gds, &g64).map_err(|e| e.to_string())?;
+                let b = fit_group_path(&gds, &g32).map_err(|e| e.to_string())?;
+                prop_assert!(
+                    a.betas == b.betas,
+                    "{rule:?}: f32-screened group fit differs"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    /// Fused epoch: republishing the dynamic rule's re-screen scan into
+    /// the lazy `z` cache (one column traversal per epoch) must leave the
+    /// coefficient path and set sizes **bit-identical** to the two-pass
+    /// flow — and must demonstrably cut scan traffic, since the KKT
+    /// refresh stops re-fetching columns the re-screen just scanned.
+    /// Verified on the native kernels and on a counting store-backed
+    /// engine (which exercises the trait-default lazy fused KKT).
+    #[test]
+    fn fused_epoch_is_bit_identical_and_scans_less() {
+        use crate::data::chunked::{ChunkedMatrix, ChunkedScanEngine};
+        use crate::data::DataSpec;
+        use crate::screening::RuleKind;
+        use crate::solver::path::{fit_lasso_path_with_engine, PathConfig};
+        check(PropConfig { cases: 4, seed: 0xEF0C }, |rng, scale| {
+            let n = 50 + (rng.below(50) as f64 * scale) as usize;
+            let p = 80 + (rng.below(120) as f64 * scale) as usize;
+            let ds = DataSpec::synthetic(n, p, 5).generate(rng.next_u64());
+            let native = crate::runtime::native::NativeEngine::new();
+            let store = ChunkedMatrix::from_dense(&ds.x, 32);
+            let on = PathConfig {
+                rule: RuleKind::SsrGapSafe,
+                n_lambda: 16,
+                tol: 1e-8,
+                fused_epoch: true,
+                ..PathConfig::default()
+            };
+            let off = PathConfig { fused_epoch: false, ..on.clone() };
+            let a = fit_lasso_path_with_engine(&ds, &on, &native)
+                .map_err(|e| e.to_string())?;
+            let b = fit_lasso_path_with_engine(&ds, &off, &native)
+                .map_err(|e| e.to_string())?;
+            prop_assert!(
+                a.betas == b.betas,
+                "fused epoch changed the solution (n={n}, p={p})"
+            );
+            for (k, (ma, mb)) in a.metrics.iter().zip(&b.metrics).enumerate() {
+                prop_assert!(
+                    ma.safe_size == mb.safe_size && ma.strong_size == mb.strong_size,
+                    "fused epoch changed set sizes at λ#{k}"
+                );
+            }
+            prop_assert!(
+                a.total_cols_scanned() < b.total_cols_scanned(),
+                "fused epoch did not cut refresh traffic ({} vs {})",
+                a.total_cols_scanned(),
+                b.total_cols_scanned()
+            );
+            // Store-backed source: the trait-default fused KKT honors the
+            // republished cache the same way, and the engine's own fetch
+            // counter corroborates the metrics' drop.
+            let ea = ChunkedScanEngine::new(&store);
+            store.reset_counters();
+            let sa = fit_lasso_path_with_engine(&ds, &on, &ea)
+                .map_err(|e| e.to_string())?;
+            let fetched_on = store.cols_fetched();
+            let eb = ChunkedScanEngine::new(&store);
+            store.reset_counters();
+            let sb = fit_lasso_path_with_engine(&ds, &off, &eb)
+                .map_err(|e| e.to_string())?;
+            let fetched_off = store.cols_fetched();
+            prop_assert!(
+                sa.betas == a.betas && sb.betas == a.betas,
+                "store-backed fused-epoch fit diverged (n={n}, p={p})"
+            );
+            prop_assert!(
+                fetched_on < fetched_off,
+                "store fetches did not drop under fused epoch ({fetched_on} vs {fetched_off})"
+            );
+            Ok(())
+        });
+    }
+
     /// The unified logistic driver: the fused pipeline must select exactly
     /// the same features as the unfused one — identical sparse paths,
     /// intercepts, and strong-set sizes — across strategies and penalties

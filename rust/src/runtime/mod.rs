@@ -67,6 +67,19 @@ pub trait ScanEngine {
     /// `out[j] = x_jᵀ v / n` over all columns.
     fn scan_all(&self, x: &DenseMatrix, v: &[f64], out: &mut [f64]) -> Result<()>;
 
+    /// Reduced-precision screening scan: `out[j] = fl32(x32_jᵀ v32) / n`
+    /// over all columns, served from an f32 shadow of the standardized
+    /// design (an in-memory mirror for the native engine, the store-side
+    /// f32 chunk shadow for ooc). Returns `Ok(false)` — leaving `out`
+    /// untouched — when the engine has no shadow; the screening rules then
+    /// fall back to the exact f64 scan. Only *screening prefilters* may
+    /// consume this: every value it feeds a discard decision must be
+    /// widened by [`crate::linalg::simd::f32_scan_error_bound`], and KKT
+    /// checks never use it.
+    fn scan_all_f32(&self, _x: &DenseMatrix, _v: &[f64], _out: &mut [f64]) -> Result<bool> {
+        Ok(false)
+    }
+
     /// The disk-backed column store this engine serves scans from, if
     /// any. A `Some` return is the signal for the inner optimizers to run
     /// store-backed (pinned chunk cursors instead of resident columns) —
@@ -137,6 +150,10 @@ pub trait ScanEngine {
     /// candidates (and, when `refresh_strong`, for strong columns too) and
     /// collect violators — see [`crate::linalg::blocked::fused_kkt`].
     ///
+    /// Columns whose `z_valid[j]` is already set reuse the cached `z[j]`
+    /// instead of rescanning (the fused-epoch contract: a dynamic rule's
+    /// rescreen may publish correlations computed at the same residual).
+    ///
     /// Default: scan-then-filter over [`ScanEngine::scan_subset`].
     #[allow(clippy::too_many_arguments)]
     fn fused_kkt(
@@ -154,21 +171,27 @@ pub trait ScanEngine {
         let mut out = FusedKktOut::default();
         let check: Vec<usize> = (0..p).filter(|&j| survive[j] && !in_strong[j]).collect();
         if !check.is_empty() {
-            let mut buf = vec![0.0; check.len()];
-            self.scan_subset(x, r, &check, &mut buf)?;
-            for (s, &j) in check.iter().enumerate() {
-                z[j] = buf[s];
-                z_valid[j] = true;
-                if violates(buf[s]) {
+            let stale: Vec<usize> = check.iter().copied().filter(|&j| !z_valid[j]).collect();
+            if !stale.is_empty() {
+                let mut buf = vec![0.0; stale.len()];
+                self.scan_subset(x, r, &stale, &mut buf)?;
+                for (s, &j) in stale.iter().enumerate() {
+                    z[j] = buf[s];
+                    z_valid[j] = true;
+                }
+                out.cols_scanned += stale.len() as u64;
+            }
+            for &j in &check {
+                if violates(z[j]) {
                     out.violations.push(j);
                 }
             }
             out.checked = check.len();
-            out.cols_scanned += check.len() as u64;
         }
         if refresh_strong {
-            let strong: Vec<usize> =
-                (0..p).filter(|&j| survive[j] && in_strong[j]).collect();
+            let strong: Vec<usize> = (0..p)
+                .filter(|&j| survive[j] && in_strong[j] && !z_valid[j])
+                .collect();
             if !strong.is_empty() {
                 let mut buf = vec![0.0; strong.len()];
                 self.scan_subset(x, r, &strong, &mut buf)?;
@@ -304,6 +327,52 @@ pub trait ScanEngine {
                 self.group_norms(x, r, starts, sizes, &strong, znorm, znorm_valid)?;
         }
         Ok(out)
+    }
+}
+
+/// Arithmetic precision of the screening scan (`HSSR_PRECISION`,
+/// `--precision`).
+///
+/// The solvers and KKT checks always run in f64; [`Precision::F32`] only
+/// routes the *screening rules'* full scans through the engine's f32
+/// shadow ([`ScanEngine::scan_all_f32`]), with every discard bound
+/// widened by the computed accumulation error so the surviving sets — and
+/// therefore the fitted coefficients — stay bit-identical to the all-f64
+/// path.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Precision {
+    /// Exact f64 scans everywhere (the default).
+    #[default]
+    F64,
+    /// f32 shadow scans for the screening prefilters.
+    F32,
+}
+
+impl Precision {
+    /// Parse from a CLI/config string.
+    pub fn parse(s: &str) -> Option<Precision> {
+        match s.to_ascii_lowercase().as_str() {
+            "f64" | "double" => Some(Precision::F64),
+            "f32" | "single" | "mixed" => Some(Precision::F32),
+            _ => None,
+        }
+    }
+
+    /// The `HSSR_PRECISION` environment default (f64 when unset or
+    /// unrecognized).
+    pub fn from_env() -> Precision {
+        std::env::var("HSSR_PRECISION")
+            .ok()
+            .and_then(|s| Precision::parse(&s))
+            .unwrap_or_default()
+    }
+
+    /// Display label for reports and benches.
+    pub fn label(self) -> &'static str {
+        match self {
+            Precision::F64 => "f64",
+            Precision::F32 => "f32",
+        }
     }
 }
 

@@ -1,5 +1,7 @@
 //! The default pure-Rust scan engine, backed by the persistent worker pool.
 
+use std::sync::{Mutex, PoisonError};
+
 use super::ScanEngine;
 use crate::error::Result;
 use crate::linalg::blocked::{self, FusedKktOut, FusedScreenOut};
@@ -11,12 +13,21 @@ use crate::linalg::DenseMatrix;
 /// Overrides every fused [`ScanEngine`] entry point with the true
 /// single-traversal kernels.
 #[derive(Debug, Default)]
-pub struct NativeEngine;
+pub struct NativeEngine {
+    /// Lazily built in-memory f32 shadow of the standardized design for
+    /// [`ScanEngine::scan_all_f32`]: `(col0 pointer, n, p, column-major
+    /// f32 copy)`. Keyed by allocation identity + shape, and re-verified
+    /// against the design on every use (first entry of each column), so a
+    /// different matrix — even one reusing the same allocation — rebuilds
+    /// it rather than serving stale values.
+    mirror: Mutex<Option<(usize, usize, usize, Vec<f32>)>>,
+}
 
 impl NativeEngine {
-    /// Create the engine (stateless; the pool is process-global).
+    /// Create the engine (the pool is process-global; the only per-engine
+    /// state is the lazily built f32 mirror).
     pub fn new() -> Self {
-        NativeEngine
+        NativeEngine::default()
     }
 }
 
@@ -41,6 +52,36 @@ impl ScanEngine for NativeEngine {
     fn scan_all(&self, x: &DenseMatrix, v: &[f64], out: &mut [f64]) -> Result<()> {
         blocked::scan_all(x, v, out);
         Ok(())
+    }
+
+    fn scan_all_f32(&self, x: &DenseMatrix, v: &[f64], out: &mut [f64]) -> Result<bool> {
+        let n = x.nrows();
+        let p = x.ncols();
+        if n == 0 || p == 0 {
+            return Ok(false);
+        }
+        let key = (x.col(0).as_ptr() as usize, n, p);
+        let mut guard = self.mirror.lock().unwrap_or_else(PoisonError::into_inner);
+        let fresh = match guard.as_ref() {
+            Some((ptr, mn, mp, m)) => {
+                (*ptr, *mn, *mp) == key
+                    && (0..p).all(|j| m[j * n] == x.col(j)[0] as f32)
+            }
+            None => false,
+        };
+        if !fresh {
+            let mut m = Vec::with_capacity(n * p);
+            for j in 0..p {
+                m.extend(x.col(j).iter().map(|&e| e as f32));
+            }
+            *guard = Some((key.0, n, p, m));
+        }
+        let Some((_, _, _, mirror)) = guard.as_ref() else {
+            return Ok(false);
+        };
+        let v32: Vec<f32> = v.iter().map(|&e| e as f32).collect();
+        blocked::scan_all_f32_mirror(mirror, n, p, &v32, out);
+        Ok(true)
     }
 
     fn fused_screen(

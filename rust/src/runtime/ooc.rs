@@ -195,6 +195,20 @@ impl ScanEngine for OocEngine {
         self.scan_subset(x, v, &idx, out)
     }
 
+    fn scan_all_f32(&self, x: &DenseMatrix, v: &[f64], out: &mut [f64]) -> Result<bool> {
+        debug_assert!(
+            x.ncols() == 0 || (x.nrows() == self.store.nrows() && x.ncols() == self.store.ncols()),
+            "store/design shape mismatch"
+        );
+        let _ = x;
+        // With a shadow section the f32 columns stream off disk at half
+        // the bytes of the exact scan; without one the store casts its
+        // served f64 columns — identical f32 bits either way, so the
+        // mixed-precision rules behave the same on any store file.
+        self.store.scan_all_f32(v, out)?;
+        Ok(true)
+    }
+
     fn column_store(&self) -> Option<&ColumnStore> {
         Some(&self.store)
     }
@@ -261,6 +275,26 @@ mod tests {
             std::thread::sleep(std::time::Duration::from_millis(5));
         }
         assert!(ooc.store().counters().prefetch_issued() >= 1, "prefetcher never ran");
+    }
+
+    /// The ooc f32 scan is bit-identical to the native engine's in-memory
+    /// f32 mirror — shadowed or not, the f32 columns are the same casts.
+    #[test]
+    fn f32_scans_match_native_bitwise() {
+        let ds = DataSpec::gene_like(40, 90).generate(15);
+        let path = tmp("f32scan.store");
+        write_dataset(&ds, 16, &path).unwrap();
+        crate::data::store::append_f32_shadow(&path).unwrap();
+        let ooc = OocEngine::open(&path, 1 << 20).unwrap();
+        assert!(ooc.store().has_f32_shadow());
+        let native = NativeEngine::new();
+        let mut rng = Pcg64::new(8);
+        let v = rng.normal_vec(40);
+        let mut a = vec![0.0; 90];
+        let mut b = vec![0.0; 90];
+        assert!(ooc.scan_all_f32(&ds.x, &v, &mut a).unwrap());
+        assert!(native.scan_all_f32(&ds.x, &v, &mut b).unwrap());
+        assert_eq!(a, b, "ooc f32 scan must be bit-identical to native");
     }
 
     #[test]

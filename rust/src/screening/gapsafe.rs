@@ -33,8 +33,8 @@
 
 use super::{group::GroupSafeContext, PrevSolution, SafeContext, SafeRule};
 use crate::error::Result;
-use crate::linalg::{ops, DenseMatrix};
-use crate::runtime::{native::NativeEngine, ScanEngine};
+use crate::linalg::{ops, simd, DenseMatrix};
+use crate::runtime::{native::NativeEngine, Precision, ScanEngine};
 use crate::solver::duality;
 use crate::solver::Penalty;
 
@@ -71,17 +71,33 @@ pub struct GapSafe {
     loss: GapLoss,
     // |z̃_j| at the most recently prepared dual point.
     zt: Vec<f64>,
+    // Scan precision: F32 routes the full scan through the engine's f32
+    // shadow with an error-widened interval test + exact confirm pass.
+    precision: Precision,
+    // Raw signed `Xᵀr/n` of the last full-f64 quadratic prepare, for the
+    // fused-epoch z-cache handoff ([`SafeRule::last_scan`]).
+    last_scan: Option<Vec<f64>>,
 }
 
 impl GapSafe {
     /// Gap-safe rule for the quadratic-loss column families.
     pub fn quadratic() -> Self {
-        GapSafe { loss: GapLoss::Quadratic, zt: Vec::new() }
+        GapSafe {
+            loss: GapLoss::Quadratic,
+            zt: Vec::new(),
+            precision: Precision::F64,
+            last_scan: None,
+        }
     }
 
     /// Gap-safe rule for the ℓ1/elastic-net logistic family.
     pub fn logistic() -> Self {
-        GapSafe { loss: GapLoss::Logistic, zt: Vec::new() }
+        GapSafe {
+            loss: GapLoss::Logistic,
+            zt: Vec::new(),
+            precision: Precision::F64,
+            last_scan: None,
+        }
     }
 
     /// One full scan at `prev`'s iterate: fill `self.zt` with `|z̃_j|`,
@@ -101,8 +117,22 @@ impl GapSafe {
     ) -> Result<Option<Scalars>> {
         let p = ctx.p;
         self.zt.resize(p, 0.0);
+        self.last_scan = None;
+        if self.precision == Precision::F32
+            && self.loss == GapLoss::Quadratic
+            && engine.scan_all_f32(x, prev.r, &mut self.zt)?
+        {
+            *scanned += p as u64;
+            return self.prepare_f32(engine, x, ctx, prev, lam, scanned).map(Some);
+        }
         engine.scan_all(x, prev.r, &mut self.zt)?;
         *scanned += p as u64;
+        if self.loss == GapLoss::Quadratic {
+            // Raw signed scan at the current residual: exactly the values
+            // the fused KKT pass would recompute — published for the
+            // fused-epoch z-cache handoff.
+            self.last_scan = Some(self.zt.clone());
+        }
         let ridge = ctx.penalty.l2_weight() * lam;
         let mut pen_l1 = 0.0;
         let mut beta_sq = 0.0;
@@ -138,6 +168,121 @@ impl GapSafe {
             thresh: ctx.penalty.alpha() * lam,
         }))
     }
+
+    /// Finish a prepare whose full scan ran in f32 (`self.zt` holds the
+    /// raw f32 shadow scan). The screen's *decisions* stay exactly the
+    /// f64 path's:
+    ///
+    /// * each exact `|z̃_j|` lies in `[|z̃32_j| − ε, |z̃32_j| + ε]` with
+    ///   `ε` from [`simd::f32_scan_error_bound`];
+    /// * every column whose interval could reach the feasibility max is
+    ///   confirmed with an exact counted f64 subset scan (replicating the
+    ///   f64 path's arithmetic operation for operation), so `feas` — and
+    ///   with it the ball scalars — are bit-identical to the f64 path;
+    /// * every column whose widened upper bound survives the ball test is
+    ///   confirmed exactly too, so its survive/discard decision is the
+    ///   exact one; the rest keep their upper bound in `zt`, and since
+    ///   `exact ≤ ub < discard threshold`, both the f32 and f64 paths
+    ///   discard them.
+    ///
+    /// Only quadratic loss reaches here ([`duality::quadratic_ball`] is
+    /// total, hence the non-optional return).
+    fn prepare_f32(
+        &mut self,
+        engine: &dyn ScanEngine,
+        x: &DenseMatrix,
+        ctx: &SafeContext,
+        prev: &PrevSolution<'_>,
+        lam: f64,
+        scanned: &mut u64,
+    ) -> Result<Scalars> {
+        let p = ctx.p;
+        let ridge = ctx.penalty.l2_weight() * lam;
+        let eps = simd::f32_scan_error_bound(ctx.n, ops::nrm2(prev.r));
+        let mut pen_l1 = 0.0;
+        let mut beta_sq = 0.0;
+        if let Some(beta) = prev.beta {
+            assert_eq!(beta.len(), p, "gap-safe: beta length must equal p");
+            // Same accumulation order as the f64 path: pen_l1/beta_sq are
+            // pure-β f64 quantities, so they come out bit-identical.
+            for (zj, &bj) in self.zt.iter_mut().zip(beta.iter()) {
+                *zj -= ridge * bj;
+                pen_l1 += bj.abs();
+                beta_sq += bj * bj;
+            }
+        }
+        let mut lower_max = 0.0f64;
+        for zj in self.zt.iter_mut() {
+            *zj = zj.abs();
+            lower_max = lower_max.max(*zj - eps);
+        }
+        let mut confirmed = vec![false; p];
+        // Feasibility candidates: every interval that could contain the
+        // max. Their exact max IS the global exact max (any other column
+        // has exact ≤ ub < lower_max ≤ exact max).
+        let c1: Vec<usize> = (0..p).filter(|&j| self.zt[j] + eps >= lower_max).collect();
+        let exact1 = confirm_abs(engine, x, prev, ridge, &c1)?;
+        *scanned += c1.len() as u64;
+        let mut feas = 0.0f64;
+        for (&j, &ej) in c1.iter().zip(exact1.iter()) {
+            self.zt[j] = ej;
+            confirmed[j] = true;
+            feas = feas.max(ej);
+        }
+        let ball =
+            duality::quadratic_ball(&ctx.y, prev.r, beta_sq, pen_l1, feas, lam, ctx.penalty);
+        let sc = Scalars { s: ball.scaling, rho: ball.rho, thresh: ctx.penalty.alpha() * lam };
+        // Boundary classification: confirm every unconfirmed column whose
+        // widened bound survives the ball test.
+        let c2: Vec<usize> = (0..p)
+            .filter(|&j| !confirmed[j] && (self.zt[j] + eps) / sc.s + sc.rho >= sc.thresh)
+            .collect();
+        let exact2 = confirm_abs(engine, x, prev, ridge, &c2)?;
+        *scanned += c2.len() as u64;
+        for (&j, &ej) in c2.iter().zip(exact2.iter()) {
+            self.zt[j] = ej;
+            confirmed[j] = true;
+        }
+        // Sure-discards keep their upper bound: still below the discard
+        // threshold, and ≥ the exact value, so both paths discard.
+        for (zj, &cj) in self.zt.iter_mut().zip(confirmed.iter()) {
+            if !cj {
+                *zj += eps;
+            }
+        }
+        Ok(sc)
+    }
+}
+
+/// Exact `|z̃_j| = |x_jᵀ r / n − ridge·β_j|` for the columns in `idx`,
+/// through a counted f64 subset scan — operation-for-operation the f64
+/// prepare's arithmetic, so the confirmed values are bit-identical to a
+/// full-f64 screen's.
+fn confirm_abs(
+    engine: &dyn ScanEngine,
+    x: &DenseMatrix,
+    prev: &PrevSolution<'_>,
+    ridge: f64,
+    idx: &[usize],
+) -> Result<Vec<f64>> {
+    if idx.is_empty() {
+        return Ok(Vec::new());
+    }
+    let mut buf = vec![0.0; idx.len()];
+    engine.scan_subset(x, prev.r, idx, &mut buf)?;
+    match prev.beta {
+        Some(beta) => {
+            for (bk, &j) in buf.iter_mut().zip(idx.iter()) {
+                *bk = (*bk - ridge * beta[j]).abs();
+            }
+        }
+        None => {
+            for bk in buf.iter_mut() {
+                *bk = bk.abs();
+            }
+        }
+    }
+    Ok(buf)
 }
 
 impl SafeRule for GapSafe {
@@ -167,6 +312,14 @@ impl SafeRule for GapSafe {
 
     fn dynamic(&self) -> bool {
         true
+    }
+
+    fn set_precision(&mut self, precision: Precision) {
+        self.precision = precision;
+    }
+
+    fn last_scan(&self) -> Option<&[f64]> {
+        self.last_scan.as_deref()
     }
 
     /// Point-wise plan: the scan and the ball are computed here; the
@@ -256,6 +409,8 @@ pub struct GroupGapSafe {
     cols: Vec<f64>,
     // ‖z̃_g‖ per group at the most recently prepared dual point.
     zt: Vec<f64>,
+    // Scan precision (see [`GapSafe`]); F64 is the `Default` default.
+    precision: Precision,
 }
 
 impl GroupGapSafe {
@@ -279,7 +434,11 @@ impl GroupGapSafe {
         let p = ctx.p;
         let g_count = ctx.layout.num_groups();
         self.cols.resize(p, 0.0);
-        engine.scan_all(x, prev.r, &mut self.cols)?;
+        let f32_scan = self.precision == Precision::F32
+            && engine.scan_all_f32(x, prev.r, &mut self.cols)?;
+        if !f32_scan {
+            engine.scan_all(x, prev.r, &mut self.cols)?;
+        }
         *scanned += p as u64;
         let ridge = ctx.penalty.l2_weight() * lam;
         let mut pen_l1 = 0.0;
@@ -303,9 +462,100 @@ impl GroupGapSafe {
             self.zt[g] = zn;
             feas = feas.max(zn / (ctx.layout.sizes[g] as f64).sqrt());
         }
+        if f32_scan {
+            return self.finish_f32(engine, x, ctx, prev, lam, ridge, pen_l1, beta_sq, scanned);
+        }
         let ball =
             duality::quadratic_ball(&ctx.y, prev.r, beta_sq, pen_l1, feas, lam, ctx.penalty);
         Ok(Scalars { s: ball.scaling, rho: ball.rho, thresh: ctx.penalty.alpha() * lam })
+    }
+
+    /// Group analogue of [`GapSafe::prepare_f32`]: `self.zt` holds group
+    /// norms of the f32 shadow scan; each exact `‖z̃_g‖` lies within
+    /// `√W_g · ε` of it (per-column error ≤ ε, so the error vector's
+    /// 2-norm over a group of `W_g` columns is ≤ `√W_g · ε`). Feasibility
+    /// candidates and ball-test boundary groups are confirmed with exact
+    /// counted f64 subset scans replicating the f64 path's arithmetic, so
+    /// the ball scalars and every survive/discard decision are the f64
+    /// path's own.
+    #[allow(clippy::too_many_arguments)]
+    fn finish_f32(
+        &mut self,
+        engine: &dyn ScanEngine,
+        x: &DenseMatrix,
+        ctx: &GroupSafeContext,
+        prev: &PrevSolution<'_>,
+        lam: f64,
+        ridge: f64,
+        pen_l1: f64,
+        beta_sq: f64,
+        scanned: &mut u64,
+    ) -> Result<Scalars> {
+        let g_count = ctx.layout.num_groups();
+        let eps = simd::f32_scan_error_bound(ctx.n, ops::nrm2(prev.r));
+        let geps: Vec<f64> =
+            (0..g_count).map(|g| (ctx.layout.sizes[g] as f64).sqrt() * eps).collect();
+        let mut lower_max = 0.0f64;
+        for g in 0..g_count {
+            let w_sqrt = (ctx.layout.sizes[g] as f64).sqrt();
+            lower_max = lower_max.max((self.zt[g] - geps[g]) / w_sqrt);
+        }
+        let mut confirmed = vec![false; g_count];
+        let c1: Vec<usize> = (0..g_count)
+            .filter(|&g| (self.zt[g] + geps[g]) / (ctx.layout.sizes[g] as f64).sqrt() >= lower_max)
+            .collect();
+        let mut feas = 0.0f64;
+        for &g in &c1 {
+            let zn = self.confirm_group(engine, x, ctx, prev, ridge, g, scanned)?;
+            self.zt[g] = zn;
+            confirmed[g] = true;
+            feas = feas.max(zn / (ctx.layout.sizes[g] as f64).sqrt());
+        }
+        let ball =
+            duality::quadratic_ball(&ctx.y, prev.r, beta_sq, pen_l1, feas, lam, ctx.penalty);
+        let sc = Scalars { s: ball.scaling, rho: ball.rho, thresh: ctx.penalty.alpha() * lam };
+        for g in 0..g_count {
+            if confirmed[g] {
+                continue;
+            }
+            let w_sqrt = (ctx.layout.sizes[g] as f64).sqrt();
+            if (self.zt[g] + geps[g]) / sc.s + sc.rho >= sc.thresh * w_sqrt {
+                // Boundary group: confirm exactly.
+                self.zt[g] = self.confirm_group(engine, x, ctx, prev, ridge, g, scanned)?;
+            } else {
+                // Sure-discard: keep the upper bound (≥ exact, still below
+                // the threshold — both paths discard).
+                self.zt[g] += geps[g];
+            }
+        }
+        Ok(sc)
+    }
+
+    /// Exact `‖z̃_g‖` for one group through a counted f64 subset scan —
+    /// the f64 prepare's arithmetic operation for operation (ascending
+    /// column order, same ss-sum, same sqrt).
+    #[allow(clippy::too_many_arguments)]
+    fn confirm_group(
+        &self,
+        engine: &dyn ScanEngine,
+        x: &DenseMatrix,
+        ctx: &GroupSafeContext,
+        prev: &PrevSolution<'_>,
+        ridge: f64,
+        g: usize,
+        scanned: &mut u64,
+    ) -> Result<f64> {
+        let idx: Vec<usize> = ctx.layout.range(g).collect();
+        let mut buf = vec![0.0; idx.len()];
+        engine.scan_subset(x, prev.r, &idx, &mut buf)?;
+        *scanned += idx.len() as u64;
+        if let Some(beta) = prev.beta {
+            for (bk, &j) in buf.iter_mut().zip(idx.iter()) {
+                *bk -= ridge * beta[j];
+            }
+        }
+        let ss: f64 = buf.iter().map(|c| c * c).sum();
+        Ok(ss.sqrt())
     }
 }
 
@@ -333,6 +583,10 @@ impl SafeRule<GroupSafeContext> for GroupGapSafe {
 
     fn dynamic(&self) -> bool {
         true
+    }
+
+    fn set_precision(&mut self, precision: Precision) {
+        self.precision = precision;
     }
 
     /// Point-wise plan for the fused group screen; decisions bit-identical

@@ -298,6 +298,24 @@ pub trait SafeRule<C = SafeContext>: Send {
         Ok(self.plan(x, ctx, prev, lam_next, survive, masked_discards))
     }
 
+    /// Select the arithmetic precision of the rule's screening scans.
+    /// Rules with an f32 prefilter (the gap-safe family, SEDPP) override
+    /// this; the default ignores it — static O(p) tests on f64
+    /// precomputes (BEDPP, Dome) have no scan to downgrade, so f32 mode
+    /// is a documented no-op for them.
+    fn set_precision(&mut self, _precision: crate::runtime::Precision) {}
+
+    /// The raw signed scan `z = Xᵀr/n` the rule computed during its last
+    /// `screen_routed`/`plan_routed` call at the *current residual*, if it
+    /// performed one in full f64. The fused-epoch driver republishes these
+    /// into the path's `z` cache so the following KKT pass skips its own
+    /// recomputation — one column traversal per epoch instead of two.
+    /// Default: `None` (no full-scan rules, and any rule in f32 mode,
+    /// must not feed the f64 cache).
+    fn last_scan(&self) -> Option<&[f64]> {
+        None
+    }
+
     /// Serialize the rule's path-position state (dead flags, frozen-phase
     /// constants) for a crash-resume checkpoint. The default — an empty
     /// blob — is correct for stateless rules: the gap-safe family's only

@@ -9,19 +9,23 @@
 //! to BEDPP (Theorem 2.2, case 2).
 
 use super::{bedpp::Bedpp, PrevSolution, SafeContext, SafeRule};
-use crate::linalg::{blocked, DenseMatrix};
+use crate::linalg::{blocked, ops, simd, DenseMatrix};
+use crate::runtime::Precision;
 
 /// The SEDPP rule. Holds a scratch buffer for the per-λ scan.
 #[derive(Debug, Default)]
 pub struct Sedpp {
     scratch: Vec<f64>,
     dead: bool,
+    // Scan precision: F32 runs the O(np) pass on the engine's f32 shadow
+    // with an error-widened decision band + exact confirm pass.
+    precision: Precision,
 }
 
 impl Sedpp {
     /// Create a fresh rule.
     pub fn new() -> Self {
-        Sedpp { scratch: Vec::new(), dead: false }
+        Sedpp { scratch: Vec::new(), dead: false, precision: Precision::F64 }
     }
 
     /// Evaluate rule (10) given the previous residual. Public for reuse by
@@ -104,6 +108,93 @@ impl Sedpp {
         }
         Ok((discarded, ctx.p as u64))
     }
+
+    /// Mixed-precision rule (10): the `O(np)` pass runs on the engine's
+    /// f32 shadow, and the decision band is widened by the scan error
+    /// bound. `lhs` is affine in `x_jᵀr` with slope
+    /// `k₁ = 1/λ_k + c·a/(2‖Xβ̂‖²)`, so an f32 scan error of at most `ε`
+    /// per `z_j` perturbs `lhs` by at most `δ = |k₁|·n·ε`:
+    ///
+    /// * `lhs32 + δ < rhs` — sure-discard (the exact `lhs` is below `rhs`
+    ///   too);
+    /// * `lhs32 − δ ≥ rhs` — sure-keep;
+    /// * otherwise — confirm with an exact counted f64 subset scan
+    ///   replicating the f64 path's expression, so every decision is the
+    ///   f64 path's own.
+    ///
+    /// Returns `Ok(None)` when the f32 path does not apply (non-lasso /
+    /// BEDPP-fallback branches, or an engine without an f32 shadow) — the
+    /// caller then runs the exact path unchanged.
+    #[allow(clippy::too_many_arguments)]
+    fn screen_core_f32(
+        &mut self,
+        engine: &dyn crate::runtime::ScanEngine,
+        x: &DenseMatrix,
+        ctx: &SafeContext,
+        prev: &PrevSolution<'_>,
+        lam_next: f64,
+        survive: &mut [bool],
+        scanned: &mut u64,
+    ) -> crate::error::Result<Option<usize>> {
+        if !matches!(ctx.penalty, crate::solver::Penalty::Lasso) {
+            return Ok(None);
+        }
+        let n = ctx.n as f64;
+        let mut xb_sq = 0.0;
+        let mut a = 0.0;
+        for (yi, ri) in ctx.y.iter().zip(prev.r) {
+            let f = yi - ri;
+            xb_sq += f * f;
+            a += yi * f;
+        }
+        if xb_sq < 1e-12 {
+            return Ok(None);
+        }
+        let lam_k = prev.lambda;
+        let c = (lam_k - lam_next) / (lam_k * lam_next);
+        let rhs = n - 0.5 * c * (n * ctx.y_sq - n * a * a / xb_sq).max(0.0).sqrt();
+        if rhs <= 0.0 {
+            return Ok(Some(0));
+        }
+        self.scratch.resize(ctx.p, 0.0);
+        if !engine.scan_all_f32(x, prev.r, &mut self.scratch)? {
+            return Ok(None);
+        }
+        *scanned += ctx.p as u64;
+        let eps = simd::f32_scan_error_bound(ctx.n, ops::nrm2(prev.r));
+        let delta = (1.0 / lam_k + 0.5 * c * a / xb_sq).abs() * n * eps;
+        let mut boundary = Vec::new();
+        let mut discarded = 0;
+        for j in 0..ctx.p {
+            if !survive[j] {
+                continue;
+            }
+            let xjr = n * self.scratch[j];
+            let xjxb = ctx.xty[j] - xjr;
+            let lhs = (xjr / lam_k + 0.5 * c * (ctx.xty[j] - a * xjxb / xb_sq)).abs();
+            if lhs + delta < rhs {
+                survive[j] = false;
+                discarded += 1;
+            } else if lhs - delta < rhs {
+                boundary.push(j);
+            }
+        }
+        if !boundary.is_empty() {
+            let mut buf = vec![0.0; boundary.len()];
+            engine.scan_subset(x, prev.r, &boundary, &mut buf)?;
+            *scanned += boundary.len() as u64;
+            for (zk, &j) in buf.iter().zip(boundary.iter()) {
+                let xjr = n * zk;
+                let xjxb = ctx.xty[j] - xjr;
+                let lhs = (xjr / lam_k + 0.5 * c * (ctx.xty[j] - a * xjxb / xb_sq)).abs();
+                if lhs < rhs {
+                    survive[j] = false;
+                    discarded += 1;
+                }
+            }
+        }
+        Ok(Some(discarded))
+    }
 }
 
 impl SafeRule for Sedpp {
@@ -141,12 +232,24 @@ impl SafeRule for Sedpp {
         survive: &mut [bool],
         scanned: &mut u64,
     ) -> crate::error::Result<usize> {
+        if self.precision == Precision::F32 {
+            if let Some(d) =
+                self.screen_core_f32(engine, x, ctx, prev, lam_next, survive, scanned)?
+            {
+                self.dead = d == 0;
+                return Ok(d);
+            }
+        }
         let (d, cols) = self.screen_core(ctx, prev, lam_next, survive, |scratch| {
             engine.scan_all(x, prev.r, scratch)
         })?;
         *scanned += cols;
         self.dead = d == 0;
         Ok(d)
+    }
+
+    fn set_precision(&mut self, precision: Precision) {
+        self.precision = precision;
     }
 
     /// Engine-routed plan: SEDPP always screens into the mask (its test is

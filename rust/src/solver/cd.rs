@@ -36,6 +36,15 @@ pub struct CdStats {
 /// (`active` must be ascending, which every caller's working set is — a
 /// pinned store cursor then swaps each chunk at most once per cycle).
 /// Returns the largest |Δβ_j|; `Err` only from a store-backed source.
+///
+/// When the source serves column pairs ([`ColAccess::col_pair`], i.e. the
+/// resident design), the residual update of each accepted coordinate is
+/// *deferred* and folded into the next coordinate's correlation pass via
+/// [`ops::axpy_dot`] — one traversal of `r` per update instead of two.
+/// The fusion is bit-identical to the sequential axpy-then-dot (each
+/// residual entry is updated once before the dot term reads it, in the
+/// scalar kernel's exact lane and reduction order), so both code paths
+/// produce the same iterates.
 pub fn cd_cycle_on<C: ColAccess>(
     cols: &mut C,
     penalty: Penalty,
@@ -49,6 +58,37 @@ pub fn cd_cycle_on<C: ColAccess>(
     let thresh = alpha * lam;
     let denom = 1.0 + penalty.l2_weight() * lam;
     let mut max_delta = 0.0f64;
+    if cols.fused_pairs() {
+        // Deferred residual update of the previous accepted coordinate.
+        let mut pending: Option<(usize, f64)> = None;
+        for &j in active {
+            let z = match pending.take() {
+                Some((i, delta)) => match cols.col_pair(i, j)? {
+                    Some((prev, col)) => {
+                        ops::axpy_dot(-delta, prev, col, r) * n_inv + beta[j]
+                    }
+                    // Defensive: a source that advertised pairs but
+                    // declined this one — flush, then scan sequentially.
+                    None => {
+                        ops::axpy(-delta, cols.col(i)?, r);
+                        ops::dot(cols.col(j)?, r) * n_inv + beta[j]
+                    }
+                },
+                None => ops::dot(cols.col(j)?, r) * n_inv + beta[j],
+            };
+            let b_new = ops::soft_threshold(z, thresh) / denom;
+            let delta = b_new - beta[j];
+            if delta != 0.0 {
+                beta[j] = b_new;
+                max_delta = max_delta.max(delta.abs());
+                pending = Some((j, delta));
+            }
+        }
+        if let Some((i, delta)) = pending {
+            ops::axpy(-delta, cols.col(i)?, r);
+        }
+        return Ok(max_delta);
+    }
     for &j in active {
         let col = cols.col(j)?;
         let z = ops::dot(col, r) * n_inv + beta[j];

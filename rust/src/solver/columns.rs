@@ -35,6 +35,29 @@ pub trait ColAccess {
     /// Serve standardized column `j`. `&mut` because a store-backed
     /// source moves its pinned chunk; the dense source never fails.
     fn col(&mut self, j: usize) -> Result<&[f64]>;
+
+    /// Serve columns `a` and `b` simultaneously, when the source can hold
+    /// two live column borrows at once. The fused CD cycle uses this to
+    /// pipeline the deferred residual update of the previous coordinate
+    /// into the correlation pass of the next one
+    /// ([`crate::linalg::ops::axpy_dot`] — one residual traversal instead
+    /// of two).
+    ///
+    /// Default: `Ok(None)` — "not supported, fall back to sequential
+    /// [`ColAccess::col`] calls". A pinned store cursor must decline: its
+    /// two columns may live in different chunks, and only one chunk is
+    /// pinned at a time.
+    fn col_pair(&mut self, _a: usize, _b: usize) -> Result<Option<(&[f64], &[f64])>> {
+        Ok(None)
+    }
+
+    /// Whether [`ColAccess::col_pair`] serves pairs — constant per source,
+    /// so the CD cycle can pick its loop shape once up front (a source
+    /// without pair support must never pay a duplicate column fetch for a
+    /// deferred update).
+    fn fused_pairs(&self) -> bool {
+        false
+    }
 }
 
 /// Resident columns of a [`DenseMatrix`] — the native/PJRT path.
@@ -54,6 +77,14 @@ impl ColAccess for DenseCols<'_> {
 
     fn col(&mut self, j: usize) -> Result<&[f64]> {
         Ok(self.0.col(j))
+    }
+
+    fn col_pair(&mut self, a: usize, b: usize) -> Result<Option<(&[f64], &[f64])>> {
+        Ok(Some((self.0.col(a), self.0.col(b))))
+    }
+
+    fn fused_pairs(&self) -> bool {
+        true
     }
 }
 
@@ -115,6 +146,20 @@ impl ColAccess for ColSource<'_> {
         match self {
             ColSource::Dense(d) => d.col(j),
             ColSource::Store(s) => s.col(j),
+        }
+    }
+
+    fn col_pair(&mut self, a: usize, b: usize) -> Result<Option<(&[f64], &[f64])>> {
+        match self {
+            ColSource::Dense(d) => d.col_pair(a, b),
+            ColSource::Store(s) => s.col_pair(a, b),
+        }
+    }
+
+    fn fused_pairs(&self) -> bool {
+        match self {
+            ColSource::Dense(d) => d.fused_pairs(),
+            ColSource::Store(s) => s.fused_pairs(),
         }
     }
 }

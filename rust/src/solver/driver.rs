@@ -74,6 +74,17 @@ pub fn fused_default() -> bool {
     std::env::var("HSSR_FUSED").map(|v| v != "0").unwrap_or(true)
 }
 
+/// Default for the fused-epoch flag (`PathConfig::fused_epoch`): `true`
+/// unless the environment sets `HSSR_FUSED_EPOCH=0`. When on, a dynamic
+/// rule's pre-KKT re-screen republishes the correlations it just scanned
+/// into the lazy `z` cache, so the KKT refresh reuses them instead of
+/// re-traversing the candidate columns. The residual is unchanged between
+/// the two stages, so both settings produce bit-identical paths; the knob
+/// exists for the A/B equivalence test and ablation benches.
+pub fn fused_epoch_default() -> bool {
+    std::env::var("HSSR_FUSED_EPOCH").map(|v| v != "0").unwrap_or(true)
+}
+
 /// Per-λ instrumentation (feeds Figures 1/3 and the ablation benches).
 /// Shared by every problem family; the group lasso reports *group* counts
 /// in the set-size fields.

@@ -26,7 +26,7 @@
 use crate::data::{GroupLayout, GroupedDataset};
 use crate::error::{HssrError, Result};
 use crate::linalg::{ops, DenseMatrix};
-use crate::runtime::{native::NativeEngine, ooc, ScanEngine};
+use crate::runtime::{native::NativeEngine, ooc, Precision, ScanEngine};
 use crate::screening::group::{make_group_safe_rule, GroupSafeContext};
 use crate::screening::{PrevSolution, RuleKind, SafeRule};
 use crate::serialize::{ByteReader, ByteWriter};
@@ -68,6 +68,12 @@ pub struct GroupPathConfig {
     pub rescreen_every: usize,
     /// Crash-resume checkpoint file (`--checkpoint`); `None` disables.
     pub checkpoint: Option<std::path::PathBuf>,
+    /// Screening-scan precision (`--precision` / `HSSR_PRECISION`):
+    /// [`Precision::F32`] lets the dynamic group gap-safe rule prefilter
+    /// group norms with f32 scans widened by a proven error bound and
+    /// confirm boundary groups exactly in f64 — selected group sets and
+    /// coefficients are bit-identical to an all-f64 fit.
+    pub precision: Precision,
 }
 
 impl Default for GroupPathConfig {
@@ -84,6 +90,7 @@ impl Default for GroupPathConfig {
             fused: fused_default(),
             rescreen_every: 10,
             checkpoint: None,
+            precision: Precision::from_env(),
         }
     }
 }
@@ -222,7 +229,13 @@ impl<'a> GroupLassoProblem<'a> {
             tol: cfg.tol,
             max_iter: cfg.max_iter,
             rescreen_every: cfg.rescreen_every,
-            safe_rule: make_group_safe_rule(cfg.rule),
+            safe_rule: {
+                let mut rule = make_group_safe_rule(cfg.rule);
+                if let Some(r) = rule.as_mut() {
+                    r.set_precision(cfg.precision);
+                }
+                rule
+            },
             beta: vec![0.0f64; ds.p()],
             r: ds.y.clone(),
             znorm,

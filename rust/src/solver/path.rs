@@ -52,12 +52,12 @@ use crate::data::store::ColumnStore;
 use crate::data::Dataset;
 use crate::error::{HssrError, Result};
 use crate::linalg::{ops, DenseMatrix};
-use crate::runtime::{native::NativeEngine, ooc, ScanEngine};
+use crate::runtime::{native::NativeEngine, ooc, Precision, ScanEngine};
 use crate::screening::{make_safe_rule, ssr, PrevSolution, RuleKind, SafeContext, SafeRule};
 use crate::serialize::{ByteReader, ByteWriter};
 use crate::solver::columns::ColSource;
 use crate::solver::driver::{
-    apply_rescreen_mask, drive_warm, dynamic_burst_solve, fused_default,
+    apply_rescreen_mask, drive_warm, dynamic_burst_solve, fused_default, fused_epoch_default,
     zero_discarded_units, BurstProblem, DriverConfig, DriverFit, Problem, ScreenStage,
 };
 use crate::solver::{cd, kkt, lambda::GridKind, Penalty};
@@ -96,6 +96,21 @@ pub struct PathConfig {
     /// it atomically after every λ and resumes from it bit-identically.
     /// `None` disables checkpointing.
     pub checkpoint: Option<std::path::PathBuf>,
+    /// Arithmetic precision for the *screening* scans (`--precision` /
+    /// `HSSR_PRECISION`). [`Precision::F32`] lets supporting safe rules
+    /// prefilter with f32 scans widened by a proven error bound, exactly
+    /// confirming boundary columns in f64 — final coefficients are
+    /// bit-identical to an all-f64 fit. KKT checks and the inner solver
+    /// always run in f64.
+    pub precision: Precision,
+    /// Fuse the dynamic rule's pre-KKT re-screen with the KKT refresh:
+    /// the correlations the rule just scanned are republished into the
+    /// lazy `z` cache (the residual is unchanged between the two stages),
+    /// so the KKT pass reuses them instead of re-traversing the candidate
+    /// columns — one pass per epoch instead of two. `false` keeps the
+    /// two-pass flow for A/B equivalence testing (`HSSR_FUSED_EPOCH=0`);
+    /// both produce bit-identical paths.
+    pub fused_epoch: bool,
 }
 
 impl Default for PathConfig {
@@ -112,6 +127,8 @@ impl Default for PathConfig {
             fused: fused_default(),
             rescreen_every: 10,
             checkpoint: None,
+            precision: Precision::from_env(),
+            fused_epoch: fused_epoch_default(),
         }
     }
 }
@@ -266,6 +283,7 @@ pub struct GaussianLasso<'a> {
     tol: f64,
     max_iter: usize,
     rescreen_every: usize,
+    fused_epoch: bool,
     ctx: SafeContext,
     safe_rule: Option<Box<dyn SafeRule>>,
     beta: Vec<f64>,
@@ -338,6 +356,10 @@ impl<'a> GaussianLasso<'a> {
         let p = ds.p();
         let ctx = SafeContext::build(x, &ds.y, cfg.penalty, cfg.rule.needs_star());
         let z: Vec<f64> = ctx.xty.iter().map(|v| v / n as f64).collect();
+        let mut safe_rule = make_safe_rule(cfg.rule);
+        if let Some(rule) = safe_rule.as_mut() {
+            rule.set_precision(cfg.precision);
+        }
         Ok(GaussianLasso {
             x,
             engine,
@@ -346,7 +368,8 @@ impl<'a> GaussianLasso<'a> {
             tol: cfg.tol,
             max_iter: cfg.max_iter,
             rescreen_every: cfg.rescreen_every,
-            safe_rule: make_safe_rule(cfg.rule),
+            fused_epoch: cfg.fused_epoch,
+            safe_rule,
             beta: vec![0.0; p],
             r: ds.y.clone(),
             z,
@@ -380,6 +403,10 @@ impl<'a> GaussianLasso<'a> {
         let (ctx, preamble) = store_safe_context(store, cfg.penalty, cfg.rule.needs_star())?;
         let (n, p) = (ctx.n, ctx.p);
         let z: Vec<f64> = ctx.xty.iter().map(|v| v / n as f64).collect();
+        let mut safe_rule = make_safe_rule(cfg.rule);
+        if let Some(rule) = safe_rule.as_mut() {
+            rule.set_precision(cfg.precision);
+        }
         Ok(GaussianLasso {
             x,
             engine,
@@ -388,7 +415,8 @@ impl<'a> GaussianLasso<'a> {
             tol: cfg.tol,
             max_iter: cfg.max_iter,
             rescreen_every: cfg.rescreen_every,
-            safe_rule: make_safe_rule(cfg.rule),
+            fused_epoch: cfg.fused_epoch,
+            safe_rule,
             beta: vec![0.0; p],
             r: ctx.y.clone(),
             z,
@@ -761,6 +789,24 @@ impl Problem for GaussianLasso<'_> {
                 &mut scanned,
             )?;
             m.cols_scanned += scanned;
+            // Fused epoch: the rule just scanned every column at the
+            // current residual, and nothing touches the residual between
+            // here and the KKT check (the mask below only clears survive
+            // bits of zero-coefficient columns). Republishing the scan
+            // into the lazy cache lets the KKT pass reuse these values
+            // instead of re-traversing the candidate columns; the reuse
+            // is bit-identical because a recompute would run the same
+            // per-column reduction against the same residual. A rule
+            // whose last screen took an inexact shortcut reports no scan
+            // and the cache stays invalidated.
+            if self.fused_epoch {
+                if let Some(scan) = rule.last_scan() {
+                    if scan.len() == self.z.len() {
+                        self.z.copy_from_slice(scan);
+                        self.z_valid.iter_mut().for_each(|v| *v = true);
+                    }
+                }
+            }
         }
         let beta = &self.beta;
         Ok(apply_rescreen_mask(survive, &mask, in_strong, |j| beta[j] != 0.0))

@@ -1,0 +1,331 @@
+//! Kernel conformance: every SIMD micro-kernel against its scalar
+//! reference, across lane-remainder classes, unaligned offsets, and
+//! adversarial values — with the dispatcher forced both off and on
+//! (`HSSR_SIMD=0|1` in-process via `simd::force`).
+//!
+//! The contract under test is the one the solver's bit-identity guarantees
+//! rest on:
+//!
+//! * **f64** kernels (`dot`, `axpy`, `axpy_dot`, and the blocked/fused
+//!   kernels built on them) are *bit-identical* to the scalar reference at
+//!   every dispatch level — same products, same accumulation tree, same
+//!   sequential tail, no FMA.
+//! * **f32** kernels may re-associate freely; every variant must land
+//!   within the proven error bound [`simd::f32_scan_error_bound`], which
+//!   holds for any summation order.
+
+use hssr::data::DataSpec;
+use hssr::linalg::{blocked, ops, simd};
+use hssr::rng::Pcg64;
+use hssr::screening::RuleKind;
+use hssr::solver::path::{fit_lasso_path, PathConfig};
+
+use std::sync::Mutex;
+
+/// The dispatch override is process-global; tests that toggle it hold this
+/// lock so the default multi-threaded test runner cannot interleave two
+/// tests' `force` states. (A stray toggle cannot make the f64 assertions
+/// fail — they hold at every level — but it *would* change which f32
+/// kernel a dispatched call picks mid-test.)
+static SIMD_GUARD: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    SIMD_GUARD.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Restore the env-derived dispatch level on drop, panics included.
+struct ResetOnDrop;
+impl Drop for ResetOnDrop {
+    fn drop(&mut self) {
+        simd::reset();
+    }
+}
+
+/// Every lane-remainder class for both the 8-lane f64 and 16-lane f32
+/// kernels (`n mod 16 ∈ 0..16`), plus blocked/large sizes.
+const SIZES: &[usize] = &[
+    0, 1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12, 13, 14, 15, 16, 17, 23, 31, 32, 33, 63, 64,
+    65, 100, 127, 128, 129, 257, 1000, 1031,
+];
+
+fn vecs(n: usize, seed: u64) -> (Vec<f64>, Vec<f64>) {
+    let mut rng = Pcg64::new(seed);
+    (rng.normal_vec(n), rng.normal_vec(n))
+}
+
+/// Adversarial f64 inputs: subnormals, ±0.0, sign flips, and mixes of
+/// magnitudes far enough apart that any re-association would change the
+/// rounding — if a kernel's tree deviates from the reference, these catch
+/// it where well-scaled Gaussians might round identically.
+fn adversarial(n: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Pcg64::new(seed);
+    (0..n)
+        .map(|i| {
+            let sign = if rng.below(2) == 0 { 1.0 } else { -1.0 };
+            match i % 7 {
+                0 => sign * 1e-310,             // subnormal
+                1 => sign * 0.0,                // ±0.0
+                2 => sign * 1e30,               // large
+                3 => sign * 1e-30,              // tiny normal
+                4 => sign * (1.0 + rng.uniform()),
+                5 => sign * f64::EPSILON,
+                _ => sign * rng.uniform() * 3.0,
+            }
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// f64: bit-identity at every dispatch level
+// ---------------------------------------------------------------------------
+
+#[test]
+fn dot_bit_identical_across_levels_and_remainders() {
+    let _g = lock();
+    let _r = ResetOnDrop;
+    for &n in SIZES {
+        let (a, b) = vecs(n, 0xD07 + n as u64);
+        let want = ops::dot_scalar(&a, &b);
+        assert_eq!(simd::dot_lanes(&a, &b).to_bits(), want.to_bits(), "lanes, n={n}");
+        for on in [false, true] {
+            simd::force(on);
+            assert_eq!(
+                simd::dot(&a, &b).to_bits(),
+                want.to_bits(),
+                "dispatched dot, n={n}, simd={on}, level={:?}",
+                simd::level()
+            );
+            assert_eq!(
+                ops::dot(&a, &b).to_bits(),
+                want.to_bits(),
+                "ops::dot, n={n}, simd={on}"
+            );
+        }
+    }
+}
+
+#[test]
+fn axpy_bit_identical_across_levels_and_remainders() {
+    let _g = lock();
+    let _r = ResetOnDrop;
+    for &n in SIZES {
+        let (x, y0) = vecs(n, 0xA10 + n as u64);
+        for alpha in [0.0, -1.75, 0.37, 1e-8, -3e12] {
+            let mut want = y0.clone();
+            ops::axpy_scalar(alpha, &x, &mut want);
+            let mut got = y0.clone();
+            simd::axpy_lanes(alpha, &x, &mut got);
+            assert!(bits_eq(&want, &got), "lanes axpy, n={n}, alpha={alpha}");
+            for on in [false, true] {
+                simd::force(on);
+                let mut got = y0.clone();
+                simd::axpy(alpha, &x, &mut got);
+                assert!(bits_eq(&want, &got), "dispatched axpy, n={n}, alpha={alpha}, simd={on}");
+                let mut got = y0.clone();
+                ops::axpy(alpha, &x, &mut got);
+                assert!(bits_eq(&want, &got), "ops::axpy, n={n}, alpha={alpha}, simd={on}");
+            }
+        }
+    }
+}
+
+#[test]
+fn axpy_dot_equals_composition_across_levels() {
+    let _g = lock();
+    let _r = ResetOnDrop;
+    for &n in SIZES {
+        let mut rng = Pcg64::new(0xAD07 + n as u64);
+        let x = rng.normal_vec(n);
+        let w = rng.normal_vec(n);
+        let y0 = rng.normal_vec(n);
+        let mut yref = y0.clone();
+        ops::axpy_scalar(-0.61, &x, &mut yref);
+        let want = ops::dot_scalar(&w, &yref);
+        for on in [false, true] {
+            simd::force(on);
+            let mut y = y0.clone();
+            let got = simd::axpy_dot(-0.61, &x, &w, &mut y);
+            assert!(bits_eq(&yref, &y), "axpy_dot residual, n={n}, simd={on}");
+            assert_eq!(got.to_bits(), want.to_bits(), "axpy_dot value, n={n}, simd={on}");
+        }
+    }
+}
+
+#[test]
+fn unaligned_offsets_stay_bit_identical() {
+    let _g = lock();
+    let _r = ResetOnDrop;
+    let (a, b) = vecs(1041, 0x0FF5E7);
+    for off in 1..9usize {
+        let (sa, sb) = (&a[off..], &b[off..]);
+        let want = ops::dot_scalar(sa, sb);
+        for on in [false, true] {
+            simd::force(on);
+            assert_eq!(
+                simd::dot(sa, sb).to_bits(),
+                want.to_bits(),
+                "unaligned dot, off={off}, simd={on}"
+            );
+            let mut yw: Vec<f64> = b[off..].to_vec();
+            ops::axpy_scalar(0.93, sa, &mut yw);
+            let mut yg: Vec<f64> = b[off..].to_vec();
+            simd::axpy(0.93, sa, &mut yg);
+            assert!(bits_eq(&yw, &yg), "unaligned axpy, off={off}, simd={on}");
+        }
+    }
+}
+
+#[test]
+fn adversarial_values_bit_identical() {
+    let _g = lock();
+    let _r = ResetOnDrop;
+    for &n in &[7usize, 16, 29, 64, 67, 255, 1000] {
+        let a = adversarial(n, 0xBAD + n as u64);
+        let b = adversarial(n, 0xDAB + n as u64);
+        let want = ops::dot_scalar(&a, &b);
+        assert_eq!(simd::dot_lanes(&a, &b).to_bits(), want.to_bits(), "lanes, n={n}");
+        for on in [false, true] {
+            simd::force(on);
+            assert_eq!(
+                simd::dot(&a, &b).to_bits(),
+                want.to_bits(),
+                "adversarial dot, n={n}, simd={on}, level={:?}",
+                simd::level()
+            );
+            let mut yw = b.clone();
+            ops::axpy_scalar(-1e-300, &a, &mut yw);
+            let mut yg = b.clone();
+            simd::axpy(-1e-300, &a, &mut yg);
+            assert!(bits_eq(&yw, &yg), "adversarial axpy, n={n}, simd={on}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// f32: every kernel within the proven error bound
+// ---------------------------------------------------------------------------
+
+#[test]
+fn f32_kernels_within_proven_bound() {
+    let _g = lock();
+    let _r = ResetOnDrop;
+    for &n in SIZES {
+        if n == 0 {
+            continue;
+        }
+        let mut rng = Pcg64::new(0xF32 + n as u64);
+        let a = rng.normal_vec(n);
+        let r = rng.normal_vec(n);
+        let a32: Vec<f32> = a.iter().map(|&v| v as f32).collect();
+        let r32: Vec<f32> = r.iter().map(|&v| v as f32).collect();
+        let exact = ops::dot_scalar(&a, &r) / n as f64;
+        // The bound is stated for a standardized column (‖x‖ = √n);
+        // rescale it for this column's actual norm.
+        let bound =
+            simd::f32_scan_error_bound(n, ops::nrm2(&r)) * ops::nrm2(&a) / (n as f64).sqrt();
+        let mut got = vec![
+            ("scalar", simd::dot_f32_scalar(&a32, &r32)),
+            ("lanes", simd::dot_f32_lanes(&a32, &r32)),
+        ];
+        for on in [false, true] {
+            simd::force(on);
+            got.push(("dispatched", simd::dot_f32(&a32, &r32)));
+        }
+        for (kernel, g) in got {
+            let g = g as f64 / n as f64;
+            assert!(
+                (g - exact).abs() <= bound,
+                "{kernel} f32 dot out of bound at n={n}: |{g} - {exact}| > {bound}"
+            );
+        }
+    }
+}
+
+#[test]
+fn f32_kernels_handle_subnormals_and_zeros() {
+    let _g = lock();
+    let _r = ResetOnDrop;
+    let n = 103usize;
+    let mut rng = Pcg64::new(0x5AB);
+    // f32-exact inputs (round-trip through f32) laced with f32 subnormals
+    // and ±0.0, so the only error source is the summation itself.
+    let a32: Vec<f32> = (0..n)
+        .map(|i| match i % 5 {
+            0 => 1.0e-41f32,  // subnormal
+            1 => -0.0f32,
+            2 => -1.0e-41f32, // subnormal, opposite sign
+            3 => 0.0f32,
+            _ => (rng.uniform() as f32) - 0.5,
+        })
+        .collect();
+    let r32: Vec<f32> = (0..n).map(|_| (rng.uniform() as f32) - 0.5).collect();
+    let a: Vec<f64> = a32.iter().map(|&v| v as f64).collect();
+    let r: Vec<f64> = r32.iter().map(|&v| v as f64).collect();
+    let exact = ops::dot_scalar(&a, &r) / n as f64;
+    let bound =
+        simd::f32_scan_error_bound(n, ops::nrm2(&r)) * ops::nrm2(&a).max(1e-30) / (n as f64).sqrt()
+            + (n as f64) * (f32::MIN_POSITIVE as f64);
+    for on in [false, true] {
+        simd::force(on);
+        let g = simd::dot_f32(&a32, &r32) as f64 / n as f64;
+        assert!(
+            (g - exact).abs() <= bound,
+            "subnormal f32 dot out of bound (simd={on}): |{g} - {exact}| > {bound}"
+        );
+    }
+}
+
+#[test]
+fn f32_error_bound_is_monotone_and_positive() {
+    let mut prev = 0.0;
+    for n in [1usize, 8, 64, 512, 4096] {
+        let b = simd::f32_scan_error_bound(n, 1.0);
+        assert!(b > 0.0, "bound must be positive at n={n}");
+        assert!(b >= prev * 0.1, "bound collapsed at n={n}");
+        prev = b;
+    }
+    // Scales linearly in the residual norm (the η term aside).
+    let b1 = simd::f32_scan_error_bound(256, 1.0);
+    let b2 = simd::f32_scan_error_bound(256, 2.0);
+    assert!(b2 > b1 && b2 < 2.0 * b1 + 1e-30, "bound must scale with r_norm");
+}
+
+// ---------------------------------------------------------------------------
+// Blocked / fused kernels and the full solver, SIMD off vs on
+// ---------------------------------------------------------------------------
+
+#[test]
+fn blocked_scan_bit_identical_under_simd_toggle() {
+    let _g = lock();
+    let _r = ResetOnDrop;
+    let ds = DataSpec::synthetic(67, 90, 5).generate(0xB10C);
+    simd::force(false);
+    let off = blocked::scan_all_vec(&ds.x, &ds.y);
+    simd::force(true);
+    let on = blocked::scan_all_vec(&ds.x, &ds.y);
+    assert!(bits_eq(&off, &on), "blocked scan differs between SIMD off and on");
+}
+
+/// The end-to-end conformance statement: a full screened path fit — blocked
+/// screening kernels, fused screen/KKT, the CD inner loop — produces
+/// bit-identical coefficient paths with SIMD off and on, for a static and
+/// a dynamic rule.
+#[test]
+fn full_fit_bit_identical_under_simd_toggle() {
+    let _g = lock();
+    let _r = ResetOnDrop;
+    let ds = DataSpec::gene_like(70, 140).generate(0x51D);
+    for rule in [RuleKind::SsrBedpp, RuleKind::SsrGapSafe] {
+        let cfg = PathConfig { rule, n_lambda: 12, tol: 1e-8, ..PathConfig::default() };
+        simd::force(false);
+        let off = fit_lasso_path(&ds, &cfg).unwrap();
+        simd::force(true);
+        let on = fit_lasso_path(&ds, &cfg).unwrap();
+        assert_eq!(off.betas, on.betas, "{rule:?}: fit differs between SIMD off and on");
+        assert_eq!(off.lambdas, on.lambdas, "{rule:?}: λ grid differs");
+    }
+}
+
+fn bits_eq(a: &[f64], b: &[f64]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}

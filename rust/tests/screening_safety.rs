@@ -425,6 +425,157 @@ fn gapsafe_paths_agree_across_engines() {
     assert_eq!(la.intercepts, lb.intercepts);
 }
 
+/// Mixed-precision safety at the rule level: the f32-widened screen must
+/// (a) make **exactly** the decisions the f64 screen makes — the widened
+/// interval only routes columns to an exact confirm pass, never decides —
+/// and (b) in particular never discard a feature active in the exact
+/// solution. Checked for the two f32-capable column rules (gap-safe,
+/// SEDPP) in both sequential and dynamic usage.
+#[test]
+fn f32_screen_decisions_match_f64_and_never_discard_active() {
+    use hssr::runtime::native::NativeEngine;
+    use hssr::runtime::Precision;
+    check(PropConfig { cases: 5, seed: 0xF32A }, |rng, _| {
+        let ds = DataSpec::synthetic(70, 130, 6).generate(rng.next_u64());
+        let ctx = SafeContext::build(&ds.x, &ds.y, Penalty::Lasso, true);
+        let native = NativeEngine::new();
+        let fit = exact_path(&ds, 18);
+        for k in 0..fit.lambdas.len() - 1 {
+            let beta = fit.beta_dense(k);
+            let xb = ds.x.matvec(&beta);
+            let r: Vec<f64> = ds.y.iter().zip(&xb).map(|(y, f)| y - f).collect();
+            let prev = PrevSolution { lambda: fit.lambdas[k], r: &r, beta: Some(&beta) };
+            // Dynamic (λ_k at its own solution) and sequential (λ_{k+1}).
+            for lam in [fit.lambdas[k], fit.lambdas[k + 1]] {
+                let mut gs64 = GapSafe::quadratic();
+                let mut gs32 = GapSafe::quadratic();
+                gs32.set_precision(Precision::F32);
+                let mut sp64 = Sedpp::new();
+                let mut sp32 = Sedpp::new();
+                sp32.set_precision(Precision::F32);
+                let pairs: [(&mut dyn SafeRule, &mut dyn SafeRule, &str); 2] = [
+                    (&mut gs64, &mut gs32, "gap-safe"),
+                    (&mut sp64, &mut sp32, "sedpp"),
+                ];
+                for (r64, r32, name) in pairs {
+                    let mut s64 = vec![true; ds.p()];
+                    let mut s32 = vec![true; ds.p()];
+                    let mut sc = 0u64;
+                    r64.screen_routed(&native, &ds.x, &ctx, &prev, lam, &mut s64, &mut sc)
+                        .map_err(|e| e.to_string())?;
+                    r32.screen_routed(&native, &ds.x, &ctx, &prev, lam, &mut s32, &mut sc)
+                        .map_err(|e| e.to_string())?;
+                    prop_assert!(
+                        s64 == s32,
+                        "{name}: f32 and f64 survivor sets differ at λ#{k}"
+                    );
+                    let active =
+                        if lam == fit.lambdas[k] { &fit.betas[k] } else { &fit.betas[k + 1] };
+                    for &(j, _) in active {
+                        prop_assert!(
+                            s32[j],
+                            "{name}: f32 screen discarded active {j} at λ#{k}"
+                        );
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Group granularity: the f32 group-norm prefilter must reproduce the f64
+/// group decisions exactly and keep every active group.
+#[test]
+fn f32_group_screen_decisions_match_f64() {
+    use hssr::runtime::native::NativeEngine;
+    use hssr::runtime::Precision;
+    check(PropConfig { cases: 4, seed: 0xF32B }, |rng, _| {
+        let ds = generate_grouped(80, 14, 4, 3, rng.next_u64());
+        let ctx = GroupSafeContext::build(&ds.x, &ds.y, &ds.layout, Penalty::Lasso);
+        let native = NativeEngine::new();
+        let fit = hssr::solver::group_path::fit_group_path(
+            &ds,
+            &hssr::solver::group_path::GroupPathConfig {
+                rule: RuleKind::BasicPcd,
+                n_lambda: 15,
+                tol: 1e-10,
+                ..Default::default()
+            },
+        )
+        .map_err(|e| e.to_string())?;
+        for k in 0..fit.lambdas.len() {
+            let beta = fit.beta_dense(k);
+            let xb = ds.x.matvec(&beta);
+            let r: Vec<f64> = ds.y.iter().zip(&xb).map(|(y, f)| y - f).collect();
+            let prev = PrevSolution { lambda: fit.lambdas[k], r: &r, beta: Some(&beta) };
+            let mut g64 = GroupGapSafe::new();
+            let mut g32 = GroupGapSafe::new();
+            g32.set_precision(Precision::F32);
+            let mut s64 = vec![true; ds.num_groups()];
+            let mut s32 = vec![true; ds.num_groups()];
+            let mut sc = 0u64;
+            g64.screen_routed(&native, &ds.x, &ctx, &prev, fit.lambdas[k], &mut s64, &mut sc)
+                .map_err(|e| e.to_string())?;
+            g32.screen_routed(&native, &ds.x, &ctx, &prev, fit.lambdas[k], &mut s32, &mut sc)
+                .map_err(|e| e.to_string())?;
+            prop_assert!(s64 == s32, "group survivor sets differ at λ#{k}");
+            for g in 0..ds.num_groups() {
+                if ds.layout.range(g).any(|j| beta[j] != 0.0) {
+                    prop_assert!(
+                        s32[g],
+                        "f32 group screen discarded active group {g} at λ#{k}"
+                    );
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Out-of-core mixed precision: with the store's persisted f32 shadow
+/// section feeding the screening scans, a `--precision f32` fit from the
+/// store must stay bit-identical to the all-f64 *native* fit — the full
+/// chain (shadow chunk → widened prefilter → exact confirm → CD) crosses
+/// both the engine and precision boundaries without changing a bit.
+#[test]
+fn f32_store_shadow_fit_is_bit_identical_to_f64_native() {
+    use hssr::data::store::{append_f32_shadow, write_dataset};
+    use hssr::runtime::native::NativeEngine;
+    use hssr::runtime::ooc::OocEngine;
+    use hssr::runtime::Precision;
+    use hssr::solver::path::fit_lasso_path_with_engine;
+    let ds = DataSpec::gene_like(70, 160).generate(77);
+    let dir = std::env::temp_dir().join("hssr_precision_it");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("f32-shadow.store");
+    let chunk = 16;
+    write_dataset(&ds, chunk, &path).unwrap();
+    let header = append_f32_shadow(&path).unwrap();
+    assert!(header.f32_shadow, "shadow append did not set the header flag");
+    let budget = 4 * chunk * ds.n() * 8;
+    let native = NativeEngine::new();
+    for rule in [RuleKind::Sedpp, RuleKind::SsrGapSafe] {
+        let cfg64 = PathConfig {
+            rule,
+            n_lambda: 14,
+            tol: 1e-8,
+            precision: Precision::F64,
+            ..PathConfig::default()
+        };
+        let cfg32 = PathConfig { precision: Precision::F32, ..cfg64.clone() };
+        let ooc = OocEngine::open(&path, budget).unwrap();
+        let a = fit_lasso_path_with_engine(&ds, &cfg32, &ooc).unwrap();
+        let b = fit_lasso_path_with_engine(&ds, &cfg64, &native).unwrap();
+        assert_eq!(
+            a.betas, b.betas,
+            "{rule:?}: f32-shadow store fit differs from f64 native fit"
+        );
+        let c = ooc.store().counters();
+        assert!(c.cols_fetched() > 0, "{rule:?}: store fit never touched the store");
+    }
+}
+
 /// SSR *can* err (it is heuristic); what must hold is that the KKT loop
 /// catches every violation — i.e. the final solution satisfies KKT even
 /// when violations occurred. Force violations with a coarse grid.
