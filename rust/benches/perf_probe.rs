@@ -193,6 +193,29 @@ fn main() {
     entries.push(Entry { op: "scan_f32", n: ln, p: lp, ns_iter: t32 * 1e9 });
     simd::reset();
 
+    // -- disabled-tracing overhead guard --
+    // Every driver phase boundary, pool dispatch, and store chunk miss
+    // begins a `Span`; with tracing off that must stay one relaxed atomic
+    // load. Assert a generous absolute per-call bound so a regression
+    // (e.g. an accidental allocation or env read on the disabled path)
+    // fails the bench leg rather than silently taxing every fit.
+    hssr::obs::trace::set_enabled(false);
+    let t_span_off = time_it(4, || {
+        for _ in 0..1_000_000 {
+            let mut sp =
+                std::hint::black_box(hssr::obs::trace::Span::begin("probe", "bench"));
+            sp.arg_u64("k", 1);
+            std::hint::black_box(&sp);
+        }
+    }) / 1e6;
+    println!("trace disabled span: {:.1} ns/call", t_span_off * 1e9);
+    assert!(
+        t_span_off * 1e9 < 150.0,
+        "disabled-tracing Span::begin costs {:.1} ns/call (budget 150 ns)",
+        t_span_off * 1e9
+    );
+    entries.push(Entry { op: "trace_disabled_span", n: 0, p: 0, ns_iter: t_span_off * 1e9 });
+
     // -- emit BENCH_perf.json at the repo root --
     let mut json = String::from("[\n");
     for (i, e) in entries.iter().enumerate() {

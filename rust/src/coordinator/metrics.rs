@@ -2,7 +2,7 @@
 //! curves of the paper's **Figure 1** and the §3.2.3 out-of-core
 //! scan-traffic report.
 
-use super::report::Table;
+use super::table::{mb1, mb2, ratio_vs, Table};
 use crate::data::chunked::{ChunkedMatrix, ChunkedScanEngine};
 use crate::data::store::{write_dataset, ColumnStore};
 use crate::data::{Dataset, GroupedDataset};
@@ -310,15 +310,15 @@ pub fn ooc_traffic_table(title: &str, rows: &[OocTraffic]) -> Table {
             r.cols_fetched.to_string(),
             r.solver_cols.to_string(),
             r.chunk_loads.to_string(),
-            format!("{:.1}", r.bytes_read as f64 / 1e6),
+            mb1(r.bytes_read),
             r.cache_hits.to_string(),
             r.cross_fit_hits.to_string(),
-            format!("{:.2}", r.peak_resident as f64 / 1e6),
+            mb2(r.peak_resident),
             r.stalls.to_string(),
             format!("{}/{}/{}", r.prefetch_hits, r.prefetch_issued, r.prefetch_wasted),
             r.retries.to_string(),
             r.checksum_failures.to_string(),
-            format!("{:.2}x less", base as f64 / r.bytes_read.max(1) as f64),
+            ratio_vs(base, r.bytes_read),
         ]);
     }
     t
@@ -338,8 +338,8 @@ pub fn scan_traffic_table(title: &str, rows: &[ScanTraffic]) -> Table {
             r.rule.label().to_string(),
             r.cols_fetched.to_string(),
             r.chunk_faults.to_string(),
-            format!("{:.1}", r.bytes_fetched as f64 / 1e6),
-            format!("{:.2}x less", base as f64 / r.bytes_fetched.max(1) as f64),
+            mb1(r.bytes_fetched),
+            ratio_vs(base, r.bytes_fetched),
         ]);
     }
     t

@@ -12,6 +12,7 @@ pub mod jobs;
 pub mod metrics;
 pub mod report;
 pub mod serve;
+pub mod table;
 
 use crate::bench_harness::{measure, Timing};
 use crate::data::DataSpec;

@@ -1,134 +1,8 @@
 //! Report writers: aligned console tables (the paper's table format) and
 //! CSV output under `bench_out/` for plotting.
+//!
+//! The [`Table`] type itself (and the shared cell formatters the
+//! `*_table` builders use) lives in [`crate::coordinator::table`]; this
+//! re-export keeps the historical `report::Table` path working.
 
-use std::io::Write;
-use std::path::Path;
-
-use crate::error::Result;
-
-/// A simple table: header row + string cells.
-#[derive(Clone, Debug, Default)]
-pub struct Table {
-    /// Table title (printed above; used as the CSV file stem).
-    pub title: String,
-    /// Column headers.
-    pub headers: Vec<String>,
-    /// Rows of cells (each row must match `headers` length).
-    pub rows: Vec<Vec<String>>,
-}
-
-impl Table {
-    /// Create a table with headers.
-    pub fn new(title: &str, headers: &[&str]) -> Table {
-        Table {
-            title: title.to_string(),
-            headers: headers.iter().map(|s| s.to_string()).collect(),
-            rows: Vec::new(),
-        }
-    }
-
-    /// Append a row.
-    pub fn push_row(&mut self, cells: Vec<String>) {
-        debug_assert_eq!(cells.len(), self.headers.len(), "ragged table row");
-        self.rows.push(cells);
-    }
-
-    /// Render as an aligned console table.
-    pub fn render(&self) -> String {
-        let ncol = self.headers.len();
-        let mut widths = vec![0usize; ncol];
-        for (i, h) in self.headers.iter().enumerate() {
-            widths[i] = h.chars().count();
-        }
-        for row in &self.rows {
-            for (i, c) in row.iter().enumerate() {
-                widths[i] = widths[i].max(c.chars().count());
-            }
-        }
-        let mut out = String::new();
-        out.push_str(&format!("## {}\n", self.title));
-        let fmt_row = |cells: &[String]| -> String {
-            let mut line = String::from("| ");
-            for (i, c) in cells.iter().enumerate() {
-                line.push_str(&format!("{:<w$} | ", c, w = widths[i]));
-            }
-            line.trim_end().to_string()
-        };
-        out.push_str(&fmt_row(&self.headers));
-        out.push('\n');
-        let mut sep = String::from("|");
-        for w in &widths {
-            sep.push_str(&"-".repeat(w + 2));
-            sep.push('|');
-        }
-        out.push_str(&sep);
-        out.push('\n');
-        for row in &self.rows {
-            out.push_str(&fmt_row(row));
-            out.push('\n');
-        }
-        out
-    }
-
-    /// Write as CSV (simple quoting: fields containing commas are quoted).
-    pub fn write_csv(&self, path: &Path) -> Result<()> {
-        if let Some(dir) = path.parent() {
-            std::fs::create_dir_all(dir)?;
-        }
-        let mut f = std::fs::File::create(path)?;
-        let quote = |s: &str| {
-            if s.contains(',') || s.contains('"') {
-                format!("\"{}\"", s.replace('"', "\"\""))
-            } else {
-                s.to_string()
-            }
-        };
-        writeln!(
-            f,
-            "{}",
-            self.headers.iter().map(|h| quote(h)).collect::<Vec<_>>().join(",")
-        )?;
-        for row in &self.rows {
-            writeln!(f, "{}", row.iter().map(|c| quote(c)).collect::<Vec<_>>().join(","))?;
-        }
-        Ok(())
-    }
-
-    /// Print to stdout and persist under `bench_out/<stem>.csv`.
-    pub fn emit(&self, stem: &str) -> Result<()> {
-        println!("{}", self.render());
-        let path = Path::new("bench_out").join(format!("{stem}.csv"));
-        self.write_csv(&path)?;
-        println!("[csv written to {}]\n", path.display());
-        Ok(())
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn render_is_aligned() {
-        let mut t = Table::new("demo", &["method", "time"]);
-        t.push_row(vec!["SSR".into(), "1.13 (0.01)".into()]);
-        t.push_row(vec!["SSR-BEDPP".into(), "0.69 (0.01)".into()]);
-        let r = t.render();
-        assert!(r.contains("## demo"));
-        assert!(r.contains("| SSR       |"));
-        let lines: Vec<&str> = r.lines().collect();
-        assert_eq!(lines.len(), 5);
-    }
-
-    #[test]
-    fn csv_roundtrip_quoting() {
-        let dir = std::env::temp_dir().join("hssr_report_test");
-        let mut t = Table::new("q", &["a", "b"]);
-        t.push_row(vec!["x,y".into(), "plain".into()]);
-        let p = dir.join("t.csv");
-        t.write_csv(&p).unwrap();
-        let body = std::fs::read_to_string(&p).unwrap();
-        assert!(body.contains("\"x,y\",plain"));
-        std::fs::remove_dir_all(&dir).ok();
-    }
-}
+pub use crate::coordinator::table::Table;

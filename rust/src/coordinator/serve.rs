@@ -33,8 +33,11 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 
 use super::jobs;
+use crate::coordinator::table::Table;
 use crate::data::store::{ColumnStore, FitTag};
 use crate::error::Result;
+use crate::obs::registry::{Gauge, Histogram};
+use crate::obs::trace::Span;
 use crate::solver::path::{fit_lasso_path_store, PathConfig, PathFit, WarmStart};
 
 /// Lock with poison recovery: a fit that panicked while holding the lock
@@ -76,6 +79,13 @@ pub struct FitService {
     in_flight: AtomicU64,
     peak_in_flight: AtomicU64,
     max_concurrent: usize,
+    /// Per-fit wall-clock latency in µs (always-on — recording is a few
+    /// relaxed atomic adds; [`FitService::stats_report`] reads
+    /// p50/p95/p99 out of it).
+    fit_latency_us: Histogram,
+    /// Fits currently parked waiting for an admission permit (with its
+    /// high-water mark).
+    queue_depth: Gauge,
 }
 
 /// RAII admission permit: returns the slot (and decrements the in-flight
@@ -123,11 +133,18 @@ impl FitService {
             in_flight: AtomicU64::new(0),
             peak_in_flight: AtomicU64::new(0),
             max_concurrent,
+            fit_latency_us: Histogram::new(),
+            queue_depth: Gauge::new(),
         }
     }
 
-    /// Block until an admission permit is free, then claim it.
+    /// Block until an admission permit is free, then claim it. The wait
+    /// is gauged (queue depth) and, when tracing is on, spanned — queue
+    /// time is the serve-mode latency component a bigger `max_concurrent`
+    /// or a second replica would buy back.
     fn acquire(&self) -> Permit<'_> {
+        let mut wait_span = Span::begin("queue_wait", "serve");
+        self.queue_depth.add(1);
         let mut slots = lock(&self.slots);
         while *slots == 0 {
             slots = self
@@ -137,8 +154,10 @@ impl FitService {
         }
         *slots -= 1;
         drop(slots);
+        self.queue_depth.add(-1);
         let now = self.in_flight.fetch_add(1, Ordering::Relaxed) + 1;
         self.peak_in_flight.fetch_max(now, Ordering::Relaxed);
+        wait_span.arg_u64("in_flight", now);
         Permit { svc: self }
     }
 
@@ -150,10 +169,28 @@ impl FitService {
         let _permit = self.acquire();
         let fit_id = self.next_fit.fetch_add(1, Ordering::Relaxed) + 1;
         let _tag = FitTag::set(fit_id);
+        let mut fit_span = Span::begin("serve_fit", "serve");
+        fit_span.arg_u64("fit_id", fit_id);
+        // Counter hygiene: the store's counters are shared by every
+        // in-flight fit, so per-fit traffic is *never* measured by
+        // resetting them (that would steal concurrent fits' traffic) —
+        // snapshot deltas bound this fit's window, and true per-fit
+        // attribution comes from the `FitTag` set above (cross_fit_hits).
+        let io0 = if fit_span.is_on() { Some(self.store.counters().snapshot()) } else { None };
+        let t0 = std::time::Instant::now();
         let key = registry_key(cfg);
         let warm = lock(&self.registry).get(&key).cloned();
         let warm_hit = warm.is_some();
-        let (fit, warm_out) = fit_lasso_path_store(Arc::clone(&self.store), cfg, warm.as_ref())?;
+        let out = fit_lasso_path_store(Arc::clone(&self.store), cfg, warm.as_ref());
+        self.fit_latency_us.record(t0.elapsed().as_micros() as u64);
+        if let Some(io0) = io0 {
+            let d = self.store.counters().snapshot().delta_since(&io0);
+            fit_span.arg_u64("cols_fetched_window", d.cols_fetched);
+            fit_span.arg_u64("chunk_loads_window", d.chunk_loads);
+            fit_span.arg_u64("cross_fit_hits_window", d.cross_fit_hits);
+        }
+        drop(fit_span);
+        let (fit, warm_out) = out?;
         if let Some(w) = warm_out {
             let mut reg = lock(&self.registry);
             let keep = match reg.get(&key) {
@@ -203,6 +240,48 @@ impl FitService {
     /// Number of distinct warm-start registry entries currently held.
     pub fn registry_len(&self) -> usize {
         lock(&self.registry).len()
+    }
+
+    /// The per-fit latency histogram (µs) — always recording.
+    pub fn fit_latency_us(&self) -> &Histogram {
+        &self.fit_latency_us
+    }
+
+    /// Fits currently parked waiting for admission.
+    pub fn queue_depth(&self) -> i64 {
+        self.queue_depth.get()
+    }
+
+    /// High-water mark of the admission queue.
+    pub fn peak_queue_depth(&self) -> i64 {
+        self.queue_depth.peak()
+    }
+
+    /// Live telemetry table: fit-latency percentiles, queue depth, and
+    /// shared-cache effectiveness — the `hssr serve` stats report.
+    pub fn stats_report(&self) -> Table {
+        let h = &self.fit_latency_us;
+        let c = self.store.counters();
+        let demand = c.cache_hits() + c.chunk_loads();
+        let hit_rate = if demand == 0 {
+            "—".to_string()
+        } else {
+            format!("{:.1}%", 100.0 * c.cache_hits() as f64 / demand as f64)
+        };
+        let q_ms = |q: f64| format!("{:.2}", h.quantile(q) as f64 / 1e3);
+        let mut t = Table::new("Serve telemetry", &["stat", "value"]);
+        t.push_row(vec!["fits served".into(), self.fits_served().to_string()]);
+        t.push_row(vec!["in flight (peak)".into(), self.peak_in_flight().to_string()]);
+        t.push_row(vec!["queue depth".into(), self.queue_depth().to_string()]);
+        t.push_row(vec!["queue depth (peak)".into(), self.peak_queue_depth().to_string()]);
+        t.push_row(vec!["fit latency p50 (ms)".into(), q_ms(0.50)]);
+        t.push_row(vec!["fit latency p95 (ms)".into(), q_ms(0.95)]);
+        t.push_row(vec!["fit latency p99 (ms)".into(), q_ms(0.99)]);
+        t.push_row(vec!["fit latency mean (ms)".into(), format!("{:.2}", h.mean() / 1e3)]);
+        t.push_row(vec!["cache hit rate".into(), hit_rate]);
+        t.push_row(vec!["cross-fit hits".into(), self.cross_fit_hits().to_string()]);
+        t.push_row(vec!["warm registry entries".into(), self.registry_len().to_string()]);
+        t
     }
 }
 
@@ -281,6 +360,36 @@ mod tests {
         let fresh = OocEngine::spill(&ds.x, &ds.y, 1 << 20).unwrap();
         let (cold, _) = fit_lasso_path_store(fresh.shared_store(), &cfg, None).unwrap();
         assert_eq!(second.fit.betas, cold.betas, "warm resume deviates from cold fit");
+    }
+
+    /// Counter-drain hygiene: the service never resets the shared store's
+    /// counters — totals accumulate monotonically across batches (so no
+    /// fit's traffic is silently stolen from another's report), the
+    /// latency histogram records every fit, and the queue drains back to
+    /// zero depth.
+    #[test]
+    fn serve_never_resets_shared_counters_and_reports_stats() {
+        let ds = DataSpec::synthetic(30, 60, 3).generate(17);
+        let engine = OocEngine::spill(&ds.x, &ds.y, 1 << 20).unwrap();
+        let svc = FitService::new(engine.shared_store(), 2);
+        let cfgs = vec![cfg_for(RuleKind::Ssr), cfg_for(RuleKind::SsrBedpp)];
+        svc.run_batch(&cfgs).unwrap();
+        let after_first = svc.store().counters().snapshot();
+        assert!(after_first.cols_fetched > 0);
+        svc.run_batch(&cfgs).unwrap();
+        let after_second = svc.store().counters().snapshot();
+        assert!(
+            after_second.cols_fetched > after_first.cols_fetched,
+            "second batch must accumulate on top of the first — a reset \
+             mid-serve would break shared-cache accounting"
+        );
+        assert_eq!(svc.fit_latency_us().count(), 4, "every fit records a latency sample");
+        assert!(svc.fit_latency_us().quantile(0.99) >= svc.fit_latency_us().quantile(0.50));
+        assert_eq!(svc.queue_depth(), 0, "queue must drain");
+        assert!(svc.peak_queue_depth() >= 0);
+        let report = svc.stats_report();
+        assert!(report.rows.iter().any(|r| r[0] == "fit latency p95 (ms)"));
+        assert!(report.rows.iter().any(|r| r[0] == "queue depth"));
     }
 
     /// Different rules key different registry entries; a narrower

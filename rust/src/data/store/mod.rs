@@ -253,7 +253,45 @@ impl StoreCounters {
         self.cross_fit_hits.load(Ordering::Relaxed)
     }
 
+    /// Atomically-read copy of every counter (each field is a relaxed
+    /// load; the set is not a consistent cut under concurrent writers,
+    /// which is fine for monotonic counters). This — not [`reset`] — is
+    /// how per-window traffic is measured while other fits may be
+    /// running: take a snapshot before, a snapshot after, and
+    /// [`StoreSnapshot::delta_since`] the two.
+    ///
+    /// [`reset`]: StoreCounters::reset
+    pub fn snapshot(&self) -> StoreSnapshot {
+        StoreSnapshot {
+            cols_fetched: self.cols_fetched(),
+            chunk_loads: self.chunk_loads(),
+            bytes_read: self.bytes_read(),
+            cache_hits: self.cache_hits(),
+            peak_resident: self.peak_resident(),
+            retries: self.retries(),
+            checksum_failures: self.checksum_failures(),
+            short_reads: self.short_reads(),
+            solver_cols: self.solver_cols(),
+            stalls: self.stalls(),
+            prefetch_issued: self.prefetch_issued(),
+            prefetch_hits: self.prefetch_hits(),
+            prefetch_wasted: self.prefetch_wasted(),
+            cross_fit_hits: self.cross_fit_hits(),
+        }
+    }
+
     /// Zero every counter.
+    ///
+    /// **Quiescent-only.** Reset is safe only when no fit is touching the
+    /// store: a reset while another fit runs silently steals that fit's
+    /// traffic from every report (and breaks the `cols_fetched ==
+    /// cols_scanned` accounting invariant). The in-tree callers respect
+    /// this — the rule-by-rule traffic sweeps (`ooc_fit_traffic`) and
+    /// `bench-serve` reset *between* fits/rounds, never during — and
+    /// serve mode never resets at all: [`crate::coordinator::serve`]
+    /// measures per-window traffic with [`StoreCounters::snapshot`]
+    /// deltas and attributes shared-cache sharing via
+    /// [`reader::FitTag`]-based `cross_fit_hits` instead.
     pub fn reset(&self) {
         self.cols_fetched.store(0, Ordering::Relaxed);
         self.chunk_loads.store(0, Ordering::Relaxed);
@@ -269,6 +307,69 @@ impl StoreCounters {
         self.prefetch_hits.store(0, Ordering::Relaxed);
         self.prefetch_wasted.store(0, Ordering::Relaxed);
         self.cross_fit_hits.store(0, Ordering::Relaxed);
+    }
+}
+
+/// A point-in-time copy of [`StoreCounters`] — plain integers, so
+/// snapshots can be differenced to measure the traffic of a window
+/// (one fit, one λ phase) without ever resetting the live counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StoreSnapshot {
+    /// Columns served to scans.
+    pub cols_fetched: u64,
+    /// Chunk loads (disk reads).
+    pub chunk_loads: u64,
+    /// Payload bytes read.
+    pub bytes_read: u64,
+    /// Cache hits.
+    pub cache_hits: u64,
+    /// Peak cache-resident bytes (a high-water mark — `delta_since`
+    /// carries the later value, not a difference).
+    pub peak_resident: u64,
+    /// Retried read attempts.
+    pub retries: u64,
+    /// Checksum failures.
+    pub checksum_failures: u64,
+    /// Short reads.
+    pub short_reads: u64,
+    /// Columns served to inner solvers via pinned chunks.
+    pub solver_cols: u64,
+    /// Demand accesses that blocked on disk.
+    pub stalls: u64,
+    /// Chunks loaded by the async prefetcher.
+    pub prefetch_issued: u64,
+    /// Demand accesses served by a prefetched chunk.
+    pub prefetch_hits: u64,
+    /// Prefetched chunks evicted unused.
+    pub prefetch_wasted: u64,
+    /// Demand hits on chunks loaded by a different fit.
+    pub cross_fit_hits: u64,
+}
+
+impl StoreSnapshot {
+    /// Counter movement from `earlier` to `self` (saturating, so a reset
+    /// between snapshots degrades to zeros instead of wrapping).
+    /// `peak_resident` is a high-water mark, not a counter: the delta
+    /// carries `self`'s value.
+    pub fn delta_since(&self, earlier: &StoreSnapshot) -> StoreSnapshot {
+        StoreSnapshot {
+            cols_fetched: self.cols_fetched.saturating_sub(earlier.cols_fetched),
+            chunk_loads: self.chunk_loads.saturating_sub(earlier.chunk_loads),
+            bytes_read: self.bytes_read.saturating_sub(earlier.bytes_read),
+            cache_hits: self.cache_hits.saturating_sub(earlier.cache_hits),
+            peak_resident: self.peak_resident,
+            retries: self.retries.saturating_sub(earlier.retries),
+            checksum_failures: self
+                .checksum_failures
+                .saturating_sub(earlier.checksum_failures),
+            short_reads: self.short_reads.saturating_sub(earlier.short_reads),
+            solver_cols: self.solver_cols.saturating_sub(earlier.solver_cols),
+            stalls: self.stalls.saturating_sub(earlier.stalls),
+            prefetch_issued: self.prefetch_issued.saturating_sub(earlier.prefetch_issued),
+            prefetch_hits: self.prefetch_hits.saturating_sub(earlier.prefetch_hits),
+            prefetch_wasted: self.prefetch_wasted.saturating_sub(earlier.prefetch_wasted),
+            cross_fit_hits: self.cross_fit_hits.saturating_sub(earlier.cross_fit_hits),
+        }
     }
 }
 
@@ -362,6 +463,34 @@ mod tests {
         assert_eq!(c.retries() + c.checksum_failures() + c.short_reads(), 0);
         assert_eq!(c.solver_cols() + c.stalls() + c.prefetch_issued(), 0);
         assert_eq!(c.prefetch_hits() + c.prefetch_wasted() + c.cross_fit_hits(), 0);
+    }
+
+    #[test]
+    fn snapshot_deltas_measure_windows_without_reset() {
+        let c = StoreCounters::default();
+        c.add_col();
+        c.add_load(10);
+        let before = c.snapshot();
+        c.add_col();
+        c.add_col();
+        c.add_load(90);
+        c.add_hit();
+        c.note_resident(512);
+        let d = c.snapshot().delta_since(&before);
+        assert_eq!(d.cols_fetched, 2);
+        assert_eq!(d.chunk_loads, 1);
+        assert_eq!(d.bytes_read, 90);
+        assert_eq!(d.cache_hits, 1);
+        assert_eq!(d.peak_resident, 512, "high-water mark carries the later value");
+        // The live counters were never reset: totals still include the
+        // pre-window traffic.
+        assert_eq!(c.cols_fetched(), 3);
+        assert_eq!(c.bytes_read(), 100);
+        // A reset between snapshots saturates to zero instead of wrapping.
+        c.reset();
+        let after_reset = c.snapshot().delta_since(&before);
+        assert_eq!(after_reset.cols_fetched, 0);
+        assert_eq!(after_reset.bytes_read, 0);
     }
 
     #[test]

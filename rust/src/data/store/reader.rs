@@ -620,7 +620,13 @@ impl ColumnStore {
             }
         }
         self.counters.add_stall();
-        let buf = Arc::new(self.load_chunk(c)?);
+        let buf = {
+            // A stall is compute blocked on a synchronous disk read — the
+            // span the prefetcher exists to shrink.
+            let mut span = crate::obs::trace::Span::begin("stall", "store");
+            span.arg_u64("chunk", c as u64);
+            Arc::new(self.load_chunk(c)?)
+        };
         let mut cache = self.cache_lock();
         cache.insert(c, Arc::clone(&buf), current_fit());
         self.counters.note_resident(cache.resident() as u64);
@@ -646,7 +652,13 @@ impl ColumnStore {
             }
         }
         self.counters.add_stall();
-        let buf = Arc::new(self.load_chunk(c)?);
+        let buf = {
+            // A stall is compute blocked on a synchronous disk read — the
+            // span the prefetcher exists to shrink.
+            let mut span = crate::obs::trace::Span::begin("stall", "store");
+            span.arg_u64("chunk", c as u64);
+            Arc::new(self.load_chunk(c)?)
+        };
         let mut cache = self.cache_lock();
         cache.insert(c, Arc::clone(&buf), current_fit());
         cache.pin(c);
@@ -704,6 +716,8 @@ impl ColumnStore {
             // The scan blocks on these reads — they are demand stalls,
             // unlike the async λ-ahead loads in `prefetch_tagged`.
             self.counters.add_stall();
+            let mut span = crate::obs::trace::Span::begin("stall", "store");
+            span.arg_u64("chunk", wanted[k] as u64);
             self.load_chunk(wanted[k])
         });
         let mut cache = self.cache_lock();
@@ -721,6 +735,8 @@ impl ColumnStore {
     /// not quarantine on retry exhaustion, and every error is swallowed —
     /// a failed prefetch just leaves the chunk cold for the demand path.
     pub(crate) fn prefetch_tagged(&self, cols: &[usize]) {
+        let mut batch_span = crate::obs::trace::Span::begin("prefetch_batch", "store");
+        batch_span.arg_u64("cols", cols.len() as u64);
         let mut wanted: Vec<usize> = Vec::new();
         {
             let cache = self.cache_lock();

@@ -53,6 +53,10 @@
 //!   under a tiny cache budget).
 //! * `HSSR_CACHE_MB` — chunk-cache budget (megabytes) for the out-of-core
 //!   column store ([`data::store`]; default 64).
+//! * `HSSR_TRACE` — `1` turns on per-λ phase-span tracing ([`obs`]); the
+//!   CLI's `--trace-out FILE` exports the spans as Chrome trace-event
+//!   JSON plus a metrics JSONL dump. Off by default (one relaxed atomic
+//!   load per instrumentation site).
 //!
 //! ## Quickstart
 //!
@@ -70,6 +74,7 @@ pub mod coordinator;
 pub mod data;
 pub mod error;
 pub mod linalg;
+pub mod obs;
 pub mod prop;
 pub mod rng;
 pub mod runtime;

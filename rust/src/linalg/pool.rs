@@ -172,6 +172,10 @@ impl WorkerPool {
             }
             return;
         }
+        // Trace only the cross-thread dispatch path: the inline path above
+        // stays untouched, and a disabled tracer costs one relaxed load.
+        let mut dispatch_span = crate::obs::trace::Span::begin("pool_dispatch", "pool");
+        dispatch_span.arg_u64("chunks", chunks as u64);
         let _guard = self.submit.lock().unwrap();
         let next = AtomicUsize::new(0);
         let job = Job { task: task as *const _, next: &next as *const _, chunks };

@@ -17,6 +17,7 @@
 //! hssr serve [--clients N] [--max-concurrent M] [--data ...] [--cache-mb M]
 //!                                # N concurrent λ-paths, one store, one cache
 //! hssr bench-serve [--fits F] [--clients N]          # fits/sec vs concurrency
+//! hssr trace <trace.json>        # summarize a --trace-out file per rule
 //! hssr info                                          # build/runtime info
 //! ```
 //!
@@ -33,6 +34,11 @@
 //! `--faults spec` (any command) arms the deterministic storage fault
 //! injector — equivalent to setting `HSSR_FAULTS=spec` — for exercising
 //! the retry/checksum machinery; see `docs/ARCHITECTURE.md`.
+//! `--trace-out file.json` (any command) turns on per-λ phase tracing
+//! (equivalent to `HSSR_TRACE=1`) and, on exit, writes a Chrome
+//! trace-event file (`chrome://tracing` / Perfetto loadable) plus a
+//! `file.json.metrics.jsonl` registry dump; `hssr trace file.json`
+//! summarizes one into a per-rule screening-cost vs solve-time table.
 
 use hssr::coordinator::config::{parse_rule, Config};
 use hssr::coordinator::metrics::screening_power;
@@ -47,7 +53,7 @@ use hssr::solver::Penalty;
 
 fn usage() -> ! {
     eprintln!(
-        "usage: hssr <fit|group|power|cv|logistic|convert|serve|bench-serve|info> \
+        "usage: hssr <fit|group|power|cv|logistic|convert|serve|bench-serve|trace|info> \
          [--key value ...]\n\
          see README.md for the full flag reference"
     );
@@ -498,7 +504,7 @@ fn cmd_serve(cfg: &Config) -> Result<()> {
     let secs = t0.elapsed().as_secs_f64();
     let mut t = Table::new(
         &format!("serve — {clients} clients on {} (admission {max_c})", ds.name),
-        &["client", "rule", "fit id", "λs", "nnz@λmin", "warm", "secs"],
+        &["client", "rule", "fit id", "λs", "nnz@λmin", "warm", "secs", "λ/s"],
     );
     for (i, r) in out.iter().enumerate() {
         t.push_row(vec![
@@ -509,6 +515,7 @@ fn cmd_serve(cfg: &Config) -> Result<()> {
             r.fit.betas.last().map(Vec::len).unwrap_or(0).to_string(),
             if r.warm_hit { "hit" } else { "cold" }.to_string(),
             format!("{:.3}", r.fit.seconds),
+            format!("{:.1}", r.fit.lambdas.len() as f64 / r.fit.seconds.max(1e-9)),
         ]);
     }
     println!("{}", t.render());
@@ -530,6 +537,24 @@ fn cmd_serve(cfg: &Config) -> Result<()> {
         svc.store().budget_bytes() as f64 / 1e6,
     );
     println!("warm registry: {} entries", svc.registry_len());
+    println!("{}", svc.stats_report().render());
+    Ok(())
+}
+
+/// `hssr trace <trace.json>` — summarize a `--trace-out` Chrome trace
+/// into the per-rule screening-cost vs solve-savings table.
+fn cmd_trace(cfg: &Config) -> Result<()> {
+    let path = match cfg.positional.as_slice() {
+        [p] => p.clone(),
+        _ => {
+            return Err(HssrError::Config(
+                "trace needs one positional arg: <trace.json>".into(),
+            ))
+        }
+    };
+    let text = std::fs::read_to_string(&path)?;
+    let t = hssr::obs::summary::summarize_trace_text(&text)?;
+    println!("{}", t.render());
     Ok(())
 }
 
@@ -610,6 +635,13 @@ fn main() {
     if cfg.get_bool("prefetch", false) {
         std::env::set_var("HSSR_PREFETCH", "1");
     }
+    // `--trace-out file.json` arms per-λ phase tracing for any command
+    // (equivalent to HSSR_TRACE=1) and flushes a Chrome trace-event file
+    // plus a registry metrics dump when the command finishes.
+    let trace_out = cfg.get("trace-out").map(std::path::PathBuf::from);
+    if trace_out.is_some() {
+        hssr::obs::trace::set_enabled(true);
+    }
     let result = match cmd.as_str() {
         "fit" => cmd_fit(&cfg),
         "group" => cmd_group(&cfg),
@@ -619,9 +651,30 @@ fn main() {
         "convert" => cmd_convert(&cfg),
         "serve" => cmd_serve(&cfg),
         "bench-serve" => cmd_bench_serve(&cfg),
+        "trace" => cmd_trace(&cfg),
         "info" => cmd_info(),
         _ => usage(),
     };
+    if let Some(path) = &trace_out {
+        use hssr::obs::trace;
+        let events = trace::drain();
+        match trace::write_chrome_trace(path, &events) {
+            Ok(()) => eprintln!(
+                "trace: {} events written to {} ({} dropped)",
+                events.len(),
+                path.display(),
+                trace::dropped(),
+            ),
+            Err(e) => eprintln!("trace: failed to write {}: {e}", path.display()),
+        }
+        let mut metrics = path.as_os_str().to_os_string();
+        metrics.push(".metrics.jsonl");
+        let metrics = std::path::PathBuf::from(metrics);
+        match hssr::obs::registry::write_jsonl(&metrics) {
+            Ok(()) => eprintln!("trace: metrics registry dumped to {}", metrics.display()),
+            Err(e) => eprintln!("trace: failed to write {}: {e}", metrics.display()),
+        }
+    }
     if let Err(e) = result {
         eprintln!("error: {e}");
         std::process::exit(1);

@@ -1,0 +1,38 @@
+//! Observability: phase-span tracing, a process-global metrics registry,
+//! and trace exporters/summaries — all zero-dependency.
+//!
+//! Three pieces:
+//!
+//! * [`trace`] — per-λ phase spans ([`trace::Span`]) emitted by the
+//!   driver, the worker pool, the column-store reader and the serve
+//!   admission queue. Off by default; `HSSR_TRACE=1` (or `--trace-out`)
+//!   turns it on. The disabled path is one relaxed atomic load, which is
+//!   what lets spans sit on hot paths (the `perf_probe` bench asserts a
+//!   per-call bound).
+//! * [`registry`] — named atomic counters/gauges/histograms. Recording is
+//!   always-on (a few relaxed atomic ops); the registry map is only
+//!   touched at registration and snapshot time. Serve-mode latency
+//!   percentiles and queue depth live here.
+//! * [`json`] + [`summary`] — a minimal JSON reader and the per-rule
+//!   screening-cost-vs-solve-savings aggregation behind the `hssr trace`
+//!   subcommand.
+//!
+//! Span taxonomy (name @ category):
+//!
+//! | span | cat | emitted by | key args |
+//! |------|-----|------------|----------|
+//! | `fit` | `fit` | `solver/driver.rs` walk | `rule`, `simd`, `units`, `n_lambda` |
+//! | `setup` | `fit` | `solver/path.rs` construction | `engine`, I/O deltas |
+//! | `screen` / `solve` / `rescreen` / `kkt` / `prefetch` / `finalize` | `lambda` | `run_one_lambda` | `LambdaMetrics` + `StoreCounters` deltas |
+//! | `stall` / `prefetch_batch` | `store` | `ColumnStore` reader | `chunk`, `cols` |
+//! | `pool_dispatch` | `pool` | `WorkerPool::run` | `chunks` |
+//! | `queue_wait` / `serve_fit` | `serve` | `FitService` | `fit_id` |
+//!
+//! Per-λ spans carry counter *deltas* (not absolutes), so summing a fit's
+//! spans reproduces its `LambdaMetrics` / `StoreCounters` totals exactly
+//! — `tests/trace_obs.rs` enforces this.
+
+pub mod json;
+pub mod registry;
+pub mod summary;
+pub mod trace;

@@ -1,0 +1,363 @@
+//! Process-global metrics registry: atomic counters, gauges and
+//! log-bucketed histograms registered by name.
+//!
+//! Instruments are plain atomics — recording is a handful of relaxed
+//! atomic ops whether or not tracing is enabled, so always-on telemetry
+//! (the serve latency histogram, queue-depth gauge) costs nothing
+//! measurable. The registry itself (a mutex-guarded name map) is touched
+//! only at registration and snapshot time, never per-record: call sites
+//! hold the `Arc` handle.
+//!
+//! [`snapshot_jsonl`] renders every registered instrument as one JSON
+//! line (`--trace-out FILE` writes it next to the Chrome trace as
+//! `FILE.metrics.jsonl`).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use super::trace::{json_escape, json_f64};
+
+// --------------------------------------------------------------- counter
+
+/// Monotonic counter.
+#[derive(Default)]
+pub struct Counter {
+    v: AtomicU64,
+}
+
+impl Counter {
+    /// Fresh unregistered counter.
+    pub fn new() -> Counter {
+        Counter::default()
+    }
+
+    /// Add `n`.
+    pub fn add(&self, n: u64) {
+        self.v.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Add 1.
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+// ----------------------------------------------------------------- gauge
+
+/// Up/down gauge with a high-water mark.
+#[derive(Default)]
+pub struct Gauge {
+    v: AtomicI64,
+    hi: AtomicI64,
+}
+
+impl Gauge {
+    /// Fresh unregistered gauge.
+    pub fn new() -> Gauge {
+        Gauge::default()
+    }
+
+    /// Add `d` (negative to decrement); returns the new value.
+    pub fn add(&self, d: i64) -> i64 {
+        let now = self.v.fetch_add(d, Ordering::Relaxed) + d;
+        self.hi.fetch_max(now, Ordering::Relaxed);
+        now
+    }
+
+    /// Set the value outright.
+    pub fn set(&self, v: i64) {
+        self.v.store(v, Ordering::Relaxed);
+        self.hi.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> i64 {
+        self.v.load(Ordering::Relaxed)
+    }
+
+    /// High-water mark since creation.
+    pub fn peak(&self) -> i64 {
+        self.hi.load(Ordering::Relaxed)
+    }
+}
+
+// ------------------------------------------------------------- histogram
+
+/// Bucket count: values 0–7 exact, then 4 sub-buckets per power of two
+/// (two significand bits) up to `u64::MAX` — ≤ 12.5 % relative error on
+/// any reported quantile, 256 fixed slots, lock-free recording.
+const NBUCKETS: usize = 256;
+
+fn bucket_index(v: u64) -> usize {
+    if v < 8 {
+        return v as usize;
+    }
+    let msb = 63 - v.leading_zeros() as usize; // ≥ 3
+    let sub = ((v >> (msb - 2)) & 3) as usize;
+    8 + (msb - 3) * 4 + sub
+}
+
+fn bucket_lower(idx: usize) -> u64 {
+    if idx < 8 {
+        return idx as u64;
+    }
+    let msb = 3 + (idx - 8) / 4;
+    let sub = ((idx - 8) % 4) as u64;
+    (1u64 << msb) + (sub << (msb - 2))
+}
+
+/// Representative value reported for a bucket (its geometric middle).
+fn bucket_rep(idx: usize) -> u64 {
+    if idx < 8 {
+        return idx as u64;
+    }
+    let msb = 3 + (idx - 8) / 4;
+    bucket_lower(idx) + (1u64 << (msb - 2)) / 2
+}
+
+/// Lock-free log-bucketed histogram (latency in µs, sizes in bytes).
+pub struct Histogram {
+    counts: [AtomicU64; NBUCKETS],
+    n: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        #[allow(clippy::declare_interior_mutable_const)]
+        const ZERO: AtomicU64 = AtomicU64::new(0);
+        Histogram { counts: [ZERO; NBUCKETS], n: AtomicU64::new(0), sum: AtomicU64::new(0) }
+    }
+}
+
+impl Histogram {
+    /// Fresh unregistered histogram.
+    pub fn new() -> Histogram {
+        Histogram::default()
+    }
+
+    /// Record one observation.
+    pub fn record(&self, v: u64) {
+        self.counts[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.n.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Number of observations.
+    pub fn count(&self) -> u64 {
+        self.n.load(Ordering::Relaxed)
+    }
+
+    /// Sum of observations.
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    /// Mean observation (0 when empty).
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum() as f64 / n as f64
+        }
+    }
+
+    /// Approximate `q`-quantile (`0.0 ≤ q ≤ 1.0`): the representative
+    /// value of the bucket holding the `⌈q·n⌉`-th observation. Within
+    /// 12.5 % of exact by bucket construction; 0 when empty.
+    pub fn quantile(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).max(1);
+        let mut cum = 0u64;
+        for (idx, c) in self.counts.iter().enumerate() {
+            cum += c.load(Ordering::Relaxed);
+            if cum >= target {
+                return bucket_rep(idx);
+            }
+        }
+        bucket_rep(NBUCKETS - 1)
+    }
+}
+
+// -------------------------------------------------------------- registry
+
+enum Metric {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<Histogram>),
+}
+
+fn registry() -> &'static Mutex<BTreeMap<String, Metric>> {
+    static REGISTRY: OnceLock<Mutex<BTreeMap<String, Metric>>> = OnceLock::new();
+    REGISTRY.get_or_init(|| Mutex::new(BTreeMap::new()))
+}
+
+fn lock() -> std::sync::MutexGuard<'static, BTreeMap<String, Metric>> {
+    registry().lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Get-or-register the counter named `name`. A name already registered as
+/// a different kind yields a fresh detached instance (recording still
+/// works; it just won't appear in snapshots) — mis-typed lookups must not
+/// panic in production paths.
+pub fn counter(name: &str) -> Arc<Counter> {
+    let mut reg = lock();
+    match reg.get(name) {
+        Some(Metric::Counter(c)) => Arc::clone(c),
+        Some(_) => Arc::new(Counter::new()),
+        None => {
+            let c = Arc::new(Counter::new());
+            reg.insert(name.to_string(), Metric::Counter(Arc::clone(&c)));
+            c
+        }
+    }
+}
+
+/// Get-or-register the gauge named `name` (same kind-mismatch rule as
+/// [`counter`]).
+pub fn gauge(name: &str) -> Arc<Gauge> {
+    let mut reg = lock();
+    match reg.get(name) {
+        Some(Metric::Gauge(g)) => Arc::clone(g),
+        Some(_) => Arc::new(Gauge::new()),
+        None => {
+            let g = Arc::new(Gauge::new());
+            reg.insert(name.to_string(), Metric::Gauge(Arc::clone(&g)));
+            g
+        }
+    }
+}
+
+/// Get-or-register the histogram named `name` (same kind-mismatch rule as
+/// [`counter`]).
+pub fn histogram(name: &str) -> Arc<Histogram> {
+    let mut reg = lock();
+    match reg.get(name) {
+        Some(Metric::Histogram(h)) => Arc::clone(h),
+        Some(_) => Arc::new(Histogram::new()),
+        None => {
+            let h = Arc::new(Histogram::new());
+            reg.insert(name.to_string(), Metric::Histogram(Arc::clone(&h)));
+            h
+        }
+    }
+}
+
+/// Render every registered instrument as JSONL, one object per line,
+/// sorted by name (the map is a `BTreeMap`, so the dump is deterministic).
+pub fn snapshot_jsonl() -> String {
+    let reg = lock();
+    let mut out = String::new();
+    for (name, m) in reg.iter() {
+        match m {
+            Metric::Counter(c) => out.push_str(&format!(
+                "{{\"metric\":\"{}\",\"type\":\"counter\",\"value\":{}}}\n",
+                json_escape(name),
+                c.get()
+            )),
+            Metric::Gauge(g) => out.push_str(&format!(
+                "{{\"metric\":\"{}\",\"type\":\"gauge\",\"value\":{},\"peak\":{}}}\n",
+                json_escape(name),
+                g.get(),
+                g.peak()
+            )),
+            Metric::Histogram(h) => out.push_str(&format!(
+                "{{\"metric\":\"{}\",\"type\":\"histogram\",\"count\":{},\"sum\":{},\
+                 \"mean\":{},\"p50\":{},\"p95\":{},\"p99\":{}}}\n",
+                json_escape(name),
+                h.count(),
+                h.sum(),
+                json_f64(h.mean()),
+                h.quantile(0.50),
+                h.quantile(0.95),
+                h.quantile(0.99)
+            )),
+        }
+    }
+    out
+}
+
+/// Write the registry snapshot to `path` as JSONL.
+pub fn write_jsonl(path: &std::path::Path) -> std::io::Result<()> {
+    std::fs::write(path, snapshot_jsonl())
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_basics() {
+        let c = counter("test.reg.counter");
+        c.add(3);
+        c.inc();
+        assert_eq!(counter("test.reg.counter").get(), 4, "same name, same instrument");
+        let g = gauge("test.reg.gauge");
+        g.add(5);
+        g.add(-2);
+        assert_eq!(g.get(), 3);
+        assert_eq!(g.peak(), 5);
+    }
+
+    #[test]
+    fn kind_mismatch_detaches() {
+        counter("test.reg.kind");
+        let g = gauge("test.reg.kind");
+        g.set(9);
+        // The detached gauge records fine but the registered counter is
+        // untouched.
+        assert_eq!(counter("test.reg.kind").get(), 0);
+    }
+
+    #[test]
+    fn bucket_index_is_monotone_and_bounded() {
+        let mut prev = 0usize;
+        for shift in 0..64 {
+            let v = 1u64 << shift;
+            let idx = bucket_index(v);
+            assert!(idx >= prev);
+            assert!(idx < NBUCKETS);
+            assert!(bucket_lower(idx) <= v, "lower({idx}) ≤ {v}");
+            prev = idx;
+        }
+        assert_eq!(bucket_index(u64::MAX), bucket_index(u64::MAX), "total");
+    }
+
+    #[test]
+    fn quantiles_track_a_known_distribution() {
+        let h = Histogram::new();
+        for v in 1..=1000u64 {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 1000);
+        let p50 = h.quantile(0.50) as f64;
+        let p99 = h.quantile(0.99) as f64;
+        assert!((p50 - 500.0).abs() / 500.0 < 0.15, "p50 ≈ 500, got {p50}");
+        assert!((p99 - 990.0).abs() / 990.0 < 0.15, "p99 ≈ 990, got {p99}");
+        assert!(h.quantile(1.0) >= h.quantile(0.5));
+    }
+
+    #[test]
+    fn jsonl_snapshot_mentions_registered_names() {
+        counter("test.reg.jsonl.c").add(2);
+        let h = histogram("test.reg.jsonl.h");
+        h.record(10);
+        let dump = snapshot_jsonl();
+        assert!(dump.contains("\"metric\":\"test.reg.jsonl.c\""));
+        assert!(dump.contains("\"type\":\"histogram\""));
+        for line in dump.lines() {
+            assert!(line.starts_with('{') && line.ends_with('}'));
+        }
+    }
+}

@@ -1,0 +1,235 @@
+//! Trace summarization for the `hssr trace` CLI subcommand: fold a
+//! Chrome trace-event file back into the paper's screening-cost vs
+//! solve-savings accounting, per rule.
+//!
+//! The driver tags every per-λ phase span with its fit's sequence number
+//! and every fit span with its rule label, so a trace containing many
+//! concurrent fits (serve mode) still aggregates cleanly: spans join to
+//! their fit via `fit_seq`, fits join to rules via the `rule` arg.
+
+use std::collections::BTreeMap;
+use std::collections::HashMap;
+
+use super::json::Json;
+use crate::coordinator::table::Table;
+use crate::error::{HssrError, Result};
+
+/// One span row lifted out of a Chrome trace document.
+#[derive(Clone, Debug)]
+pub struct TraceRow {
+    /// Span name (`screen`, `solve`, …).
+    pub name: String,
+    /// Category (`fit`, `lambda`, `store`, `pool`, `serve`).
+    pub cat: String,
+    /// Duration in µs.
+    pub dur_us: u64,
+    /// Fit sequence number (0 when the span ran outside a fit scope).
+    pub fit_seq: u64,
+    /// The span's `args` object.
+    pub args: Json,
+}
+
+impl TraceRow {
+    fn arg_u64(&self, key: &str) -> u64 {
+        self.args.get(key).and_then(Json::as_u64).unwrap_or(0)
+    }
+}
+
+/// Lift the `traceEvents` array of a parsed Chrome trace into rows.
+pub fn rows_from_chrome(doc: &Json) -> Result<Vec<TraceRow>> {
+    let events = doc
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| HssrError::Config("trace: no traceEvents array".into()))?;
+    let mut rows = Vec::with_capacity(events.len());
+    for ev in events {
+        let name = ev.get("name").and_then(Json::as_str).unwrap_or("").to_string();
+        let cat = ev.get("cat").and_then(Json::as_str).unwrap_or("").to_string();
+        let dur_us = ev.get("dur").and_then(Json::as_u64).unwrap_or(0);
+        let args = ev.get("args").cloned().unwrap_or(Json::Obj(Vec::new()));
+        let fit_seq = args.get("fit_seq").and_then(Json::as_u64).unwrap_or(0);
+        rows.push(TraceRow { name, cat, dur_us, fit_seq, args });
+    }
+    Ok(rows)
+}
+
+#[derive(Default)]
+struct RuleAgg {
+    fits: u64,
+    lambdas: u64,
+    setup_us: u64,
+    screen_us: u64,
+    solve_us: u64,
+    kkt_us: u64,
+    rescreen_us: u64,
+    cols_scanned: u64,
+    cd_cycles: u64,
+    violations: u64,
+}
+
+fn ms(us: u64) -> String {
+    format!("{:.2}", us as f64 / 1e3)
+}
+
+/// Build the per-rule screening-cost vs solve-savings table the paper's
+/// figures are about: wall-clock per phase, scan traffic, and the share
+/// of fit time spent deciding what *not* to solve.
+pub fn rule_summary(rows: &[TraceRow]) -> Table {
+    // fit_seq → rule label, from the fit spans.
+    let mut rule_of: HashMap<u64, String> = HashMap::new();
+    for r in rows {
+        if r.name == "fit" && r.fit_seq != 0 {
+            if let Some(rule) = r.args.get("rule").and_then(Json::as_str) {
+                rule_of.insert(r.fit_seq, rule.to_string());
+            }
+        }
+    }
+    let mut agg: BTreeMap<String, RuleAgg> = BTreeMap::new();
+    for r in rows {
+        let rule = rule_of
+            .get(&r.fit_seq)
+            .cloned()
+            .unwrap_or_else(|| "(untagged)".to_string());
+        let a = agg.entry(rule).or_default();
+        match (r.cat.as_str(), r.name.as_str()) {
+            ("fit", "fit") => a.fits += 1,
+            ("fit", "setup") => a.setup_us += r.dur_us,
+            ("lambda", "screen") => {
+                a.lambdas += 1;
+                a.screen_us += r.dur_us;
+                a.cols_scanned += r.arg_u64("cols_scanned");
+                a.cd_cycles += r.arg_u64("cd_cycles");
+                a.violations += r.arg_u64("violations");
+            }
+            ("lambda", name) => {
+                match name {
+                    "solve" => a.solve_us += r.dur_us,
+                    "kkt" => a.kkt_us += r.dur_us,
+                    "rescreen" => a.rescreen_us += r.dur_us,
+                    _ => {}
+                }
+                a.cols_scanned += r.arg_u64("cols_scanned");
+                a.cd_cycles += r.arg_u64("cd_cycles");
+                a.violations += r.arg_u64("violations");
+            }
+            _ => {}
+        }
+    }
+    let mut table = Table::new(
+        "Screening cost vs solve savings (per rule)",
+        &[
+            "Rule",
+            "fits",
+            "λ",
+            "setup ms",
+            "screen ms",
+            "KKT ms",
+            "rescreen ms",
+            "solve ms",
+            "cols scanned",
+            "CD cycles",
+            "violations",
+            "screen share",
+        ],
+    );
+    for (rule, a) in &agg {
+        let screen_cost = a.screen_us + a.kkt_us + a.rescreen_us;
+        let accounted = screen_cost + a.solve_us;
+        let share = if accounted == 0 {
+            "—".to_string()
+        } else {
+            format!("{:.1}%", 100.0 * screen_cost as f64 / accounted as f64)
+        };
+        table.push_row(vec![
+            rule.clone(),
+            a.fits.to_string(),
+            a.lambdas.to_string(),
+            ms(a.setup_us),
+            ms(a.screen_us),
+            ms(a.kkt_us),
+            ms(a.rescreen_us),
+            ms(a.solve_us),
+            a.cols_scanned.to_string(),
+            a.cd_cycles.to_string(),
+            a.violations.to_string(),
+            share,
+        ]);
+    }
+    table
+}
+
+/// Parse a Chrome trace file's text and summarize it (the `hssr trace`
+/// entry point).
+pub fn summarize_trace_text(text: &str) -> Result<Table> {
+    let doc = super::json::parse(text)?;
+    let rows = rows_from_chrome(&doc)?;
+    Ok(rule_summary(&rows))
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used)]
+mod tests {
+    use super::*;
+    use crate::obs::trace::{chrome_trace_json, ArgValue, Event};
+
+    fn ev(
+        name: &'static str,
+        cat: &'static str,
+        dur_us: u64,
+        args: Vec<(&'static str, ArgValue)>,
+    ) -> Event {
+        Event { name, cat, ts_us: 0, dur_us, tid: 1, args }
+    }
+
+    #[test]
+    fn summary_joins_spans_to_rules() {
+        let events = vec![
+            ev(
+                "fit",
+                "fit",
+                100,
+                vec![("fit_seq", ArgValue::U64(7)), ("rule", ArgValue::Str("SsrBedpp".into()))],
+            ),
+            ev(
+                "screen",
+                "lambda",
+                30,
+                vec![("fit_seq", ArgValue::U64(7)), ("cols_scanned", ArgValue::U64(50))],
+            ),
+            ev(
+                "solve",
+                "lambda",
+                60,
+                vec![("fit_seq", ArgValue::U64(7)), ("cd_cycles", ArgValue::U64(9))],
+            ),
+            ev(
+                "kkt",
+                "lambda",
+                10,
+                vec![("fit_seq", ArgValue::U64(7)), ("cols_scanned", ArgValue::U64(5))],
+            ),
+        ];
+        let doc = super::super::json::parse(&chrome_trace_json(&events)).unwrap();
+        let rows = rows_from_chrome(&doc).unwrap();
+        assert_eq!(rows.len(), 4);
+        let table = rule_summary(&rows);
+        assert_eq!(table.rows.len(), 1);
+        let row = &table.rows[0];
+        assert_eq!(row[0], "SsrBedpp");
+        assert_eq!(row[1], "1", "one fit");
+        assert_eq!(row[2], "1", "one λ (screen span count)");
+        assert_eq!(row[8], "55", "cols scanned sums across phases");
+        assert_eq!(row[9], "9");
+        // screen share = (30+10)/(30+10+60) = 40%.
+        assert_eq!(row[11], "40.0%");
+    }
+
+    #[test]
+    fn untagged_spans_get_their_own_bucket() {
+        let events =
+            vec![ev("screen", "lambda", 5, vec![("cols_scanned", ArgValue::U64(3))])];
+        let doc = super::super::json::parse(&chrome_trace_json(&events)).unwrap();
+        let table = rule_summary(&rows_from_chrome(&doc).unwrap());
+        assert_eq!(table.rows[0][0], "(untagged)");
+    }
+}

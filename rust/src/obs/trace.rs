@@ -1,0 +1,430 @@
+//! Phase-span tracing: Chrome-trace-event emission with near-zero cost
+//! when disabled.
+//!
+//! The tracer is process-global and off by default. It turns on when the
+//! environment sets `HSSR_TRACE` (to anything but `0`/empty) or when a
+//! caller flips it explicitly ([`set_enabled`] — the `--trace-out` CLI
+//! flag and the trace tests do this). Every instrumentation site goes
+//! through [`Span::begin`], whose disabled path is a single relaxed
+//! atomic load and a `None` — cheap enough to sit on the worker-pool
+//! dispatch and store chunk-miss paths without perturbing them (the
+//! `perf_probe` bench asserts a per-call bound on exactly this path).
+//!
+//! When enabled, spans record wall-clock (µs since a process epoch),
+//! a small thread id, an optional fit sequence number (see [`FitScope`])
+//! and a list of typed args — counter *deltas* attached by the driver so
+//! that summing a fit's span args reproduces its `LambdaMetrics` /
+//! `StoreCounters` totals exactly (property-tested in
+//! `tests/trace_obs.rs`). Completed spans land in a bounded global sink;
+//! [`drain`] takes them and [`chrome_trace_json`] renders the
+//! `about:tracing` / Perfetto "X" (complete-event) format.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+// ---------------------------------------------------------------- enable
+
+const OFF: u8 = 0;
+const ON: u8 = 1;
+const UNINIT: u8 = 2;
+
+static ENABLED: AtomicU8 = AtomicU8::new(UNINIT);
+
+/// Is tracing on? First call resolves `HSSR_TRACE`; later calls are one
+/// relaxed load. This is the guard every hot-path site checks.
+#[inline]
+pub fn enabled() -> bool {
+    match ENABLED.load(Ordering::Relaxed) {
+        OFF => false,
+        ON => true,
+        _ => init_from_env(),
+    }
+}
+
+#[cold]
+fn init_from_env() -> bool {
+    let on = std::env::var("HSSR_TRACE")
+        .map(|v| !v.is_empty() && v != "0")
+        .unwrap_or(false);
+    ENABLED.store(if on { ON } else { OFF }, Ordering::Relaxed);
+    on
+}
+
+/// Force tracing on or off, overriding `HSSR_TRACE` (used by `--trace-out`
+/// and the trace tests).
+pub fn set_enabled(on: bool) {
+    ENABLED.store(if on { ON } else { OFF }, Ordering::Relaxed);
+}
+
+// ------------------------------------------------------------ time / ids
+
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+fn now_us() -> u64 {
+    epoch().elapsed().as_micros() as u64
+}
+
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+thread_local! {
+    static TID: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Small per-thread id for the trace `tid` field (assigned on first use,
+/// stable for the thread's lifetime).
+fn tid() -> u64 {
+    TID.with(|c| {
+        let mut t = c.get();
+        if t == 0 {
+            t = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+            c.set(t);
+        }
+        t
+    })
+}
+
+// ------------------------------------------------------------- fit scope
+
+static NEXT_FIT_SEQ: AtomicU64 = AtomicU64::new(1);
+thread_local! {
+    static FIT_SEQ: Cell<u64> = const { Cell::new(0) };
+}
+
+/// RAII fit grouping: while a scope is alive on a thread, every span that
+/// thread begins carries a `fit_seq` arg, so concurrent fits' spans can be
+/// told apart in a shared trace (the serve pool, parallel tests). Nested
+/// scopes reuse the outer sequence number — `fit_lasso_path*` opens one
+/// around problem construction and [`crate::solver::driver::drive_warm`]
+/// opens another inside it; both belong to the same fit.
+pub struct FitScope {
+    outer: u64,
+}
+
+impl FitScope {
+    /// Enter a fit scope (allocating a fresh sequence number unless one is
+    /// already active on this thread).
+    pub fn enter() -> FitScope {
+        let outer = FIT_SEQ.with(|c| c.get());
+        if outer == 0 {
+            FIT_SEQ.with(|c| c.set(NEXT_FIT_SEQ.fetch_add(1, Ordering::Relaxed)));
+        }
+        FitScope { outer }
+    }
+
+    /// The active fit sequence number on this thread (0 = none).
+    pub fn current() -> u64 {
+        FIT_SEQ.with(|c| c.get())
+    }
+}
+
+impl Drop for FitScope {
+    fn drop(&mut self) {
+        if self.outer == 0 {
+            FIT_SEQ.with(|c| c.set(0));
+        }
+    }
+}
+
+// ------------------------------------------------------------------ sink
+
+/// A typed span argument (kept as data so exporters can render JSON
+/// without stringly-typed round trips).
+#[derive(Clone, Debug, PartialEq)]
+pub enum ArgValue {
+    /// Unsigned counter delta / id.
+    U64(u64),
+    /// Floating value (λ, objective).
+    F64(f64),
+    /// Label (rule, SIMD level, path).
+    Str(String),
+}
+
+/// One completed span.
+#[derive(Clone, Debug)]
+pub struct Event {
+    /// Span name (`screen`, `solve`, `kkt`, …).
+    pub name: &'static str,
+    /// Category (`fit`, `lambda`, `store`, `pool`, `serve`).
+    pub cat: &'static str,
+    /// Start, µs since the process epoch.
+    pub ts_us: u64,
+    /// Duration, µs.
+    pub dur_us: u64,
+    /// Small thread id.
+    pub tid: u64,
+    /// Typed args (counter deltas, labels).
+    pub args: Vec<(&'static str, ArgValue)>,
+}
+
+impl Event {
+    /// Fetch a `u64` arg by key.
+    pub fn arg_u64(&self, key: &str) -> Option<u64> {
+        self.args.iter().find_map(|(k, v)| match v {
+            ArgValue::U64(u) if *k == key => Some(*u),
+            _ => None,
+        })
+    }
+
+    /// Fetch a string arg by key.
+    pub fn arg_str(&self, key: &str) -> Option<&str> {
+        self.args.iter().find_map(|(k, v)| match v {
+            ArgValue::Str(s) if *k == key => Some(s.as_str()),
+            _ => None,
+        })
+    }
+}
+
+/// Sink cap: a long tracing-enabled run (the CI trace leg runs the whole
+/// suite under `HSSR_TRACE=1`) must not grow without bound. Beyond the
+/// cap, events are counted as dropped instead of stored.
+const MAX_EVENTS: usize = 1 << 20;
+
+static SINK: Mutex<Vec<Event>> = Mutex::new(Vec::new());
+static DROPPED: AtomicU64 = AtomicU64::new(0);
+
+fn push(ev: Event) {
+    let mut sink = SINK.lock().unwrap_or_else(|p| p.into_inner());
+    if sink.len() >= MAX_EVENTS {
+        DROPPED.fetch_add(1, Ordering::Relaxed);
+        return;
+    }
+    sink.push(ev);
+}
+
+/// Take all buffered events (exporters and tests; leaves the sink empty).
+pub fn drain() -> Vec<Event> {
+    std::mem::take(&mut *SINK.lock().unwrap_or_else(|p| p.into_inner()))
+}
+
+/// Events dropped at the sink cap since process start.
+pub fn dropped() -> u64 {
+    DROPPED.load(Ordering::Relaxed)
+}
+
+// ------------------------------------------------------------------ span
+
+struct SpanInner {
+    name: &'static str,
+    cat: &'static str,
+    ts_us: u64,
+    start: Instant,
+    args: Vec<(&'static str, ArgValue)>,
+}
+
+/// RAII span: begun at a phase boundary, emits one complete event on drop.
+/// Disabled tracing makes every method a no-op on a `None`.
+pub struct Span {
+    inner: Option<SpanInner>,
+}
+
+impl Span {
+    /// Begin a span — the universal instrumentation entry point. The
+    /// disabled path does one relaxed load and returns an inert guard.
+    #[inline]
+    pub fn begin(name: &'static str, cat: &'static str) -> Span {
+        if !enabled() {
+            return Span { inner: None };
+        }
+        Span::begin_live(name, cat)
+    }
+
+    #[cold]
+    fn begin_live(name: &'static str, cat: &'static str) -> Span {
+        let mut args = Vec::new();
+        let seq = FitScope::current();
+        if seq != 0 {
+            args.push(("fit_seq", ArgValue::U64(seq)));
+        }
+        Span {
+            inner: Some(SpanInner { name, cat, ts_us: now_us(), start: Instant::now(), args }),
+        }
+    }
+
+    /// Whether this span is live (callers skip arg computation when not).
+    #[inline]
+    pub fn is_on(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// Attach an unsigned arg (counter delta).
+    pub fn arg_u64(&mut self, key: &'static str, v: u64) {
+        if let Some(inner) = &mut self.inner {
+            inner.args.push((key, ArgValue::U64(v)));
+        }
+    }
+
+    /// Attach a float arg.
+    pub fn arg_f64(&mut self, key: &'static str, v: f64) {
+        if let Some(inner) = &mut self.inner {
+            inner.args.push((key, ArgValue::F64(v)));
+        }
+    }
+
+    /// Attach a string arg.
+    pub fn arg_str(&mut self, key: &'static str, v: impl Into<String>) {
+        if let Some(inner) = &mut self.inner {
+            inner.args.push((key, ArgValue::Str(v.into())));
+        }
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if let Some(inner) = self.inner.take() {
+            push(Event {
+                name: inner.name,
+                cat: inner.cat,
+                ts_us: inner.ts_us,
+                dur_us: inner.start.elapsed().as_micros() as u64,
+                tid: tid(),
+                args: inner.args,
+            });
+        }
+    }
+}
+
+// ------------------------------------------------------------- exporters
+
+/// Escape a string for embedding in a JSON string literal.
+pub fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render a finite f64 as JSON (non-finite values have no JSON literal and
+/// become `null`).
+pub fn json_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
+fn write_args(out: &mut String, args: &[(&'static str, ArgValue)]) {
+    out.push('{');
+    for (i, (k, v)) in args.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push('"');
+        out.push_str(&json_escape(k));
+        out.push_str("\":");
+        match v {
+            ArgValue::U64(u) => out.push_str(&u.to_string()),
+            ArgValue::F64(f) => out.push_str(&json_f64(*f)),
+            ArgValue::Str(s) => {
+                out.push('"');
+                out.push_str(&json_escape(s));
+                out.push('"');
+            }
+        }
+    }
+    out.push('}');
+}
+
+/// Render events as Chrome trace-event JSON (`{"traceEvents": [...]}`,
+/// "X" complete events) — loadable in `about:tracing` and Perfetto.
+pub fn chrome_trace_json(events: &[Event]) -> String {
+    let mut out = String::from("{\"traceEvents\":[\n");
+    for (i, e) in events.iter().enumerate() {
+        out.push_str(&format!(
+            "{{\"name\":\"{}\",\"cat\":\"{}\",\"ph\":\"X\",\"ts\":{},\"dur\":{},\"pid\":1,\"tid\":{},\"args\":",
+            json_escape(e.name),
+            json_escape(e.cat),
+            e.ts_us,
+            e.dur_us,
+            e.tid
+        ));
+        write_args(&mut out, &e.args);
+        out.push('}');
+        if i + 1 < events.len() {
+            out.push(',');
+        }
+        out.push('\n');
+    }
+    out.push_str("]}\n");
+    out
+}
+
+/// Write events to `path` in Chrome trace-event format.
+pub fn write_chrome_trace(path: &std::path::Path, events: &[Event]) -> std::io::Result<()> {
+    std::fs::write(path, chrome_trace_json(events))
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn escape_covers_controls_and_quotes() {
+        assert_eq!(json_escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+        assert_eq!(json_escape("\u{1}"), "\\u0001");
+    }
+
+    #[test]
+    fn json_f64_handles_non_finite() {
+        assert_eq!(json_f64(1.5), "1.5");
+        assert_eq!(json_f64(f64::NAN), "null");
+        assert_eq!(json_f64(f64::INFINITY), "null");
+    }
+
+    #[test]
+    fn disabled_span_is_inert() {
+        set_enabled(false);
+        let mut sp = Span::begin("x", "test");
+        assert!(!sp.is_on());
+        sp.arg_u64("k", 1);
+        drop(sp);
+        // No event was buffered by the inert span (the sink may hold
+        // events from other tests; absence is checked via is_on above).
+    }
+
+    #[test]
+    fn fit_scope_nests_and_clears() {
+        let outer = FitScope::enter();
+        let seq = FitScope::current();
+        assert_ne!(seq, 0);
+        {
+            let _inner = FitScope::enter();
+            assert_eq!(FitScope::current(), seq, "nested scope reuses the fit seq");
+        }
+        assert_eq!(FitScope::current(), seq);
+        drop(outer);
+        assert_eq!(FitScope::current(), 0);
+    }
+
+    #[test]
+    fn chrome_json_shape() {
+        let ev = Event {
+            name: "screen",
+            cat: "lambda",
+            ts_us: 10,
+            dur_us: 5,
+            tid: 3,
+            args: vec![("cols", ArgValue::U64(7)), ("rule", ArgValue::Str("Ssr".into()))],
+        };
+        let json = chrome_trace_json(&[ev]);
+        assert!(json.starts_with("{\"traceEvents\":["));
+        assert!(json.contains("\"ph\":\"X\""));
+        assert!(json.contains("\"cols\":7"));
+        assert!(json.contains("\"rule\":\"Ssr\""));
+        assert!(json.trim_end().ends_with("]}"));
+    }
+}

@@ -59,7 +59,9 @@
 use std::path::Path;
 use std::time::Instant;
 
+use crate::data::store::{StoreCounters, StoreSnapshot};
 use crate::error::{HssrError, Result};
+use crate::obs::trace::{self, Span};
 use crate::screening::RuleKind;
 use crate::serialize::{crc32, ByteReader, ByteWriter};
 use crate::solver::lambda::GridKind;
@@ -347,6 +349,68 @@ pub trait Problem {
             "this problem family does not support checkpoint resume".into(),
         ))
     }
+
+    /// The engine-side I/O counters backing this problem's scans, when
+    /// the family computes against a disk-backed store. The tracing layer
+    /// snapshots these around each per-λ phase so spans carry chunk/byte
+    /// deltas alongside the [`LambdaMetrics`] deltas. Default: `None`
+    /// (resident engines do no store I/O).
+    fn io_counters(&self) -> Option<&StoreCounters> {
+        None
+    }
+}
+
+/// Captured start-of-phase state for one traced driver stage: the span
+/// plus the metric/I-O counter values at entry, so the span's args can be
+/// exact deltas. `None` whenever tracing is off — the disabled cost of a
+/// stage boundary is one relaxed atomic load.
+struct StageTrace {
+    span: Span,
+    m0: LambdaMetrics,
+    io0: Option<StoreSnapshot>,
+}
+
+fn stage_begin<P: Problem>(
+    prob: &P,
+    name: &'static str,
+    lam: f64,
+    k: usize,
+    m: &LambdaMetrics,
+) -> Option<StageTrace> {
+    if !trace::enabled() {
+        return None;
+    }
+    let mut span = Span::begin(name, "lambda");
+    span.arg_f64("lambda", lam);
+    span.arg_u64("k", k as u64);
+    Some(StageTrace { span, m0: *m, io0: prob.io_counters().map(|c| c.snapshot()) })
+}
+
+/// Close a traced stage: attach every counter's movement across the stage
+/// (so per-λ span deltas sum exactly to the fit's totals — the invariant
+/// `tests/trace_obs.rs` enforces) and emit the span.
+fn stage_end<P: Problem>(st: Option<StageTrace>, prob: &P, m: &LambdaMetrics) {
+    let Some(mut st) = st else { return };
+    let sp = &mut st.span;
+    sp.arg_u64("cols_scanned", m.cols_scanned - st.m0.cols_scanned);
+    sp.arg_u64("kkt_checked", (m.kkt_checked - st.m0.kkt_checked) as u64);
+    sp.arg_u64("violations", (m.violations - st.m0.violations) as u64);
+    sp.arg_u64("cd_cycles", (m.cd_cycles - st.m0.cd_cycles) as u64);
+    sp.arg_u64("coord_updates", m.coord_updates - st.m0.coord_updates);
+    sp.arg_u64(
+        "rescreen_discards",
+        (m.rescreen_discards - st.m0.rescreen_discards) as u64,
+    );
+    if let (Some(c), Some(io0)) = (prob.io_counters(), st.io0) {
+        let d = c.snapshot().delta_since(&io0);
+        sp.arg_u64("cols_fetched", d.cols_fetched);
+        sp.arg_u64("chunk_loads", d.chunk_loads);
+        sp.arg_u64("bytes_read", d.bytes_read);
+        sp.arg_u64("cache_hits", d.cache_hits);
+        sp.arg_u64("stalls", d.stalls);
+        sp.arg_u64("solver_cols", d.solver_cols);
+    }
+    // st drops here; the span emits its event.
 }
 
 /// Materialize screen-stage discards of still-live units — shared by the
@@ -759,6 +823,20 @@ pub fn drive_warm<P: Problem>(
 
     // ---- crash-resume: adopt a compatible checkpoint's λ-prefix ----
     let rule_label = format!("{:?}", cfg.rule);
+
+    // Tracing: group everything below (and any spans the problem's engine
+    // emits from worker threads it dispatches) under one fit sequence,
+    // and wrap the whole walk in a `fit` span carrying the identity args
+    // the `hssr trace` summarizer joins on.
+    let _fit_scope = trace::FitScope::enter();
+    let mut fit_span = Span::begin("fit", "fit");
+    if fit_span.is_on() {
+        fit_span.arg_str("rule", rule_label.clone());
+        fit_span.arg_str("simd", crate::linalg::simd::level().label());
+        fit_span.arg_u64("units", units as u64);
+        fit_span.arg_u64("n_lambda", lambdas.len() as u64);
+        fit_span.arg_u64("fused", cfg.fused as u64);
+    }
     if let Some(ck_path) = &cfg.checkpoint {
         if ck_path.exists() {
             let ck = read_checkpoint(ck_path)?;
@@ -882,6 +960,8 @@ pub fn drive_warm<P: Problem>(
         }
     }
     let done = betas.len();
+    fit_span.arg_u64("lambdas_done", done as u64);
+    drop(fit_span);
     // Capture the completed walk for the warm-start registry. A degraded
     // path is never served as a seed: its final state is suspect.
     let warm_out = if error.is_none() {
@@ -931,6 +1011,10 @@ fn run_one_lambda<P: Problem>(
     flag_off: &mut bool,
     m: &mut LambdaMetrics,
 ) -> Result<()> {
+    // The `screen` span opens before the preamble fold so the k == 0
+    // constructor-scan credit lands inside a span — required for span
+    // deltas to sum exactly to the fit's totals.
+    let tr = stage_begin(prob, "screen", lam, k, m);
     if k == 0 {
         // Fold the family's constructor-time scans (λmax /
         // standardization checks, issued before any metrics existed) into
@@ -955,6 +1039,7 @@ fn run_one_lambda<P: Problem>(
         *flag_off = true;
         survive.iter_mut().for_each(|s| *s = true);
     }
+    stage_end(tr, prob, m);
     let mut strong = stage.strong;
     let mut in_strong = vec![false; units];
     for &u in &strong {
@@ -964,11 +1049,18 @@ fn run_one_lambda<P: Problem>(
     // ---- λ-ahead prefetch: while this λ's inner solve runs, the async
     // service loads the chunks of λ_{k+1}'s SSR-predicted working set
     // (computable right now — SSR predicts from current correlations).
-    prob.prefetch_next(lam, lam_next);
+    {
+        let tr = stage_begin(prob, "prefetch", lam, k, m);
+        prob.prefetch_next(lam, lam_next);
+        stage_end(tr, prob, m);
+    }
 
     // ---- solve + dynamic re-screen + KKT loop (lines 11–18) ----
     loop {
-        prob.solve(lam, k, &strong, m)?;
+        let tr = stage_begin(prob, "solve", lam, k, m);
+        let solved = prob.solve(lam, k, &strong, m);
+        stage_end(tr, prob, m);
+        solved?;
         if !needs_kkt {
             break; // exact / safe ⇒ nothing to verify
         }
@@ -976,21 +1068,34 @@ fn run_one_lambda<P: Problem>(
             // Re-fire the dynamic rule at the converged-on-H residual,
             // where the gap (hence the ball) is at its tightest: units
             // it discards now drop out of the KKT check set entirely.
-            let d = prob.rescreen(lam, &mut survive, &in_strong, m)?;
-            m.rescreen_discards += d;
+            let tr = stage_begin(prob, "rescreen", lam, k, m);
+            let d = prob.rescreen(lam, &mut survive, &in_strong, m);
+            if let Ok(d) = &d {
+                m.rescreen_discards += *d;
+            }
+            stage_end(tr, prob, m);
+            d?;
         }
-        let viols = prob.kkt(lam, cfg.fused, &survive, &in_strong, m)?;
+        let tr = stage_begin(prob, "kkt", lam, k, m);
+        let viols = prob.kkt(lam, cfg.fused, &survive, &in_strong, m);
+        if let Ok(v) = &viols {
+            m.violations += v.len();
+        }
+        stage_end(tr, prob, m);
+        let viols = viols?;
         if viols.is_empty() {
             break;
         }
-        m.violations += viols.len();
         for &u in &viols {
             in_strong[u] = true;
         }
         strong.extend(viols);
     }
 
-    prob.end_lambda(lam, cfg.fused, &strong, m)?;
+    let tr = stage_begin(prob, "finalize", lam, k, m);
+    let ended = prob.end_lambda(lam, cfg.fused, &strong, m);
+    stage_end(tr, prob, m);
+    ended?;
     m.strong_size = strong.len();
     Ok(())
 }

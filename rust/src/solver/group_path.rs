@@ -340,6 +340,10 @@ impl Problem for GroupLassoProblem<'_> {
         !matches!(self.rule, RuleKind::BasicPcd | RuleKind::Sedpp)
     }
 
+    fn io_counters(&self) -> Option<&crate::data::store::StoreCounters> {
+        self.engine.column_store().map(|s| s.counters())
+    }
+
     /// λ-ahead prefetch at group granularity: a group is predicted for
     /// λ_{k+1} if it is active or its lazy norm clears the group-SSR
     /// threshold `√W_g·α(2λ_{k+1} − λ_k)`; the prediction expands to the

@@ -423,6 +423,10 @@ impl Problem for LogisticProblem<'_> {
         self.preamble_cols
     }
 
+    fn io_counters(&self) -> Option<&crate::data::store::StoreCounters> {
+        self.engine.column_store().map(|s| s.counters())
+    }
+
     /// λ-ahead prefetch: the GLM strong rule predicts λ_{k+1}'s working
     /// set from the current scores (active features always included);
     /// columns go to the engine's async prefetch service. Overlap only —

@@ -52,6 +52,7 @@ use crate::data::store::ColumnStore;
 use crate::data::Dataset;
 use crate::error::{HssrError, Result};
 use crate::linalg::{ops, DenseMatrix};
+use crate::obs::trace::{self, Span};
 use crate::runtime::{native::NativeEngine, ooc, Precision, ScanEngine};
 use crate::screening::{make_safe_rule, ssr, PrevSolution, RuleKind, SafeContext, SafeRule};
 use crate::serialize::{ByteReader, ByteWriter};
@@ -565,6 +566,10 @@ impl Problem for GaussianLasso<'_> {
         self.preamble
     }
 
+    fn io_counters(&self) -> Option<&crate::data::store::StoreCounters> {
+        self.engine.column_store().map(|s| s.counters())
+    }
+
     fn has_safe_rule(&self) -> bool {
         self.safe_rule.is_some()
     }
@@ -945,9 +950,36 @@ pub fn fit_lasso_path_warm_with_engine(
     engine: &dyn ScanEngine,
     warm: Option<&WarmStart>,
 ) -> Result<(PathFit, Option<WarmStart>)> {
-    let mut prob = GaussianLasso::new(ds, cfg, engine)?;
+    let _scope = trace::FitScope::enter();
+    let mut prob = traced_setup(engine, || GaussianLasso::new(ds, cfg, engine))?;
     let (fit, warm_out) = drive_warm(&mut prob, &cfg.driver(), warm)?;
     Ok((path_fit(fit), warm_out))
+}
+
+/// Trace the problem-construction window as a `setup` span (category
+/// `fit`): the λmax/standardization scans run *here*, before any
+/// [`crate::solver::driver::LambdaMetrics`] exist, so without this span a
+/// store-backed fit's per-span I/O deltas could not sum to the store's
+/// totals. Opened under the caller's [`trace::FitScope`] so the
+/// summarizer groups it with the driver's spans. No-op when tracing is
+/// off.
+fn traced_setup<T>(engine: &dyn ScanEngine, build: impl FnOnce() -> Result<T>) -> Result<T> {
+    if !trace::enabled() {
+        return build();
+    }
+    let mut span = Span::begin("setup", "fit");
+    span.arg_str("engine", engine.name());
+    let io0 = engine.column_store().map(|s| s.counters().snapshot());
+    let out = build();
+    if let (Some(store), Some(io0)) = (engine.column_store(), io0) {
+        let d = store.counters().snapshot().delta_since(&io0);
+        span.arg_u64("cols_fetched", d.cols_fetched);
+        span.arg_u64("chunk_loads", d.chunk_loads);
+        span.arg_u64("bytes_read", d.bytes_read);
+        span.arg_u64("cache_hits", d.cache_hits);
+        span.arg_u64("stalls", d.stalls);
+    }
+    out
 }
 
 /// Fit the full path **entirely from a column store** — no resident
@@ -962,7 +994,8 @@ pub fn fit_lasso_path_store(
 ) -> Result<(PathFit, Option<WarmStart>)> {
     let engine = ooc::OocEngine::from_shared(store);
     let dummy = DenseMatrix::zeros(engine.store().nrows(), 0);
-    let mut prob = GaussianLasso::from_store(&dummy, cfg, &engine)?;
+    let _scope = trace::FitScope::enter();
+    let mut prob = traced_setup(&engine, || GaussianLasso::from_store(&dummy, cfg, &engine))?;
     let (fit, warm_out) = drive_warm(&mut prob, &cfg.driver(), warm)?;
     Ok((path_fit(fit), warm_out))
 }

@@ -1,0 +1,174 @@
+//! Observability-layer integration tests: the Chrome-trace golden schema
+//! and the delta-exactness property — per-λ span deltas must sum to the
+//! fit's `LambdaMetrics` totals, and a store-backed fit's span I/O deltas
+//! (including the constructor-time `setup` span) must sum to the store's
+//! own counters.
+//!
+//! The trace sink is process-global, so every test serializes on one
+//! lock, drains the sink at entry, and filters drained events by its own
+//! fit's `fit_seq`.
+
+use std::sync::Mutex;
+
+use hssr::data::DataSpec;
+use hssr::obs::json::Json;
+use hssr::obs::summary::summarize_trace_text;
+use hssr::obs::trace::{self, chrome_trace_json, Event};
+use hssr::runtime::ooc::OocEngine;
+use hssr::screening::RuleKind;
+use hssr::solver::path::{fit_lasso_path, fit_lasso_path_with_engine, PathConfig};
+
+static TRACE_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    TRACE_LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// The single fit span among `events` (tests drain before fitting, so
+/// exactly one fit runs per capture) and its fit sequence number.
+fn the_fit_seq(events: &[Event]) -> u64 {
+    let fits: Vec<&Event> =
+        events.iter().filter(|e| e.name == "fit" && e.cat == "fit").collect();
+    assert_eq!(fits.len(), 1, "expected exactly one fit span, got {}", fits.len());
+    fits[0].arg_u64("fit_seq").expect("fit span carries fit_seq")
+}
+
+/// Sum one u64 arg over this fit's spans, `setup` included when
+/// `with_setup` (the per-λ metric deltas live only on `lambda` spans; the
+/// I/O deltas also live on the constructor's `setup` span).
+fn span_sum(events: &[Event], fit_seq: u64, key: &str, with_setup: bool) -> u64 {
+    events
+        .iter()
+        .filter(|e| e.arg_u64("fit_seq") == Some(fit_seq))
+        .filter(|e| e.cat == "lambda" || (with_setup && e.name == "setup"))
+        .filter_map(|e| e.arg_u64(key))
+        .sum()
+}
+
+fn small_cfg(rule: RuleKind) -> PathConfig {
+    PathConfig { rule, n_lambda: 25, tol: 1e-8, ..PathConfig::default() }
+}
+
+/// Golden schema: a traced fit renders to Chrome trace-event JSON that
+/// our own zero-dep parser round-trips, with the `ph:"X"` complete-event
+/// shape and the full phase-span taxonomy present.
+#[test]
+fn chrome_trace_schema_golden() {
+    let _g = lock();
+    trace::set_enabled(true);
+    trace::drain();
+    let ds = DataSpec::synthetic(50, 80, 5).generate(3);
+    fit_lasso_path(&ds, &small_cfg(RuleKind::SsrBedpp)).unwrap();
+    let events = trace::drain();
+    trace::set_enabled(false);
+    assert!(!events.is_empty(), "a traced fit must emit spans");
+
+    let text = chrome_trace_json(&events);
+    let doc = hssr::obs::json::parse(&text).expect("own chrome output must parse");
+    let arr = doc
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .expect("top level is {traceEvents: [...]}");
+    assert_eq!(arr.len(), events.len());
+    for ev in arr {
+        assert_eq!(ev.get("ph").and_then(Json::as_str), Some("X"), "complete events only");
+        assert_eq!(ev.get("pid").and_then(Json::as_u64), Some(1));
+        assert!(ev.get("name").and_then(Json::as_str).is_some_and(|n| !n.is_empty()));
+        assert!(ev.get("cat").and_then(Json::as_str).is_some());
+        assert!(ev.get("ts").and_then(Json::as_u64).is_some());
+        assert!(ev.get("dur").and_then(Json::as_u64).is_some());
+        assert!(ev.get("tid").and_then(Json::as_u64).is_some());
+        assert!(matches!(ev.get("args"), Some(Json::Obj(_))));
+    }
+    for required in ["fit", "setup", "screen", "prefetch", "solve", "kkt", "finalize"] {
+        assert!(
+            events.iter().any(|e| e.name == required),
+            "span taxonomy is missing '{required}'"
+        );
+    }
+    let fit = events.iter().find(|e| e.name == "fit").unwrap();
+    assert!(fit.arg_str("rule").is_some(), "fit span carries its rule label");
+
+    // The `hssr trace` summarizer digests the same file: one rule row,
+    // keyed by the fit span's rule label.
+    let table = summarize_trace_text(&text).unwrap();
+    let label = RuleKind::SsrBedpp.label();
+    assert!(
+        table.rows.iter().any(|r| r[0] == label),
+        "summary table has no row for {label}"
+    );
+}
+
+/// Delta exactness, metrics side: for each rule (static-hybrid and
+/// dynamic), summing every per-λ span's counter deltas reproduces the
+/// fit's own `LambdaMetrics` totals exactly — no phase mutates a metric
+/// outside a span.
+#[test]
+fn span_deltas_sum_to_lambda_metrics_totals() {
+    let _g = lock();
+    for rule in [RuleKind::SsrBedpp, RuleKind::SsrGapSafe] {
+        trace::set_enabled(true);
+        trace::drain();
+        let ds = DataSpec::gene_like(60, 150).generate(9);
+        let fit = fit_lasso_path(&ds, &small_cfg(rule)).unwrap();
+        let events = trace::drain();
+        trace::set_enabled(false);
+        let seq = the_fit_seq(&events);
+
+        let m = &fit.metrics;
+        let totals: [(&str, u64); 6] = [
+            ("cols_scanned", m.iter().map(|m| m.cols_scanned).sum()),
+            ("kkt_checked", m.iter().map(|m| m.kkt_checked as u64).sum()),
+            ("violations", m.iter().map(|m| m.violations as u64).sum()),
+            ("cd_cycles", m.iter().map(|m| m.cd_cycles as u64).sum()),
+            ("coord_updates", m.iter().map(|m| m.coord_updates).sum()),
+            ("rescreen_discards", m.iter().map(|m| m.rescreen_discards as u64).sum()),
+        ];
+        for (key, total) in totals {
+            assert_eq!(
+                span_sum(&events, seq, key, false),
+                total,
+                "{rule:?}: span '{key}' deltas must sum to the fit total"
+            );
+        }
+        let screens =
+            events.iter().filter(|e| e.name == "screen" && e.cat == "lambda").count();
+        assert_eq!(screens, fit.lambdas.len(), "{rule:?}: one screen span per λ");
+    }
+}
+
+/// Delta exactness, I/O side: against a real disk-backed store (prefetch
+/// off), summing the span I/O deltas — per-λ spans plus the
+/// constructor-time `setup` span — reproduces the store's `StoreCounters`
+/// totals, and the store/metrics cross-invariant still holds.
+#[test]
+fn ooc_span_io_deltas_sum_to_store_counters() {
+    let _g = lock();
+    trace::set_enabled(true);
+    trace::drain();
+    let ds = DataSpec::gene_like(60, 200).generate(5);
+    let engine = OocEngine::spill(&ds.x, &ds.y, 1 << 20).unwrap();
+    let io0 = engine.store().counters().snapshot();
+    let fit = fit_lasso_path_with_engine(&ds, &small_cfg(RuleKind::SsrBedpp), &engine).unwrap();
+    let events = trace::drain();
+    trace::set_enabled(false);
+    let seq = the_fit_seq(&events);
+
+    let d = engine.store().counters().snapshot().delta_since(&io0);
+    assert!(d.cols_fetched > 0 && d.chunk_loads > 0, "the fit must touch the store");
+    for (key, total) in [
+        ("cols_fetched", d.cols_fetched),
+        ("chunk_loads", d.chunk_loads),
+        ("bytes_read", d.bytes_read),
+        ("cache_hits", d.cache_hits),
+        ("solver_cols", d.solver_cols),
+    ] {
+        assert_eq!(
+            span_sum(&events, seq, key, true),
+            total,
+            "span '{key}' I/O deltas (incl. setup) must sum to the store total"
+        );
+    }
+    // The pre-existing accounting invariant survives instrumentation.
+    assert_eq!(d.cols_fetched, fit.total_cols_scanned(), "store/metrics cross-check");
+}
